@@ -1,0 +1,81 @@
+//! Communication-rate sweep (Fig. 6 as an application study).
+//!
+//! ```bash
+//! cargo run --release --example comm_sweep
+//! ```
+//!
+//! Sweeps γ/u finer than the paper's five points and reports both the
+//! delay and the local-offload behavior — the knob an operator would turn
+//! when sizing the network between masters and the worker pool.
+
+use coded_coop::assign::ValueModel;
+use coded_coop::config::{CommModel, Scenario};
+use coded_coop::plan::{self, LoadMethod, PlanSpec, Policy};
+use coded_coop::sim::{self, McOptions};
+use coded_coop::util::table::Table;
+
+fn main() {
+    let ratios = [0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0];
+    let mc = McOptions {
+        trials: 20_000,
+        seed: 3,
+        keep_samples: false,
+        threads: 0,
+    };
+
+    let mut table = Table::new(&[
+        "γ/u",
+        "Dedi delay (ms)",
+        "Frac delay (ms)",
+        "Uncoded delay (ms)",
+        "local-load share",
+        "offloaded rows",
+    ]);
+    for ratio in ratios {
+        let s = Scenario::large_scale(2022, ratio, CommModel::Stochastic);
+        let dedi = PlanSpec {
+            policy: Policy::DediIter,
+            values: ValueModel::Markov,
+            loads: LoadMethod::Markov,
+        };
+        let frac = PlanSpec {
+            policy: Policy::Frac,
+            ..dedi
+        };
+        let unc = PlanSpec {
+            policy: Policy::UncodedUniform,
+            ..dedi
+        };
+        let p_dedi = plan::build(&s, &dedi);
+        let p_frac = plan::build(&s, &frac);
+        let p_unc = plan::build(&s, &unc);
+        let r_dedi = sim::run(&s, &p_dedi, &mc);
+        let r_frac = sim::run(&s, &p_frac, &mc);
+        let r_unc = sim::run(&s, &p_unc, &mc);
+
+        // How much of each master's load stays local vs is shipped out.
+        let (mut local, mut total) = (0.0, 0.0);
+        for mp in &p_dedi.masters {
+            for e in &mp.entries {
+                if e.node == 0 {
+                    local += e.load;
+                }
+                total += e.load;
+            }
+        }
+        table.row(&[
+            format!("{ratio}"),
+            format!("{:.1}", r_dedi.system.mean()),
+            format!("{:.1}", r_frac.system.mean()),
+            format!("{:.1}", r_unc.system.mean()),
+            format!("{:.3}", local / total),
+            format!("{:.0}", total - local),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "Reading (paper Fig. 6): slow links (γ/u ≤ 1) push work back to the\n\
+         masters — the benchmarks cannot adapt; once links are ~4× faster\n\
+         than compute, nearly everything is offloaded and the delay floors."
+    );
+}

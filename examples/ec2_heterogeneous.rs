@@ -1,0 +1,76 @@
+//! EC2-heterogeneity study (the Fig. 7–8 workload as an application).
+//!
+//! ```bash
+//! cargo run --release --example ec2_heterogeneous
+//! ```
+//!
+//! Sweeps the worker mix from all-t2.micro to half-c5.large and shows how
+//! the paper's algorithms exploit heterogeneity, under both the fitted
+//! delay model and the measured-trace stand-in (burst throttling).
+
+use coded_coop::assign::ValueModel;
+use coded_coop::config::Scenario;
+use coded_coop::plan::{self, LoadMethod, PlanSpec, Policy};
+use coded_coop::sim::{self, McOptions};
+use coded_coop::traces::ec2::{C5_LARGE, T2_MICRO};
+use coded_coop::util::table::Table;
+
+fn main() {
+    println!(
+        "instance profiles: {} (a={} ms, u={} /ms), {} (a={} ms, u={} /ms)\n",
+        T2_MICRO.name, T2_MICRO.a, T2_MICRO.u, C5_LARGE.name, C5_LARGE.a, C5_LARGE.u
+    );
+
+    let mc = McOptions {
+        trials: 30_000,
+        seed: 11,
+        keep_samples: false,
+        threads: 0,
+    };
+    let specs = [
+        (Policy::UncodedUniform, LoadMethod::Exact),
+        (Policy::CodedUniform, LoadMethod::Exact),
+        (Policy::DediIter, LoadMethod::Exact),
+        (Policy::Frac, LoadMethod::Exact),
+    ];
+
+    for stragglers in [false, true] {
+        println!(
+            "== {} ==",
+            if stragglers {
+                "measured-trace stand-in (t2 burst throttling)"
+            } else {
+                "fitted shifted-exponential model"
+            }
+        );
+        let mut table = Table::new(&[
+            "worker mix (t2/c5)",
+            "Uncoded",
+            "Coded [5]",
+            "Dedi, iter",
+            "Frac",
+        ]);
+        for (n_t2, n_c5) in [(50, 0), (45, 5), (40, 10), (25, 25)] {
+            let s = Scenario::ec2(n_t2, n_c5, stragglers);
+            let mut cells = vec![format!("{n_t2}/{n_c5}")];
+            for (policy, loads) in specs {
+                let spec = PlanSpec {
+                    policy,
+                    values: ValueModel::Exact,
+                    loads,
+                };
+                let p = plan::build(&s, &spec);
+                let r = sim::run(&s, &p, &mc);
+                cells.push(format!("{:.0} ms", r.system.mean()));
+            }
+            table.row(&cells);
+        }
+        println!("{}", table.render());
+    }
+    println!(
+        "Reading: faster c5.large workers shrink every scheme's delay, but\n\
+         the proposed assignment algorithms convert heterogeneity into the\n\
+         largest gains; under the straggler tail the uncoded scheme collapses\n\
+         (it must wait for every throttled t2 worker) — the paper's 82%."
+    );
+}

@@ -1,0 +1,165 @@
+//! Remark 2 (iterated mat-vec): distributed power iteration over a coded
+//! matrix — the paper's ML-training motivation.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example iterated_training
+//! ```
+//!
+//! `A` is MDS-encoded and shipped to the workers ONCE; then every
+//! iteration only the updated model vector `x_t` moves, so worker
+//! assignment / load allocation use the computation-dominant case
+//! (Theorem 2), exactly as Remark 2 prescribes. Each iteration the
+//! master collects any `L` coded products of `Ã·x_t` (delays sampled per
+//! eq. 2, stragglers re-drawn every iteration), decodes `A·x_t`, and
+//! performs the power-iteration update `x ← normalize(A x)`. Converges
+//! to the dominant eigenvector — verified against an uncoded in-process
+//! power iteration on the same matrix.
+
+use coded_coop::alloc::comp_dominant::{self, CompParams};
+use coded_coop::coding::{Matrix, MdsCode};
+use coded_coop::config::{AShift, CommModel, Scenario};
+use coded_coop::coordinator::round_loads;
+use coded_coop::model::dist::LinkDelay;
+use coded_coop::runtime::{default_artifact_dir, RuntimeService};
+use coded_coop::util::rng::Rng;
+use coded_coop::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let n = 512usize; // A is n×n, symmetric
+    let iters = 12usize;
+    let mut rng = Rng::new(99);
+
+    // Symmetric matrix with a planted dominant eigenvector.
+    let mut a = vec![0.0f32; n * n];
+    let planted: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let norm: f32 = planted.iter().map(|v| v * v).sum::<f32>().sqrt();
+    for i in 0..n {
+        for j in 0..=i {
+            let noise = rng.normal() as f32 * 0.05;
+            let v = 4.0 * planted[i] * planted[j] / (norm * norm) + noise;
+            a[i * n + j] = v;
+            a[j * n + i] = v;
+        }
+    }
+
+    // Remark 2: computation-dominant planning (comm of x is negligible).
+    let scenario = Scenario::random(
+        "iterated",
+        1,
+        6,
+        n as f64,
+        AShift::Range(0.01, 0.06),
+        2.0,
+        CommModel::CompDominant,
+        99,
+    );
+    let nodes: Vec<CompParams> = (0..=scenario.n_workers())
+        .map(|node| {
+            let p = scenario.link(0, node);
+            CompParams { a: p.a, u: p.u }
+        })
+        .collect();
+    let alloc = comp_dominant::allocate(&nodes, n as f64);
+    let loads = round_loads(&alloc.loads, n);
+    let l_coded: usize = loads.iter().sum();
+    println!(
+        "plan (Theorem 2, comp-dominant): {} nodes, overhead {:.2}×, t* = {:.2} ms/iter",
+        loads.len(),
+        l_coded as f64 / n as f64,
+        alloc.t_star
+    );
+
+    // Encode ONCE through the PJRT Pallas artifact (data shipped once).
+    let service = RuntimeService::start(&default_artifact_dir())?;
+    let h = service.handle();
+    let code = MdsCode::new(n, l_coded, &mut rng);
+    let g32: Vec<f32> = code.generator().data().iter().map(|&v| v as f32).collect();
+    let coded = h.encode(g32, l_coded, n, a.clone(), n)?;
+
+    // Per-node coded blocks (row ranges).
+    let mut blocks = Vec::new();
+    let mut start = 0usize;
+    for &l in &loads {
+        blocks.push((start, l));
+        start += l;
+    }
+
+    // Power iteration with per-iteration straggler sampling + decode.
+    let mut x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let mut x_direct = x.clone();
+    let mut table = Table::new(&[
+        "iter", "virtual delay (ms)", "rows used", "cos(coded, direct)",
+    ]);
+    for it in 0..iters {
+        // Sample each node's completion time for this iteration (eq. 2).
+        let mut arrivals: Vec<(f64, usize)> = blocks
+            .iter()
+            .enumerate()
+            .map(|(i, &(_, l))| {
+                let p = scenario.link(0, i);
+                (LinkDelay::new(&p, l as f64, 1.0, 1.0).sample(&mut rng), i)
+            })
+            .collect();
+        arrivals.sort_by(|u, v| u.0.partial_cmp(&v.0).unwrap());
+
+        // Collect coded products from the fastest nodes until L arrive —
+        // the real mat-vec runs through the PJRT Pallas artifact.
+        let mut received: Vec<(usize, f64)> = Vec::with_capacity(n);
+        let mut delay = 0.0;
+        for &(t, node) in &arrivals {
+            if received.len() >= n {
+                break;
+            }
+            let (s0, l) = blocks[node];
+            let block = coded[s0 * n..(s0 + l) * n].to_vec();
+            let y = h.matvec(block, l, n, x.clone(), 1)?;
+            for (off, &v) in y.iter().enumerate() {
+                received.push((s0 + off, v as f64));
+            }
+            delay = t;
+        }
+        let z = code
+            .decode(&received)
+            .expect("any L coded rows decode");
+
+        // Power-iteration updates (coded and direct twins).
+        let nz: f64 = z.iter().map(|v| v * v).sum::<f64>().sqrt();
+        for (xi, &zi) in x.iter_mut().zip(&z) {
+            *xi = (zi / nz) as f32;
+        }
+        let zd = Matrix::from_vec(n, n, a.iter().map(|&v| v as f64).collect())
+            .matvec(&x_direct.iter().map(|&v| v as f64).collect::<Vec<_>>());
+        let nd: f64 = zd.iter().map(|v| v * v).sum::<f64>().sqrt();
+        for (xi, &zi) in x_direct.iter_mut().zip(&zd) {
+            *xi = (zi / nd) as f32;
+        }
+
+        let cos: f64 = x
+            .iter()
+            .zip(&x_direct)
+            .map(|(&u, &v)| u as f64 * v as f64)
+            .sum::<f64>()
+            .abs();
+        table.row(&[
+            format!("{}", it + 1),
+            format!("{delay:.2}"),
+            format!("{}", received.len()),
+            format!("{cos:.6}"),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // Coded training tracked the direct iteration to f32 accuracy.
+    let cos_final: f64 = x
+        .iter()
+        .zip(&x_direct)
+        .map(|(&u, &v)| u as f64 * v as f64)
+        .sum::<f64>()
+        .abs();
+    anyhow::ensure!(cos_final > 0.999, "coded iteration diverged: {cos_final}");
+    println!(
+        "converged: coded and direct power iterations agree (|cos| = {cos_final:.6});\n\
+         A was shipped once, only x moved per iteration (Remark 2). OK"
+    );
+    Ok(())
+}

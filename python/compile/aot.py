@@ -1,0 +1,128 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) → HLO text artifacts for rust (L3).
+
+Run once at build time (``make artifacts``); the rust runtime loads
+``artifacts/*.hlo.txt`` via ``HloModuleProto::from_text_file``, compiles on
+the CPU PJRT client, and executes — python never appears on the request
+path.
+
+Interchange format is HLO **text**, never ``.serialize()``: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Each artifact is a fixed-shape entry point; ``manifest.json`` describes the
+bucket table the rust runtime pads ragged loads into.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+# ---------------------------------------------------------------------------
+# Artifact table
+# ---------------------------------------------------------------------------
+# matvec buckets: worker loads l_{m,n} are padded up to the next `rows`
+# bucket; `cols` is the (padded) task width S_m. batch=8 serves the
+# iterated mat-vec of Remark 2 (and feeds the MXU, DESIGN.md §Hardware-
+# Adaptation). encode buckets: coded_rows is the padded L̃_m.
+MATVEC_SHAPES = [
+    # (rows, cols, batch)
+    (128, 256, 1),
+    (128, 512, 1),
+    (256, 512, 1),
+    (512, 512, 1),
+    (1024, 512, 1),
+    (256, 512, 8),
+]
+NATIVE_MATVEC_SHAPES = [
+    (512, 512, 1),  # ablation twin for §Perf
+]
+ENCODE_SHAPES = [
+    # (coded_rows, rows, cols)
+    (256, 128, 256),
+    (2048, 1024, 512),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_matvec(rows: int, cols: int, batch: int, native: bool = False) -> str:
+    fn = model.worker_matvec_native if native else model.worker_matvec
+    a = jax.ShapeDtypeStruct((rows, cols), jnp.float32)
+    x = jax.ShapeDtypeStruct((cols, batch), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(a, x))
+
+
+def lower_encode(coded_rows: int, rows: int, cols: int) -> str:
+    g = jax.ShapeDtypeStruct((coded_rows, rows), jnp.float32)
+    a = jax.ShapeDtypeStruct((rows, cols), jnp.float32)
+    return to_hlo_text(jax.jit(model.master_encode).lower(g, a))
+
+
+def build(outdir: str) -> dict:
+    os.makedirs(outdir, exist_ok=True)
+    entries = []
+
+    def emit(name: str, text: str, **meta) -> None:
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(outdir, path), "w") as f:
+            f.write(text)
+        entries.append({"name": name, "path": path, **meta})
+        print(f"  {name}: {len(text)} chars")
+
+    for rows, cols, batch in MATVEC_SHAPES:
+        emit(
+            f"matvec_r{rows}_c{cols}_b{batch}",
+            lower_matvec(rows, cols, batch),
+            kind="matvec", rows=rows, cols=cols, batch=batch,
+        )
+    for rows, cols, batch in NATIVE_MATVEC_SHAPES:
+        emit(
+            f"matvec_native_r{rows}_c{cols}_b{batch}",
+            lower_matvec(rows, cols, batch, native=True),
+            kind="matvec_native", rows=rows, cols=cols, batch=batch,
+        )
+    for coded_rows, rows, cols in ENCODE_SHAPES:
+        emit(
+            f"encode_m{coded_rows}_k{rows}_c{cols}",
+            lower_encode(coded_rows, rows, cols),
+            kind="encode", coded_rows=coded_rows, rows=rows, cols=cols,
+        )
+
+    manifest = {"version": 1, "artifacts": entries}
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(entries)} artifacts + manifest.json to {outdir}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory (or a single .hlo.txt path for "
+                         "the legacy Makefile target)")
+    args = ap.parse_args()
+    out = args.out
+    # Accept both `--out dir` and the Makefile's `--out ../artifacts/...txt`.
+    outdir = os.path.dirname(out) if out.endswith(".hlo.txt") else out
+    build(outdir or ".")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""L1 Pallas kernel: tiled coded mat-vec ``y = Ã_{m,n} @ x_m``.
+
+This is the per-worker compute hot spot of the paper: each worker receives a
+coded row-block ``Ã_{m,n} ∈ R^{l×S}`` and the model vector ``x_m``, and
+returns the ``l`` inner products.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the CUDA-ish framing of
+"one threadblock per row chunk" becomes a Pallas grid over (row-blocks ×
+k-blocks) with an f32 VMEM accumulator; ``x`` is widened to a (cols, batch)
+panel so the contraction feeds the MXU rather than degenerating to a VPU
+reduction. The k axis is the innermost (sequential) grid dimension, so each
+A-tile is streamed HBM→VMEM exactly once.
+
+The kernel MUST run with ``interpret=True``: real TPU lowering emits a
+Mosaic custom-call that the CPU PJRT client used by the rust runtime cannot
+execute (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile shape: 128 rows feeds an MXU-sized systolic pass; 256-wide
+# k-tiles keep (A-tile + x-tile + acc) well under a VMEM budget:
+#   128*256*4B (A) + 256*8*4B (x) + 128*8*4B (acc) ≈ 139 KiB per step.
+DEFAULT_BLOCK_ROWS = 128
+DEFAULT_BLOCK_COLS = 256
+
+
+def _matvec_kernel(a_ref, x_ref, o_ref):
+    """Grid point (i, k): o[i] += A[i, k] @ x[k]; k is sequential."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.float32),
+        x_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def matvec_block_shape(rows: int, cols: int) -> tuple[int, int]:
+    """Largest default-capped block shape that divides (rows, cols).
+
+    Keeps the kernel applicable to ragged worker loads: the L2 wrapper pads
+    to multiples of 8 and this picks divisor tiles ≤ the defaults.
+    """
+
+    def best(dim: int, cap: int) -> int:
+        b = 1
+        for cand in range(1, min(dim, cap) + 1):
+            if dim % cand == 0:
+                b = cand
+        return b
+
+    return best(rows, DEFAULT_BLOCK_ROWS), best(cols, DEFAULT_BLOCK_COLS)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "block_cols", "interpret")
+)
+def coded_matvec(
+    a: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    block_rows: int | None = None,
+    block_cols: int | None = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Compute ``a @ x`` with the tiled Pallas kernel.
+
+    ``a``: (rows, cols); ``x``: (cols, batch). Block sizes must divide the
+    corresponding dims (use :func:`matvec_block_shape` / the L2 padding
+    wrapper). Returns (rows, batch) f32.
+    """
+    rows, cols = a.shape
+    cols_x, batch = x.shape
+    if cols != cols_x:
+        raise ValueError(f"shape mismatch: a is {a.shape}, x is {x.shape}")
+    if block_rows is None or block_cols is None:
+        br, bc = matvec_block_shape(rows, cols)
+        block_rows = block_rows or br
+        block_cols = block_cols or bc
+    if rows % block_rows or cols % block_cols:
+        raise ValueError(
+            f"block ({block_rows},{block_cols}) must divide shape ({rows},{cols})"
+        )
+
+    grid = (rows // block_rows, cols // block_cols)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, block_cols), lambda i, k: (i, k)),
+            pl.BlockSpec((block_cols, batch), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, batch), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, batch), jnp.float32),
+        interpret=interpret,
+    )(a, x)
+
+
+def vmem_bytes(block_rows: int, block_cols: int, batch: int, itemsize: int = 4) -> int:
+    """Estimated VMEM residency of one grid step (A-tile + x-tile + acc).
+
+    Used by the §Perf notes in EXPERIMENTS.md to pick block shapes; also
+    asserted against the 16 MiB budget in tests.
+    """
+    a_tile = block_rows * block_cols * itemsize
+    x_tile = block_cols * batch * itemsize
+    acc = block_rows * batch * 4  # accumulator is always f32
+    return a_tile + x_tile + acc

@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: tiled MDS encode ``Ã = G @ A``.
+
+The master-side hot spot: row-wise MDS encoding of the data matrix is a
+dense matmul by the (coded_rows × rows) generator matrix. This runs once
+per task at dispatch time but over the full matrix, so it is tiled the same
+way as the worker mat-vec — 3-D grid (i, j, k) with k innermost/sequential
+and an f32 VMEM accumulator tile.
+
+interpret=True for the same CPU-PJRT reason as ``coded_matvec``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_M = 128  # coded-row tile
+DEFAULT_BLOCK_N = 128  # data-column tile
+DEFAULT_BLOCK_K = 128  # original-row (contraction) tile
+
+
+def _encode_kernel(g_ref, a_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        g_ref[...].astype(jnp.float32),
+        a_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def encode_block_shape(coded_rows: int, rows: int, cols: int) -> tuple[int, int, int]:
+    """Largest default-capped divisor tiles for (coded_rows, cols, rows)."""
+
+    def best(dim: int, cap: int) -> int:
+        b = 1
+        for cand in range(1, min(dim, cap) + 1):
+            if dim % cand == 0:
+                b = cand
+        return b
+
+    return (
+        best(coded_rows, DEFAULT_BLOCK_M),
+        best(cols, DEFAULT_BLOCK_N),
+        best(rows, DEFAULT_BLOCK_K),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def mds_encode(
+    g: jnp.ndarray,
+    a: jnp.ndarray,
+    *,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Compute ``g @ a`` with the tiled Pallas kernel.
+
+    ``g``: (coded_rows, rows) generator; ``a``: (rows, cols) data.
+    Returns (coded_rows, cols) f32.
+    """
+    coded_rows, rows = g.shape
+    rows_a, cols = a.shape
+    if rows != rows_a:
+        raise ValueError(f"shape mismatch: g is {g.shape}, a is {a.shape}")
+    if block_m is None or block_n is None or block_k is None:
+        bm, bn, bk = encode_block_shape(coded_rows, rows, cols)
+        block_m = block_m or bm
+        block_n = block_n or bn
+        block_k = block_k or bk
+    if coded_rows % block_m or cols % block_n or rows % block_k:
+        raise ValueError(
+            f"blocks ({block_m},{block_n},{block_k}) must divide "
+            f"({coded_rows},{cols},{rows})"
+        )
+
+    grid = (coded_rows // block_m, cols // block_n, rows // block_k)
+    return pl.pallas_call(
+        _encode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((coded_rows, cols), jnp.float32),
+        interpret=interpret,
+    )(g, a)

@@ -1,0 +1,50 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+Every Pallas kernel in this package has an entry here computing the same
+function with plain ``jnp`` ops. pytest (``python/tests``) asserts
+``allclose`` between kernel and oracle across randomized shapes and dtypes
+(hypothesis). These references are also what the L2 model falls back to for
+shapes that do not fit a kernel's tiling constraints.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matvec_ref(a: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Coded mat-vec oracle: ``y = A @ x``.
+
+    ``a``: (rows, cols) coded sub-matrix ``Ã_{m,n}``;
+    ``x``: (cols, batch) stacked model vectors (batch=1 for the paper's
+    single mat-vec; >1 for the iterated / Remark-2 variant).
+    Accumulation is always f32, matching the kernel.
+    """
+    return jnp.dot(
+        a.astype(jnp.float32), x.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def encode_ref(g: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """MDS encode oracle: ``Ã = G @ A``.
+
+    ``g``: (coded_rows, rows) generator matrix; ``a``: (rows, cols) data.
+    """
+    return jnp.dot(
+        g.astype(jnp.float32), a.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def decode_ref(g_sub: jnp.ndarray, y_sub: jnp.ndarray) -> jnp.ndarray:
+    """Decode oracle: recover ``z = A x`` from any ``L`` coded products.
+
+    ``g_sub``: (L, L) rows of G corresponding to received coded rows;
+    ``y_sub``: (L, batch) received inner products. Solves ``G_S z = y_S``.
+
+    Note: the production decoder lives in rust (``coding::gauss``) because
+    jax lowers ``linalg.solve`` to a LAPACK custom-call the PJRT text-HLO
+    path cannot execute; this oracle is used in python tests only.
+    """
+    return jnp.linalg.solve(g_sub.astype(jnp.float32), y_sub.astype(jnp.float32))

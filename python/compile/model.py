@@ -1,0 +1,110 @@
+"""L2: the paper's compute graph in JAX, calling the L1 Pallas kernels.
+
+The paper's "model" is MDS-coded distributed matrix–vector multiplication
+(§II): master m encodes ``Ã_m = G_m A_m`` row-wise, ships row-blocks to
+workers, each worker computes ``Ã_{m,n} x_m``, and the master recovers
+``A_m x_m`` from any ``L_m`` coded inner products.
+
+This module defines the jittable entry points that ``aot.py`` lowers to HLO
+text for the rust runtime:
+
+* :func:`worker_matvec` — per-worker coded mat-vec (calls the Pallas kernel);
+* :func:`master_encode` — master-side MDS encode (calls the Pallas kernel);
+* :func:`worker_matvec_native` — identical graph without the Pallas kernel,
+  exported as an ablation artifact (§Perf: pallas-vs-XLA-native).
+
+Generator matrices are *inputs* (never baked into artifacts), so the rust
+coordinator is free to draw them from its own PRNG. Shapes are static per
+artifact; the rust runtime pads ragged worker loads up to the next bucket
+(zero rows / zero columns do not perturb the products).
+
+Python here is build-time only: nothing in this package is imported on the
+rust request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.coded_matvec import coded_matvec, matvec_block_shape
+from compile.kernels.mds_encode import mds_encode
+from compile.kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points (static shapes, lowered by aot.py)
+# ---------------------------------------------------------------------------
+
+def worker_matvec(a: jnp.ndarray, x: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """Per-worker compute: ``(Ã_{m,n} @ x_m,)`` via the Pallas kernel."""
+    return (coded_matvec(a, x),)
+
+
+def worker_matvec_native(a: jnp.ndarray, x: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """Ablation twin of :func:`worker_matvec` using plain XLA dot."""
+    return (ref.matvec_ref(a, x),)
+
+
+def master_encode(g: jnp.ndarray, a: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """Master-side encode: ``(G_m @ A_m,)`` via the Pallas kernel."""
+    return (mds_encode(g, a),)
+
+
+# ---------------------------------------------------------------------------
+# Padding helpers (shared by tests and by shape planning in aot.py)
+# ---------------------------------------------------------------------------
+
+def pad_to(n: int, multiple: int) -> int:
+    """Round ``n`` up to a multiple of ``multiple``."""
+    return ((n + multiple - 1) // multiple) * multiple
+
+
+def padded_matvec(a: jnp.ndarray, x: jnp.ndarray, multiple: int = 8) -> jnp.ndarray:
+    """Run the Pallas mat-vec on arbitrary shapes by zero-padding.
+
+    Mirrors what the rust runtime does when a worker load does not match an
+    artifact bucket exactly: rows and cols are padded with zeros, the
+    product of the padded region is zero, and the pad rows are sliced off.
+    """
+    rows, cols = a.shape
+    pr, pc = pad_to(rows, multiple), pad_to(cols, multiple)
+    a_p = jnp.pad(a, ((0, pr - rows), (0, pc - cols)))
+    x_p = jnp.pad(x, ((0, pc - cols), (0, 0)))
+    br, bc = matvec_block_shape(pr, pc)
+    y = coded_matvec(a_p, x_p, block_rows=br, block_cols=bc)
+    return y[:rows]
+
+
+# ---------------------------------------------------------------------------
+# Systematic MDS generator + full-pipeline reference (tests only)
+# ---------------------------------------------------------------------------
+
+def systematic_generator(key: jax.Array, coded_rows: int, rows: int) -> jnp.ndarray:
+    """Systematic real-valued MDS generator ``G = [I; P]``.
+
+    ``P`` is i.i.d. Gaussian scaled by 1/sqrt(rows); any ``rows`` rows of
+    ``G`` are invertible with probability 1 (tested, and re-implemented in
+    rust ``coding::mds`` for the run-time path).
+    """
+    if coded_rows < rows:
+        raise ValueError(f"coded_rows {coded_rows} < rows {rows}")
+    parity = jax.random.normal(key, (coded_rows - rows, rows)) / jnp.sqrt(rows)
+    return jnp.concatenate([jnp.eye(rows), parity], axis=0)
+
+
+def pipeline_reference(
+    g: jnp.ndarray,
+    a: jnp.ndarray,
+    x: jnp.ndarray,
+    received: jnp.ndarray,
+) -> jnp.ndarray:
+    """End-to-end oracle: encode → compute → receive subset → decode.
+
+    ``received``: (rows,) int32 indices of the coded rows that arrived
+    first. Returns the recovered ``A x``. Used by python tests to validate
+    the whole coding path that rust executes at run time.
+    """
+    coded = ref.encode_ref(g, a)
+    y = ref.matvec_ref(coded, x)
+    return ref.decode_ref(g[received], y[received])

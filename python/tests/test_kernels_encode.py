@@ -1,0 +1,82 @@
+"""L1 correctness: Pallas mds_encode vs pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.mds_encode import (
+    encode_block_shape,
+    mds_encode,
+    DEFAULT_BLOCK_M,
+    DEFAULT_BLOCK_N,
+    DEFAULT_BLOCK_K,
+)
+from compile.kernels import ref
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+class TestEncodeFixedShapes:
+    @pytest.mark.parametrize(
+        "m,k,n", [(8, 8, 8), (16, 8, 32), (256, 128, 256), (96, 64, 32)]
+    )
+    def test_matches_ref(self, m, k, n):
+        g = rand(m * 3 + k, (m, k))
+        a = rand(n + 17, (k, n))
+        np.testing.assert_allclose(
+            mds_encode(g, a), ref.encode_ref(g, a), rtol=1e-4, atol=1e-4
+        )
+
+    def test_explicit_blocks(self):
+        g = rand(1, (64, 96))
+        a = rand(2, (96, 48))
+        got = mds_encode(g, a, block_m=32, block_n=16, block_k=24)
+        np.testing.assert_allclose(got, ref.encode_ref(g, a), rtol=1e-4, atol=1e-4)
+
+    def test_systematic_prefix_is_identity_copy(self):
+        # G = [I; P]: the first k coded rows must equal A exactly (up to
+        # f32 accumulation order).
+        k, n = 32, 16
+        p = rand(3, (16, k))
+        g = jnp.concatenate([jnp.eye(k), p], axis=0)
+        a = rand(4, (k, n))
+        coded = mds_encode(g, a)
+        np.testing.assert_allclose(coded[:k], a, rtol=1e-5, atol=1e-5)
+
+    def test_shape_mismatch_raises(self):
+        with pytest.raises(ValueError, match="shape mismatch"):
+            mds_encode(jnp.zeros((8, 8)), jnp.zeros((16, 8)))
+
+    def test_bad_block_raises(self):
+        with pytest.raises(ValueError, match="must divide"):
+            mds_encode(jnp.zeros((8, 8)), jnp.zeros((8, 12)),
+                       block_m=8, block_n=8, block_k=8)
+
+
+class TestEncodeHypothesis:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        nm=st.integers(1, 3), nk=st.integers(1, 3), nn=st.integers(1, 3),
+        bm=st.sampled_from([8, 16]), bk=st.sampled_from([8, 16]),
+        bn=st.sampled_from([8, 16]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_shape_sweep(self, nm, nk, nn, bm, bk, bn, seed):
+        m, k, n = nm * bm, nk * bk, nn * bn
+        g = rand(seed, (m, k))
+        a = rand(seed ^ 0x5555, (k, n))
+        got = mds_encode(g, a, block_m=bm, block_n=bn, block_k=bk)
+        np.testing.assert_allclose(got, ref.encode_ref(g, a), rtol=1e-4, atol=1e-4)
+
+
+class TestEncodeBlockHelper:
+    @settings(max_examples=40, deadline=None)
+    @given(m=st.integers(1, 500), k=st.integers(1, 300), n=st.integers(1, 500))
+    def test_divides_and_capped(self, m, k, n):
+        bm, bn, bk = encode_block_shape(m, k, n)
+        assert m % bm == 0 and n % bn == 0 and k % bk == 0
+        assert bm <= DEFAULT_BLOCK_M and bn <= DEFAULT_BLOCK_N and bk <= DEFAULT_BLOCK_K

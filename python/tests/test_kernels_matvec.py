@@ -1,0 +1,130 @@
+"""L1 correctness: Pallas coded_matvec vs pure-jnp oracle.
+
+This is the core build-time correctness signal: the rust runtime executes
+exactly what these kernels lower to.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.coded_matvec import (
+    DEFAULT_BLOCK_COLS,
+    DEFAULT_BLOCK_ROWS,
+    coded_matvec,
+    matvec_block_shape,
+    vmem_bytes,
+)
+from compile.kernels import ref
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+class TestMatvecFixedShapes:
+    @pytest.mark.parametrize(
+        "rows,cols,batch",
+        [(8, 8, 1), (16, 32, 1), (128, 256, 1), (64, 64, 4), (256, 128, 8)],
+    )
+    def test_matches_ref(self, rows, cols, batch):
+        a = rand(rows * 7 + cols, (rows, cols))
+        x = rand(batch + 13, (cols, batch))
+        got = coded_matvec(a, x)
+        want = ref.matvec_ref(a, x)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_single_block(self):
+        a = rand(1, (8, 8))
+        x = rand(2, (8, 1))
+        np.testing.assert_allclose(
+            coded_matvec(a, x, block_rows=8, block_cols=8),
+            ref.matvec_ref(a, x), rtol=1e-5, atol=1e-6,
+        )
+
+    def test_many_k_blocks_accumulate(self):
+        # k is the sequential grid axis; accumulation across 16 k-steps.
+        a = rand(3, (8, 128))
+        x = rand(4, (128, 1))
+        got = coded_matvec(a, x, block_rows=8, block_cols=8)
+        np.testing.assert_allclose(got, ref.matvec_ref(a, x), rtol=1e-5, atol=1e-5)
+
+    def test_explicit_blocks(self):
+        a = rand(5, (64, 96))
+        x = rand(6, (96, 2))
+        got = coded_matvec(a, x, block_rows=16, block_cols=32)
+        np.testing.assert_allclose(got, ref.matvec_ref(a, x), rtol=1e-5, atol=1e-5)
+
+    def test_bf16_inputs_f32_accumulate(self):
+        a = rand(7, (32, 64), jnp.bfloat16)
+        x = rand(8, (64, 1), jnp.bfloat16)
+        got = coded_matvec(a, x)
+        assert got.dtype == jnp.float32
+        np.testing.assert_allclose(got, ref.matvec_ref(a, x), rtol=2e-2, atol=2e-2)
+
+    def test_zero_matrix(self):
+        a = jnp.zeros((16, 16))
+        x = rand(9, (16, 1))
+        assert float(jnp.abs(coded_matvec(a, x)).max()) == 0.0
+
+    def test_identity_matrix(self):
+        x = rand(10, (32, 1))
+        got = coded_matvec(jnp.eye(32), x)
+        np.testing.assert_allclose(got, x, rtol=1e-6, atol=1e-6)
+
+    def test_shape_mismatch_raises(self):
+        with pytest.raises(ValueError, match="shape mismatch"):
+            coded_matvec(jnp.zeros((8, 8)), jnp.zeros((16, 1)))
+
+    def test_bad_block_raises(self):
+        with pytest.raises(ValueError, match="must divide"):
+            coded_matvec(jnp.zeros((8, 12)), jnp.zeros((12, 1)),
+                         block_rows=8, block_cols=8)
+
+
+class TestMatvecHypothesis:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        nr=st.integers(1, 4), nk=st.integers(1, 4),
+        br=st.sampled_from([8, 16, 32]), bc=st.sampled_from([8, 16, 32]),
+        batch=st.sampled_from([1, 2, 8]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_shape_sweep(self, nr, nk, br, bc, batch, seed):
+        rows, cols = nr * br, nk * bc
+        a = rand(seed, (rows, cols))
+        x = rand(seed ^ 0xABCDEF, (cols, batch))
+        got = coded_matvec(a, x, block_rows=br, block_cols=bc)
+        np.testing.assert_allclose(got, ref.matvec_ref(a, x), rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_dtype_sweep(self, dtype, seed):
+        a = rand(seed, (32, 32), dtype)
+        x = rand(seed + 1, (32, 1), dtype)
+        tol = 1e-4 if dtype == jnp.float32 else 3e-2
+        np.testing.assert_allclose(
+            coded_matvec(a, x), ref.matvec_ref(a, x), rtol=tol, atol=tol
+        )
+
+
+class TestBlockShapeHelper:
+    @settings(max_examples=50, deadline=None)
+    @given(rows=st.integers(1, 600), cols=st.integers(1, 600))
+    def test_divides_and_capped(self, rows, cols):
+        br, bc = matvec_block_shape(rows, cols)
+        assert rows % br == 0 and cols % bc == 0
+        assert br <= DEFAULT_BLOCK_ROWS and bc <= DEFAULT_BLOCK_COLS
+
+    def test_exact_defaults(self):
+        assert matvec_block_shape(1024, 512) == (
+            DEFAULT_BLOCK_ROWS, DEFAULT_BLOCK_COLS)
+
+    def test_vmem_budget(self):
+        # Default tiles stay far below the 16 MiB VMEM budget.
+        assert vmem_bytes(DEFAULT_BLOCK_ROWS, DEFAULT_BLOCK_COLS, 8) < 16 * 2**20 / 8

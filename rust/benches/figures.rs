@@ -1,0 +1,32 @@
+//! `cargo bench --bench figures` — end-to-end regeneration benches, one
+//! per paper table/figure (DESIGN.md §4). Each bench runs the same code
+//! the `coded-coop figure` harness uses (reduced trial counts so the
+//! bench suite completes in minutes) and reports wall time; throughput is
+//! Monte-Carlo trials per second.
+
+use std::time::Duration;
+
+use coded_coop::figures::{self, FigureOptions};
+use coded_coop::util::benchkit::{group, Bench};
+
+fn main() {
+    group("figure regeneration (reduced trials)");
+    let opts = FigureOptions {
+        trials: 10_000,
+        seed: 2022,
+        fit_samples: 50_000,
+        threads: 0,
+    };
+    for id in figures::ALL_IDS {
+        let r = Bench::new()
+            .warmup(Duration::from_millis(100))
+            .measure_time(Duration::from_secs(2))
+            .max_iters(20)
+            .items(opts.trials as f64)
+            .run(&format!("figure::{id}"), || {
+                figures::run(id, &opts).expect("figure must regenerate")
+            });
+        println!("{}", r.report());
+    }
+    println!("\n(fig4a includes the λ-sweep grid optimum; fig5 keeps CDF samples)");
+}

@@ -1,0 +1,209 @@
+//! `cargo bench --bench hotpaths` — microbenchmarks of every hot path
+//! identified in DESIGN.md §9, used to drive the §Perf pass in
+//! EXPERIMENTS.md.
+//!
+//! Groups:
+//! * PRNG + delay sampling (the MC engine's inner loop)
+//! * Monte-Carlo engine end-to-end (trials/s)
+//! * assignment algorithms at N = 50 / 200 / 1000
+//! * SCA-enhanced allocation
+//! * MDS decode (LU solve) at L = 128 / 512
+//! * PJRT artifact execution (matvec bucket) vs native loop
+
+use std::time::Duration;
+
+use coded_coop::alloc::{markov, sca, EffLink};
+use coded_coop::assign::{
+    dedicated_iter, dedicated_simple, fractional, ValueMatrix, ValueModel,
+};
+use coded_coop::coding::MdsCode;
+use coded_coop::config::{AShift, CommModel, Scenario};
+use coded_coop::coordinator::native_matmul;
+use coded_coop::model::dist::LinkDelay;
+use coded_coop::model::params::LinkParams;
+use coded_coop::plan::{self, LoadMethod, PlanSpec, Policy};
+use coded_coop::runtime::{default_artifact_dir, Runtime};
+use coded_coop::sim::{self, McOptions};
+use coded_coop::util::benchkit::{black_box, group, Bench};
+use coded_coop::util::rng::Rng;
+
+fn quick() -> Bench {
+    Bench::new()
+        .warmup(Duration::from_millis(100))
+        .measure_time(Duration::from_millis(800))
+}
+
+fn main() {
+    bench_sampling();
+    bench_mc_engine();
+    bench_assignment();
+    bench_sca();
+    bench_decode();
+    bench_runtime();
+}
+
+fn bench_sampling() {
+    group("PRNG + delay sampling");
+    let mut rng = Rng::new(1);
+    let r = quick()
+        .items(1024.0)
+        .run("rng::f64 x1024", || {
+            let mut acc = 0.0;
+            for _ in 0..1024 {
+                acc += rng.f64();
+            }
+            acc
+        });
+    println!("{}", r.report());
+
+    let p = LinkParams::new(2.0, 0.25, 4.0);
+    let d = LinkDelay::new(&p, 100.0, 1.0, 1.0);
+    let r = quick().items(1024.0).run("LinkDelay::sample x1024", || {
+        let mut acc = 0.0;
+        for _ in 0..1024 {
+            acc += d.sample(&mut rng);
+        }
+        acc
+    });
+    println!("{}", r.report());
+}
+
+fn bench_mc_engine() {
+    group("Monte-Carlo engine (large scale, Dedi-iter plan)");
+    let s = Scenario::large_scale(2022, 2.0, CommModel::Stochastic);
+    let spec = PlanSpec {
+        policy: Policy::DediIter,
+        values: ValueModel::Markov,
+        loads: LoadMethod::Markov,
+    };
+    let p = plan::build(&s, &spec);
+    for threads in [1, 0] {
+        let label = if threads == 1 {
+            "sim::run 20k trials, 1 thread"
+        } else {
+            "sim::run 20k trials, all cores"
+        };
+        let opts = McOptions {
+            trials: 20_000,
+            seed: 5,
+            keep_samples: false,
+            threads,
+        };
+        let r = quick()
+            .items(20_000.0)
+            .run(label, || sim::run(&s, &p, &opts).system.mean());
+        println!("{}", r.report());
+    }
+}
+
+fn bench_assignment() {
+    group("worker assignment");
+    for n in [50usize, 200, 1000] {
+        let s = Scenario::random(
+            "bench",
+            8,
+            n,
+            1e4,
+            AShift::Range(0.05, 0.5),
+            2.0,
+            CommModel::Stochastic,
+            7,
+        );
+        let vm = ValueMatrix::new(&s, ValueModel::Markov);
+        let r = quick().run(&format!("Alg2 simple greedy N={n}"), || {
+            dedicated_simple::assign(black_box(&vm))
+        });
+        println!("{}", r.report());
+        let r = quick().run(&format!("Alg1 iterated greedy N={n}"), || {
+            dedicated_iter::assign(black_box(&vm), &Default::default())
+        });
+        println!("{}", r.report());
+    }
+    let s = Scenario::large_scale(3, 2.0, CommModel::Stochastic);
+    let vm = ValueMatrix::new(&s, ValueModel::Markov);
+    let d = dedicated_iter::assign(&vm, &Default::default());
+    let r = quick().run("Alg4 fractional N=50", || {
+        fractional::assign(black_box(&s), black_box(&d), &Default::default())
+    });
+    println!("{}", r.report());
+}
+
+fn bench_sca() {
+    group("load allocation");
+    let mut rng = Rng::new(9);
+    let links: Vec<EffLink> = (0..50)
+        .map(|_| {
+            let a = rng.range(0.05, 0.5);
+            EffLink::dedicated(&LinkParams::new(2.0 / a, a, 1.0 / a))
+        })
+        .collect();
+    let thetas: Vec<f64> = links.iter().map(EffLink::theta).collect();
+    let r = quick().run("Thm1 closed form N=50", || {
+        markov::allocate(black_box(&thetas), 1e4)
+    });
+    println!("{}", r.report());
+    let r = quick().run("Alg3 SCA N=50", || {
+        sca::allocate(black_box(&links), 1e4, &Default::default())
+    });
+    println!("{}", r.report());
+}
+
+fn bench_decode() {
+    group("MDS decode (LU solve on received rows)");
+    let mut rng = Rng::new(11);
+    for l in [128usize, 512] {
+        let code = MdsCode::new(l, l + l / 2, &mut rng);
+        let y: Vec<f64> = (0..code.coded_len()).map(|_| rng.normal()).collect();
+        // Worst case: all-parity decode (no systematic fast path).
+        let rx: Vec<(usize, f64)> = (code.coded_len() - l..code.coded_len())
+            .map(|i| (i, y[i]))
+            .collect();
+        let r = quick().items(l as f64).run(&format!("decode L={l} (parity rows)"), || {
+            code.decode(black_box(&rx)).unwrap()
+        });
+        println!("{}", r.report());
+        // Fast path: systematic rows arrive first.
+        let rx: Vec<(usize, f64)> = (0..l).map(|i| (i, y[i])).collect();
+        let r = quick()
+            .items(l as f64)
+            .run(&format!("decode L={l} (systematic fast path)"), || {
+                code.decode(black_box(&rx)).unwrap()
+            });
+        println!("{}", r.report());
+    }
+}
+
+fn bench_runtime() {
+    group("PJRT artifact execution (512×512 mat-vec)");
+    let mut rt = match Runtime::new(&default_artifact_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("skipped: {e}");
+            return;
+        }
+    };
+    let mut rng = Rng::new(13);
+    let (rows, cols) = (512usize, 512usize);
+    let a: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+    let x: Vec<f32> = (0..cols).map(|_| rng.normal() as f32).collect();
+
+    // Warm the executable cache outside the timed region.
+    rt.matvec(&a, rows, cols, &x, 1).unwrap();
+    rt.matvec_native(&a, rows, cols, &x, 1).unwrap();
+
+    let r = quick().items((rows * cols) as f64).run("pallas artifact", || {
+        rt.matvec(black_box(&a), rows, cols, black_box(&x), 1).unwrap()
+    });
+    println!("{}", r.report());
+    let r = quick()
+        .items((rows * cols) as f64)
+        .run("xla-native artifact (ablation)", || {
+            rt.matvec_native(black_box(&a), rows, cols, black_box(&x), 1)
+                .unwrap()
+        });
+    println!("{}", r.report());
+    let r = quick().items((rows * cols) as f64).run("rust native loop", || {
+        native_matmul(black_box(&a), rows, cols, black_box(&x), 1)
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,200 @@
+//! Theorem 2: exact optimal load allocation when computation delay
+//! dominates (§III-B).
+//!
+//! With `T_n = ShiftedExp(a_n·l_n, u_n/l_n)` the original problem P3 is
+//! convex; the KKT system yields
+//!
+//! ```text
+//! φ_n  = (−W₋₁(−e^{−u_n·a_n − 1}) − 1)/u_n          (per-row time budget)
+//! l_n* = L / (φ_n · Σ_j u_j/(1 + u_j·φ_j))
+//! t*   = L / Σ_j u_j/(1 + u_j·φ_j)
+//! ```
+//!
+//! The same closed form serves the **communication-dominant** case by
+//! substituting `u ← γ`, `a ← 0⁺` (§III-B末); see [`comm_dominant_phi`].
+
+use super::Allocation;
+use crate::util::lambert::phi;
+
+/// Per-node shifted-exponential parameters `(a, u)` after resource
+/// scaling (`a/k`, `k·u` under fractional shares).
+#[derive(Clone, Copy, Debug)]
+pub struct CompParams {
+    pub a: f64,
+    pub u: f64,
+}
+
+/// Theorem-2 allocation.
+pub fn allocate(nodes: &[CompParams], l_rows: f64) -> Allocation {
+    assert!(!nodes.is_empty() && l_rows > 0.0);
+    let phis: Vec<f64> = nodes.iter().map(|p| phi(p.a, p.u)).collect();
+    let denom: f64 = nodes
+        .iter()
+        .zip(&phis)
+        .map(|(p, &f)| p.u / (1.0 + p.u * f))
+        .sum();
+    let t_star = l_rows / denom;
+    let loads = phis.iter().map(|&f| t_star / f).collect();
+    Allocation { loads, t_star }
+}
+
+/// Node value for worker assignment in the computation-dominant case
+/// (§III-C): `v = u / (L·(1 + u·φ))`, so `1/t* = Σ v` again.
+pub fn node_value(p: CompParams, l_rows: f64) -> f64 {
+    let f = phi(p.a, p.u);
+    p.u / (l_rows * (1.0 + p.u * f))
+}
+
+/// Communication-dominant limit: exponential delay without shift. The
+/// Lambert form needs `a > 0`, but the limit `a → 0⁺` exists:
+/// `φ(0, γ) = (−W₋₁(−e⁻¹)·…)`… numerically we evaluate at a tiny shift.
+pub fn comm_dominant_phi(gamma: f64) -> f64 {
+    phi(1e-9, gamma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::{expected_results, EffLink};
+
+    fn exact_progress(nodes: &[CompParams], loads: &[f64], t: f64) -> f64 {
+        // E[X(t)] with the pure shifted-exponential CDF (eq. 14).
+        let links: Vec<EffLink> = nodes
+            .iter()
+            .map(|p| EffLink {
+                comm: None,
+                comp: p.u,
+                shift: p.a,
+            })
+            .collect();
+        expected_results(&links, loads, t)
+    }
+
+    #[test]
+    fn constraint_tight_at_optimum() {
+        // (35b): at (l*, t*) the expectation constraint is active.
+        let nodes = [
+            CompParams { a: 0.2, u: 5.0 },
+            CompParams { a: 0.25, u: 4.0 },
+            CompParams { a: 0.3, u: 10.0 / 3.0 },
+            CompParams { a: 0.4, u: 2.5 },
+        ];
+        let l_rows = 1e4;
+        let alloc = allocate(&nodes, l_rows);
+        let progress = exact_progress(&nodes, &alloc.loads, alloc.t_star);
+        assert!(
+            (progress - l_rows).abs() / l_rows < 1e-9,
+            "E[X(t*)] = {progress}"
+        );
+    }
+
+    #[test]
+    fn stationarity_t_over_l_equals_phi() {
+        // (36): t*/l_n* = φ_n for every node.
+        let nodes = [
+            CompParams { a: 0.2, u: 5.0 },
+            CompParams { a: 0.5, u: 2.0 },
+        ];
+        let alloc = allocate(&nodes, 100.0);
+        for (p, &l) in nodes.iter().zip(&alloc.loads) {
+            let ratio = alloc.t_star / l;
+            assert!((ratio - phi(p.a, p.u)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn t_exceeds_all_shifts() {
+        // §III-B observation: t* > max a_n·l_n* — every node can finish.
+        let nodes = [
+            CompParams { a: 1.36, u: 4.976 }, // t2.micro
+            CompParams { a: 0.97, u: 19.29 }, // c5.large
+        ];
+        let alloc = allocate(&nodes, 1e4);
+        for (p, &l) in nodes.iter().zip(&alloc.loads) {
+            assert!(alloc.t_star > p.a * l, "t*={} ≤ a·l={}", alloc.t_star, p.a * l);
+        }
+    }
+
+    #[test]
+    fn optimality_vs_perturbations() {
+        // No feasibility-preserving reallocation of load should beat t*:
+        // perturb loads, recompute the exact t needed, must be ≥ t*.
+        use crate::alloc::exact_t_for_loads;
+        let nodes = [
+            CompParams { a: 0.2, u: 5.0 },
+            CompParams { a: 0.25, u: 4.0 },
+            CompParams { a: 0.3, u: 10.0 / 3.0 },
+        ];
+        let links: Vec<EffLink> = nodes
+            .iter()
+            .map(|p| EffLink {
+                comm: None,
+                comp: p.u,
+                shift: p.a,
+            })
+            .collect();
+        let l_rows = 1000.0;
+        let alloc = allocate(&nodes, l_rows);
+        let deltas = [
+            vec![1.05, 1.0, 0.95],
+            vec![0.9, 1.1, 1.0],
+            vec![1.2, 0.9, 0.95],
+        ];
+        for d in &deltas {
+            let loads: Vec<f64> = alloc
+                .loads
+                .iter()
+                .zip(d)
+                .map(|(&l, &f)| l * f)
+                .collect();
+            let t = exact_t_for_loads(&links, &loads, l_rows);
+            assert!(
+                t >= alloc.t_star - 1e-6,
+                "perturbed allocation beat the optimum: {t} < {}",
+                alloc.t_star
+            );
+        }
+    }
+
+    #[test]
+    fn faster_node_gets_more_load() {
+        let nodes = [
+            CompParams { a: 0.2, u: 5.0 },  // fast
+            CompParams { a: 0.4, u: 2.5 },  // slow
+        ];
+        let alloc = allocate(&nodes, 100.0);
+        assert!(alloc.loads[0] > alloc.loads[1]);
+    }
+
+    #[test]
+    fn redundancy_below_markov() {
+        // Theorem 2's exact solution needs less redundancy than the
+        // 2× of the Markov allocation.
+        let nodes = [
+            CompParams { a: 0.2, u: 5.0 },
+            CompParams { a: 0.25, u: 4.0 },
+        ];
+        let alloc = allocate(&nodes, 1e4);
+        let overhead = alloc.total_load() / 1e4;
+        assert!(overhead > 1.0 && overhead < 2.0, "overhead={overhead}");
+    }
+
+    #[test]
+    fn node_value_sums_to_inverse_t() {
+        let nodes = [
+            CompParams { a: 0.2, u: 5.0 },
+            CompParams { a: 0.5, u: 2.0 },
+            CompParams { a: 0.3, u: 3.0 },
+        ];
+        let l = 777.0;
+        let alloc = allocate(&nodes, l);
+        let vsum: f64 = nodes.iter().map(|&p| node_value(p, l)).sum();
+        assert!((1.0 / alloc.t_star - vsum).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comm_dominant_phi_finite() {
+        let f = comm_dominant_phi(2.0);
+        assert!(f.is_finite() && f > 0.0);
+    }
+}

@@ -1,0 +1,127 @@
+//! Theorem 3 (§IV-A): fractional-assignment optimality condition and the
+//! `V_m` sum-value machinery of P7.
+//!
+//! Given any resource shares `(k, b)`, the optimal loads satisfy
+//! `l*_{m,n} = t*/(2θ_{m,n})`, which reduces constraint (25b) to
+//! `L_m ≤ Σ_n t/(4θ_{m,n})` — so `1/t*_m = V_m ≜ (1/L_m)·Σ_n 1/(4θ_{m,n})`
+//! and P6 becomes the max-min allocation P7 over `(k, b)` only.
+//!
+//! The actual loads therefore coincide with Theorem 1 evaluated at the
+//! fractional θ's ([`crate::alloc::markov::allocate`]); this module adds
+//! the `V_m` helpers and the Theorem-3 identity used by Algorithm 4.
+
+use super::markov;
+use super::Allocation;
+use crate::model::params::{theta_fractional, LinkParams};
+
+/// θ row of one master: local node followed by all workers, under shares
+/// `k[m][n]`, `b[m][n]` (worker-indexed, `n ∈ 0..N`).
+pub fn theta_row(
+    local: &LinkParams,
+    links: &[LinkParams],
+    k_row: &[f64],
+    b_row: &[f64],
+) -> Vec<f64> {
+    assert_eq!(links.len(), k_row.len());
+    assert_eq!(links.len(), b_row.len());
+    let mut thetas = Vec::with_capacity(links.len() + 1);
+    thetas.push(local.theta()); // k_{m,0} = b_{m,0} = 1
+    for ((p, &k), &b) in links.iter().zip(k_row).zip(b_row) {
+        thetas.push(theta_fractional(p, k, b));
+    }
+    thetas
+}
+
+/// Sum value `V_m = (1/L_m)·Σ_{n=0}^{N} 1/(4θ_{m,n})` (eq. 28a). Nodes
+/// with zero share contribute zero (θ = ∞).
+pub fn sum_value(thetas: &[f64], l_rows: f64) -> f64 {
+    thetas.iter().map(|&t| markov::node_value(t, l_rows)).sum()
+}
+
+/// Theorem-3 loads for the given θ row: `l_n = t*/(2θ_n)` with
+/// `t* = 1/V_m`. Identical to Theorem 1's closed form — asserted in tests.
+pub fn allocate(thetas: &[f64], l_rows: f64) -> Allocation {
+    markov::allocate(thetas, l_rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> (LinkParams, Vec<LinkParams>) {
+        (
+            LinkParams::local(0.4, 2.5),
+            vec![
+                LinkParams::new(10.0, 0.2, 5.0),
+                LinkParams::new(8.0, 0.25, 4.0),
+                LinkParams::new(6.0, 0.3, 3.33),
+            ],
+        )
+    }
+
+    #[test]
+    fn theorem3_identity_l_eq_t_over_2theta() {
+        let (local, links) = params();
+        let k = [0.5, 1.0, 0.25];
+        let b = [0.5, 0.75, 0.25];
+        let thetas = theta_row(&local, &links, &k, &b);
+        let alloc = allocate(&thetas, 1e4);
+        for (&th, &l) in thetas.iter().zip(&alloc.loads) {
+            assert!(
+                (l - alloc.t_star / (2.0 * th)).abs() < 1e-6,
+                "l={l} vs t/(2θ)={}",
+                alloc.t_star / (2.0 * th)
+            );
+        }
+    }
+
+    #[test]
+    fn t_star_is_inverse_sum_value() {
+        let (local, links) = params();
+        let k = [1.0, 0.5, 0.5];
+        let b = [1.0, 0.5, 0.5];
+        let thetas = theta_row(&local, &links, &k, &b);
+        let l_rows = 1e4;
+        let v = sum_value(&thetas, l_rows);
+        let alloc = allocate(&thetas, l_rows);
+        assert!((alloc.t_star * v - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_share_workers_excluded() {
+        let (local, links) = params();
+        let k = [1.0, 0.0, 1.0];
+        let b = [1.0, 0.0, 1.0];
+        let thetas = theta_row(&local, &links, &k, &b);
+        assert!(thetas[2].is_infinite());
+        let alloc = allocate(&thetas, 100.0);
+        assert_eq!(alloc.loads[2], 0.0);
+    }
+
+    #[test]
+    fn more_resources_lower_delay() {
+        let (local, links) = params();
+        let t_half = allocate(
+            &theta_row(&local, &links, &[0.5; 3], &[0.5; 3]),
+            1e4,
+        )
+        .t_star;
+        let t_full = allocate(
+            &theta_row(&local, &links, &[1.0; 3], &[1.0; 3]),
+            1e4,
+        )
+        .t_star;
+        assert!(t_full < t_half);
+    }
+
+    #[test]
+    fn dedicated_equals_fractional_with_unit_shares() {
+        let (local, links) = params();
+        let thetas_frac = theta_row(&local, &links, &[1.0; 3], &[1.0; 3]);
+        let mut thetas_dedi = vec![local.theta()];
+        thetas_dedi.extend(links.iter().map(|p| p.theta()));
+        for (a, b) in thetas_frac.iter().zip(&thetas_dedi) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+}

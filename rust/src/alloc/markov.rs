@@ -1,0 +1,137 @@
+//! Theorem 1: closed-form load allocation for the Markov-approximation
+//! problem P4.
+//!
+//! Given serving nodes with expected unit delays `θ_n`:
+//!
+//! ```text
+//! l_n* = L / (θ_n · Σ_j 1/(2θ_j)),    t* = L / Σ_j 1/(4θ_j)
+//! ```
+//!
+//! Distribution-free (Remark 1): only the mean delay per unit load enters.
+//! The allocation doubles the minimum load (Σ l_n* = 2L), i.e. the Markov
+//! bound buys robustness with 2× coding redundancy.
+
+use super::Allocation;
+
+/// Theorem-1 allocation from expected unit delays. Nodes with `θ = ∞`
+/// (zero resource share) receive zero load.
+pub fn allocate(thetas: &[f64], l_rows: f64) -> Allocation {
+    assert!(!thetas.is_empty(), "need at least one serving node");
+    assert!(l_rows > 0.0);
+    assert!(
+        thetas.iter().all(|&t| t > 0.0),
+        "unit delays must be positive"
+    );
+    let denom: f64 = thetas
+        .iter()
+        .filter(|t| t.is_finite())
+        .map(|&t| 1.0 / (2.0 * t))
+        .sum();
+    assert!(denom > 0.0, "no node with finite θ");
+    let loads = thetas
+        .iter()
+        .map(|&t| if t.is_finite() { l_rows / (t * denom) } else { 0.0 })
+        .collect();
+    let t_star = l_rows / (denom / 2.0); // Σ 1/(4θ) = denom/2
+    Allocation { loads, t_star }
+}
+
+/// Per-node value `v_{m,n} = 1/(4·L_m·θ_{m,n})` — the worker-assignment
+/// currency of P5/P7 (`1/t_m* = Σ v_{m,n}` over serving nodes).
+pub fn node_value(theta: f64, l_rows: f64) -> f64 {
+    if theta.is_finite() {
+        1.0 / (4.0 * l_rows * theta)
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::{expected_results, EffLink};
+    use crate::model::params::LinkParams;
+
+    #[test]
+    fn closed_form_matches_formula() {
+        let thetas = [1.0, 2.0, 4.0];
+        let l = 100.0;
+        let alloc = allocate(&thetas, l);
+        let denom: f64 = thetas.iter().map(|t| 1.0 / (2.0 * t)).sum();
+        for (i, &th) in thetas.iter().enumerate() {
+            assert!((alloc.loads[i] - l / (th * denom)).abs() < 1e-9);
+        }
+        assert!((alloc.t_star - l / (denom / 2.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn total_load_is_twice_l() {
+        // Σ l_n = Σ L/(θ_n Σ 1/(2θ)) = L·(Σ 1/θ)/(Σ 1/(2θ)) = 2L.
+        let alloc = allocate(&[0.3, 0.9, 1.7, 5.0], 1e4);
+        assert!((alloc.total_load() - 2e4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn loads_inverse_to_theta() {
+        let alloc = allocate(&[1.0, 2.0], 10.0);
+        assert!((alloc.loads[0] / alloc.loads[1] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn markov_constraint_tight_at_optimum() {
+        // At (l*, t*): Σ l(1 − θl/t) = L exactly (KKT complementary
+        // slackness of P4).
+        let thetas = [0.7, 1.3, 2.9];
+        let l_rows = 500.0;
+        let alloc = allocate(&thetas, l_rows);
+        let lhs: f64 = thetas
+            .iter()
+            .zip(&alloc.loads)
+            .map(|(&th, &l)| l * (1.0 - th * l / alloc.t_star))
+            .sum();
+        assert!((lhs - l_rows).abs() < 1e-6, "lhs={lhs}");
+    }
+
+    #[test]
+    fn allocation_feasible_under_exact_model() {
+        // The Markov bound is conservative: under the true CDF the
+        // expected progress at t* must be ≥ L.
+        let params = [
+            LinkParams::new(10.0, 0.2, 5.0),
+            LinkParams::new(8.0, 0.25, 4.0),
+            LinkParams::new(6.7, 0.3, 3.33),
+        ];
+        let links: Vec<EffLink> = params.iter().map(EffLink::dedicated).collect();
+        let thetas: Vec<f64> = links.iter().map(EffLink::theta).collect();
+        let l_rows = 1e4;
+        let alloc = allocate(&thetas, l_rows);
+        let progress = expected_results(&links, &alloc.loads, alloc.t_star);
+        assert!(
+            progress >= l_rows,
+            "E[X(t*)] = {progress} < L = {l_rows}"
+        );
+    }
+
+    #[test]
+    fn infinite_theta_gets_zero_load() {
+        let alloc = allocate(&[1.0, f64::INFINITY, 2.0], 10.0);
+        assert_eq!(alloc.loads[1], 0.0);
+        assert!(alloc.loads[0] > 0.0 && alloc.loads[2] > 0.0);
+    }
+
+    #[test]
+    fn node_value_definition() {
+        assert!((node_value(2.0, 10.0) - 1.0 / 80.0).abs() < 1e-12);
+        assert_eq!(node_value(f64::INFINITY, 10.0), 0.0);
+    }
+
+    #[test]
+    fn t_star_is_reciprocal_value_sum() {
+        // 1/t* = Σ v_n with v_n = 1/(4 L θ_n) — eq. (17).
+        let thetas = [0.5, 1.5, 3.5];
+        let l = 200.0;
+        let alloc = allocate(&thetas, l);
+        let vsum: f64 = thetas.iter().map(|&t| node_value(t, l)).sum();
+        assert!((1.0 / alloc.t_star - vsum).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,221 @@
+//! Load allocation (§III-A/B/D, §IV-A): given a set of serving nodes and
+//! their delay statistics, split the coded load `l_{m,n}` and estimate the
+//! completion delay `t_m`.
+//!
+//! * [`markov`] — Theorem 1: closed-form optimum of the Markov-inequality
+//!   approximation P4 (distribution-free; needs only means).
+//! * [`comp_dominant`] — Theorem 2: exact optimum of P3 when computation
+//!   delay dominates (Lambert `W₋₁`).
+//! * [`fractional`] — Theorem 3: KKT condition `l* = t*/(2θ)` under
+//!   fractional resource shares + the `V_m` sum-value helpers of §IV.
+//! * [`sca`] — Algorithm 3: SCA-enhanced allocation solving the original
+//!   non-convex P3 from the Theorem-1 starting point.
+//!
+//! The shared currency is [`EffLink`]: per-row delay parameters after
+//! resource scaling (`γ → bγ`, `u → ku`, `a → a/k`), so every allocator
+//! works unchanged for both dedicated and fractional policies.
+
+pub mod markov;
+pub mod comp_dominant;
+pub mod fractional;
+pub mod sca;
+
+use crate::model::params::LinkParams;
+
+/// Effective per-row delay parameters of one serving node after resource
+/// scaling. For dedicated assignment `k = b = 1`; local nodes have no
+/// communication leg (`comm = None`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EffLink {
+    /// Effective communication rate `b·γ` per row; `None` if no comm leg
+    /// (local processing or computation-dominant model).
+    pub comm: Option<f64>,
+    /// Effective computation rate `k·u` per row.
+    pub comp: f64,
+    /// Effective shift `a/k` per row.
+    pub shift: f64,
+}
+
+impl EffLink {
+    /// Dedicated view of a link (`k = b = 1`).
+    pub fn dedicated(p: &LinkParams) -> Self {
+        Self::fractional(p, 1.0, 1.0)
+    }
+
+    /// Fractional view with compute share `k`, bandwidth share `b`.
+    pub fn fractional(p: &LinkParams, k: f64, b: f64) -> Self {
+        assert!(k > 0.0 && k <= 1.0, "k={k} out of (0,1]");
+        let comm = if p.is_local() {
+            None
+        } else {
+            assert!(b > 0.0 && b <= 1.0, "b={b} out of (0,1]");
+            Some(b * p.gamma)
+        };
+        Self {
+            comm,
+            comp: k * p.u,
+            shift: p.a / k,
+        }
+    }
+
+    /// Expected unit delay θ (eqs. 10 / 24).
+    pub fn theta(&self) -> f64 {
+        self.comm.map_or(0.0, |g| 1.0 / g) + 1.0 / self.comp + self.shift
+    }
+
+    /// `P[T ≤ t]` for a load of `l` rows (eqs. 3–5).
+    pub fn cdf(&self, l: f64, t: f64) -> f64 {
+        debug_assert!(l > 0.0);
+        let x = t - self.shift * l;
+        if x <= 0.0 {
+            return 0.0;
+        }
+        let l2 = self.comp / l;
+        match self.comm {
+            None => 1.0 - (-l2 * x).exp(),
+            Some(g) => {
+                let l1 = g / l;
+                if (l1 - l2).abs() / l1.max(l2) < 1e-9 {
+                    let lx = l2 * x;
+                    1.0 - (1.0 + lx) * (-lx).exp()
+                } else {
+                    1.0 - (l1 * (-l2 * x).exp() - l2 * (-l1 * x).exp()) / (l1 - l2)
+                }
+            }
+        }
+    }
+}
+
+/// Result of a load allocation for one master.
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    /// Loads `l_{m,n}` in the same order as the input links.
+    pub loads: Vec<f64>,
+    /// Predicted completion delay `t_m*`.
+    pub t_star: f64,
+}
+
+impl Allocation {
+    /// Total coded rows `L̃_m = Σ l_{m,n}` (the code length the master
+    /// must encode to).
+    pub fn total_load(&self) -> f64 {
+        self.loads.iter().sum()
+    }
+}
+
+/// Exact expected progress `E[X_m(t)] = Σ l_n·P[T_n ≤ t]` (eq. 8 / 14 /
+/// 19). Zero-load nodes contribute nothing.
+pub fn expected_results(links: &[EffLink], loads: &[f64], t: f64) -> f64 {
+    assert_eq!(links.len(), loads.len());
+    links
+        .iter()
+        .zip(loads)
+        .filter(|&(_, &l)| l > 0.0)
+        .map(|(e, &l)| l * e.cdf(l, t))
+        .sum()
+}
+
+/// Smallest `t` with `E[X(t)] ≥ L` for fixed loads (bisection; used to
+/// evaluate how a given allocation performs under the exact model).
+pub fn exact_t_for_loads(links: &[EffLink], loads: &[f64], l_rows: f64) -> f64 {
+    let total: f64 = loads.iter().sum();
+    assert!(
+        total > l_rows,
+        "loads sum {total} must exceed L={l_rows} for finite t"
+    );
+    let mut lo = 0.0;
+    // Upper bound: every node finishing with margin.
+    let mut hi = links
+        .iter()
+        .zip(loads)
+        .filter(|&(_, &l)| l > 0.0)
+        .map(|(e, &l)| l * e.theta())
+        .fold(1e-6, f64::max)
+        * 64.0;
+    while expected_results(links, loads, hi) < l_rows {
+        hi *= 2.0;
+        assert!(hi < 1e18, "exact_t_for_loads diverged");
+    }
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if expected_results(links, loads, mid) >= l_rows {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+        if hi - lo <= 1e-12 * hi.max(1.0) {
+            break;
+        }
+    }
+    hi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn worker(gamma: f64, a: f64, u: f64) -> EffLink {
+        EffLink::dedicated(&LinkParams::new(gamma, a, u))
+    }
+
+    #[test]
+    fn efflink_theta_matches_params() {
+        let p = LinkParams::new(2.0, 0.25, 4.0);
+        assert!((EffLink::dedicated(&p).theta() - p.theta()).abs() < 1e-12);
+        let f = EffLink::fractional(&p, 0.5, 0.25);
+        let want = 1.0 / (0.25 * 2.0) + 1.0 / (0.5 * 4.0) + 0.25 / 0.5;
+        assert!((f.theta() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn efflink_cdf_matches_linkdelay() {
+        use crate::model::dist::LinkDelay;
+        let p = LinkParams::new(1.7, 0.3, 2.2);
+        let e = EffLink::fractional(&p, 0.6, 0.8);
+        let l = 12.0;
+        let d = LinkDelay::new(&p, l, 0.6, 0.8);
+        for &t in &[1.0, 5.0, 10.0, 20.0, 50.0] {
+            assert!(
+                (e.cdf(l, t) - d.cdf(t)).abs() < 1e-12,
+                "t={t}: {} vs {}",
+                e.cdf(l, t),
+                d.cdf(t)
+            );
+        }
+    }
+
+    #[test]
+    fn expected_results_monotone_in_t() {
+        let links = vec![worker(2.0, 0.2, 5.0), worker(4.0, 0.25, 4.0)];
+        let loads = vec![10.0, 8.0];
+        let mut prev = 0.0;
+        for i in 1..100 {
+            let t = i as f64 * 0.2;
+            let e = expected_results(&links, &loads, t);
+            assert!(e >= prev - 1e-12);
+            prev = e;
+        }
+        assert!(prev <= 18.0 + 1e-9);
+    }
+
+    #[test]
+    fn exact_t_achieves_target() {
+        let links = vec![
+            worker(2.0, 0.2, 5.0),
+            worker(4.0, 0.25, 4.0),
+            EffLink::dedicated(&LinkParams::local(0.4, 2.5)),
+        ];
+        let loads = vec![10.0, 8.0, 6.0];
+        let l_target = 20.0;
+        let t = exact_t_for_loads(&links, &loads, l_target);
+        let e = expected_results(&links, &loads, t);
+        assert!((e - l_target).abs() < 1e-6, "E[X(t*)]={e}");
+    }
+
+    #[test]
+    #[should_panic(expected = "must exceed")]
+    fn exact_t_requires_redundancy() {
+        let links = vec![worker(2.0, 0.2, 5.0)];
+        exact_t_for_loads(&links, &[10.0], 10.0);
+    }
+}

@@ -1,0 +1,510 @@
+//! Algorithm 3: SCA-enhanced load allocation (§III-D).
+//!
+//! The original constraint (8b) `E[X_m(t)] ≥ L_m` is non-convex, but
+//! `L − E[X]` decomposes into a difference of convex functions (eq. 20):
+//! with `ψ(l, t; r, a) ≜ l·e^{−(r/l)(t−a·l)}` (convex — Appendix B),
+//!
+//! ```text
+//! l·(1 − P[T ≤ t]) = c⁺·ψ(l,t; r_lo, a) − c⁻·ψ(l,t; r_hi, a)
+//!   r_lo = min(γ_eff, u_eff), r_hi = max(γ_eff, u_eff)
+//!   c⁺ = r_hi/(r_hi − r_lo),   c⁻ = r_lo/(r_hi − r_lo)
+//! ```
+//!
+//! (local / computation-dominant nodes: `c⁺ = 1, c⁻ = 0` with `r = u`).
+//! Linearizing the concave part at the current point `z` gives the convex
+//! subproblem P(z) (eq. 22), which we solve **exactly**: for fixed `t` the
+//! inner minimization over each `l_n` has a closed form via the same
+//! Lambert `W₋₁` as Theorem 2, and the partial minimum `g(t)` is convex in
+//! `t`, so the smallest feasible `t` falls to bisection. The outer loop is
+//! the diminishing-step SCA of Scutari et al. [32] with
+//! `γ_{r+1} = γ_r(1 − α·γ_r)` (paper: α = 0.995).
+
+use super::{Allocation, EffLink};
+use crate::util::lambert::lambert_wm1;
+
+/// Outer-loop step rule.
+///
+/// Because each subproblem P(z) tightens the true constraint (eq. 21 is
+/// an upper bound, tangent at z), its solution `w` is itself feasible for
+/// P3 with `t(w) ≤ t(z)` — so the full step `z ← w` (the classic
+/// convex–concave procedure / DCA) descends monotonically and converges
+/// in a handful of iterations. The paper's diminishing rule
+/// `γ_{r+1} = γ_r(1 − α·γ_r)` [32] is kept as an option; both reach the
+/// same stationary point (asserted in tests), DCA ~50× faster (§Perf).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepRule {
+    /// Full step `z ← w` (default).
+    Dca,
+    /// The paper's diminishing step with ratio α.
+    Diminishing,
+}
+
+/// SCA hyper-parameters (α follows §V: 0.995).
+#[derive(Clone, Copy, Debug)]
+pub struct ScaOptions {
+    pub max_iters: usize,
+    pub alpha: f64,
+    pub step_rule: StepRule,
+    /// Relative convergence tolerance on `‖w − z‖`.
+    pub tol: f64,
+    /// Per-node load cap as a multiple of `L` (bounds the subproblem).
+    pub load_cap_factor: f64,
+}
+
+impl Default for ScaOptions {
+    fn default() -> Self {
+        Self {
+            max_iters: 200,
+            alpha: 0.995,
+            step_rule: StepRule::Dca,
+            tol: 1e-9,
+            load_cap_factor: 2.5,
+        }
+    }
+}
+
+/// DC decomposition of one node's term.
+#[derive(Clone, Copy, Debug)]
+struct Decomp {
+    /// Rate of the convex ψ term.
+    r_lo: f64,
+    /// Rate of the concave ψ term (`None` for single-exponential nodes).
+    r_hi: Option<f64>,
+    c_plus: f64,
+    c_minus: f64,
+    shift: f64,
+}
+
+impl Decomp {
+    fn new(link: &EffLink) -> Self {
+        match link.comm {
+            None => Self {
+                r_lo: link.comp,
+                r_hi: None,
+                c_plus: 1.0,
+                c_minus: 0.0,
+                shift: link.shift,
+            },
+            Some(mut g) => {
+                // Equal-rate case (eq. 4) is measure-zero; perturb so the
+                // two-exponential decomposition applies (documented).
+                if (g - link.comp).abs() < 1e-9 * g.max(link.comp) {
+                    g *= 1.0 + 1e-6;
+                }
+                let (lo, hi) = if g < link.comp {
+                    (g, link.comp)
+                } else {
+                    (link.comp, g)
+                };
+                Self {
+                    r_lo: lo,
+                    r_hi: Some(hi),
+                    c_plus: hi / (hi - lo),
+                    c_minus: lo / (hi - lo),
+                    shift: link.shift,
+                }
+            }
+        }
+    }
+}
+
+/// `ψ(l, t; r, a) = l·exp(r·a − r·t/l)`, extended by 0 at `l = 0`.
+#[inline]
+fn psi(l: f64, t: f64, r: f64, a: f64) -> f64 {
+    if l <= 0.0 {
+        return 0.0;
+    }
+    l * (r * a - r * t / l).exp()
+}
+
+/// `(∂ψ/∂l, ∂ψ/∂t)`.
+#[inline]
+fn psi_grad(l: f64, t: f64, r: f64, a: f64) -> (f64, f64) {
+    if l <= 0.0 {
+        return (0.0, 0.0);
+    }
+    let e = (r * a - r * t / l).exp();
+    (e * (1.0 + r * t / l), -r * e)
+}
+
+/// Exact minimizer of `q(l) = c⁺·ψ(l, t; r, a) − s·l` over `l ∈ [0, cap]`.
+///
+/// Stationarity `c⁺·e^{ra}·(1+y)e^{−y} = s` with `y = r·t/l` solves to
+/// `y = −W₋₁(−c/e) − 1`, `c = s/(c⁺·e^{ra})` — the same Lambert mechanics
+/// as Theorem 2.
+fn inner_argmin(t: f64, c_plus: f64, r: f64, a: f64, s: f64, cap: f64) -> f64 {
+    debug_assert!(s > 0.0 && c_plus > 0.0 && r > 0.0 && t > 0.0);
+    let c = s / (c_plus * (r * a).exp());
+    if c >= 1.0 {
+        // q is decreasing on all of [0, cap].
+        return cap;
+    }
+    let arg = -c / std::f64::consts::E;
+    let y = match lambert_wm1(arg) {
+        Some(w) => -w - 1.0,
+        None => return cap, // numerically at the branch point: y → 0
+    };
+    if y <= 0.0 {
+        return cap;
+    }
+    (r * t / y).min(cap)
+}
+
+/// One SCA state: loads + t.
+#[derive(Clone, Debug)]
+struct Point {
+    loads: Vec<f64>,
+    t: f64,
+}
+
+/// Solve the convex subproblem P(z) exactly. Returns the minimizing point
+/// `w` with its active-constraint loads.
+fn solve_subproblem(
+    decomps: &[Decomp],
+    l_rows: f64,
+    z: &Point,
+    cap: f64,
+) -> Point {
+    let n = decomps.len();
+    // Linearization of the concave parts at z.
+    // term_n(w) = c⁺ψ(l,t;r_lo) − c⁻[ψ(z) + ∇ψ(z)·(w − z)] − l
+    // Collect per-node: s_n (coefficient of l in the linear part, moved so
+    // the inner problem is c⁺ψ − s·l), and the t-linear + constant parts.
+    let mut s = vec![0.0; n];
+    let mut lin_t = 0.0; // Σ coefficient of t
+    let mut constant = l_rows;
+    for (i, d) in decomps.iter().enumerate() {
+        match d.r_hi {
+            None => {
+                s[i] = 1.0;
+            }
+            Some(rh) => {
+                let (dl, dt) = psi_grad(z.loads[i], z.t, rh, d.shift);
+                let p = psi(z.loads[i], z.t, rh, d.shift);
+                s[i] = 1.0 + d.c_minus * dl;
+                lin_t += -d.c_minus * dt;
+                constant += d.c_minus * (-p + dl * z.loads[i] + dt * z.t);
+            }
+        }
+    }
+
+    // g(t) = constant + lin_t·t + Σ_n min_l [c⁺ψ(l,t;r_lo,a) − s_n·l]
+    let g = |t: f64, loads_out: Option<&mut Vec<f64>>| -> f64 {
+        let mut total = constant + lin_t * t;
+        let mut loads = loads_out;
+        for (i, d) in decomps.iter().enumerate() {
+            let l = inner_argmin(t, d.c_plus, d.r_lo, d.shift, s[i], cap);
+            total += d.c_plus * psi(l, t, d.r_lo, d.shift) - s[i] * l;
+            if let Some(v) = loads.as_deref_mut() {
+                v[i] = l;
+            }
+        }
+        total
+    };
+
+    // z is feasible for P(z) (F(z) = L − E[X](z) ≤ 0 at a feasible z),
+    // so bisect the left edge of {t : g(t) ≤ 0} on [0, z.t].
+    debug_assert!(g(z.t, None) <= 1e-6 * l_rows, "z must be P(z)-feasible");
+    let (mut lo, mut hi) = (0.0, z.t);
+    for _ in 0..100 {
+        let mid = 0.5 * (lo + hi);
+        if g(mid, None) <= 0.0 {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+        if hi - lo <= 1e-14 * hi.max(1.0) {
+            break;
+        }
+    }
+    let mut loads = vec![0.0; n];
+    g(hi, Some(&mut loads));
+    Point { loads, t: hi }
+}
+
+/// Run Algorithm 3 from a feasible starting allocation (Theorem 1's
+/// closed form is the canonical `z₀`).
+pub fn enhance(
+    links: &[EffLink],
+    l_rows: f64,
+    start: &Allocation,
+    opts: &ScaOptions,
+) -> Allocation {
+    assert_eq!(links.len(), start.loads.len());
+    // Filter zero-load nodes (zero-share in fractional plans): they stay
+    // at zero load.
+    let active: Vec<usize> = (0..links.len())
+        .filter(|&i| start.loads[i] > 0.0 && links[i].theta().is_finite())
+        .collect();
+    if active.is_empty() {
+        return start.clone();
+    }
+    let decomps: Vec<Decomp> = active
+        .iter()
+        .map(|&i| Decomp::new(&links[i]))
+        .collect();
+    let cap = opts.load_cap_factor * l_rows;
+
+    let mut z = Point {
+        loads: active.iter().map(|&i| start.loads[i]).collect(),
+        t: start.t_star,
+    };
+    let mut gamma = 1.0f64;
+    let mut prev_w_t = f64::INFINITY;
+    for _ in 0..opts.max_iters {
+        let w = solve_subproblem(&decomps, l_rows, &z, cap);
+        // Fixed-point stop: once successive subproblem solutions agree,
+        // the stationary point is reached — adopt w and stop.
+        if (w.t - prev_w_t).abs() <= opts.tol * w.t.max(1e-300) {
+            z = w;
+            break;
+        }
+        prev_w_t = w.t;
+        match opts.step_rule {
+            StepRule::Dca => {
+                // Full step: w is feasible for P3 (F upper-bounds the
+                // true constraint) and t is non-increasing.
+                z = w;
+            }
+            StepRule::Diminishing => {
+                // Lines 4–5 of Algorithm 3.
+                let mut delta = (w.t - z.t).abs() / z.t.max(1e-300);
+                for (zl, wl) in z.loads.iter().zip(&w.loads) {
+                    delta = delta.max((wl - zl).abs() / (1.0 + zl.abs()));
+                }
+                z.t += gamma * (w.t - z.t);
+                for (zl, wl) in z.loads.iter_mut().zip(&w.loads) {
+                    *zl += gamma * (*wl - *zl);
+                }
+                gamma *= 1.0 - opts.alpha * gamma;
+                if delta < opts.tol {
+                    break;
+                }
+            }
+        }
+    }
+
+    // The averaged point may sit strictly inside the feasible region;
+    // tighten t to the exact boundary for the final report.
+    let sub_links: Vec<EffLink> = active.iter().map(|&i| links[i]).collect();
+    let t_final = super::exact_t_for_loads(&sub_links, &z.loads, l_rows);
+
+    let mut loads = vec![0.0; links.len()];
+    for (slot, &i) in active.iter().enumerate() {
+        loads[i] = z.loads[slot];
+    }
+    Allocation {
+        loads,
+        t_star: t_final.min(z.t),
+    }
+}
+
+/// Convenience: Theorem-1 start + SCA enhancement in one call.
+pub fn allocate(links: &[EffLink], l_rows: f64, opts: &ScaOptions) -> Allocation {
+    let thetas: Vec<f64> = links.iter().map(EffLink::theta).collect();
+    let start = super::markov::allocate(&thetas, l_rows);
+    enhance(links, l_rows, &start, opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::{comp_dominant, expected_results, markov};
+    use crate::model::params::LinkParams;
+    use crate::util::rng::Rng;
+
+    fn random_links(rng: &mut Rng, n: usize, ratio: f64) -> Vec<EffLink> {
+        (0..n)
+            .map(|_| {
+                let a = rng.range(0.05, 0.5);
+                let u = 1.0 / a;
+                EffLink::dedicated(&LinkParams::new(ratio * u, a, u))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn psi_gradient_matches_finite_difference() {
+        let (l, t, r, a) = (7.0, 11.0, 0.8, 0.3);
+        let (dl, dt) = psi_grad(l, t, r, a);
+        let h = 1e-6;
+        let ndl = (psi(l + h, t, r, a) - psi(l - h, t, r, a)) / (2.0 * h);
+        let ndt = (psi(l, t + h, r, a) - psi(l, t - h, r, a)) / (2.0 * h);
+        assert!((dl - ndl).abs() < 1e-6, "{dl} vs {ndl}");
+        assert!((dt - ndt).abs() < 1e-6, "{dt} vs {ndt}");
+    }
+
+    #[test]
+    fn inner_argmin_is_stationary() {
+        // The closed-form minimizer must zero the derivative of
+        // q(l) = c⁺ψ − s·l (when interior).
+        let (t, c_plus, r, a, s, cap) = (10.0, 2.0, 0.5, 0.2, 1.3, 1e6);
+        let l = inner_argmin(t, c_plus, r, a, s, cap);
+        assert!(l > 0.0 && l < cap);
+        let h = 1e-5 * l;
+        let q = |l: f64| c_plus * psi(l, t, r, a) - s * l;
+        let d = (q(l + h) - q(l - h)) / (2.0 * h);
+        assert!(d.abs() < 1e-6, "dq/dl = {d}");
+        // And it is a minimum:
+        assert!(q(l) <= q(l * 0.9) && q(l) <= q(l * 1.1));
+    }
+
+    #[test]
+    fn sca_improves_on_markov_start() {
+        let mut rng = Rng::new(10);
+        let links = random_links(&mut rng, 6, 2.0);
+        let thetas: Vec<f64> = links.iter().map(EffLink::theta).collect();
+        let l_rows = 1e4;
+        let start = markov::allocate(&thetas, l_rows);
+        let enhanced = enhance(&links, l_rows, &start, &ScaOptions::default());
+        assert!(
+            enhanced.t_star <= start.t_star * (1.0 + 1e-9),
+            "SCA worsened: {} > {}",
+            enhanced.t_star,
+            start.t_star
+        );
+        // The paper reports ~9–17% gains; expect at least a few percent.
+        assert!(
+            enhanced.t_star < start.t_star * 0.99,
+            "SCA gained <1%: {} vs {}",
+            enhanced.t_star,
+            start.t_star
+        );
+    }
+
+    #[test]
+    fn sca_solution_feasible_under_exact_model() {
+        let mut rng = Rng::new(11);
+        for trial in 0..5 {
+            let links = random_links(&mut rng, 4 + trial, 2.0);
+            let l_rows = 1e4;
+            let alloc = allocate(&links, l_rows, &ScaOptions::default());
+            let progress = expected_results(&links, &alloc.loads, alloc.t_star);
+            assert!(
+                progress >= l_rows * (1.0 - 1e-6),
+                "trial {trial}: E[X] = {progress} < {l_rows}"
+            );
+        }
+    }
+
+    #[test]
+    fn sca_matches_theorem2_in_comp_dominant_case() {
+        // With no comm leg, P3 is convex and Theorem 2 is the global
+        // optimum — SCA must land on it.
+        let nodes = [
+            comp_dominant::CompParams { a: 0.2, u: 5.0 },
+            comp_dominant::CompParams { a: 0.25, u: 4.0 },
+            comp_dominant::CompParams { a: 0.4, u: 2.5 },
+        ];
+        let links: Vec<EffLink> = nodes
+            .iter()
+            .map(|p| EffLink {
+                comm: None,
+                comp: p.u,
+                shift: p.a,
+            })
+            .collect();
+        let l_rows = 1e4;
+        let exact = comp_dominant::allocate(&nodes, l_rows);
+        let sca = allocate(&links, l_rows, &ScaOptions::default());
+        assert!(
+            (sca.t_star - exact.t_star).abs() / exact.t_star < 1e-3,
+            "SCA {} vs Theorem-2 {}",
+            sca.t_star,
+            exact.t_star
+        );
+        for (s, e) in sca.loads.iter().zip(&exact.loads) {
+            assert!((s - e).abs() / e < 0.02, "loads {s} vs {e}");
+        }
+    }
+
+    #[test]
+    fn sca_constraint_active_at_solution() {
+        let mut rng = Rng::new(12);
+        let links = random_links(&mut rng, 5, 2.0);
+        let l_rows = 5e3;
+        let alloc = allocate(&links, l_rows, &ScaOptions::default());
+        let progress = expected_results(&links, &alloc.loads, alloc.t_star);
+        // Tight within numerical tolerance (otherwise t could shrink).
+        assert!(
+            (progress - l_rows).abs() / l_rows < 1e-3,
+            "slack at optimum: {progress}"
+        );
+    }
+
+    #[test]
+    fn zero_load_nodes_stay_zero() {
+        let links = vec![
+            EffLink::dedicated(&LinkParams::new(10.0, 0.2, 5.0)),
+            EffLink {
+                comm: Some(f64::INFINITY),
+                comp: f64::INFINITY,
+                shift: 0.0,
+            },
+        ];
+        let start = Allocation {
+            loads: vec![2e4, 0.0],
+            t_star: 1e4 * 0.8,
+        };
+        let out = enhance(&links, 1e4, &start, &ScaOptions::default());
+        assert_eq!(out.loads[1], 0.0);
+    }
+
+    #[test]
+    fn dca_and_diminishing_steps_agree() {
+        // Both step rules must reach the same stationary point (the paper
+        // uses the diminishing rule; we default to the DCA full step).
+        let mut rng = Rng::new(21);
+        let links = random_links(&mut rng, 6, 2.0);
+        let l_rows = 1e4;
+        let dca = allocate(&links, l_rows, &ScaOptions::default());
+        let dim = allocate(
+            &links,
+            l_rows,
+            &ScaOptions {
+                step_rule: StepRule::Diminishing,
+                ..Default::default()
+            },
+        );
+        assert!(
+            (dca.t_star - dim.t_star).abs() / dim.t_star < 1e-3,
+            "DCA {} vs diminishing {}",
+            dca.t_star,
+            dim.t_star
+        );
+    }
+
+    #[test]
+    fn dca_descends_monotonically() {
+        // t(w_{r+1}) ≤ t(w_r) under the full step: verify the end point
+        // is no worse than a single subproblem solve.
+        let mut rng = Rng::new(22);
+        let links = random_links(&mut rng, 5, 2.0);
+        let thetas: Vec<f64> = links.iter().map(EffLink::theta).collect();
+        let start = markov::allocate(&thetas, 1e4);
+        let one = enhance(
+            &links,
+            1e4,
+            &start,
+            &ScaOptions {
+                max_iters: 1,
+                ..Default::default()
+            },
+        );
+        let full = enhance(&links, 1e4, &start, &ScaOptions::default());
+        assert!(full.t_star <= one.t_star * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn equal_rate_links_handled() {
+        // γ == u triggers the perturbation path.
+        let links = vec![
+            EffLink::dedicated(&LinkParams::new(5.0, 0.2, 5.0)),
+            EffLink::dedicated(&LinkParams::new(4.0, 0.25, 4.0)),
+        ];
+        let alloc = allocate(&links, 1e3, &ScaOptions::default());
+        assert!(alloc.t_star.is_finite() && alloc.t_star > 0.0);
+        let progress = expected_results(&links, &alloc.loads, alloc.t_star);
+        assert!(progress >= 1e3 * (1.0 - 1e-6));
+    }
+}

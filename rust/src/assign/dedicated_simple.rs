@@ -1,0 +1,87 @@
+//! Algorithm 2: simple greedy dedicated worker assignment.
+//!
+//! Largest-value-first (after Deuermeyer–Friesen–Langston [31]): while
+//! unassigned workers remain, give the currently-poorest master (smallest
+//! sum value `V_m`) its most valuable remaining worker.
+
+use super::{Dedicated, ValueMatrix};
+
+/// Run Algorithm 2.
+pub fn assign(vm: &ValueMatrix) -> Dedicated {
+    let m_cnt = vm.n_masters();
+    let n_cnt = vm.n_workers();
+    assert!(m_cnt > 0);
+    let mut values = vm.v0.clone();
+    let mut owner = vec![usize::MAX; n_cnt];
+    let mut remaining: Vec<usize> = (0..n_cnt).collect();
+
+    while !remaining.is_empty() {
+        // Poorest master.
+        let m_star = (0..m_cnt)
+            .min_by(|&a, &b| values[a].partial_cmp(&values[b]).unwrap())
+            .unwrap();
+        // Its best remaining worker.
+        let (pos, &w_star) = remaining
+            .iter()
+            .enumerate()
+            .max_by(|(_, &a), (_, &b)| {
+                vm.v[m_star][a].partial_cmp(&vm.v[m_star][b]).unwrap()
+            })
+            .unwrap();
+        values[m_star] += vm.v[m_star][w_star];
+        owner[w_star] = m_star;
+        remaining.swap_remove(pos);
+    }
+    Dedicated { owner }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assign::{ValueModel};
+    use crate::config::{CommModel, Scenario};
+
+    #[test]
+    fn assigns_every_worker_exactly_once() {
+        let s = Scenario::large_scale(3, 2.0, CommModel::Stochastic);
+        let vm = ValueMatrix::new(&s, ValueModel::Markov);
+        let d = assign(&vm);
+        assert_eq!(d.owner.len(), 50);
+        assert!(d.owner.iter().all(|&m| m < 4));
+        let total: usize = (0..4).map(|m| d.workers_of(m).len()).sum();
+        assert_eq!(total, 50);
+    }
+
+    #[test]
+    fn poorest_master_is_served_first() {
+        // Master 1 starts much poorer; the single worker must go to it.
+        let vm = ValueMatrix {
+            v0: vec![10.0, 0.1],
+            v: vec![vec![5.0], vec![1.0]],
+        };
+        let d = assign(&vm);
+        assert_eq!(d.owner[0], 1);
+    }
+
+    #[test]
+    fn balances_identical_workers() {
+        // 2 masters with equal locals, 6 identical workers: 3 each.
+        let vm = ValueMatrix {
+            v0: vec![1.0, 1.0],
+            v: vec![vec![1.0; 6], vec![1.0; 6]],
+        };
+        let d = assign(&vm);
+        assert_eq!(d.workers_of(0).len(), 3);
+        assert_eq!(d.workers_of(1).len(), 3);
+    }
+
+    #[test]
+    fn single_master_takes_everything() {
+        let vm = ValueMatrix {
+            v0: vec![0.5],
+            v: vec![vec![0.1, 0.2, 0.3]],
+        };
+        let d = assign(&vm);
+        assert_eq!(d.workers_of(0), vec![0, 1, 2]);
+    }
+}

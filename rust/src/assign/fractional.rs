@@ -1,0 +1,264 @@
+//! Algorithm 4: greedy fractional worker assignment (§IV-B).
+//!
+//! Start from a dedicated assignment (Algorithm 1 or 2 with k = b = 1 on
+//! owned workers), then iteratively balance: take the richest master
+//! `m₁ = argmax V` and the poorest `m₂ = argmin V`, pick the worker of
+//! `m₁` (not yet serving `m₂`) with the highest potential value for `m₂`,
+//! and move either **all** of `m₁`'s share of it, or the exact fraction
+//! that equalizes `V_{m₁} = V_{m₂}` (paper line 7; the split fraction is
+//! under-specified there — we move the same fraction of compute and
+//! bandwidth and solve for it by bisection, which is the unique equalizer
+//! since `V₁` is strictly decreasing and `V₂` strictly increasing in it).
+
+use super::{Dedicated, Fractional, ValueMatrix};
+use crate::alloc::markov::node_value;
+use crate::config::Scenario;
+use crate::model::params::theta_fractional;
+
+/// Options for Algorithm 4.
+#[derive(Clone, Copy, Debug)]
+pub struct FracOptions {
+    pub max_iters: usize,
+    /// Stop when `(max V − min V)/max V` falls below this.
+    pub tol: f64,
+}
+
+impl Default for FracOptions {
+    fn default() -> Self {
+        Self {
+            max_iters: 500,
+            tol: 1e-6,
+        }
+    }
+}
+
+/// Sum values `V_m` under the current shares (eq. 28a).
+pub fn sum_values(s: &Scenario, f: &Fractional) -> Vec<f64> {
+    (0..s.n_masters())
+        .map(|m| {
+            let l = s.l_rows(m);
+            let mut v = node_value(s.link(m, 0).theta(), l);
+            for w in 0..s.n_workers() {
+                if f.k[m][w] > 0.0 {
+                    let th = theta_fractional(&s.link(m, w + 1), f.k[m][w], f.b[m][w]);
+                    v += node_value(th, l);
+                }
+            }
+            v
+        })
+        .collect()
+}
+
+/// Run Algorithm 4 from a dedicated starting assignment.
+pub fn assign(s: &Scenario, start: &Dedicated, opts: &FracOptions) -> Fractional {
+    let m_cnt = s.n_masters();
+    let mut f = Fractional::from_dedicated(start, m_cnt);
+    if m_cnt < 2 {
+        return f;
+    }
+    let mut values = sum_values(s, &f);
+
+    // Value contribution of worker w for master m under shares (k, b).
+    let contrib = |m: usize, w: usize, k: f64, b: f64| -> f64 {
+        if k <= 0.0 || b <= 0.0 {
+            return 0.0;
+        }
+        node_value(theta_fractional(&s.link(m, w + 1), k, b), s.l_rows(m))
+    };
+
+    for _ in 0..opts.max_iters {
+        let m1 = argmax(&values);
+        let m2 = argmin(&values);
+        if values[m1] - values[m2] <= opts.tol * values[m1].max(1e-300) {
+            break;
+        }
+
+        // Workers serving m1 but not m2, with their potential gain for m2
+        // if ALL of m1's share moved (paper lines 3–5).
+        let mut best: Option<(usize, f64)> = None;
+        for w in 0..s.n_workers() {
+            if f.k[m1][w] > 0.0 && f.k[m2][w] == 0.0 {
+                let gain = contrib(m2, w, f.k[m1][w], f.b[m1][w]);
+                if best.map_or(true, |(_, g)| gain > g) {
+                    best = Some((w, gain));
+                }
+            }
+        }
+        let (n1, full_gain) = match best {
+            Some(x) => x,
+            None => break, // no transferable worker
+        };
+
+        let (k0, b0) = (f.k[m1][n1], f.b[m1][n1]);
+        let c1 = contrib(m1, n1, k0, b0); // m1's current contribution of n1
+
+        if values[m1] - c1 <= values[m2] + full_gain {
+            // Partial move: find x with V1(x) = V2(x) (paper lines 6–7).
+            let v1 = |x: f64| values[m1] - c1 + contrib(m1, n1, (1.0 - x) * k0, (1.0 - x) * b0);
+            let v2 = |x: f64| values[m2] + contrib(m2, n1, x * k0, x * b0);
+            let (mut lo, mut hi) = (0.0f64, 1.0f64);
+            for _ in 0..60 {
+                let mid = 0.5 * (lo + hi);
+                if v1(mid) >= v2(mid) {
+                    lo = mid;
+                } else {
+                    hi = mid;
+                }
+            }
+            let x = 0.5 * (lo + hi);
+            f.k[m1][n1] = (1.0 - x) * k0;
+            f.b[m1][n1] = (1.0 - x) * b0;
+            f.k[m2][n1] = x * k0;
+            f.b[m2][n1] = x * b0;
+        } else {
+            // Full move (paper line 9).
+            f.k[m2][n1] = k0;
+            f.b[m2][n1] = b0;
+            f.k[m1][n1] = 0.0;
+            f.b[m1][n1] = 0.0;
+        }
+        values = sum_values(s, &f);
+    }
+    debug_assert!(f.is_feasible());
+    f
+}
+
+/// Convenience: Algorithm 1/2 start → Algorithm 4, returning both.
+pub fn assign_from_values(
+    s: &Scenario,
+    vm: &ValueMatrix,
+    iterated: bool,
+    opts: &FracOptions,
+) -> (Dedicated, Fractional) {
+    let d = if iterated {
+        super::dedicated_iter::assign(vm, &Default::default())
+    } else {
+        super::dedicated_simple::assign(vm)
+    };
+    let f = assign(s, &d, opts);
+    (d, f)
+}
+
+fn argmax(xs: &[f64]) -> usize {
+    (0..xs.len())
+        .max_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap())
+        .unwrap()
+}
+
+fn argmin(xs: &[f64]) -> usize {
+    (0..xs.len())
+        .min_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap())
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assign::{dedicated_iter, ValueModel};
+    use crate::config::{CommModel, Scenario};
+
+    fn setup(seed: u64) -> (Scenario, Dedicated) {
+        let s = Scenario::small_scale(seed, 2.0, CommModel::Stochastic);
+        let vm = ValueMatrix::new(&s, ValueModel::Markov);
+        let d = dedicated_iter::assign(&vm, &Default::default());
+        (s, d)
+    }
+
+    #[test]
+    fn output_is_feasible() {
+        for seed in 0..8 {
+            let (s, d) = setup(seed);
+            let f = assign(&s, &d, &FracOptions::default());
+            assert!(f.is_feasible(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn min_value_never_decreases() {
+        // Fractionalization can only help the poorest master.
+        for seed in 0..8 {
+            let (s, d) = setup(seed);
+            let start = Fractional::from_dedicated(&d, s.n_masters());
+            let v_before = sum_values(&s, &start)
+                .into_iter()
+                .fold(f64::INFINITY, f64::min);
+            let f = assign(&s, &d, &FracOptions::default());
+            let v_after = sum_values(&s, &f)
+                .into_iter()
+                .fold(f64::INFINITY, f64::min);
+            assert!(
+                v_after >= v_before - 1e-12,
+                "seed {seed}: {v_after} < {v_before}"
+            );
+        }
+    }
+
+    #[test]
+    fn balances_master_values() {
+        // After Algorithm 4 the V_m spread should be small (that is its
+        // fixed point) unless it ran out of transferable workers.
+        let (s, d) = setup(3);
+        let f = assign(&s, &d, &FracOptions::default());
+        let vs = sum_values(&s, &f);
+        let (mn, mx) = (
+            vs.iter().fold(f64::INFINITY, |a, &b| a.min(b)),
+            vs.iter().fold(0.0f64, |a, &b| a.max(b)),
+        );
+        assert!(
+            (mx - mn) / mx < 0.05,
+            "V spread too large: {vs:?}"
+        );
+    }
+
+    #[test]
+    fn split_worker_serves_two_masters() {
+        // On the small scale a partial split is the common outcome.
+        let mut found_split = false;
+        for seed in 0..10 {
+            let (s, d) = setup(seed);
+            let f = assign(&s, &d, &FracOptions::default());
+            for w in 0..s.n_workers() {
+                let serving = (0..s.n_masters())
+                    .filter(|&m| f.k[m][w] > 1e-12)
+                    .count();
+                if serving > 1 {
+                    found_split = true;
+                    // shares on a split worker must sum to ≤ 1
+                    let ks: f64 = (0..s.n_masters()).map(|m| f.k[m][w]).sum();
+                    assert!(ks <= 1.0 + 1e-9);
+                }
+            }
+        }
+        assert!(found_split, "no worker was ever split across 10 seeds");
+    }
+
+    #[test]
+    fn comp_dominant_scenario_works() {
+        let s = Scenario::ec2(8, 2, false);
+        let vm = ValueMatrix::new(&s, ValueModel::Markov);
+        let d = dedicated_iter::assign(&vm, &Default::default());
+        let f = assign(&s, &d, &FracOptions::default());
+        assert!(f.is_feasible());
+        let vs = sum_values(&s, &f);
+        assert!(vs.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn single_master_is_noop() {
+        let s = Scenario::random(
+            "single",
+            1,
+            4,
+            1e3,
+            crate::config::AShift::Range(0.1, 0.4),
+            2.0,
+            CommModel::Stochastic,
+            9,
+        );
+        let d = Dedicated {
+            owner: vec![0, 0, 0, 0],
+        };
+        let f = assign(&s, &d, &FracOptions::default());
+        assert!(f.k[0].iter().all(|&k| k == 1.0));
+    }
+}

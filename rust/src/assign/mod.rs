@@ -1,0 +1,220 @@
+//! Worker assignment (§III-C, §IV-B): decide which workers serve which
+//! masters, and with what resource shares.
+//!
+//! The assignment currency is the **value matrix** `v_{m,n}` — the rate a
+//! node adds to `1/t_m*` (eq. 17): under the Markov allocation
+//! `v = 1/(4·L_m·θ_{m,n})`; under the computation-dominant exact
+//! allocation `v = u/(L_m·(1+u·φ))` (§III-C note). Both make P5/P7 a
+//! max-min allocation problem.
+//!
+//! * [`dedicated_iter`] — Algorithm 1 (iterated greedy: insertion,
+//!   interchange, exploration);
+//! * [`dedicated_simple`] — Algorithm 2 (largest-value-first greedy);
+//! * [`fractional`] — Algorithm 4 (resource balancing from a dedicated
+//!   start);
+//! * [`optimal`] — the small-scale "brute-force" baseline as a supported-
+//!   point λ-sweep + coordinate refinement (DESIGN.md §Substitutions);
+//! * [`uniform`] — §V benchmarks 1–2 (uncoded / coded with `N/M` workers
+//!   per master).
+
+pub mod dedicated_iter;
+pub mod dedicated_simple;
+pub mod fractional;
+pub mod optimal;
+pub mod uniform;
+
+use crate::alloc::{comp_dominant, markov};
+use crate::config::Scenario;
+
+/// Which allocator's node values drive the assignment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ValueModel {
+    /// Markov/Theorem-1 values `1/(4·L·θ)` — distribution-free.
+    Markov,
+    /// Theorem-2 values `u/(L·(1+u·φ))` — computation-dominant exact.
+    Exact,
+}
+
+/// Per-(master, node) assignment values. `v0[m]` is the master's local
+/// value (always owned by m); `v[m][w]` is worker `w`'s value for `m`
+/// (workers 0-indexed here; node id = w + 1).
+#[derive(Clone, Debug)]
+pub struct ValueMatrix {
+    pub v0: Vec<f64>,
+    pub v: Vec<Vec<f64>>,
+}
+
+impl ValueMatrix {
+    pub fn new(s: &Scenario, model: ValueModel) -> Self {
+        let m = s.n_masters();
+        let n = s.n_workers();
+        let value = |mm: usize, node: usize| -> f64 {
+            let p = s.link(mm, node);
+            let l = s.l_rows(mm);
+            match model {
+                ValueModel::Markov => markov::node_value(p.theta(), l),
+                ValueModel::Exact => comp_dominant::node_value(
+                    comp_dominant::CompParams { a: p.a, u: p.u },
+                    l,
+                ),
+            }
+        };
+        Self {
+            v0: (0..m).map(|mm| value(mm, 0)).collect(),
+            v: (0..m)
+                .map(|mm| (1..=n).map(|w| value(mm, w)).collect())
+                .collect(),
+        }
+    }
+
+    pub fn n_masters(&self) -> usize {
+        self.v0.len()
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.v.first().map_or(0, Vec::len)
+    }
+}
+
+/// A dedicated assignment: every worker serves at most one master.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Dedicated {
+    /// `owner[w]` = master served by worker `w` (always assigned by our
+    /// greedy algorithms — leaving a worker idle never helps).
+    pub owner: Vec<usize>,
+}
+
+impl Dedicated {
+    /// Workers serving master `m` (0-indexed worker ids).
+    pub fn workers_of(&self, m: usize) -> Vec<usize> {
+        (0..self.owner.len())
+            .filter(|&w| self.owner[w] == m)
+            .collect()
+    }
+
+    /// Sum values `V_m = v0[m] + Σ_{w∈Ω_m} v[m][w]` for all masters.
+    pub fn sum_values(&self, vm: &ValueMatrix) -> Vec<f64> {
+        let mut vs = vm.v0.clone();
+        for (w, &m) in self.owner.iter().enumerate() {
+            vs[m] += vm.v[m][w];
+        }
+        vs
+    }
+
+    /// The max-min objective: `min_m V_m`.
+    pub fn min_value(&self, vm: &ValueMatrix) -> f64 {
+        self.sum_values(vm)
+            .into_iter()
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// A fractional assignment: per-(master, worker) compute share `k` and
+/// bandwidth share `b`, with `Σ_m k[m][w] ≤ 1`, `Σ_m b[m][w] ≤ 1`.
+#[derive(Clone, Debug)]
+pub struct Fractional {
+    pub k: Vec<Vec<f64>>,
+    pub b: Vec<Vec<f64>>,
+}
+
+impl Fractional {
+    /// Lift a dedicated assignment (k = b = 1 on owned workers).
+    pub fn from_dedicated(d: &Dedicated, n_masters: usize) -> Self {
+        let n = d.owner.len();
+        let mut k = vec![vec![0.0; n]; n_masters];
+        let mut b = vec![vec![0.0; n]; n_masters];
+        for (w, &m) in d.owner.iter().enumerate() {
+            k[m][w] = 1.0;
+            b[m][w] = 1.0;
+        }
+        Self { k, b }
+    }
+
+    /// Check the per-worker resource constraints (6c).
+    pub fn is_feasible(&self) -> bool {
+        let n = self.k.first().map_or(0, Vec::len);
+        (0..n).all(|w| {
+            let ks: f64 = self.k.iter().map(|row| row[w]).sum();
+            let bs: f64 = self.b.iter().map(|row| row[w]).sum();
+            ks <= 1.0 + 1e-9
+                && bs <= 1.0 + 1e-9
+                && self
+                    .k
+                    .iter()
+                    .zip(&self.b)
+                    .all(|(kr, br)| (0.0..=1.0 + 1e-9).contains(&kr[w])
+                        && (0.0..=1.0 + 1e-9).contains(&br[w]))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CommModel, Scenario};
+
+    #[test]
+    fn value_matrix_shapes_and_positivity() {
+        let s = Scenario::small_scale(1, 2.0, CommModel::Stochastic);
+        let vm = ValueMatrix::new(&s, ValueModel::Markov);
+        assert_eq!(vm.n_masters(), 2);
+        assert_eq!(vm.n_workers(), 5);
+        assert!(vm.v0.iter().all(|&v| v > 0.0));
+        assert!(vm.v.iter().flatten().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn exact_values_exceed_markov_values() {
+        // Theorem 2 extracts more rate per node than the conservative
+        // Markov bound: v_exact > v_markov for the same node.
+        let s = Scenario::small_scale(2, 2.0, CommModel::CompDominant);
+        let mv = ValueMatrix::new(&s, ValueModel::Markov);
+        let ev = ValueMatrix::new(&s, ValueModel::Exact);
+        for m in 0..2 {
+            for w in 0..5 {
+                assert!(
+                    ev.v[m][w] > mv.v[m][w],
+                    "m={m} w={w}: {} ≤ {}",
+                    ev.v[m][w],
+                    mv.v[m][w]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dedicated_sum_values() {
+        let vm = ValueMatrix {
+            v0: vec![1.0, 2.0],
+            v: vec![vec![0.5, 0.3, 0.1], vec![0.2, 0.9, 0.4]],
+        };
+        let d = Dedicated {
+            owner: vec![0, 1, 0],
+        };
+        let vs = d.sum_values(&vm);
+        assert!((vs[0] - (1.0 + 0.5 + 0.1)).abs() < 1e-12);
+        assert!((vs[1] - (2.0 + 0.9)).abs() < 1e-12);
+        assert!((d.min_value(&vm) - 1.6).abs() < 1e-12);
+        assert_eq!(d.workers_of(0), vec![0, 2]);
+    }
+
+    #[test]
+    fn fractional_from_dedicated_feasible() {
+        let d = Dedicated {
+            owner: vec![0, 1, 1, 0],
+        };
+        let f = Fractional::from_dedicated(&d, 2);
+        assert!(f.is_feasible());
+        assert_eq!(f.k[0][0], 1.0);
+        assert_eq!(f.k[1][0], 0.0);
+    }
+
+    #[test]
+    fn fractional_feasibility_detects_violation() {
+        let f = Fractional {
+            k: vec![vec![0.7], vec![0.7]],
+            b: vec![vec![0.5], vec![0.4]],
+        };
+        assert!(!f.is_feasible());
+    }
+}

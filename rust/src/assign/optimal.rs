@@ -1,0 +1,226 @@
+//! "Brute-force" optimal fractional assignment baseline (§V-B benchmark 3,
+//! small scale only).
+//!
+//! The paper states it traverses all `k_{m,n}, b_{m,n}` at step 0.01 —
+//! literally 101^(2·M·N) points, infeasible even for M=2, N=5. What the
+//! search actually needs is the max-min optimum of P7, whose objective is
+//! separable per worker: `V_m = v₀_m + Σ_w v_m(k_{m,w}, b_{m,w})`. We
+//! recover the supported optima with a Pareto λ-sweep — for each weight λ
+//! each worker independently maximizes `λ·v₁ + (1−λ)·v₂` over the same
+//! 0.01 grid — followed by per-worker coordinate-descent refinement of
+//! `min(V₁, V₂)` on the grid (handles unsupported max-min points). See
+//! DESIGN.md §Substitutions.
+//!
+//! Restricted to M = 2 like the paper's use of it (Fig. 4a / 5a).
+
+use super::Fractional;
+use crate::alloc::markov::node_value;
+use crate::config::Scenario;
+use crate::model::params::theta_fractional;
+
+/// Search options.
+#[derive(Clone, Copy, Debug)]
+pub struct OptimalOptions {
+    /// Grid step for k and b (paper: 0.01).
+    pub step: f64,
+    /// Number of λ values swept over [0, 1].
+    pub lambda_steps: usize,
+    /// Coordinate-descent refinement passes.
+    pub refine_passes: usize,
+}
+
+impl Default for OptimalOptions {
+    fn default() -> Self {
+        Self {
+            step: 0.01,
+            lambda_steps: 201,
+            refine_passes: 3,
+        }
+    }
+}
+
+/// Exhaustive-grid max-min fractional assignment for M = 2.
+pub fn assign(s: &Scenario, opts: &OptimalOptions) -> Fractional {
+    assert_eq!(
+        s.n_masters(),
+        2,
+        "optimal search is defined for M = 2 (paper small scale)"
+    );
+    let n = s.n_workers();
+    let steps = (1.0 / opts.step).round() as usize; // grid 0..=steps
+
+    // v[m][w][(ik, ib)] would be huge; evaluate lazily instead.
+    let value = |m: usize, w: usize, k: f64, b: f64| -> f64 {
+        if k <= 0.0 || b <= 0.0 {
+            return 0.0;
+        }
+        node_value(
+            theta_fractional(&s.link(m, w + 1), k, b),
+            s.l_rows(m),
+        )
+    };
+    let v0: Vec<f64> = (0..2)
+        .map(|m| node_value(s.link(m, 0).theta(), s.l_rows(m)))
+        .collect();
+
+    // Assignment state: per worker the (k1, b1) grid indices; master 2
+    // receives the complement (never wasteful: values are monotone in
+    // shares).
+    let objective = |shares: &[(usize, usize)]| -> (f64, f64) {
+        let mut v1 = v0[0];
+        let mut v2 = v0[1];
+        for (w, &(ik, ib)) in shares.iter().enumerate() {
+            let (k1, b1) = (ik as f64 * opts.step, ib as f64 * opts.step);
+            v1 += value(0, w, k1, b1);
+            v2 += value(1, w, 1.0 - k1, 1.0 - b1);
+        }
+        (v1, v2)
+    };
+
+    // ---- λ-sweep over supported points --------------------------------
+    let mut best: Option<(f64, Vec<(usize, usize)>)> = None;
+    for li in 0..opts.lambda_steps {
+        let lambda = li as f64 / (opts.lambda_steps - 1) as f64;
+        let mut shares = Vec::with_capacity(n);
+        for w in 0..n {
+            let mut arg = (0usize, 0usize);
+            let mut bestv = f64::NEG_INFINITY;
+            for ik in 0..=steps {
+                let k1 = ik as f64 * opts.step;
+                for ib in 0..=steps {
+                    let b1 = ib as f64 * opts.step;
+                    let sc = lambda * value(0, w, k1, b1)
+                        + (1.0 - lambda) * value(1, w, 1.0 - k1, 1.0 - b1);
+                    if sc > bestv {
+                        bestv = sc;
+                        arg = (ik, ib);
+                    }
+                }
+            }
+            shares.push(arg);
+        }
+        let (v1, v2) = objective(&shares);
+        let mm = v1.min(v2);
+        if best.as_ref().map_or(true, |(b, _)| mm > *b) {
+            best = Some((mm, shares));
+        }
+    }
+    let (_, mut shares) = best.unwrap();
+
+    // ---- Coordinate-descent refinement ---------------------------------
+    for _ in 0..opts.refine_passes {
+        let mut improved = false;
+        for w in 0..n {
+            let (mut v1, mut v2) = objective(&shares);
+            let (ik0, ib0) = shares[w];
+            // Remove worker w's contribution.
+            let (k1, b1) = (ik0 as f64 * opts.step, ib0 as f64 * opts.step);
+            v1 -= value(0, w, k1, b1);
+            v2 -= value(1, w, 1.0 - k1, 1.0 - b1);
+            let mut best_mm = f64::NEG_INFINITY;
+            let mut arg = (ik0, ib0);
+            for ik in 0..=steps {
+                let k1 = ik as f64 * opts.step;
+                for ib in 0..=steps {
+                    let b1 = ib as f64 * opts.step;
+                    let mm = (v1 + value(0, w, k1, b1))
+                        .min(v2 + value(1, w, 1.0 - k1, 1.0 - b1));
+                    if mm > best_mm {
+                        best_mm = mm;
+                        arg = (ik, ib);
+                    }
+                }
+            }
+            if arg != (ik0, ib0) {
+                shares[w] = arg;
+                improved = true;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+
+    // Materialize.
+    let mut f = Fractional {
+        k: vec![vec![0.0; n]; 2],
+        b: vec![vec![0.0; n]; 2],
+    };
+    for (w, &(ik, ib)) in shares.iter().enumerate() {
+        let (k1, b1) = (ik as f64 * opts.step, ib as f64 * opts.step);
+        f.k[0][w] = k1;
+        f.b[0][w] = b1;
+        f.k[1][w] = 1.0 - k1;
+        f.b[1][w] = 1.0 - b1;
+    }
+    debug_assert!(f.is_feasible());
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assign::fractional::{self, FracOptions};
+    use crate::assign::{dedicated_iter, ValueMatrix, ValueModel};
+    use crate::config::{CommModel, Scenario};
+
+    fn coarse() -> OptimalOptions {
+        // Fast grid for tests; production default is 0.01.
+        OptimalOptions {
+            step: 0.05,
+            lambda_steps: 41,
+            refine_passes: 2,
+        }
+    }
+
+    fn min_value(s: &Scenario, f: &Fractional) -> f64 {
+        fractional::sum_values(s, f)
+            .into_iter()
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    #[test]
+    fn output_feasible() {
+        let s = Scenario::small_scale(1, 2.0, CommModel::Stochastic);
+        let f = assign(&s, &coarse());
+        assert!(f.is_feasible());
+    }
+
+    #[test]
+    fn beats_or_matches_algorithm4() {
+        // The grid optimum must dominate the greedy heuristic (up to grid
+        // resolution).
+        for seed in 0..4 {
+            let s = Scenario::small_scale(seed, 2.0, CommModel::Stochastic);
+            let vm = ValueMatrix::new(&s, ValueModel::Markov);
+            let d = dedicated_iter::assign(&vm, &Default::default());
+            let greedy = fractional::assign(&s, &d, &FracOptions::default());
+            let opt = assign(&s, &coarse());
+            let (g, o) = (min_value(&s, &greedy), min_value(&s, &opt));
+            // The greedy splits resources continuously; a 0.05 grid can
+            // concede a little resolution. Production runs use step 0.01.
+            assert!(
+                o >= g * 0.97,
+                "seed {seed}: optimal {o} < greedy {g}"
+            );
+        }
+    }
+
+    #[test]
+    fn no_resource_left_unused() {
+        // k1 + k2 = 1 on every worker by construction.
+        let s = Scenario::small_scale(2, 2.0, CommModel::Stochastic);
+        let f = assign(&s, &coarse());
+        for w in 0..s.n_workers() {
+            assert!((f.k[0][w] + f.k[1][w] - 1.0).abs() < 1e-9);
+            assert!((f.b[0][w] + f.b[1][w] - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "M = 2")]
+    fn rejects_more_masters() {
+        let s = Scenario::large_scale(1, 2.0, CommModel::Stochastic);
+        assign(&s, &coarse());
+    }
+}

@@ -1,0 +1,57 @@
+//! §V benchmarks 1–2: uniform worker assignment.
+//!
+//! Both benchmarks give every master an equal block of `N/M` workers
+//! (round-robin blocks, no value information):
+//!
+//! 1. **Uncoded**: `A_m` split equally over the `N/M` workers, no coding,
+//!    no local computation — completion needs ALL workers to finish.
+//! 2. **Coded**: the scheme of Reisizadeh et al. [5] — Theorem-2 load
+//!    allocation over {local} ∪ workers, using computation delay only
+//!    (this benchmark ignores the communication leg by design; that is
+//!    exactly the gap Figs. 4–6 expose).
+
+use super::Dedicated;
+
+/// Block-uniform dedicated assignment: worker `w` serves master
+/// `w·M/N`-ish so each master receives `⌊N/M⌋` or `⌈N/M⌉` workers.
+pub fn assign(n_masters: usize, n_workers: usize) -> Dedicated {
+    assert!(n_masters > 0);
+    let owner = (0..n_workers)
+        .map(|w| w * n_masters / n_workers.max(1))
+        .map(|m| m.min(n_masters - 1))
+        .collect();
+    Dedicated { owner }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_blocks_when_divisible() {
+        let d = assign(4, 52);
+        for m in 0..4 {
+            assert_eq!(d.workers_of(m).len(), 13, "master {m}");
+        }
+    }
+
+    #[test]
+    fn near_equal_when_not_divisible() {
+        let d = assign(3, 10);
+        let sizes: Vec<usize> = (0..3).map(|m| d.workers_of(m).len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 10);
+        assert!(sizes.iter().all(|&s| s == 3 || s == 4), "{sizes:?}");
+    }
+
+    #[test]
+    fn blocks_are_contiguous() {
+        let d = assign(2, 6);
+        assert_eq!(d.owner, vec![0, 0, 0, 1, 1, 1]);
+    }
+
+    #[test]
+    fn single_master() {
+        let d = assign(1, 5);
+        assert!(d.owner.iter().all(|&m| m == 0));
+    }
+}

@@ -1,0 +1,400 @@
+//! Command-line interface (hand-rolled — no `clap` offline).
+//!
+//! ```text
+//! coded-coop figure <fig2|fig3|fig4a|fig4b|fig5|fig6|fig7|fig8|all>
+//!            [--trials N] [--seed S] [--out DIR] [--fit-samples N]
+//! coded-coop plan   --scenario <small|large|ec2|FILE.json>
+//!            [--policy P] [--loads markov|exact|sca]
+//!            [--values markov|exact] [--gamma-ratio R] [--seed S]
+//! coded-coop e2e    [--masters M] [--workers N] [--rows L] [--cols S]
+//!            [--policy P] [--seed S] [--native] [--time-scale X]
+//! coded-coop version | help
+//! ```
+
+use crate::assign::ValueModel;
+use crate::config::{AShift, CommModel, Scenario};
+use crate::coordinator::{self, Backend, CoordinatorConfig};
+use crate::figures::{self, FigureOptions};
+use crate::plan::{self, LoadMethod, PlanSpec, Policy};
+use crate::runtime::RuntimeService;
+use crate::util::table::Table;
+
+/// Parsed flag map: `--key value` pairs + positional arguments.
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: Vec<(String, String)>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> anyhow::Result<Self> {
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut switches = Vec::new();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        flags.push((key.to_string(), it.next().unwrap()));
+                    }
+                    _ => switches.push(key.to_string()),
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Ok(Self {
+            positional,
+            flags,
+            switches,
+        })
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn switch(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+
+    pub fn usize_flag(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_flag(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn u64_flag(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+}
+
+const HELP: &str = "\
+coded-coop — Coded Computation across Shared Heterogeneous Workers (TSP'22)
+
+USAGE:
+  coded-coop figure <id|all> [--trials N] [--seed S] [--out DIR] [--fit-samples N]
+  coded-coop ablation <redundancy|multimsg|straggler|sca_step|all> [--trials N]
+  coded-coop plan --scenario <small|large|ec2|FILE.json> [--policy P]
+                  [--loads markov|exact|sca] [--values markov|exact]
+                  [--gamma-ratio R] [--seed S]
+  coded-coop e2e  [--masters M] [--workers N] [--rows L] [--cols S]
+                  [--policy P] [--seed S] [--native] [--time-scale X]
+  coded-coop version | help
+
+figures: fig2 fig3 fig4a fig4b fig5 fig6 fig7 fig8 (see DESIGN.md §4)
+policies: uncoded coded dedi-simple dedi-iter frac optimal
+";
+
+pub fn parse_policy(s: &str) -> anyhow::Result<Policy> {
+    Ok(match s {
+        "uncoded" => Policy::UncodedUniform,
+        "coded" => Policy::CodedUniform,
+        "dedi-simple" => Policy::DediSimple,
+        "dedi-iter" => Policy::DediIter,
+        "frac" => Policy::Frac,
+        "optimal" => Policy::FracOptimal,
+        other => anyhow::bail!("unknown policy '{other}'"),
+    })
+}
+
+pub fn parse_loads(s: &str) -> anyhow::Result<LoadMethod> {
+    Ok(match s {
+        "markov" => LoadMethod::Markov,
+        "exact" => LoadMethod::Exact,
+        "sca" => LoadMethod::Sca,
+        other => anyhow::bail!("unknown load method '{other}'"),
+    })
+}
+
+pub fn parse_values(s: &str) -> anyhow::Result<ValueModel> {
+    Ok(match s {
+        "markov" => ValueModel::Markov,
+        "exact" => ValueModel::Exact,
+        other => anyhow::bail!("unknown value model '{other}'"),
+    })
+}
+
+pub fn parse_scenario(a: &Args) -> anyhow::Result<Scenario> {
+    let seed = a.u64_flag("seed", 2022)?;
+    let ratio = a.f64_flag("gamma-ratio", 2.0)?;
+    let comm = if a.switch("comp-dominant") {
+        CommModel::CompDominant
+    } else {
+        CommModel::Stochastic
+    };
+    match a.flag("scenario").unwrap_or("small") {
+        "small" => Ok(Scenario::small_scale(seed, ratio, comm)),
+        "large" => Ok(Scenario::large_scale(seed, ratio, comm)),
+        "ec2" => Ok(Scenario::ec2(40, 10, a.switch("stragglers"))),
+        path => Scenario::from_file(path),
+    }
+}
+
+/// Entry point for the `coded-coop` binary.
+pub fn run() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    match args.positional.first().map(String::as_str) {
+        Some("figure") => cmd_figure(&args),
+        Some("ablation") => cmd_ablation(&args),
+        Some("plan") => cmd_plan(&args),
+        Some("e2e") => cmd_e2e(&args),
+        Some("version") => {
+            println!("coded-coop {}", crate::VERSION);
+            Ok(())
+        }
+        Some("help") | None => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some(other) => anyhow::bail!("unknown command '{other}'\n{HELP}"),
+    }
+}
+
+fn cmd_figure(args: &Args) -> anyhow::Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("all");
+    let opts = FigureOptions {
+        trials: args.usize_flag("trials", 100_000)?,
+        seed: args.u64_flag("seed", 2022)?,
+        fit_samples: args.usize_flag("fit-samples", 200_000)?,
+        threads: args.usize_flag("threads", 0)?,
+    };
+    let ids: Vec<&str> = if id == "all" {
+        figures::ALL_IDS.to_vec()
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        let t0 = std::time::Instant::now();
+        let fig = figures::run(id, &opts)?;
+        println!("{}", fig.render());
+        println!("[{} regenerated in {:.1}s]\n", id, t0.elapsed().as_secs_f64());
+        if let Some(dir) = args.flag("out") {
+            fig.save(dir)?;
+            println!("saved {dir}/{id}.json and {dir}/{id}.txt\n");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_ablation(args: &Args) -> anyhow::Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("all");
+    let opts = FigureOptions {
+        trials: args.usize_flag("trials", 30_000)?,
+        seed: args.u64_flag("seed", 2022)?,
+        fit_samples: args.usize_flag("fit-samples", 50_000)?,
+        threads: args.usize_flag("threads", 0)?,
+    };
+    let ids: Vec<&str> = if id == "all" {
+        figures::ablations::ALL_IDS.to_vec()
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        let fig = figures::ablations::run(id, &opts)?;
+        println!("{}", fig.render());
+        if let Some(dir) = args.flag("out") {
+            fig.save(dir)?;
+        }
+    }
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> anyhow::Result<()> {
+    let s = parse_scenario(args)?;
+    let spec = PlanSpec {
+        policy: parse_policy(args.flag("policy").unwrap_or("dedi-iter"))?,
+        values: parse_values(args.flag("values").unwrap_or("markov"))?,
+        loads: parse_loads(args.flag("loads").unwrap_or("markov"))?,
+    };
+    let p = plan::build(&s, &spec);
+    println!("scenario: {}", s.name);
+    println!("plan:     {}  (t* = {:.3} ms)\n", p.label, p.t_est());
+    for (m, mp) in p.masters.iter().enumerate() {
+        let mut t = Table::new(&["node", "load l", "k", "b"]);
+        for e in &mp.entries {
+            let node = if e.node == 0 {
+                "local".to_string()
+            } else {
+                format!("w{}", e.node)
+            };
+            t.row(&[
+                node,
+                format!("{:.1}", e.load),
+                format!("{:.3}", e.k),
+                format!("{:.3}", e.b),
+            ]);
+        }
+        println!(
+            "master {} (L = {}, t*_m = {:.3} ms, overhead {:.2}×):\n{}",
+            m + 1,
+            mp.l_rows,
+            mp.t_est,
+            mp.total_load() / mp.l_rows,
+            t.render()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
+    let m = args.usize_flag("masters", 2)?;
+    let n = args.usize_flag("workers", 6)?;
+    let rows = args.usize_flag("rows", 512)?;
+    let cols = args.usize_flag("cols", 512)?;
+    let seed = args.u64_flag("seed", 7)?;
+    let scenario = Scenario::random(
+        "e2e",
+        m,
+        n,
+        rows as f64,
+        AShift::Range(0.01, 0.05),
+        2.0,
+        CommModel::Stochastic,
+        seed,
+    );
+    let spec = PlanSpec {
+        policy: parse_policy(args.flag("policy").unwrap_or("dedi-iter"))?,
+        values: ValueModel::Markov,
+        loads: parse_loads(args.flag("loads").unwrap_or("markov"))?,
+    };
+
+    // PJRT by default; --native for environments without artifacts.
+    let service;
+    let backend = if args.switch("native") {
+        Backend::Native
+    } else {
+        service = RuntimeService::start(&crate::runtime::default_artifact_dir())?;
+        Backend::Pjrt(service.handle())
+    };
+
+    let cfg = CoordinatorConfig {
+        scenario,
+        spec,
+        cols,
+        time_scale: args.f64_flag("time-scale", 1e-4)?,
+        backend,
+        seed,
+        verify: true,
+    };
+    let report = coordinator::run(&cfg)?;
+    print_report(&report);
+    Ok(())
+}
+
+/// Shared report printer (also used by examples).
+pub fn print_report(report: &coordinator::Report) {
+    println!("plan: {}", report.label);
+    let mut t = Table::new(&[
+        "master",
+        "completion (ms)",
+        "planner t* (ms)",
+        "rows recv",
+        "rows cancelled",
+        "max rel err",
+        "encode wall (ms)",
+    ]);
+    for (m, mr) in report.masters.iter().enumerate() {
+        t.row(&[
+            format!("{}", m + 1),
+            format!("{:.3}", mr.completion_ms),
+            format!("{:.3}", mr.t_est_ms),
+            format!("{}", mr.rows_used),
+            format!("{}", mr.rows_cancelled),
+            mr.max_rel_err
+                .map(|e| format!("{e:.2e}"))
+                .unwrap_or_else(|| "-".into()),
+            format!("{:.2}", mr.encode_wall_ms),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "system completion: {:.3} ms (virtual) | wall: {:.1} ms | verified: {}",
+        report.system_completion_ms(),
+        report.wall_ms,
+        report.all_verified(1e-2),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parse_flags_and_switches() {
+        let a = args(&["figure", "fig4a", "--trials", "500", "--native", "--seed", "9"]);
+        assert_eq!(a.positional, vec!["figure", "fig4a"]);
+        assert_eq!(a.usize_flag("trials", 1).unwrap(), 500);
+        assert_eq!(a.u64_flag("seed", 1).unwrap(), 9);
+        assert!(a.switch("native"));
+        assert!(!a.switch("verbose"));
+    }
+
+    #[test]
+    fn last_flag_wins() {
+        let a = args(&["--seed", "1", "--seed", "2"]);
+        assert_eq!(a.u64_flag("seed", 0).unwrap(), 2);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = args(&["--trials", "lots"]);
+        assert!(a.usize_flag("trials", 1).is_err());
+    }
+
+    #[test]
+    fn policy_and_method_parsers() {
+        assert!(matches!(parse_policy("frac").unwrap(), Policy::Frac));
+        assert!(matches!(parse_loads("sca").unwrap(), LoadMethod::Sca));
+        assert!(matches!(
+            parse_values("exact").unwrap(),
+            ValueModel::Exact
+        ));
+        assert!(parse_policy("bogus").is_err());
+        assert!(parse_loads("bogus").is_err());
+    }
+
+    #[test]
+    fn scenario_parser_presets() {
+        let a = args(&["--scenario", "large", "--seed", "3"]);
+        let s = parse_scenario(&a).unwrap();
+        assert_eq!(s.n_workers(), 50);
+        let a = args(&["--scenario", "ec2"]);
+        assert_eq!(parse_scenario(&a).unwrap().n_masters(), 4);
+    }
+}

@@ -1,0 +1,344 @@
+//! Dense f64 linear algebra: row-major [`Matrix`], matmul, LU with partial
+//! pivoting, solve and inverse. Sized for the decoder's `L×L` systems and
+//! the tests' oracles — not a BLAS replacement.
+
+use std::fmt;
+
+/// Row-major dense matrix.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Matrix({}x{})", self.rows, self.cols)
+    }
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, Vec::len);
+        assert!(rows.iter().all(|row| row.len() == c), "ragged rows");
+        Self {
+            rows: r,
+            cols: c,
+            data: rows.concat(),
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Select a subset of rows (the decoder's `G_S`).
+    pub fn select_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (dst, &src) in idx.iter().enumerate() {
+            out.row_mut(dst).copy_from_slice(self.row(src));
+        }
+        out
+    }
+
+    /// Vertical stack.
+    pub fn vstack(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols);
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Matrix::from_vec(self.rows + other.rows, self.cols, data)
+    }
+
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(
+            self.cols, other.rows,
+            "matmul: {}x{} · {}x{}",
+            self.rows, self.cols, other.rows, other.cols
+        );
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        // ikj loop order: streams `other` rows, decent cache behavior.
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let aik = self[(i, k)];
+                if aik == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let out_row = out.row_mut(i);
+                for (o, &b) in out_row.iter_mut().zip(orow) {
+                    *o += aik * b;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|i| self.row(i).iter().zip(x).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    /// Max-abs element (for residual checks).
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |m, &x| m.max(x.abs()))
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// LU factorization with partial pivoting: `P·A = L·U`.
+pub struct Lu {
+    lu: Matrix,
+    /// Row permutation: `perm[i]` = original row in position i.
+    perm: Vec<usize>,
+    singular: bool,
+}
+
+impl Lu {
+    pub fn new(a: &Matrix) -> Self {
+        assert_eq!(a.rows, a.cols, "LU needs a square matrix");
+        let n = a.rows;
+        let mut lu = a.clone();
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut singular = false;
+
+        for col in 0..n {
+            // Pivot: largest |value| in this column at/below the diagonal.
+            let mut piv = col;
+            let mut best = lu[(col, col)].abs();
+            for r in col + 1..n {
+                let v = lu[(r, col)].abs();
+                if v > best {
+                    best = v;
+                    piv = r;
+                }
+            }
+            if best < 1e-12 {
+                singular = true;
+                continue;
+            }
+            if piv != col {
+                perm.swap(piv, col);
+                for j in 0..n {
+                    let tmp = lu[(col, j)];
+                    lu[(col, j)] = lu[(piv, j)];
+                    lu[(piv, j)] = tmp;
+                }
+            }
+            let d = lu[(col, col)];
+            // §Perf item 4: slice-based elimination — split the buffer at
+            // the pivot row so the inner update is a bounds-check-free
+            // zip over contiguous slices (vectorizable).
+            let (top, bottom) = lu.data.split_at_mut((col + 1) * n);
+            let pivot_tail = &top[col * n + col + 1..(col + 1) * n];
+            for r in 0..n - col - 1 {
+                let row = &mut bottom[r * n..(r + 1) * n];
+                let f = row[col] / d;
+                row[col] = f;
+                for (x, &p) in row[col + 1..].iter_mut().zip(pivot_tail) {
+                    *x -= f * p;
+                }
+            }
+        }
+        Self { lu, perm, singular }
+    }
+
+    pub fn is_singular(&self) -> bool {
+        self.singular
+    }
+
+    /// Solve `A x = b` for one right-hand side.
+    pub fn solve(&self, b: &[f64]) -> Option<Vec<f64>> {
+        if self.singular {
+            return None;
+        }
+        let n = self.lu.rows;
+        assert_eq!(b.len(), n);
+        // Apply permutation, forward substitution (L has unit diagonal).
+        let mut y: Vec<f64> = (0..n).map(|i| b[self.perm[i]]).collect();
+        for i in 0..n {
+            for j in 0..i {
+                y[i] -= self.lu[(i, j)] * y[j];
+            }
+        }
+        // Back substitution.
+        for i in (0..n).rev() {
+            for j in i + 1..n {
+                let yj = y[j];
+                y[i] -= self.lu[(i, j)] * yj;
+            }
+            y[i] /= self.lu[(i, i)];
+        }
+        Some(y)
+    }
+
+    /// Solve with a matrix right-hand side (column-wise).
+    pub fn solve_matrix(&self, b: &Matrix) -> Option<Matrix> {
+        let n = self.lu.rows;
+        assert_eq!(b.rows, n);
+        let mut out = Matrix::zeros(n, b.cols);
+        let mut col = vec![0.0; n];
+        for c in 0..b.cols {
+            for r in 0..n {
+                col[r] = b[(r, c)];
+            }
+            let x = self.solve(&col)?;
+            for r in 0..n {
+                out[(r, c)] = x[r];
+            }
+        }
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_matrix(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+        let data = (0..r * c).map(|_| rng.normal()).collect();
+        Matrix::from_vec(r, c, data)
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = random_matrix(&mut rng, 4, 4);
+        let i = Matrix::identity(4);
+        assert_eq!(a.matmul(&i).data(), a.data());
+        assert_eq!(i.matmul(&a).data(), a.data());
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Matrix::from_rows(&[vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::new(2);
+        let a = random_matrix(&mut rng, 5, 7);
+        let x: Vec<f64> = (0..7).map(|_| rng.normal()).collect();
+        let via_mm = a.matmul(&Matrix::from_vec(7, 1, x.clone()));
+        let via_mv = a.matvec(&x);
+        for i in 0..5 {
+            assert!((via_mm[(i, 0)] - via_mv[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn lu_solves_random_systems() {
+        let mut rng = Rng::new(3);
+        for n in [1, 2, 5, 20, 64] {
+            let a = random_matrix(&mut rng, n, n);
+            let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b = a.matvec(&x_true);
+            let x = Lu::new(&a).solve(&b).expect("nonsingular");
+            for i in 0..n {
+                assert!(
+                    (x[i] - x_true[i]).abs() < 1e-8 * (1.0 + x_true[i].abs()),
+                    "n={n} i={i}: {} vs {}",
+                    x[i],
+                    x_true[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lu_detects_singularity() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 4.0]]);
+        let lu = Lu::new(&a);
+        assert!(lu.is_singular());
+        assert!(lu.solve(&[1.0, 1.0]).is_none());
+    }
+
+    #[test]
+    fn lu_requires_pivoting_case() {
+        // Zero on the diagonal: fails without partial pivoting.
+        let a = Matrix::from_rows(&[vec![0.0, 1.0], vec![1.0, 0.0]]);
+        let x = Lu::new(&a).solve(&[3.0, 7.0]).unwrap();
+        assert!((x[0] - 7.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_matrix_multi_rhs() {
+        let mut rng = Rng::new(4);
+        let a = random_matrix(&mut rng, 6, 6);
+        let xs = random_matrix(&mut rng, 6, 3);
+        let b = a.matmul(&xs);
+        let got = Lu::new(&a).solve_matrix(&b).unwrap();
+        for i in 0..6 {
+            for j in 0..3 {
+                assert!((got[(i, j)] - xs[(i, j)]).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn select_rows_and_vstack() {
+        let a = Matrix::from_rows(&[vec![1.0], vec![2.0], vec![3.0]]);
+        let s = a.select_rows(&[2, 0]);
+        assert_eq!(s.data(), &[3.0, 1.0]);
+        let v = s.vstack(&a);
+        assert_eq!(v.rows(), 5);
+        assert_eq!(v.data(), &[3.0, 1.0, 1.0, 2.0, 3.0]);
+    }
+}

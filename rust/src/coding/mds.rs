@@ -1,0 +1,257 @@
+//! Real-valued systematic MDS code (§II): `Ã_m = G·A_m`, recover from any
+//! `L_m` coded inner products.
+//!
+//! Generator `G = [I; P]` with i.i.d. Gaussian parity `P/√L`: every `L×L`
+//! row sub-matrix is invertible with probability 1, giving the MDS
+//! property over ℝ (construction of [5]). The encode matmul itself runs
+//! through the AOT Pallas artifact in the coordinator ([`crate::runtime`]);
+//! this module owns generator construction, the decode solve, and a native
+//! encode used by tests and as runtime fallback for off-bucket shapes.
+
+use super::gauss::{Lu, Matrix};
+use crate::util::rng::Rng;
+
+/// A systematic (l_coded, l) MDS code over ℝ.
+#[derive(Clone, Debug)]
+pub struct MdsCode {
+    l: usize,
+    l_coded: usize,
+    g: Matrix,
+}
+
+impl MdsCode {
+    /// Build a systematic generator with Gaussian parity rows.
+    pub fn new(l: usize, l_coded: usize, rng: &mut Rng) -> Self {
+        assert!(l > 0, "data length must be positive");
+        assert!(
+            l_coded >= l,
+            "coded length {l_coded} must be ≥ data length {l}"
+        );
+        let scale = 1.0 / (l as f64).sqrt();
+        let mut g = Matrix::zeros(l_coded, l);
+        for i in 0..l {
+            g[(i, i)] = 1.0;
+        }
+        for i in l..l_coded {
+            for j in 0..l {
+                g[(i, j)] = rng.normal() * scale;
+            }
+        }
+        Self { l, l_coded, g }
+    }
+
+    pub fn data_len(&self) -> usize {
+        self.l
+    }
+
+    pub fn coded_len(&self) -> usize {
+        self.l_coded
+    }
+
+    /// Redundancy ratio `L̃/L`.
+    pub fn overhead(&self) -> f64 {
+        self.l_coded as f64 / self.l as f64
+    }
+
+    /// The full generator (shipped to the encode artifact as an input).
+    pub fn generator(&self) -> &Matrix {
+        &self.g
+    }
+
+    /// Rows `[from, to)` of the generator — the coded rows assigned to one
+    /// worker.
+    pub fn generator_slice(&self, from: usize, to: usize) -> Matrix {
+        assert!(from <= to && to <= self.l_coded);
+        self.g.select_rows(&(from..to).collect::<Vec<_>>())
+    }
+
+    /// Native encode: `Ã = G·A` (tests + off-bucket runtime fallback; the
+    /// hot path uses the Pallas `mds_encode` artifact).
+    pub fn encode(&self, a: &Matrix) -> Matrix {
+        assert_eq!(a.rows(), self.l, "data must have {} rows", self.l);
+        self.g.matmul(a)
+    }
+
+    /// Decode `z = A·x` from ≥ `L` received coded products.
+    ///
+    /// `received`: (coded-row index, value) pairs in arrival order. Uses
+    /// the first `L` of them (the paper's master stops at `L_m` results).
+    /// Returns `None` if fewer than `L` arrived or the sub-generator is
+    /// singular (probability-zero for Gaussian parity).
+    pub fn decode(&self, received: &[(usize, f64)]) -> Option<Vec<f64>> {
+        if received.len() < self.l {
+            return None;
+        }
+        let take = &received[..self.l];
+        let idx: Vec<usize> = take.iter().map(|&(i, _)| i).collect();
+        debug_assert!(idx.iter().all(|&i| i < self.l_coded));
+
+        // Fast path: if the first L arrivals are exactly the systematic
+        // rows, the values ARE the answer (common when no parity needed).
+        if idx.iter().enumerate().all(|(pos, &i)| i == pos) {
+            return Some(take.iter().map(|&(_, v)| v).collect());
+        }
+
+        let g_sub = self.g.select_rows(&idx);
+        let b: Vec<f64> = take.iter().map(|&(_, v)| v).collect();
+        Lu::new(&g_sub).solve(&b)
+    }
+
+    /// Multi-column decode for batched mat-vec (Remark 2): each received
+    /// entry carries `batch` values.
+    pub fn decode_batch(
+        &self,
+        received: &[(usize, Vec<f64>)],
+        batch: usize,
+    ) -> Option<Matrix> {
+        if received.len() < self.l {
+            return None;
+        }
+        let take = &received[..self.l];
+        let idx: Vec<usize> = take.iter().map(|&(i, _)| i).collect();
+        let g_sub = self.g.select_rows(&idx);
+        let mut rhs = Matrix::zeros(self.l, batch);
+        for (r, (_, vals)) in take.iter().enumerate() {
+            assert_eq!(vals.len(), batch);
+            rhs.row_mut(r).copy_from_slice(vals);
+        }
+        Lu::new(&g_sub).solve_matrix(&rhs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random_data(rng: &mut Rng, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_vec(
+            rows,
+            cols,
+            (0..rows * cols).map(|_| rng.normal()).collect(),
+        )
+    }
+
+    #[test]
+    fn generator_is_systematic() {
+        let mut rng = Rng::new(1);
+        let code = MdsCode::new(8, 12, &mut rng);
+        for i in 0..8 {
+            for j in 0..8 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert_eq!(code.generator()[(i, j)], want);
+            }
+        }
+        assert!((code.overhead() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn encode_then_systematic_decode() {
+        let mut rng = Rng::new(2);
+        let code = MdsCode::new(16, 24, &mut rng);
+        let a = random_data(&mut rng, 16, 4);
+        let x: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+        let coded = code.encode(&a);
+        let y = coded.matvec(&x); // all 24 coded products
+        let truth = a.matvec(&x);
+
+        // First 16 arrivals are systematic rows: fast path.
+        let rx: Vec<(usize, f64)> = (0..16).map(|i| (i, y[i])).collect();
+        let z = code.decode(&rx).unwrap();
+        for i in 0..16 {
+            assert!((z[i] - truth[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn decode_from_any_subset() {
+        let mut rng = Rng::new(3);
+        let code = MdsCode::new(12, 20, &mut rng);
+        let a = random_data(&mut rng, 12, 3);
+        let x: Vec<f64> = (0..3).map(|_| rng.normal()).collect();
+        let y = code.encode(&a).matvec(&x);
+        let truth = a.matvec(&x);
+
+        for trial in 0..20 {
+            let mut order: Vec<usize> = (0..20).collect();
+            let mut r = Rng::new(100 + trial);
+            r.shuffle(&mut order);
+            let rx: Vec<(usize, f64)> =
+                order[..12].iter().map(|&i| (i, y[i])).collect();
+            let z = code.decode(&rx).expect("any 12 rows decode");
+            for i in 0..12 {
+                assert!(
+                    (z[i] - truth[i]).abs() < 1e-6,
+                    "trial {trial} row {i}: {} vs {}",
+                    z[i],
+                    truth[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn decode_insufficient_returns_none() {
+        let mut rng = Rng::new(4);
+        let code = MdsCode::new(10, 15, &mut rng);
+        let rx: Vec<(usize, f64)> = (0..9).map(|i| (i, 1.0)).collect();
+        assert!(code.decode(&rx).is_none());
+    }
+
+    #[test]
+    fn decode_uses_first_l_arrivals() {
+        // Extra arrivals beyond L are ignored (cancellation semantics).
+        let mut rng = Rng::new(5);
+        let code = MdsCode::new(6, 10, &mut rng);
+        let a = random_data(&mut rng, 6, 1);
+        let x = vec![1.0];
+        let y = code.encode(&a).matvec(&x);
+        let mut rx: Vec<(usize, f64)> = (2..10).map(|i| (i, y[i])).collect();
+        rx.push((0, 999.0)); // late arrival with a corrupt value: ignored
+        let z = code.decode(&rx).unwrap();
+        let truth = a.matvec(&x);
+        for i in 0..6 {
+            assert!((z[i] - truth[i]).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn decode_batch_matches_columnwise() {
+        let mut rng = Rng::new(6);
+        let code = MdsCode::new(8, 13, &mut rng);
+        let a = random_data(&mut rng, 8, 2);
+        let xs = random_data(&mut rng, 2, 4); // batch of 4 vectors
+        let coded = code.encode(&a);
+        let y = coded.matmul(&xs); // 13 x 4
+        let truth = a.matmul(&xs);
+
+        let mut order: Vec<usize> = (0..13).collect();
+        rng.shuffle(&mut order);
+        let rx: Vec<(usize, Vec<f64>)> = order[..8]
+            .iter()
+            .map(|&i| (i, y.row(i).to_vec()))
+            .collect();
+        let z = code.decode_batch(&rx, 4).unwrap();
+        for i in 0..8 {
+            for j in 0..4 {
+                assert!((z[(i, j)] - truth[(i, j)]).abs() < 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn generator_slice_matches_rows() {
+        let mut rng = Rng::new(7);
+        let code = MdsCode::new(4, 8, &mut rng);
+        let s = code.generator_slice(2, 5);
+        assert_eq!(s.rows(), 3);
+        for r in 0..3 {
+            assert_eq!(s.row(r), code.generator().row(r + 2));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "must be ≥")]
+    fn rejects_undersized_code() {
+        MdsCode::new(10, 9, &mut Rng::new(0));
+    }
+}

@@ -1,0 +1,17 @@
+//! Coding substrate: real-valued systematic MDS code + dense linear
+//! algebra for the decoder.
+//!
+//! The paper encodes `A_m` row-wise with an MDS code over the reals and
+//! recovers `A_m x_m` from **any** `L_m` coded inner products. We use a
+//! systematic generator `G = [I; P]` with Gaussian parity `P` (any `L`
+//! rows are invertible w.p. 1 — the standard real-field MDS construction,
+//! same as [5]); decode is an `L×L` LU solve on the received-row
+//! sub-generator, implemented in [`gauss`] because jax lowers
+//! `linalg.solve` to a LAPACK custom-call that the text-HLO PJRT path
+//! cannot execute.
+
+pub mod gauss;
+pub mod mds;
+
+pub use gauss::Matrix;
+pub use mds::MdsCode;

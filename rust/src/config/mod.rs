@@ -1,0 +1,449 @@
+//! Scenario configuration: the §V simulation settings as first-class
+//! configs, plus a JSON config-file system for custom deployments.
+//!
+//! A [`Scenario`] is the static description of a deployment: `M` masters
+//! (each with a task size `L_m` and local-processing parameters) and `N`
+//! shared workers with per-(m, n) link parameters `(γ, a, u)`.
+//!
+//! Builders reproduce the paper's settings exactly:
+//! * [`Scenario::small_scale`] — M=2, N=5, `a_{m,n} ∈ {0.2, 0.25, 0.3}` ms,
+//!   `a_{m,0} ∈ {0.4, 0.5}` ms, `u = 1/a`, `L = 10⁴` (§V-A);
+//! * [`Scenario::large_scale`] — M=4, N=50, `a_{m,n} ∈ [0.05, 0.5]` ms;
+//! * [`Scenario::ec2`] — Fig. 8: 4 t2.micro masters, 40 t2.micro + 10
+//!   c5.large workers with the paper's fitted shifted-exponentials.
+
+use crate::model::params::LinkParams;
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// Communication-delay regime of a scenario.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommModel {
+    /// Communication delay modeled per eq. (1) with per-link γ.
+    Stochastic,
+    /// Computation-dominant (§III-B, Figs. 2, 3, 8): the comm leg is
+    /// ignored entirely.
+    CompDominant,
+}
+
+/// One master's static description.
+#[derive(Clone, Debug)]
+pub struct MasterCfg {
+    /// Task size `L_m`: rows of `A_m` that must be recovered.
+    pub l_rows: f64,
+    /// Local-processing parameters `(a_{m,0}, u_{m,0})`.
+    pub local: LinkParams,
+}
+
+/// A full deployment description.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: String,
+    pub comm: CommModel,
+    pub masters: Vec<MasterCfg>,
+    /// `links[m][n-1]` = parameters of link (master m, worker n), n ∈ 1..=N.
+    pub links: Vec<Vec<LinkParams>>,
+}
+
+impl Scenario {
+    /// Number of masters `M`.
+    pub fn n_masters(&self) -> usize {
+        self.masters.len()
+    }
+
+    /// Number of shared workers `N`.
+    pub fn n_workers(&self) -> usize {
+        self.links.first().map_or(0, |row| row.len())
+    }
+
+    /// Link parameters of (master `m`, node `n`); `n = 0` is local.
+    pub fn link(&self, m: usize, n: usize) -> LinkParams {
+        if n == 0 {
+            self.masters[m].local
+        } else {
+            let p = self.links[m][n - 1];
+            match self.comm {
+                CommModel::Stochastic => p,
+                // Computation-dominant: drop the comm leg (γ → ∞).
+                CommModel::CompDominant => LinkParams {
+                    gamma: f64::INFINITY,
+                    ..p
+                },
+            }
+        }
+    }
+
+    pub fn l_rows(&self, m: usize) -> f64 {
+        self.masters[m].l_rows
+    }
+
+    fn check(self) -> Self {
+        assert!(!self.masters.is_empty(), "scenario needs ≥1 master");
+        assert_eq!(
+            self.links.len(),
+            self.masters.len(),
+            "links must have one row per master"
+        );
+        let n = self.n_workers();
+        assert!(
+            self.links.iter().all(|row| row.len() == n),
+            "ragged link matrix"
+        );
+        self
+    }
+
+    // ------------------------------------------------------------------
+    // Paper scenarios
+    // ------------------------------------------------------------------
+
+    /// §V small-scale: M=2, N=5. `gamma_ratio` is γ/u (2.0 in Fig. 4;
+    /// swept in Fig. 6; irrelevant when `comm` is `CompDominant`).
+    pub fn small_scale(seed: u64, gamma_ratio: f64, comm: CommModel) -> Self {
+        Self::random(
+            "small-scale (M=2, N=5)",
+            2,
+            5,
+            1e4,
+            AShift::Choice(&[0.2, 0.25, 0.3]),
+            gamma_ratio,
+            comm,
+            seed,
+        )
+    }
+
+    /// §V large-scale: M=4, N=50.
+    pub fn large_scale(seed: u64, gamma_ratio: f64, comm: CommModel) -> Self {
+        Self::random(
+            "large-scale (M=4, N=50)",
+            4,
+            50,
+            1e4,
+            AShift::Range(0.05, 0.5),
+            gamma_ratio,
+            comm,
+            seed,
+        )
+    }
+
+    /// Fully parameterized random scenario following the paper's recipe:
+    /// worker shifts from `a_dist`, master shifts from {0.4, 0.5} ms,
+    /// `u = 1/a`, `γ = gamma_ratio·u`.
+    pub fn random(
+        name: &str,
+        m: usize,
+        n: usize,
+        l_rows: f64,
+        a_dist: AShift,
+        gamma_ratio: f64,
+        comm: CommModel,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Rng::new(seed);
+        let masters = (0..m)
+            .map(|_| {
+                let a0 = *rng.choose(&[0.4, 0.5]);
+                MasterCfg {
+                    l_rows,
+                    local: LinkParams::local(a0, 1.0 / a0),
+                }
+            })
+            .collect();
+        let links = (0..m)
+            .map(|_| {
+                (0..n)
+                    .map(|_| {
+                        let a = a_dist.sample(&mut rng);
+                        let u = 1.0 / a;
+                        LinkParams::new(gamma_ratio * u, a, u)
+                    })
+                    .collect()
+            })
+            .collect();
+        Scenario {
+            name: name.to_string(),
+            comm,
+            masters,
+            links,
+        }
+        .check()
+    }
+
+    /// Fig. 8: EC2-fitted computation-dominant scenario. 4 masters
+    /// (t2.micro local), `n_t2` t2.micro + `n_c5` c5.large workers.
+    /// Parameters are per coded row (ms): t2.micro a=1.36, u=4.976;
+    /// c5.large a=0.97, u=19.29 (paper §V-C).
+    ///
+    /// `stragglers` enables the heavy-tail mixture that stands in for the
+    /// paper's *measured* traces (t2.micro is burstable: CPU-credit
+    /// throttling produces multi-× slowdowns that the fitted shifted
+    /// exponential cannot reproduce — DESIGN.md §Substitutions). The
+    /// planner always plans with the fitted parameters, like the paper.
+    pub fn ec2(n_t2: usize, n_c5: usize, stragglers: bool) -> Self {
+        use crate::traces::ec2::{C5_LARGE, T2_MICRO, T2_MICRO_THROTTLE};
+        let m = 4;
+        let t2_link = || {
+            // γ is irrelevant under CompDominant; keep a finite
+            // placeholder so the config serializes cleanly.
+            let p = LinkParams::new(1e9, T2_MICRO.a, T2_MICRO.u);
+            if stragglers {
+                p.with_straggler(T2_MICRO_THROTTLE.0, T2_MICRO_THROTTLE.1)
+            } else {
+                p
+            }
+        };
+        let masters = (0..m)
+            .map(|_| MasterCfg {
+                l_rows: 1e4,
+                local: LinkParams::local(T2_MICRO.a, T2_MICRO.u),
+            })
+            .collect();
+        let links = (0..m)
+            .map(|_| {
+                (0..n_t2 + n_c5)
+                    .map(|i| {
+                        if i < n_t2 {
+                            t2_link()
+                        } else {
+                            LinkParams::new(1e9, C5_LARGE.a, C5_LARGE.u)
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        Scenario {
+            name: format!("ec2 (4 masters, {n_t2} t2.micro + {n_c5} c5.large)"),
+            comm: CommModel::CompDominant,
+            masters,
+            links,
+        }
+        .check()
+    }
+
+    // ------------------------------------------------------------------
+    // JSON config system
+    // ------------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", Json::Str(self.name.clone()));
+        j.set(
+            "comm",
+            Json::Str(
+                match self.comm {
+                    CommModel::Stochastic => "stochastic",
+                    CommModel::CompDominant => "comp_dominant",
+                }
+                .into(),
+            ),
+        );
+        j.set(
+            "masters",
+            Json::Arr(
+                self.masters
+                    .iter()
+                    .map(|mc| {
+                        let mut o = Json::obj();
+                        o.set("l_rows", Json::Num(mc.l_rows));
+                        o.set("a0", Json::Num(mc.local.a));
+                        o.set("u0", Json::Num(mc.local.u));
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+        j.set(
+            "links",
+            Json::Arr(
+                self.links
+                    .iter()
+                    .map(|row| {
+                        Json::Arr(
+                            row.iter()
+                                .map(|p| {
+                                    let mut o = Json::obj();
+                                    o.set("gamma", Json::Num(p.gamma));
+                                    o.set("a", Json::Num(p.a));
+                                    o.set("u", Json::Num(p.u));
+                                    o
+                                })
+                                .collect(),
+                        )
+                    })
+                    .collect(),
+            ),
+        );
+        j
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let get = |j: &Json, k: &str| -> anyhow::Result<f64> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("missing/invalid field '{k}'"))
+        };
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or("custom")
+            .to_string();
+        let comm = match j.get("comm").and_then(Json::as_str) {
+            Some("comp_dominant") => CommModel::CompDominant,
+            _ => CommModel::Stochastic,
+        };
+        let masters = j
+            .get("masters")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("missing 'masters'"))?
+            .iter()
+            .map(|mj| {
+                Ok(MasterCfg {
+                    l_rows: get(mj, "l_rows")?,
+                    local: LinkParams::local(get(mj, "a0")?, get(mj, "u0")?),
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let links = j
+            .get("links")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("missing 'links'"))?
+            .iter()
+            .map(|row| {
+                row.as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("'links' rows must be arrays"))?
+                    .iter()
+                    .map(|pj| {
+                        Ok(LinkParams::new(
+                            get(pj, "gamma")?,
+                            get(pj, "a")?,
+                            get(pj, "u")?,
+                        ))
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Scenario {
+            name,
+            comm,
+            masters,
+            links,
+        }
+        .check())
+    }
+
+    pub fn from_file(path: &str) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let j = json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        Self::from_json(&j)
+    }
+}
+
+/// Distribution of worker computation shifts in randomized scenarios.
+#[derive(Clone, Copy, Debug)]
+pub enum AShift {
+    /// Uniform choice from a finite set (small-scale: {0.2, 0.25, 0.3}).
+    Choice(&'static [f64]),
+    /// Uniform over a range (large-scale: [0.05, 0.5]).
+    Range(f64, f64),
+}
+
+impl AShift {
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        match self {
+            AShift::Choice(xs) => *rng.choose(xs),
+            AShift::Range(lo, hi) => rng.range(*lo, *hi),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_scale_matches_paper_recipe() {
+        let s = Scenario::small_scale(1, 2.0, CommModel::Stochastic);
+        assert_eq!(s.n_masters(), 2);
+        assert_eq!(s.n_workers(), 5);
+        for m in 0..2 {
+            assert_eq!(s.l_rows(m), 1e4);
+            let a0 = s.link(m, 0).a;
+            assert!(a0 == 0.4 || a0 == 0.5);
+            assert!((s.link(m, 0).u - 1.0 / a0).abs() < 1e-12);
+            for n in 1..=5 {
+                let p = s.link(m, n);
+                assert!([0.2, 0.25, 0.3].contains(&p.a));
+                assert!((p.u - 1.0 / p.a).abs() < 1e-12);
+                assert!((p.gamma - 2.0 * p.u).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn large_scale_shapes() {
+        let s = Scenario::large_scale(7, 2.0, CommModel::Stochastic);
+        assert_eq!(s.n_masters(), 4);
+        assert_eq!(s.n_workers(), 50);
+        for m in 0..4 {
+            for n in 1..=50 {
+                let p = s.link(m, n);
+                assert!((0.05..=0.5).contains(&p.a));
+            }
+        }
+    }
+
+    #[test]
+    fn comp_dominant_drops_comm_leg() {
+        let s = Scenario::small_scale(1, 2.0, CommModel::CompDominant);
+        for n in 1..=5 {
+            assert!(s.link(0, n).is_local(), "γ must be ∞ in comp-dominant");
+        }
+    }
+
+    #[test]
+    fn ec2_scenario_profiles() {
+        let s = Scenario::ec2(40, 10, false);
+        assert_eq!(s.n_masters(), 4);
+        assert_eq!(s.n_workers(), 50);
+        assert!((s.link(0, 1).a - 1.36).abs() < 1e-9); // t2.micro
+        assert!((s.link(0, 50).a - 0.97).abs() < 1e-9); // c5.large
+        assert!((s.link(0, 50).u - 19.29).abs() < 1e-9);
+        assert_eq!(s.comm, CommModel::CompDominant);
+    }
+
+    #[test]
+    fn seeded_scenarios_are_deterministic() {
+        let a = Scenario::small_scale(5, 2.0, CommModel::Stochastic);
+        let b = Scenario::small_scale(5, 2.0, CommModel::Stochastic);
+        for m in 0..2 {
+            for n in 0..=5 {
+                assert_eq!(a.link(m, n), b.link(m, n));
+            }
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = Scenario::small_scale(3, 2.0, CommModel::Stochastic);
+        let j = s.to_json();
+        let back = Scenario::from_json(&j).unwrap();
+        assert_eq!(back.n_masters(), s.n_masters());
+        assert_eq!(back.n_workers(), s.n_workers());
+        for m in 0..s.n_masters() {
+            assert_eq!(back.l_rows(m), s.l_rows(m));
+            for n in 0..=s.n_workers() {
+                let (a, b) = (s.link(m, n), back.link(m, n));
+                assert!((a.a - b.a).abs() < 1e-12);
+                assert!((a.u - b.u).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_garbage() {
+        assert!(Scenario::from_json(&Json::obj()).is_err());
+        let j = crate::util::json::parse(r#"{"masters": [], "links": []}"#).unwrap();
+        // empty masters must be rejected by check()
+        assert!(std::panic::catch_unwind(|| Scenario::from_json(&j)).is_err()
+            || Scenario::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,283 @@
+//! Ablation studies for the design choices DESIGN.md calls out, plus the
+//! paper's named future-work extension. Driven by
+//! `coded-coop ablation <id>`.
+//!
+//! | id | question |
+//! |---|---|
+//! | `redundancy` | how much coding overhead does the delay/robustness trade-off actually need? (Thm 1 fixes 2×, Thm 2 ~1.2–1.5×) |
+//! | `multimsg` | the §VI future-work extension: chunked worker returns vs per-message overhead ([20]'s trade-off) |
+//! | `straggler` | sensitivity of the Fig. 8 headline to the burst-throttling mixture (prob × slowdown grid) |
+//! | `sca_step` | SCA step rule: paper's diminishing γ vs DCA full step (quality + iterations) |
+
+use super::common::{Figure, FigureOptions};
+use crate::alloc::{markov, sca, EffLink};
+use crate::assign::ValueModel;
+use crate::config::{CommModel, Scenario};
+use crate::plan::{self, LoadMethod, PlanSpec, Policy};
+use crate::sim::{self, multimsg, McOptions};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+
+pub const ALL_IDS: &[&str] = &["redundancy", "multimsg", "straggler", "sca_step"];
+
+pub fn run(id: &str, opts: &FigureOptions) -> anyhow::Result<Figure> {
+    match id {
+        "redundancy" => Ok(redundancy(opts)),
+        "multimsg" => Ok(multimsg_ablation(opts)),
+        "straggler" => Ok(straggler(opts)),
+        "sca_step" => Ok(sca_step(opts)),
+        other => anyhow::bail!("unknown ablation '{other}' (expected {ALL_IDS:?})"),
+    }
+}
+
+fn base_plan(s: &Scenario) -> plan::Plan {
+    plan::build(
+        s,
+        &PlanSpec {
+            policy: Policy::DediIter,
+            values: ValueModel::Markov,
+            loads: LoadMethod::Markov,
+        },
+    )
+}
+
+/// Scale every load of a plan by `beta / current-overhead` so the coding
+/// overhead becomes exactly `beta`.
+fn with_overhead(p: &plan::Plan, beta: f64) -> plan::Plan {
+    let mut out = p.clone();
+    for mp in &mut out.masters {
+        let cur = mp.total_load() / mp.l_rows;
+        let f = beta / cur;
+        for e in &mut mp.entries {
+            e.load *= f;
+        }
+    }
+    out
+}
+
+fn redundancy(opts: &FigureOptions) -> Figure {
+    let mut fig = Figure::new(
+        "ablation_redundancy",
+        "coding overhead β vs mean delay and ρ=0.95 tail (large scale)",
+    );
+    let s = Scenario::large_scale(opts.seed, 2.0, CommModel::Stochastic);
+    let p = base_plan(&s);
+    let mut t = Table::new(&["overhead β", "mean delay (ms)", "ρ=0.95 (ms)"]);
+    let mut arr = Vec::new();
+    for beta in [1.05, 1.1, 1.25, 1.5, 2.0, 3.0] {
+        let pb = with_overhead(&p, beta);
+        let r = sim::run(
+            &s,
+            &pb,
+            &McOptions {
+                trials: opts.trials,
+                seed: opts.seed,
+                keep_samples: true,
+                threads: opts.threads,
+            },
+        );
+        let rho = r.system_ecdf().unwrap().inverse(0.95);
+        t.row_fmt(&format!("{beta:.2}"), &[r.system.mean(), rho], 3);
+        let mut j = Json::obj();
+        j.set("beta", Json::Num(beta));
+        j.set("mean_ms", Json::Num(r.system.mean()));
+        j.set("rho95_ms", Json::Num(rho));
+        arr.push(j);
+    }
+    fig.add_table(
+        "β sweep (loads rescaled from the Theorem-1 plan; β=2 is Thm 1's own overhead)",
+        t,
+    );
+    fig.json.set("series", Json::Arr(arr));
+    fig
+}
+
+fn multimsg_ablation(opts: &FigureOptions) -> Figure {
+    let mut fig = Figure::new(
+        "ablation_multimsg",
+        "multi-message returns: chunks × per-message overhead (§VI future work)",
+    );
+    let s = Scenario::small_scale(opts.seed, 2.0, CommModel::Stochastic);
+    let p = base_plan(&s);
+    let overheads = [0.0, 10.0, 50.0, 200.0];
+    let chunk_counts = [1usize, 2, 4, 8, 16];
+    let mut header = vec!["chunks".to_string()];
+    header.extend(overheads.iter().map(|o| format!("ovh={o} ms")));
+    let hdr: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut t = Table::new(&hdr);
+    let mut arr = Vec::new();
+    for &c in &chunk_counts {
+        let mut row = Vec::new();
+        for &o in &overheads {
+            let r = multimsg::run(
+                &s,
+                &p,
+                &multimsg::MultiMsgOptions {
+                    chunks: c,
+                    overhead_ms: o,
+                    trials: opts.trials.min(30_000),
+                    seed: opts.seed,
+                },
+            );
+            row.push(r.mean());
+        }
+        let mut j = Json::obj();
+        j.set("chunks", Json::Num(c as f64));
+        j.set("mean_ms", Json::from_f64_slice(&row));
+        arr.push(j);
+        t.row_fmt(&format!("{c}"), &row, 1);
+    }
+    fig.add_table("mean system delay (ms), small scale, Dedi-iter plan", t);
+    fig.json.set("series", Json::Arr(arr));
+    fig
+}
+
+fn straggler(opts: &FigureOptions) -> Figure {
+    let mut fig = Figure::new(
+        "ablation_straggler",
+        "Fig. 8 headline sensitivity to the t2 burst-throttling mixture",
+    );
+    let mut t = Table::new(&[
+        "prob × slowdown",
+        "Uncoded (ms)",
+        "Dedi, iter (ms)",
+        "reduction",
+    ]);
+    let mut arr = Vec::new();
+    for (prob, slow) in [(0.0, 1.0), (0.01, 10.0), (0.02, 10.0), (0.02, 20.0), (0.05, 20.0), (0.1, 8.0)] {
+        let mut s = Scenario::ec2(40, 10, false);
+        if prob > 0.0 {
+            for row in &mut s.links {
+                for p in row.iter_mut() {
+                    // t2.micro workers only (the first 40).
+                    if (p.a - crate::traces::ec2::T2_MICRO.a).abs() < 1e-9 {
+                        *p = p.with_straggler(prob, slow);
+                    }
+                }
+            }
+        }
+        let mc = McOptions {
+            trials: opts.trials.min(20_000),
+            seed: opts.seed,
+            keep_samples: false,
+            threads: opts.threads,
+        };
+        let spec = |policy| PlanSpec {
+            policy,
+            values: ValueModel::Exact,
+            loads: LoadMethod::Exact,
+        };
+        let unc = sim::run(&s, &plan::build(&s, &spec(Policy::UncodedUniform)), &mc);
+        let ded = sim::run(&s, &plan::build(&s, &spec(Policy::DediIter)), &mc);
+        let red = 100.0 * (1.0 - ded.system.mean() / unc.system.mean());
+        t.row_fmt(
+            &format!("{prob:.2} × {slow:.0}"),
+            &[unc.system.mean(), ded.system.mean(), red],
+            1,
+        );
+        let mut j = Json::obj();
+        j.set("prob", Json::Num(prob));
+        j.set("slowdown", Json::Num(slow));
+        j.set("reduction_pct", Json::Num(red));
+        arr.push(j);
+    }
+    fig.add_table(
+        "paper headline 82%; production mixture (0.02 × 20) marked in EXPERIMENTS.md",
+        t,
+    );
+    fig.json.set("series", Json::Arr(arr));
+    fig
+}
+
+fn sca_step(opts: &FigureOptions) -> Figure {
+    let mut fig = Figure::new(
+        "ablation_sca_step",
+        "SCA outer step: paper's diminishing γ (α=0.995) vs DCA full step",
+    );
+    let mut rng = Rng::new(opts.seed);
+    let mut t = Table::new(&["N", "t* DCA (ms)", "t* diminishing (ms)", "rel gap"]);
+    let mut arr = Vec::new();
+    for n in [4usize, 8, 16, 50] {
+        let links: Vec<EffLink> = (0..n)
+            .map(|_| {
+                let a = rng.range(0.05, 0.5);
+                let u = 1.0 / a;
+                EffLink::dedicated(&crate::model::params::LinkParams::new(2.0 * u, a, u))
+            })
+            .collect();
+        let l_rows = 1e4;
+        let thetas: Vec<f64> = links.iter().map(EffLink::theta).collect();
+        let start = markov::allocate(&thetas, l_rows);
+        let dca = sca::enhance(&links, l_rows, &start, &Default::default());
+        let dim = sca::enhance(
+            &links,
+            l_rows,
+            &start,
+            &sca::ScaOptions {
+                step_rule: sca::StepRule::Diminishing,
+                ..Default::default()
+            },
+        );
+        let gap = (dca.t_star - dim.t_star).abs() / dim.t_star;
+        t.row_fmt(
+            &format!("{n}"),
+            &[dca.t_star, dim.t_star, gap],
+            6,
+        );
+        let mut j = Json::obj();
+        j.set("n", Json::Num(n as f64));
+        j.set("gap", Json::Num(gap));
+        arr.push(j);
+    }
+    fig.add_table("same stationary point (see §Perf for the 20× speed gap)", t);
+    fig.json.set("series", Json::Arr(arr));
+    fig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast() -> FigureOptions {
+        FigureOptions {
+            trials: 1_500,
+            seed: 13,
+            fit_samples: 1_000,
+            threads: 0,
+        }
+    }
+
+    #[test]
+    fn all_ablations_smoke() {
+        for id in ALL_IDS {
+            let fig = run(id, &fast()).unwrap();
+            assert!(!fig.tables.is_empty(), "{id}");
+        }
+        assert!(run("nope", &fast()).is_err());
+    }
+
+    #[test]
+    fn redundancy_tradeoff_shape() {
+        // Too little redundancy hurts the tail; huge redundancy hurts the
+        // mean (each node carries more rows). Mean at β=3 must exceed the
+        // best mean in the sweep.
+        let fig = redundancy(&fast());
+        let series = fig.json.get("series").unwrap().as_arr().unwrap();
+        let means: Vec<f64> = series
+            .iter()
+            .map(|j| j.get("mean_ms").unwrap().as_f64().unwrap())
+            .collect();
+        let best = means.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(means.last().unwrap() > &(best * 1.05), "{means:?}");
+    }
+
+    #[test]
+    fn sca_step_rules_agree_across_sizes() {
+        let fig = sca_step(&fast());
+        for j in fig.json.get("series").unwrap().as_arr().unwrap() {
+            let gap = j.get("gap").unwrap().as_f64().unwrap();
+            assert!(gap < 1e-2, "gap {gap}");
+        }
+    }
+}

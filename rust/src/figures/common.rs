@@ -1,0 +1,189 @@
+//! Shared figure types + helpers.
+
+use crate::assign::ValueModel;
+use crate::config::Scenario;
+use crate::plan::{self, LoadMethod, Plan, PlanSpec, Policy};
+use crate::sim::{self, McOptions, McResults};
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// Harness options shared by all figures.
+#[derive(Clone, Copy, Debug)]
+pub struct FigureOptions {
+    /// Monte-Carlo trials per evaluated plan (paper: 10⁶; default 10⁵ —
+    /// the reported shapes are stable from ~10⁴).
+    pub trials: usize,
+    pub seed: u64,
+    /// Samples per trace in Fig. 7 (paper: 10⁶).
+    pub fit_samples: usize,
+    /// Threads for the MC engine (0 = all cores).
+    pub threads: usize,
+}
+
+impl Default for FigureOptions {
+    fn default() -> Self {
+        Self {
+            trials: 100_000,
+            seed: 2022,
+            fit_samples: 200_000,
+            threads: 0,
+        }
+    }
+}
+
+impl FigureOptions {
+    pub fn mc(&self, keep_samples: bool) -> McOptions {
+        McOptions {
+            trials: self.trials,
+            seed: self.seed ^ 0x5EED,
+            keep_samples,
+            threads: self.threads,
+        }
+    }
+}
+
+/// A regenerated figure: captioned tables + JSON export.
+#[derive(Clone, Debug)]
+pub struct Figure {
+    pub id: String,
+    pub title: String,
+    pub tables: Vec<(String, Table)>,
+    pub json: Json,
+}
+
+impl Figure {
+    pub fn new(id: &str, title: &str) -> Self {
+        let mut json = Json::obj();
+        json.set("id", Json::Str(id.into()));
+        json.set("title", Json::Str(title.into()));
+        Self {
+            id: id.into(),
+            title: title.into(),
+            tables: Vec::new(),
+            json,
+        }
+    }
+
+    pub fn add_table(&mut self, caption: &str, table: Table) {
+        self.tables.push((caption.to_string(), table));
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!("== {} — {} ==\n", self.id, self.title);
+        for (caption, t) in &self.tables {
+            out.push_str(&format!("\n-- {caption} --\n"));
+            out.push_str(&t.render());
+        }
+        out
+    }
+
+    /// Write `<id>.json` and `<id>.txt` into `dir`.
+    pub fn save(&self, dir: &str) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(
+            format!("{dir}/{}.json", self.id),
+            self.json.to_string_pretty(),
+        )?;
+        std::fs::write(format!("{dir}/{}.txt", self.id), self.render())?;
+        Ok(())
+    }
+}
+
+/// One evaluated algorithm: label + plan + Monte-Carlo results.
+pub struct Evaluated {
+    pub label: String,
+    pub plan: Plan,
+    pub results: McResults,
+}
+
+/// Build + evaluate one plan spec.
+pub fn evaluate(
+    s: &Scenario,
+    spec: &PlanSpec,
+    opts: &FigureOptions,
+    keep_samples: bool,
+) -> Evaluated {
+    let plan = plan::build(s, spec);
+    let results = sim::run(s, &plan, &opts.mc(keep_samples));
+    Evaluated {
+        label: plan.label.clone(),
+        plan,
+        results,
+    }
+}
+
+/// The §V-B algorithm roster (Fig. 4/5/6/8 legends). `small_scale` adds
+/// the λ-sweep optimum (M = 2 only). `values`/`loads` configure the
+/// proposed algorithms (Markov for the general case, Exact for
+/// computation-dominant scenarios like Fig. 8).
+pub fn roster(
+    small_scale: bool,
+    values: ValueModel,
+    loads: LoadMethod,
+) -> Vec<PlanSpec> {
+    let mut specs = vec![
+        PlanSpec {
+            policy: Policy::UncodedUniform,
+            values,
+            loads,
+        },
+        PlanSpec {
+            policy: Policy::CodedUniform,
+            values,
+            loads,
+        },
+        PlanSpec {
+            policy: Policy::DediSimple,
+            values,
+            loads,
+        },
+        PlanSpec {
+            policy: Policy::DediIter,
+            values,
+            loads,
+        },
+        PlanSpec {
+            policy: Policy::DediIter,
+            values,
+            loads: LoadMethod::Sca,
+        },
+        PlanSpec {
+            policy: Policy::Frac,
+            values,
+            loads,
+        },
+        PlanSpec {
+            policy: Policy::Frac,
+            values,
+            loads: LoadMethod::Sca,
+        },
+    ];
+    if small_scale {
+        specs.push(PlanSpec {
+            policy: Policy::FracOptimal,
+            values,
+            loads: LoadMethod::Sca,
+        });
+    }
+    specs
+}
+
+/// JSON record for one algorithm's MC outcome.
+pub fn result_json(e: &Evaluated) -> Json {
+    let mut j = Json::obj();
+    j.set("label", Json::Str(e.label.clone()));
+    j.set("mean_system_delay_ms", Json::Num(e.results.system.mean()));
+    j.set("sem_ms", Json::Num(e.results.system.sem()));
+    j.set("t_est_ms", Json::Num(e.plan.t_est()));
+    j.set(
+        "per_master_mean_ms",
+        Json::from_f64_slice(
+            &e.results
+                .per_master
+                .iter()
+                .map(|s| s.mean())
+                .collect::<Vec<_>>(),
+        ),
+    );
+    j
+}

@@ -1,0 +1,152 @@
+//! Fig. 2: validation of the Markov-inequality approximation, small scale
+//! (M = 2, N = 5, computation-dominant).
+//!
+//! Three solutions, all with Algorithm-1 dedicated assignment:
+//! * **Exact** — Theorem-2 values + Theorem-2 loads (optimal for P3);
+//! * **Approx** — Theorem-1 (Markov) values + loads;
+//! * **Approx, enhanced** — assignment from the approximation, loads
+//!   re-solved with Theorem 2 (the §III-D enhancement specialized to the
+//!   computation-dominant case, as the paper does for this figure).
+
+use super::common::{evaluate, Evaluated, Figure, FigureOptions};
+use crate::assign::ValueModel;
+use crate::config::{CommModel, Scenario};
+use crate::plan::{LoadMethod, PlanSpec, Policy};
+use crate::util::json::Json;
+use crate::util::stats::Ecdf;
+use crate::util::table::Table;
+
+/// The three validation variants.
+pub fn variants() -> Vec<(&'static str, PlanSpec)> {
+    vec![
+        (
+            "Exact (Thm 2)",
+            PlanSpec {
+                policy: Policy::DediIter,
+                values: ValueModel::Exact,
+                loads: LoadMethod::Exact,
+            },
+        ),
+        (
+            "Approx (Thm 1)",
+            PlanSpec {
+                policy: Policy::DediIter,
+                values: ValueModel::Markov,
+                loads: LoadMethod::Markov,
+            },
+        ),
+        (
+            "Approx, enhanced",
+            PlanSpec {
+                policy: Policy::DediIter,
+                values: ValueModel::Markov,
+                loads: LoadMethod::Exact,
+            },
+        ),
+    ]
+}
+
+/// Shared driver for Figs. 2 and 3.
+pub fn validation(id: &str, title: &str, s: &Scenario, opts: &FigureOptions) -> Figure {
+    let mut fig = Figure::new(id, title);
+    let evals: Vec<(&str, Evaluated)> = variants()
+        .into_iter()
+        .map(|(name, spec)| (name, evaluate(s, &spec, opts, true)))
+        .collect();
+
+    // (a) average task completion delay per master + all-tasks max.
+    let mut header: Vec<String> = vec!["solution".into()];
+    header.extend((0..s.n_masters()).map(|m| format!("master {} (ms)", m + 1)));
+    header.push("all tasks (ms)".into());
+    let hdr_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut ta = Table::new(&hdr_refs);
+    let mut results = Vec::new();
+    for (name, e) in &evals {
+        let mut vals: Vec<f64> = e.results.per_master.iter().map(|s| s.mean()).collect();
+        vals.push(e.results.system.mean());
+        ta.row_fmt(name, &vals, 3);
+        let mut j = super::common::result_json(e);
+        j.set("name", Json::Str(name.to_string()));
+        results.push(j);
+    }
+    fig.add_table("(a) average task completion delay", ta);
+
+    // (b) CDF of the all-tasks completion delay.
+    let mut tb = Table::new(&["P[T ≤ t]", "Exact (ms)", "Approx (ms)", "Approx, enhanced (ms)"]);
+    let ecdfs: Vec<Ecdf> = evals
+        .iter()
+        .map(|(_, e)| e.results.system_ecdf().expect("samples kept"))
+        .collect();
+    let mut series = Vec::new();
+    for &(ref name, _) in &evals {
+        let _ = name;
+    }
+    for p in [0.05, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99] {
+        let vals: Vec<f64> = ecdfs.iter().map(|e| e.inverse(p)).collect();
+        tb.row_fmt(&format!("{p:.2}"), &vals, 3);
+    }
+    for ((name, _), e) in evals.iter().zip(&ecdfs) {
+        let mut j = Json::obj();
+        j.set("name", Json::Str(name.to_string()));
+        j.set("cdf", Json::from_pairs(&e.series(64)));
+        series.push(j);
+    }
+    fig.add_table("(b) CDF of task completion delay (quantiles)", tb);
+
+    fig.json.set("results", Json::Arr(results));
+    fig.json.set("cdf_series", Json::Arr(series));
+    fig
+}
+
+pub fn run(opts: &FigureOptions) -> Figure {
+    let s = Scenario::small_scale(opts.seed, 2.0, CommModel::CompDominant);
+    validation(
+        "fig2",
+        "Markov-approximation validation, 2 masters × 5 workers",
+        &s,
+        opts,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast() -> FigureOptions {
+        FigureOptions {
+            trials: 2_000,
+            seed: 1,
+            fit_samples: 1_000,
+            threads: 0,
+        }
+    }
+
+    #[test]
+    fn enhanced_tracks_exact() {
+        // The paper's headline for Figs. 2–3: "Approx, enhanced" ≈ "Exact".
+        let fig = run(&fast());
+        let arr = fig.json.get("results").unwrap().as_arr().unwrap();
+        let mean = |i: usize| {
+            arr[i]
+                .get("mean_system_delay_ms")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        let (exact, approx, enhanced) = (mean(0), mean(1), mean(2));
+        assert!(
+            (enhanced - exact).abs() / exact < 0.05,
+            "enhanced {enhanced} vs exact {exact}"
+        );
+        // Approx is within a reasonable factor (paper: "acceptable gap").
+        assert!(approx < 2.0 * exact, "approx {approx} vs exact {exact}");
+    }
+
+    #[test]
+    fn tables_have_expected_shape() {
+        let fig = run(&fast());
+        assert_eq!(fig.tables.len(), 2);
+        assert_eq!(fig.tables[0].1.n_rows(), 3); // three solutions
+        assert_eq!(fig.tables[1].1.n_rows(), 8); // eight quantiles
+    }
+}

@@ -1,0 +1,50 @@
+//! Fig. 3: validation of the Markov-inequality approximation, large scale
+//! (M = 4, N = 50, computation-dominant). Same driver as Fig. 2.
+
+use super::common::{Figure, FigureOptions};
+use super::fig2;
+use crate::config::{CommModel, Scenario};
+
+pub fn run(opts: &FigureOptions) -> Figure {
+    let s = Scenario::large_scale(opts.seed, 2.0, CommModel::CompDominant);
+    fig2::validation(
+        "fig3",
+        "Markov-approximation validation, 4 masters × 50 workers",
+        &s,
+        opts,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn large_scale_enhanced_close_to_exact() {
+        let fig = run(&FigureOptions {
+            trials: 1_000,
+            seed: 2,
+            fit_samples: 1_000,
+            threads: 0,
+        });
+        let arr = fig.json.get("results").unwrap().as_arr().unwrap();
+        let mean = |i: usize| {
+            arr[i]
+                .get("mean_system_delay_ms")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        let (exact, enhanced) = (mean(0), mean(2));
+        assert!(
+            (enhanced - exact).abs() / exact < 0.05,
+            "enhanced {enhanced} vs exact {exact}"
+        );
+        // Large scale: ~12 workers per master at L = 10⁴ rows lands in
+        // the paper's few-hundred-ms range (Fig. 5b shows ~0.6 s tails).
+        assert!(
+            (50.0..1500.0).contains(&exact),
+            "exact delay {exact} ms outside the paper's range"
+        );
+    }
+}

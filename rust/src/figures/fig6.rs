@@ -1,0 +1,162 @@
+//! Fig. 6: impact of the communication rate — sweep γ/u while keeping u
+//! fixed (large scale).
+//!
+//! (a) average task completion delay per algorithm;
+//! (b) ratio of local load to total load `l_{m,0}/Σ_n l_{m,n}` — the
+//!     benchmarks ignore communication so their ratio is flat; the
+//!     proposed algorithms offload more as communication gets faster.
+
+use super::common::{evaluate, Figure, FigureOptions};
+use crate::assign::ValueModel;
+use crate::config::{CommModel, Scenario};
+use crate::plan::{LoadMethod, Plan, PlanSpec, Policy};
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// γ/u values swept (paper's x-axis).
+pub const RATIOS: &[f64] = &[0.5, 1.0, 2.0, 4.0, 8.0];
+
+fn specs() -> Vec<PlanSpec> {
+    let v = ValueModel::Markov;
+    vec![
+        PlanSpec {
+            policy: Policy::UncodedUniform,
+            values: v,
+            loads: LoadMethod::Markov,
+        },
+        PlanSpec {
+            policy: Policy::CodedUniform,
+            values: v,
+            loads: LoadMethod::Markov,
+        },
+        PlanSpec {
+            policy: Policy::DediIter,
+            values: v,
+            loads: LoadMethod::Markov,
+        },
+        PlanSpec {
+            policy: Policy::Frac,
+            values: v,
+            loads: LoadMethod::Markov,
+        },
+    ]
+}
+
+/// Mean over masters of `l_{m,0} / Σ_n l_{m,n}`.
+fn local_ratio(plan: &Plan) -> f64 {
+    let per: Vec<f64> = plan
+        .masters
+        .iter()
+        .map(|mp| {
+            let local: f64 = mp
+                .entries
+                .iter()
+                .filter(|e| e.node == 0)
+                .map(|e| e.load)
+                .sum();
+            (local / mp.total_load()).max(0.0) // avoid `-0.0` for no-local plans
+        })
+        .collect();
+    per.iter().sum::<f64>() / per.len() as f64
+}
+
+pub fn run(opts: &FigureOptions) -> Figure {
+    let mut fig = Figure::new(
+        "fig6",
+        "communication-rate sweep (γ/u), 4 masters × 50 workers",
+    );
+    let labels: Vec<String> = specs()
+        .iter()
+        .map(|sp| {
+            // Build once on a throwaway scenario to get the label.
+            sp.label()
+        })
+        .collect();
+
+    let mut delay_rows: Vec<Vec<f64>> = vec![Vec::new(); specs().len()];
+    let mut ratio_rows: Vec<Vec<f64>> = vec![Vec::new(); specs().len()];
+    for &ratio in RATIOS {
+        // Same seed ⇒ identical computation parameters; only γ changes.
+        let s = Scenario::large_scale(opts.seed, ratio, CommModel::Stochastic);
+        for (i, spec) in specs().iter().enumerate() {
+            let e = evaluate(&s, spec, opts, false);
+            delay_rows[i].push(e.results.system.mean());
+            ratio_rows[i].push(local_ratio(&e.plan));
+        }
+    }
+
+    let mut header = vec!["algorithm".to_string()];
+    header.extend(RATIOS.iter().map(|r| format!("γ/u={r}")));
+    let hdr: Vec<&str> = header.iter().map(String::as_str).collect();
+
+    let mut ta = Table::new(&hdr);
+    for (label, row) in labels.iter().zip(&delay_rows) {
+        ta.row_fmt(label, row, 3);
+    }
+    fig.add_table("(a) average task completion delay (ms)", ta);
+
+    let mut tb = Table::new(&hdr);
+    for (label, row) in labels.iter().zip(&ratio_rows) {
+        tb.row_fmt(label, row, 4);
+    }
+    fig.add_table("(b) local load / total load", tb);
+
+    let mut arr = Vec::new();
+    for (i, label) in labels.iter().enumerate() {
+        let mut j = Json::obj();
+        j.set("label", Json::Str(label.clone()));
+        j.set("ratios", Json::from_f64_slice(RATIOS));
+        j.set("mean_delay_ms", Json::from_f64_slice(&delay_rows[i]));
+        j.set("local_load_ratio", Json::from_f64_slice(&ratio_rows[i]));
+        arr.push(j);
+    }
+    fig.json.set("series", Json::Arr(arr));
+    fig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_shapes_match_paper() {
+        let fig = run(&FigureOptions {
+            trials: 1_500,
+            seed: 6,
+            fit_samples: 1_000,
+            threads: 0,
+        });
+        let series = fig.json.get("series").unwrap().as_arr().unwrap();
+        let by_label = |label: &str, key: &str| -> Vec<f64> {
+            series
+                .iter()
+                .find(|j| j.get("label").unwrap().as_str() == Some(label))
+                .unwrap()
+                .get(key)
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|x| x.as_f64().unwrap())
+                .collect()
+        };
+        // (a) delay decreases as γ/u grows for the proposed algorithm.
+        let dedi = by_label("Dedi, iter", "mean_delay_ms");
+        assert!(dedi.first().unwrap() > dedi.last().unwrap());
+        // Proposed beats benchmarks at every ratio.
+        let unc = by_label("Uncoded", "mean_delay_ms");
+        for (d, u) in dedi.iter().zip(&unc) {
+            assert!(d < u, "dedi {d} ≥ uncoded {u}");
+        }
+        // (b) benchmark ratio flat; proposed ratio decreases with γ/u.
+        let coded_ratio = by_label("Coded [5]", "local_load_ratio");
+        let spread = coded_ratio.iter().fold(0.0f64, |a, &b| a.max(b))
+            - coded_ratio.iter().fold(1.0f64, |a, &b| a.min(b));
+        assert!(spread < 1e-9, "coded benchmark ratio should be flat");
+        let dedi_ratio = by_label("Dedi, iter", "local_load_ratio");
+        assert!(
+            dedi_ratio.first().unwrap() > dedi_ratio.last().unwrap(),
+            "local ratio should fall as comm speeds up: {dedi_ratio:?}"
+        );
+    }
+}

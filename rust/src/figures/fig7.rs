@@ -1,0 +1,84 @@
+//! Fig. 7: per-row computation-delay traces on two instance types and
+//! their shifted-exponential fits.
+//!
+//! The paper measures a 10⁶-dim dot product 10⁶ times on EC2 t2.micro /
+//! c5.large and fits shifted exponentials. Offline substitution
+//! (DESIGN.md §Substitutions): each instance profile *generates* a trace
+//! with the paper's fitted parameters, and we re-run the full fitting
+//! pipeline — sample → MLE fit → KS distance — validating that the
+//! pipeline recovers the parameters and that the fit quality matches the
+//! paper's "the fitting ... is accurate". (The e2e example additionally
+//! measures REAL matvec delays through the PJRT runtime and fits those.)
+
+use super::common::{Figure, FigureOptions};
+use crate::traces::ec2::{InstanceType, C5_LARGE, T2_MICRO};
+use crate::traces::fit::fit_shifted_exp;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::Ecdf;
+use crate::util::table::Table;
+
+pub fn run(opts: &FigureOptions) -> Figure {
+    let mut fig = Figure::new(
+        "fig7",
+        "measured delay traces + shifted-exponential fits",
+    );
+    let mut rng = Rng::new(opts.seed ^ 0xEC2);
+    let mut t = Table::new(&[
+        "instance", "true a (ms)", "fit a (ms)", "true u (1/ms)", "fit u (1/ms)",
+        "KS", "samples",
+    ]);
+    let mut arr = Vec::new();
+    for inst in [T2_MICRO, C5_LARGE] {
+        let (row, j) = fit_one(&inst, opts.fit_samples, &mut rng);
+        t.row_fmt(inst.name, &row, 4);
+        arr.push(j);
+    }
+    fig.add_table("shifted-exponential fits", t);
+    fig.json.set("fits", Json::Arr(arr));
+    fig
+}
+
+fn fit_one(inst: &InstanceType, n: usize, rng: &mut Rng) -> (Vec<f64>, Json) {
+    let trace = inst.sample_trace(n, rng);
+    let fit = fit_shifted_exp(&trace);
+    let ecdf = Ecdf::new(trace);
+    let mut j = Json::obj();
+    j.set("instance", Json::Str(inst.name.into()));
+    j.set("true_a", Json::Num(inst.a));
+    j.set("true_u", Json::Num(inst.u));
+    j.set("fit_a", Json::Num(fit.a));
+    j.set("fit_u", Json::Num(fit.u));
+    j.set("ks", Json::Num(fit.ks));
+    j.set("empirical_cdf", Json::from_pairs(&ecdf.series(64)));
+    (
+        vec![inst.a, fit.a, inst.u, fit.u, fit.ks, n as f64],
+        j,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_recover_paper_parameters() {
+        let fig = run(&FigureOptions {
+            trials: 10,
+            seed: 7,
+            fit_samples: 100_000,
+            threads: 0,
+        });
+        let fits = fig.json.get("fits").unwrap().as_arr().unwrap();
+        for f in fits {
+            let ta = f.get("true_a").unwrap().as_f64().unwrap();
+            let fa = f.get("fit_a").unwrap().as_f64().unwrap();
+            let tu = f.get("true_u").unwrap().as_f64().unwrap();
+            let fu = f.get("fit_u").unwrap().as_f64().unwrap();
+            let ks = f.get("ks").unwrap().as_f64().unwrap();
+            assert!((fa - ta).abs() / ta < 0.02, "a: {fa} vs {ta}");
+            assert!((fu - tu).abs() / tu < 0.05, "u: {fu} vs {tu}");
+            assert!(ks < 0.02, "fit should be accurate, ks={ks}");
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! Fig. 8: average task completion delay on the EC2-fitted scenario —
+//! 4 t2.micro masters, 40 t2.micro + 10 c5.large workers, computation-
+//! dominant (§V-C).
+//!
+//! The paper *plans* with the fitted shifted exponentials but *simulates*
+//! with the measured traces. Our substitution (DESIGN.md §Substitutions)
+//! therefore reports two panels:
+//! * **fitted model** — delays drawn from the fitted distributions only;
+//! * **measured-trace stand-in** — t2.micro delays drawn from the
+//!   burst-throttling mixture (heavy straggler tail, as in real traces).
+//!   This is the panel comparable to the paper's 82% / 30% headline: an
+//!   uncoded scheme must wait for every worker, so it is almost surely
+//!   hit by a throttled t2 instance, while the coded schemes ride over
+//!   them.
+//!
+//! Proposed algorithms use the exact (Theorem-2) values and loads, as the
+//! paper does for this comp-dominant evaluation.
+
+use super::common::{evaluate, result_json, roster, Figure, FigureOptions};
+use crate::assign::ValueModel;
+use crate::config::Scenario;
+use crate::plan::LoadMethod;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+fn panel(
+    fig: &mut Figure,
+    tag: &str,
+    caption: &str,
+    s: &Scenario,
+    opts: &FigureOptions,
+) -> Vec<Json> {
+    let specs = roster(false, ValueModel::Exact, LoadMethod::Exact);
+    let mut t = Table::new(&["algorithm", "avg delay (ms)", "±sem", "planner t* (ms)"]);
+    let mut results = Vec::new();
+    for spec in &specs {
+        let e = evaluate(s, spec, opts, false);
+        t.row_fmt(
+            &e.label,
+            &[e.results.system.mean(), e.results.system.sem(), e.plan.t_est()],
+            3,
+        );
+        results.push(result_json(&e));
+    }
+    fig.add_table(caption, t);
+
+    let mean = |label: &str| -> Option<f64> {
+        results
+            .iter()
+            .find(|j| j.get("label").unwrap().as_str() == Some(label))
+            .map(|j| j.get("mean_system_delay_ms").unwrap().as_f64().unwrap())
+    };
+    let best = results
+        .iter()
+        .map(|j| j.get("mean_system_delay_ms").unwrap().as_f64().unwrap())
+        .fold(f64::INFINITY, f64::min);
+    let mut hl = Table::new(&["reduction vs", "percent"]);
+    if let Some(u) = mean("Uncoded") {
+        hl.row_fmt("Uncoded", &[100.0 * (1.0 - best / u)], 1);
+    }
+    if let Some(c) = mean("Coded [5]") {
+        hl.row_fmt("Coded [5]", &[100.0 * (1.0 - best / c)], 1);
+    }
+    fig.add_table(
+        &format!("({tag}) best-algorithm delay reduction"),
+        hl,
+    );
+    results
+}
+
+pub fn run(opts: &FigureOptions) -> Figure {
+    let mut fig = Figure::new(
+        "fig8",
+        "EC2-fitted scenario: 4 masters, 40 t2.micro + 10 c5.large workers",
+    );
+    let fitted = panel(
+        &mut fig,
+        "fitted",
+        "(fitted) delays from fitted shifted exponentials",
+        &Scenario::ec2(40, 10, false),
+        opts,
+    );
+    let measured = panel(
+        &mut fig,
+        "measured",
+        "(measured) t2.micro burst-throttling mixture — paper headline: 82% / 30%",
+        &Scenario::ec2(40, 10, true),
+        opts,
+    );
+    fig.json.set("results_fitted", Json::Arr(fitted));
+    fig.json.set("results_measured", Json::Arr(measured));
+    fig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mean_of(results: &[Json], label: &str) -> f64 {
+        results
+            .iter()
+            .find(|j| j.get("label").unwrap().as_str() == Some(label))
+            .unwrap()
+            .get("mean_system_delay_ms")
+            .unwrap()
+            .as_f64()
+            .unwrap()
+    }
+
+    #[test]
+    fn ec2_headline_reductions() {
+        let fig = run(&FigureOptions {
+            trials: 4_000,
+            seed: 8,
+            fit_samples: 1_000,
+            threads: 0,
+        });
+        let measured = fig.json.get("results_measured").unwrap().as_arr().unwrap();
+        let uncoded = mean_of(measured, "Uncoded");
+        let coded = mean_of(measured, "Coded [5]");
+        let iter = mean_of(measured, "Dedi, iter");
+        let simple = mean_of(measured, "Dedi, simple");
+        let frac = mean_of(measured, "Frac");
+        // Orderings: proposed ≤ both benchmarks; iter ≤ simple (identical
+        // per-type workers can tie); frac ≈ iter.
+        assert!(iter <= simple * 1.001, "iter {iter} > simple {simple}");
+        assert!(iter < coded && iter < uncoded);
+        assert!((frac - iter).abs() / iter < 0.1, "frac {frac} vs iter {iter}");
+        // Headline magnitudes under the measured-trace stand-in
+        // (paper: 82% vs uncoded, 30% vs coded).
+        let best = frac.min(iter);
+        let red_uncoded = 1.0 - best / uncoded;
+        let red_coded = 1.0 - best / coded;
+        assert!(
+            red_uncoded > 0.6,
+            "vs uncoded only {:.0}% (paper ~82%)",
+            100.0 * red_uncoded
+        );
+        assert!(
+            red_coded > 0.15,
+            "vs coded only {:.0}% (paper ~30%)",
+            100.0 * red_coded
+        );
+        // Fitted-only panel: same orderings, smaller margins.
+        let fitted = fig.json.get("results_fitted").unwrap().as_arr().unwrap();
+        assert!(mean_of(fitted, "Dedi, iter") < mean_of(fitted, "Uncoded"));
+    }
+}

@@ -1,0 +1,79 @@
+//! Figure-reproduction harness: regenerates every figure of §V.
+//!
+//! Each `figN` module produces a [`Figure`] — the same rows/series the
+//! paper plots, as aligned text tables plus a JSON export. Driven by the
+//! CLI (`coded-coop figure <id>`) and by `cargo bench --bench figures`.
+//!
+//! | id | paper | content |
+//! |----|-------|---------|
+//! | fig2 | Fig. 2(a,b) | Markov validation, M=2/N=5, avg + CDF |
+//! | fig3 | Fig. 3(a,b) | Markov validation, M=4/N=50 |
+//! | fig4a / fig4b | Fig. 4 | avg delay, all algorithms vs benchmarks |
+//! | fig5 | Fig. 5(a,b) | delay CDFs + ρ_s = 0.95 readouts |
+//! | fig6 | Fig. 6(a,b) | γ/u sweep: avg delay + local-load ratio |
+//! | fig7 | Fig. 7(a,b) | trace sampling + shifted-exp fit |
+//! | fig8 | Fig. 8 | EC2-fitted comp-dominant comparison |
+
+pub mod ablations;
+pub mod common;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+
+pub use common::{Figure, FigureOptions};
+
+/// All figure ids in paper order.
+pub const ALL_IDS: &[&str] = &[
+    "fig2", "fig3", "fig4a", "fig4b", "fig5", "fig6", "fig7", "fig8",
+];
+
+/// Run one figure by id.
+pub fn run(id: &str, opts: &FigureOptions) -> anyhow::Result<Figure> {
+    match id {
+        "fig2" => Ok(fig2::run(opts)),
+        "fig3" => Ok(fig3::run(opts)),
+        "fig4a" => Ok(fig4::run_small(opts)),
+        "fig4b" => Ok(fig4::run_large(opts)),
+        "fig5" => Ok(fig5::run(opts)),
+        "fig6" => Ok(fig6::run(opts)),
+        "fig7" => Ok(fig7::run(opts)),
+        "fig8" => Ok(fig8::run(opts)),
+        other => anyhow::bail!(
+            "unknown figure '{other}' (expected one of {ALL_IDS:?} or 'all')"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Smoke: every figure regenerates at tiny trial counts.
+    #[test]
+    fn all_figures_smoke() {
+        let opts = FigureOptions {
+            trials: 400,
+            seed: 5,
+            fit_samples: 2_000,
+            ..Default::default()
+        };
+        for id in ALL_IDS {
+            let fig = run(id, &opts).unwrap_or_else(|e| panic!("{id}: {e}"));
+            assert!(!fig.tables.is_empty(), "{id} produced no tables");
+            let text = fig.render();
+            assert!(text.contains(&fig.id), "{id} render misses id");
+            // JSON export parses back.
+            let js = fig.json.to_string_pretty();
+            crate::util::json::parse(&js).expect("figure JSON must parse");
+        }
+    }
+
+    #[test]
+    fn unknown_id_errors() {
+        assert!(run("fig99", &FigureOptions::default()).is_err());
+    }
+}

@@ -1,0 +1,55 @@
+//! # coded-coop
+//!
+//! Production reproduction of **"Coded Computation across Shared
+//! Heterogeneous Workers with Communication Delay"** (Sun, Zhang, Zhao,
+//! Zhou, Niu, Gündüz — IEEE Trans. Signal Processing 2022).
+//!
+//! The crate is the L3 (run-time) layer of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): tiled coded
+//!   mat-vec and MDS encode, lowered with `interpret=True`.
+//! * **L2** — JAX compute graph (`python/compile/model.py`), AOT-lowered to
+//!   HLO text artifacts by `python/compile/aot.py` (build time only).
+//! * **L3** — this crate: the paper's worker-assignment / load-allocation /
+//!   resource-allocation algorithms, the multi-master coordinator runtime,
+//!   the Monte-Carlo delay simulator and the figure-reproduction harness.
+//!   Artifacts are executed through the PJRT CPU client ([`runtime`]);
+//!   python never runs on the request path.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//!
+//! ## Crate map
+//!
+//! | module | contents |
+//! |---|---|
+//! | [`util`] | offline-environment substrates: PRNG, stats, Lambert W₋₁, JSON, property-test + bench harnesses |
+//! | [`model`] | the paper's delay model: eqs. (1)–(5) CDFs, means, samplers |
+//! | [`config`] | scenario definitions (§V settings) + JSON config system |
+//! | [`coding`] | real-valued systematic MDS code + dense LU solver |
+//! | [`alloc`] | load allocation: Thm 1 (Markov), Thm 2 (Lambert), Thm 3 (fractional KKT), Alg. 3 (SCA) |
+//! | [`assign`] | worker assignment: Alg. 1 (iterated greedy), Alg. 2 (simple greedy), Alg. 4 (fractional), λ-sweep optimum, uniform benchmarks |
+//! | [`plan`] | policy → `Plan` (assignment + allocation) pipeline |
+//! | [`sim`] | Monte-Carlo completion-delay engine (multi-threaded) |
+//! | [`traces`] | EC2-style instance profiles + shifted-exponential fitting (Fig. 7) |
+//! | [`figures`] | regenerates every figure of §V (Figs. 2–8) |
+//! | [`runtime`] | PJRT bridge: artifact manifest, executable cache, typed execute |
+//! | [`coordinator`] | the real multi-master / shared-worker runtime (threads, delay-injected channels, decode, cancellation) |
+//! | [`cli`] | argument parsing + subcommands for the `coded-coop` binary |
+
+pub mod util;
+pub mod model;
+pub mod config;
+pub mod coding;
+pub mod alloc;
+pub mod assign;
+pub mod plan;
+pub mod sim;
+pub mod traces;
+pub mod figures;
+pub mod runtime;
+pub mod coordinator;
+pub mod cli;
+
+/// Crate version, surfaced by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,1 @@
+fn main() -> anyhow::Result<()> { coded_coop::cli::run() }

@@ -1,0 +1,320 @@
+//! Delay distributions of §II-B: eqs. (1)–(5).
+//!
+//! [`LinkDelay`] is the load/resource-scaled total delay
+//! `T_{m,n} = T^{[tr]} + T^{[cp]}` of one assigned sub-task:
+//! `Exp(bγ/l)` communication + deterministic shift `a·l/k` + `Exp(ku/l)`
+//! computation — a shifted hypoexponential whose CDF is eq. (3) (distinct
+//! rates), eq. (4) (equal rates), or eq. (5) (local: no comm leg).
+
+use super::params::LinkParams;
+use crate::util::rng::Rng;
+
+/// Plain exponential distribution (eq. 1 building block).
+#[derive(Clone, Copy, Debug)]
+pub struct Exponential {
+    pub rate: f64,
+}
+
+impl Exponential {
+    pub fn new(rate: f64) -> Self {
+        assert!(rate > 0.0 && rate.is_finite());
+        Self { rate }
+    }
+
+    pub fn cdf(&self, t: f64) -> f64 {
+        if t <= 0.0 {
+            0.0
+        } else {
+            1.0 - (-self.rate * t).exp()
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        1.0 / self.rate
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        rng.exp(self.rate)
+    }
+}
+
+/// Shifted exponential (eq. 2 building block; also Fig. 7's fitted model).
+#[derive(Clone, Copy, Debug)]
+pub struct ShiftedExp {
+    pub shift: f64,
+    pub rate: f64,
+}
+
+impl ShiftedExp {
+    pub fn new(shift: f64, rate: f64) -> Self {
+        assert!(shift >= 0.0 && rate > 0.0 && rate.is_finite());
+        Self { shift, rate }
+    }
+
+    pub fn cdf(&self, t: f64) -> f64 {
+        if t <= self.shift {
+            0.0
+        } else {
+            1.0 - (-self.rate * (t - self.shift)).exp()
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.shift + 1.0 / self.rate
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        rng.shifted_exp(self.shift, self.rate)
+    }
+}
+
+/// Total delay of one assigned sub-task (eqs. 3–5).
+///
+/// Built from link parameters, load `l` (> 0 coded rows), compute share
+/// `k`, bandwidth share `b`. Local links ignore `b` and have no comm leg.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkDelay {
+    /// Communication rate `bγ/l`; `∞` for local processing.
+    comm_rate: f64,
+    /// Deterministic shift `a·l/k`.
+    shift: f64,
+    /// Computation rate `k·u/l`.
+    comp_rate: f64,
+    /// Heavy-tail mixture on the computation legs (sampling only; the
+    /// CDF below describes the fitted/non-throttled component).
+    straggler: Option<super::params::Straggler>,
+}
+
+impl LinkDelay {
+    pub fn new(p: &LinkParams, l: f64, k: f64, b: f64) -> Self {
+        assert!(l > 0.0, "LinkDelay needs positive load, got {l}");
+        assert!(k > 0.0 && k <= 1.0, "compute share k={k} out of (0,1]");
+        let comm_rate = if p.is_local() {
+            f64::INFINITY
+        } else {
+            assert!(b > 0.0 && b <= 1.0, "bandwidth share b={b} out of (0,1]");
+            b * p.gamma / l
+        };
+        Self {
+            comm_rate,
+            shift: p.a * l / k,
+            comp_rate: k * p.u / l,
+            straggler: p.straggler,
+        }
+    }
+
+    /// Local computation at the master (eq. 5): `k = b = 1`, no comm.
+    pub fn local(a0: f64, u0: f64, l: f64) -> Self {
+        Self::new(&LinkParams::local(a0, u0), l, 1.0, 1.0)
+    }
+
+    pub fn is_local(&self) -> bool {
+        self.comm_rate.is_infinite()
+    }
+
+    pub fn shift(&self) -> f64 {
+        self.shift
+    }
+
+    /// `E[T] = 1/(bγ/l) + a·l/k + 1/(k·u/l)` — the Markov-inequality
+    /// numerator `l·θ` (eqs. 9, 23).
+    pub fn mean(&self) -> f64 {
+        let comm = if self.is_local() {
+            0.0
+        } else {
+            1.0 / self.comm_rate
+        };
+        comm + self.shift + 1.0 / self.comp_rate
+    }
+
+    /// CDF `P[T ≤ t]`, eqs. (3)/(4)/(5).
+    pub fn cdf(&self, t: f64) -> f64 {
+        let x = t - self.shift;
+        if x <= 0.0 {
+            return 0.0;
+        }
+        if self.is_local() {
+            // eq. (5)
+            return 1.0 - (-self.comp_rate * x).exp();
+        }
+        let (l1, l2) = (self.comm_rate, self.comp_rate);
+        let rel = (l1 - l2).abs() / l1.max(l2);
+        if rel < 1e-9 {
+            // eq. (4): equal-rate limit (Erlang-2 with shift)
+            let lx = l2 * x;
+            1.0 - (1.0 + lx) * (-lx).exp()
+        } else {
+            // eq. (3)
+            1.0 - (l1 * (-l2 * x).exp() - l2 * (-l1 * x).exp()) / (l1 - l2)
+        }
+    }
+
+    /// Draw one delay: comm + shift + comp (independent legs). With a
+    /// straggler mixture attached, the computation legs are stretched by
+    /// `slowdown` with probability `prob`.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        let comm = if self.is_local() {
+            0.0
+        } else {
+            rng.exp(self.comm_rate)
+        };
+        let factor = match self.straggler {
+            Some(s) if rng.f64() < s.prob => s.slowdown,
+            _ => 1.0,
+        };
+        comm + factor * (self.shift + rng.exp(self.comp_rate))
+    }
+
+    /// Decomposed sample `(comm, shift, comp)` — the coordinator injects
+    /// the comm leg on the channel and the comp legs at the worker.
+    pub fn sample_parts(&self, rng: &mut Rng) -> (f64, f64, f64) {
+        let comm = if self.is_local() {
+            0.0
+        } else {
+            rng.exp(self.comm_rate)
+        };
+        (comm, self.shift, rng.exp(self.comp_rate))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn empirical_cdf(d: &LinkDelay, t: f64, n: usize, seed: u64) -> f64 {
+        let mut rng = Rng::new(seed);
+        let mut cnt = 0usize;
+        for _ in 0..n {
+            if d.sample(&mut rng) <= t {
+                cnt += 1;
+            }
+        }
+        cnt as f64 / n as f64
+    }
+
+    #[test]
+    fn exponential_cdf_and_mean() {
+        let e = Exponential::new(2.0);
+        assert_eq!(e.cdf(0.0), 0.0);
+        assert!((e.cdf(0.5) - (1.0 - (-1.0f64).exp())).abs() < 1e-12);
+        assert!((e.mean() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shifted_exp_cdf() {
+        let s = ShiftedExp::new(1.0, 3.0);
+        assert_eq!(s.cdf(0.9), 0.0);
+        assert_eq!(s.cdf(1.0), 0.0);
+        assert!((s.cdf(2.0) - (1.0 - (-3.0f64).exp())).abs() < 1e-12);
+        assert!((s.mean() - (1.0 + 1.0 / 3.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn link_delay_mean_is_l_theta() {
+        // E[T] = l·θ(k,b) — the exact identity behind eqs. (9)/(23).
+        use crate::model::params::theta_fractional;
+        let p = LinkParams::new(2.0, 0.25, 4.0);
+        for &(l, k, b) in &[(10.0, 1.0, 1.0), (25.0, 0.5, 0.25), (3.0, 0.1, 0.9)] {
+            let d = LinkDelay::new(&p, l, k, b);
+            let want = l * theta_fractional(&p, k, b);
+            assert!((d.mean() - want).abs() < 1e-9, "l={l} k={k} b={b}");
+        }
+    }
+
+    #[test]
+    fn cdf_zero_before_shift_eq3() {
+        let p = LinkParams::new(1.0, 0.5, 2.0);
+        let d = LinkDelay::new(&p, 8.0, 0.5, 1.0);
+        // shift = 0.5*8/0.5 = 8.0
+        assert_eq!(d.shift(), 8.0);
+        assert_eq!(d.cdf(7.99), 0.0);
+        assert!(d.cdf(8.01) > 0.0);
+    }
+
+    #[test]
+    fn cdf_matches_eq3_formula_directly() {
+        // Hand-evaluate eq. (3) at one point.
+        let p = LinkParams::new(3.0, 0.2, 1.0);
+        let (l, k, b) = (4.0, 1.0, 1.0);
+        let d = LinkDelay::new(&p, l, k, b);
+        let t = 3.0;
+        let x = t - p.a * l / k;
+        let l1 = b * p.gamma / l; // 0.75
+        let l2 = k * p.u / l; // 0.25
+        let want = 1.0 - (l1 * (-l2 * x).exp() - l2 * (-l1 * x).exp()) / (l1 - l2);
+        assert!((d.cdf(t) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cdf_equal_rate_limit_continuous() {
+        // eq. (4) must be the limit of eq. (3) as rates converge.
+        let p_eq = LinkParams::new(1.0, 0.1, 1.0);
+        let d_eq = LinkDelay::new(&p_eq, 5.0, 1.0, 1.0); // rates equal: 0.2, 0.2
+        let p_near = LinkParams::new(1.0 + 1e-7, 0.1, 1.0);
+        let d_near = LinkDelay::new(&p_near, 5.0, 1.0, 1.0);
+        for &t in &[1.0, 2.0, 5.0, 10.0] {
+            assert!(
+                (d_eq.cdf(t) - d_near.cdf(t)).abs() < 1e-6,
+                "t={t}: {} vs {}",
+                d_eq.cdf(t),
+                d_near.cdf(t)
+            );
+        }
+    }
+
+    #[test]
+    fn cdf_is_monotone_and_bounded() {
+        let p = LinkParams::new(2.0, 0.25, 4.0);
+        let d = LinkDelay::new(&p, 10.0, 0.7, 0.4);
+        let mut prev = 0.0;
+        for i in 0..200 {
+            let t = i as f64 * 0.5;
+            let c = d.cdf(t);
+            assert!((0.0..=1.0).contains(&c));
+            assert!(c >= prev - 1e-12, "not monotone at t={t}");
+            prev = c;
+        }
+        assert!(prev > 0.99, "CDF should approach 1, got {prev}");
+    }
+
+    #[test]
+    fn sampler_agrees_with_cdf() {
+        let p = LinkParams::new(2.0, 0.25, 4.0);
+        let d = LinkDelay::new(&p, 10.0, 1.0, 1.0);
+        for &t in &[3.0, 5.0, 8.0, 12.0] {
+            let emp = empirical_cdf(&d, t, 100_000, 42);
+            let ana = d.cdf(t);
+            assert!((emp - ana).abs() < 0.01, "t={t}: emp={emp} ana={ana}");
+        }
+    }
+
+    #[test]
+    fn local_sampler_and_cdf_eq5() {
+        let d = LinkDelay::local(0.4, 2.5, 20.0);
+        assert!(d.is_local());
+        // shift = 0.4*20 = 8, rate = 2.5/20 = 0.125
+        assert_eq!(d.cdf(8.0), 0.0);
+        let want = 1.0 - (-0.125f64 * 4.0).exp();
+        assert!((d.cdf(12.0) - want).abs() < 1e-12);
+        let emp = empirical_cdf(&d, 12.0, 100_000, 7);
+        assert!((emp - want).abs() < 0.01);
+    }
+
+    #[test]
+    fn sample_parts_sum_to_sample_distribution() {
+        let p = LinkParams::new(1.5, 0.3, 2.0);
+        let d = LinkDelay::new(&p, 6.0, 0.5, 0.5);
+        let mut rng = Rng::new(9);
+        let mut mean = 0.0;
+        let n = 100_000;
+        for _ in 0..n {
+            let (c, s, q) = d.sample_parts(&mut rng);
+            assert!(c >= 0.0 && q >= 0.0);
+            assert_eq!(s, d.shift());
+            mean += c + s + q;
+        }
+        mean /= n as f64;
+        assert!((mean - d.mean()).abs() / d.mean() < 0.02);
+    }
+}

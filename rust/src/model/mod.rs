@@ -1,0 +1,13 @@
+//! The paper's stochastic delay model (§II-B).
+//!
+//! * [`params`] — per-link `(γ, a, u)` parameters, resource-scaled expected
+//!   unit delays `θ_{m,n}` (eqs. 10 and 24).
+//! * [`dist`] — the delay distributions themselves: eqs. (1)–(5) CDFs,
+//!   densities where needed, means, and exact samplers used by both the
+//!   Monte-Carlo engine and the coordinator's delay injection.
+
+pub mod params;
+pub mod dist;
+
+pub use dist::{Exponential, LinkDelay, ShiftedExp};
+pub use params::{theta_dedicated, theta_fractional, theta_local, LinkParams};

@@ -1,0 +1,157 @@
+//! Per-link delay parameters and expected unit delays θ.
+//!
+//! A "link" is a (master m, node n) pair. For workers (n ≥ 1) a link has
+//! three parameters (§II-B):
+//!
+//! * `gamma` — rate of the exponential communication delay of ONE coded row
+//!   at full bandwidth (eq. 1);
+//! * `a`, `u` — shift and rate of the shifted-exponential computation delay
+//!   of ONE coded row at full compute (eq. 2).
+//!
+//! For local processing (n = 0) there is no communication: `gamma = ∞`.
+//!
+//! θ_{m,n} is the **expected total delay of a unit coded task** and is the
+//! only statistic the Markov-approximation algorithms need (Remark 1):
+//! dedicated (eq. 10) and fractional (eq. 24) variants below.
+
+/// Occasional multiplicative slowdown of the computation legs — models
+/// the heavy-tailed stragglers of real measured traces (e.g. t2.micro
+/// CPU-credit throttling on EC2) that a fitted shifted exponential cannot
+/// produce. The *planner* never sees this (it plans with the fitted
+/// parameters, like the paper); only the delay *sampler* applies it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Straggler {
+    /// Probability that a sub-task lands on a throttled period.
+    pub prob: f64,
+    /// Computation slowdown factor while throttled.
+    pub slowdown: f64,
+}
+
+/// Delay parameters of one (master, node) link. Times are milliseconds
+/// throughout (matching §V); rates are 1/ms.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkParams {
+    /// Communication rate per coded row at full bandwidth (1/ms);
+    /// `f64::INFINITY` for local processing (no communication).
+    pub gamma: f64,
+    /// Computation shift per coded row (ms).
+    pub a: f64,
+    /// Computation rate per coded row (1/ms).
+    pub u: f64,
+    /// Optional heavy-tail mixture applied when *sampling* (not planning).
+    pub straggler: Option<Straggler>,
+}
+
+impl LinkParams {
+    pub fn new(gamma: f64, a: f64, u: f64) -> Self {
+        assert!(gamma > 0.0, "gamma must be positive (got {gamma})");
+        assert!(a > 0.0, "a must be positive (got {a})");
+        assert!(u > 0.0, "u must be positive (got {u})");
+        Self {
+            gamma,
+            a,
+            u,
+            straggler: None,
+        }
+    }
+
+    /// Local-processing parameters (no communication leg).
+    pub fn local(a: f64, u: f64) -> Self {
+        Self {
+            gamma: f64::INFINITY,
+            a,
+            u,
+            straggler: None,
+        }
+    }
+
+    /// Attach a heavy-tail straggler mixture (sampling only).
+    pub fn with_straggler(mut self, prob: f64, slowdown: f64) -> Self {
+        assert!((0.0..=1.0).contains(&prob) && slowdown >= 1.0);
+        self.straggler = Some(Straggler { prob, slowdown });
+        self
+    }
+
+    pub fn is_local(&self) -> bool {
+        self.gamma.is_infinite()
+    }
+
+    /// Mean TOTAL delay of shipping + computing one coded row with full
+    /// resources: `1/γ + 1/u + a` (eq. 10); the 1/γ term vanishes for
+    /// local processing.
+    pub fn theta(&self) -> f64 {
+        theta_dedicated(self)
+    }
+}
+
+/// θ under dedicated assignment (k = b = 1), eq. (10).
+pub fn theta_dedicated(p: &LinkParams) -> f64 {
+    let comm = if p.is_local() { 0.0 } else { 1.0 / p.gamma };
+    comm + 1.0 / p.u + p.a
+}
+
+/// θ for the master's local processing, eq. (10) right.
+pub fn theta_local(a0: f64, u0: f64) -> f64 {
+    1.0 / u0 + a0
+}
+
+/// θ under fractional assignment with compute share `k` and bandwidth
+/// share `b`, eq. (24). Returns `∞` when either share is zero.
+pub fn theta_fractional(p: &LinkParams, k: f64, b: f64) -> f64 {
+    debug_assert!((0.0..=1.0).contains(&k) && (0.0..=1.0).contains(&b));
+    if k <= 0.0 || (!p.is_local() && b <= 0.0) {
+        return f64::INFINITY;
+    }
+    let comm = if p.is_local() { 0.0 } else { 1.0 / (b * p.gamma) };
+    comm + 1.0 / (k * p.u) + p.a / k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn theta_dedicated_matches_eq10() {
+        let p = LinkParams::new(2.0, 0.25, 4.0);
+        // 1/2 + 1/4 + 0.25 = 1.0
+        assert!((p.theta() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn theta_local_no_comm_term() {
+        let p = LinkParams::local(0.4, 2.5);
+        assert!((p.theta() - (0.4 + 0.4)).abs() < 1e-12);
+        assert!((theta_local(0.4, 2.5) - p.theta()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn theta_fractional_scales() {
+        let p = LinkParams::new(2.0, 0.2, 5.0);
+        let full = theta_fractional(&p, 1.0, 1.0);
+        assert!((full - p.theta()).abs() < 1e-12);
+        // Half of both resources: comm doubles, comp (rate + shift) doubles.
+        let half = theta_fractional(&p, 0.5, 0.5);
+        assert!((half - 2.0 * full).abs() < 1e-12);
+    }
+
+    #[test]
+    fn theta_fractional_zero_share_is_infinite() {
+        let p = LinkParams::new(2.0, 0.2, 5.0);
+        assert!(theta_fractional(&p, 0.0, 0.5).is_infinite());
+        assert!(theta_fractional(&p, 0.5, 0.0).is_infinite());
+    }
+
+    #[test]
+    fn theta_fractional_local_ignores_bandwidth() {
+        let p = LinkParams::local(0.4, 2.0);
+        // local: b is irrelevant (b_{m,0}=1 by assumption)
+        let t = theta_fractional(&p, 1.0, 0.0);
+        assert!((t - p.theta()).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "a must be positive")]
+    fn rejects_nonpositive_shift() {
+        LinkParams::new(1.0, 0.0, 1.0);
+    }
+}

@@ -1,0 +1,426 @@
+//! The planner: policy → (assignment, resource shares, loads) = [`Plan`].
+//!
+//! A [`Plan`] is the complete static decision the paper's algorithms
+//! produce — everything the Monte-Carlo engine ([`crate::sim`]) or the
+//! real coordinator ([`crate::coordinator`]) needs to run a deployment.
+
+use crate::alloc::{self, comp_dominant, markov, sca, EffLink};
+use crate::assign::{
+    dedicated_iter, dedicated_simple, fractional, optimal, uniform, Dedicated,
+    Fractional, ValueMatrix, ValueModel,
+};
+use crate::config::Scenario;
+use crate::model::params::theta_fractional;
+
+/// Assignment policy (§V legends).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// Benchmark 1: uniform workers, equal split, no coding, no local.
+    UncodedUniform,
+    /// Benchmark 2: uniform workers, Theorem-2 loads ([5]).
+    CodedUniform,
+    /// Algorithm 2 dedicated assignment.
+    DediSimple,
+    /// Algorithm 1 dedicated assignment.
+    DediIter,
+    /// Algorithm 4 fractional assignment (from an Algorithm-1 start).
+    Frac,
+    /// λ-sweep grid optimum (M = 2 only; §V benchmark 3).
+    FracOptimal,
+}
+
+/// Load-allocation method layered on the assignment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoadMethod {
+    /// Theorem 1 closed form on θ (the "Approx" of Figs. 2–3).
+    Markov,
+    /// Theorem 2 closed form on (a, u) — computation-dominant exact.
+    Exact,
+    /// Theorem 1 start + Algorithm 3 SCA enhancement.
+    Sca,
+}
+
+/// Full planning specification.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanSpec {
+    pub policy: Policy,
+    /// Node values driving the assignment search.
+    pub values: ValueModel,
+    pub loads: LoadMethod,
+}
+
+impl PlanSpec {
+    pub fn label(&self) -> String {
+        let base = match self.policy {
+            Policy::UncodedUniform => return "Uncoded".to_string(),
+            Policy::CodedUniform => return "Coded [5]".to_string(),
+            Policy::DediSimple => "Dedi, simple",
+            Policy::DediIter => "Dedi, iter",
+            Policy::Frac => "Frac",
+            Policy::FracOptimal => "Optimal",
+        };
+        match self.loads {
+            LoadMethod::Sca => format!("{base} + SCA"),
+            _ => base.to_string(),
+        }
+    }
+}
+
+/// One node's share of a master's plan.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanEntry {
+    /// Node id: 0 = the master's local processor, `n ≥ 1` = worker n.
+    pub node: usize,
+    /// Coded rows `l_{m,n}` (continuous; the coordinator rounds).
+    pub load: f64,
+    /// Compute share `k_{m,n}`.
+    pub k: f64,
+    /// Bandwidth share `b_{m,n}`.
+    pub b: f64,
+}
+
+/// Per-master plan.
+#[derive(Clone, Debug)]
+pub struct MasterPlan {
+    pub entries: Vec<PlanEntry>,
+    /// Planner's predicted completion delay `t_m*` (ms).
+    pub t_est: f64,
+    pub l_rows: f64,
+}
+
+impl MasterPlan {
+    pub fn total_load(&self) -> f64 {
+        self.entries.iter().map(|e| e.load).sum()
+    }
+}
+
+/// A complete deployment decision.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub label: String,
+    /// Uncoded plans need ALL nodes to finish (no redundancy).
+    pub uncoded: bool,
+    pub masters: Vec<MasterPlan>,
+}
+
+impl Plan {
+    /// Predicted system delay `max_m t_m*`.
+    pub fn t_est(&self) -> f64 {
+        self.masters.iter().map(|p| p.t_est).fold(0.0, f64::max)
+    }
+}
+
+/// Build a plan for `spec` on `s`.
+pub fn build(s: &Scenario, spec: &PlanSpec) -> Plan {
+    match spec.policy {
+        Policy::UncodedUniform => build_uncoded(s),
+        Policy::CodedUniform => {
+            let d = uniform::assign(s.n_masters(), s.n_workers());
+            build_dedicated(s, &d, LoadMethod::Exact, "Coded [5]".into())
+        }
+        Policy::DediSimple => {
+            let vm = ValueMatrix::new(s, spec.values);
+            let d = dedicated_simple::assign(&vm);
+            build_dedicated(s, &d, spec.loads, spec.label())
+        }
+        Policy::DediIter => {
+            let vm = ValueMatrix::new(s, spec.values);
+            let d = dedicated_iter::assign(&vm, &Default::default());
+            build_dedicated(s, &d, spec.loads, spec.label())
+        }
+        Policy::Frac => {
+            let vm = ValueMatrix::new(s, spec.values);
+            let d = dedicated_iter::assign(&vm, &Default::default());
+            let f = fractional::assign(s, &d, &Default::default());
+            build_fractional(s, &f, spec.loads, spec.label())
+        }
+        Policy::FracOptimal => {
+            let f = optimal::assign(s, &Default::default());
+            build_fractional(s, &f, spec.loads, spec.label())
+        }
+    }
+}
+
+fn build_uncoded(s: &Scenario) -> Plan {
+    let d = uniform::assign(s.n_masters(), s.n_workers());
+    let masters = (0..s.n_masters())
+        .map(|m| {
+            let ws = d.workers_of(m);
+            let share = s.l_rows(m) / ws.len() as f64;
+            let entries: Vec<PlanEntry> = ws
+                .iter()
+                .map(|&w| PlanEntry {
+                    node: w + 1,
+                    load: share,
+                    k: 1.0,
+                    b: 1.0,
+                })
+                .collect();
+            // Without redundancy the best estimate is the slowest mean.
+            let t_est = entries
+                .iter()
+                .map(|e| {
+                    share * EffLink::dedicated(&s.link(m, e.node)).theta()
+                })
+                .fold(0.0, f64::max);
+            MasterPlan {
+                entries,
+                t_est,
+                l_rows: s.l_rows(m),
+            }
+        })
+        .collect();
+    Plan {
+        label: "Uncoded".into(),
+        uncoded: true,
+        masters,
+    }
+}
+
+fn build_dedicated(
+    s: &Scenario,
+    d: &Dedicated,
+    loads: LoadMethod,
+    label: String,
+) -> Plan {
+    let masters = (0..s.n_masters())
+        .map(|m| {
+            // Node list: local first, then owned workers (node ids).
+            let mut nodes = vec![0usize];
+            nodes.extend(d.workers_of(m).iter().map(|&w| w + 1));
+            let alloc = allocate(s, m, &nodes, |_| (1.0, 1.0), loads);
+            MasterPlan {
+                entries: nodes
+                    .iter()
+                    .zip(&alloc.loads)
+                    .filter(|&(_, &l)| l > 0.0)
+                    .map(|(&node, &load)| PlanEntry {
+                        node,
+                        load,
+                        k: 1.0,
+                        b: 1.0,
+                    })
+                    .collect(),
+                t_est: alloc.t_star,
+                l_rows: s.l_rows(m),
+            }
+        })
+        .collect();
+    Plan {
+        label,
+        uncoded: false,
+        masters,
+    }
+}
+
+fn build_fractional(
+    s: &Scenario,
+    f: &Fractional,
+    loads: LoadMethod,
+    label: String,
+) -> Plan {
+    let masters = (0..s.n_masters())
+        .map(|m| {
+            let mut nodes = vec![0usize];
+            let mut shares = vec![(1.0, 1.0)];
+            for w in 0..s.n_workers() {
+                // A worker participates only with BOTH shares positive
+                // (k, b, l all-zero-or-all-nonzero, §IV-A).
+                if f.k[m][w] > 1e-12 && f.b[m][w] > 1e-12 {
+                    nodes.push(w + 1);
+                    shares.push((f.k[m][w], f.b[m][w]));
+                }
+            }
+            let alloc = allocate(s, m, &nodes, |i| shares[i], loads);
+            MasterPlan {
+                entries: nodes
+                    .iter()
+                    .enumerate()
+                    .zip(&alloc.loads)
+                    .filter(|&(_, &l)| l > 0.0)
+                    .map(|((i, &node), &load)| PlanEntry {
+                        node,
+                        load,
+                        k: shares[i].0,
+                        b: shares[i].1,
+                    })
+                    .collect(),
+                t_est: alloc.t_star,
+                l_rows: s.l_rows(m),
+            }
+        })
+        .collect();
+    Plan {
+        label,
+        uncoded: false,
+        masters,
+    }
+}
+
+/// Dispatch to the requested allocator over an explicit node list.
+/// `share(i)` returns `(k, b)` for position `i` in `nodes`.
+fn allocate(
+    s: &Scenario,
+    m: usize,
+    nodes: &[usize],
+    share: impl Fn(usize) -> (f64, f64),
+    loads: LoadMethod,
+) -> alloc::Allocation {
+    let l_rows = s.l_rows(m);
+    match loads {
+        LoadMethod::Markov => {
+            let thetas: Vec<f64> = nodes
+                .iter()
+                .enumerate()
+                .map(|(i, &n)| {
+                    let (k, b) = share(i);
+                    theta_fractional(&s.link(m, n), k, b)
+                })
+                .collect();
+            markov::allocate(&thetas, l_rows)
+        }
+        LoadMethod::Exact => {
+            let params: Vec<comp_dominant::CompParams> = nodes
+                .iter()
+                .enumerate()
+                .map(|(i, &n)| {
+                    let (k, _) = share(i);
+                    let p = s.link(m, n);
+                    comp_dominant::CompParams {
+                        a: p.a / k,
+                        u: k * p.u,
+                    }
+                })
+                .collect();
+            comp_dominant::allocate(&params, l_rows)
+        }
+        LoadMethod::Sca => {
+            let links: Vec<EffLink> = nodes
+                .iter()
+                .enumerate()
+                .map(|(i, &n)| {
+                    let (k, b) = share(i);
+                    EffLink::fractional(&s.link(m, n), k, b)
+                })
+                .collect();
+            sca::allocate(&links, l_rows, &Default::default())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CommModel, Scenario};
+
+    fn spec(policy: Policy, loads: LoadMethod) -> PlanSpec {
+        PlanSpec {
+            policy,
+            values: ValueModel::Markov,
+            loads,
+        }
+    }
+
+    #[test]
+    fn uncoded_loads_sum_to_l_exactly() {
+        let s = Scenario::small_scale(1, 2.0, CommModel::Stochastic);
+        let p = build(&s, &spec(Policy::UncodedUniform, LoadMethod::Markov));
+        assert!(p.uncoded);
+        for mp in &p.masters {
+            assert!((mp.total_load() - mp.l_rows).abs() < 1e-9);
+            // no local node in the uncoded benchmark
+            assert!(mp.entries.iter().all(|e| e.node >= 1));
+        }
+    }
+
+    #[test]
+    fn coded_plans_have_redundancy_and_local() {
+        let s = Scenario::small_scale(1, 2.0, CommModel::Stochastic);
+        for policy in [Policy::CodedUniform, Policy::DediSimple, Policy::DediIter] {
+            let p = build(&s, &spec(policy, LoadMethod::Markov));
+            assert!(!p.uncoded);
+            for mp in &p.masters {
+                assert!(
+                    mp.total_load() > mp.l_rows,
+                    "{policy:?}: no redundancy"
+                );
+                assert!(mp.entries.iter().any(|e| e.node == 0), "no local node");
+            }
+        }
+    }
+
+    #[test]
+    fn dedicated_plans_partition_workers() {
+        let s = Scenario::large_scale(2, 2.0, CommModel::Stochastic);
+        let p = build(&s, &spec(Policy::DediIter, LoadMethod::Markov));
+        let mut seen = std::collections::HashSet::new();
+        for mp in &p.masters {
+            for e in &mp.entries {
+                if e.node >= 1 {
+                    assert!(seen.insert(e.node), "worker {} serves two masters", e.node);
+                    assert_eq!(e.k, 1.0);
+                    assert_eq!(e.b, 1.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fractional_plan_respects_resource_constraints() {
+        let s = Scenario::small_scale(3, 2.0, CommModel::Stochastic);
+        let p = build(&s, &spec(Policy::Frac, LoadMethod::Markov));
+        let mut ksum = vec![0.0; s.n_workers() + 1];
+        let mut bsum = vec![0.0; s.n_workers() + 1];
+        for mp in &p.masters {
+            for e in &mp.entries {
+                if e.node >= 1 {
+                    ksum[e.node] += e.k;
+                    bsum[e.node] += e.b;
+                }
+            }
+        }
+        for n in 1..=s.n_workers() {
+            assert!(ksum[n] <= 1.0 + 1e-9, "Σk at worker {n} = {}", ksum[n]);
+            assert!(bsum[n] <= 1.0 + 1e-9, "Σb at worker {n} = {}", bsum[n]);
+        }
+    }
+
+    #[test]
+    fn sca_improves_t_est() {
+        let s = Scenario::small_scale(4, 2.0, CommModel::Stochastic);
+        let base = build(&s, &spec(Policy::DediIter, LoadMethod::Markov));
+        let enhanced = build(&s, &spec(Policy::DediIter, LoadMethod::Sca));
+        assert!(
+            enhanced.t_est() < base.t_est(),
+            "SCA {} ≥ Markov {}",
+            enhanced.t_est(),
+            base.t_est()
+        );
+    }
+
+    #[test]
+    fn exact_loads_on_comp_dominant() {
+        let s = Scenario::ec2(8, 2, false);
+        let p = build(
+            &s,
+            &PlanSpec {
+                policy: Policy::DediIter,
+                values: ValueModel::Exact,
+                loads: LoadMethod::Exact,
+            },
+        );
+        for mp in &p.masters {
+            let overhead = mp.total_load() / mp.l_rows;
+            assert!(overhead > 1.0 && overhead < 2.0, "overhead {overhead}");
+        }
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(
+            spec(Policy::DediIter, LoadMethod::Sca).label(),
+            "Dedi, iter + SCA"
+        );
+        assert_eq!(spec(Policy::UncodedUniform, LoadMethod::Markov).label(), "Uncoded");
+    }
+}

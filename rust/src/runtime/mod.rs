@@ -1,0 +1,26 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them on the CPU PJRT client — the L3↔L2 bridge.
+//!
+//! * [`pjrt`] — single-threaded owner of the `xla` client: manifest,
+//!   executable cache, bucket-padding execute for mat-vec and encode.
+//! * [`service`] — the `xla` wrapper types hold raw pointers and are not
+//!   `Send`/`Sync`, so [`pjrt::Runtime`] lives on one dedicated thread;
+//!   [`service::RuntimeHandle`] is the cloneable, thread-safe façade the
+//!   coordinator's workers call into.
+//!
+//! Interchange contract (see `/opt/xla-example/README.md`): HLO **text** +
+//! `manifest.json`, compiled once per artifact (cached), executed with
+//! f32 literals. Python never runs here.
+
+pub mod pjrt;
+pub mod service;
+
+pub use pjrt::{ArtifactKind, ArtifactSpec, Manifest, Runtime};
+pub use service::{RuntimeHandle, RuntimeService};
+
+/// Default artifact directory: `$CODED_COOP_ARTIFACTS` or
+/// `<repo>/artifacts`.
+pub fn default_artifact_dir() -> String {
+    std::env::var("CODED_COOP_ARTIFACTS")
+        .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")))
+}

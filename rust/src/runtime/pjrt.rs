@@ -1,0 +1,444 @@
+//! Single-threaded PJRT runtime: manifest, executable cache, padded
+//! execution of the mat-vec / encode artifacts.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::util::json::{self, Json};
+
+/// Artifact role.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Worker compute `y = Ã_{m,n} x` (Pallas kernel).
+    Matvec,
+    /// XLA-native ablation twin of `Matvec`.
+    MatvecNative,
+    /// Master-side `Ã = G A` (Pallas kernel).
+    Encode,
+}
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: String,
+    pub kind: ArtifactKind,
+    /// Matvec: row bucket; Encode: original-row bucket.
+    pub rows: usize,
+    pub cols: usize,
+    /// Matvec only.
+    pub batch: usize,
+    /// Encode only.
+    pub coded_rows: usize,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: String,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(format!("{dir}/manifest.json"))
+            .map_err(|e| {
+                anyhow::anyhow!(
+                    "cannot read {dir}/manifest.json ({e}); run `make artifacts` first"
+                )
+            })?;
+        let j = json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'artifacts'"))?;
+        let get_usize = |e: &Json, k: &str| e.get(k).and_then(Json::as_usize).unwrap_or(0);
+        let artifacts = arts
+            .iter()
+            .map(|e| {
+                let kind = match e.get("kind").and_then(Json::as_str) {
+                    Some("matvec") => ArtifactKind::Matvec,
+                    Some("matvec_native") => ArtifactKind::MatvecNative,
+                    Some("encode") => ArtifactKind::Encode,
+                    other => anyhow::bail!("unknown artifact kind {other:?}"),
+                };
+                Ok(ArtifactSpec {
+                    name: e
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow::anyhow!("artifact missing name"))?
+                        .to_string(),
+                    path: e
+                        .get("path")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow::anyhow!("artifact missing path"))?
+                        .to_string(),
+                    kind,
+                    rows: get_usize(e, "rows"),
+                    cols: get_usize(e, "cols"),
+                    batch: get_usize(e, "batch"),
+                    coded_rows: get_usize(e, "coded_rows"),
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        anyhow::ensure!(!artifacts.is_empty(), "manifest has no artifacts");
+        Ok(Self {
+            dir: dir.to_string(),
+            artifacts,
+        })
+    }
+
+    /// Smallest matvec bucket with `rows ≥ r`, `cols ≥ c`, `batch == b`.
+    pub fn matvec_bucket(&self, r: usize, c: usize, b: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == ArtifactKind::Matvec && a.rows >= r && a.cols >= c && a.batch == b
+            })
+            .min_by_key(|a| (a.rows, a.cols))
+    }
+
+    /// Smallest encode bucket covering `(coded, rows, cols)`.
+    pub fn encode_bucket(
+        &self,
+        coded: usize,
+        rows: usize,
+        cols: usize,
+    ) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == ArtifactKind::Encode
+                    && a.coded_rows >= coded
+                    && a.rows >= rows
+                    && a.cols >= cols
+            })
+            .min_by_key(|a| (a.coded_rows, a.rows, a.cols))
+    }
+}
+
+/// The runtime proper. NOT `Send`: construct and use on one thread (see
+/// [`super::service`] for the multi-threaded façade).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Compiles performed (for cache-behavior tests/metrics).
+    pub compiles: usize,
+    /// Executions performed.
+    pub executions: usize,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: &str) -> anyhow::Result<Self> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu()?,
+            manifest: Manifest::load(artifact_dir)?,
+            cache: HashMap::new(),
+            compiles: 0,
+            executions: 0,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn executable(&mut self, name: &str) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let spec = self
+                .manifest
+                .artifacts
+                .iter()
+                .find(|a| a.name == name)
+                .ok_or_else(|| anyhow::anyhow!("unknown artifact '{name}'"))?;
+            let path = format!("{}/{}", self.manifest.dir, spec.path);
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.compiles += 1;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute a 2-input artifact and return the flat f32 output.
+    fn exec2(
+        &mut self,
+        name: &str,
+        a: &[f32],
+        a_dims: [usize; 2],
+        b: &[f32],
+        b_dims: [usize; 2],
+    ) -> anyhow::Result<Vec<f32>> {
+        let la = xla::Literal::vec1(a).reshape(&[a_dims[0] as i64, a_dims[1] as i64])?;
+        let lb = xla::Literal::vec1(b).reshape(&[b_dims[0] as i64, b_dims[1] as i64])?;
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(&[la, lb])?[0][0].to_literal_sync()?;
+        self.executions += 1;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// `y = A·x` through the Pallas mat-vec artifact.
+    ///
+    /// `a`: row-major `(rows × cols)`; `x`: `(cols × batch)`. Ragged
+    /// shapes are zero-padded up to the chosen bucket (zero rows/cols do
+    /// not change the products).
+    pub fn matvec(
+        &mut self,
+        a: &[f32],
+        rows: usize,
+        cols: usize,
+        x: &[f32],
+        batch: usize,
+    ) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(a.len() == rows * cols, "a has wrong length");
+        anyhow::ensure!(x.len() == cols * batch, "x has wrong length");
+        let spec = self
+            .manifest
+            .matvec_bucket(rows, cols, batch)
+            .ok_or_else(|| {
+                anyhow::anyhow!("no matvec bucket covers ({rows}, {cols}, b={batch})")
+            })?;
+        let (br, bc) = (spec.rows, spec.cols);
+        let name = spec.name.clone();
+        let a_pad = pad2(a, rows, cols, br, bc);
+        let x_pad = pad2(x, cols, batch, bc, batch);
+        let out = self.exec2(&name, &a_pad, [br, bc], &x_pad, [bc, batch])?;
+        // Output (br × batch) row-major: the first `rows` rows are ours.
+        Ok(out[..rows * batch].to_vec())
+    }
+
+    /// Ablation twin: same mat-vec through the XLA-native artifact.
+    pub fn matvec_native(
+        &mut self,
+        a: &[f32],
+        rows: usize,
+        cols: usize,
+        x: &[f32],
+        batch: usize,
+    ) -> anyhow::Result<Vec<f32>> {
+        let spec = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|s| {
+                s.kind == ArtifactKind::MatvecNative
+                    && s.rows >= rows
+                    && s.cols >= cols
+                    && s.batch == batch
+            })
+            .ok_or_else(|| anyhow::anyhow!("no native matvec bucket"))?;
+        let (br, bc) = (spec.rows, spec.cols);
+        let name = spec.name.clone();
+        let a_pad = pad2(a, rows, cols, br, bc);
+        let x_pad = pad2(x, cols, batch, bc, batch);
+        let out = self.exec2(&name, &a_pad, [br, bc], &x_pad, [bc, batch])?;
+        Ok(out[..rows * batch].to_vec())
+    }
+
+    /// `Ã = G·A` through the Pallas encode artifact.
+    pub fn encode(
+        &mut self,
+        g: &[f32],
+        coded: usize,
+        rows: usize,
+        a: &[f32],
+        cols: usize,
+    ) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(g.len() == coded * rows, "g has wrong length");
+        anyhow::ensure!(a.len() == rows * cols, "a has wrong length");
+        let spec = self
+            .manifest
+            .encode_bucket(coded, rows, cols)
+            .ok_or_else(|| {
+                anyhow::anyhow!("no encode bucket covers ({coded}, {rows}, {cols})")
+            })?;
+        let (bm, bk, bc) = (spec.coded_rows, spec.rows, spec.cols);
+        let name = spec.name.clone();
+        let g_pad = pad2(g, coded, rows, bm, bk);
+        let a_pad = pad2(a, rows, cols, bk, bc);
+        let out = self.exec2(&name, &g_pad, [bm, bk], &a_pad, [bk, bc])?;
+        // Slice the top-left (coded × cols) block out of (bm × bc).
+        let mut res = Vec::with_capacity(coded * cols);
+        for r in 0..coded {
+            res.extend_from_slice(&out[r * bc..r * bc + cols]);
+        }
+        Ok(res)
+    }
+
+    /// Measure `n` repeated mat-vec executions (per-call wallclock, ms) —
+    /// the real-measurement path for the Fig. 7 pipeline.
+    pub fn measure_matvec(
+        &mut self,
+        rows: usize,
+        cols: usize,
+        n: usize,
+        native: bool,
+    ) -> anyhow::Result<Vec<f64>> {
+        let a = vec![1.0f32; rows * cols];
+        let x = vec![1.0f32; cols];
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let t0 = Instant::now();
+            if native {
+                self.matvec_native(&a, rows, cols, &x, 1)?;
+            } else {
+                self.matvec(&a, rows, cols, &x, 1)?;
+            }
+            out.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        Ok(out)
+    }
+}
+
+/// Zero-pad a row-major `(r × c)` buffer into `(pr × pc)`.
+fn pad2(src: &[f32], r: usize, c: usize, pr: usize, pc: usize) -> Vec<f32> {
+    debug_assert!(pr >= r && pc >= c);
+    if pr == r && pc == c {
+        return src.to_vec();
+    }
+    let mut out = vec![0.0f32; pr * pc];
+    for i in 0..r {
+        out[i * pc..i * pc + c].copy_from_slice(&src[i * c..(i + 1) * c]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn runtime() -> Runtime {
+        Runtime::new(&crate::runtime::default_artifact_dir())
+            .expect("artifacts must exist — run `make artifacts`")
+    }
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn naive_matmul(a: &[f32], r: usize, k: usize, b: &[f32], c: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; r * c];
+        for i in 0..r {
+            for kk in 0..k {
+                let av = a[i * k + kk];
+                for j in 0..c {
+                    out[i * c + j] += av * b[kk * c + j];
+                }
+            }
+        }
+        out
+    }
+
+    fn assert_close(got: &[f32], want: &[f32], tol: f32) {
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            assert!(
+                (g - w).abs() <= tol * (1.0 + w.abs()),
+                "idx {i}: {g} vs {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn manifest_loads_and_has_buckets() {
+        let m = Manifest::load(&crate::runtime::default_artifact_dir()).unwrap();
+        assert!(m.matvec_bucket(100, 256, 1).is_some());
+        assert!(m.matvec_bucket(1000, 512, 1).is_some());
+        assert!(m.encode_bucket(2000, 1000, 512).is_some());
+        assert!(m.matvec_bucket(100_000, 512, 1).is_none());
+    }
+
+    #[test]
+    fn matvec_exact_bucket_matches_naive() {
+        let mut rt = runtime();
+        let mut rng = Rng::new(1);
+        let (r, c) = (128, 256);
+        let a = rand_vec(&mut rng, r * c);
+        let x = rand_vec(&mut rng, c);
+        let got = rt.matvec(&a, r, c, &x, 1).unwrap();
+        let want = naive_matmul(&a, r, c, &x, 1);
+        assert_close(&got, &want, 1e-4);
+    }
+
+    #[test]
+    fn matvec_ragged_shape_padded() {
+        let mut rt = runtime();
+        let mut rng = Rng::new(2);
+        let (r, c) = (100, 200); // not a bucket: pads to (128, 256)
+        let a = rand_vec(&mut rng, r * c);
+        let x = rand_vec(&mut rng, c);
+        let got = rt.matvec(&a, r, c, &x, 1).unwrap();
+        let want = naive_matmul(&a, r, c, &x, 1);
+        assert_close(&got, &want, 1e-4);
+    }
+
+    #[test]
+    fn matvec_batched() {
+        let mut rt = runtime();
+        let mut rng = Rng::new(3);
+        let (r, c, b) = (200, 500, 8);
+        let a = rand_vec(&mut rng, r * c);
+        let x = rand_vec(&mut rng, c * b);
+        let got = rt.matvec(&a, r, c, &x, b).unwrap();
+        let want = naive_matmul(&a, r, c, &x, b);
+        assert_close(&got, &want, 1e-4);
+    }
+
+    #[test]
+    fn encode_matches_naive() {
+        let mut rt = runtime();
+        let mut rng = Rng::new(4);
+        let (coded, rows, cols) = (200, 100, 250);
+        let g = rand_vec(&mut rng, coded * rows);
+        let a = rand_vec(&mut rng, rows * cols);
+        let got = rt.encode(&g, coded, rows, &a, cols).unwrap();
+        let want = naive_matmul(&g, coded, rows, &a, cols);
+        assert_close(&got, &want, 1e-4);
+    }
+
+    #[test]
+    fn pallas_and_native_twins_agree() {
+        let mut rt = runtime();
+        let mut rng = Rng::new(5);
+        let (r, c) = (512, 512);
+        let a = rand_vec(&mut rng, r * c);
+        let x = rand_vec(&mut rng, c);
+        let p = rt.matvec(&a, r, c, &x, 1).unwrap();
+        let n = rt.matvec_native(&a, r, c, &x, 1).unwrap();
+        assert_close(&p, &n, 1e-4);
+    }
+
+    #[test]
+    fn executable_cache_compiles_once() {
+        let mut rt = runtime();
+        let a = vec![1.0f32; 128 * 256];
+        let x = vec![1.0f32; 256];
+        rt.matvec(&a, 128, 256, &x, 1).unwrap();
+        rt.matvec(&a, 128, 256, &x, 1).unwrap();
+        rt.matvec(&a, 128, 256, &x, 1).unwrap();
+        assert_eq!(rt.compiles, 1, "same bucket must compile once");
+        assert_eq!(rt.executions, 3);
+    }
+
+    #[test]
+    fn measure_returns_positive_timings() {
+        let mut rt = runtime();
+        let ts = rt.measure_matvec(128, 256, 5, false).unwrap();
+        assert_eq!(ts.len(), 5);
+        assert!(ts.iter().all(|&t| t > 0.0));
+    }
+
+    #[test]
+    fn pad2_behavior() {
+        let src = [1.0, 2.0, 3.0, 4.0]; // 2x2
+        let out = pad2(&src, 2, 2, 3, 4);
+        assert_eq!(
+            out,
+            vec![1.0, 2.0, 0.0, 0.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]
+        );
+    }
+}

@@ -1,0 +1,247 @@
+//! Thread-safe façade over the single-threaded PJRT [`Runtime`].
+//!
+//! The `xla` wrapper types hold raw pointers and are neither `Send` nor
+//! `Sync`, so the runtime is constructed and driven on one dedicated
+//! service thread; [`RuntimeHandle`] (cheaply cloneable) marshals requests
+//! over an mpsc channel and blocks on a reply channel. The coordinator's
+//! worker threads each hold a handle.
+
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+use super::pjrt::Runtime;
+
+enum Request {
+    Matvec {
+        a: Vec<f32>,
+        rows: usize,
+        cols: usize,
+        x: Vec<f32>,
+        batch: usize,
+        reply: Sender<anyhow::Result<Vec<f32>>>,
+    },
+    Encode {
+        g: Vec<f32>,
+        coded: usize,
+        rows: usize,
+        a: Vec<f32>,
+        cols: usize,
+        reply: Sender<anyhow::Result<Vec<f32>>>,
+    },
+    Measure {
+        rows: usize,
+        cols: usize,
+        n: usize,
+        native: bool,
+        reply: Sender<anyhow::Result<Vec<f64>>>,
+    },
+    Stats {
+        reply: Sender<(usize, usize)>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, `Send` handle to the runtime service.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: Sender<Request>,
+}
+
+impl RuntimeHandle {
+    pub fn matvec(
+        &self,
+        a: Vec<f32>,
+        rows: usize,
+        cols: usize,
+        x: Vec<f32>,
+        batch: usize,
+    ) -> anyhow::Result<Vec<f32>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Matvec {
+                a,
+                rows,
+                cols,
+                x,
+                batch,
+                reply,
+            })
+            .map_err(|_| anyhow::anyhow!("runtime service is down"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("runtime service dropped reply"))?
+    }
+
+    pub fn encode(
+        &self,
+        g: Vec<f32>,
+        coded: usize,
+        rows: usize,
+        a: Vec<f32>,
+        cols: usize,
+    ) -> anyhow::Result<Vec<f32>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Encode {
+                g,
+                coded,
+                rows,
+                a,
+                cols,
+                reply,
+            })
+            .map_err(|_| anyhow::anyhow!("runtime service is down"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("runtime service dropped reply"))?
+    }
+
+    pub fn measure_matvec(
+        &self,
+        rows: usize,
+        cols: usize,
+        n: usize,
+        native: bool,
+    ) -> anyhow::Result<Vec<f64>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Measure {
+                rows,
+                cols,
+                n,
+                native,
+                reply,
+            })
+            .map_err(|_| anyhow::anyhow!("runtime service is down"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("runtime service dropped reply"))?
+    }
+
+    /// `(compiles, executions)` so far.
+    pub fn stats(&self) -> anyhow::Result<(usize, usize)> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Stats { reply })
+            .map_err(|_| anyhow::anyhow!("runtime service is down"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("runtime service dropped reply"))
+    }
+}
+
+/// Owns the service thread; dropping (or calling [`shutdown`]) stops it.
+pub struct RuntimeService {
+    tx: Sender<Request>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl RuntimeService {
+    /// Start the service. The runtime (and PJRT client) is constructed on
+    /// the service thread itself, so no `Send` bound is needed.
+    pub fn start(artifact_dir: &str) -> anyhow::Result<Self> {
+        let dir = artifact_dir.to_string();
+        let (tx, rx) = channel::<Request>();
+        let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-runtime".into())
+            .spawn(move || {
+                let mut rt = match Runtime::new(&dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Matvec {
+                            a,
+                            rows,
+                            cols,
+                            x,
+                            batch,
+                            reply,
+                        } => {
+                            let _ = reply.send(rt.matvec(&a, rows, cols, &x, batch));
+                        }
+                        Request::Encode {
+                            g,
+                            coded,
+                            rows,
+                            a,
+                            cols,
+                            reply,
+                        } => {
+                            let _ = reply.send(rt.encode(&g, coded, rows, &a, cols));
+                        }
+                        Request::Measure {
+                            rows,
+                            cols,
+                            n,
+                            native,
+                            reply,
+                        } => {
+                            let _ = reply.send(rt.measure_matvec(rows, cols, n, native));
+                        }
+                        Request::Stats { reply } => {
+                            let _ = reply.send((rt.compiles, rt.executions));
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("runtime thread died during startup"))??;
+        Ok(Self {
+            tx,
+            join: Some(join),
+        })
+    }
+
+    pub fn handle(&self) -> RuntimeHandle {
+        RuntimeHandle {
+            tx: self.tx.clone(),
+        }
+    }
+}
+
+impl Drop for RuntimeService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn service_roundtrip_multithreaded() {
+        let svc = RuntimeService::start(&crate::runtime::default_artifact_dir())
+            .expect("artifacts must exist — run `make artifacts`");
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let h = svc.handle();
+                std::thread::spawn(move || {
+                    let a = vec![(i + 1) as f32; 8 * 256];
+                    let x = vec![1.0f32; 256];
+                    let y = h.matvec(a, 8, 256, x, 1).unwrap();
+                    assert_eq!(y.len(), 8);
+                    // each row = 256 * (i+1)
+                    assert!((y[0] - 256.0 * (i + 1) as f32).abs() < 1e-2);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let (compiles, execs) = svc.handle().stats().unwrap();
+        assert_eq!(compiles, 1, "one bucket, one compile");
+        assert_eq!(execs, 4);
+    }
+
+    #[test]
+    fn bad_artifact_dir_fails_cleanly() {
+        assert!(RuntimeService::start("/nonexistent/artifacts").is_err());
+    }
+}

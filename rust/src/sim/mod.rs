@@ -1,0 +1,12 @@
+//! Monte-Carlo completion-delay engine (§V's evaluation methodology).
+//!
+//! The paper evaluates every plan by sampling the per-link delays
+//! `T_{m,n}` and computing each master's completion time — the first
+//! instant the accumulated coded rows reach `L_m` (or, uncoded, the
+//! slowest sub-task). [`engine`] runs trials thread-parallel and returns
+//! mean/CDF statistics for each master and for the system maximum.
+
+pub mod engine;
+pub mod multimsg;
+
+pub use engine::{run, McOptions, McResults};

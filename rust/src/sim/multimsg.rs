@@ -1,0 +1,245 @@
+//! Multi-message communication extension (§VI future work; cf. [19], [20]).
+//!
+//! In the base model a worker's entire block `l_{m,n}` arrives at once
+//! (eq. 3); with multi-message communication the worker streams its block
+//! back in `c` chunks, so a straggler that finishes only part of its
+//! block still contributes rows. Per [20] each extra message carries a
+//! transmission overhead, giving the communication–computation trade-off
+//! this module quantifies (ablation `multimsg`).
+//!
+//! Chunk model (consistent with eqs. 1–2):
+//! * the input block is shipped ONCE: comm leg `Exp(bγ/l)` as before;
+//! * computation proceeds chunk by chunk: chunk `j` of size `l/c`
+//!   completes at `comm + Σ_{i≤j} [a·(l/c)/k + Exp(k·u/(l/c))]`
+//!   (the sum of per-chunk shifted exponentials equals the full-block
+//!   delay in distribution — chunking adds no compute penalty);
+//! * each return message adds a fixed `overhead_ms` (the [20] cost), so
+//!   chunk `j` is *available* at `t_j + j·overhead_ms`.
+
+use crate::config::Scenario;
+use crate::plan::Plan;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+/// Multi-message options.
+#[derive(Clone, Copy, Debug)]
+pub struct MultiMsgOptions {
+    /// Chunks per worker block (1 = the paper's base model).
+    pub chunks: usize,
+    /// Per-message transmission overhead (ms), the [20] cost.
+    pub overhead_ms: f64,
+    pub trials: usize,
+    pub seed: u64,
+}
+
+impl Default for MultiMsgOptions {
+    fn default() -> Self {
+        Self {
+            chunks: 4,
+            overhead_ms: 0.0,
+            trials: 20_000,
+            seed: 0xC4_15,
+        }
+    }
+}
+
+struct ChunkedLink {
+    comm_rate: f64, // ∞ ⇒ no comm leg
+    chunk_shift: f64,
+    chunk_rate: f64,
+    chunk_load: f64,
+    chunks: usize,
+}
+
+struct MasterSim {
+    links: Vec<ChunkedLink>,
+    l_rows: f64,
+}
+
+fn compile(s: &Scenario, plan: &Plan, chunks: usize) -> Vec<MasterSim> {
+    assert!(chunks >= 1);
+    plan.masters
+        .iter()
+        .enumerate()
+        .map(|(m, mp)| MasterSim {
+            links: mp
+                .entries
+                .iter()
+                .map(|e| {
+                    let p = s.link(m, e.node);
+                    let lc = e.load / chunks as f64;
+                    ChunkedLink {
+                        comm_rate: if p.is_local() {
+                            f64::INFINITY
+                        } else {
+                            e.b * p.gamma / e.load
+                        },
+                        chunk_shift: p.a * lc / e.k,
+                        chunk_rate: e.k * p.u / lc,
+                        chunk_load: lc,
+                        chunks,
+                    }
+                })
+                .collect(),
+            l_rows: mp.l_rows,
+        })
+        .collect()
+}
+
+impl MasterSim {
+    fn sample(
+        &self,
+        rng: &mut Rng,
+        overhead: f64,
+        events: &mut Vec<(f64, f64)>,
+    ) -> f64 {
+        events.clear();
+        for link in &self.links {
+            let comm = if link.comm_rate.is_infinite() {
+                0.0
+            } else {
+                rng.exp(link.comm_rate)
+            };
+            let mut t = comm;
+            for j in 1..=link.chunks {
+                t += link.chunk_shift + rng.exp(link.chunk_rate);
+                events.push((t + j as f64 * overhead, link.chunk_load));
+            }
+        }
+        events.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut acc = 0.0;
+        for &(t, l) in events.iter() {
+            acc += l;
+            if acc >= self.l_rows {
+                return t;
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+/// Per-master + system mean completion delay under chunked returns.
+pub fn run(s: &Scenario, plan: &Plan, opts: &MultiMsgOptions) -> Summary {
+    let sims = compile(s, plan, opts.chunks);
+    let mut rng = Rng::new(opts.seed);
+    let mut system = Summary::new();
+    let mut events = Vec::new();
+    for _ in 0..opts.trials {
+        let mut sys: f64 = 0.0;
+        for sim in &sims {
+            sys = sys.max(sim.sample(&mut rng, opts.overhead_ms, &mut events));
+        }
+        system.push(sys);
+    }
+    system
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assign::ValueModel;
+    use crate::config::{CommModel, Scenario};
+    use crate::plan::{build, LoadMethod, PlanSpec, Policy};
+    use crate::sim::{self, McOptions};
+
+    fn setup() -> (Scenario, Plan) {
+        let s = Scenario::small_scale(1, 2.0, CommModel::Stochastic);
+        let p = build(
+            &s,
+            &PlanSpec {
+                policy: Policy::DediIter,
+                values: ValueModel::Markov,
+                loads: LoadMethod::Markov,
+            },
+        );
+        (s, p)
+    }
+
+    #[test]
+    fn single_chunk_matches_base_engine() {
+        // c = 1 with zero overhead IS the base model; means must agree
+        // statistically with the main MC engine.
+        let (s, p) = setup();
+        let multi = run(
+            &s,
+            &p,
+            &MultiMsgOptions {
+                chunks: 1,
+                overhead_ms: 0.0,
+                trials: 30_000,
+                seed: 5,
+            },
+        );
+        let base = sim::run(
+            &s,
+            &p,
+            &McOptions {
+                trials: 30_000,
+                seed: 6,
+                keep_samples: false,
+                threads: 1,
+            },
+        );
+        let (a, b) = (multi.mean(), base.system.mean());
+        assert!((a - b).abs() / b < 0.03, "{a} vs {b}");
+    }
+
+    #[test]
+    fn more_chunks_reduce_delay_without_overhead() {
+        // Partial results from stragglers can only help (free chunking).
+        let (s, p) = setup();
+        let opts = |c| MultiMsgOptions {
+            chunks: c,
+            overhead_ms: 0.0,
+            trials: 20_000,
+            seed: 7,
+        };
+        let c1 = run(&s, &p, &opts(1)).mean();
+        let c4 = run(&s, &p, &opts(4)).mean();
+        let c16 = run(&s, &p, &opts(16)).mean();
+        assert!(c4 < c1, "c=4 {c4} ≥ c=1 {c1}");
+        assert!(c16 <= c4 * 1.01, "c=16 {c16} ≫ c=4 {c4}");
+    }
+
+    #[test]
+    fn overhead_creates_tradeoff() {
+        // With a heavy per-message cost, many chunks must eventually lose
+        // — the [20] communication–computation trade-off.
+        let (s, p) = setup();
+        let opts = |c, o| MultiMsgOptions {
+            chunks: c,
+            overhead_ms: o,
+            trials: 15_000,
+            seed: 8,
+        };
+        let heavy = 500.0; // ms per message, deliberately punishing
+        let c1 = run(&s, &p, &opts(1, heavy)).mean();
+        let c16 = run(&s, &p, &opts(16, heavy)).mean();
+        assert!(c16 > c1, "chunking should lose under heavy overhead");
+    }
+
+    #[test]
+    fn chunked_total_compute_is_distribution_preserving() {
+        // Mean completion with c chunks at a SINGLE node ≈ mean of the
+        // base model plus nothing: Σ of c shifted-exps has the same mean
+        // as the single-block delay.
+        use crate::model::params::LinkParams;
+        let p = LinkParams::new(1e12, 0.2, 5.0);
+        let mut rng = Rng::new(9);
+        let l = 100.0;
+        let c = 8usize;
+        let lc = l / c as f64;
+        let mut mean_sum = 0.0;
+        let n = 50_000;
+        for _ in 0..n {
+            let mut t = 0.0;
+            for _ in 0..c {
+                t += p.a * lc + rng.exp(p.u / lc);
+            }
+            mean_sum += t;
+        }
+        let want = p.a * l + l / p.u; // E of single block
+        let got = mean_sum / n as f64;
+        assert!((got - want).abs() / want < 0.01, "{got} vs {want}");
+    }
+}

@@ -1,0 +1,133 @@
+//! Shifted-exponential fitting (Fig. 7's "fit the data" step).
+//!
+//! MLE for `X = a + Exp(u)` from i.i.d. samples:
+//! `â = min(x_i)` (boundary MLE), `û = 1/(mean(x_i) − â)`.
+//! `E[min] = a + 1/(n·u)` — the raw min over-estimates the shift; we apply
+//! the standard unbiasing `â = min − (mean − min)/(n−1)` (since
+//! `E[mean − min] = (n−1)/(n·u)`), which matters only for small traces but
+//! keeps the estimator consistent.
+
+use crate::model::dist::ShiftedExp;
+
+/// A fitted shifted exponential with fit diagnostics.
+#[derive(Clone, Copy, Debug)]
+pub struct FittedShiftedExp {
+    pub a: f64,
+    pub u: f64,
+    /// Kolmogorov–Smirnov statistic of the fit (sup |F̂ − F|).
+    pub ks: f64,
+    pub n: usize,
+}
+
+impl FittedShiftedExp {
+    pub fn dist(&self) -> ShiftedExp {
+        ShiftedExp::new(self.a, self.u)
+    }
+}
+
+/// Fit a shifted exponential to a delay trace. Panics on fewer than two
+/// samples or a degenerate (constant) trace.
+pub fn fit_shifted_exp(samples: &[f64]) -> FittedShiftedExp {
+    assert!(samples.len() >= 2, "need ≥2 samples to fit");
+    let n = samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mean = samples.iter().sum::<f64>() / n;
+    assert!(
+        mean > min,
+        "degenerate trace: all samples equal ({min})"
+    );
+    // Bias-corrected shift and the matching rate.
+    let a = min - (mean - min) / (n - 1.0);
+    let u = 1.0 / (mean - a);
+
+    // KS statistic against the fitted CDF.
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let fitted = ShiftedExp::new(a.max(0.0), u);
+    let mut ks = 0.0f64;
+    for (i, &x) in sorted.iter().enumerate() {
+        let f = fitted.cdf(x);
+        let hi = (i + 1) as f64 / n;
+        let lo = i as f64 / n;
+        ks = ks.max((f - lo).abs()).max((hi - f).abs());
+    }
+
+    FittedShiftedExp {
+        a,
+        u,
+        ks,
+        n: samples.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traces::ec2::{C5_LARGE, T2_MICRO};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn recovers_t2_micro_parameters() {
+        let mut rng = Rng::new(42);
+        let trace = T2_MICRO.sample_trace(200_000, &mut rng);
+        let fit = fit_shifted_exp(&trace);
+        assert!(
+            (fit.a - T2_MICRO.a).abs() / T2_MICRO.a < 0.01,
+            "a: {} vs {}",
+            fit.a,
+            T2_MICRO.a
+        );
+        assert!(
+            (fit.u - T2_MICRO.u).abs() / T2_MICRO.u < 0.02,
+            "u: {} vs {}",
+            fit.u,
+            T2_MICRO.u
+        );
+        // A correct parametric fit has small KS distance.
+        assert!(fit.ks < 0.01, "ks={}", fit.ks);
+    }
+
+    #[test]
+    fn recovers_c5_large_parameters() {
+        let mut rng = Rng::new(43);
+        let trace = C5_LARGE.sample_trace(200_000, &mut rng);
+        let fit = fit_shifted_exp(&trace);
+        assert!((fit.a - C5_LARGE.a).abs() / C5_LARGE.a < 0.01);
+        assert!((fit.u - C5_LARGE.u).abs() / C5_LARGE.u < 0.02);
+    }
+
+    #[test]
+    fn ks_detects_wrong_model() {
+        // Uniform[0,1] data is a bad shifted-exp fit: KS should be large
+        // relative to the correct-model case.
+        let mut rng = Rng::new(44);
+        let unif: Vec<f64> = (0..50_000).map(|_| rng.f64()).collect();
+        let fit = fit_shifted_exp(&unif);
+        assert!(fit.ks > 0.05, "ks={} unexpectedly small", fit.ks);
+    }
+
+    #[test]
+    #[should_panic(expected = "need ≥2")]
+    fn rejects_tiny_traces() {
+        fit_shifted_exp(&[1.0]);
+    }
+
+    #[test]
+    fn small_sample_bias_correction_helps() {
+        // With n=20, raw min underestimates `a`; the corrected estimator
+        // should not be systematically below the true shift.
+        let mut rng = Rng::new(45);
+        let mut sum_a = 0.0;
+        let reps = 3000;
+        for _ in 0..reps {
+            let trace = T2_MICRO.sample_trace(20, &mut rng);
+            sum_a += fit_shifted_exp(&trace).a;
+        }
+        let avg_a = sum_a / reps as f64;
+        assert!(
+            (avg_a - T2_MICRO.a).abs() < 0.01,
+            "bias-corrected â averages {avg_a}, want ≈{}",
+            T2_MICRO.a
+        );
+    }
+}

@@ -1,0 +1,8 @@
+//! Delay-trace substrate replacing the paper's Amazon EC2 measurements
+//! (§V-C, Figs. 7–8). See DESIGN.md §Substitutions.
+
+pub mod ec2;
+pub mod fit;
+
+pub use ec2::{InstanceType, C5_LARGE, T2_MICRO};
+pub use fit::{fit_shifted_exp, FittedShiftedExp};

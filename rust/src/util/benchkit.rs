@@ -1,0 +1,212 @@
+//! Micro-benchmark harness (no `criterion` offline).
+//!
+//! Warmup + timed iterations with mean/σ/p50/p99 reporting, a stable text
+//! format for `cargo bench`, and a `black_box` to keep the optimizer
+//! honest. Used by `rust/benches/*.rs` (harness = false) and the §Perf
+//! pass in EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub std: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    /// Optional throughput denominator (items per iteration).
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter
+            .map(|items| items / self.mean.as_secs_f64())
+    }
+
+    pub fn report(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) if t >= 1e6 => format!("  {:>9.2} Mitem/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("  {:>9.2} Kitem/s", t / 1e3),
+            Some(t) => format!("  {t:>9.2} item/s"),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>12} ±{:>10}  p50 {:>10}  p99 {:>10}  [{} iters]{}",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.std),
+            fmt_dur(self.p50),
+            fmt_dur(self.p99),
+            self.iters,
+            tp
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Benchmark builder.
+pub struct Bench {
+    warmup: Duration,
+    measure: Duration,
+    max_iters: usize,
+    items_per_iter: Option<f64>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_secs(1),
+            max_iters: 10_000,
+            items_per_iter: None,
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn warmup(mut self, d: Duration) -> Self {
+        self.warmup = d;
+        self
+    }
+
+    pub fn measure_time(mut self, d: Duration) -> Self {
+        self.measure = d;
+        self
+    }
+
+    pub fn max_iters(mut self, n: usize) -> Self {
+        self.max_iters = n;
+        self
+    }
+
+    /// Declare iteration throughput (e.g. trials per run call).
+    pub fn items(mut self, n: f64) -> Self {
+        self.items_per_iter = Some(n);
+        self
+    }
+
+    /// Run `f` repeatedly, return timing statistics.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        // Warmup.
+        let start = Instant::now();
+        let mut warm_iters = 0usize;
+        while start.elapsed() < self.warmup && warm_iters < self.max_iters {
+            black_box(f());
+            warm_iters += 1;
+        }
+
+        // Measure.
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure && samples.len() < self.max_iters {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed());
+        }
+        if samples.is_empty() {
+            // Function slower than the budget: take exactly one sample.
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed());
+        }
+
+        let mut sorted = samples.clone();
+        sorted.sort();
+        let n = samples.len();
+        let mean_ns =
+            samples.iter().map(|d| d.as_nanos() as f64).sum::<f64>() / n as f64;
+        let var_ns = samples
+            .iter()
+            .map(|d| {
+                let x = d.as_nanos() as f64 - mean_ns;
+                x * x
+            })
+            .sum::<f64>()
+            / n.max(2) as f64;
+        let pick = |q: f64| sorted[((n - 1) as f64 * q) as usize];
+
+        BenchResult {
+            name: name.to_string(),
+            iters: n,
+            mean: Duration::from_nanos(mean_ns as u64),
+            std: Duration::from_nanos(var_ns.sqrt() as u64),
+            p50: pick(0.50),
+            p99: pick(0.99),
+            min: sorted[0],
+            max: sorted[n - 1],
+            items_per_iter: self.items_per_iter,
+        }
+    }
+}
+
+/// Group header printer for bench binaries.
+pub fn group(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let r = Bench::new()
+            .warmup(Duration::from_millis(1))
+            .measure_time(Duration::from_millis(20))
+            .run("noop-ish", || black_box(3u64.wrapping_mul(7)));
+        assert!(r.iters >= 1);
+        assert!(r.mean <= r.max);
+        assert!(r.min <= r.p50 && r.p50 <= r.p99);
+        assert!(r.report().contains("noop-ish"));
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = Bench::new()
+            .warmup(Duration::from_millis(1))
+            .measure_time(Duration::from_millis(10))
+            .items(1000.0)
+            .run("tp", || {
+                std::thread::sleep(Duration::from_micros(100));
+            });
+        let tp = r.throughput().unwrap();
+        // 1000 items / ~100µs ⇒ ~10M items/s, allow wide margin
+        assert!(tp > 1e5 && tp < 1e8, "tp={tp}");
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert!(fmt_dur(Duration::from_nanos(500)).ends_with("ns"));
+        assert!(fmt_dur(Duration::from_micros(5)).ends_with("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).ends_with('s'));
+    }
+}

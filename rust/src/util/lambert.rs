@@ -1,0 +1,150 @@
+//! Lambert W function, lower branch `W₋₁`.
+//!
+//! Theorem 2 of the paper defines the optimal computation-dominant load via
+//! `φ = (−W₋₁(−e^{−u·a−1}) − 1)/u`. `W₋₁(x)` is real for `x ∈ [−1/e, 0)`
+//! with `W₋₁(x) ≤ −1` and `W₋₁(x)·e^{W₋₁(x)} = x`.
+//!
+//! Implementation: branch-point series / log-log asymptote as the initial
+//! guess, then Halley iterations (cubic convergence); ~4 iterations reach
+//! `|w·e^w − x| < 1e−14·|x|` across the domain.
+
+/// Machine value of `−1/e`.
+pub const NEG_INV_E: f64 = -0.36787944117144233;
+
+/// Lower branch `W₋₁(x)` for `x ∈ [−1/e, 0)`.
+///
+/// Returns `None` outside the domain. At the branch point `x = −1/e`
+/// returns exactly `−1`.
+pub fn lambert_wm1(x: f64) -> Option<f64> {
+    if !(x < 0.0) || x < NEG_INV_E - 1e-12 {
+        return None;
+    }
+    if (x - NEG_INV_E).abs() < 1e-16 {
+        return Some(-1.0);
+    }
+
+    // Initial guess.
+    let mut w = if x > -0.27 {
+        // Asymptotic for x → 0⁻: W₋₁ ≈ ln(−x) − ln(−ln(−x)).
+        let l1 = (-x).ln();
+        let l2 = (-l1).ln();
+        l1 - l2
+    } else {
+        // Branch-point series with p = −sqrt(2(1 + e·x)) (negative root
+        // selects the lower branch): W = −1 + p − p²/3 + 11/72·p³ …
+        let p = -(2.0 * (1.0 + std::f64::consts::E * x)).max(0.0).sqrt();
+        -1.0 + p - p * p / 3.0 + 11.0 / 72.0 * p * p * p
+    };
+
+    // Halley iterations on f(w) = w·e^w − x.
+    for _ in 0..50 {
+        let ew = w.exp();
+        let f = w * ew - x;
+        let wp1 = w + 1.0;
+        let denom = ew * wp1 - (w + 2.0) * f / (2.0 * wp1);
+        let step = f / denom;
+        w -= step;
+        if step.abs() <= 1e-15 * (1.0 + w.abs()) {
+            break;
+        }
+    }
+    // Guard: lower branch must satisfy w ≤ −1.
+    if w > -1.0 {
+        w = -1.0;
+    }
+    Some(w)
+}
+
+/// The paper's `φ(a, u) = (−W₋₁(−e^{−u·a−1}) − 1)/u` (Theorem 2).
+///
+/// `a` is the per-row shift, `u` the per-row rate of the shifted
+/// exponential computation delay; both must be positive. `φ` is the
+/// optimal per-row time budget `t*/l*` for that node.
+pub fn phi(a: f64, u: f64) -> f64 {
+    assert!(a > 0.0 && u > 0.0, "phi requires a>0, u>0 (a={a}, u={u})");
+    let arg = -(-u * a - 1.0).exp();
+    // arg ∈ (−1/e, 0) strictly because u·a > 0, so W₋₁ exists.
+    let w = lambert_wm1(arg).expect("phi: argument left W₋₁ domain");
+    (-w - 1.0) / u
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_w_exp_w() {
+        // Spread of domain points, log-spaced toward 0⁻ and near −1/e.
+        let xs = [
+            -0.367879, -0.36, -0.3, -0.2, -0.1, -0.05, -0.01, -1e-3, -1e-6,
+            -1e-12,
+        ];
+        for &x in &xs {
+            let w = lambert_wm1(x).unwrap();
+            assert!(w <= -1.0 + 1e-9, "w={w} must be ≤ −1 at x={x}");
+            let back = w * w.exp();
+            assert!(
+                (back - x).abs() <= 1e-12 * x.abs().max(1e-300),
+                "x={x} w={w} back={back}"
+            );
+        }
+    }
+
+    #[test]
+    fn branch_point_exact() {
+        assert_eq!(lambert_wm1(NEG_INV_E), Some(-1.0));
+    }
+
+    #[test]
+    fn out_of_domain() {
+        assert_eq!(lambert_wm1(0.0), None);
+        assert_eq!(lambert_wm1(0.5), None);
+        assert_eq!(lambert_wm1(-0.4), None);
+        assert_eq!(lambert_wm1(f64::NAN), None);
+    }
+
+    #[test]
+    fn known_value() {
+        // W₋₁(−0.2) ≈ −2.5426413577735264 (reference: scipy.special.lambertw)
+        let w = lambert_wm1(-0.2).unwrap();
+        assert!((w - (-2.5426413577735264)).abs() < 1e-12, "w={w}");
+        // W₋₁(−0.1) ≈ −3.577152063957297
+        let w = lambert_wm1(-0.1).unwrap();
+        assert!((w - (-3.577152063957297)).abs() < 1e-12, "w={w}");
+    }
+
+    #[test]
+    fn monotone_decreasing_on_domain() {
+        // W₋₁ decreases from −1 (at −1/e) to −∞ (at 0⁻).
+        let mut prev = -1.0;
+        for i in 1..=100 {
+            let x = NEG_INV_E * (1.0 - i as f64 / 101.0);
+            let w = lambert_wm1(x).unwrap();
+            assert!(w <= prev + 1e-12, "not monotone at x={x}");
+            prev = w;
+        }
+    }
+
+    #[test]
+    fn phi_satisfies_theorem2_stationarity() {
+        // φ solves (1 + u·φ·u_inv…) — directly: with w = −(1+uφ),
+        // (1 + uφ) e^{−(1+uφ)} = e^{−u a − 1}, i.e. the KKT stationarity
+        // (36) of the paper. Check the defining identity.
+        for &(a, u) in &[(0.2, 5.0), (1.36, 0.735), (0.05, 20.0), (0.5, 2.0)] {
+            let f = phi(a, u);
+            assert!(f > 0.0);
+            let lhs = (1.0 + u * f) * (-(1.0 + u * f)).exp();
+            let rhs = (-u * a - 1.0).exp();
+            assert!((lhs - rhs).abs() < 1e-12, "a={a} u={u} φ={f}");
+        }
+    }
+
+    #[test]
+    fn phi_exceeds_shift() {
+        // The optimal per-row budget must exceed the deterministic per-row
+        // shift a (t* > a·l*).
+        for &(a, u) in &[(0.2, 5.0), (0.3, 3.3), (1.36, 4.976)] {
+            assert!(phi(a, u) > a, "phi({a},{u}) = {} ≤ a", phi(a, u));
+        }
+    }
+}

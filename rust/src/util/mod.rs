@@ -1,0 +1,14 @@
+//! Offline-environment substrates.
+//!
+//! The build environment has no network access and only the crates vendored
+//! for the `xla` PJRT bridge, so everything a well-maintained project would
+//! normally pull from crates.io (`rand`, `serde`, `criterion`, `proptest`,
+//! `clap`) is implemented here in-tree (DESIGN.md §Substitutions).
+
+pub mod rng;
+pub mod stats;
+pub mod lambert;
+pub mod json;
+pub mod prop;
+pub mod benchkit;
+pub mod table;

@@ -1,0 +1,333 @@
+//! Descriptive statistics, quantiles and empirical CDFs for the
+//! Monte-Carlo engine and the figure harness.
+
+/// Running summary over a stream of samples (Welford's algorithm).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn merge(&mut self, other: &Summary) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = (self.n + other.n) as f64;
+        let d = other.mean - self.mean;
+        self.m2 += other.m2 + d * d * self.n as f64 * other.n as f64 / n;
+        self.mean += d * other.n as f64 / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    /// Sample variance (n−1 denominator).
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+    /// Standard error of the mean.
+    pub fn sem(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.std() / (self.n as f64).sqrt()
+        }
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Linear-interpolated quantile of a **sorted** slice, `q ∈ [0,1]`.
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "quantile of empty slice");
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = pos - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Empirical CDF over a finite sample.
+#[derive(Clone, Debug)]
+pub struct Ecdf {
+    sorted: Vec<f64>,
+}
+
+impl Ecdf {
+    pub fn new(mut samples: Vec<f64>) -> Self {
+        assert!(!samples.is_empty(), "Ecdf needs at least one sample");
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Self { sorted: samples }
+    }
+
+    /// `P[X ≤ t]`.
+    pub fn eval(&self, t: f64) -> f64 {
+        // partition_point = number of samples ≤ t
+        let cnt = self.sorted.partition_point(|&x| x <= t);
+        cnt as f64 / self.sorted.len() as f64
+    }
+
+    /// Smallest `t` with `P[X ≤ t] ≥ p` — the ρ_s readout of Fig. 5.
+    pub fn inverse(&self, p: f64) -> f64 {
+        quantile_sorted(&self.sorted, p)
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        mean(&self.sorted)
+    }
+
+    /// Evenly-spaced `(t, F(t))` series for plotting/JSON export.
+    pub fn series(&self, points: usize) -> Vec<(f64, f64)> {
+        let lo = self.sorted[0];
+        let hi = *self.sorted.last().unwrap();
+        (0..points)
+            .map(|i| {
+                let t = lo + (hi - lo) * i as f64 / (points - 1).max(1) as f64;
+                (t, self.eval(t))
+            })
+            .collect()
+    }
+}
+
+/// Fixed-width histogram (used for delay-distribution exports).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    width: f64,
+    counts: Vec<u64>,
+    total: u64,
+    underflow: u64,
+    overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Self {
+            lo,
+            width: (hi - lo) / bins as f64,
+            counts: vec![0; bins],
+            total: 0,
+            underflow: 0,
+            overflow: 0,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.total += 1;
+        if x < self.lo {
+            self.underflow += 1;
+        } else {
+            let idx = ((x - self.lo) / self.width) as usize;
+            if idx >= self.counts.len() {
+                self.overflow += 1;
+            } else {
+                self.counts[idx] += 1;
+            }
+        }
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+    pub fn overflow(&self) -> u64 {
+        self.overflow
+    }
+    pub fn underflow(&self) -> u64 {
+        self.underflow
+    }
+
+    /// Bin centers with normalized frequency.
+    pub fn density(&self) -> Vec<(f64, f64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                (
+                    self.lo + (i as f64 + 0.5) * self.width,
+                    c as f64 / (self.total.max(1) as f64 * self.width),
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_matches_direct_computation() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut s = Summary::new();
+        for &x in &xs {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 5);
+        assert!((s.mean() - 4.0).abs() < 1e-12);
+        let var = xs.iter().map(|x| (x - 4.0) * (x - 4.0)).sum::<f64>() / 4.0;
+        assert!((s.var() - var).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 10.0);
+    }
+
+    #[test]
+    fn summary_merge_equals_sequential() {
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        let mut whole = Summary::new();
+        for i in 0..100 {
+            let x = (i as f64).sin() * 5.0;
+            if i % 2 == 0 {
+                a.push(x);
+            } else {
+                b.push(x);
+            }
+            whole.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.mean() - whole.mean()).abs() < 1e-10);
+        assert!((a.var() - whole.var()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let mut a = Summary::new();
+        a.push(1.0);
+        a.push(2.0);
+        let before = (a.count(), a.mean(), a.var());
+        a.merge(&Summary::new());
+        assert_eq!(before, (a.count(), a.mean(), a.var()));
+        let mut e = Summary::new();
+        e.merge(&a);
+        assert_eq!(e.count(), 2);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((quantile_sorted(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((quantile_sorted(&xs, 1.0) - 100.0).abs() < 1e-12);
+        assert!((quantile_sorted(&xs, 0.5) - 50.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ecdf_eval_and_inverse() {
+        let e = Ecdf::new(vec![3.0, 1.0, 2.0, 4.0]);
+        assert_eq!(e.eval(0.5), 0.0);
+        assert_eq!(e.eval(1.0), 0.25);
+        assert_eq!(e.eval(2.5), 0.5);
+        assert_eq!(e.eval(4.0), 1.0);
+        assert!(e.inverse(0.95) <= 4.0 && e.inverse(0.95) >= 3.0);
+    }
+
+    #[test]
+    fn ecdf_inverse_is_generalized_inverse() {
+        let e = Ecdf::new((1..=1000).map(|i| i as f64).collect());
+        for &p in &[0.1, 0.5, 0.9, 0.95, 0.99] {
+            let t = e.inverse(p);
+            assert!(e.eval(t) >= p - 1e-9, "p={p} t={t} F={}", e.eval(t));
+        }
+    }
+
+    #[test]
+    fn ecdf_series_monotone() {
+        let e = Ecdf::new((0..500).map(|i| (i as f64 * 0.37).fract()).collect());
+        let s = e.series(50);
+        assert_eq!(s.len(), 50);
+        assert!(s.windows(2).all(|w| w[1].1 >= w[0].1));
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..100 {
+            h.push(i as f64 / 10.0); // 0.0 .. 9.9
+        }
+        assert_eq!(h.total(), 100);
+        assert_eq!(h.overflow(), 0);
+        assert_eq!(h.underflow(), 0);
+        assert!(h.counts().iter().all(|&c| c == 10));
+        h.push(-1.0);
+        h.push(11.0);
+        assert_eq!(h.underflow(), 1);
+        assert_eq!(h.overflow(), 1);
+    }
+
+    #[test]
+    fn histogram_density_integrates_to_one() {
+        let mut h = Histogram::new(0.0, 1.0, 20);
+        for i in 0..1000 {
+            h.push((i as f64 + 0.5) / 1000.0);
+        }
+        let integral: f64 = h.density().iter().map(|(_, d)| d * 0.05).sum();
+        assert!((integral - 1.0).abs() < 1e-9);
+    }
+}

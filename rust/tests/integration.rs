@@ -1,0 +1,167 @@
+//! Cross-module integration tests: planner → simulator → figures → config
+//! files, exercising the public API the way the examples do.
+
+use coded_coop::assign::ValueModel;
+use coded_coop::config::{AShift, CommModel, Scenario};
+use coded_coop::figures::{self, FigureOptions};
+use coded_coop::plan::{self, LoadMethod, PlanSpec, Policy};
+use coded_coop::sim::{self, McOptions};
+
+fn mc(trials: usize) -> McOptions {
+    McOptions {
+        trials,
+        seed: 99,
+        keep_samples: false,
+        threads: 0,
+    }
+}
+
+fn spec(policy: Policy, loads: LoadMethod) -> PlanSpec {
+    PlanSpec {
+        policy,
+        values: ValueModel::Markov,
+        loads,
+    }
+}
+
+#[test]
+fn every_policy_plans_and_simulates_on_every_scenario() {
+    let scenarios = [
+        Scenario::small_scale(1, 2.0, CommModel::Stochastic),
+        Scenario::small_scale(1, 2.0, CommModel::CompDominant),
+        Scenario::large_scale(1, 2.0, CommModel::Stochastic),
+        Scenario::ec2(10, 4, false),
+        Scenario::ec2(10, 4, true),
+    ];
+    for s in &scenarios {
+        for policy in [
+            Policy::UncodedUniform,
+            Policy::CodedUniform,
+            Policy::DediSimple,
+            Policy::DediIter,
+            Policy::Frac,
+        ] {
+            let p = plan::build(s, &spec(policy, LoadMethod::Markov));
+            let r = sim::run(s, &p, &mc(500));
+            assert!(
+                r.system.mean().is_finite() && r.system.mean() > 0.0,
+                "{} / {policy:?}",
+                s.name
+            );
+        }
+    }
+}
+
+#[test]
+fn sca_never_worse_than_markov_planner_estimate() {
+    for seed in 0..5 {
+        let s = Scenario::small_scale(seed, 2.0, CommModel::Stochastic);
+        let base = plan::build(&s, &spec(Policy::DediIter, LoadMethod::Markov));
+        let enh = plan::build(&s, &spec(Policy::DediIter, LoadMethod::Sca));
+        assert!(enh.t_est() <= base.t_est() * (1.0 + 1e-9), "seed {seed}");
+    }
+}
+
+#[test]
+fn empirical_completion_consistent_with_estimates_across_policies() {
+    // Monte-Carlo means must track the planner's t* within a factor of 2
+    // in both directions for the coded policies (the Markov t* is
+    // conservative; the SCA t* is tight).
+    let s = Scenario::large_scale(7, 2.0, CommModel::Stochastic);
+    for loads in [LoadMethod::Markov, LoadMethod::Sca] {
+        let p = plan::build(&s, &spec(Policy::DediIter, loads));
+        let r = sim::run(&s, &p, &mc(5_000));
+        let (est, got) = (p.t_est(), r.system.mean());
+        assert!(
+            got < 2.0 * est && got > 0.3 * est,
+            "{loads:?}: est {est} vs emp {got}"
+        );
+    }
+}
+
+#[test]
+fn scenario_json_file_roundtrip() {
+    let s = Scenario::large_scale(3, 4.0, CommModel::Stochastic);
+    let dir = std::env::temp_dir().join("coded_coop_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("scenario.json");
+    std::fs::write(&path, s.to_json().to_string_pretty()).unwrap();
+    let back = Scenario::from_file(path.to_str().unwrap()).unwrap();
+    assert_eq!(back.n_masters(), 4);
+    assert_eq!(back.n_workers(), 50);
+    // Same plan comes out of the round-tripped config.
+    let p1 = plan::build(&s, &spec(Policy::DediIter, LoadMethod::Markov));
+    let p2 = plan::build(&back, &spec(Policy::DediIter, LoadMethod::Markov));
+    assert!((p1.t_est() - p2.t_est()).abs() < 1e-9);
+}
+
+#[test]
+fn figure_harness_saves_artifacts() {
+    let dir = std::env::temp_dir().join("coded_coop_figs");
+    let opts = FigureOptions {
+        trials: 300,
+        seed: 2,
+        fit_samples: 2_000,
+        threads: 0,
+    };
+    let fig = figures::run("fig7", &opts).unwrap();
+    fig.save(dir.to_str().unwrap()).unwrap();
+    let json = std::fs::read_to_string(dir.join("fig7.json")).unwrap();
+    let parsed = coded_coop::util::json::parse(&json).unwrap();
+    assert_eq!(
+        parsed.get("id").and_then(|j| j.as_str()),
+        Some("fig7")
+    );
+    assert!(std::fs::metadata(dir.join("fig7.txt")).unwrap().len() > 0);
+}
+
+#[test]
+fn uncoded_needs_every_worker_coded_does_not() {
+    // Make one worker catastrophically slow: the uncoded scheme's delay
+    // explodes, the coded schemes route around it.
+    let mut s = Scenario::random(
+        "one-bad-worker",
+        1,
+        6,
+        1e3,
+        AShift::Range(0.1, 0.2),
+        2.0,
+        CommModel::Stochastic,
+        5,
+    );
+    // Worker 6 is 100× slower.
+    let bad = s.links[0][5];
+    s.links[0][5] = coded_coop::model::params::LinkParams::new(
+        bad.gamma,
+        bad.a * 100.0,
+        bad.u / 100.0,
+    );
+    let unc = plan::build(&s, &spec(Policy::UncodedUniform, LoadMethod::Markov));
+    let ded = plan::build(&s, &spec(Policy::DediIter, LoadMethod::Markov));
+    let r_unc = sim::run(&s, &unc, &mc(2_000));
+    let r_ded = sim::run(&s, &ded, &mc(2_000));
+    assert!(
+        r_ded.system.mean() < 0.3 * r_unc.system.mean(),
+        "coded {} vs uncoded {}",
+        r_ded.system.mean(),
+        r_unc.system.mean()
+    );
+}
+
+#[test]
+fn fractional_plan_outperforms_or_matches_dedicated_small_scale() {
+    // §IV motivation: with few workers the fractional policy balances
+    // masters better. Compare empirical means over seeds (allow ties).
+    let mut frac_wins = 0;
+    for seed in 0..6 {
+        let s = Scenario::small_scale(seed, 2.0, CommModel::Stochastic);
+        let d = plan::build(&s, &spec(Policy::DediIter, LoadMethod::Markov));
+        let f = plan::build(&s, &spec(Policy::Frac, LoadMethod::Markov));
+        let rd = sim::run(&s, &d, &mc(4_000)).system.mean();
+        let rf = sim::run(&s, &f, &mc(4_000)).system.mean();
+        if rf <= rd * 1.01 {
+            frac_wins += 1;
+        }
+    }
+    assert!(frac_wins >= 4, "fractional lost too often: {frac_wins}/6");
+}

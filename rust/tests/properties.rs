@@ -1,0 +1,232 @@
+//! Property-based tests over the public API (in-tree `util::prop`
+//! harness — DESIGN.md §Substitutions). Each property runs against
+//! randomized scenarios/parameters; failures report a replay seed.
+
+use coded_coop::alloc::{expected_results, markov, sca, EffLink};
+use coded_coop::assign::{
+    dedicated_iter, dedicated_simple, fractional, ValueMatrix, ValueModel,
+};
+use coded_coop::coding::MdsCode;
+use coded_coop::config::{AShift, CommModel, Scenario};
+use coded_coop::model::params::LinkParams;
+use coded_coop::plan::{self, LoadMethod, PlanSpec, Policy};
+use coded_coop::util::prop::{check, Config, Gen};
+
+fn random_scenario(g: &mut Gen) -> Scenario {
+    let m = g.usize_range(1, 4);
+    let n = g.usize_range(m.max(2), 20);
+    let seed = g.rng().next_u64();
+    Scenario::random(
+        "prop",
+        m,
+        n,
+        1e3 + g.f64_range(0.0, 1e4),
+        AShift::Range(0.05, 0.5),
+        g.f64_range(0.25, 8.0),
+        if g.bool() {
+            CommModel::Stochastic
+        } else {
+            CommModel::CompDominant
+        },
+        seed,
+    )
+}
+
+#[test]
+fn prop_markov_allocation_feasible_under_exact_model() {
+    check(
+        Config::default().cases(60),
+        "E[X(t*)] ≥ L for Theorem-1 allocations",
+        |g| {
+            let n = g.usize_range(1, 12);
+            let links: Vec<EffLink> = (0..n)
+                .map(|_| {
+                    let a = g.f64_range(0.05, 0.5);
+                    let u = 1.0 / a;
+                    EffLink::dedicated(&LinkParams::new(
+                        g.f64_range(0.5, 8.0) * u,
+                        a,
+                        u,
+                    ))
+                })
+                .collect();
+            let l_rows = g.f64_range(100.0, 1e5);
+            let thetas: Vec<f64> = links.iter().map(EffLink::theta).collect();
+            let alloc = markov::allocate(&thetas, l_rows);
+            let progress = expected_results(&links, &alloc.loads, alloc.t_star);
+            assert!(
+                progress >= l_rows * (1.0 - 1e-9),
+                "E[X] = {progress} < L = {l_rows}"
+            );
+        },
+    );
+}
+
+#[test]
+fn prop_sca_improves_and_stays_feasible() {
+    check(
+        Config::default().cases(25),
+        "SCA ≤ Markov t* and feasible",
+        |g| {
+            let n = g.usize_range(2, 8);
+            let links: Vec<EffLink> = (0..n)
+                .map(|_| {
+                    let a = g.f64_range(0.05, 0.5);
+                    let u = 1.0 / a;
+                    EffLink::dedicated(&LinkParams::new(2.0 * u, a, u))
+                })
+                .collect();
+            let l_rows = 1e4;
+            let thetas: Vec<f64> = links.iter().map(EffLink::theta).collect();
+            let start = markov::allocate(&thetas, l_rows);
+            let enh = sca::enhance(&links, l_rows, &start, &Default::default());
+            assert!(enh.t_star <= start.t_star * (1.0 + 1e-9));
+            let progress = expected_results(&links, &enh.loads, enh.t_star);
+            assert!(progress >= l_rows * (1.0 - 1e-5));
+        },
+    );
+}
+
+#[test]
+fn prop_assignments_partition_and_respect_resources() {
+    check(
+        Config::default().cases(30),
+        "assignment invariants",
+        |g| {
+            let s = random_scenario(g);
+            let vm = ValueMatrix::new(&s, ValueModel::Markov);
+            // Dedicated: every worker exactly one owner.
+            let d = if g.bool() {
+                dedicated_iter::assign(&vm, &Default::default())
+            } else {
+                dedicated_simple::assign(&vm)
+            };
+            assert_eq!(d.owner.len(), s.n_workers());
+            assert!(d.owner.iter().all(|&m| m < s.n_masters()));
+            // Fractional: Σ_m k ≤ 1 and Σ_m b ≤ 1 per worker.
+            let f = fractional::assign(&s, &d, &Default::default());
+            assert!(f.is_feasible());
+        },
+    );
+}
+
+#[test]
+fn prop_alg1_min_value_at_least_alg2() {
+    check(
+        Config::default().cases(30),
+        "iterated greedy dominates simple greedy",
+        |g| {
+            let s = random_scenario(g);
+            let vm = ValueMatrix::new(&s, ValueModel::Markov);
+            let iter_min = dedicated_iter::assign(&vm, &Default::default()).min_value(&vm);
+            let simple_min = dedicated_simple::assign(&vm).min_value(&vm);
+            assert!(iter_min >= simple_min * (1.0 - 1e-12));
+        },
+    );
+}
+
+#[test]
+fn prop_plans_have_enough_redundancy_and_valid_shares() {
+    check(
+        Config::default().cases(25),
+        "plan invariants over random scenarios",
+        |g| {
+            let s = random_scenario(g);
+            let policy = *g
+                .rng()
+                .choose(&[Policy::CodedUniform, Policy::DediIter, Policy::Frac]);
+            let p = plan::build(
+                &s,
+                &PlanSpec {
+                    policy,
+                    values: ValueModel::Markov,
+                    loads: LoadMethod::Markov,
+                },
+            );
+            let mut ksum = vec![0.0; s.n_workers() + 1];
+            for mp in &p.masters {
+                assert!(mp.total_load() > mp.l_rows, "no redundancy");
+                assert!(mp.t_est.is_finite() && mp.t_est > 0.0);
+                for e in &mp.entries {
+                    assert!(e.load > 0.0 && e.k > 0.0 && e.b > 0.0);
+                    if e.node >= 1 {
+                        ksum[e.node] += e.k;
+                    }
+                }
+            }
+            for (n, &k) in ksum.iter().enumerate().skip(1) {
+                assert!(k <= 1.0 + 1e-9, "worker {n} oversubscribed: {k}");
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_mds_decodes_any_subset() {
+    check(
+        Config::default().cases(40),
+        "MDS: any L of L̃ coded rows recover the products",
+        |g| {
+            let l = g.usize_range(2, 24);
+            let extra = g.usize_range(1, 12);
+            let code = MdsCode::new(l, l + extra, g.rng());
+            let data: Vec<f64> = (0..l).map(|_| g.rng().normal()).collect();
+            let a = coded_coop::coding::Matrix::from_vec(l, 1, data.clone());
+            let y = code.encode(&a).matvec(&[1.0]);
+            let idx = g.rng().subset(l + extra, l);
+            let rx: Vec<(usize, f64)> = idx.iter().map(|&i| (i, y[i])).collect();
+            let z = code.decode(&rx).expect("decodable");
+            for (zi, di) in z.iter().zip(&data) {
+                assert!(
+                    (zi - di).abs() < 1e-5 * (1.0 + di.abs()),
+                    "{zi} vs {di}"
+                );
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_simulator_matches_oracle_recomputation() {
+    // The MC engine's per-trial completion must equal an independent
+    // oracle: smallest sampled delay t with Σ_{T≤t} l ≥ L.
+    check(
+        Config::default().cases(20),
+        "simulator trial == oracle",
+        |g| {
+            use coded_coop::model::dist::LinkDelay;
+            let s = random_scenario(g);
+            let spec = PlanSpec {
+                policy: Policy::DediIter,
+                values: ValueModel::Markov,
+                loads: LoadMethod::Markov,
+            };
+            let p = plan::build(&s, &spec);
+            // Oracle for master 0 with a fixed RNG stream.
+            let mp = &p.masters[0];
+            let mut rng = coded_coop::util::rng::Rng::new(g.rng().next_u64());
+            let mut arr: Vec<(f64, f64)> = mp
+                .entries
+                .iter()
+                .map(|e| {
+                    let d = LinkDelay::new(&s.link(0, e.node), e.load, e.k, e.b);
+                    (d.sample(&mut rng), e.load)
+                })
+                .collect();
+            arr.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let mut acc = 0.0;
+            let mut oracle = f64::INFINITY;
+            for (t, l) in arr {
+                acc += l;
+                if acc >= mp.l_rows {
+                    oracle = t;
+                    break;
+                }
+            }
+            assert!(
+                oracle.is_finite(),
+                "coded plan must always complete (Σl > L)"
+            );
+        },
+    );
+}
