@@ -43,18 +43,58 @@ impl EffLink {
     }
 
     /// Fractional view with compute share `k`, bandwidth share `b`.
-    pub fn fractional(p: &LinkParams, k: f64, b: f64) -> Self {
-        assert!(k > 0.0 && k <= 1.0, "k={k} out of (0,1]");
+    ///
+    /// Validating constructor: rejects shares outside `(0, 1]` (or
+    /// non-finite) instead of panicking, so malformed fractional shares
+    /// arriving from JSON configs surface as planner errors.
+    pub fn try_fractional(p: &LinkParams, k: f64, b: f64) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            k.is_finite() && k > 0.0 && k <= 1.0,
+            "compute share k={k} outside (0, 1]"
+        );
         let comm = if p.is_local() {
             None
         } else {
-            assert!(b > 0.0 && b <= 1.0, "b={b} out of (0,1]");
+            anyhow::ensure!(
+                b.is_finite() && b > 0.0 && b <= 1.0,
+                "bandwidth share b={b} outside (0, 1]"
+            );
             Some(b * p.gamma)
         };
-        Self {
+        Ok(Self {
             comm,
             comp: k * p.u,
             shift: p.a / k,
+        })
+    }
+
+    /// Fractional view with compute share `k`, bandwidth share `b`.
+    ///
+    /// Internal planner paths always pass validated shares; this infallible
+    /// variant debug-asserts and, in release builds, clamps malformed
+    /// shares into `(0, 1]` (a near-zero share degrades to a uselessly
+    /// slow link, θ → huge, rather than crashing). External inputs should
+    /// go through [`EffLink::try_fractional`] — the JSON boundary
+    /// ([`crate::plan::Plan::from_json`]) validates shares up front.
+    pub fn fractional(p: &LinkParams, k: f64, b: f64) -> Self {
+        match Self::try_fractional(p, k, b) {
+            Ok(e) => e,
+            Err(err) => {
+                debug_assert!(false, "EffLink::fractional: {err}");
+                let clamp = |x: f64| {
+                    if x.is_finite() && x > 0.0 {
+                        x.min(1.0)
+                    } else {
+                        1e-12
+                    }
+                };
+                let (k, b) = (clamp(k), clamp(b));
+                Self {
+                    comm: (!p.is_local()).then_some(b * p.gamma),
+                    comp: k * p.u,
+                    shift: p.a / k,
+                }
+            }
         }
     }
 
@@ -217,5 +257,26 @@ mod tests {
     fn exact_t_requires_redundancy() {
         let links = vec![worker(2.0, 0.2, 5.0)];
         exact_t_for_loads(&links, &[10.0], 10.0);
+    }
+
+    #[test]
+    fn try_fractional_rejects_malformed_shares() {
+        let p = LinkParams::new(2.0, 0.25, 4.0);
+        assert!(EffLink::try_fractional(&p, 0.0, 0.5).is_err());
+        assert!(EffLink::try_fractional(&p, 1.5, 0.5).is_err());
+        assert!(EffLink::try_fractional(&p, 0.5, 0.0).is_err());
+        assert!(EffLink::try_fractional(&p, 0.5, f64::NAN).is_err());
+        assert!(EffLink::try_fractional(&p, f64::INFINITY, 0.5).is_err());
+        let ok = EffLink::try_fractional(&p, 0.5, 0.25).unwrap();
+        assert_eq!(ok, EffLink::fractional(&p, 0.5, 0.25));
+    }
+
+    #[test]
+    fn try_fractional_local_ignores_bandwidth() {
+        // Local links have no comm leg; b is not validated (b_{m,0} = 1
+        // by assumption in the paper).
+        let p = LinkParams::local(0.4, 2.5);
+        let e = EffLink::try_fractional(&p, 1.0, 0.0).unwrap();
+        assert_eq!(e.comm, None);
     }
 }

@@ -6,17 +6,26 @@
 //! coded-coop plan   --scenario <small|large|ec2|FILE.json>
 //!            [--policy P] [--loads markov|exact|sca]
 //!            [--values markov|exact] [--gamma-ratio R] [--seed S]
+//! coded-coop plan export ... --out plan.json   (plan once…)
+//! coded-coop plan run --plan plan.json         (…execute many)
 //! coded-coop e2e    [--masters M] [--workers N] [--rows L] [--cols S]
 //!            [--policy P] [--seed S] [--native] [--time-scale X]
 //! coded-coop version | help
 //! ```
+//!
+//! Policy and load-method names resolve through
+//! [`crate::policy::registry`], so strategies registered at runtime are
+//! immediately addressable from every subcommand.
 
 use crate::assign::ValueModel;
 use crate::config::{AShift, CommModel, Scenario};
-use crate::coordinator::{self, Backend, CoordinatorConfig};
+use crate::coordinator::{self, Backend, RunOptions};
+use crate::exec::{self, ExecOptions, Executor};
 use crate::figures::{self, FigureOptions};
-use crate::plan::{self, LoadMethod, PlanSpec, Policy};
+use crate::plan::{LoadMethod, Plan, Policy};
+use crate::policy::{parse_value_model, registry, PolicySpec};
 use crate::runtime::RuntimeService;
+use crate::util::json::{self, Json};
 use crate::util::table::Table;
 
 /// Parsed flag map: `--key value` pairs + positional arguments.
@@ -92,50 +101,45 @@ impl Args {
     }
 }
 
-const HELP: &str = "\
+/// Usage text; the policy/load lists come from the live registry so
+/// runtime-registered strategies show up.
+fn help_text() -> String {
+    format!(
+        "\
 coded-coop — Coded Computation across Shared Heterogeneous Workers (TSP'22)
 
 USAGE:
   coded-coop figure <id|all> [--trials N] [--seed S] [--out DIR] [--fit-samples N]
   coded-coop ablation <redundancy|multimsg|straggler|sca_step|all> [--trials N]
   coded-coop plan --scenario <small|large|ec2|FILE.json> [--policy P]
-                  [--loads markov|exact|sca] [--values markov|exact]
+                  [--loads L] [--values markov|exact]
                   [--gamma-ratio R] [--seed S]
+  coded-coop plan export <plan flags> [--out FILE.json]
+  coded-coop plan run --plan FILE.json [--executor sim|coordinator]
+                  [--trials N] [--seed S] [--cols S] [--time-scale X] [--verify]
   coded-coop e2e  [--masters M] [--workers N] [--rows L] [--cols S]
                   [--policy P] [--seed S] [--native] [--time-scale X]
   coded-coop version | help
 
-figures: fig2 fig3 fig4a fig4b fig5 fig6 fig7 fig8 (see DESIGN.md §4)
-policies: uncoded coded dedi-simple dedi-iter frac optimal
-";
+figures:  fig2 fig3 fig4a fig4b fig5 fig6 fig7 fig8 (see DESIGN.md)
+policies: {}
+loads:    {}
+",
+        registry::assigner_names().join(" "),
+        registry::public_allocator_names().join(" "),
+    )
+}
 
 pub fn parse_policy(s: &str) -> anyhow::Result<Policy> {
-    Ok(match s {
-        "uncoded" => Policy::UncodedUniform,
-        "coded" => Policy::CodedUniform,
-        "dedi-simple" => Policy::DediSimple,
-        "dedi-iter" => Policy::DediIter,
-        "frac" => Policy::Frac,
-        "optimal" => Policy::FracOptimal,
-        other => anyhow::bail!("unknown policy '{other}'"),
-    })
+    Policy::from_name(s).ok_or_else(|| anyhow::anyhow!("unknown policy '{s}'"))
 }
 
 pub fn parse_loads(s: &str) -> anyhow::Result<LoadMethod> {
-    Ok(match s {
-        "markov" => LoadMethod::Markov,
-        "exact" => LoadMethod::Exact,
-        "sca" => LoadMethod::Sca,
-        other => anyhow::bail!("unknown load method '{other}'"),
-    })
+    LoadMethod::from_name(s).ok_or_else(|| anyhow::anyhow!("unknown load method '{s}'"))
 }
 
 pub fn parse_values(s: &str) -> anyhow::Result<ValueModel> {
-    Ok(match s {
-        "markov" => ValueModel::Markov,
-        "exact" => ValueModel::Exact,
-        other => anyhow::bail!("unknown value model '{other}'"),
-    })
+    parse_value_model(s)
 }
 
 pub fn parse_scenario(a: &Args) -> anyhow::Result<Scenario> {
@@ -154,6 +158,18 @@ pub fn parse_scenario(a: &Args) -> anyhow::Result<Scenario> {
     }
 }
 
+/// Policy spec from `--policy/--values/--loads`, resolved eagerly so
+/// unknown names fail with the registry's suggestions.
+pub fn parse_policy_spec(a: &Args) -> anyhow::Result<PolicySpec> {
+    let spec = PolicySpec::new(
+        a.flag("policy").unwrap_or("dedi-iter"),
+        parse_values(a.flag("values").unwrap_or("markov"))?,
+        a.flag("loads").unwrap_or("markov"),
+    );
+    spec.resolve()?;
+    Ok(spec)
+}
+
 /// Entry point for the `coded-coop` binary.
 pub fn run() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
@@ -167,10 +183,10 @@ pub fn run() -> anyhow::Result<()> {
             Ok(())
         }
         Some("help") | None => {
-            print!("{HELP}");
+            print!("{}", help_text());
             Ok(())
         }
-        Some(other) => anyhow::bail!("unknown command '{other}'\n{HELP}"),
+        Some(other) => anyhow::bail!("unknown command '{other}'\n{}", help_text()),
     }
 }
 
@@ -232,13 +248,20 @@ fn cmd_ablation(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_plan(args: &Args) -> anyhow::Result<()> {
+    match args.positional.get(1).map(String::as_str) {
+        Some("export") => cmd_plan_export(args),
+        Some("run") => cmd_plan_run(args),
+        None | Some("show") => cmd_plan_show(args),
+        Some(other) => {
+            anyhow::bail!("unknown plan subcommand '{other}' (export|run|show)")
+        }
+    }
+}
+
+fn cmd_plan_show(args: &Args) -> anyhow::Result<()> {
     let s = parse_scenario(args)?;
-    let spec = PlanSpec {
-        policy: parse_policy(args.flag("policy").unwrap_or("dedi-iter"))?,
-        values: parse_values(args.flag("values").unwrap_or("markov"))?,
-        loads: parse_loads(args.flag("loads").unwrap_or("markov"))?,
-    };
-    let p = plan::build(&s, &spec);
+    let spec = parse_policy_spec(args)?;
+    let p = spec.build(&s)?;
     println!("scenario: {}", s.name);
     println!("plan:     {}  (t* = {:.3} ms)\n", p.label, p.t_est());
     for (m, mp) in p.masters.iter().enumerate() {
@@ -268,6 +291,102 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `plan export`: build once, write a self-contained schema-versioned
+/// document (spec + scenario + plan) — the cache/shard unit for serving:
+/// plan on one box, execute anywhere.
+fn cmd_plan_export(args: &Args) -> anyhow::Result<()> {
+    let s = parse_scenario(args)?;
+    let spec = parse_policy_spec(args)?;
+    let plan = spec.build(&s)?;
+    let mut doc = Json::obj();
+    doc.set("schema", Json::Num(Plan::SCHEMA as f64));
+    doc.set("spec", spec.to_json());
+    doc.set("scenario", s.to_json());
+    doc.set("plan", plan.to_json());
+    let text = doc.to_string_pretty();
+    match args.flag("out") {
+        Some(path) => {
+            std::fs::write(path, &text)?;
+            println!(
+                "wrote {path}: {} (t* = {:.3} ms, schema {})",
+                plan.label,
+                plan.t_est(),
+                Plan::SCHEMA
+            );
+        }
+        None => println!("{text}"),
+    }
+    Ok(())
+}
+
+/// `plan run`: execute a previously exported plan document on the chosen
+/// [`crate::exec::Executor`] (simulated by default, the real coordinator
+/// with `--executor coordinator`).
+fn cmd_plan_run(args: &Args) -> anyhow::Result<()> {
+    let path = match args.flag("plan") {
+        Some(p) => p.to_string(),
+        None => args
+            .positional
+            .get(2)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("plan run needs --plan FILE.json"))?,
+    };
+    let text = std::fs::read_to_string(&path)?;
+    let doc = json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    if let Some(schema) = doc.get("schema").and_then(Json::as_usize) {
+        anyhow::ensure!(
+            schema as u64 == Plan::SCHEMA,
+            "{path}: document schema {schema} unsupported (this build reads {})",
+            Plan::SCHEMA
+        );
+    }
+    let s = Scenario::from_json(
+        doc.get("scenario")
+            .ok_or_else(|| anyhow::anyhow!("{path}: document missing 'scenario'"))?,
+    )?;
+    let plan = Plan::from_json(
+        doc.get("plan")
+            .ok_or_else(|| anyhow::anyhow!("{path}: document missing 'plan'"))?,
+    )?;
+    plan.validate(&s)
+        .map_err(|e| anyhow::anyhow!("{path}: plan does not fit its scenario: {e}"))?;
+    let executor = exec::executor_by_name(args.flag("executor").unwrap_or("sim"))?;
+    let opts = ExecOptions {
+        trials: args.usize_flag("trials", 100_000)?,
+        seed: args.u64_flag("seed", 2022)?,
+        threads: args.usize_flag("threads", 0)?,
+        keep_samples: false,
+        cols: args.usize_flag("cols", 64)?,
+        time_scale: args.f64_flag("time-scale", 1e-4)?,
+        verify: args.switch("verify"),
+    };
+    let out = executor.execute(&s, &plan, &opts)?;
+    println!("scenario: {}", s.name);
+    println!(
+        "plan:     {}  (t* = {:.3} ms, {} executor)\n",
+        out.label,
+        out.t_est_ms,
+        out.executor
+    );
+    let mut t = Table::new(&["master", "mean delay (ms)", "planner t* (ms)"]);
+    for (m, sm) in out.per_master.iter().enumerate() {
+        t.row_fmt(
+            &format!("{}", m + 1),
+            &[sm.mean(), plan.masters[m].t_est],
+            3,
+        );
+    }
+    println!("{}", t.render());
+    println!(
+        "system delay: {:.3} ms (±{:.3} sem, {} realization{})",
+        out.system.mean(),
+        out.system.sem(),
+        out.system.count(),
+        if out.system.count() == 1 { "" } else { "s" },
+    );
+    Ok(())
+}
+
 fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
     let m = args.usize_flag("masters", 2)?;
     let n = args.usize_flag("workers", 6)?;
@@ -284,11 +403,9 @@ fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
         CommModel::Stochastic,
         seed,
     );
-    let spec = PlanSpec {
-        policy: parse_policy(args.flag("policy").unwrap_or("dedi-iter"))?,
-        values: ValueModel::Markov,
-        loads: parse_loads(args.flag("loads").unwrap_or("markov"))?,
-    };
+    // Registry-resolved, so runtime-registered policies work here too.
+    let spec = parse_policy_spec(args)?;
+    let plan = spec.build(&scenario)?;
 
     // PJRT by default; --native for environments without artifacts.
     let service;
@@ -299,16 +416,17 @@ fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
         Backend::Pjrt(service.handle())
     };
 
-    let cfg = CoordinatorConfig {
-        scenario,
-        spec,
-        cols,
-        time_scale: args.f64_flag("time-scale", 1e-4)?,
-        backend,
-        seed,
-        verify: true,
-    };
-    let report = coordinator::run(&cfg)?;
+    let report = coordinator::run_plan(
+        &scenario,
+        &plan,
+        &RunOptions {
+            cols,
+            time_scale: args.f64_flag("time-scale", 1e-4)?,
+            backend,
+            seed,
+            verify: true,
+        },
+    )?;
     print_report(&report);
     Ok(())
 }
@@ -396,5 +514,24 @@ mod tests {
         assert_eq!(s.n_workers(), 50);
         let a = args(&["--scenario", "ec2"]);
         assert_eq!(parse_scenario(&a).unwrap().n_masters(), 4);
+    }
+
+    #[test]
+    fn policy_spec_from_flags_resolves_registry_names() {
+        let a = args(&["plan", "--policy", "frac", "--loads", "sca"]);
+        let spec = parse_policy_spec(&a).unwrap();
+        assert_eq!(spec.label().unwrap(), "Frac + SCA");
+        let a = args(&["plan", "--policy", "not-a-policy"]);
+        assert!(parse_policy_spec(&a).is_err());
+    }
+
+    #[test]
+    fn help_lists_registered_policies() {
+        let h = help_text();
+        for name in ["uncoded", "coded", "dedi-iter", "frac", "optimal", "sca"] {
+            assert!(h.contains(name), "help missing {name}");
+        }
+        // The pin-only internal allocator is not advertised.
+        assert!(!h.contains("uncoded-split"), "help leaks internal allocator");
     }
 }

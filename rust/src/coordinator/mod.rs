@@ -63,11 +63,26 @@ impl Backend {
     }
 }
 
-/// Coordinator configuration.
+/// Coordinator configuration (plan built internally from `spec`; use
+/// [`run_plan`] + [`RunOptions`] to deploy an existing [`Plan`]).
 #[derive(Clone)]
 pub struct CoordinatorConfig {
     pub scenario: Scenario,
     pub spec: PlanSpec,
+    /// Task width `S_m` (columns of every `A_m`).
+    pub cols: usize,
+    /// Wall-clock seconds per virtual millisecond (1e-3 = real-time ms).
+    pub time_scale: f64,
+    pub backend: Backend,
+    pub seed: u64,
+    /// Verify recovered `A_m x_m` against the direct product.
+    pub verify: bool,
+}
+
+/// Execution options for [`run_plan`] — everything the coordinator needs
+/// beyond (scenario, plan).
+#[derive(Clone)]
+pub struct RunOptions {
     /// Task width `S_m` (columns of every `A_m`).
     pub cols: usize,
     /// Wall-clock seconds per virtual millisecond (1e-3 = real-time ms).
@@ -231,13 +246,29 @@ pub fn round_loads(loads: &[f64], l_rows: usize) -> Vec<usize> {
     out
 }
 
-/// Run the coordinator end-to-end. Returns the per-master reports.
+/// Plan + run the coordinator end-to-end. Returns the per-master reports.
 pub fn run(cfg: &CoordinatorConfig) -> anyhow::Result<Report> {
-    let s = &cfg.scenario;
+    let plan: Plan = plan::build(&cfg.scenario, &cfg.spec);
+    run_plan(
+        &cfg.scenario,
+        &plan,
+        &RunOptions {
+            cols: cfg.cols,
+            time_scale: cfg.time_scale,
+            backend: cfg.backend.clone(),
+            seed: cfg.seed,
+            verify: cfg.verify,
+        },
+    )
+}
+
+/// Deploy an existing [`Plan`] (however it was built or deserialized) on
+/// the real multi-threaded runtime. This is the coordinator half of the
+/// unified [`crate::exec::Executor`] seam.
+pub fn run_plan(s: &Scenario, plan: &Plan, opts: &RunOptions) -> anyhow::Result<Report> {
     let m_cnt = s.n_masters();
     let n_workers = s.n_workers();
-    let plan: Plan = plan::build(s, &cfg.spec);
-    let mut rng = Rng::new(cfg.seed);
+    let mut rng = Rng::new(opts.seed);
 
     // ---- Per-master data, codes and sub-task construction -------------
     struct MasterState {
@@ -247,6 +278,11 @@ pub fn run(cfg: &CoordinatorConfig) -> anyhow::Result<Report> {
         t_est: f64,
         received: Vec<(usize, f64)>, // (coded row, value) in arrival order
         rows_got: usize,
+        /// Largest VIRTUAL delay among counted arrivals. Wall-clock
+        /// publish order is deadline + real compute time, so it does not
+        /// track virtual-delay order; the completion instant is the max
+        /// virtual delay over the rows decode consumed.
+        max_delay_ms: f64,
         completion: Option<f64>,
         encode_wall_ms: f64,
         total_dispatched: usize,
@@ -265,14 +301,14 @@ pub fn run(cfg: &CoordinatorConfig) -> anyhow::Result<Report> {
             "coordinator needs integer L_m"
         );
         // Data + model vector.
-        let a: Vec<f32> = (0..l_rows * cfg.cols)
+        let a: Vec<f32> = (0..l_rows * opts.cols)
             .map(|_| rng.normal() as f32)
             .collect();
-        let x: Vec<f32> = (0..cfg.cols).map(|_| rng.normal() as f32).collect();
+        let x: Vec<f32> = (0..opts.cols).map(|_| rng.normal() as f32).collect();
         // Direct product (f64 accumulation) for verification.
         let truth: Vec<f64> = (0..l_rows)
             .map(|i| {
-                a[i * cfg.cols..(i + 1) * cfg.cols]
+                a[i * opts.cols..(i + 1) * opts.cols]
                     .iter()
                     .zip(&x)
                     .map(|(&av, &xv)| av as f64 * xv as f64)
@@ -291,12 +327,12 @@ pub fn run(cfg: &CoordinatorConfig) -> anyhow::Result<Report> {
         // Encode: Ã = G·A through the backend.
         let g32: Vec<f32> = code.generator().data().iter().map(|&v| v as f32).collect();
         let t0 = Instant::now();
-        let coded: Vec<f32> = match &cfg.backend {
-            Backend::Pjrt(h) => h.encode(g32, l_coded, l_rows, a.clone(), cfg.cols)?,
+        let coded: Vec<f32> = match &opts.backend {
+            Backend::Pjrt(h) => h.encode(g32, l_coded, l_rows, a.clone(), opts.cols)?,
             // Fault injection targets worker compute only; the master's
             // encode is assumed reliable (as in the paper's model).
             Backend::Native | Backend::Flaky { .. } => {
-                native_matmul(&g32, l_coded, l_rows, &a, cfg.cols)
+                native_matmul(&g32, l_coded, l_rows, &a, opts.cols)
             }
         };
         let encode_wall_ms = t0.elapsed().as_secs_f64() * 1e3;
@@ -311,7 +347,7 @@ pub fn run(cfg: &CoordinatorConfig) -> anyhow::Result<Report> {
             }
             let p = s.link(m, e.node);
             let delay = LinkDelay::new(&p, l_int as f64, e.k, e.b).sample(&mut rng);
-            let a_block = coded[start * cfg.cols..(start + l_int) * cfg.cols].to_vec();
+            let a_block = coded[start * opts.cols..(start + l_int) * opts.cols].to_vec();
             let queue_idx = if e.node == 0 {
                 n_workers + m
             } else {
@@ -321,7 +357,7 @@ pub fn run(cfg: &CoordinatorConfig) -> anyhow::Result<Report> {
                 master: m,
                 coded_start: start,
                 rows: l_int,
-                cols: cfg.cols,
+                cols: opts.cols,
                 a_block,
                 x: Arc::clone(&x_arc),
                 delay_ms: delay,
@@ -337,6 +373,7 @@ pub fn run(cfg: &CoordinatorConfig) -> anyhow::Result<Report> {
             t_est: mp.t_est,
             received: Vec::new(),
             rows_got: 0,
+            max_delay_ms: 0.0,
             completion: None,
             encode_wall_ms,
             total_dispatched: dispatched,
@@ -356,10 +393,10 @@ pub fn run(cfg: &CoordinatorConfig) -> anyhow::Result<Report> {
         if tasks.is_empty() {
             continue;
         }
-        let backend = cfg.backend.clone();
+        let backend = opts.backend.clone();
         let cancel = Arc::clone(&cancel);
         let tx = res_tx.clone();
-        let scale = cfg.time_scale;
+        let scale = opts.time_scale;
         join.push((
             wid,
             std::thread::Builder::new()
@@ -375,22 +412,15 @@ pub fn run(cfg: &CoordinatorConfig) -> anyhow::Result<Report> {
         if st.completion.is_some() {
             continue; // late arrival after decode (already cancelled)
         }
-        for (offset, &v) in r.values.iter().enumerate().step_by(1) {
-            let _ = offset;
-            let _ = v;
-            break;
-        }
         for (i, &v) in r.values.iter().enumerate() {
             st.received.push((r.coded_start + i, v as f64));
         }
         st.rows_got += r.rows;
+        st.max_delay_ms = st.max_delay_ms.max(r.delay_ms);
         if st.rows_got >= st.l_rows {
-            st.completion = Some(r.delay_ms.max(
-                st.completion.unwrap_or(0.0),
-            ));
-            // The triggering arrival is the completion instant: delays of
-            // earlier arrivals are ≤ this one by construction of the
-            // deadline scheduler.
+            // Completion = slowest virtual delay among the rows decode
+            // consumed (publish order is wall-clock and may differ).
+            st.completion = Some(st.max_delay_ms);
             cancel[r.master].store(true, Ordering::SeqCst);
         }
     }
@@ -407,10 +437,9 @@ pub fn run(cfg: &CoordinatorConfig) -> anyhow::Result<Report> {
     // ---- Decode + verify -------------------------------------------------
     let masters = states
         .into_iter()
-        .enumerate()
-        .map(|(m, st)| {
+        .map(|st| {
             let completion = st.completion.unwrap_or(f64::INFINITY);
-            let max_rel_err = if cfg.verify && st.rows_got >= st.l_rows {
+            let max_rel_err = if opts.verify && st.rows_got >= st.l_rows {
                 let z = st
                     .code
                     .decode(&st.received)
@@ -424,11 +453,12 @@ pub fn run(cfg: &CoordinatorConfig) -> anyhow::Result<Report> {
             } else {
                 None
             };
-            let _ = m;
             MasterReport {
                 completion_ms: completion,
                 t_est_ms: st.t_est,
-                rows_used: st.rows_got.min(st.l_rows + st.rows_got.saturating_sub(st.l_rows)),
+                // Decode consumes exactly L_m rows; arrivals past that
+                // (landed before cancellation took hold) are not "used".
+                rows_used: st.rows_got.min(st.l_rows),
                 rows_cancelled: st.total_dispatched.saturating_sub(st.rows_got),
                 max_rel_err,
                 encode_wall_ms: st.encode_wall_ms,
@@ -437,7 +467,7 @@ pub fn run(cfg: &CoordinatorConfig) -> anyhow::Result<Report> {
         .collect();
 
     Ok(Report {
-        label: plan.label,
+        label: plan.label.clone(),
         masters,
         wall_ms,
         worker_computed,

@@ -1,0 +1,327 @@
+//! Unified execution: one [`Executor`] seam over the Monte-Carlo engine
+//! and the real multi-threaded coordinator.
+//!
+//! Figures, the CLI and services evaluate a `(Scenario, Plan)` pair
+//! through the same call site and swap the engine behind it:
+//!
+//! * [`SimExecutor`] — statistical evaluation, `opts.trials` sampled
+//!   realizations ([`crate::sim`]);
+//! * [`CoordinatorExecutor`] — one real deployment: encode, dispatch
+//!   over delay-injected channels, decode at any `L_m` arrivals
+//!   ([`crate::coordinator`]).
+//!
+//! Both produce the same [`Outcome`] (per-master + system delay
+//! [`Summary`]s plus the planner's `t_est`), so `plan export` → `plan
+//! run --executor sim|coordinator` is a drop-in swap.
+
+use crate::config::Scenario;
+use crate::coordinator::{self, Backend, RunOptions};
+use crate::plan::Plan;
+use crate::sim::{self, McOptions};
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Options shared by every executor. Executors read the subset they
+/// understand (documented per field).
+#[derive(Clone, Debug)]
+pub struct ExecOptions {
+    /// Monte-Carlo trials (sim only; the coordinator is one realization).
+    pub trials: usize,
+    pub seed: u64,
+    /// Worker threads for the sim engine (0 = all cores).
+    pub threads: usize,
+    /// Keep raw per-trial system delays (sim only; needed for CDFs).
+    pub keep_samples: bool,
+    /// Task width `S_m` (coordinator only).
+    pub cols: usize,
+    /// Wall-clock seconds per virtual millisecond (coordinator only).
+    pub time_scale: f64,
+    /// Verify recovered products against the direct computation
+    /// (coordinator only).
+    pub verify: bool,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        Self {
+            trials: 10_000,
+            seed: 2022,
+            threads: 0,
+            keep_samples: false,
+            cols: 64,
+            time_scale: 1e-4,
+            verify: false,
+        }
+    }
+}
+
+/// Common execution result: per-master + system delay summaries.
+#[derive(Clone, Debug)]
+pub struct Outcome {
+    /// Plan legend label.
+    pub label: String,
+    /// Which executor produced this ("sim" / "coordinator").
+    pub executor: String,
+    /// Per-master completion-delay summaries (ms).
+    pub per_master: Vec<Summary>,
+    /// System delay = max over masters (ms).
+    pub system: Summary,
+    /// Planner's predicted system delay `max_m t_m*` (ms).
+    pub t_est_ms: f64,
+    /// Raw system-delay samples when requested and available.
+    pub samples: Option<Vec<f64>>,
+}
+
+impl Outcome {
+    /// Mean observed system delay (ms).
+    pub fn system_mean_ms(&self) -> f64 {
+        self.system.mean()
+    }
+
+    /// Structured export (one record per master + the system view).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("label", Json::Str(self.label.clone()));
+        j.set("executor", Json::Str(self.executor.clone()));
+        j.set("mean_system_delay_ms", Json::Num(self.system.mean()));
+        j.set("sem_ms", Json::Num(self.system.sem()));
+        j.set("t_est_ms", Json::Num(self.t_est_ms));
+        j.set("realizations", Json::Num(self.system.count() as f64));
+        j.set(
+            "per_master_mean_ms",
+            Json::from_f64_slice(
+                &self
+                    .per_master
+                    .iter()
+                    .map(|s| s.mean())
+                    .collect::<Vec<_>>(),
+            ),
+        );
+        j
+    }
+}
+
+/// One engine that can evaluate a plan on a scenario.
+pub trait Executor {
+    /// Registry-style name ("sim", "coordinator").
+    fn name(&self) -> &'static str;
+
+    /// Evaluate `plan` on `s`.
+    fn execute(&self, s: &Scenario, plan: &Plan, opts: &ExecOptions)
+        -> anyhow::Result<Outcome>;
+}
+
+/// Monte-Carlo evaluation (§V methodology): `opts.trials` sampled
+/// realizations, thread-parallel.
+pub struct SimExecutor;
+
+impl Executor for SimExecutor {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn execute(
+        &self,
+        s: &Scenario,
+        plan: &Plan,
+        opts: &ExecOptions,
+    ) -> anyhow::Result<Outcome> {
+        plan.validate(s)?;
+        let r = sim::run(
+            s,
+            plan,
+            &McOptions {
+                trials: opts.trials,
+                seed: opts.seed,
+                keep_samples: opts.keep_samples,
+                threads: opts.threads,
+            },
+        );
+        Ok(Outcome {
+            label: plan.label.clone(),
+            executor: self.name().to_string(),
+            per_master: r.per_master,
+            system: r.system,
+            t_est_ms: plan.t_est(),
+            samples: r.samples,
+        })
+    }
+}
+
+/// Real deployment through the multi-threaded coordinator: one
+/// realization with actual encode / mat-vec / decode.
+pub struct CoordinatorExecutor {
+    /// Compute backend for encode + worker mat-vec.
+    pub backend: Backend,
+}
+
+impl Default for CoordinatorExecutor {
+    fn default() -> Self {
+        Self {
+            backend: Backend::Native,
+        }
+    }
+}
+
+impl Executor for CoordinatorExecutor {
+    fn name(&self) -> &'static str {
+        "coordinator"
+    }
+
+    fn execute(
+        &self,
+        s: &Scenario,
+        plan: &Plan,
+        opts: &ExecOptions,
+    ) -> anyhow::Result<Outcome> {
+        plan.validate(s)?;
+        let report = coordinator::run_plan(
+            s,
+            plan,
+            &RunOptions {
+                cols: opts.cols,
+                time_scale: opts.time_scale,
+                backend: self.backend.clone(),
+                seed: opts.seed,
+                verify: opts.verify,
+            },
+        )?;
+        let mut per_master = Vec::with_capacity(report.masters.len());
+        for mr in &report.masters {
+            let mut sm = Summary::new();
+            sm.push(mr.completion_ms);
+            per_master.push(sm);
+        }
+        let mut system = Summary::new();
+        system.push(report.system_completion_ms());
+        Ok(Outcome {
+            label: plan.label.clone(),
+            executor: self.name().to_string(),
+            per_master,
+            system,
+            t_est_ms: plan.t_est(),
+            samples: opts
+                .keep_samples
+                .then(|| vec![report.system_completion_ms()]),
+        })
+    }
+}
+
+/// Resolve an executor by name ("sim" | "coordinator"; the coordinator
+/// uses the native backend — construct [`CoordinatorExecutor`] directly
+/// for PJRT or fault-injecting backends).
+pub fn executor_by_name(name: &str) -> anyhow::Result<Box<dyn Executor>> {
+    match name {
+        "sim" => Ok(Box::new(SimExecutor)),
+        "coordinator" => Ok(Box::new(CoordinatorExecutor::default())),
+        other => anyhow::bail!("unknown executor '{other}' (sim|coordinator)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assign::ValueModel;
+    use crate::config::{AShift, CommModel};
+    use crate::policy::PolicySpec;
+
+    fn tiny_scenario() -> Scenario {
+        Scenario::random(
+            "exec-test",
+            2,
+            4,
+            128.0,
+            AShift::Range(0.01, 0.05),
+            2.0,
+            CommModel::Stochastic,
+            17,
+        )
+    }
+
+    #[test]
+    fn sim_outcome_matches_engine() {
+        let s = tiny_scenario();
+        let plan = PolicySpec::new("dedi-iter", ValueModel::Markov, "markov")
+            .build(&s)
+            .unwrap();
+        let opts = ExecOptions {
+            trials: 2_000,
+            seed: 5,
+            ..Default::default()
+        };
+        let out = SimExecutor.execute(&s, &plan, &opts).unwrap();
+        let direct = sim::run(
+            &s,
+            &plan,
+            &McOptions {
+                trials: 2_000,
+                seed: 5,
+                keep_samples: false,
+                threads: 0,
+            },
+        );
+        assert_eq!(out.system.mean(), direct.system.mean());
+        assert_eq!(out.executor, "sim");
+        assert_eq!(out.per_master.len(), 2);
+        assert!((out.t_est_ms - plan.t_est()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coordinator_executor_runs_native() {
+        let s = tiny_scenario();
+        let plan = PolicySpec::new("dedi-iter", ValueModel::Markov, "markov")
+            .build(&s)
+            .unwrap();
+        let opts = ExecOptions {
+            seed: 5,
+            cols: 16,
+            time_scale: 1e-6,
+            verify: true,
+            ..Default::default()
+        };
+        let out = CoordinatorExecutor::default()
+            .execute(&s, &plan, &opts)
+            .unwrap();
+        assert_eq!(out.executor, "coordinator");
+        assert_eq!(out.system.count(), 1);
+        assert!(out.system_mean_ms().is_finite() && out.system_mean_ms() > 0.0);
+    }
+
+    #[test]
+    fn executor_by_name_resolves() {
+        assert_eq!(executor_by_name("sim").unwrap().name(), "sim");
+        assert_eq!(
+            executor_by_name("coordinator").unwrap().name(),
+            "coordinator"
+        );
+        assert!(executor_by_name("quantum").is_err());
+    }
+
+    #[test]
+    fn outcome_json_parses_back() {
+        let s = tiny_scenario();
+        let plan = PolicySpec::new("frac", ValueModel::Markov, "markov")
+            .build(&s)
+            .unwrap();
+        let out = SimExecutor
+            .execute(
+                &s,
+                &plan,
+                &ExecOptions {
+                    trials: 500,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        let j = out.to_json().to_string_pretty();
+        let back = crate::util::json::parse(&j).unwrap();
+        assert_eq!(
+            back.get("executor").and_then(|v| v.as_str()),
+            Some("sim")
+        );
+        assert_eq!(
+            back.get("realizations").and_then(|v| v.as_usize()),
+            Some(500)
+        );
+    }
+}

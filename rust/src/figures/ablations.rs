@@ -13,7 +13,8 @@ use super::common::{Figure, FigureOptions};
 use crate::alloc::{markov, sca, EffLink};
 use crate::assign::ValueModel;
 use crate::config::{CommModel, Scenario};
-use crate::plan::{self, LoadMethod, PlanSpec, Policy};
+use crate::plan;
+use crate::policy::PolicySpec;
 use crate::sim::{self, multimsg, McOptions};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -32,14 +33,9 @@ pub fn run(id: &str, opts: &FigureOptions) -> anyhow::Result<Figure> {
 }
 
 fn base_plan(s: &Scenario) -> plan::Plan {
-    plan::build(
-        s,
-        &PlanSpec {
-            policy: Policy::DediIter,
-            values: ValueModel::Markov,
-            loads: LoadMethod::Markov,
-        },
-    )
+    PolicySpec::new("dedi-iter", ValueModel::Markov, "markov")
+        .build(s)
+        .expect("built-in policy resolves")
 }
 
 /// Scale every load of a plan by `beta / current-overhead` so the coding
@@ -163,13 +159,13 @@ fn straggler(opts: &FigureOptions) -> Figure {
             keep_samples: false,
             threads: opts.threads,
         };
-        let spec = |policy| PlanSpec {
-            policy,
-            values: ValueModel::Exact,
-            loads: LoadMethod::Exact,
+        let build = |policy: &str| {
+            PolicySpec::new(policy, ValueModel::Exact, "exact")
+                .build(&s)
+                .expect("built-in policy resolves")
         };
-        let unc = sim::run(&s, &plan::build(&s, &spec(Policy::UncodedUniform)), &mc);
-        let ded = sim::run(&s, &plan::build(&s, &spec(Policy::DediIter)), &mc);
+        let unc = sim::run(&s, &build("uncoded"), &mc);
+        let ded = sim::run(&s, &build("dedi-iter"), &mc);
         let red = 100.0 * (1.0 - ded.system.mean() / unc.system.mean());
         t.row_fmt(
             &format!("{prob:.2} × {slow:.0}"),

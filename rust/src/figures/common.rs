@@ -1,8 +1,13 @@
 //! Shared figure types + helpers.
+//!
+//! Figures resolve strategies through [`crate::policy::registry`] by
+//! name — a policy registered at runtime is immediately addressable from
+//! [`roster`]-style spec lists with no figure-code edits.
 
 use crate::assign::ValueModel;
 use crate::config::Scenario;
-use crate::plan::{self, LoadMethod, Plan, PlanSpec, Policy};
+use crate::plan::Plan;
+use crate::policy::PolicySpec;
 use crate::sim::{self, McOptions, McResults};
 use crate::util::json::Json;
 use crate::util::table::Table;
@@ -96,14 +101,16 @@ pub struct Evaluated {
     pub results: McResults,
 }
 
-/// Build + evaluate one plan spec.
+/// Build + evaluate one registry-resolved policy spec.
 pub fn evaluate(
     s: &Scenario,
-    spec: &PlanSpec,
+    spec: &PolicySpec,
     opts: &FigureOptions,
     keep_samples: bool,
 ) -> Evaluated {
-    let plan = plan::build(s, spec);
+    let plan = spec
+        .build(s)
+        .unwrap_or_else(|e| panic!("figure spec failed to resolve: {e}"));
     let results = sim::run(s, &plan, &opts.mc(keep_samples));
     Evaluated {
         label: plan.label.clone(),
@@ -112,58 +119,22 @@ pub fn evaluate(
     }
 }
 
-/// The §V-B algorithm roster (Fig. 4/5/6/8 legends). `small_scale` adds
-/// the λ-sweep optimum (M = 2 only). `values`/`loads` configure the
-/// proposed algorithms (Markov for the general case, Exact for
-/// computation-dominant scenarios like Fig. 8).
-pub fn roster(
-    small_scale: bool,
-    values: ValueModel,
-    loads: LoadMethod,
-) -> Vec<PlanSpec> {
+/// The §V-B algorithm roster (Fig. 4/5/6/8 legends), by registry name.
+/// `small_scale` adds the λ-sweep optimum (M = 2 only). `values`/`loads`
+/// configure the proposed algorithms (Markov for the general case,
+/// "exact" for computation-dominant scenarios like Fig. 8).
+pub fn roster(small_scale: bool, values: ValueModel, loads: &str) -> Vec<PolicySpec> {
     let mut specs = vec![
-        PlanSpec {
-            policy: Policy::UncodedUniform,
-            values,
-            loads,
-        },
-        PlanSpec {
-            policy: Policy::CodedUniform,
-            values,
-            loads,
-        },
-        PlanSpec {
-            policy: Policy::DediSimple,
-            values,
-            loads,
-        },
-        PlanSpec {
-            policy: Policy::DediIter,
-            values,
-            loads,
-        },
-        PlanSpec {
-            policy: Policy::DediIter,
-            values,
-            loads: LoadMethod::Sca,
-        },
-        PlanSpec {
-            policy: Policy::Frac,
-            values,
-            loads,
-        },
-        PlanSpec {
-            policy: Policy::Frac,
-            values,
-            loads: LoadMethod::Sca,
-        },
+        PolicySpec::new("uncoded", values, loads),
+        PolicySpec::new("coded", values, loads),
+        PolicySpec::new("dedi-simple", values, loads),
+        PolicySpec::new("dedi-iter", values, loads),
+        PolicySpec::new("dedi-iter", values, "sca"),
+        PolicySpec::new("frac", values, loads),
+        PolicySpec::new("frac", values, "sca"),
     ];
     if small_scale {
-        specs.push(PlanSpec {
-            policy: Policy::FracOptimal,
-            values,
-            loads: LoadMethod::Sca,
-        });
+        specs.push(PolicySpec::new("optimal", values, "sca"));
     }
     specs
 }

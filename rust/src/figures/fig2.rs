@@ -11,37 +11,25 @@
 use super::common::{evaluate, Evaluated, Figure, FigureOptions};
 use crate::assign::ValueModel;
 use crate::config::{CommModel, Scenario};
-use crate::plan::{LoadMethod, PlanSpec, Policy};
+use crate::policy::PolicySpec;
 use crate::util::json::Json;
 use crate::util::stats::Ecdf;
 use crate::util::table::Table;
 
-/// The three validation variants.
-pub fn variants() -> Vec<(&'static str, PlanSpec)> {
+/// The three validation variants (registry-resolved).
+pub fn variants() -> Vec<(&'static str, PolicySpec)> {
     vec![
         (
             "Exact (Thm 2)",
-            PlanSpec {
-                policy: Policy::DediIter,
-                values: ValueModel::Exact,
-                loads: LoadMethod::Exact,
-            },
+            PolicySpec::new("dedi-iter", ValueModel::Exact, "exact"),
         ),
         (
             "Approx (Thm 1)",
-            PlanSpec {
-                policy: Policy::DediIter,
-                values: ValueModel::Markov,
-                loads: LoadMethod::Markov,
-            },
+            PolicySpec::new("dedi-iter", ValueModel::Markov, "markov"),
         ),
         (
             "Approx, enhanced",
-            PlanSpec {
-                policy: Policy::DediIter,
-                values: ValueModel::Markov,
-                loads: LoadMethod::Exact,
-            },
+            PolicySpec::new("dedi-iter", ValueModel::Markov, "exact"),
         ),
     ]
 }
@@ -78,9 +66,6 @@ pub fn validation(id: &str, title: &str, s: &Scenario, opts: &FigureOptions) -> 
         .map(|(_, e)| e.results.system_ecdf().expect("samples kept"))
         .collect();
     let mut series = Vec::new();
-    for &(ref name, _) in &evals {
-        let _ = name;
-    }
     for p in [0.05, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99] {
         let vals: Vec<f64> = ecdfs.iter().map(|e| e.inverse(p)).collect();
         tb.row_fmt(&format!("{p:.2}"), &vals, 3);

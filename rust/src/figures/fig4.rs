@@ -8,13 +8,12 @@
 use super::common::{evaluate, result_json, roster, Figure, FigureOptions};
 use crate::assign::ValueModel;
 use crate::config::{CommModel, Scenario};
-use crate::plan::LoadMethod;
 use crate::util::json::Json;
 use crate::util::table::Table;
 
 fn delays(id: &str, title: &str, s: &Scenario, small: bool, opts: &FigureOptions) -> Figure {
     let mut fig = Figure::new(id, title);
-    let specs = roster(small, ValueModel::Markov, LoadMethod::Markov);
+    let specs = roster(small, ValueModel::Markov, "markov");
     let mut t = Table::new(&["algorithm", "avg delay (ms)", "±sem", "planner t* (ms)"]);
     let mut results = Vec::new();
     let mut uncoded_mean = None;

@@ -5,34 +5,18 @@
 use super::common::{evaluate, Figure, FigureOptions};
 use crate::assign::ValueModel;
 use crate::config::{CommModel, Scenario};
-use crate::plan::{LoadMethod, PlanSpec, Policy};
+use crate::policy::PolicySpec;
 use crate::util::json::Json;
 use crate::util::stats::Ecdf;
 use crate::util::table::Table;
 
-fn specs() -> Vec<PlanSpec> {
+fn specs() -> Vec<PolicySpec> {
     let v = ValueModel::Markov;
     vec![
-        PlanSpec {
-            policy: Policy::CodedUniform,
-            values: v,
-            loads: LoadMethod::Markov,
-        },
-        PlanSpec {
-            policy: Policy::DediIter,
-            values: v,
-            loads: LoadMethod::Markov,
-        },
-        PlanSpec {
-            policy: Policy::DediIter,
-            values: v,
-            loads: LoadMethod::Sca,
-        },
-        PlanSpec {
-            policy: Policy::Frac,
-            values: v,
-            loads: LoadMethod::Sca,
-        },
+        PolicySpec::new("coded", v, "markov"),
+        PolicySpec::new("dedi-iter", v, "markov"),
+        PolicySpec::new("dedi-iter", v, "sca"),
+        PolicySpec::new("frac", v, "sca"),
     ]
 }
 

@@ -9,36 +9,21 @@
 use super::common::{evaluate, Figure, FigureOptions};
 use crate::assign::ValueModel;
 use crate::config::{CommModel, Scenario};
-use crate::plan::{LoadMethod, Plan, PlanSpec, Policy};
+use crate::plan::Plan;
+use crate::policy::PolicySpec;
 use crate::util::json::Json;
 use crate::util::table::Table;
 
 /// γ/u values swept (paper's x-axis).
 pub const RATIOS: &[f64] = &[0.5, 1.0, 2.0, 4.0, 8.0];
 
-fn specs() -> Vec<PlanSpec> {
+fn specs() -> Vec<PolicySpec> {
     let v = ValueModel::Markov;
     vec![
-        PlanSpec {
-            policy: Policy::UncodedUniform,
-            values: v,
-            loads: LoadMethod::Markov,
-        },
-        PlanSpec {
-            policy: Policy::CodedUniform,
-            values: v,
-            loads: LoadMethod::Markov,
-        },
-        PlanSpec {
-            policy: Policy::DediIter,
-            values: v,
-            loads: LoadMethod::Markov,
-        },
-        PlanSpec {
-            policy: Policy::Frac,
-            values: v,
-            loads: LoadMethod::Markov,
-        },
+        PolicySpec::new("uncoded", v, "markov"),
+        PolicySpec::new("coded", v, "markov"),
+        PolicySpec::new("dedi-iter", v, "markov"),
+        PolicySpec::new("frac", v, "markov"),
     ]
 }
 
@@ -67,10 +52,7 @@ pub fn run(opts: &FigureOptions) -> Figure {
     );
     let labels: Vec<String> = specs()
         .iter()
-        .map(|sp| {
-            // Build once on a throwaway scenario to get the label.
-            sp.label()
-        })
+        .map(|sp| sp.label().expect("built-in roster resolves"))
         .collect();
 
     let mut delay_rows: Vec<Vec<f64>> = vec![Vec::new(); specs().len()];

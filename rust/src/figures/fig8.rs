@@ -19,7 +19,6 @@
 use super::common::{evaluate, result_json, roster, Figure, FigureOptions};
 use crate::assign::ValueModel;
 use crate::config::Scenario;
-use crate::plan::LoadMethod;
 use crate::util::json::Json;
 use crate::util::table::Table;
 
@@ -30,7 +29,7 @@ fn panel(
     s: &Scenario,
     opts: &FigureOptions,
 ) -> Vec<Json> {
-    let specs = roster(false, ValueModel::Exact, LoadMethod::Exact);
+    let specs = roster(false, ValueModel::Exact, "exact");
     let mut t = Table::new(&["algorithm", "avg delay (ms)", "±sem", "planner t* (ms)"]);
     let mut results = Vec::new();
     for spec in &specs {

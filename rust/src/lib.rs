@@ -16,8 +16,9 @@
 //!   Artifacts are executed through the PJRT CPU client ([`runtime`]);
 //!   python never runs on the request path.
 //!
-//! See `DESIGN.md` for the full system inventory and the per-experiment
-//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `DESIGN.md` (repository root) for the full architecture — the
+//! trait/registry/executor seams, the module → paper-section table and
+//! the documented environment substitutions.
 //!
 //! ## Crate map
 //!
@@ -29,8 +30,10 @@
 //! | [`coding`] | real-valued systematic MDS code + dense LU solver |
 //! | [`alloc`] | load allocation: Thm 1 (Markov), Thm 2 (Lambert), Thm 3 (fractional KKT), Alg. 3 (SCA) |
 //! | [`assign`] | worker assignment: Alg. 1 (iterated greedy), Alg. 2 (simple greedy), Alg. 4 (fractional), λ-sweep optimum, uniform benchmarks |
-//! | [`plan`] | policy → `Plan` (assignment + allocation) pipeline |
+//! | [`policy`] | OPEN strategy API: `Assigner`/`LoadAllocator` traits, string-keyed registry, serializable `PolicySpec` |
+//! | [`plan`] | strategy pair → `Plan` (assignment + allocation) pipeline; schema-versioned plan JSON |
 //! | [`sim`] | Monte-Carlo completion-delay engine (multi-threaded) |
+//! | [`exec`] | unified `Executor` seam: one call site over [`sim`] and [`coordinator`] |
 //! | [`traces`] | EC2-style instance profiles + shifted-exponential fitting (Fig. 7) |
 //! | [`figures`] | regenerates every figure of §V (Figs. 2–8) |
 //! | [`runtime`] | PJRT bridge: artifact manifest, executable cache, typed execute |
@@ -43,8 +46,10 @@ pub mod config;
 pub mod coding;
 pub mod alloc;
 pub mod assign;
+pub mod policy;
 pub mod plan;
 pub mod sim;
+pub mod exec;
 pub mod traces;
 pub mod figures;
 pub mod runtime;

@@ -3,16 +3,28 @@
 //! A [`Plan`] is the complete static decision the paper's algorithms
 //! produce — everything the Monte-Carlo engine ([`crate::sim`]) or the
 //! real coordinator ([`crate::coordinator`]) needs to run a deployment.
+//!
+//! Strategy dispatch is OPEN: [`build_with`] drives any
+//! [`crate::policy::Assigner`] + [`crate::policy::LoadAllocator`] pair,
+//! and [`build`] resolves the legacy [`PlanSpec`] enums through
+//! [`crate::policy::registry`] — there is no policy `match` here, so new
+//! strategies need zero edits to this module (see `DESIGN.md` §3).
+//!
+//! Plans serialize ([`Plan::to_json`] / [`Plan::from_json`], schema-
+//! versioned): plan once, ship the JSON, execute many — the caching /
+//! sharding story for serving planned deployments at scale (`coded-coop
+//! plan export` / `plan run`).
 
-use crate::alloc::{self, comp_dominant, markov, sca, EffLink};
-use crate::assign::{
-    dedicated_iter, dedicated_simple, fractional, optimal, uniform, Dedicated,
-    Fractional, ValueMatrix, ValueModel,
-};
+use crate::assign::ValueModel;
 use crate::config::Scenario;
-use crate::model::params::theta_fractional;
+use crate::policy::{Assigner, LoadAllocator, PolicySpec};
+use crate::util::json::Json;
 
 /// Assignment policy (§V legends).
+///
+/// Legacy closed enum, kept as a convenience for the built-in strategies;
+/// the open, string-keyed surface is [`crate::policy::PolicySpec`] + the
+/// registry.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Policy {
     /// Benchmark 1: uniform workers, equal split, no coding, no local.
@@ -29,7 +41,36 @@ pub enum Policy {
     FracOptimal,
 }
 
+impl Policy {
+    /// Registry key of this built-in policy.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::UncodedUniform => "uncoded",
+            Policy::CodedUniform => "coded",
+            Policy::DediSimple => "dedi-simple",
+            Policy::DediIter => "dedi-iter",
+            Policy::Frac => "frac",
+            Policy::FracOptimal => "optimal",
+        }
+    }
+
+    /// Inverse of [`Policy::name`] (built-ins only).
+    pub fn from_name(s: &str) -> Option<Policy> {
+        Some(match s {
+            "uncoded" => Policy::UncodedUniform,
+            "coded" => Policy::CodedUniform,
+            "dedi-simple" => Policy::DediSimple,
+            "dedi-iter" => Policy::DediIter,
+            "frac" => Policy::Frac,
+            "optimal" => Policy::FracOptimal,
+            _ => return None,
+        })
+    }
+}
+
 /// Load-allocation method layered on the assignment.
+///
+/// Legacy closed enum; the registry accepts arbitrary allocator names.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LoadMethod {
     /// Theorem 1 closed form on θ (the "Approx" of Figs. 2–3).
@@ -40,7 +81,32 @@ pub enum LoadMethod {
     Sca,
 }
 
-/// Full planning specification.
+impl LoadMethod {
+    /// Registry key of this built-in allocator.
+    pub fn name(&self) -> &'static str {
+        match self {
+            LoadMethod::Markov => "markov",
+            LoadMethod::Exact => "exact",
+            LoadMethod::Sca => "sca",
+        }
+    }
+
+    /// Inverse of [`LoadMethod::name`] (built-ins only).
+    pub fn from_name(s: &str) -> Option<LoadMethod> {
+        Some(match s {
+            "markov" => LoadMethod::Markov,
+            "exact" => LoadMethod::Exact,
+            "sca" => LoadMethod::Sca,
+            _ => return None,
+        })
+    }
+}
+
+/// Full planning specification over the built-in strategies.
+///
+/// Thin shim over [`PolicySpec`]: kept `Copy` and enum-typed so existing
+/// examples and harness code keep compiling; new code (and anything that
+/// must name runtime-registered strategies) should use [`PolicySpec`].
 #[derive(Clone, Copy, Debug)]
 pub struct PlanSpec {
     pub policy: Policy,
@@ -50,24 +116,46 @@ pub struct PlanSpec {
 }
 
 impl PlanSpec {
+    /// The open-world, registry-keyed equivalent of this spec.
+    pub fn to_policy_spec(&self) -> PolicySpec {
+        PolicySpec::new(self.policy.name(), self.values, self.loads.name())
+    }
+
+    /// Legend label ("Dedi, iter + SCA", …), as the resolved strategy
+    /// reports it.
     pub fn label(&self) -> String {
-        let base = match self.policy {
-            Policy::UncodedUniform => return "Uncoded".to_string(),
-            Policy::CodedUniform => return "Coded [5]".to_string(),
-            Policy::DediSimple => "Dedi, simple",
-            Policy::DediIter => "Dedi, iter",
-            Policy::Frac => "Frac",
-            Policy::FracOptimal => "Optimal",
-        };
-        match self.loads {
-            LoadMethod::Sca => format!("{base} + SCA"),
-            _ => base.to_string(),
-        }
+        self.to_policy_spec()
+            .label()
+            .expect("built-in policies always resolve")
+    }
+
+    pub fn to_json(&self) -> Json {
+        self.to_policy_spec().to_json()
+    }
+
+    /// Parse from JSON. Fails for registry names that are not built-ins —
+    /// parse a [`PolicySpec`] instead for those.
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let ps = PolicySpec::from_json(j)?;
+        let policy = Policy::from_name(&ps.policy).ok_or_else(|| {
+            anyhow::anyhow!("policy '{}' is not a built-in (use PolicySpec)", ps.policy)
+        })?;
+        let loads = LoadMethod::from_name(&ps.loads).ok_or_else(|| {
+            anyhow::anyhow!(
+                "load method '{}' is not a built-in (use PolicySpec)",
+                ps.loads
+            )
+        })?;
+        Ok(PlanSpec {
+            policy,
+            values: ps.values,
+            loads,
+        })
     }
 }
 
 /// One node's share of a master's plan.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PlanEntry {
     /// Node id: 0 = the master's local processor, `n ≥ 1` = worker n.
     pub node: usize,
@@ -80,7 +168,7 @@ pub struct PlanEntry {
 }
 
 /// Per-master plan.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct MasterPlan {
     pub entries: Vec<PlanEntry>,
     /// Planner's predicted completion delay `t_m*` (ms).
@@ -92,10 +180,96 @@ impl MasterPlan {
     pub fn total_load(&self) -> f64 {
         self.entries.iter().map(|e| e.load).sum()
     }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("t_est", Json::Num(self.t_est));
+        j.set("l_rows", Json::Num(self.l_rows));
+        j.set(
+            "entries",
+            Json::Arr(
+                self.entries
+                    .iter()
+                    .map(|e| {
+                        let mut o = Json::obj();
+                        o.set("node", Json::Num(e.node as f64));
+                        o.set("load", Json::Num(e.load));
+                        o.set("k", Json::Num(e.k));
+                        o.set("b", Json::Num(e.b));
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+        j
+    }
+
+    /// Parse + validate one master's plan. Malformed loads/shares (from
+    /// hand-edited JSON) are rejected here so they can never reach the
+    /// planner/simulator internals as NaNs or out-of-range fractions.
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let num = |j: &Json, k: &str| -> anyhow::Result<f64> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("master plan missing number '{k}'"))
+        };
+        let t_est = num(j, "t_est")?;
+        let l_rows = num(j, "l_rows")?;
+        anyhow::ensure!(
+            l_rows.is_finite() && l_rows > 0.0,
+            "l_rows must be positive, got {l_rows}"
+        );
+        anyhow::ensure!(
+            t_est.is_finite() && t_est >= 0.0,
+            "t_est must be finite and ≥ 0, got {t_est}"
+        );
+        let entries = j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("master plan missing 'entries'"))?
+            .iter()
+            .map(|e| {
+                let node = e
+                    .get("node")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("entry missing integer 'node'"))?;
+                let load = num(e, "load")?;
+                let k = num(e, "k")?;
+                let b = num(e, "b")?;
+                anyhow::ensure!(
+                    load.is_finite() && load >= 0.0,
+                    "node {node}: load must be finite and ≥ 0, got {load}"
+                );
+                // Tolerate float epsilon above 1 (grid arithmetic in some
+                // assigners) by clamping back to 1 — downstream samplers
+                // assert shares ≤ 1 exactly; reject anything materially
+                // out of range.
+                anyhow::ensure!(
+                    k.is_finite() && k > 0.0 && k <= 1.0 + 1e-9,
+                    "node {node}: compute share k={k} outside (0, 1]"
+                );
+                anyhow::ensure!(
+                    b.is_finite() && b > 0.0 && b <= 1.0 + 1e-9,
+                    "node {node}: bandwidth share b={b} outside (0, 1]"
+                );
+                Ok(PlanEntry {
+                    node,
+                    load,
+                    k: k.min(1.0),
+                    b: b.min(1.0),
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(MasterPlan {
+            entries,
+            t_est,
+            l_rows,
+        })
+    }
 }
 
 /// A complete deployment decision.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Plan {
     pub label: String,
     /// Uncoded plans need ALL nodes to finish (no redundancy).
@@ -104,134 +278,151 @@ pub struct Plan {
 }
 
 impl Plan {
+    /// Plan-document schema version ([`Plan::to_json`] stamps it;
+    /// [`Plan::from_json`] rejects documents from a different major).
+    pub const SCHEMA: u64 = 1;
+
     /// Predicted system delay `max_m t_m*`.
     pub fn t_est(&self) -> f64 {
         self.masters.iter().map(|p| p.t_est).fold(0.0, f64::max)
     }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("schema", Json::Num(Self::SCHEMA as f64));
+        j.set("label", Json::Str(self.label.clone()));
+        j.set("uncoded", Json::Bool(self.uncoded));
+        j.set(
+            "masters",
+            Json::Arr(self.masters.iter().map(MasterPlan::to_json).collect()),
+        );
+        j
+    }
+
+    /// Parse + validate a serialized plan (schema-checked round-trip of
+    /// [`Plan::to_json`]).
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let schema = j
+            .get("schema")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("plan document missing 'schema'"))?;
+        anyhow::ensure!(
+            schema as u64 == Self::SCHEMA,
+            "unsupported plan schema {schema} (this build reads schema {})",
+            Self::SCHEMA
+        );
+        let label = j
+            .get("label")
+            .and_then(Json::as_str)
+            .unwrap_or("imported")
+            .to_string();
+        // `uncoded` flips the completion semantics (all-nodes vs any-L_m),
+        // so a document that omits it is rejected rather than defaulted.
+        let uncoded = j
+            .get("uncoded")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| anyhow::anyhow!("plan document missing boolean 'uncoded'"))?;
+        let masters = j
+            .get("masters")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("plan document missing 'masters'"))?
+            .iter()
+            .map(MasterPlan::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        anyhow::ensure!(!masters.is_empty(), "plan has no masters");
+        Ok(Plan {
+            label,
+            uncoded,
+            masters,
+        })
+    }
+
+    /// Cross-check a (possibly deserialized) plan against the scenario it
+    /// is about to run on: master count and node ids must be in range,
+    /// otherwise the engines would index out of bounds. Call this at the
+    /// JSON boundary before handing a plan to an executor.
+    pub fn validate(&self, s: &Scenario) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.masters.len() == s.n_masters(),
+            "plan has {} masters but scenario '{}' has {}",
+            self.masters.len(),
+            s.name,
+            s.n_masters()
+        );
+        for (m, mp) in self.masters.iter().enumerate() {
+            for e in &mp.entries {
+                anyhow::ensure!(
+                    e.node <= s.n_workers(),
+                    "master {m}: plan entry names node {} but scenario '{}' has workers 1..={}",
+                    e.node,
+                    s.name,
+                    s.n_workers()
+                );
+            }
+            // Every plan must distribute at least L_m rows: a coded plan
+            // below L can never decode (infinite delay), an uncoded plan
+            // below L would silently report an optimistic finite delay.
+            anyhow::ensure!(
+                mp.total_load() >= mp.l_rows * (1.0 - 1e-9),
+                "master {m}: total load {} below L = {} — the task could never complete",
+                mp.total_load(),
+                mp.l_rows
+            );
+        }
+        Ok(())
+    }
 }
 
-/// Build a plan for `spec` on `s`.
+/// Build a plan for the built-in `spec` on `s` (registry-routed; see
+/// [`build_with`] for the open-world entry point).
 pub fn build(s: &Scenario, spec: &PlanSpec) -> Plan {
-    match spec.policy {
-        Policy::UncodedUniform => build_uncoded(s),
-        Policy::CodedUniform => {
-            let d = uniform::assign(s.n_masters(), s.n_workers());
-            build_dedicated(s, &d, LoadMethod::Exact, "Coded [5]".into())
-        }
-        Policy::DediSimple => {
-            let vm = ValueMatrix::new(s, spec.values);
-            let d = dedicated_simple::assign(&vm);
-            build_dedicated(s, &d, spec.loads, spec.label())
-        }
-        Policy::DediIter => {
-            let vm = ValueMatrix::new(s, spec.values);
-            let d = dedicated_iter::assign(&vm, &Default::default());
-            build_dedicated(s, &d, spec.loads, spec.label())
-        }
-        Policy::Frac => {
-            let vm = ValueMatrix::new(s, spec.values);
-            let d = dedicated_iter::assign(&vm, &Default::default());
-            let f = fractional::assign(s, &d, &Default::default());
-            build_fractional(s, &f, spec.loads, spec.label())
-        }
-        Policy::FracOptimal => {
-            let f = optimal::assign(s, &Default::default());
-            build_fractional(s, &f, spec.loads, spec.label())
-        }
-    }
+    spec.to_policy_spec()
+        .build(s)
+        .expect("built-in policies always resolve")
 }
 
-fn build_uncoded(s: &Scenario) -> Plan {
-    let d = uniform::assign(s.n_masters(), s.n_workers());
+/// Build a plan from any strategy pair: the single generic pipeline every
+/// policy flows through (assign → per-master allocate → filter zero
+/// loads).
+pub fn build_with(
+    s: &Scenario,
+    assigner: &dyn Assigner,
+    allocator: &dyn LoadAllocator,
+    label: &str,
+) -> Plan {
+    let asn = assigner.assign(s);
+    let uncoded = asn.uncoded();
     let masters = (0..s.n_masters())
         .map(|m| {
-            let ws = d.workers_of(m);
-            let share = s.l_rows(m) / ws.len() as f64;
-            let entries: Vec<PlanEntry> = ws
-                .iter()
-                .map(|&w| PlanEntry {
-                    node: w + 1,
-                    load: share,
-                    k: 1.0,
-                    b: 1.0,
-                })
+            let (nodes, shares) = asn.nodes_of(s, m);
+            // Fail loudly at build time on malformed strategy output —
+            // otherwise a registered assigner's bad share would only
+            // surface as a deep sampler assert naming no policy.
+            for (i, &(k, b)) in shares.iter().enumerate() {
+                assert!(
+                    k > 0.0 && k <= 1.0 + 1e-9 && b > 0.0 && b <= 1.0 + 1e-9,
+                    "assignment for plan '{label}' produced share (k={k}, b={b}) \
+                     outside (0, 1] for master {m}, node {}",
+                    nodes[i]
+                );
+            }
+            // Clamp the tolerated float epsilon back to 1 BEFORE the
+            // allocator sees the shares — allocator internals (and the
+            // delay samplers) assert shares ≤ 1 exactly.
+            let shares: Vec<(f64, f64)> = shares
+                .into_iter()
+                .map(|(k, b)| (k.min(1.0), b.min(1.0)))
                 .collect();
-            // Without redundancy the best estimate is the slowest mean.
-            let t_est = entries
-                .iter()
-                .map(|e| {
-                    share * EffLink::dedicated(&s.link(m, e.node)).theta()
-                })
-                .fold(0.0, f64::max);
-            MasterPlan {
-                entries,
-                t_est,
-                l_rows: s.l_rows(m),
-            }
-        })
-        .collect();
-    Plan {
-        label: "Uncoded".into(),
-        uncoded: true,
-        masters,
-    }
-}
-
-fn build_dedicated(
-    s: &Scenario,
-    d: &Dedicated,
-    loads: LoadMethod,
-    label: String,
-) -> Plan {
-    let masters = (0..s.n_masters())
-        .map(|m| {
-            // Node list: local first, then owned workers (node ids).
-            let mut nodes = vec![0usize];
-            nodes.extend(d.workers_of(m).iter().map(|&w| w + 1));
-            let alloc = allocate(s, m, &nodes, |_| (1.0, 1.0), loads);
-            MasterPlan {
-                entries: nodes
-                    .iter()
-                    .zip(&alloc.loads)
-                    .filter(|&(_, &l)| l > 0.0)
-                    .map(|(&node, &load)| PlanEntry {
-                        node,
-                        load,
-                        k: 1.0,
-                        b: 1.0,
-                    })
-                    .collect(),
-                t_est: alloc.t_star,
-                l_rows: s.l_rows(m),
-            }
-        })
-        .collect();
-    Plan {
-        label,
-        uncoded: false,
-        masters,
-    }
-}
-
-fn build_fractional(
-    s: &Scenario,
-    f: &Fractional,
-    loads: LoadMethod,
-    label: String,
-) -> Plan {
-    let masters = (0..s.n_masters())
-        .map(|m| {
-            let mut nodes = vec![0usize];
-            let mut shares = vec![(1.0, 1.0)];
-            for w in 0..s.n_workers() {
-                // A worker participates only with BOTH shares positive
-                // (k, b, l all-zero-or-all-nonzero, §IV-A).
-                if f.k[m][w] > 1e-12 && f.b[m][w] > 1e-12 {
-                    nodes.push(w + 1);
-                    shares.push((f.k[m][w], f.b[m][w]));
-                }
-            }
-            let alloc = allocate(s, m, &nodes, |i| shares[i], loads);
+            let alloc = allocator.allocate(s, m, &nodes, &shares);
+            // A wrong-length loads vector from a registered allocator must
+            // also fail loudly, not silently truncate the plan.
+            assert_eq!(
+                alloc.loads.len(),
+                nodes.len(),
+                "allocator returned {} loads for {} serving nodes (master {m})",
+                alloc.loads.len(),
+                nodes.len()
+            );
             MasterPlan {
                 entries: nodes
                     .iter()
@@ -251,60 +442,9 @@ fn build_fractional(
         })
         .collect();
     Plan {
-        label,
-        uncoded: false,
+        label: label.to_string(),
+        uncoded,
         masters,
-    }
-}
-
-/// Dispatch to the requested allocator over an explicit node list.
-/// `share(i)` returns `(k, b)` for position `i` in `nodes`.
-fn allocate(
-    s: &Scenario,
-    m: usize,
-    nodes: &[usize],
-    share: impl Fn(usize) -> (f64, f64),
-    loads: LoadMethod,
-) -> alloc::Allocation {
-    let l_rows = s.l_rows(m);
-    match loads {
-        LoadMethod::Markov => {
-            let thetas: Vec<f64> = nodes
-                .iter()
-                .enumerate()
-                .map(|(i, &n)| {
-                    let (k, b) = share(i);
-                    theta_fractional(&s.link(m, n), k, b)
-                })
-                .collect();
-            markov::allocate(&thetas, l_rows)
-        }
-        LoadMethod::Exact => {
-            let params: Vec<comp_dominant::CompParams> = nodes
-                .iter()
-                .enumerate()
-                .map(|(i, &n)| {
-                    let (k, _) = share(i);
-                    let p = s.link(m, n);
-                    comp_dominant::CompParams {
-                        a: p.a / k,
-                        u: k * p.u,
-                    }
-                })
-                .collect();
-            comp_dominant::allocate(&params, l_rows)
-        }
-        LoadMethod::Sca => {
-            let links: Vec<EffLink> = nodes
-                .iter()
-                .enumerate()
-                .map(|(i, &n)| {
-                    let (k, b) = share(i);
-                    EffLink::fractional(&s.link(m, n), k, b)
-                })
-                .collect();
-            sca::allocate(&links, l_rows, &Default::default())
-        }
     }
 }
 
@@ -422,5 +562,77 @@ mod tests {
             "Dedi, iter + SCA"
         );
         assert_eq!(spec(Policy::UncodedUniform, LoadMethod::Markov).label(), "Uncoded");
+    }
+
+    #[test]
+    fn plan_json_roundtrip_is_exact() {
+        let s = Scenario::small_scale(6, 2.0, CommModel::Stochastic);
+        for policy in [Policy::UncodedUniform, Policy::DediIter, Policy::Frac] {
+            let p = build(&s, &spec(policy, LoadMethod::Markov));
+            let text = p.to_json().to_string_pretty();
+            let back = Plan::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, p, "{policy:?}");
+            assert_eq!(back.t_est(), p.t_est());
+        }
+    }
+
+    #[test]
+    fn plan_from_json_rejects_malformed_documents() {
+        let parse = |s: &str| crate::util::json::parse(s).unwrap();
+        // Wrong schema version.
+        assert!(Plan::from_json(&parse(r#"{"schema": 99, "masters": []}"#)).is_err());
+        // No schema at all.
+        assert!(Plan::from_json(&parse(r#"{"masters": []}"#)).is_err());
+        // Out-of-range fractional share.
+        let bad_share = r#"{"schema": 1, "label": "x", "uncoded": false,
+            "masters": [{"t_est": 1.0, "l_rows": 10,
+                         "entries": [{"node": 1, "load": 20, "k": 1.5, "b": 1.0}]}]}"#;
+        let err = Plan::from_json(&parse(bad_share)).unwrap_err();
+        assert!(err.to_string().contains("k=1.5"), "{err}");
+        // Non-finite load text is not valid JSON; a negative load is.
+        let bad_load = r#"{"schema": 1, "label": "x", "uncoded": false,
+            "masters": [{"t_est": 1.0, "l_rows": 10,
+                         "entries": [{"node": 1, "load": -3, "k": 1.0, "b": 1.0}]}]}"#;
+        assert!(Plan::from_json(&parse(bad_load)).is_err());
+    }
+
+    #[test]
+    fn validate_catches_scenario_mismatch() {
+        let s = Scenario::small_scale(8, 2.0, CommModel::Stochastic); // M=2, N=5
+        let mut p = build(&s, &spec(Policy::DediIter, LoadMethod::Markov));
+        p.validate(&s).unwrap();
+        // Out-of-range node id (worker 99 doesn't exist).
+        p.masters[0].entries[0].node = 99;
+        assert!(p.validate(&s).is_err());
+        // Master-count mismatch.
+        let q = build(&s, &spec(Policy::DediIter, LoadMethod::Markov));
+        let bigger = Scenario::large_scale(8, 2.0, CommModel::Stochastic); // M=4
+        assert!(q.validate(&bigger).is_err());
+    }
+
+    #[test]
+    fn from_json_requires_uncoded_flag_and_clamps_epsilon_shares() {
+        let parse = |s: &str| crate::util::json::parse(s).unwrap();
+        // Missing `uncoded` is an error, not a default.
+        let no_flag = r#"{"schema": 1, "label": "x",
+            "masters": [{"t_est": 1.0, "l_rows": 10,
+                         "entries": [{"node": 1, "load": 20, "k": 1.0, "b": 1.0}]}]}"#;
+        assert!(Plan::from_json(&parse(no_flag)).is_err());
+        // A share within float epsilon above 1 is clamped back to 1.0
+        // (downstream samplers assert k, b ≤ 1 exactly).
+        let eps = r#"{"schema": 1, "label": "x", "uncoded": false,
+            "masters": [{"t_est": 1.0, "l_rows": 10,
+                         "entries": [{"node": 1, "load": 20, "k": 1.0000000005, "b": 1.0}]}]}"#;
+        let p = Plan::from_json(&parse(eps)).unwrap();
+        assert_eq!(p.masters[0].entries[0].k, 1.0);
+    }
+
+    #[test]
+    fn plan_spec_json_shim() {
+        let sp = spec(Policy::Frac, LoadMethod::Sca);
+        let back = PlanSpec::from_json(&sp.to_json()).unwrap();
+        assert_eq!(back.policy, Policy::Frac);
+        assert_eq!(back.loads, LoadMethod::Sca);
+        assert_eq!(back.values, ValueModel::Markov);
     }
 }

@@ -1,0 +1,281 @@
+//! The paper's strategies as [`Assigner`] / [`LoadAllocator`]
+//! implementations (registered under the names in [`super::registry`]).
+//!
+//! | registry key | paper | implementation |
+//! |---|---|---|
+//! | `uncoded` | §V benchmark 1 | uniform split, no coding, no local |
+//! | `coded` | §V benchmark 2 (\[5\]) | uniform workers, Thm-2 loads |
+//! | `dedi-simple` | Algorithm 2 | largest-value-first greedy |
+//! | `dedi-iter` | Algorithm 1 | iterated greedy |
+//! | `frac` | Algorithm 4 | resource balancing from an Alg-1 start |
+//! | `optimal` | §V benchmark 3 | λ-sweep grid optimum (M = 2) |
+//! | `markov` (loads) | Theorem 1 | closed form on θ |
+//! | `exact` (loads) | Theorem 2 | computation-dominant closed form |
+//! | `sca` (loads) | Algorithm 3 | Thm-1 start + SCA enhancement |
+
+use super::{Assigner, Assignment, LoadAllocator};
+use crate::alloc::{comp_dominant, markov, sca, Allocation, EffLink};
+use crate::assign::{
+    dedicated_iter, dedicated_simple, fractional, optimal, uniform, ValueMatrix,
+    ValueModel,
+};
+use crate::config::Scenario;
+use crate::model::params::theta_fractional;
+
+// ---------------------------------------------------------------------------
+// Assigners
+// ---------------------------------------------------------------------------
+
+/// §V benchmark 1: uniform workers, equal split, no coding, no local.
+pub struct UncodedUniformAssigner;
+
+impl Assigner for UncodedUniformAssigner {
+    fn label(&self) -> String {
+        "Uncoded".into()
+    }
+
+    fn pinned_allocator(&self) -> Option<&'static str> {
+        Some("uncoded-split")
+    }
+
+    fn assign(&self, s: &Scenario) -> Assignment {
+        Assignment::Dedicated {
+            d: uniform::assign(s.n_masters(), s.n_workers()),
+            include_local: false,
+            uncoded: true,
+        }
+    }
+}
+
+/// §V benchmark 2: uniform workers, Theorem-2 loads (\[5\]).
+pub struct CodedUniformAssigner;
+
+impl Assigner for CodedUniformAssigner {
+    fn label(&self) -> String {
+        "Coded [5]".into()
+    }
+
+    fn pinned_allocator(&self) -> Option<&'static str> {
+        Some("exact")
+    }
+
+    fn assign(&self, s: &Scenario) -> Assignment {
+        Assignment::Dedicated {
+            d: uniform::assign(s.n_masters(), s.n_workers()),
+            include_local: true,
+            uncoded: false,
+        }
+    }
+}
+
+/// Algorithm 2: largest-value-first greedy dedicated assignment.
+pub struct DediSimpleAssigner {
+    pub values: ValueModel,
+}
+
+impl Assigner for DediSimpleAssigner {
+    fn label(&self) -> String {
+        "Dedi, simple".into()
+    }
+
+    fn assign(&self, s: &Scenario) -> Assignment {
+        let vm = ValueMatrix::new(s, self.values);
+        Assignment::Dedicated {
+            d: dedicated_simple::assign(&vm),
+            include_local: true,
+            uncoded: false,
+        }
+    }
+}
+
+/// Algorithm 1: iterated greedy dedicated assignment.
+pub struct DediIterAssigner {
+    pub values: ValueModel,
+}
+
+impl Assigner for DediIterAssigner {
+    fn label(&self) -> String {
+        "Dedi, iter".into()
+    }
+
+    fn assign(&self, s: &Scenario) -> Assignment {
+        let vm = ValueMatrix::new(s, self.values);
+        Assignment::Dedicated {
+            d: dedicated_iter::assign(&vm, &Default::default()),
+            include_local: true,
+            uncoded: false,
+        }
+    }
+}
+
+/// Algorithm 4: fractional assignment from an Algorithm-1 start.
+pub struct FracAssigner {
+    pub values: ValueModel,
+}
+
+impl Assigner for FracAssigner {
+    fn label(&self) -> String {
+        "Frac".into()
+    }
+
+    fn assign(&self, s: &Scenario) -> Assignment {
+        let vm = ValueMatrix::new(s, self.values);
+        let d = dedicated_iter::assign(&vm, &Default::default());
+        Assignment::Fractional(fractional::assign(s, &d, &Default::default()))
+    }
+}
+
+/// λ-sweep grid optimum (M = 2 only; §V benchmark 3).
+pub struct FracOptimalAssigner;
+
+impl Assigner for FracOptimalAssigner {
+    fn label(&self) -> String {
+        "Optimal".into()
+    }
+
+    fn assign(&self, s: &Scenario) -> Assignment {
+        Assignment::Fractional(optimal::assign(s, &Default::default()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Load allocators
+// ---------------------------------------------------------------------------
+
+/// Theorem 1 closed form on θ (the "Approx" of Figs. 2–3).
+pub struct MarkovAllocator;
+
+impl LoadAllocator for MarkovAllocator {
+    fn allocate(
+        &self,
+        s: &Scenario,
+        m: usize,
+        nodes: &[usize],
+        shares: &[(f64, f64)],
+    ) -> Allocation {
+        let thetas: Vec<f64> = nodes
+            .iter()
+            .zip(shares)
+            .map(|(&n, &(k, b))| theta_fractional(&s.link(m, n), k, b))
+            .collect();
+        markov::allocate(&thetas, s.l_rows(m))
+    }
+}
+
+/// Theorem 2 closed form on (a, u) — computation-dominant exact.
+pub struct ExactAllocator;
+
+impl LoadAllocator for ExactAllocator {
+    fn allocate(
+        &self,
+        s: &Scenario,
+        m: usize,
+        nodes: &[usize],
+        shares: &[(f64, f64)],
+    ) -> Allocation {
+        let params: Vec<comp_dominant::CompParams> = nodes
+            .iter()
+            .zip(shares)
+            .map(|(&n, &(k, _))| {
+                let p = s.link(m, n);
+                comp_dominant::CompParams {
+                    a: p.a / k,
+                    u: k * p.u,
+                }
+            })
+            .collect();
+        comp_dominant::allocate(&params, s.l_rows(m))
+    }
+}
+
+/// Theorem 1 start + Algorithm 3 SCA enhancement.
+pub struct ScaAllocator;
+
+impl LoadAllocator for ScaAllocator {
+    fn label_suffix(&self) -> &'static str {
+        " + SCA"
+    }
+
+    fn allocate(
+        &self,
+        s: &Scenario,
+        m: usize,
+        nodes: &[usize],
+        shares: &[(f64, f64)],
+    ) -> Allocation {
+        let links: Vec<EffLink> = nodes
+            .iter()
+            .zip(shares)
+            .map(|(&n, &(k, b))| EffLink::fractional(&s.link(m, n), k, b))
+            .collect();
+        sca::allocate(&links, s.l_rows(m), &Default::default())
+    }
+}
+
+/// Benchmark-1 equal split: `L_m / |Ω_m|` rows per worker, no
+/// redundancy. Without coding the best delay estimate is the slowest
+/// node's mean.
+pub struct UncodedSplitAllocator;
+
+impl LoadAllocator for UncodedSplitAllocator {
+    fn allocate(
+        &self,
+        s: &Scenario,
+        m: usize,
+        nodes: &[usize],
+        _shares: &[(f64, f64)],
+    ) -> Allocation {
+        let share = s.l_rows(m) / nodes.len() as f64;
+        let t_star = nodes
+            .iter()
+            .map(|&n| share * EffLink::dedicated(&s.link(m, n)).theta())
+            .fold(0.0, f64::max);
+        Allocation {
+            loads: vec![share; nodes.len()],
+            t_star,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CommModel;
+
+    #[test]
+    fn assignments_cover_all_workers() {
+        let s = Scenario::small_scale(1, 2.0, CommModel::Stochastic);
+        for assigner in [
+            &UncodedUniformAssigner as &dyn Assigner,
+            &CodedUniformAssigner,
+            &DediSimpleAssigner {
+                values: ValueModel::Markov,
+            },
+            &DediIterAssigner {
+                values: ValueModel::Markov,
+            },
+        ] {
+            match assigner.assign(&s) {
+                Assignment::Dedicated { d, .. } => {
+                    assert_eq!(d.owner.len(), s.n_workers(), "{}", assigner.label());
+                }
+                Assignment::Fractional(_) => panic!("expected dedicated"),
+            }
+        }
+    }
+
+    #[test]
+    fn uncoded_split_matches_hand_formula() {
+        let s = Scenario::small_scale(2, 2.0, CommModel::Stochastic);
+        let nodes = [1usize, 2, 3];
+        let shares = [(1.0, 1.0); 3];
+        let a = UncodedSplitAllocator.allocate(&s, 0, &nodes, &shares);
+        let share = s.l_rows(0) / 3.0;
+        assert!(a.loads.iter().all(|&l| (l - share).abs() < 1e-9));
+        let worst = nodes
+            .iter()
+            .map(|&n| share * s.link(0, n).theta())
+            .fold(0.0, f64::max);
+        assert!((a.t_star - worst).abs() < 1e-9);
+    }
+}

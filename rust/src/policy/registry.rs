@@ -1,0 +1,278 @@
+//! String-keyed strategy registry: the single place CLI flags, JSON
+//! configs and figure harnesses resolve policy names.
+//!
+//! Built-ins (see [`super::builtin`]) are installed on first use; new
+//! strategies register at runtime:
+//!
+//! ```text
+//! registry::register_assigner("my-policy", |values| Arc::new(MyAssigner { values }));
+//! registry::register_allocator("my-loads", || Arc::new(MyAllocator));
+//! PolicySpec::new("my-policy", ValueModel::Markov, "my-loads").build(&scenario)?;
+//! ```
+//!
+//! Later registrations shadow earlier ones (including built-ins), so a
+//! deployment can override a stock strategy without forking the crate.
+//! `plan::build` has no policy `match` left — adding a strategy touches
+//! only the new module plus one `register_*` call.
+
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::builtin;
+use super::{Assigner, LoadAllocator, ResolvedPolicy};
+use crate::assign::ValueModel;
+
+/// Constructs an assigner for a given node-value model.
+pub type AssignerFactory = Arc<dyn Fn(ValueModel) -> Arc<dyn Assigner> + Send + Sync>;
+
+/// Constructs a load allocator.
+pub type AllocatorFactory = Arc<dyn Fn() -> Arc<dyn LoadAllocator> + Send + Sync>;
+
+struct Registry {
+    /// Insertion-ordered; lookups scan from the END so later
+    /// registrations shadow earlier ones.
+    assigners: Vec<(String, AssignerFactory)>,
+    allocators: Vec<(String, AllocatorFactory)>,
+}
+
+impl Registry {
+    fn builtins() -> Self {
+        let mut r = Registry {
+            assigners: Vec::new(),
+            allocators: Vec::new(),
+        };
+        fn assigner<A: Assigner + 'static>(a: A) -> Arc<dyn Assigner> {
+            Arc::new(a)
+        }
+        fn allocator<L: LoadAllocator + 'static>(l: L) -> Arc<dyn LoadAllocator> {
+            Arc::new(l)
+        }
+        r.assigners.push((
+            "uncoded".into(),
+            Arc::new(|_| assigner(builtin::UncodedUniformAssigner)),
+        ));
+        r.assigners.push((
+            "coded".into(),
+            Arc::new(|_| assigner(builtin::CodedUniformAssigner)),
+        ));
+        r.assigners.push((
+            "dedi-simple".into(),
+            Arc::new(|values| assigner(builtin::DediSimpleAssigner { values })),
+        ));
+        r.assigners.push((
+            "dedi-iter".into(),
+            Arc::new(|values| assigner(builtin::DediIterAssigner { values })),
+        ));
+        r.assigners.push((
+            "frac".into(),
+            Arc::new(|values| assigner(builtin::FracAssigner { values })),
+        ));
+        r.assigners.push((
+            "optimal".into(),
+            Arc::new(|_| assigner(builtin::FracOptimalAssigner)),
+        ));
+        r.allocators.push((
+            "markov".into(),
+            Arc::new(|| allocator(builtin::MarkovAllocator)),
+        ));
+        r.allocators.push((
+            "exact".into(),
+            Arc::new(|| allocator(builtin::ExactAllocator)),
+        ));
+        r.allocators
+            .push(("sca".into(), Arc::new(|| allocator(builtin::ScaAllocator))));
+        r.allocators.push((
+            "uncoded-split".into(),
+            Arc::new(|| allocator(builtin::UncodedSplitAllocator)),
+        ));
+        r
+    }
+}
+
+static REGISTRY: OnceLock<Mutex<Registry>> = OnceLock::new();
+
+fn with_registry<T>(f: impl FnOnce(&mut Registry) -> T) -> T {
+    let lock = REGISTRY.get_or_init(|| Mutex::new(Registry::builtins()));
+    let mut guard = lock.lock().unwrap_or_else(|poison| poison.into_inner());
+    f(&mut guard)
+}
+
+/// Register (or shadow) an assigner under `name`.
+pub fn register_assigner<F>(name: &str, factory: F)
+where
+    F: Fn(ValueModel) -> Arc<dyn Assigner> + Send + Sync + 'static,
+{
+    with_registry(|r| r.assigners.push((name.to_string(), Arc::new(factory))));
+}
+
+/// Register (or shadow) a load allocator under `name`.
+pub fn register_allocator<F>(name: &str, factory: F)
+where
+    F: Fn() -> Arc<dyn LoadAllocator> + Send + Sync + 'static,
+{
+    with_registry(|r| r.allocators.push((name.to_string(), Arc::new(factory))));
+}
+
+/// Allocators that exist only as benchmark pins (see
+/// [`crate::policy::Assigner::pinned_allocator`]); they are registered so
+/// pinning resolves, but are not user-selectable: the uncoded split's
+/// no-redundancy loads and slowest-mean `t_est` are only meaningful under
+/// uncoded completion semantics.
+const INTERNAL_ALLOCATORS: &[&str] = &["uncoded-split"];
+
+/// Resolve `(policy, values, loads)` into a strategy pair. The assigner
+/// may pin its allocator (benchmarks do); otherwise `loads` is honored.
+pub fn resolve(
+    policy: &str,
+    values: ValueModel,
+    loads: &str,
+) -> anyhow::Result<ResolvedPolicy> {
+    let (assigner_factory, allocator_for) = with_registry(|r| {
+        let af = r
+            .assigners
+            .iter()
+            .rev()
+            .find(|(n, _)| n == policy)
+            .map(|(_, f)| Arc::clone(f));
+        // Clone the allocator table so the lock is released before any
+        // factory code runs.
+        let al: Vec<(String, AllocatorFactory)> = r
+            .allocators
+            .iter()
+            .map(|(n, f)| (n.clone(), Arc::clone(f)))
+            .collect();
+        (af, al)
+    });
+    let assigner_factory = assigner_factory.ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown policy '{policy}' (known: {})",
+            assigner_names().join(", ")
+        )
+    })?;
+    let assigner = (assigner_factory.as_ref())(values);
+    let loads_key = match assigner.pinned_allocator() {
+        Some(pinned) => pinned,
+        None => {
+            anyhow::ensure!(
+                !INTERNAL_ALLOCATORS.contains(&loads),
+                "load method '{loads}' is internal (used only as a benchmark pin)"
+            );
+            loads
+        }
+    };
+    let allocator = allocator_for
+        .iter()
+        .rev()
+        .find(|(n, _)| n == loads_key)
+        .map(|(_, f)| (f.as_ref())())
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown load method '{loads_key}' (known: {})",
+                public_allocator_names().join(", ")
+            )
+        })?;
+    Ok(ResolvedPolicy {
+        policy: policy.to_string(),
+        loads: loads_key.to_string(),
+        assigner,
+        allocator,
+    })
+}
+
+/// All registered assigner names (deduplicated, first-registration order).
+pub fn assigner_names() -> Vec<String> {
+    with_registry(|r| dedup(r.assigners.iter().map(|(n, _)| n.clone())))
+}
+
+/// All registered allocator names (deduplicated, first-registration
+/// order), including pin-only internals.
+pub fn allocator_names() -> Vec<String> {
+    with_registry(|r| dedup(r.allocators.iter().map(|(n, _)| n.clone())))
+}
+
+/// User-selectable allocator names: [`allocator_names`] minus the
+/// pin-only internals. This is what `--loads` accepts and what help
+/// listings should show.
+pub fn public_allocator_names() -> Vec<String> {
+    allocator_names()
+        .into_iter()
+        .filter(|n| !INTERNAL_ALLOCATORS.contains(&n.as_str()))
+        .collect()
+}
+
+fn dedup(names: impl Iterator<Item = String>) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    for n in names {
+        if !out.contains(&n) {
+            out.push(n);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CommModel, Scenario};
+
+    #[test]
+    fn builtins_are_registered() {
+        let a = assigner_names();
+        for name in ["uncoded", "coded", "dedi-simple", "dedi-iter", "frac", "optimal"] {
+            assert!(a.iter().any(|n| n == name), "missing assigner {name}");
+        }
+        let l = allocator_names();
+        for name in ["markov", "exact", "sca", "uncoded-split"] {
+            assert!(l.iter().any(|n| n == name), "missing allocator {name}");
+        }
+    }
+
+    #[test]
+    fn internal_allocators_are_pin_only() {
+        // Pinning resolves the internal allocator…
+        let r = resolve("uncoded", ValueModel::Markov, "markov").unwrap();
+        assert_eq!(r.loads, "uncoded-split");
+        // …but selecting it directly is rejected, and it is hidden from
+        // the user-facing listing while remaining registered.
+        let e = resolve("dedi-iter", ValueModel::Markov, "uncoded-split").unwrap_err();
+        assert!(e.to_string().contains("internal"), "{e}");
+        assert!(!public_allocator_names().iter().any(|n| n == "uncoded-split"));
+        assert!(allocator_names().iter().any(|n| n == "uncoded-split"));
+    }
+
+    #[test]
+    fn unknown_names_error_with_suggestions() {
+        let e = resolve("bogus", ValueModel::Markov, "markov").unwrap_err();
+        assert!(e.to_string().contains("dedi-iter"), "{e}");
+        let e = resolve("dedi-iter", ValueModel::Markov, "bogus").unwrap_err();
+        assert!(e.to_string().contains("markov"), "{e}");
+    }
+
+    #[test]
+    fn shadowing_overrides_builtin() {
+        // Register a shadow of "markov" under a throwaway name, then
+        // shadow THAT name again — the later registration must win.
+        use crate::alloc::Allocation;
+        use crate::policy::LoadAllocator;
+        struct Marked(f64);
+        impl LoadAllocator for Marked {
+            fn allocate(
+                &self,
+                _s: &Scenario,
+                _m: usize,
+                nodes: &[usize],
+                _shares: &[(f64, f64)],
+            ) -> Allocation {
+                Allocation {
+                    loads: vec![self.0; nodes.len()],
+                    t_star: self.0,
+                }
+            }
+        }
+        register_allocator("shadow-test", || Arc::new(Marked(1.0)) as Arc<dyn LoadAllocator>);
+        register_allocator("shadow-test", || Arc::new(Marked(2.0)) as Arc<dyn LoadAllocator>);
+        let r = resolve("dedi-iter", ValueModel::Markov, "shadow-test").unwrap();
+        let s = Scenario::small_scale(1, 2.0, CommModel::Stochastic);
+        let p = r.build(&s);
+        assert!((p.masters[0].t_est - 2.0).abs() < 1e-12);
+    }
+}

@@ -14,6 +14,7 @@
 
 pub mod pjrt;
 pub mod service;
+pub mod xla;
 
 pub use pjrt::{ArtifactKind, ArtifactSpec, Manifest, Runtime};
 pub use service::{RuntimeHandle, RuntimeService};
@@ -23,4 +24,14 @@ pub use service::{RuntimeHandle, RuntimeService};
 pub fn default_artifact_dir() -> String {
     std::env::var("CODED_COOP_ARTIFACTS")
         .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")))
+}
+
+/// Whether the AOT artifact manifest is present in the default directory.
+///
+/// Tests that exercise the artifact path call this and skip (rather than
+/// fail) when `make artifacts` has not been run — the artifact pipeline
+/// needs the Python L1/L2 toolchain, which CI for the Rust crate does not
+/// assume.
+pub fn artifacts_available() -> bool {
+    Manifest::load(&default_artifact_dir()).is_ok()
 }

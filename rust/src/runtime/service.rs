@@ -217,8 +217,12 @@ mod tests {
 
     #[test]
     fn service_roundtrip_multithreaded() {
+        if !crate::runtime::artifacts_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
         let svc = RuntimeService::start(&crate::runtime::default_artifact_dir())
-            .expect("artifacts must exist — run `make artifacts`");
+            .expect("manifest present but runtime failed to start");
         let handles: Vec<_> = (0..4)
             .map(|i| {
                 let h = svc.handle();

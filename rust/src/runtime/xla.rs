@@ -1,0 +1,222 @@
+//! Offline stand-in for the `xla` (PJRT) binding crate.
+//!
+//! The production build links the real PJRT CPU client through the `xla`
+//! crate; that native binding is unavailable in this offline environment,
+//! so the exact API surface [`super::pjrt`] uses is provided here with a
+//! pure-Rust executor. The artifacts this runtime "compiles" are the AOT
+//! mat-vec / encode HLO programs from `python/compile/aot.py` — both are
+//! a single `dot(lhs, rhs)` over f32 operands, so the stub executes the
+//! equivalent row-major matmul natively. Contracts preserved:
+//!
+//! * compiling requires the HLO text artifact to exist and be non-empty
+//!   (missing artifacts fail exactly like the real client);
+//! * `execute` takes 2-D f32 literals `(m × k)` and `(k × n)` and returns
+//!   the `(m × n)` product wrapped in a 1-tuple (aot.py lowers with
+//!   `return_tuple=True`);
+//! * shapes are validated and mismatches surface as `Err`, not panics.
+//!
+//! Swapping the real `xla` crate back in is a one-line change in
+//! `pjrt.rs` (`use super::xla` → `use xla`).
+
+use std::borrow::Borrow;
+
+/// An f32 literal with a shape, optionally a tuple of literals.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    /// Rank-1 literal over a slice.
+    pub fn vec1(xs: &[f32]) -> Literal {
+        Literal {
+            data: xs.to_vec(),
+            dims: vec![xs.len() as i64],
+            tuple: None,
+        }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> anyhow::Result<Literal> {
+        let want: i64 = dims.iter().product();
+        anyhow::ensure!(
+            want >= 0 && want as usize == self.data.len(),
+            "reshape {:?} incompatible with {} elements",
+            dims,
+            self.data.len()
+        );
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+            tuple: None,
+        })
+    }
+
+    /// Unwrap a 1-tuple literal (AOT artifacts return tuples).
+    pub fn to_tuple1(&self) -> anyhow::Result<Literal> {
+        match &self.tuple {
+            Some(items) if items.len() == 1 => Ok(items[0].clone()),
+            Some(items) => anyhow::bail!("expected 1-tuple, got {}-tuple", items.len()),
+            None => anyhow::bail!("literal is not a tuple"),
+        }
+    }
+
+    /// Copy out as a flat vector.
+    pub fn to_vec<T: Element>(&self) -> anyhow::Result<Vec<T>> {
+        anyhow::ensure!(self.tuple.is_none(), "cannot to_vec a tuple literal");
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+}
+
+/// Element types extractable from a literal (f32 only — all artifacts
+/// are f32).
+pub trait Element {
+    fn from_f32(v: f32) -> Self;
+}
+
+impl Element for f32 {
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+}
+
+/// Parsed HLO module (the stub validates existence, not content).
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text_len: usize,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> anyhow::Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read HLO artifact {path}: {e}"))?;
+        anyhow::ensure!(!text.trim().is_empty(), "HLO artifact {path} is empty");
+        Ok(HloModuleProto {
+            text_len: text.len(),
+        })
+    }
+}
+
+/// Computation handle built from an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer holding an execution output.
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> anyhow::Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// A compiled executable: the stub evaluates `dot(lhs, rhs)`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(
+        &self,
+        args: &[L],
+    ) -> anyhow::Result<Vec<Vec<PjRtBuffer>>> {
+        anyhow::ensure!(args.len() == 2, "artifact expects 2 operands");
+        let a = args[0].borrow();
+        let b = args[1].borrow();
+        anyhow::ensure!(
+            a.dims.len() == 2 && b.dims.len() == 2,
+            "operands must be rank-2, got {:?} and {:?}",
+            a.dims,
+            b.dims
+        );
+        let (m, k) = (a.dims[0] as usize, a.dims[1] as usize);
+        let (k2, n) = (b.dims[0] as usize, b.dims[1] as usize);
+        anyhow::ensure!(
+            k == k2,
+            "contraction mismatch: ({m} × {k}) · ({k2} × {n})"
+        );
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let av = a.data[i * k + kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[kk * n..(kk + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        let result = Literal {
+            data: out,
+            dims: vec![m as i64, n as i64],
+            tuple: None,
+        };
+        let tuple = Literal {
+            data: Vec::new(),
+            dims: Vec::new(),
+            tuple: Some(vec![result]),
+        };
+        Ok(vec![vec![PjRtBuffer { literal: tuple }]])
+    }
+}
+
+/// CPU client handle.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> anyhow::Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> anyhow::Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_reshape_and_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let m = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4, 4]).is_err());
+    }
+
+    #[test]
+    fn execute_is_matmul_in_a_tuple() {
+        let a = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        let x = Literal::vec1(&[1.0, 1.0]).reshape(&[2, 1]).unwrap();
+        let exe = PjRtClient::cpu().unwrap().compile(&XlaComputation).unwrap();
+        let out = exe.execute::<Literal>(&[a, x]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap();
+        let y = out.to_tuple1().unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(y, vec![3.0, 7.0]);
+    }
+
+    #[test]
+    fn shape_mismatch_is_an_error() {
+        let a = Literal::vec1(&[1.0; 6]).reshape(&[2, 3]).unwrap();
+        let b = Literal::vec1(&[1.0; 4]).reshape(&[2, 2]).unwrap();
+        let exe = PjRtLoadedExecutable;
+        assert!(exe.execute::<Literal>(&[a, b]).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_fails() {
+        assert!(HloModuleProto::from_text_file("/no/such/artifact.hlo.txt").is_err());
+    }
+}

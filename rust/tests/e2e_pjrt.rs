@@ -8,7 +8,21 @@ use coded_coop::assign::ValueModel;
 use coded_coop::config::{AShift, CommModel, Scenario};
 use coded_coop::coordinator::{self, Backend, CoordinatorConfig};
 use coded_coop::plan::{LoadMethod, PlanSpec, Policy};
-use coded_coop::runtime::{default_artifact_dir, RuntimeService};
+use coded_coop::runtime::{artifacts_available, default_artifact_dir, RuntimeService};
+
+/// `None` (⇒ the test skips) when `make artifacts` has not been run: the
+/// artifact pipeline needs the Python L1/L2 toolchain, which the Rust
+/// crate's CI does not assume.
+fn service() -> Option<RuntimeService> {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(
+        RuntimeService::start(&default_artifact_dir())
+            .expect("manifest present but runtime failed to start"),
+    )
+}
 
 fn scenario(seed: u64, rows: f64) -> Scenario {
     Scenario::random(
@@ -25,8 +39,7 @@ fn scenario(seed: u64, rows: f64) -> Scenario {
 
 #[test]
 fn coordinator_over_pjrt_recovers_products() {
-    let svc = RuntimeService::start(&default_artifact_dir())
-        .expect("artifacts must exist — run `make artifacts`");
+    let Some(svc) = service() else { return };
     let cfg = CoordinatorConfig {
         scenario: scenario(1, 192.0),
         spec: PlanSpec {
@@ -52,8 +65,7 @@ fn coordinator_over_pjrt_recovers_products() {
 fn pjrt_and_native_backends_agree_on_decode() {
     // Same seed ⇒ same plan, data, code and sampled delays ⇒ both
     // backends must recover the identical truth.
-    let svc = RuntimeService::start(&default_artifact_dir())
-        .expect("artifacts must exist — run `make artifacts`");
+    let Some(svc) = service() else { return };
     for (backend, name) in [
         (Backend::Pjrt(svc.handle()), "pjrt"),
         (Backend::Native, "native"),
@@ -80,8 +92,7 @@ fn pjrt_and_native_backends_agree_on_decode() {
 fn batched_matvec_bucket_serves_iterated_workload() {
     // Remark 2 (iterated mat-vec): the batch-8 artifact computes 8 model
     // vectors in one execution.
-    let svc = RuntimeService::start(&default_artifact_dir())
-        .expect("artifacts must exist — run `make artifacts`");
+    let Some(svc) = service() else { return };
     let h = svc.handle();
     let (rows, cols, batch) = (200usize, 500usize, 8usize);
     let a: Vec<f32> = (0..rows * cols).map(|i| ((i % 13) as f32) * 0.1).collect();

@@ -1,0 +1,164 @@
+//! Minimal, offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no registry access, so the subset of the
+//! `anyhow` 1.x API this workspace actually uses is vendored here:
+//!
+//! * [`Error`] — opaque boxed error with `Display`/`Debug`;
+//! * [`Result`] — `Result<T, Error>` alias with a default type parameter;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — format-style constructors;
+//! * a blanket `From<E: std::error::Error + Send + Sync + 'static>` so
+//!   `?` converts any standard error (exactly like the real crate).
+//!
+//! Semantics match `anyhow` for every call site in this repository; the
+//! crates.io release can be swapped in without source changes.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Opaque error: a boxed `std::error::Error` trait object.
+///
+/// Like the real `anyhow::Error`, this type deliberately does NOT
+/// implement `std::error::Error` itself — that is what makes the blanket
+/// `From` impl below coherent.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M>(message: M) -> Self
+    where
+        M: fmt::Display + fmt::Debug + Send + Sync + 'static,
+    {
+        Error {
+            inner: Box::new(MessageError(message.to_string())),
+        }
+    }
+
+    /// Borrow the underlying error trait object.
+    pub fn as_dyn(&self) -> &(dyn StdError + Send + Sync + 'static) {
+        &*self.inner
+    }
+
+    /// The lowest-level source of this error.
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        let mut cur: &(dyn StdError + 'static) = &*self.inner;
+        while let Some(src) = cur.source() {
+            cur = src;
+        }
+        cur
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // anyhow renders the display chain for Debug; do the same so
+        // `.unwrap()` failures read well in tests.
+        write!(f, "{}", self.inner)?;
+        let mut src = self.inner.source();
+        while let Some(s) = src {
+            write!(f, "\n\nCaused by:\n    {s}")?;
+            src = s.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error { inner: Box::new(e) }
+    }
+}
+
+/// Plain-string error used by [`Error::msg`] and the [`anyhow!`] macro.
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: `", stringify!($cond), "`"));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_and_conversions() {
+        let e = anyhow!("x = {}", 42);
+        assert_eq!(e.to_string(), "x = 42");
+        assert!(fails(true).is_ok());
+        assert_eq!(fails(false).unwrap_err().to_string(), "flag was false");
+
+        // `?` converts std errors.
+        fn io() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/file")?)
+        }
+        assert!(io().is_err());
+    }
+
+    #[test]
+    fn identity_question_mark() {
+        fn outer() -> Result<u32> {
+            let v = fails(true)?;
+            Ok(v + 1)
+        }
+        assert_eq!(outer().unwrap(), 8);
+    }
+}
