@@ -1,0 +1,77 @@
+//! `cargo bench --bench sweep` — the batched sweep engine vs. the serial
+//! per-cell path on the Fig. 6 grid (20 cells), emitting
+//! `BENCH_sweep.json` to seed the perf trajectory (DESIGN.md §Perf).
+//!
+//! Serial = one `sim::run` per cell (fresh thread spawn per cell, a
+//! barrier at each cell's slowest shard). Batched = every cell's shards
+//! drained through one shared pool (`exec::BatchRunner`). Identical
+//! numerical results (bit-for-bit per cell at pinned `cell_streams`);
+//! only the scheduling differs.
+
+use std::time::Duration;
+
+use coded_coop::exec::{BatchJob, BatchRunner};
+use coded_coop::experiment::catalog;
+use coded_coop::sim::{self, McOptions};
+use coded_coop::util::benchkit::{group, write_json, Bench};
+
+fn main() {
+    group("sweep engine: batched shared pool vs serial per-cell (fig6 grid)");
+    let spec = catalog::spec("fig6", 5_000, 2022).expect("catalog resolves fig6");
+    let cells = spec.expand().expect("fig6 expands");
+    let jobs: Vec<BatchJob> = cells
+        .iter()
+        .map(|c| BatchJob {
+            scenario: c.scenario.clone(),
+            plan: c.policy.build(&c.scenario).expect("plan builds"),
+            seed: c.seed,
+            trials: spec.trials,
+            keep_samples: false,
+        })
+        .collect();
+    let total_trials = (jobs.len() * spec.trials) as f64;
+    println!(
+        "grid: {} cells × {} trials ({} total MC trials per iteration)\n",
+        jobs.len(),
+        spec.trials,
+        total_trials as u64
+    );
+
+    let serial = Bench::new()
+        .warmup(Duration::from_millis(300))
+        .measure_time(Duration::from_secs(3))
+        .max_iters(20)
+        .items(total_trials)
+        .run("sweep::serial_per_cell", || {
+            for j in &jobs {
+                sim::run(
+                    &j.scenario,
+                    &j.plan,
+                    &McOptions {
+                        trials: j.trials,
+                        seed: j.seed,
+                        keep_samples: false,
+                        threads: 0,
+                    },
+                );
+            }
+        });
+    println!("{}", serial.report());
+
+    let runner = BatchRunner::default();
+    let batched = Bench::new()
+        .warmup(Duration::from_millis(300))
+        .measure_time(Duration::from_secs(3))
+        .max_iters(20)
+        .items(total_trials)
+        .run("sweep::batched_shared_pool", || {
+            runner.run(&jobs).expect("batch run")
+        });
+    println!("{}", batched.report());
+
+    let speedup = serial.mean.as_secs_f64() / batched.mean.as_secs_f64();
+    println!("\nbatched/serial wall-time speedup: {speedup:.2}×");
+    write_json("BENCH_sweep.json", "sweep", &[serial, batched])
+        .expect("write BENCH_sweep.json");
+    println!("wrote BENCH_sweep.json");
+}

@@ -21,6 +21,7 @@ use crate::assign::ValueModel;
 use crate::config::{AShift, CommModel, Scenario};
 use crate::coordinator::{self, Backend, RunOptions};
 use crate::exec::{self, ExecOptions, Executor};
+use crate::experiment::{self, catalog, SweepOptions, SweepSpec};
 use crate::figures::{self, FigureOptions};
 use crate::plan::{LoadMethod, Plan, Policy};
 use crate::policy::{parse_value_model, registry, PolicySpec};
@@ -117,14 +118,20 @@ USAGE:
   coded-coop plan export <plan flags> [--out FILE.json]
   coded-coop plan run --plan FILE.json [--executor sim|coordinator]
                   [--trials N] [--seed S] [--cols S] [--time-scale X] [--verify]
+  coded-coop sweep list
+  coded-coop sweep export --figure <id> [--trials N] [--seed S] [--out FILE.json]
+  coded-coop sweep run (--spec FILE.json | --figure <id>) [--trials N]
+                  [--seed S] [--threads T] [--cell-streams C] [--out results.json]
   coded-coop e2e  [--masters M] [--workers N] [--rows L] [--cols S]
                   [--policy P] [--seed S] [--native] [--time-scale X]
   coded-coop version | help
 
 figures:  fig2 fig3 fig4a fig4b fig5 fig6 fig7 fig8 (see DESIGN.md)
+sweeps:   {} (batched grid engine; JSON SweepSpec in, per-cell table + JSON out)
 policies: {}
 loads:    {}
 ",
+        catalog::IDS.join(" "),
         registry::assigner_names().join(" "),
         registry::public_allocator_names().join(" "),
     )
@@ -177,6 +184,7 @@ pub fn run() -> anyhow::Result<()> {
         Some("figure") => cmd_figure(&args),
         Some("ablation") => cmd_ablation(&args),
         Some("plan") => cmd_plan(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("e2e") => cmd_e2e(&args),
         Some("version") => {
             println!("coded-coop {}", crate::VERSION);
@@ -387,6 +395,117 @@ fn cmd_plan_run(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    match args.positional.get(1).map(String::as_str) {
+        Some("export") => cmd_sweep_export(args),
+        Some("run") => cmd_sweep_run(args),
+        Some("list") | None => cmd_sweep_list(),
+        Some(other) => anyhow::bail!("unknown sweep subcommand '{other}' (export|run|list)"),
+    }
+}
+
+fn cmd_sweep_list() -> anyhow::Result<()> {
+    println!("catalog sweep specs (export with: coded-coop sweep export --figure <id>):");
+    for id in catalog::IDS {
+        let sp = catalog::spec(id, 100_000, 2022)?;
+        println!(
+            "  {id:<22} {} cells ({} policies{})",
+            sp.n_cells()?,
+            sp.policies.len(),
+            if sp.axes.is_empty() {
+                String::new()
+            } else {
+                format!(
+                    ", axes: {}",
+                    sp.axes
+                        .iter()
+                        .map(|a| format!("{}×{}", a.name, a.points.len()))
+                        .collect::<Vec<_>>()
+                        .join(" ")
+                )
+            },
+        );
+    }
+    Ok(())
+}
+
+/// `sweep export`: write a schema-versioned `SweepSpec` document for a
+/// catalog id — declare once, run anywhere (mirrors `plan export`).
+fn cmd_sweep_export(args: &Args) -> anyhow::Result<()> {
+    let id = args.flag("figure").ok_or_else(|| {
+        anyhow::anyhow!("sweep export needs --figure <id> (see 'coded-coop sweep list')")
+    })?;
+    let spec = catalog::spec(
+        id,
+        args.usize_flag("trials", 100_000)?,
+        args.u64_flag("seed", 2022)?,
+    )?;
+    let text = spec.to_json().to_string_pretty();
+    match args.flag("out") {
+        Some(path) => {
+            std::fs::write(path, &text)?;
+            println!(
+                "wrote {path}: sweep '{}' ({} cells, schema {})",
+                spec.name,
+                spec.n_cells()?,
+                SweepSpec::SCHEMA
+            );
+        }
+        None => println!("{text}"),
+    }
+    Ok(())
+}
+
+/// `sweep run`: execute a `SweepSpec` (exported JSON or catalog id) on
+/// the batched engine; per-cell `Outcome` table + optional JSON out.
+fn cmd_sweep_run(args: &Args) -> anyhow::Result<()> {
+    let spec = match (args.flag("spec"), args.flag("figure")) {
+        (Some(path), _) => {
+            let text = std::fs::read_to_string(path)?;
+            let mut spec = SweepSpec::from_json(
+                &json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?,
+            )?;
+            // Flag overrides, so an exported spec can be smoke-run cheaply.
+            if args.flag("trials").is_some() {
+                spec.trials = args.usize_flag("trials", spec.trials)?;
+            }
+            if args.flag("seed").is_some() {
+                spec.seed = args.u64_flag("seed", spec.seed)?;
+            }
+            spec
+        }
+        (None, Some(id)) => catalog::spec(
+            id,
+            args.usize_flag("trials", 100_000)?,
+            args.u64_flag("seed", 2022)?,
+        )?,
+        (None, None) => anyhow::bail!("sweep run needs --spec FILE.json or --figure <id>"),
+    };
+    let opts = SweepOptions {
+        threads: args.usize_flag("threads", 0)?,
+        cell_streams: args.usize_flag("cell-streams", 0)?,
+    };
+    let t0 = std::time::Instant::now();
+    let result = experiment::run_sweep(&spec, &opts)?;
+    println!(
+        "sweep: {} ({} cells × {} trials, batched engine)\n",
+        result.name,
+        result.cells.len(),
+        result.trials
+    );
+    println!("{}", result.table().render());
+    println!(
+        "[{} cells in {:.1}s]",
+        result.cells.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    if let Some(path) = args.flag("out") {
+        std::fs::write(path, result.to_json().to_string_pretty())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
     let m = args.usize_flag("masters", 2)?;
     let n = args.usize_flag("workers", 6)?;
@@ -523,6 +642,40 @@ mod tests {
         assert_eq!(spec.label().unwrap(), "Frac + SCA");
         let a = args(&["plan", "--policy", "not-a-policy"]);
         assert!(parse_policy_spec(&a).is_err());
+    }
+
+    #[test]
+    fn help_lists_sweep_catalog() {
+        let h = help_text();
+        assert!(h.contains("sweep export"), "help misses sweep export");
+        assert!(h.contains("sweep run"), "help misses sweep run");
+        for id in ["fig6", "fig8_measured", "smoke"] {
+            assert!(h.contains(id), "help missing catalog id {id}");
+        }
+    }
+
+    #[test]
+    fn sweep_export_then_run_roundtrips() {
+        let dir = std::env::temp_dir().join("coded_coop_sweep_cli");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("smoke.json");
+        // export (library path — same code cmd_sweep_export uses)
+        let spec = catalog::spec("smoke", 500, 3).unwrap();
+        std::fs::write(&path, spec.to_json().to_string_pretty()).unwrap();
+        // run from the file, as `sweep run --spec` does
+        let text = std::fs::read_to_string(&path).unwrap();
+        let back = SweepSpec::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, spec);
+        let result = experiment::run_sweep(
+            &back,
+            &SweepOptions {
+                threads: 2,
+                cell_streams: 2,
+            },
+        )
+        .unwrap();
+        assert_eq!(result.cells.len(), 2);
+        assert!(result.cells.iter().all(|c| c.outcome.system.mean() > 0.0));
     }
 
     #[test]

@@ -337,6 +337,79 @@ impl Scenario {
     }
 }
 
+/// Composable scenario rewrites — the building blocks of the experiment
+/// layer's sweep axes ([`crate::experiment::SweepSpec`]): start from a
+/// base scenario and apply transforms to obtain each swept variant, so a
+/// grid over (γ, u, L, straggler mix) never needs a bespoke builder.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Transform {
+    /// Set every worker link's communication rate to `ratio · u` (the
+    /// γ/u sweep of Fig. 6). Equivalent to constructing the scenario with
+    /// this `gamma_ratio` — the computation draws are untouched.
+    GammaRatio(f64),
+    /// Scale every worker link's computation rate `u` (faster / slower
+    /// worker fleets; shift `a` and comm rate stay put).
+    ScaleU(f64),
+    /// Set every master's task size `L_m`.
+    LRows(f64),
+    /// Attach a heavy-tail straggler mixture to every worker link
+    /// (sampling only — the planner keeps seeing the base parameters,
+    /// like the paper). `prob = 0` is a no-op.
+    Straggler { prob: f64, slowdown: f64 },
+    /// Switch the communication regime.
+    Comm(CommModel),
+}
+
+impl Transform {
+    /// Apply this transform in place.
+    pub fn apply(&self, s: &mut Scenario) {
+        match *self {
+            Transform::GammaRatio(r) => {
+                assert!(r > 0.0, "gamma ratio must be positive, got {r}");
+                for row in &mut s.links {
+                    for p in row.iter_mut() {
+                        p.gamma = r * p.u;
+                    }
+                }
+            }
+            Transform::ScaleU(f) => {
+                assert!(f > 0.0, "u scale must be positive, got {f}");
+                for row in &mut s.links {
+                    for p in row.iter_mut() {
+                        p.u *= f;
+                    }
+                }
+            }
+            Transform::LRows(l) => {
+                assert!(l > 0.0, "L must be positive, got {l}");
+                for mc in &mut s.masters {
+                    mc.l_rows = l;
+                }
+            }
+            Transform::Straggler { prob, slowdown } => {
+                if prob > 0.0 {
+                    for row in &mut s.links {
+                        for p in row.iter_mut() {
+                            *p = p.with_straggler(prob, slowdown);
+                        }
+                    }
+                }
+            }
+            Transform::Comm(c) => s.comm = c,
+        }
+    }
+}
+
+impl Scenario {
+    /// Apply a sequence of [`Transform`]s in order and return the result.
+    pub fn transformed(mut self, transforms: &[Transform]) -> Self {
+        for t in transforms {
+            t.apply(&mut self);
+        }
+        self
+    }
+}
+
 /// Distribution of worker computation shifts in randomized scenarios.
 #[derive(Clone, Copy, Debug)]
 pub enum AShift {
@@ -436,6 +509,57 @@ mod tests {
                 assert!((a.u - b.u).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn gamma_ratio_transform_equals_direct_construction() {
+        // The Fig. 6 parity requirement: transforming the base scenario
+        // must be indistinguishable from constructing with that ratio.
+        for ratio in [0.5, 4.0] {
+            let direct = Scenario::large_scale(7, ratio, CommModel::Stochastic);
+            let transformed = Scenario::large_scale(7, 2.0, CommModel::Stochastic)
+                .transformed(&[Transform::GammaRatio(ratio)]);
+            for m in 0..direct.n_masters() {
+                for n in 0..=direct.n_workers() {
+                    assert_eq!(direct.link(m, n), transformed.link(m, n), "m={m} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn transforms_compose_in_order() {
+        let s = Scenario::small_scale(1, 2.0, CommModel::Stochastic).transformed(&[
+            Transform::ScaleU(2.0),
+            Transform::LRows(500.0),
+            Transform::Straggler {
+                prob: 0.1,
+                slowdown: 5.0,
+            },
+            Transform::Comm(CommModel::CompDominant),
+        ]);
+        let base = Scenario::small_scale(1, 2.0, CommModel::Stochastic);
+        assert_eq!(s.comm, CommModel::CompDominant);
+        for m in 0..s.n_masters() {
+            assert_eq!(s.l_rows(m), 500.0);
+            // master-local links untouched by worker transforms
+            assert_eq!(s.masters[m].local, base.masters[m].local);
+            for n in 1..=s.n_workers() {
+                let (p, b) = (s.links[m][n - 1], base.links[m][n - 1]);
+                assert!((p.u - 2.0 * b.u).abs() < 1e-12);
+                assert_eq!(p.a, b.a);
+                assert_eq!(p.gamma, b.gamma);
+                assert!(p.straggler.is_some());
+            }
+        }
+        // zero-probability straggler is a no-op
+        let s2 = Scenario::small_scale(1, 2.0, CommModel::Stochastic).transformed(&[
+            Transform::Straggler {
+                prob: 0.0,
+                slowdown: 5.0,
+            },
+        ]);
+        assert!(s2.links[0][0].straggler.is_none());
     }
 
     #[test]

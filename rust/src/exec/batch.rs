@@ -1,0 +1,263 @@
+//! Batched Monte-Carlo evaluation: many `(Scenario, Plan)` cells on ONE
+//! shared thread pool.
+//!
+//! `sim::run` spawns a fresh set of threads per call, so a grid of cells
+//! (a figure roster, a parameter sweep) pays the spawn + join cost once
+//! per cell and leaves cores idle while a cell's slowest shard finishes.
+//! [`BatchRunner`] instead flattens every cell into RNG-stream shards and
+//! drains them all through one work-stealing pool: threads spawn once per
+//! grid, and a fast cell's leftover capacity immediately picks up the
+//! next cell's shards.
+//!
+//! **Bit-for-bit parity:** each cell is split into the exact shards
+//! `sim::run` would use for `cell_streams` threads
+//! ([`crate::sim::engine::effective_streams`] / `shard_sizes`), sampled by
+//! the same [`crate::sim::engine::run_shard`] and merged in the same
+//! stream order — so a batched cell's [`Outcome`] equals the serial
+//! `sim::run` result for the same `(seed, cell_streams)`. That is what
+//! makes the sweep rewrites of the figure harnesses golden-parity
+//! testable (`rust/tests/sweep_parity.rs`).
+//!
+//! Common random numbers (variance-reduced policy comparisons) are a
+//! seeding choice, not an engine mode: give every job the same `seed` and
+//! all cells sample identical delay streams (`experiment::SweepSpec`'s
+//! `crn` flag does exactly that).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::config::Scenario;
+use crate::plan::Plan;
+use crate::sim::engine::{self, Compiled, ShardOut};
+
+use super::Outcome;
+
+/// One grid cell: evaluate `plan` on `scenario` for `trials` sampled
+/// realizations seeded by `seed`.
+pub struct BatchJob {
+    pub scenario: Scenario,
+    pub plan: Plan,
+    /// Monte-Carlo seed (same seed across jobs = common random numbers).
+    pub seed: u64,
+    pub trials: usize,
+    /// Keep raw per-trial system delays (needed for CDFs).
+    pub keep_samples: bool,
+}
+
+/// Shared-pool batch engine over [`crate::sim::engine`] shards.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchRunner {
+    /// Worker threads in the shared pool (0 = all cores).
+    pub pool_threads: usize,
+    /// RNG streams per cell, with `McOptions::threads` semantics: a cell's
+    /// result is bit-identical to `sim::run` at this thread count
+    /// (0 = all cores). Independent of `pool_threads` — the pool only
+    /// decides who executes a shard, never how trials are split.
+    pub cell_streams: usize,
+}
+
+struct Shard {
+    job: usize,
+    stream: u64,
+    trials: usize,
+}
+
+impl BatchRunner {
+    /// Evaluate every job, returning one [`Outcome`] per job in input
+    /// order. Fails fast (before any sampling) if a plan does not fit its
+    /// scenario.
+    pub fn run(&self, jobs: &[BatchJob]) -> anyhow::Result<Vec<Outcome>> {
+        for (i, j) in jobs.iter().enumerate() {
+            j.plan
+                .validate(&j.scenario)
+                .map_err(|e| anyhow::anyhow!("batch job {i} ('{}'): {e}", j.plan.label))?;
+        }
+        let compiled: Vec<Compiled> = jobs
+            .iter()
+            .map(|j| Compiled::new(&j.scenario, &j.plan))
+            .collect();
+
+        // Flatten cells into shards; shard indices are contiguous and in
+        // stream order per job, so regrouping below preserves the merge
+        // order `sim::run` uses.
+        let mut shards: Vec<Shard> = Vec::new();
+        let mut streams_per_job: Vec<usize> = Vec::with_capacity(jobs.len());
+        for (ji, j) in jobs.iter().enumerate() {
+            let streams = engine::effective_streams(j.trials, self.cell_streams);
+            let sizes = engine::shard_sizes(j.trials, streams);
+            streams_per_job.push(sizes.len());
+            for (ti, &t) in sizes.iter().enumerate() {
+                shards.push(Shard {
+                    job: ji,
+                    stream: ti as u64 + 1,
+                    trials: t,
+                });
+            }
+        }
+
+        let pool = if self.pool_threads == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        } else {
+            self.pool_threads
+        }
+        .min(shards.len().max(1));
+
+        let next = AtomicUsize::new(0);
+        let mut collected: Vec<(usize, ShardOut)> = std::thread::scope(|scope| {
+            let shards_ref = &shards;
+            let compiled_ref = &compiled;
+            let next_ref = &next;
+            let handles: Vec<_> = (0..pool)
+                .map(|_| {
+                    scope.spawn(move || {
+                        let mut local: Vec<(usize, ShardOut)> = Vec::new();
+                        loop {
+                            let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                            if i >= shards_ref.len() {
+                                break;
+                            }
+                            let sh = &shards_ref[i];
+                            let job = &jobs[sh.job];
+                            local.push((
+                                i,
+                                engine::run_shard(
+                                    &compiled_ref[sh.job],
+                                    job.seed,
+                                    sh.stream,
+                                    sh.trials,
+                                    job.keep_samples,
+                                ),
+                            ));
+                        }
+                        local
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().unwrap())
+                .collect()
+        });
+        collected.sort_by_key(|&(i, _)| i);
+
+        let mut outs_iter = collected.into_iter().map(|(_, o)| o);
+        let mut outcomes = Vec::with_capacity(jobs.len());
+        for (ji, j) in jobs.iter().enumerate() {
+            let outs: Vec<ShardOut> = (0..streams_per_job[ji])
+                .map(|_| outs_iter.next().expect("one output per shard"))
+                .collect();
+            let r = engine::merge_shards(compiled[ji].n_masters(), outs, j.keep_samples);
+            outcomes.push(Outcome {
+                label: j.plan.label.clone(),
+                executor: "batch".to_string(),
+                per_master: r.per_master,
+                system: r.system,
+                t_est_ms: j.plan.t_est(),
+                samples: r.samples,
+            });
+        }
+        Ok(outcomes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assign::ValueModel;
+    use crate::config::CommModel;
+    use crate::policy::PolicySpec;
+    use crate::sim::{self, McOptions};
+
+    fn job(s: &Scenario, policy: &str, seed: u64, trials: usize) -> BatchJob {
+        BatchJob {
+            scenario: s.clone(),
+            plan: PolicySpec::new(policy, ValueModel::Markov, "markov")
+                .build(s)
+                .unwrap(),
+            seed,
+            trials,
+            keep_samples: true,
+        }
+    }
+
+    #[test]
+    fn batched_cells_reproduce_sim_run_bit_for_bit() {
+        let s = Scenario::small_scale(3, 2.0, CommModel::Stochastic);
+        let jobs = vec![
+            job(&s, "dedi-iter", 7, 3_000),
+            job(&s, "uncoded", 7, 3_000),
+            job(&s, "frac", 11, 1_000),
+        ];
+        let outs = BatchRunner {
+            pool_threads: 3,
+            cell_streams: 2,
+        }
+        .run(&jobs)
+        .unwrap();
+        assert_eq!(outs.len(), jobs.len());
+        for (j, o) in jobs.iter().zip(&outs) {
+            let direct = sim::run(
+                &j.scenario,
+                &j.plan,
+                &McOptions {
+                    trials: j.trials,
+                    seed: j.seed,
+                    keep_samples: true,
+                    threads: 2,
+                },
+            );
+            assert_eq!(o.system.mean(), direct.system.mean(), "{}", o.label);
+            assert_eq!(o.system.sem(), direct.system.sem(), "{}", o.label);
+            assert_eq!(o.system.count(), direct.system.count());
+            for (a, b) in o.per_master.iter().zip(&direct.per_master) {
+                assert_eq!(a.mean(), b.mean(), "{}", o.label);
+            }
+            assert_eq!(
+                o.samples.as_ref().unwrap(),
+                direct.samples.as_ref().unwrap(),
+                "{}",
+                o.label
+            );
+            assert_eq!(o.executor, "batch");
+            assert_eq!(o.t_est_ms, j.plan.t_est());
+        }
+    }
+
+    #[test]
+    fn pool_size_does_not_change_results() {
+        let s = Scenario::small_scale(5, 2.0, CommModel::Stochastic);
+        let jobs = vec![job(&s, "dedi-iter", 13, 2_000), job(&s, "coded", 13, 2_000)];
+        let a = BatchRunner {
+            pool_threads: 1,
+            cell_streams: 3,
+        }
+        .run(&jobs)
+        .unwrap();
+        let b = BatchRunner {
+            pool_threads: 8,
+            cell_streams: 3,
+        }
+        .run(&jobs)
+        .unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.system.mean(), y.system.mean());
+            assert_eq!(x.samples, y.samples);
+        }
+    }
+
+    #[test]
+    fn invalid_plan_fails_before_sampling() {
+        let s = Scenario::small_scale(1, 2.0, CommModel::Stochastic);
+        let mut j = job(&s, "dedi-iter", 1, 100);
+        j.plan.masters[0].entries[0].node = 99; // no such worker
+        let err = BatchRunner::default().run(&[j]).unwrap_err();
+        assert!(err.to_string().contains("batch job 0"), "{err}");
+    }
+
+    #[test]
+    fn empty_batch_is_ok() {
+        let outs = BatchRunner::default().run(&[]).unwrap();
+        assert!(outs.is_empty());
+    }
+}

@@ -13,6 +13,14 @@
 //! Both produce the same [`Outcome`] (per-master + system delay
 //! [`Summary`]s plus the planner's `t_est`), so `plan export` → `plan
 //! run --executor sim|coordinator` is a drop-in swap.
+//!
+//! [`batch`] adds the grid-scale engine: [`BatchRunner`] evaluates many
+//! `(Scenario, Plan)` cells on one shared thread pool, bit-identical per
+//! cell to [`SimExecutor`] (the `experiment` sweep layer runs on it).
+
+pub mod batch;
+
+pub use batch::{BatchJob, BatchRunner};
 
 use crate::config::Scenario;
 use crate::coordinator::{self, Backend, RunOptions};

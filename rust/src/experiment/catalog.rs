@@ -1,0 +1,319 @@
+//! Figure / ablation index: every plan→simulate evaluation of §V as a
+//! named [`SweepSpec`].
+//!
+//! Each id expands to the exact cells the legacy per-figure loop
+//! evaluated — same scenario seeds, same Monte-Carlo seed derivation —
+//! so the sweep rewrites of the figure harnesses are golden-parity
+//! testable against the serial path (`rust/tests/sweep_parity.rs`).
+//!
+//! | catalog id | figure | grid |
+//! |---|---|---|
+//! | `fig2` / `fig3` | Figs. 2–3 | 3 validation variants, samples kept |
+//! | `fig4a` / `fig4b` | Fig. 4 | §V-B roster (8 / 7 policies) |
+//! | `fig5a` / `fig5b` | Fig. 5 | CDF roster (4 policies), samples kept |
+//! | `fig6` | Fig. 6 | γ/u axis × 4 policies (20 cells) |
+//! | `fig8_fitted` / `fig8_measured` | Fig. 8 | EC2 roster, ± throttling |
+//! | `ablation_redundancy` | ablation | overhead-β axis, samples kept |
+//! | `ablation_straggler` | ablation | zipped (prob, slowdown) × 2 policies |
+//! | `smoke` | — | 2-cell CI smoke grid |
+//!
+//! Figs. 7 (trace fitting) and the `multimsg` / `sca_step` ablations are
+//! not plan→simulate sweeps and stay bespoke.
+
+use crate::assign::ValueModel;
+use crate::config::CommModel;
+use crate::policy::PolicySpec;
+use crate::traces::ec2::T2_MICRO_THROTTLE;
+
+use super::spec::{Axis, ScenarioSpec, SweepSpec};
+
+/// All catalog ids, paper order.
+pub const IDS: &[&str] = &[
+    "fig2",
+    "fig3",
+    "fig4a",
+    "fig4b",
+    "fig5a",
+    "fig5b",
+    "fig6",
+    "fig8_fitted",
+    "fig8_measured",
+    "ablation_redundancy",
+    "ablation_straggler",
+    "smoke",
+];
+
+/// Figure-harness Monte-Carlo seed derivation: figures decouple the MC
+/// stream from the scenario-generation seed (`FigureOptions::mc` uses
+/// this same function; ablations historically use the raw seed).
+pub fn fig_mc_seed(seed: u64) -> u64 {
+    seed ^ 0x5EED
+}
+
+/// The §V-B algorithm roster (Fig. 4/5/6/8 legends), by registry name.
+/// `small_scale` adds the λ-sweep optimum (M = 2 only). `values`/`loads`
+/// configure the proposed algorithms (Markov for the general case,
+/// "exact" for computation-dominant scenarios like Fig. 8).
+pub fn roster(small_scale: bool, values: ValueModel, loads: &str) -> Vec<PolicySpec> {
+    let mut specs = vec![
+        PolicySpec::new("uncoded", values, loads),
+        PolicySpec::new("coded", values, loads),
+        PolicySpec::new("dedi-simple", values, loads),
+        PolicySpec::new("dedi-iter", values, loads),
+        PolicySpec::new("dedi-iter", values, "sca"),
+        PolicySpec::new("frac", values, loads),
+        PolicySpec::new("frac", values, "sca"),
+    ];
+    if small_scale {
+        specs.push(PolicySpec::new("optimal", values, "sca"));
+    }
+    specs
+}
+
+/// Figs. 2–3 validation variants with their display names.
+pub fn validation_variants() -> Vec<(&'static str, PolicySpec)> {
+    vec![
+        (
+            "Exact (Thm 2)",
+            PolicySpec::new("dedi-iter", ValueModel::Exact, "exact"),
+        ),
+        (
+            "Approx (Thm 1)",
+            PolicySpec::new("dedi-iter", ValueModel::Markov, "markov"),
+        ),
+        (
+            "Approx, enhanced",
+            PolicySpec::new("dedi-iter", ValueModel::Markov, "exact"),
+        ),
+    ]
+}
+
+/// Fig. 5 CDF roster.
+pub fn fig5_roster() -> Vec<PolicySpec> {
+    let v = ValueModel::Markov;
+    vec![
+        PolicySpec::new("coded", v, "markov"),
+        PolicySpec::new("dedi-iter", v, "markov"),
+        PolicySpec::new("dedi-iter", v, "sca"),
+        PolicySpec::new("frac", v, "sca"),
+    ]
+}
+
+/// Fig. 6 sweep roster.
+pub fn fig6_roster() -> Vec<PolicySpec> {
+    let v = ValueModel::Markov;
+    vec![
+        PolicySpec::new("uncoded", v, "markov"),
+        PolicySpec::new("coded", v, "markov"),
+        PolicySpec::new("dedi-iter", v, "markov"),
+        PolicySpec::new("frac", v, "markov"),
+    ]
+}
+
+/// γ/u values swept by Fig. 6 (the paper's x-axis).
+pub const FIG6_RATIOS: &[f64] = &[0.5, 1.0, 2.0, 4.0, 8.0];
+
+/// Coding-overhead β values of the redundancy ablation.
+pub const REDUNDANCY_BETAS: &[f64] = &[1.05, 1.1, 1.25, 1.5, 2.0, 3.0];
+
+/// `(prob, slowdown)` grid of the straggler ablation (zipped axis — the
+/// pairs move together, they are not crossed).
+pub const STRAGGLER_POINTS: &[(f64, f64)] = &[
+    (0.0, 1.0),
+    (0.01, 10.0),
+    (0.02, 10.0),
+    (0.02, 20.0),
+    (0.05, 20.0),
+    (0.1, 8.0),
+];
+
+/// Resolve a catalog id into its sweep spec for the given trial count and
+/// base seed (`seed` seeds the scenarios; the MC seed derivation per id
+/// matches the legacy harness that id replaces).
+pub fn spec(id: &str, trials: usize, seed: u64) -> anyhow::Result<SweepSpec> {
+    anyhow::ensure!(
+        seed <= super::spec::MAX_SEED,
+        "seed {seed} exceeds the JSON-safe maximum {} (specs must round-trip exactly)",
+        super::spec::MAX_SEED
+    );
+    let sp = match id {
+        "fig2" | "fig3" => {
+            let base = if id == "fig2" { "small" } else { "large" };
+            SweepSpec {
+                axes: Vec::new(),
+                trials,
+                seed: fig_mc_seed(seed),
+                crn: true,
+                keep_samples: true,
+                ..SweepSpec::new(
+                    id,
+                    ScenarioSpec::base(base, seed, CommModel::CompDominant),
+                    validation_variants().into_iter().map(|(_, p)| p).collect(),
+                )
+            }
+        }
+        "fig4a" | "fig4b" => {
+            let small = id == "fig4a";
+            SweepSpec {
+                trials,
+                seed: fig_mc_seed(seed),
+                ..SweepSpec::new(
+                    id,
+                    ScenarioSpec::base(
+                        if small { "small" } else { "large" },
+                        seed,
+                        CommModel::Stochastic,
+                    ),
+                    roster(small, ValueModel::Markov, "markov"),
+                )
+            }
+        }
+        "fig5a" | "fig5b" => SweepSpec {
+            trials,
+            seed: fig_mc_seed(seed),
+            keep_samples: true,
+            ..SweepSpec::new(
+                id,
+                ScenarioSpec::base(
+                    if id == "fig5a" { "small" } else { "large" },
+                    seed,
+                    CommModel::Stochastic,
+                ),
+                fig5_roster(),
+            )
+        },
+        "fig6" => SweepSpec {
+            axes: vec![Axis::single("gamma_ratio", FIG6_RATIOS)],
+            trials,
+            seed: fig_mc_seed(seed),
+            ..SweepSpec::new(
+                id,
+                ScenarioSpec::base("large", seed, CommModel::Stochastic),
+                fig6_roster(),
+            )
+        },
+        "fig8_fitted" | "fig8_measured" => {
+            let mut sc = ScenarioSpec::base("ec2", seed, CommModel::CompDominant);
+            if id == "fig8_measured" {
+                sc.straggler_prob = T2_MICRO_THROTTLE.0;
+                sc.straggler_slow = T2_MICRO_THROTTLE.1;
+            }
+            SweepSpec {
+                trials,
+                seed: fig_mc_seed(seed),
+                ..SweepSpec::new(id, sc, roster(false, ValueModel::Exact, "exact"))
+            }
+        }
+        "ablation_redundancy" => SweepSpec {
+            axes: vec![Axis::single("overhead", REDUNDANCY_BETAS)],
+            trials,
+            seed, // ablations historically seed the MC stream directly
+            keep_samples: true,
+            ..SweepSpec::new(
+                id,
+                ScenarioSpec::base("large", seed, CommModel::Stochastic),
+                vec![PolicySpec::new("dedi-iter", ValueModel::Markov, "markov")],
+            )
+        },
+        "ablation_straggler" => SweepSpec {
+            axes: vec![Axis::zipped(
+                "straggler",
+                &["straggler_prob", "straggler_slow"],
+                STRAGGLER_POINTS.iter().map(|&(p, s)| vec![p, s]).collect(),
+            )],
+            trials: trials.min(20_000), // the legacy ablation's cap
+            seed,
+            ..SweepSpec::new(
+                id,
+                ScenarioSpec::base("ec2", seed, CommModel::CompDominant),
+                vec![
+                    PolicySpec::new("uncoded", ValueModel::Exact, "exact"),
+                    PolicySpec::new("dedi-iter", ValueModel::Exact, "exact"),
+                ],
+            )
+        },
+        "smoke" => SweepSpec {
+            trials,
+            seed: fig_mc_seed(seed),
+            ..SweepSpec::new(
+                id,
+                ScenarioSpec::base("small", seed, CommModel::Stochastic),
+                vec![
+                    PolicySpec::new("uncoded", ValueModel::Markov, "markov"),
+                    PolicySpec::new("dedi-iter", ValueModel::Markov, "markov"),
+                ],
+            )
+        },
+        other => anyhow::bail!("unknown catalog sweep '{other}' (known: {})", IDS.join(" ")),
+    };
+    Ok(sp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_catalog_id_expands() {
+        for id in IDS {
+            let sp = spec(id, 1_000, 7).unwrap_or_else(|e| panic!("{id}: {e}"));
+            assert_eq!(&sp.name, id);
+            let cells = sp.expand().unwrap_or_else(|e| panic!("{id}: {e}"));
+            assert!(!cells.is_empty(), "{id}");
+        }
+        assert!(spec("fig99", 100, 1).is_err());
+    }
+
+    #[test]
+    fn catalog_grid_shapes_match_legacy_loops() {
+        assert_eq!(spec("fig2", 100, 1).unwrap().expand().unwrap().len(), 3);
+        assert_eq!(spec("fig4a", 100, 1).unwrap().expand().unwrap().len(), 8);
+        assert_eq!(spec("fig4b", 100, 1).unwrap().expand().unwrap().len(), 7);
+        assert_eq!(spec("fig5a", 100, 1).unwrap().expand().unwrap().len(), 4);
+        assert_eq!(spec("fig6", 100, 1).unwrap().expand().unwrap().len(), 20);
+        assert_eq!(
+            spec("fig8_measured", 100, 1).unwrap().expand().unwrap().len(),
+            7
+        );
+        assert_eq!(
+            spec("ablation_redundancy", 100, 1)
+                .unwrap()
+                .expand()
+                .unwrap()
+                .len(),
+            6
+        );
+        assert_eq!(
+            spec("ablation_straggler", 100, 1)
+                .unwrap()
+                .expand()
+                .unwrap()
+                .len(),
+            12
+        );
+        assert_eq!(spec("smoke", 100, 1).unwrap().expand().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn catalog_specs_roundtrip_through_json() {
+        for id in IDS {
+            let sp = spec(id, 5_000, 42).unwrap();
+            let text = sp.to_json().to_string_pretty();
+            let back =
+                SweepSpec::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, sp, "{id}");
+        }
+    }
+
+    #[test]
+    fn measured_panel_attaches_t2_throttle_only() {
+        let sp = spec("fig8_measured", 100, 1).unwrap();
+        let cells = sp.expand().unwrap();
+        let s = &cells[0].scenario;
+        // first 40 links are t2.micro (throttled), last 10 c5.large (not)
+        assert!(s.links[0][0].straggler.is_some());
+        assert!(s.links[0][49].straggler.is_none());
+        let fitted = spec("fig8_fitted", 100, 1).unwrap().expand().unwrap();
+        assert!(fitted[0].scenario.links[0][0].straggler.is_none());
+    }
+}

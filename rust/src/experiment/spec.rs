@@ -1,0 +1,963 @@
+//! Declarative sweep specifications.
+//!
+//! A [`SweepSpec`] is the schema-versioned description of one evaluation
+//! campaign: a base [`ScenarioSpec`], named parameter [`Axis`]es and a
+//! policy roster, expanded by [`SweepSpec::expand`] into the cell grid
+//! the batched engine ([`crate::exec::BatchRunner`]) evaluates. Specs
+//! round-trip through JSON (`coded-coop sweep export` / `sweep run`), so
+//! a new workload is a ~20-line JSON file instead of a new harness
+//! module.
+
+use crate::config::{AShift, CommModel, Scenario, Transform};
+use crate::policy::PolicySpec;
+use crate::util::json::Json;
+use crate::util::rng::SplitMix64;
+
+/// Cross-product guard: a spec expanding to more cells than this is
+/// almost certainly a typo'd axis; [`SweepSpec::expand`] refuses rather
+/// than allocating an absurd grid.
+pub const MAX_CELLS: usize = 10_000;
+
+/// Largest seed a spec may carry: seeds serialize as JSON numbers (IEEE
+/// doubles, exact only to 2⁵³), and the figure-harness seed derivation
+/// xors low bits on top — 2⁵² keeps every derived value exactly
+/// round-trippable. Builders reject larger seeds instead of silently
+/// rounding them on an export→run round-trip.
+pub const MAX_SEED: u64 = 1 << 52;
+
+/// Axis parameter names [`SweepSpec::expand`] understands. All but
+/// `overhead` rewrite the [`ScenarioSpec`] (`n_masters` / `n_workers`
+/// apply to the `random` base only); `overhead` rescales the built plan
+/// via [`crate::plan::Plan::with_overhead`].
+pub const KNOWN_PARAMS: &[&str] = &[
+    "seed",
+    "gamma_ratio",
+    "n_masters",
+    "n_workers",
+    "l_rows",
+    "u_scale",
+    "straggler_prob",
+    "straggler_slow",
+    "overhead",
+];
+
+/// Serializable scenario template: a named base plus the knobs the sweep
+/// axes may override. `build` composes the base constructor with
+/// [`crate::config::Transform`]s, so axis values never need bespoke
+/// builders.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioSpec {
+    /// "small" | "large" | "random" | "ec2".
+    pub base: String,
+    /// Scenario-generation seed (the Monte-Carlo seed lives on the
+    /// [`SweepSpec`]).
+    pub seed: u64,
+    pub comm: CommModel,
+    /// γ/u of every worker link (ignored by the comp-dominant "ec2" base).
+    pub gamma_ratio: f64,
+    // ---- "random" base ----
+    pub n_masters: usize,
+    pub n_workers: usize,
+    /// Worker computation shifts drawn uniformly from `[a_lo, a_hi]` ms.
+    pub a_lo: f64,
+    pub a_hi: f64,
+    // ---- "ec2" base ----
+    pub n_t2: usize,
+    pub n_c5: usize,
+    // ---- post-build transforms ----
+    /// Override every master's task size (`None` = the base's own L).
+    pub l_rows: Option<f64>,
+    /// Scale every worker's computation rate `u`.
+    pub u_scale: f64,
+    /// Straggler mixture. On the "ec2" base this targets the t2.micro
+    /// links only (CPU-credit throttling, like `Scenario::ec2`); on every
+    /// other base it applies to all worker links. `prob = 0` disables it.
+    pub straggler_prob: f64,
+    pub straggler_slow: f64,
+}
+
+impl Default for ScenarioSpec {
+    fn default() -> Self {
+        Self {
+            base: "small".into(),
+            seed: 2022,
+            comm: CommModel::Stochastic,
+            gamma_ratio: 2.0,
+            n_masters: 2,
+            n_workers: 5,
+            a_lo: 0.05,
+            a_hi: 0.5,
+            n_t2: 40,
+            n_c5: 10,
+            l_rows: None,
+            u_scale: 1.0,
+            straggler_prob: 0.0,
+            straggler_slow: 1.0,
+        }
+    }
+}
+
+impl ScenarioSpec {
+    /// Named-base convenience constructor.
+    pub fn base(base: &str, seed: u64, comm: CommModel) -> Self {
+        Self {
+            base: base.to_string(),
+            seed,
+            comm,
+            ..Default::default()
+        }
+    }
+
+    /// Build the concrete [`Scenario`] this template describes.
+    ///
+    /// All template knobs are validated here with graceful errors — a
+    /// hand-written spec (or axis point) with a non-positive `u_scale`,
+    /// `l_rows` or `gamma_ratio` must never reach the `assert!`s inside
+    /// the transforms/constructors.
+    pub fn build(&self) -> anyhow::Result<Scenario> {
+        anyhow::ensure!(
+            self.seed <= MAX_SEED,
+            "scenario seed {} exceeds the JSON-safe maximum {MAX_SEED}",
+            self.seed
+        );
+        anyhow::ensure!(
+            self.gamma_ratio.is_finite() && self.gamma_ratio > 0.0,
+            "gamma_ratio must be positive and finite, got {}",
+            self.gamma_ratio
+        );
+        anyhow::ensure!(
+            self.u_scale.is_finite() && self.u_scale > 0.0,
+            "u_scale must be positive and finite, got {}",
+            self.u_scale
+        );
+        if let Some(l) = self.l_rows {
+            anyhow::ensure!(
+                l.is_finite() && l > 0.0,
+                "l_rows must be positive and finite, got {l}"
+            );
+        }
+        let mut s = match self.base.as_str() {
+            "small" => Scenario::small_scale(self.seed, self.gamma_ratio, self.comm),
+            "large" => Scenario::large_scale(self.seed, self.gamma_ratio, self.comm),
+            "random" => {
+                anyhow::ensure!(
+                    self.n_masters >= 1 && self.n_workers >= 1,
+                    "random base needs n_masters ≥ 1 and n_workers ≥ 1"
+                );
+                anyhow::ensure!(
+                    self.a_lo > 0.0 && self.a_hi >= self.a_lo,
+                    "random base needs 0 < a_lo ≤ a_hi (got [{}, {}])",
+                    self.a_lo,
+                    self.a_hi
+                );
+                Scenario::random(
+                    &format!("random (M={}, N={})", self.n_masters, self.n_workers),
+                    self.n_masters,
+                    self.n_workers,
+                    1e4,
+                    AShift::Range(self.a_lo, self.a_hi),
+                    self.gamma_ratio,
+                    self.comm,
+                    self.seed,
+                )
+            }
+            "ec2" => Scenario::ec2(self.n_t2, self.n_c5, false),
+            other => anyhow::bail!("unknown scenario base '{other}' (small|large|random|ec2)"),
+        };
+        let mut ts: Vec<Transform> = Vec::new();
+        if self.u_scale != 1.0 {
+            ts.push(Transform::ScaleU(self.u_scale));
+        }
+        if let Some(l) = self.l_rows {
+            ts.push(Transform::LRows(l));
+        }
+        if self.straggler_prob > 0.0 {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&self.straggler_prob) && self.straggler_slow >= 1.0,
+                "straggler mixture needs prob ∈ [0, 1] and slowdown ≥ 1 (got {} × {})",
+                self.straggler_prob,
+                self.straggler_slow
+            );
+            if self.base == "ec2" {
+                // Throttling hits the burstable t2.micro links only, as in
+                // `Scenario::ec2(.., stragglers = true)` — structurally the
+                // first `n_t2` links of every row.
+                for row in &mut s.links {
+                    for p in row.iter_mut().take(self.n_t2) {
+                        *p = p.with_straggler(self.straggler_prob, self.straggler_slow);
+                    }
+                }
+            } else {
+                ts.push(Transform::Straggler {
+                    prob: self.straggler_prob,
+                    slowdown: self.straggler_slow,
+                });
+            }
+        }
+        Ok(s.transformed(&ts))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("base", Json::Str(self.base.clone()));
+        j.set("seed", Json::Num(self.seed as f64));
+        j.set(
+            "comm",
+            Json::Str(
+                match self.comm {
+                    CommModel::Stochastic => "stochastic",
+                    CommModel::CompDominant => "comp_dominant",
+                }
+                .into(),
+            ),
+        );
+        j.set("gamma_ratio", Json::Num(self.gamma_ratio));
+        j.set("n_masters", Json::Num(self.n_masters as f64));
+        j.set("n_workers", Json::Num(self.n_workers as f64));
+        j.set("a_lo", Json::Num(self.a_lo));
+        j.set("a_hi", Json::Num(self.a_hi));
+        j.set("n_t2", Json::Num(self.n_t2 as f64));
+        j.set("n_c5", Json::Num(self.n_c5 as f64));
+        if let Some(l) = self.l_rows {
+            j.set("l_rows", Json::Num(l));
+        }
+        j.set("u_scale", Json::Num(self.u_scale));
+        j.set("straggler_prob", Json::Num(self.straggler_prob));
+        j.set("straggler_slow", Json::Num(self.straggler_slow));
+        j
+    }
+
+    /// Parse, defaulting every omitted field — hand-written specs only
+    /// need the fields they change.
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let d = ScenarioSpec::default();
+        let num = |k: &str, dv: f64| -> anyhow::Result<f64> {
+            match j.get(k) {
+                None => Ok(dv),
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("scenario field '{k}' must be a number")),
+            }
+        };
+        let int = |k: &str, dv: usize| -> anyhow::Result<usize> {
+            match j.get(k) {
+                None => Ok(dv),
+                Some(v) => v.as_usize().ok_or_else(|| {
+                    anyhow::anyhow!("scenario field '{k}' must be a non-negative integer")
+                }),
+            }
+        };
+        let comm = match j.get("comm").and_then(Json::as_str) {
+            None => d.comm,
+            Some("stochastic") => CommModel::Stochastic,
+            Some("comp_dominant") => CommModel::CompDominant,
+            Some(other) => anyhow::bail!("unknown comm model '{other}'"),
+        };
+        let l_rows = match j.get("l_rows") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("scenario field 'l_rows' must be a number"))?,
+            ),
+        };
+        Ok(Self {
+            base: j
+                .get("base")
+                .and_then(Json::as_str)
+                .unwrap_or(&d.base)
+                .to_string(),
+            seed: int("seed", d.seed as usize)? as u64,
+            comm,
+            gamma_ratio: num("gamma_ratio", d.gamma_ratio)?,
+            n_masters: int("n_masters", d.n_masters)?,
+            n_workers: int("n_workers", d.n_workers)?,
+            a_lo: num("a_lo", d.a_lo)?,
+            a_hi: num("a_hi", d.a_hi)?,
+            n_t2: int("n_t2", d.n_t2)?,
+            n_c5: int("n_c5", d.n_c5)?,
+            l_rows,
+            u_scale: num("u_scale", d.u_scale)?,
+            straggler_prob: num("straggler_prob", d.straggler_prob)?,
+            straggler_slow: num("straggler_slow", d.straggler_slow)?,
+        })
+    }
+}
+
+/// One named sweep axis: a list of grid *points*, each assigning every
+/// parameter in `params`. A single-param axis is the usual value list; a
+/// multi-param axis zips parameters that move together (e.g.
+/// `(straggler_prob, straggler_slow)` pairs) instead of crossing them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Axis {
+    pub name: String,
+    pub params: Vec<String>,
+    pub points: Vec<Vec<f64>>,
+}
+
+impl Axis {
+    /// Single-parameter axis named after its parameter.
+    pub fn single(param: &str, values: &[f64]) -> Self {
+        Self {
+            name: param.to_string(),
+            params: vec![param.to_string()],
+            points: values.iter().map(|&v| vec![v]).collect(),
+        }
+    }
+
+    /// Zipped multi-parameter axis: each point assigns all `params`.
+    pub fn zipped(name: &str, params: &[&str], points: Vec<Vec<f64>>) -> Self {
+        Self {
+            name: name.to_string(),
+            params: params.iter().map(|p| p.to_string()).collect(),
+            points,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", Json::Str(self.name.clone()));
+        j.set(
+            "params",
+            Json::Arr(
+                self.params
+                    .iter()
+                    .map(|p| Json::Str(p.clone()))
+                    .collect(),
+            ),
+        );
+        j.set(
+            "points",
+            Json::Arr(
+                self.points
+                    .iter()
+                    .map(|pt| Json::from_f64_slice(pt))
+                    .collect(),
+            ),
+        );
+        j
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let params = j
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("axis missing 'params' array"))?
+            .iter()
+            .map(|p| {
+                p.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow::anyhow!("axis params must be strings"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let points = j
+            .get("points")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("axis missing 'points' array"))?
+            .iter()
+            .map(|pt| {
+                pt.as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("axis points must be arrays of numbers"))?
+                    .iter()
+                    .map(|v| {
+                        v.as_f64()
+                            .ok_or_else(|| anyhow::anyhow!("axis point values must be numbers"))
+                    })
+                    .collect::<anyhow::Result<Vec<f64>>>()
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or_else(|| params.first().map(String::as_str).unwrap_or("axis"))
+            .to_string();
+        Ok(Self {
+            name,
+            params,
+            points,
+        })
+    }
+}
+
+/// One expanded grid point: a concrete scenario + policy (+ optional plan
+/// overhead rescale) and the Monte-Carlo seed the runner will use.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    /// Position in the expanded grid (axes row-major, first axis
+    /// outermost; policies innermost).
+    pub index: usize,
+    /// Flattened `(param, value)` pairs of this grid point, axis order.
+    pub axis_values: Vec<(String, f64)>,
+    pub scenario: Scenario,
+    pub policy: PolicySpec,
+    /// Plan-load rescale target from an `overhead` axis.
+    pub overhead: Option<f64>,
+    /// Per-cell Monte-Carlo seed (identical across cells under CRN).
+    pub seed: u64,
+}
+
+/// A declarative, serializable experiment: axes × policies on a scenario
+/// template, evaluated at `trials` Monte-Carlo realizations per cell.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepSpec {
+    pub name: String,
+    pub scenario: ScenarioSpec,
+    pub axes: Vec<Axis>,
+    pub policies: Vec<PolicySpec>,
+    /// Monte-Carlo trials per cell.
+    pub trials: usize,
+    /// Monte-Carlo seed (scenario-generation seeds live in
+    /// `scenario.seed` / a `seed` axis).
+    pub seed: u64,
+    /// Common random numbers: every cell samples the same delay streams
+    /// (seed shared), so cross-policy differences on the same scenario
+    /// are variance-reduced. Off = each cell gets an independent derived
+    /// seed.
+    pub crn: bool,
+    /// Keep raw per-trial system delays (needed for CDF readouts).
+    pub keep_samples: bool,
+}
+
+impl SweepSpec {
+    /// Sweep-document schema version (stamped by [`SweepSpec::to_json`];
+    /// [`SweepSpec::from_json`] rejects other majors).
+    pub const SCHEMA: u64 = 1;
+
+    /// Spec with the given scenario and policies and default execution
+    /// knobs (10⁴ trials, seed 2022, CRN on, no samples).
+    pub fn new(name: &str, scenario: ScenarioSpec, policies: Vec<PolicySpec>) -> Self {
+        Self {
+            name: name.to_string(),
+            scenario,
+            axes: Vec::new(),
+            policies,
+            trials: 10_000,
+            seed: 2022,
+            crn: true,
+            keep_samples: false,
+        }
+    }
+
+    /// Grid size this spec expands to (validates axis shapes).
+    pub fn n_cells(&self) -> anyhow::Result<usize> {
+        let mut total = self.policies.len();
+        for ax in &self.axes {
+            anyhow::ensure!(!ax.points.is_empty(), "axis '{}' has no points", ax.name);
+            total = total
+                .checked_mul(ax.points.len())
+                .ok_or_else(|| anyhow::anyhow!("cell grid size overflows"))?;
+        }
+        Ok(total)
+    }
+
+    /// Expand into the concrete cell grid: axes row-major (first axis
+    /// outermost), policies innermost. Validates parameter names, point
+    /// arity, duplicate params and the [`MAX_CELLS`] guard before
+    /// building a single scenario.
+    pub fn expand(&self) -> anyhow::Result<Vec<Cell>> {
+        anyhow::ensure!(
+            !self.policies.is_empty(),
+            "sweep spec '{}' has no policies",
+            self.name
+        );
+        anyhow::ensure!(
+            self.seed <= MAX_SEED,
+            "sweep spec '{}': MC seed {} exceeds the JSON-safe maximum {MAX_SEED}",
+            self.name,
+            self.seed
+        );
+        let mut seen: Vec<&str> = Vec::new();
+        for ax in &self.axes {
+            anyhow::ensure!(!ax.points.is_empty(), "axis '{}' has no points", ax.name);
+            anyhow::ensure!(
+                !ax.params.is_empty(),
+                "axis '{}' names no params",
+                ax.name
+            );
+            for p in &ax.params {
+                anyhow::ensure!(
+                    KNOWN_PARAMS.contains(&p.as_str()),
+                    "axis '{}': unknown param '{p}' (known: {})",
+                    ax.name,
+                    KNOWN_PARAMS.join(", ")
+                );
+                anyhow::ensure!(
+                    !seen.contains(&p.as_str()),
+                    "param '{p}' appears on two axes"
+                );
+                seen.push(p.as_str());
+            }
+            for (i, pt) in ax.points.iter().enumerate() {
+                anyhow::ensure!(
+                    pt.len() == ax.params.len(),
+                    "axis '{}' point {i} has {} values for {} params",
+                    ax.name,
+                    pt.len(),
+                    ax.params.len()
+                );
+            }
+        }
+        let total = self.n_cells()?;
+        anyhow::ensure!(
+            total <= MAX_CELLS,
+            "sweep spec '{}' expands to {total} cells (guard: {MAX_CELLS}); \
+             shrink an axis or split the sweep",
+            self.name
+        );
+        // Resolve every policy once so unknown names fail here with the
+        // registry's suggestions, not mid-grid.
+        for p in &self.policies {
+            p.resolve()
+                .map_err(|e| anyhow::anyhow!("sweep spec '{}': {e}", self.name))?;
+        }
+
+        let mut cells = Vec::with_capacity(total);
+        let mut idx = vec![0usize; self.axes.len()];
+        loop {
+            let mut sc = self.scenario.clone();
+            let mut overhead = None;
+            let mut axis_values = Vec::new();
+            for (ai, ax) in self.axes.iter().enumerate() {
+                let pt = &ax.points[idx[ai]];
+                for (pi, param) in ax.params.iter().enumerate() {
+                    apply_param(&mut sc, &mut overhead, param, pt[pi])?;
+                    axis_values.push((param.clone(), pt[pi]));
+                }
+            }
+            let scenario = sc.build()?;
+            for policy in &self.policies {
+                let index = cells.len();
+                let seed = if self.crn {
+                    self.seed
+                } else {
+                    mix_seed(self.seed, index as u64)
+                };
+                cells.push(Cell {
+                    index,
+                    axis_values: axis_values.clone(),
+                    scenario: scenario.clone(),
+                    policy: policy.clone(),
+                    overhead,
+                    seed,
+                });
+            }
+            // Odometer over the axes, last axis fastest.
+            let mut ai = self.axes.len();
+            loop {
+                if ai == 0 {
+                    return Ok(cells);
+                }
+                ai -= 1;
+                idx[ai] += 1;
+                if idx[ai] < self.axes[ai].points.len() {
+                    break;
+                }
+                idx[ai] = 0;
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("schema", Json::Num(Self::SCHEMA as f64));
+        j.set("name", Json::Str(self.name.clone()));
+        j.set("scenario", self.scenario.to_json());
+        j.set(
+            "axes",
+            Json::Arr(self.axes.iter().map(Axis::to_json).collect()),
+        );
+        j.set(
+            "policies",
+            Json::Arr(self.policies.iter().map(PolicySpec::to_json).collect()),
+        );
+        j.set("trials", Json::Num(self.trials as f64));
+        j.set("seed", Json::Num(self.seed as f64));
+        j.set("crn", Json::Bool(self.crn));
+        j.set("keep_samples", Json::Bool(self.keep_samples));
+        j
+    }
+
+    /// Parse + validate a serialized sweep spec (schema-checked
+    /// round-trip of [`SweepSpec::to_json`]; execution knobs default
+    /// when omitted).
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let schema = j
+            .get("schema")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("sweep spec missing 'schema'"))?;
+        anyhow::ensure!(
+            schema as u64 == Self::SCHEMA,
+            "unsupported sweep schema {schema} (this build reads schema {})",
+            Self::SCHEMA
+        );
+        let scenario = match j.get("scenario") {
+            Some(sj) => ScenarioSpec::from_json(sj)?,
+            None => ScenarioSpec::default(),
+        };
+        let axes = match j.get("axes") {
+            None => Vec::new(),
+            Some(aj) => aj
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("'axes' must be an array"))?
+                .iter()
+                .map(Axis::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?,
+        };
+        let policies = j
+            .get("policies")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("sweep spec missing 'policies'"))?
+            .iter()
+            .map(PolicySpec::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        anyhow::ensure!(!policies.is_empty(), "sweep spec has no policies");
+        Ok(Self {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("sweep")
+                .to_string(),
+            scenario,
+            axes,
+            policies,
+            trials: j.get("trials").and_then(Json::as_usize).unwrap_or(10_000),
+            seed: j.get("seed").and_then(Json::as_usize).unwrap_or(2022) as u64,
+            crn: j.get("crn").and_then(Json::as_bool).unwrap_or(true),
+            keep_samples: j
+                .get("keep_samples")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+        })
+    }
+}
+
+fn apply_param(
+    sc: &mut ScenarioSpec,
+    overhead: &mut Option<f64>,
+    param: &str,
+    v: f64,
+) -> anyhow::Result<()> {
+    match param {
+        "seed" => {
+            anyhow::ensure!(
+                v >= 0.0 && v.fract() == 0.0 && v <= MAX_SEED as f64,
+                "seed axis value {v} is not an integer in [0, {MAX_SEED}]"
+            );
+            sc.seed = v as u64;
+        }
+        "gamma_ratio" => sc.gamma_ratio = v,
+        "n_masters" | "n_workers" => {
+            anyhow::ensure!(
+                sc.base == "random",
+                "param '{param}' only applies to the 'random' scenario base (got '{}')",
+                sc.base
+            );
+            anyhow::ensure!(
+                v >= 1.0 && v.fract() == 0.0,
+                "'{param}' axis value {v} is not a positive integer"
+            );
+            if param == "n_masters" {
+                sc.n_masters = v as usize;
+            } else {
+                sc.n_workers = v as usize;
+            }
+        }
+        "l_rows" => sc.l_rows = Some(v),
+        "u_scale" => sc.u_scale = v,
+        "straggler_prob" => sc.straggler_prob = v,
+        "straggler_slow" => sc.straggler_slow = v,
+        "overhead" => *overhead = Some(v),
+        other => anyhow::bail!("unknown axis param '{other}'"),
+    }
+    Ok(())
+}
+
+/// Independent per-cell seed derivation when CRN is off.
+fn mix_seed(seed: u64, index: u64) -> u64 {
+    SplitMix64::new(seed ^ index.wrapping_mul(0x9E37_79B9_7F4A_7C15)).next_u64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assign::ValueModel;
+    use crate::util::json;
+    use crate::util::prop::{check, Config};
+
+    fn one_policy() -> Vec<PolicySpec> {
+        vec![PolicySpec::new("dedi-iter", ValueModel::Markov, "markov")]
+    }
+
+    fn base_spec() -> SweepSpec {
+        SweepSpec::new("t", ScenarioSpec::default(), one_policy())
+    }
+
+    #[test]
+    fn single_cell_expansion() {
+        let cells = base_spec().expand().unwrap();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].index, 0);
+        assert!(cells[0].axis_values.is_empty());
+        assert_eq!(cells[0].seed, 2022);
+        assert_eq!(cells[0].scenario.n_workers(), 5);
+    }
+
+    #[test]
+    fn empty_axis_rejected() {
+        let mut s = base_spec();
+        s.axes.push(Axis::single("gamma_ratio", &[]));
+        let e = s.expand().unwrap_err();
+        assert!(e.to_string().contains("no points"), "{e}");
+    }
+
+    #[test]
+    fn no_policies_rejected() {
+        let mut s = base_spec();
+        s.policies.clear();
+        assert!(s.expand().is_err());
+    }
+
+    #[test]
+    fn unknown_param_rejected() {
+        let mut s = base_spec();
+        s.axes.push(Axis::single("warp_factor", &[9.0]));
+        let e = s.expand().unwrap_err();
+        assert!(e.to_string().contains("unknown param"), "{e}");
+    }
+
+    #[test]
+    fn duplicate_param_rejected() {
+        let mut s = base_spec();
+        s.axes.push(Axis::single("gamma_ratio", &[1.0]));
+        s.axes.push(Axis::single("gamma_ratio", &[2.0]));
+        let e = s.expand().unwrap_err();
+        assert!(e.to_string().contains("two axes"), "{e}");
+    }
+
+    #[test]
+    fn point_arity_mismatch_rejected() {
+        let mut s = base_spec();
+        s.axes.push(Axis {
+            name: "straggler".into(),
+            params: vec!["straggler_prob".into(), "straggler_slow".into()],
+            points: vec![vec![0.1]],
+        });
+        let e = s.expand().unwrap_err();
+        assert!(e.to_string().contains("1 values for 2 params"), "{e}");
+    }
+
+    #[test]
+    fn worker_count_axis_needs_random_base() {
+        let mut s = base_spec();
+        s.axes.push(Axis::single("n_workers", &[4.0]));
+        assert!(s.expand().is_err());
+        s.scenario.base = "random".into();
+        let cells = s.expand().unwrap();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].scenario.n_workers(), 4);
+    }
+
+    #[test]
+    fn cross_product_size_guard() {
+        let mut s = base_spec();
+        let many: Vec<f64> = (0..200).map(|i| 1.0 + i as f64 * 0.01).collect();
+        s.axes.push(Axis::single("gamma_ratio", &many));
+        s.axes.push(Axis::single("u_scale", &many)); // 200 × 200 > MAX_CELLS
+        let e = s.expand().unwrap_err();
+        assert!(e.to_string().contains("cells"), "{e}");
+    }
+
+    #[test]
+    fn grid_is_row_major_with_policies_innermost() {
+        let mut s = base_spec();
+        s.policies = vec![
+            PolicySpec::new("uncoded", ValueModel::Markov, "markov"),
+            PolicySpec::new("dedi-iter", ValueModel::Markov, "markov"),
+        ];
+        s.axes.push(Axis::single("gamma_ratio", &[1.0, 2.0]));
+        s.axes.push(Axis::single("u_scale", &[1.0, 1.5]));
+        let cells = s.expand().unwrap();
+        assert_eq!(cells.len(), 8);
+        // first axis outermost: gamma stays 1.0 for the first 4 cells
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+            let gamma = c.axis_values[0].1;
+            let u = c.axis_values[1].1;
+            assert_eq!(gamma, if i < 4 { 1.0 } else { 2.0 }, "cell {i}");
+            assert_eq!(u, if (i / 2) % 2 == 0 { 1.0 } else { 1.5 }, "cell {i}");
+            assert_eq!(
+                c.policy.policy.as_str(),
+                if i % 2 == 0 { "uncoded" } else { "dedi-iter" },
+                "cell {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn crn_seeds_shared_otherwise_derived() {
+        let mut s = base_spec();
+        s.policies = vec![
+            PolicySpec::new("uncoded", ValueModel::Markov, "markov"),
+            PolicySpec::new("dedi-iter", ValueModel::Markov, "markov"),
+        ];
+        let crn = s.expand().unwrap();
+        assert!(crn.iter().all(|c| c.seed == s.seed));
+        s.crn = false;
+        let indep = s.expand().unwrap();
+        assert_ne!(indep[0].seed, indep[1].seed);
+        // derived seeds are deterministic
+        let again = s.expand().unwrap();
+        assert_eq!(indep[0].seed, again[0].seed);
+    }
+
+    #[test]
+    fn overhead_axis_lands_on_cell_not_scenario() {
+        let mut s = base_spec();
+        s.axes.push(Axis::single("overhead", &[1.2, 2.0]));
+        let cells = s.expand().unwrap();
+        assert_eq!(cells[0].overhead, Some(1.2));
+        assert_eq!(cells[1].overhead, Some(2.0));
+    }
+
+    #[test]
+    fn unknown_base_rejected() {
+        let mut s = base_spec();
+        s.scenario.base = "quantum".into();
+        assert!(s.expand().is_err());
+    }
+
+    #[test]
+    fn invalid_knobs_error_gracefully_not_panic() {
+        // Hand-written specs must get anyhow errors, never transform
+        // asserts: negative/zero u_scale, l_rows, gamma_ratio.
+        let mut s = base_spec();
+        s.scenario.u_scale = -1.0;
+        assert!(s.expand().unwrap_err().to_string().contains("u_scale"));
+        let mut s = base_spec();
+        s.scenario.l_rows = Some(0.0);
+        assert!(s.expand().unwrap_err().to_string().contains("l_rows"));
+        let mut s = base_spec();
+        s.scenario.gamma_ratio = 0.0;
+        assert!(s.expand().unwrap_err().to_string().contains("gamma_ratio"));
+        // ...including via axis points
+        let mut s = base_spec();
+        s.axes.push(Axis::single("u_scale", &[0.0]));
+        assert!(s.expand().is_err());
+    }
+
+    #[test]
+    fn oversized_seeds_rejected_not_rounded() {
+        // Seeds above 2^52 would silently round through JSON doubles.
+        let mut s = base_spec();
+        s.seed = MAX_SEED + 1;
+        assert!(s.expand().unwrap_err().to_string().contains("JSON-safe"));
+        let mut s = base_spec();
+        s.scenario.seed = MAX_SEED + 1;
+        assert!(s.expand().is_err());
+        let mut s = base_spec();
+        s.axes
+            .push(Axis::single("seed", &[(MAX_SEED + 2) as f64]));
+        assert!(s.expand().is_err());
+    }
+
+    #[test]
+    fn unknown_policy_fails_at_expand_with_suggestions() {
+        let mut s = base_spec();
+        s.policies = vec![PolicySpec::new("bogus", ValueModel::Markov, "markov")];
+        let e = s.expand().unwrap_err();
+        assert!(e.to_string().contains("dedi-iter"), "{e}");
+    }
+
+    #[test]
+    fn hand_written_minimal_spec_parses_with_defaults() {
+        let text = r#"{
+            "schema": 1,
+            "scenario": {"base": "large"},
+            "axes": [{"params": ["gamma_ratio"], "points": [[0.5], [2]]}],
+            "policies": [{"policy": "dedi-iter", "values": "markov", "loads": "sca"}]
+        }"#;
+        let spec = SweepSpec::from_json(&json::parse(text).unwrap()).unwrap();
+        assert_eq!(spec.name, "sweep");
+        assert_eq!(spec.trials, 10_000);
+        assert!(spec.crn);
+        let cells = spec.expand().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].scenario.n_workers(), 50);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_documents() {
+        let parse = |s: &str| json::parse(s).unwrap();
+        // wrong schema
+        assert!(SweepSpec::from_json(&parse(r#"{"schema": 9, "policies": []}"#)).is_err());
+        // missing schema
+        assert!(SweepSpec::from_json(&parse(r#"{"policies": []}"#)).is_err());
+        // no policies
+        assert!(
+            SweepSpec::from_json(&parse(r#"{"schema": 1, "policies": []}"#)).is_err()
+        );
+        // bad comm model
+        assert!(SweepSpec::from_json(&parse(
+            r#"{"schema": 1, "scenario": {"comm": "telepathy"},
+                "policies": [{"policy": "frac", "values": "markov", "loads": "markov"}]}"#
+        ))
+        .is_err());
+    }
+
+    #[test]
+    fn sweep_spec_json_roundtrip_property() {
+        check(
+            Config::default().cases(50),
+            "SweepSpec JSON round-trip",
+            |g| {
+                let base = *g.rng().choose(&["small", "large", "random", "ec2"]);
+                let mut sc = ScenarioSpec {
+                    base: base.to_string(),
+                    // keep seeds below 2^53 so Json::Num is exact
+                    seed: g.rng().next_u64() >> 12,
+                    ..Default::default()
+                };
+                sc.gamma_ratio = g.f64_range(0.25, 8.0);
+                sc.u_scale = g.f64_range(0.5, 2.0);
+                if g.bool() {
+                    sc.l_rows = Some(g.f64_range(100.0, 1e5));
+                }
+                if g.bool() {
+                    sc.comm = CommModel::CompDominant;
+                }
+                if g.bool() {
+                    sc.straggler_prob = g.f64_range(0.0, 0.2);
+                    sc.straggler_slow = g.f64_range(1.0, 20.0);
+                }
+                let params = ["gamma_ratio", "u_scale", "l_rows", "overhead"];
+                let n_axes = g.usize_range(0, 2);
+                let mut axes = Vec::new();
+                for ai in 0..n_axes {
+                    let n_pts = g.usize_range(1, 4);
+                    let vals = g.vec(n_pts, |g| g.f64_range(0.5, 4.0));
+                    axes.push(Axis::single(params[ai], &vals));
+                }
+                let n_pol = g.usize_range(1, 3);
+                let mut policies = Vec::new();
+                for _ in 0..n_pol {
+                    let policy =
+                        *g.rng().choose(&["uncoded", "coded", "dedi-iter", "frac"]);
+                    let loads = *g.rng().choose(&["markov", "sca"]);
+                    policies.push(PolicySpec::new(policy, ValueModel::Markov, loads));
+                }
+                let spec = SweepSpec {
+                    name: "prop".into(),
+                    scenario: sc,
+                    axes,
+                    policies,
+                    trials: g.usize_range(1, 100_000),
+                    seed: g.rng().next_u64() >> 12,
+                    crn: g.bool(),
+                    keep_samples: g.bool(),
+                };
+                let text = spec.to_json().to_string_pretty();
+                let back = SweepSpec::from_json(&json::parse(&text).unwrap()).unwrap();
+                assert_eq!(back, spec);
+            },
+        );
+    }
+}

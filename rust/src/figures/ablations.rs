@@ -8,16 +8,24 @@
 //! | `multimsg` | the §VI future-work extension: chunked worker returns vs per-message overhead ([20]'s trade-off) |
 //! | `straggler` | sensitivity of the Fig. 8 headline to the burst-throttling mixture (prob × slowdown grid) |
 //! | `sca_step` | SCA step rule: paper's diminishing γ vs DCA full step (quality + iterations) |
+//!
+//! `redundancy` and `straggler` are plan→simulate grids and run as
+//! catalog sweeps ("ablation_redundancy" / "ablation_straggler") on the
+//! batched engine — the `overhead` axis and the zipped `(straggler_prob,
+//! straggler_slow)` axis replace the hand-rolled loops. `multimsg` (its
+//! own chunked-return engine) and `sca_step` (no simulation at all)
+//! are not sweep cells and stay bespoke.
 
-use super::common::{Figure, FigureOptions};
+use super::common::{sweep, Figure, FigureOptions};
 use crate::alloc::{markov, sca, EffLink};
 use crate::assign::ValueModel;
 use crate::config::{CommModel, Scenario};
 use crate::plan;
 use crate::policy::PolicySpec;
-use crate::sim::{self, multimsg, McOptions};
+use crate::sim::multimsg;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+use crate::util::stats::Ecdf;
 use crate::util::table::Table;
 
 pub const ALL_IDS: &[&str] = &["redundancy", "multimsg", "straggler", "sca_step"];
@@ -38,46 +46,21 @@ fn base_plan(s: &Scenario) -> plan::Plan {
         .expect("built-in policy resolves")
 }
 
-/// Scale every load of a plan by `beta / current-overhead` so the coding
-/// overhead becomes exactly `beta`.
-fn with_overhead(p: &plan::Plan, beta: f64) -> plan::Plan {
-    let mut out = p.clone();
-    for mp in &mut out.masters {
-        let cur = mp.total_load() / mp.l_rows;
-        let f = beta / cur;
-        for e in &mut mp.entries {
-            e.load *= f;
-        }
-    }
-    out
-}
-
 fn redundancy(opts: &FigureOptions) -> Figure {
     let mut fig = Figure::new(
         "ablation_redundancy",
         "coding overhead β vs mean delay and ρ=0.95 tail (large scale)",
     );
-    let s = Scenario::large_scale(opts.seed, 2.0, CommModel::Stochastic);
-    let p = base_plan(&s);
+    let result = sweep("ablation_redundancy", opts);
     let mut t = Table::new(&["overhead β", "mean delay (ms)", "ρ=0.95 (ms)"]);
     let mut arr = Vec::new();
-    for beta in [1.05, 1.1, 1.25, 1.5, 2.0, 3.0] {
-        let pb = with_overhead(&p, beta);
-        let r = sim::run(
-            &s,
-            &pb,
-            &McOptions {
-                trials: opts.trials,
-                seed: opts.seed,
-                keep_samples: true,
-                threads: opts.threads,
-            },
-        );
-        let rho = r.system_ecdf().unwrap().inverse(0.95);
-        t.row_fmt(&format!("{beta:.2}"), &[r.system.mean(), rho], 3);
+    for c in &result.cells {
+        let beta = c.overhead.expect("redundancy sweep sets overhead");
+        let rho = Ecdf::new(c.outcome.samples.clone().expect("samples kept")).inverse(0.95);
+        t.row_fmt(&format!("{beta:.2}"), &[c.outcome.system.mean(), rho], 3);
         let mut j = Json::obj();
         j.set("beta", Json::Num(beta));
-        j.set("mean_ms", Json::Num(r.system.mean()));
+        j.set("mean_ms", Json::Num(c.outcome.system.mean()));
         j.set("rho95_ms", Json::Num(rho));
         arr.push(j);
     }
@@ -134,6 +117,7 @@ fn straggler(opts: &FigureOptions) -> Figure {
         "ablation_straggler",
         "Fig. 8 headline sensitivity to the t2 burst-throttling mixture",
     );
+    let result = sweep("ablation_straggler", opts);
     let mut t = Table::new(&[
         "prob × slowdown",
         "Uncoded (ms)",
@@ -141,35 +125,17 @@ fn straggler(opts: &FigureOptions) -> Figure {
         "reduction",
     ]);
     let mut arr = Vec::new();
-    for (prob, slow) in [(0.0, 1.0), (0.01, 10.0), (0.02, 10.0), (0.02, 20.0), (0.05, 20.0), (0.1, 8.0)] {
-        let mut s = Scenario::ec2(40, 10, false);
-        if prob > 0.0 {
-            for row in &mut s.links {
-                for p in row.iter_mut() {
-                    // t2.micro workers only (the first 40).
-                    if (p.a - crate::traces::ec2::T2_MICRO.a).abs() < 1e-9 {
-                        *p = p.with_straggler(prob, slow);
-                    }
-                }
-            }
-        }
-        let mc = McOptions {
-            trials: opts.trials.min(20_000),
-            seed: opts.seed,
-            keep_samples: false,
-            threads: opts.threads,
-        };
-        let build = |policy: &str| {
-            PolicySpec::new(policy, ValueModel::Exact, "exact")
-                .build(&s)
-                .expect("built-in policy resolves")
-        };
-        let unc = sim::run(&s, &build("uncoded"), &mc);
-        let ded = sim::run(&s, &build("dedi-iter"), &mc);
-        let red = 100.0 * (1.0 - ded.system.mean() / unc.system.mean());
+    // Grid order: one (prob, slowdown) point per chunk, policies
+    // [uncoded, dedi-iter] innermost.
+    for pair in result.cells.chunks(2) {
+        let (unc, ded) = (&pair[0], &pair[1]);
+        let prob = unc.axis("straggler_prob").expect("zipped axis");
+        let slow = unc.axis("straggler_slow").expect("zipped axis");
+        let (u_mean, d_mean) = (unc.outcome.system.mean(), ded.outcome.system.mean());
+        let red = 100.0 * (1.0 - d_mean / u_mean);
         t.row_fmt(
             &format!("{prob:.2} × {slow:.0}"),
-            &[unc.system.mean(), ded.system.mean(), red],
+            &[u_mean, d_mean, red],
             1,
         );
         let mut j = Json::obj();
@@ -235,14 +201,25 @@ fn sca_step(opts: &FigureOptions) -> Figure {
 mod tests {
     use super::*;
 
+    /// Seed + streams pinned ⇒ machine-independent values; see the fig2
+    /// test module note on the PR-1 flake risk.
     fn fast() -> FigureOptions {
         FigureOptions {
             trials: 1_500,
             seed: 13,
             fit_samples: 1_000,
-            threads: 0,
+            threads: 1,
         }
     }
+
+    /// β=3 over-redundancy penalty: every node carries 1.5× the rows of
+    /// the best-β plan, so its mean must exceed the sweep's best by well
+    /// over the CRN-shared noise; 5% is ~¼ of the structural effect.
+    const OVERRED_MIN_PENALTY: f64 = 1.05;
+
+    /// DCA and diminishing step converge to the same stationary point;
+    /// 1% covers the looser diminishing-step termination.
+    const STEP_RULE_MAX_GAP: f64 = 1e-2;
 
     #[test]
     fn all_ablations_smoke() {
@@ -265,7 +242,20 @@ mod tests {
             .map(|j| j.get("mean_ms").unwrap().as_f64().unwrap())
             .collect();
         let best = means.iter().cloned().fold(f64::INFINITY, f64::min);
-        assert!(means.last().unwrap() > &(best * 1.05), "{means:?}");
+        assert!(
+            means.last().unwrap() > &(best * OVERRED_MIN_PENALTY),
+            "{means:?}"
+        );
+    }
+
+    #[test]
+    fn straggler_grid_shape() {
+        let fig = straggler(&fast());
+        let series = fig.json.get("series").unwrap().as_arr().unwrap();
+        assert_eq!(series.len(), 6);
+        // the clean point (prob 0) reduces least; heavy throttling most
+        let red = |i: usize| series[i].get("reduction_pct").unwrap().as_f64().unwrap();
+        assert!(red(3) > red(0), "throttling should amplify the coding win");
     }
 
     #[test]
@@ -273,7 +263,7 @@ mod tests {
         let fig = sca_step(&fast());
         for j in fig.json.get("series").unwrap().as_arr().unwrap() {
             let gap = j.get("gap").unwrap().as_f64().unwrap();
-            assert!(gap < 1e-2, "gap {gap}");
+            assert!(gap < STEP_RULE_MAX_GAP, "gap {gap}");
         }
     }
 }

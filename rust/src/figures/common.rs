@@ -1,16 +1,22 @@
 //! Shared figure types + helpers.
 //!
-//! Figures resolve strategies through [`crate::policy::registry`] by
-//! name — a policy registered at runtime is immediately addressable from
-//! [`roster`]-style spec lists with no figure-code edits.
+//! Since the sweep rewrite, each figure is a thin declaration: its cells
+//! live in [`crate::experiment::catalog`] as a `SweepSpec`, [`sweep`]
+//! runs them on the batched engine, and the figure module only formats
+//! tables/JSON from the returned cells. [`evaluate`] remains as the
+//! serial single-spec path (and as the legacy fixture the golden-parity
+//! tests compare the sweeps against).
 
-use crate::assign::ValueModel;
 use crate::config::Scenario;
+use crate::experiment::{self, catalog, CellResult, SweepOptions, SweepResult};
 use crate::plan::Plan;
 use crate::policy::PolicySpec;
 use crate::sim::{self, McOptions, McResults};
 use crate::util::json::Json;
+use crate::util::stats::Summary;
 use crate::util::table::Table;
+
+pub use crate::experiment::catalog::roster;
 
 /// Harness options shared by all figures.
 #[derive(Clone, Copy, Debug)]
@@ -40,7 +46,7 @@ impl FigureOptions {
     pub fn mc(&self, keep_samples: bool) -> McOptions {
         McOptions {
             trials: self.trials,
-            seed: self.seed ^ 0x5EED,
+            seed: catalog::fig_mc_seed(self.seed),
             keep_samples,
             threads: self.threads,
         }
@@ -94,6 +100,22 @@ impl Figure {
     }
 }
 
+/// Run one catalog sweep with this figure's options on the batched
+/// engine. Panics on failure — catalog ids are library-internal and a
+/// broken one is a bug, matching the figures' historical behavior.
+pub fn sweep(id: &str, opts: &FigureOptions) -> SweepResult {
+    let spec = catalog::spec(id, opts.trials, opts.seed)
+        .unwrap_or_else(|e| panic!("catalog spec '{id}': {e}"));
+    experiment::run_sweep(
+        &spec,
+        &SweepOptions {
+            threads: opts.threads,
+            cell_streams: opts.threads,
+        },
+    )
+    .unwrap_or_else(|e| panic!("sweep '{id}': {e}"))
+}
+
 /// One evaluated algorithm: label + plan + Monte-Carlo results.
 pub struct Evaluated {
     pub label: String,
@@ -101,7 +123,9 @@ pub struct Evaluated {
     pub results: McResults,
 }
 
-/// Build + evaluate one registry-resolved policy spec.
+/// Build + evaluate one registry-resolved policy spec serially (the
+/// pre-sweep evaluation path, kept as the single-spec API and as the
+/// golden-parity fixture for the batched engine).
 pub fn evaluate(
     s: &Scenario,
     spec: &PolicySpec,
@@ -119,42 +143,38 @@ pub fn evaluate(
     }
 }
 
-/// The §V-B algorithm roster (Fig. 4/5/6/8 legends), by registry name.
-/// `small_scale` adds the λ-sweep optimum (M = 2 only). `values`/`loads`
-/// configure the proposed algorithms (Markov for the general case,
-/// "exact" for computation-dominant scenarios like Fig. 8).
-pub fn roster(small_scale: bool, values: ValueModel, loads: &str) -> Vec<PolicySpec> {
-    let mut specs = vec![
-        PolicySpec::new("uncoded", values, loads),
-        PolicySpec::new("coded", values, loads),
-        PolicySpec::new("dedi-simple", values, loads),
-        PolicySpec::new("dedi-iter", values, loads),
-        PolicySpec::new("dedi-iter", values, "sca"),
-        PolicySpec::new("frac", values, loads),
-        PolicySpec::new("frac", values, "sca"),
-    ];
-    if small_scale {
-        specs.push(PolicySpec::new("optimal", values, "sca"));
-    }
-    specs
-}
-
-/// JSON record for one algorithm's MC outcome.
-pub fn result_json(e: &Evaluated) -> Json {
+/// JSON record for one evaluated result — the stable five-key figure
+/// schema, shared by the sweep and serial paths.
+fn result_record(label: &str, system: &Summary, per_master: &[Summary], t_est: f64) -> Json {
     let mut j = Json::obj();
-    j.set("label", Json::Str(e.label.clone()));
-    j.set("mean_system_delay_ms", Json::Num(e.results.system.mean()));
-    j.set("sem_ms", Json::Num(e.results.system.sem()));
-    j.set("t_est_ms", Json::Num(e.plan.t_est()));
+    j.set("label", Json::Str(label.to_string()));
+    j.set("mean_system_delay_ms", Json::Num(system.mean()));
+    j.set("sem_ms", Json::Num(system.sem()));
+    j.set("t_est_ms", Json::Num(t_est));
     j.set(
         "per_master_mean_ms",
-        Json::from_f64_slice(
-            &e.results
-                .per_master
-                .iter()
-                .map(|s| s.mean())
-                .collect::<Vec<_>>(),
-        ),
+        Json::from_f64_slice(&per_master.iter().map(|s| s.mean()).collect::<Vec<_>>()),
     );
     j
+}
+
+/// JSON record for one algorithm's serially evaluated MC outcome.
+pub fn result_json(e: &Evaluated) -> Json {
+    result_record(
+        &e.label,
+        &e.results.system,
+        &e.results.per_master,
+        e.plan.t_est(),
+    )
+}
+
+/// JSON record for one sweep cell's outcome — same keys as
+/// [`result_json`] so figure JSON is stable across the sweep rewrite.
+pub fn result_json_cell(c: &CellResult) -> Json {
+    result_record(
+        &c.outcome.label,
+        &c.outcome.system,
+        &c.outcome.per_master,
+        c.outcome.t_est_ms,
+    )
 }

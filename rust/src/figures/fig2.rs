@@ -7,53 +7,44 @@
 //! * **Approx, enhanced** — assignment from the approximation, loads
 //!   re-solved with Theorem 2 (the §III-D enhancement specialized to the
 //!   computation-dominant case, as the paper does for this figure).
+//!
+//! The cells are declared in [`crate::experiment::catalog`] (ids "fig2" /
+//! "fig3") and run on the batched sweep engine.
 
-use super::common::{evaluate, Evaluated, Figure, FigureOptions};
-use crate::assign::ValueModel;
-use crate::config::{CommModel, Scenario};
+use super::common::{result_json_cell, sweep, Figure, FigureOptions};
+use crate::experiment::catalog;
 use crate::policy::PolicySpec;
 use crate::util::json::Json;
 use crate::util::stats::Ecdf;
 use crate::util::table::Table;
 
-/// The three validation variants (registry-resolved).
+/// The three validation variants (registry-resolved; declared in the
+/// sweep catalog).
 pub fn variants() -> Vec<(&'static str, PolicySpec)> {
-    vec![
-        (
-            "Exact (Thm 2)",
-            PolicySpec::new("dedi-iter", ValueModel::Exact, "exact"),
-        ),
-        (
-            "Approx (Thm 1)",
-            PolicySpec::new("dedi-iter", ValueModel::Markov, "markov"),
-        ),
-        (
-            "Approx, enhanced",
-            PolicySpec::new("dedi-iter", ValueModel::Markov, "exact"),
-        ),
-    ]
+    catalog::validation_variants()
 }
 
-/// Shared driver for Figs. 2 and 3.
-pub fn validation(id: &str, title: &str, s: &Scenario, opts: &FigureOptions) -> Figure {
+/// Shared driver for Figs. 2 and 3: run the catalog sweep of `id` and
+/// format its three cells.
+pub fn validation(id: &str, title: &str, opts: &FigureOptions) -> Figure {
     let mut fig = Figure::new(id, title);
-    let evals: Vec<(&str, Evaluated)> = variants()
-        .into_iter()
-        .map(|(name, spec)| (name, evaluate(s, &spec, opts, true)))
-        .collect();
+    let result = sweep(id, opts);
+    let names: Vec<&'static str> = variants().into_iter().map(|(n, _)| n).collect();
+    assert_eq!(result.cells.len(), names.len(), "{id}: unexpected grid");
+    let n_masters = result.cells[0].outcome.per_master.len();
 
     // (a) average task completion delay per master + all-tasks max.
     let mut header: Vec<String> = vec!["solution".into()];
-    header.extend((0..s.n_masters()).map(|m| format!("master {} (ms)", m + 1)));
+    header.extend((0..n_masters).map(|m| format!("master {} (ms)", m + 1)));
     header.push("all tasks (ms)".into());
     let hdr_refs: Vec<&str> = header.iter().map(String::as_str).collect();
     let mut ta = Table::new(&hdr_refs);
     let mut results = Vec::new();
-    for (name, e) in &evals {
-        let mut vals: Vec<f64> = e.results.per_master.iter().map(|s| s.mean()).collect();
-        vals.push(e.results.system.mean());
+    for (name, c) in names.iter().zip(&result.cells) {
+        let mut vals: Vec<f64> = c.outcome.per_master.iter().map(|s| s.mean()).collect();
+        vals.push(c.outcome.system.mean());
         ta.row_fmt(name, &vals, 3);
-        let mut j = super::common::result_json(e);
+        let mut j = result_json_cell(c);
         j.set("name", Json::Str(name.to_string()));
         results.push(j);
     }
@@ -61,16 +52,17 @@ pub fn validation(id: &str, title: &str, s: &Scenario, opts: &FigureOptions) -> 
 
     // (b) CDF of the all-tasks completion delay.
     let mut tb = Table::new(&["P[T ≤ t]", "Exact (ms)", "Approx (ms)", "Approx, enhanced (ms)"]);
-    let ecdfs: Vec<Ecdf> = evals
+    let ecdfs: Vec<Ecdf> = result
+        .cells
         .iter()
-        .map(|(_, e)| e.results.system_ecdf().expect("samples kept"))
+        .map(|c| Ecdf::new(c.outcome.samples.clone().expect("sweep keeps samples")))
         .collect();
     let mut series = Vec::new();
     for p in [0.05, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99] {
         let vals: Vec<f64> = ecdfs.iter().map(|e| e.inverse(p)).collect();
         tb.row_fmt(&format!("{p:.2}"), &vals, 3);
     }
-    for ((name, _), e) in evals.iter().zip(&ecdfs) {
+    for (name, e) in names.iter().zip(&ecdfs) {
         let mut j = Json::obj();
         j.set("name", Json::Str(name.to_string()));
         j.set("cdf", Json::from_pairs(&e.series(64)));
@@ -84,11 +76,9 @@ pub fn validation(id: &str, title: &str, s: &Scenario, opts: &FigureOptions) -> 
 }
 
 pub fn run(opts: &FigureOptions) -> Figure {
-    let s = Scenario::small_scale(opts.seed, 2.0, CommModel::CompDominant);
     validation(
         "fig2",
         "Markov-approximation validation, 2 masters × 5 workers",
-        &s,
         opts,
     )
 }
@@ -97,14 +87,35 @@ pub fn run(opts: &FigureOptions) -> Figure {
 mod tests {
     use super::*;
 
+    /// Deterministic test options. `threads` is PINNED (not 0 = "all
+    /// cores"): the MC result depends bit-for-bit on how trials split
+    /// across RNG streams, so an unpinned thread count made every
+    /// statistical assertion here machine-dependent — the flake risk
+    /// CHANGES.md PR 1 flagged. With seed and streams pinned, the
+    /// sampled values are identical on every machine and the tolerances
+    /// below are exact gates, not probabilistic ones.
     fn fast() -> FigureOptions {
         FigureOptions {
             trials: 2_000,
             seed: 1,
             fit_samples: 1_000,
-            threads: 0,
+            threads: 1,
         }
     }
+
+    /// |enhanced − exact| / exact bound. Both variants share one MC seed
+    /// (common random numbers), so the paired difference carries only
+    /// the plan difference plus correlated noise. Each mean's relative
+    /// sem at 2 000 trials is ≈ cv/√2000 ≈ 0.35/44.7 ≈ 0.8% (delay cv
+    /// ≈ 0.35 on this scenario); 5% ≈ 6σ of even the UNpaired
+    /// difference — headroom without admitting a real Exact/enhanced
+    /// divergence (the paper's claim is that they coincide).
+    const ENHANCED_VS_EXACT_RTOL: f64 = 0.05;
+
+    /// Approx (Thm 1) may sit above Exact — the Markov bound is
+    /// conservative — but within the paper's "acceptable gap": 2× is
+    /// far above the observed ~1.1–1.3× and any 6σ noise band.
+    const APPROX_VS_EXACT_FACTOR: f64 = 2.0;
 
     #[test]
     fn enhanced_tracks_exact() {
@@ -120,11 +131,13 @@ mod tests {
         };
         let (exact, approx, enhanced) = (mean(0), mean(1), mean(2));
         assert!(
-            (enhanced - exact).abs() / exact < 0.05,
+            (enhanced - exact).abs() / exact < ENHANCED_VS_EXACT_RTOL,
             "enhanced {enhanced} vs exact {exact}"
         );
-        // Approx is within a reasonable factor (paper: "acceptable gap").
-        assert!(approx < 2.0 * exact, "approx {approx} vs exact {exact}");
+        assert!(
+            approx < APPROX_VS_EXACT_FACTOR * exact,
+            "approx {approx} vs exact {exact}"
+        );
     }
 
     #[test]

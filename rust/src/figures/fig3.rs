@@ -1,16 +1,14 @@
 //! Fig. 3: validation of the Markov-inequality approximation, large scale
-//! (M = 4, N = 50, computation-dominant). Same driver as Fig. 2.
+//! (M = 4, N = 50, computation-dominant). Same driver as Fig. 2, cells
+//! declared under catalog id "fig3".
 
 use super::common::{Figure, FigureOptions};
 use super::fig2;
-use crate::config::{CommModel, Scenario};
 
 pub fn run(opts: &FigureOptions) -> Figure {
-    let s = Scenario::large_scale(opts.seed, 2.0, CommModel::CompDominant);
     fig2::validation(
         "fig3",
         "Markov-approximation validation, 4 masters × 50 workers",
-        &s,
         opts,
     )
 }
@@ -19,13 +17,21 @@ pub fn run(opts: &FigureOptions) -> Figure {
 mod tests {
     use super::*;
 
+    /// |enhanced − exact| / exact bound. 1 000 CRN trials at large scale:
+    /// relative sem ≈ cv/√1000 ≈ 0.3/31.6 ≈ 1% per mean, the paired
+    /// (shared-seed) difference tighter still; 5% ≈ 5σ unpaired.
+    const ENHANCED_VS_EXACT_RTOL: f64 = 0.05;
+
     #[test]
     fn large_scale_enhanced_close_to_exact() {
+        // Seed + streams pinned: the sampled values are machine-
+        // independent, so this is an exact regression gate (see the
+        // fig2 test module note on the PR-1 flake risk).
         let fig = run(&FigureOptions {
             trials: 1_000,
             seed: 2,
             fit_samples: 1_000,
-            threads: 0,
+            threads: 1,
         });
         let arr = fig.json.get("results").unwrap().as_arr().unwrap();
         let mean = |i: usize| {
@@ -37,7 +43,7 @@ mod tests {
         };
         let (exact, enhanced) = (mean(0), mean(2));
         assert!(
-            (enhanced - exact).abs() / exact < 0.05,
+            (enhanced - exact).abs() / exact < ENHANCED_VS_EXACT_RTOL,
             "enhanced {enhanced} vs exact {exact}"
         );
         // Large scale: ~12 workers per master at L = 10⁴ rows lands in

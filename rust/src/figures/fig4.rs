@@ -4,30 +4,34 @@
 //! (a) small scale — includes the λ-sweep grid optimum;
 //! (b) large scale — optimum omitted (like the paper: the search is only
 //!     feasible at M = 2).
+//!
+//! Cells are declared in the sweep catalog (ids "fig4a" / "fig4b") and
+//! run on the batched engine.
 
-use super::common::{evaluate, result_json, roster, Figure, FigureOptions};
-use crate::assign::ValueModel;
-use crate::config::{CommModel, Scenario};
+use super::common::{result_json_cell, sweep, Figure, FigureOptions};
 use crate::util::json::Json;
 use crate::util::table::Table;
 
-fn delays(id: &str, title: &str, s: &Scenario, small: bool, opts: &FigureOptions) -> Figure {
+fn delays(id: &str, title: &str, opts: &FigureOptions) -> Figure {
     let mut fig = Figure::new(id, title);
-    let specs = roster(small, ValueModel::Markov, "markov");
+    let result = sweep(id, opts);
     let mut t = Table::new(&["algorithm", "avg delay (ms)", "±sem", "planner t* (ms)"]);
     let mut results = Vec::new();
     let mut uncoded_mean = None;
     let mut coded_mean = None;
-    for spec in &specs {
-        let e = evaluate(s, spec, opts, false);
-        let mean = e.results.system.mean();
-        match e.label.as_str() {
+    for c in &result.cells {
+        let mean = c.outcome.system.mean();
+        match c.outcome.label.as_str() {
             "Uncoded" => uncoded_mean = Some(mean),
             "Coded [5]" => coded_mean = Some(mean),
             _ => {}
         }
-        t.row_fmt(&e.label, &[mean, e.results.system.sem(), e.plan.t_est()], 3);
-        results.push(result_json(&e));
+        t.row_fmt(
+            &c.outcome.label,
+            &[mean, c.outcome.system.sem(), c.outcome.t_est_ms],
+            3,
+        );
+        results.push(result_json_cell(c));
     }
     fig.add_table("average task completion delay", t);
 
@@ -50,23 +54,17 @@ fn delays(id: &str, title: &str, s: &Scenario, small: bool, opts: &FigureOptions
 }
 
 pub fn run_small(opts: &FigureOptions) -> Figure {
-    let s = Scenario::small_scale(opts.seed, 2.0, CommModel::Stochastic);
     delays(
         "fig4a",
         "average delay, 2 masters × 5 workers (γ = 2u)",
-        &s,
-        true,
         opts,
     )
 }
 
 pub fn run_large(opts: &FigureOptions) -> Figure {
-    let s = Scenario::large_scale(opts.seed, 2.0, CommModel::Stochastic);
     delays(
         "fig4b",
         "average delay, 4 masters × 50 workers (γ = 2u)",
-        &s,
-        false,
         opts,
     )
 }
@@ -75,14 +73,31 @@ pub fn run_large(opts: &FigureOptions) -> Figure {
 mod tests {
     use super::*;
 
+    /// Seed + streams pinned ⇒ machine-independent values; see the fig2
+    /// test module note on the PR-1 flake risk.
     fn fast() -> FigureOptions {
         FigureOptions {
             trials: 3_000,
             seed: 3,
             fit_samples: 1_000,
-            threads: 0,
+            threads: 1,
         }
     }
+
+    /// Required SCA improvement over the plain Markov allocation: the
+    /// paper reports −8.85% at small scale; all cells share one MC seed
+    /// (CRN), so the paired delta's noise is far below the per-mean
+    /// rel. sem of ≈ 0.35/√3000 ≈ 0.6%. Requiring ≥ 3% keeps ~6%
+    /// of slack for the plan-dependent part of the gap.
+    const SCA_MIN_GAIN: f64 = 0.03;
+
+    /// Frac + SCA vs the grid optimum: the paper calls it "close-to-
+    /// optimal"; 5% ≈ 8× the CRN-paired noise at 3 000 trials.
+    const FRAC_VS_OPTIMAL_RTOL: f64 = 0.05;
+
+    /// Iterated vs simple greedy at large scale: iter ≤ simple up to a
+    /// 2% band (they may tie; the band covers the paired noise).
+    const ITER_VS_SIMPLE_SLACK: f64 = 1.02;
 
     fn mean_of(fig: &Figure, label: &str) -> f64 {
         fig.json
@@ -119,13 +134,12 @@ mod tests {
         assert!(frac_sca < uncoded && frac_sca < coded);
         // SCA materially helps at small scale (paper: 8.85%).
         assert!(
-            dedi_sca < dedi * 0.97,
+            dedi_sca < dedi * (1.0 - SCA_MIN_GAIN),
             "SCA gain too small: {dedi_sca} vs {dedi}"
         );
-        // Fractional + SCA is close to the grid optimum (paper: "close-
-        // to-optimal").
+        // Fractional + SCA is close to the grid optimum.
         assert!(
-            (frac_sca - optimal_sca).abs() / optimal_sca < 0.05,
+            (frac_sca - optimal_sca).abs() / optimal_sca < FRAC_VS_OPTIMAL_RTOL,
             "frac+SCA {frac_sca} vs optimal {optimal_sca}"
         );
     }
@@ -135,6 +149,9 @@ mod tests {
         let fig = run_large(&fast());
         let iter = mean_of(&fig, "Dedi, iter");
         let simple = mean_of(&fig, "Dedi, simple");
-        assert!(iter <= simple * 1.02, "iter {iter} vs simple {simple}");
+        assert!(
+            iter <= simple * ITER_VS_SIMPLE_SLACK,
+            "iter {iter} vs simple {simple}"
+        );
     }
 }

@@ -1,33 +1,28 @@
 //! Fig. 5: CDF of the task completion delay (the P1 view of the P2
 //! solutions) with the ρ_s = 0.95 readouts the paper quotes
 //! (SCA-dedi 0.658 s < dedi 0.694 s < coded 0.957 s in 5(b)).
+//!
+//! Panels are the catalog sweeps "fig5a" (small scale) and "fig5b"
+//! (large scale), samples kept for the CDFs.
 
-use super::common::{evaluate, Figure, FigureOptions};
-use crate::assign::ValueModel;
-use crate::config::{CommModel, Scenario};
-use crate::policy::PolicySpec;
+use super::common::{sweep, Figure, FigureOptions};
 use crate::util::json::Json;
 use crate::util::stats::Ecdf;
 use crate::util::table::Table;
 
-fn specs() -> Vec<PolicySpec> {
-    let v = ValueModel::Markov;
-    vec![
-        PolicySpec::new("coded", v, "markov"),
-        PolicySpec::new("dedi-iter", v, "markov"),
-        PolicySpec::new("dedi-iter", v, "sca"),
-        PolicySpec::new("frac", v, "sca"),
-    ]
-}
-
-fn cdf_panel(fig: &mut Figure, tag: &str, s: &Scenario, opts: &FigureOptions) {
-    let mut rows = Vec::new();
+fn cdf_panel(fig: &mut Figure, tag: &str, id: &str, opts: &FigureOptions) {
+    let result = sweep(id, opts);
+    let rows: Vec<(String, Ecdf)> = result
+        .cells
+        .iter()
+        .map(|c| {
+            (
+                c.outcome.label.clone(),
+                Ecdf::new(c.outcome.samples.clone().expect("samples kept")),
+            )
+        })
+        .collect();
     let mut series = Vec::new();
-    for spec in specs() {
-        let e = evaluate(s, &spec, opts, true);
-        let ecdf: Ecdf = e.results.system_ecdf().unwrap();
-        rows.push((e.label.clone(), ecdf));
-    }
     let mut t = Table::new(&["algorithm", "t @ ρ=0.5 (ms)", "t @ ρ=0.9", "t @ ρ=0.95", "t @ ρ=0.99"]);
     for (label, ecdf) in &rows {
         t.row_fmt(
@@ -52,10 +47,8 @@ fn cdf_panel(fig: &mut Figure, tag: &str, s: &Scenario, opts: &FigureOptions) {
 
 pub fn run(opts: &FigureOptions) -> Figure {
     let mut fig = Figure::new("fig5", "CDF of task completion delay (ρ_s readouts)");
-    let sa = Scenario::small_scale(opts.seed, 2.0, CommModel::Stochastic);
-    let sb = Scenario::large_scale(opts.seed, 2.0, CommModel::Stochastic);
-    cdf_panel(&mut fig, "a", &sa, opts);
-    cdf_panel(&mut fig, "b", &sb, opts);
+    cdf_panel(&mut fig, "a", "fig5a", opts);
+    cdf_panel(&mut fig, "b", "fig5b", opts);
     fig
 }
 
@@ -63,13 +56,25 @@ pub fn run(opts: &FigureOptions) -> Figure {
 mod tests {
     use super::*;
 
+    /// SCA-dedi may tie dedi at ρ95 (same assignment, nearby loads);
+    /// allow a 2% band for the CRN-paired quantile noise at 4 000
+    /// samples (quantile sem ≈ 1/(f(q)·√n) ≲ 1.5% here).
+    const SCA_VS_DEDI_SLACK: f64 = 1.02;
+
+    /// Paper: >30% ρ95 reduction vs the coded benchmark in 5(b). The
+    /// 15% floor is half the reported effect — quantile noise at 4 000
+    /// samples is ~1.5%, so a breach means a real regression.
+    const SCA_VS_CODED_MAX_RATIO: f64 = 0.85;
+
     #[test]
     fn rho95_ordering_matches_paper() {
+        // Seed + streams pinned ⇒ machine-independent quantiles; see the
+        // fig2 test module note on the PR-1 flake risk.
         let fig = run(&FigureOptions {
             trials: 4_000,
             seed: 4,
             fit_samples: 1_000,
-            threads: 0,
+            threads: 1,
         });
         // Panel (b): SCA-dedi ≤ dedi ≤ coded at ρ_s = 0.95.
         let series = fig.json.get("series_b").unwrap().as_arr().unwrap();
@@ -87,10 +92,9 @@ mod tests {
         let dedi = rho("Dedi, iter");
         let sca = rho("Dedi, iter + SCA");
         assert!(dedi < coded, "dedi {dedi} ≥ coded {coded}");
-        assert!(sca <= dedi * 1.02, "sca {sca} > dedi {dedi}");
-        // Paper: >30% reduction vs coded at ρ_s = 0.95.
+        assert!(sca <= dedi * SCA_VS_DEDI_SLACK, "sca {sca} > dedi {dedi}");
         assert!(
-            sca < coded * 0.85,
+            sca < coded * SCA_VS_CODED_MAX_RATIO,
             "ρ95 reduction too small: {sca} vs {coded}"
         );
     }

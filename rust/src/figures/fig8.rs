@@ -4,7 +4,8 @@
 //!
 //! The paper *plans* with the fitted shifted exponentials but *simulates*
 //! with the measured traces. Our substitution (DESIGN.md §Substitutions)
-//! therefore reports two panels:
+//! therefore reports two panels — the catalog sweeps "fig8_fitted" and
+//! "fig8_measured":
 //! * **fitted model** — delays drawn from the fitted distributions only;
 //! * **measured-trace stand-in** — t2.micro delays drawn from the
 //!   burst-throttling mixture (heavy straggler tail, as in real traces).
@@ -16,9 +17,7 @@
 //! Proposed algorithms use the exact (Theorem-2) values and loads, as the
 //! paper does for this comp-dominant evaluation.
 
-use super::common::{evaluate, result_json, roster, Figure, FigureOptions};
-use crate::assign::ValueModel;
-use crate::config::Scenario;
+use super::common::{result_json_cell, sweep, Figure, FigureOptions};
 use crate::util::json::Json;
 use crate::util::table::Table;
 
@@ -26,20 +25,23 @@ fn panel(
     fig: &mut Figure,
     tag: &str,
     caption: &str,
-    s: &Scenario,
+    id: &str,
     opts: &FigureOptions,
 ) -> Vec<Json> {
-    let specs = roster(false, ValueModel::Exact, "exact");
+    let result = sweep(id, opts);
     let mut t = Table::new(&["algorithm", "avg delay (ms)", "±sem", "planner t* (ms)"]);
     let mut results = Vec::new();
-    for spec in &specs {
-        let e = evaluate(s, spec, opts, false);
+    for c in &result.cells {
         t.row_fmt(
-            &e.label,
-            &[e.results.system.mean(), e.results.system.sem(), e.plan.t_est()],
+            &c.outcome.label,
+            &[
+                c.outcome.system.mean(),
+                c.outcome.system.sem(),
+                c.outcome.t_est_ms,
+            ],
             3,
         );
-        results.push(result_json(&e));
+        results.push(result_json_cell(c));
     }
     fig.add_table(caption, t);
 
@@ -76,14 +78,14 @@ pub fn run(opts: &FigureOptions) -> Figure {
         &mut fig,
         "fitted",
         "(fitted) delays from fitted shifted exponentials",
-        &Scenario::ec2(40, 10, false),
+        "fig8_fitted",
         opts,
     );
     let measured = panel(
         &mut fig,
         "measured",
         "(measured) t2.micro burst-throttling mixture — paper headline: 82% / 30%",
-        &Scenario::ec2(40, 10, true),
+        "fig8_measured",
         opts,
     );
     fig.json.set("results_fitted", Json::Arr(fitted));
@@ -94,6 +96,24 @@ pub fn run(opts: &FigureOptions) -> Figure {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Iter vs simple greedy: identical per-type workers can tie; the
+    /// band only absorbs CRN-paired float noise.
+    const ITER_VS_SIMPLE_SLACK: f64 = 1.001;
+
+    /// Frac tracks the dedicated optimum on this homogeneous-per-type
+    /// fleet; 10% is ≫ the paired noise at 4 000 trials.
+    const FRAC_VS_ITER_RTOL: f64 = 0.1;
+
+    /// Headline floors under the measured-trace stand-in. Paper: 82% vs
+    /// uncoded, 30% vs coded. The floors sit at ~¾ and ~½ of those
+    /// effects: the throttling mixture (0.02 × 20) reproduces the
+    /// qualitative tail, not the exact trace, and the uncoded mean's cv
+    /// is straggler-inflated (rel. sem ≈ 2–3% at 4 000 trials) — the
+    /// floors stay > 10σ away from the observed reductions while still
+    /// failing on any real regression of the coding win.
+    const MIN_REDUCTION_VS_UNCODED: f64 = 0.6;
+    const MIN_REDUCTION_VS_CODED: f64 = 0.15;
 
     fn mean_of(results: &[Json], label: &str) -> f64 {
         results
@@ -108,11 +128,13 @@ mod tests {
 
     #[test]
     fn ec2_headline_reductions() {
+        // Seed + streams pinned ⇒ machine-independent values; see the
+        // fig2 test module note on the PR-1 flake risk.
         let fig = run(&FigureOptions {
             trials: 4_000,
             seed: 8,
             fit_samples: 1_000,
-            threads: 0,
+            threads: 1,
         });
         let measured = fig.json.get("results_measured").unwrap().as_arr().unwrap();
         let uncoded = mean_of(measured, "Uncoded");
@@ -120,23 +142,26 @@ mod tests {
         let iter = mean_of(measured, "Dedi, iter");
         let simple = mean_of(measured, "Dedi, simple");
         let frac = mean_of(measured, "Frac");
-        // Orderings: proposed ≤ both benchmarks; iter ≤ simple (identical
-        // per-type workers can tie); frac ≈ iter.
-        assert!(iter <= simple * 1.001, "iter {iter} > simple {simple}");
+        // Orderings: proposed ≤ both benchmarks; iter ≤ simple; frac ≈ iter.
+        assert!(
+            iter <= simple * ITER_VS_SIMPLE_SLACK,
+            "iter {iter} > simple {simple}"
+        );
         assert!(iter < coded && iter < uncoded);
-        assert!((frac - iter).abs() / iter < 0.1, "frac {frac} vs iter {iter}");
-        // Headline magnitudes under the measured-trace stand-in
-        // (paper: 82% vs uncoded, 30% vs coded).
+        assert!(
+            (frac - iter).abs() / iter < FRAC_VS_ITER_RTOL,
+            "frac {frac} vs iter {iter}"
+        );
         let best = frac.min(iter);
         let red_uncoded = 1.0 - best / uncoded;
         let red_coded = 1.0 - best / coded;
         assert!(
-            red_uncoded > 0.6,
+            red_uncoded > MIN_REDUCTION_VS_UNCODED,
             "vs uncoded only {:.0}% (paper ~82%)",
             100.0 * red_uncoded
         );
         assert!(
-            red_coded > 0.15,
+            red_coded > MIN_REDUCTION_VS_CODED,
             "vs coded only {:.0}% (paper ~30%)",
             100.0 * red_coded
         );

@@ -13,6 +13,11 @@
 //! | fig6 | Fig. 6(a,b) | γ/u sweep: avg delay + local-load ratio |
 //! | fig7 | Fig. 7(a,b) | trace sampling + shifted-exp fit |
 //! | fig8 | Fig. 8 | EC2-fitted comp-dominant comparison |
+//!
+//! Every plan→simulate figure is a thin declaration over the experiment
+//! layer: its cells live in [`crate::experiment::catalog`] as a
+//! `SweepSpec` and run on the batched engine (`common::sweep`); only
+//! fig7 (trace fitting) evaluates outside the sweep engine.
 
 pub mod ablations;
 pub mod common;

@@ -33,7 +33,8 @@
 //! | [`policy`] | OPEN strategy API: `Assigner`/`LoadAllocator` traits, string-keyed registry, serializable `PolicySpec` |
 //! | [`plan`] | strategy pair → `Plan` (assignment + allocation) pipeline; schema-versioned plan JSON |
 //! | [`sim`] | Monte-Carlo completion-delay engine (multi-threaded) |
-//! | [`exec`] | unified `Executor` seam: one call site over [`sim`] and [`coordinator`] |
+//! | [`exec`] | unified `Executor` seam over [`sim`] and [`coordinator`]; shared-pool `BatchRunner` for cell grids |
+//! | [`experiment`] | declarative sweeps: schema-versioned `SweepSpec` (axes × policies), figure catalog, batched `run_sweep` |
 //! | [`traces`] | EC2-style instance profiles + shifted-exponential fitting (Fig. 7) |
 //! | [`figures`] | regenerates every figure of §V (Figs. 2–8) |
 //! | [`runtime`] | PJRT bridge: artifact manifest, executable cache, typed execute |
@@ -50,6 +51,7 @@ pub mod policy;
 pub mod plan;
 pub mod sim;
 pub mod exec;
+pub mod experiment;
 pub mod traces;
 pub mod figures;
 pub mod runtime;

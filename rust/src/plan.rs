@@ -337,6 +337,27 @@ impl Plan {
         })
     }
 
+    /// Rescale every master's loads so the coding overhead `Σ_n l_{m,n} /
+    /// L_m` becomes exactly `beta` (the redundancy ablation / `overhead`
+    /// sweep axis). `t_est` is left untouched: it describes the original
+    /// allocation, not the rescaled one. A `beta < 1` plan can never
+    /// decode — [`Plan::validate`] rejects it before any engine runs it.
+    pub fn with_overhead(&self, beta: f64) -> Plan {
+        assert!(
+            beta.is_finite() && beta > 0.0,
+            "overhead must be positive and finite, got {beta}"
+        );
+        let mut out = self.clone();
+        for mp in &mut out.masters {
+            let cur = mp.total_load() / mp.l_rows;
+            let f = beta / cur;
+            for e in &mut mp.entries {
+                e.load *= f;
+            }
+        }
+        out
+    }
+
     /// Cross-check a (possibly deserialized) plan against the scenario it
     /// is about to run on: master count and node ids must be in range,
     /// otherwise the engines would index out of bounds. Call this at the
@@ -562,6 +583,29 @@ mod tests {
             "Dedi, iter + SCA"
         );
         assert_eq!(spec(Policy::UncodedUniform, LoadMethod::Markov).label(), "Uncoded");
+    }
+
+    #[test]
+    fn with_overhead_hits_target_exactly() {
+        let s = Scenario::large_scale(5, 2.0, CommModel::Stochastic);
+        let p = build(&s, &spec(Policy::DediIter, LoadMethod::Markov));
+        for beta in [1.05, 1.5, 3.0] {
+            let q = p.with_overhead(beta);
+            for (mp, orig) in q.masters.iter().zip(&p.masters) {
+                assert!(
+                    (mp.total_load() / mp.l_rows - beta).abs() < 1e-9,
+                    "beta {beta}"
+                );
+                // proportional rescale: per-node load ratios preserved
+                for (e, o) in mp.entries.iter().zip(&orig.entries) {
+                    assert_eq!(e.node, o.node);
+                    assert!((e.load / o.load - mp.total_load() / orig.total_load()).abs() < 1e-9);
+                }
+                assert_eq!(mp.t_est, orig.t_est);
+            }
+            // sub-L overhead is constructible but rejected at validation
+            assert!(p.with_overhead(0.5).validate(&s).is_err());
+        }
     }
 
     #[test]

@@ -87,90 +87,120 @@ impl MasterSim {
     }
 }
 
-fn compile(s: &Scenario, plan: &Plan) -> Vec<MasterSim> {
-    plan.masters
-        .iter()
-        .enumerate()
-        .map(|(m, mp)| MasterSim {
-            links: mp
-                .entries
-                .iter()
-                .map(|e| {
-                    let p = s.link(m, e.node);
-                    (LinkDelay::new(&p, e.load, e.k, e.b), e.load)
-                })
-                .collect(),
-            l_rows: mp.l_rows,
-            uncoded: plan.uncoded,
-        })
-        .collect()
+/// Precompiled `(scenario, plan)` sampling state, reusable across RNG
+/// streams. Shared by [`run`] and the batched engine
+/// ([`crate::exec::BatchRunner`]) so both sample the exact same way.
+pub struct Compiled {
+    sims: Vec<MasterSim>,
 }
 
-/// Run the Monte-Carlo evaluation of `plan` on `s`.
-pub fn run(s: &Scenario, plan: &Plan, opts: &McOptions) -> McResults {
-    let sims = compile(s, plan);
-    let m_cnt = sims.len();
-    let threads = if opts.threads == 0 {
+impl Compiled {
+    pub fn new(s: &Scenario, plan: &Plan) -> Self {
+        let sims = plan
+            .masters
+            .iter()
+            .enumerate()
+            .map(|(m, mp)| MasterSim {
+                links: mp
+                    .entries
+                    .iter()
+                    .map(|e| {
+                        let p = s.link(m, e.node);
+                        (LinkDelay::new(&p, e.load, e.k, e.b), e.load)
+                    })
+                    .collect(),
+                l_rows: mp.l_rows,
+                uncoded: plan.uncoded,
+            })
+            .collect();
+        Compiled { sims }
+    }
+
+    pub fn n_masters(&self) -> usize {
+        self.sims.len()
+    }
+}
+
+/// The RNG-stream count [`run`] uses for a request: `threads` if nonzero,
+/// else all cores, never more than `trials`. The split determines the
+/// sampled values bit-for-bit, so anything that must reproduce a
+/// `sim::run` result (the batched engine, golden-parity tests) goes
+/// through this same function.
+pub fn effective_streams(trials: usize, threads: usize) -> usize {
+    if threads == 0 {
         std::thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(4)
-            .min(opts.trials.max(1))
+            .min(trials.max(1))
     } else {
-        opts.threads
-    };
-    let per_thread = opts.trials.div_ceil(threads);
-
-    struct ThreadOut {
-        per_master: Vec<Summary>,
-        system: Summary,
-        samples: Vec<f64>,
-        master_samples: Vec<Vec<f64>>,
+        threads
     }
+}
 
-    let outs: Vec<ThreadOut> = std::thread::scope(|scope| {
-        let sims = &sims;
-        let handles: Vec<_> = (0..threads)
-            .map(|ti| {
-                let trials = per_thread.min(opts.trials.saturating_sub(ti * per_thread));
-                scope.spawn(move || {
-                    let mut rng = Rng::new(opts.seed).fork(ti as u64 + 1);
-                    let mut per_master = vec![Summary::new(); m_cnt];
-                    let mut system = Summary::new();
-                    let mut samples =
-                        Vec::with_capacity(if opts.keep_samples { trials } else { 0 });
-                    let mut master_samples = if opts.keep_samples {
-                        vec![Vec::with_capacity(trials); m_cnt]
-                    } else {
-                        vec![]
-                    };
-                    let mut scratch = Vec::new();
-                    for _ in 0..trials {
-                        let mut sys = 0.0f64;
-                        for (m, sim) in sims.iter().enumerate() {
-                            let t = sim.sample(&mut rng, &mut scratch);
-                            per_master[m].push(t);
-                            if opts.keep_samples {
-                                master_samples[m].push(t);
-                            }
-                            sys = sys.max(t);
-                        }
-                        system.push(sys);
-                        if opts.keep_samples {
-                            samples.push(sys);
-                        }
-                    }
-                    ThreadOut {
-                        per_master,
-                        system,
-                        samples,
-                        master_samples,
-                    }
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
-    });
+/// Per-stream trial counts: ceil split of `trials` over `streams`
+/// (trailing streams may receive 0 — kept for stream-id stability).
+pub fn shard_sizes(trials: usize, streams: usize) -> Vec<usize> {
+    let per = trials.div_ceil(streams);
+    (0..streams)
+        .map(|ti| per.min(trials.saturating_sub(ti * per)))
+        .collect()
+}
 
+/// Output of one RNG stream's worth of trials.
+pub struct ShardOut {
+    pub per_master: Vec<Summary>,
+    pub system: Summary,
+    pub samples: Vec<f64>,
+    pub master_samples: Vec<Vec<f64>>,
+}
+
+/// Run `trials` trials on RNG stream `stream` (1-based, exactly how
+/// [`run`] numbers its threads) of the generator seeded by `seed`.
+pub fn run_shard(
+    c: &Compiled,
+    seed: u64,
+    stream: u64,
+    trials: usize,
+    keep_samples: bool,
+) -> ShardOut {
+    let m_cnt = c.sims.len();
+    let mut rng = Rng::new(seed).fork(stream);
+    let mut per_master = vec![Summary::new(); m_cnt];
+    let mut system = Summary::new();
+    let mut samples = Vec::with_capacity(if keep_samples { trials } else { 0 });
+    let mut master_samples = if keep_samples {
+        vec![Vec::with_capacity(trials); m_cnt]
+    } else {
+        vec![]
+    };
+    let mut scratch = Vec::new();
+    for _ in 0..trials {
+        let mut sys = 0.0f64;
+        for (m, sim) in c.sims.iter().enumerate() {
+            let t = sim.sample(&mut rng, &mut scratch);
+            per_master[m].push(t);
+            if keep_samples {
+                master_samples[m].push(t);
+            }
+            sys = sys.max(t);
+        }
+        system.push(sys);
+        if keep_samples {
+            samples.push(sys);
+        }
+    }
+    ShardOut {
+        per_master,
+        system,
+        samples,
+        master_samples,
+    }
+}
+
+/// Merge shard outputs **in stream order** into aggregate results. The
+/// order matters bit-for-bit: Welford merges and sample concatenation
+/// happen exactly as [`run`] performs them.
+pub fn merge_shards(m_cnt: usize, outs: Vec<ShardOut>, keep_samples: bool) -> McResults {
     let mut per_master = vec![Summary::new(); m_cnt];
     let mut system = Summary::new();
     let mut samples = Vec::new();
@@ -188,9 +218,30 @@ pub fn run(s: &Scenario, plan: &Plan, opts: &McOptions) -> McResults {
     McResults {
         per_master,
         system,
-        samples: opts.keep_samples.then_some(samples),
-        master_samples: opts.keep_samples.then_some(master_samples),
+        samples: keep_samples.then_some(samples),
+        master_samples: keep_samples.then_some(master_samples),
     }
+}
+
+/// Run the Monte-Carlo evaluation of `plan` on `s`.
+pub fn run(s: &Scenario, plan: &Plan, opts: &McOptions) -> McResults {
+    let compiled = Compiled::new(s, plan);
+    let streams = effective_streams(opts.trials, opts.threads);
+    let sizes = shard_sizes(opts.trials, streams);
+    let outs: Vec<ShardOut> = std::thread::scope(|scope| {
+        let c = &compiled;
+        let handles: Vec<_> = sizes
+            .iter()
+            .enumerate()
+            .map(|(ti, &trials)| {
+                scope.spawn(move || {
+                    run_shard(c, opts.seed, ti as u64 + 1, trials, opts.keep_samples)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    merge_shards(compiled.n_masters(), outs, opts.keep_samples)
 }
 
 #[cfg(test)]
@@ -296,6 +347,41 @@ mod tests {
         let rd = run(&sd, &pd, &mc(10_000, false));
         let rc = run(&sc, &pc, &mc(10_000, false));
         assert!(rc.system.mean() < rd.system.mean());
+    }
+
+    #[test]
+    fn shard_split_matches_legacy_formula() {
+        // These drove the pre-refactor per-run thread split; the batched
+        // engine reproduces `run` bit-for-bit only if they stay put.
+        assert_eq!(shard_sizes(5, 3), vec![2, 2, 1]);
+        assert_eq!(shard_sizes(4, 3), vec![2, 2, 0]);
+        assert_eq!(shard_sizes(6, 2), vec![3, 3]);
+        assert_eq!(effective_streams(10, 4), 4);
+        assert!(effective_streams(2, 0) <= 2);
+        assert_eq!(effective_streams(0, 0), 1);
+    }
+
+    #[test]
+    fn shards_recompose_run_exactly() {
+        let s = Scenario::small_scale(9, 2.0, CommModel::Stochastic);
+        let p = build(&s, &spec(Policy::DediIter, LoadMethod::Markov));
+        let o = McOptions {
+            trials: 3_000,
+            seed: 21,
+            keep_samples: true,
+            threads: 3,
+        };
+        let direct = run(&s, &p, &o);
+        let c = Compiled::new(&s, &p);
+        let outs: Vec<ShardOut> = shard_sizes(o.trials, 3)
+            .iter()
+            .enumerate()
+            .map(|(ti, &t)| run_shard(&c, o.seed, ti as u64 + 1, t, true))
+            .collect();
+        let merged = merge_shards(c.n_masters(), outs, true);
+        assert_eq!(merged.system.mean(), direct.system.mean());
+        assert_eq!(merged.system.count(), direct.system.count());
+        assert_eq!(merged.samples.unwrap(), direct.samples.unwrap());
     }
 
     #[test]

@@ -7,6 +7,8 @@
 
 use std::time::{Duration, Instant};
 
+use super::json::Json;
+
 /// Prevent the optimizer from eliding a computed value.
 #[inline]
 pub fn black_box<T>(x: T) -> T {
@@ -53,6 +55,36 @@ impl BenchResult {
             tp
         )
     }
+
+    /// Structured record for `BENCH_*.json` perf-trajectory files.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", Json::Str(self.name.clone()));
+        j.set("iters", Json::Num(self.iters as f64));
+        j.set("mean_ns", Json::Num(self.mean.as_nanos() as f64));
+        j.set("std_ns", Json::Num(self.std.as_nanos() as f64));
+        j.set("p50_ns", Json::Num(self.p50.as_nanos() as f64));
+        j.set("p99_ns", Json::Num(self.p99.as_nanos() as f64));
+        j.set("min_ns", Json::Num(self.min.as_nanos() as f64));
+        j.set("max_ns", Json::Num(self.max.as_nanos() as f64));
+        if let Some(t) = self.throughput() {
+            j.set("items_per_sec", Json::Num(t));
+        }
+        j
+    }
+}
+
+/// Write a `BENCH_<bench>.json` perf record — one document per bench
+/// binary, a `results` array of [`BenchResult::to_json`] rows. These
+/// files seed the perf trajectory across PRs (DESIGN.md §Perf).
+pub fn write_json(path: &str, bench: &str, results: &[BenchResult]) -> std::io::Result<()> {
+    let mut j = Json::obj();
+    j.set("bench", Json::Str(bench.to_string()));
+    j.set(
+        "results",
+        Json::Arr(results.iter().map(BenchResult::to_json).collect()),
+    );
+    std::fs::write(path, j.to_string_pretty())
 }
 
 fn fmt_dur(d: Duration) -> String {
@@ -200,6 +232,26 @@ mod tests {
         let tp = r.throughput().unwrap();
         // 1000 items / ~100µs ⇒ ~10M items/s, allow wide margin
         assert!(tp > 1e5 && tp < 1e8, "tp={tp}");
+    }
+
+    #[test]
+    fn bench_json_record_parses_back() {
+        let r = Bench::new()
+            .warmup(Duration::from_millis(1))
+            .measure_time(Duration::from_millis(5))
+            .items(10.0)
+            .run("json-probe", || black_box(1u64 + 1));
+        let dir = std::env::temp_dir().join("coded_coop_benchkit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        write_json(path.to_str().unwrap(), "test", &[r]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = super::super::json::parse(&text).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("test"));
+        let rows = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].get("mean_ns").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(rows[0].get("items_per_sec").is_some());
     }
 
     #[test]

@@ -1,0 +1,197 @@
+//! Golden-parity tests for the experiment layer.
+//!
+//! The sweep rewrites of fig2/fig4/fig6 must reproduce the legacy
+//! per-figure loops cell-for-cell. The fixture here IS the legacy path,
+//! preserved verbatim as `figures::common::evaluate` (build the policy
+//! spec, run it through a serial `sim::run` with the figure-harness seed
+//! derivation). Same scenarios, same plans, same RNG streams ⇒ the
+//! batched engine must match it to the last bit — these are exact
+//! equalities, not tolerances.
+
+use coded_coop::assign::ValueModel;
+use coded_coop::config::{CommModel, Scenario};
+use coded_coop::experiment::{self, catalog, SweepOptions, SweepResult};
+use coded_coop::figures::common::{self, FigureOptions};
+
+const TRIALS: usize = 2_000;
+const SEED: u64 = 9;
+/// Parity holds for ANY stream count as long as both sides pin the same
+/// one; 2 exercises the multi-shard split + merge paths.
+const THREADS: usize = 2;
+
+fn opts() -> FigureOptions {
+    FigureOptions {
+        trials: TRIALS,
+        seed: SEED,
+        fit_samples: 100,
+        threads: THREADS,
+    }
+}
+
+fn run_id(id: &str) -> SweepResult {
+    let spec = catalog::spec(id, TRIALS, SEED).unwrap();
+    experiment::run_sweep(
+        &spec,
+        &SweepOptions {
+            threads: THREADS,
+            cell_streams: THREADS,
+        },
+    )
+    .unwrap()
+}
+
+fn assert_cell_matches(
+    cell: &experiment::CellResult,
+    fixture: &common::Evaluated,
+    ctx: &str,
+) {
+    assert_eq!(
+        cell.outcome.system.mean(),
+        fixture.results.system.mean(),
+        "{ctx}: system mean"
+    );
+    assert_eq!(
+        cell.outcome.system.sem(),
+        fixture.results.system.sem(),
+        "{ctx}: system sem"
+    );
+    assert_eq!(
+        cell.outcome.system.count(),
+        fixture.results.system.count(),
+        "{ctx}: realizations"
+    );
+    assert_eq!(
+        cell.outcome.per_master.len(),
+        fixture.results.per_master.len(),
+        "{ctx}: master count"
+    );
+    for (m, (a, b)) in cell
+        .outcome
+        .per_master
+        .iter()
+        .zip(&fixture.results.per_master)
+        .enumerate()
+    {
+        assert_eq!(a.mean(), b.mean(), "{ctx}: master {m} mean");
+    }
+    assert_eq!(cell.outcome.label, fixture.label, "{ctx}: label");
+    assert_eq!(cell.plan, fixture.plan, "{ctx}: plan");
+    assert_eq!(cell.outcome.t_est_ms, fixture.plan.t_est(), "{ctx}: t_est");
+}
+
+#[test]
+fn fig2_sweep_matches_legacy_loop_bit_for_bit() {
+    // Legacy fixture: the exact loop fig2 ran before the sweep rewrite —
+    // one scenario, three variants, samples kept.
+    let s = Scenario::small_scale(SEED, 2.0, CommModel::CompDominant);
+    let result = run_id("fig2");
+    let variants = catalog::validation_variants();
+    assert_eq!(result.cells.len(), variants.len());
+    for ((name, spec), cell) in variants.into_iter().zip(&result.cells) {
+        let fixture = common::evaluate(&s, &spec, &opts(), true);
+        assert_cell_matches(cell, &fixture, name);
+        // Samples too: the CDF panel must be identical.
+        assert_eq!(
+            cell.outcome.samples.as_ref().unwrap(),
+            fixture.results.samples.as_ref().unwrap(),
+            "{name}: samples"
+        );
+    }
+}
+
+#[test]
+fn fig4_sweeps_match_legacy_loops_bit_for_bit() {
+    for (id, small) in [("fig4a", true), ("fig4b", false)] {
+        let s = if small {
+            Scenario::small_scale(SEED, 2.0, CommModel::Stochastic)
+        } else {
+            Scenario::large_scale(SEED, 2.0, CommModel::Stochastic)
+        };
+        let result = run_id(id);
+        let roster = catalog::roster(small, ValueModel::Markov, "markov");
+        assert_eq!(result.cells.len(), roster.len(), "{id}");
+        for (spec, cell) in roster.iter().zip(&result.cells) {
+            let fixture = common::evaluate(&s, spec, &opts(), false);
+            assert_cell_matches(cell, &fixture, &format!("{id}/{}", fixture.label));
+        }
+    }
+}
+
+#[test]
+fn fig6_sweep_matches_legacy_loop_bit_for_bit() {
+    // Legacy loop: per ratio, rebuild the scenario at the same seed (so
+    // only γ changes), evaluate the 4-policy roster.
+    let result = run_id("fig6");
+    let roster = catalog::fig6_roster();
+    assert_eq!(result.cells.len(), catalog::FIG6_RATIOS.len() * roster.len());
+    let mut ci = 0;
+    for &ratio in catalog::FIG6_RATIOS {
+        let s = Scenario::large_scale(SEED, ratio, CommModel::Stochastic);
+        for spec in &roster {
+            let cell = &result.cells[ci];
+            ci += 1;
+            assert_eq!(cell.axis("gamma_ratio"), Some(ratio));
+            let fixture = common::evaluate(&s, spec, &opts(), false);
+            assert_cell_matches(
+                cell,
+                &fixture,
+                &format!("fig6 γ/u={ratio} {}", fixture.label),
+            );
+        }
+    }
+    assert_eq!(ci, result.cells.len());
+}
+
+#[test]
+fn redundancy_sweep_matches_legacy_loop_bit_for_bit() {
+    // The legacy ablation built one Theorem-1 plan and rescaled its
+    // loads per β; MC seed was the raw harness seed (no figure xor).
+    let s = Scenario::large_scale(SEED, 2.0, CommModel::Stochastic);
+    let base = coded_coop::policy::PolicySpec::new("dedi-iter", ValueModel::Markov, "markov")
+        .build(&s)
+        .unwrap();
+    let result = run_id("ablation_redundancy");
+    assert_eq!(result.cells.len(), catalog::REDUNDANCY_BETAS.len());
+    for (&beta, cell) in catalog::REDUNDANCY_BETAS.iter().zip(&result.cells) {
+        let fixture_plan = base.with_overhead(beta);
+        let direct = coded_coop::sim::run(
+            &s,
+            &fixture_plan,
+            &coded_coop::sim::McOptions {
+                trials: TRIALS,
+                seed: SEED,
+                keep_samples: true,
+                threads: THREADS,
+            },
+        );
+        assert_eq!(cell.plan, fixture_plan, "β={beta}: plan");
+        assert_eq!(
+            cell.outcome.system.mean(),
+            direct.system.mean(),
+            "β={beta}: mean"
+        );
+        assert_eq!(
+            cell.outcome.samples.as_ref().unwrap(),
+            direct.samples.as_ref().unwrap(),
+            "β={beta}: samples"
+        );
+    }
+}
+
+#[test]
+fn sweep_is_deterministic_across_runs_and_pool_sizes() {
+    let a = run_id("fig4a");
+    let b = run_id("fig4a");
+    let wide = experiment::run_sweep(
+        &catalog::spec("fig4a", TRIALS, SEED).unwrap(),
+        &SweepOptions {
+            threads: 8, // different pool, same cell_streams
+            cell_streams: THREADS,
+        },
+    )
+    .unwrap();
+    for ((x, y), z) in a.cells.iter().zip(&b.cells).zip(&wide.cells) {
+        assert_eq!(x.outcome.system.mean(), y.outcome.system.mean());
+        assert_eq!(x.outcome.system.mean(), z.outcome.system.mean());
+    }
+}
