@@ -55,7 +55,9 @@ fn main() {
         };
         let p = plan::build(&scenario, &spec);
         let r = sim::run(&scenario, &p, &mc);
-        let rho95 = r.system_ecdf().unwrap().inverse(0.95);
+        let mean_ms = r.system.mean();
+        // Consuming ECDF: the sample vector moves, no copy.
+        let rho95 = r.into_system_ecdf().unwrap().inverse(0.95);
         let overhead = p
             .masters
             .iter()
@@ -63,7 +65,7 @@ fn main() {
             .fold(0.0f64, f64::max);
         table.row(&[
             p.label.clone(),
-            format!("{:.1}", r.system.mean()),
+            format!("{mean_ms:.1}"),
             format!("{rho95:.1}"),
             format!("{:.1}", p.t_est()),
             format!("{overhead:.2}×"),

@@ -1,0 +1,79 @@
+#!/usr/bin/env python3
+"""Bench-regression smoke gate for the Monte-Carlo kernel.
+
+Parses ``BENCH_engine.json`` (written by ``cargo bench --bench engine``
+or the ``perf_smoke`` test) and fails if kernel v2 falls below the
+legacy kernel measured in the SAME run. Relative comparison only — both
+kernels saw identical machine load, so no absolute thresholds and no
+cross-run flakiness.
+
+Per scenario tag (``small``, ``large``, ``ec2``):
+
+* HARD: ``<tag>/v2-trial-major`` trials/s must be >= ``<tag>/legacy``
+  (within a small jitter allowance).
+* INFO: ``<tag>/v2-blocked`` vs trial-major is reported; blocked is a
+  different-bits fast path whose win varies with link count, so it
+  warns rather than fails.
+
+Usage: python3 bench_gate.py [path/to/BENCH_engine.json]
+"""
+
+import json
+import sys
+
+# One-sided jitter allowance on the HARD compare: CI runners schedule
+# noisily even back-to-back; a true regression shows up far below 1.0.
+JITTER = 0.95
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_engine.json"
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except OSError as e:
+        print(f"bench gate: cannot read {path}: {e}", file=sys.stderr)
+        return 2
+
+    tput = {}
+    for row in doc.get("results", []):
+        name, ips = row.get("name"), row.get("items_per_sec")
+        if name and isinstance(ips, (int, float)) and ips > 0:
+            tput[name] = float(ips)
+
+    tags = sorted({n.split("/", 1)[0] for n in tput if "/" in n})
+    pairs = 0
+    failures = []
+    for tag in tags:
+        legacy = tput.get(f"{tag}/legacy")
+        v2 = tput.get(f"{tag}/v2-trial-major")
+        blocked = tput.get(f"{tag}/v2-blocked")
+        if legacy is None or v2 is None:
+            continue
+        pairs += 1
+        ratio = v2 / legacy
+        verdict = "OK" if ratio >= JITTER else "REGRESSION"
+        print(f"{tag:<12} legacy {legacy:>12.0f} trials/s   "
+              f"v2 {v2:>12.0f} trials/s   x{ratio:.2f}  [{verdict}]")
+        if ratio < JITTER:
+            failures.append(f"{tag}: v2-trial-major is {ratio:.2f}x legacy")
+        if blocked is not None:
+            bratio = blocked / v2
+            note = "" if bratio >= 1.0 else "  (blocked slower than trial-major — investigate)"
+            print(f"{'':<12} blocked {blocked:>11.0f} trials/s   "
+                  f"x{bratio:.2f} vs trial-major{note}")
+
+    if pairs == 0:
+        print("bench gate: no legacy/v2 pairs found in the record", file=sys.stderr)
+        return 2
+    if failures:
+        print("\nbench gate FAILED:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  {f_}", file=sys.stderr)
+        return 1
+    print(f"\nbench gate passed ({pairs} scenario pair(s)).")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

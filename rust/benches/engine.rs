@@ -1,0 +1,125 @@
+//! `cargo bench --bench engine` — the kernel-v2 perf trajectory.
+//!
+//! Measures trials/second of the Monte-Carlo engine on the paper's three
+//! scenario shapes (fig4-style small scale, large scale, EC2 with
+//! stragglers), old kernel vs new:
+//!
+//! * `legacy`        — the pre-v2 AoS kernel (`sim::engine::oracle`),
+//!                     per-trial sort, per-run thread spawn;
+//! * `v2-trial-major`— the SoA kernel, selection scan, shared pool;
+//!                     bit-for-bit identical results to `legacy`;
+//! * `v2-blocked`    — the SoA kernel with column-filled B-trial blocks
+//!                     (same distribution, different bits).
+//!
+//! Kernel rows pin `threads: 1` so the comparison is the sampling loop,
+//! not the scheduler; one all-cores pair quantifies the pool-reuse win on
+//! short runs. Writes `BENCH_engine.json` to the **repo root** — the
+//! perf-trajectory record CI archives and gates on
+//! (`python/bench_gate.py`). `BENCH_QUICK=1` shrinks the measurement for
+//! CI smoke runs.
+
+use std::time::Duration;
+
+use coded_coop::assign::ValueModel;
+use coded_coop::config::{CommModel, Scenario};
+use coded_coop::plan::{self, LoadMethod, PlanSpec, Policy};
+use coded_coop::sim::engine::oracle;
+use coded_coop::sim::{self, McOptions, SampleOrder};
+use coded_coop::util::benchkit::{
+    group, quick_mode, repo_root_record, write_json, Bench, BenchResult,
+};
+
+fn bench(trials: usize) -> Bench {
+    let (warm, measure) = if quick_mode() {
+        (Duration::from_millis(100), Duration::from_millis(400))
+    } else {
+        (Duration::from_millis(300), Duration::from_secs(2))
+    };
+    Bench::new()
+        .warmup(warm)
+        .measure_time(measure)
+        .items(trials as f64)
+}
+
+fn opts(trials: usize, threads: usize) -> McOptions {
+    McOptions {
+        trials,
+        seed: 2022,
+        keep_samples: false,
+        threads,
+    }
+}
+
+fn kernel_rows(
+    results: &mut Vec<BenchResult>,
+    tag: &str,
+    s: &Scenario,
+    p: &plan::Plan,
+    trials: usize,
+) {
+    group(&format!("engine kernels: {tag} ({trials} trials, 1 stream)"));
+    let o = opts(trials, 1);
+    let r = bench(trials).run(&format!("{tag}/legacy"), || {
+        oracle::run(s, p, &o).system.mean()
+    });
+    println!("{}", r.report());
+    results.push(r);
+    let r = bench(trials).run(&format!("{tag}/v2-trial-major"), || {
+        sim::run_ordered(s, p, &o, SampleOrder::TrialMajor).system.mean()
+    });
+    println!("{}", r.report());
+    results.push(r);
+    let r = bench(trials).run(&format!("{tag}/v2-blocked"), || {
+        sim::run_ordered(s, p, &o, SampleOrder::Blocked).system.mean()
+    });
+    println!("{}", r.report());
+    results.push(r);
+}
+
+fn main() {
+    let trials = if quick_mode() { 4_000 } else { 20_000 };
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    let dedi = PlanSpec {
+        policy: Policy::DediIter,
+        values: ValueModel::Markov,
+        loads: LoadMethod::Markov,
+    };
+
+    // fig4-style small scale (M=2, N=5) — the acceptance scenario.
+    let s = Scenario::small_scale(2022, 2.0, CommModel::Stochastic);
+    let p = plan::build(&s, &dedi);
+    kernel_rows(&mut results, "small", &s, &p, trials);
+
+    // Large scale (M=4, N=50): selection scan beyond the sort cutoff.
+    let s = Scenario::large_scale(2022, 2.0, CommModel::Stochastic);
+    let p = plan::build(&s, &dedi);
+    kernel_rows(&mut results, "large", &s, &p, trials);
+
+    // EC2 with the straggler mixture: extra uniform draw per sample.
+    let s = Scenario::ec2(40, 10, true);
+    let p = plan::build(&s, &dedi);
+    kernel_rows(&mut results, "ec2", &s, &p, trials);
+
+    // Scheduler row: short all-cores runs, where the legacy per-run
+    // thread spawn dominates and the shared pool pays off.
+    group("engine scheduler: short all-cores runs (small scenario)");
+    let s = Scenario::small_scale(2022, 2.0, CommModel::Stochastic);
+    let p = plan::build(&s, &dedi);
+    let short = 2_000;
+    let o = opts(short, 0);
+    let r = bench(short).run("small-short/legacy-spawn-per-run", || {
+        oracle::run(&s, &p, &o).system.mean()
+    });
+    println!("{}", r.report());
+    results.push(r);
+    let r = bench(short).run("small-short/v2-shared-pool", || {
+        sim::run(&s, &p, &o).system.mean()
+    });
+    println!("{}", r.report());
+    results.push(r);
+
+    let out = repo_root_record("BENCH_engine.json");
+    write_json(&out, "engine", &results).expect("write BENCH_engine.json");
+    println!("\nwrote {out}");
+}

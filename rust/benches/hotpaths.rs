@@ -35,6 +35,7 @@ fn quick() -> Bench {
 
 fn main() {
     bench_sampling();
+    bench_completion_scan();
     bench_mc_engine();
     bench_assignment();
     bench_sca();
@@ -64,6 +65,38 @@ fn bench_sampling() {
             acc += d.sample(&mut rng);
         }
         acc
+    });
+    println!("{}", r.report());
+}
+
+fn bench_completion_scan() {
+    group("completion resolution: selection scan vs full sort (N=50, 2× redundancy)");
+    let mut rng = Rng::new(3);
+    let n = 50usize;
+    let times: Vec<f64> = (0..n).map(|_| rng.exp(0.5)).collect();
+    let loads: Vec<f64> = (0..n).map(|_| rng.range(50.0, 150.0)).collect();
+    let target = loads.iter().sum::<f64>() / 2.0;
+    let mut ts = vec![0.0; n];
+    let mut ls = vec![0.0; n];
+    let r = quick().items(1.0).run("selection scan", || {
+        ts.copy_from_slice(&times);
+        ls.copy_from_slice(&loads);
+        coded_coop::sim::engine::completion_scan(black_box(&mut ts), &mut ls, target)
+    });
+    println!("{}", r.report());
+    let mut pairs: Vec<(f64, f64)> = Vec::with_capacity(n);
+    let r = quick().items(1.0).run("sort + prefix scan (legacy)", || {
+        pairs.clear();
+        pairs.extend(times.iter().copied().zip(loads.iter().copied()));
+        pairs.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut acc = 0.0;
+        for &(t, l) in black_box(&pairs) {
+            acc += l;
+            if acc >= target {
+                return t;
+            }
+        }
+        f64::INFINITY
     });
     println!("{}", r.report());
 }

@@ -12,12 +12,14 @@ use std::time::Duration;
 
 use coded_coop::exec::{BatchJob, BatchRunner};
 use coded_coop::experiment::catalog;
-use coded_coop::sim::{self, McOptions};
-use coded_coop::util::benchkit::{group, write_json, Bench};
+use coded_coop::sim::{self, McOptions, SampleOrder};
+use coded_coop::util::benchkit::{group, quick_mode, repo_root_record, write_json, Bench};
 
 fn main() {
     group("sweep engine: batched shared pool vs serial per-cell (fig6 grid)");
-    let spec = catalog::spec("fig6", 5_000, 2022).expect("catalog resolves fig6");
+    let quick = quick_mode();
+    let trials = if quick { 1_000 } else { 5_000 };
+    let spec = catalog::spec("fig6", trials, 2022).expect("catalog resolves fig6");
     let cells = spec.expand().expect("fig6 expands");
     let jobs: Vec<BatchJob> = cells
         .iter()
@@ -27,6 +29,7 @@ fn main() {
             seed: c.seed,
             trials: spec.trials,
             keep_samples: false,
+            order: SampleOrder::TrialMajor,
         })
         .collect();
     let total_trials = (jobs.len() * spec.trials) as f64;
@@ -37,9 +40,14 @@ fn main() {
         total_trials as u64
     );
 
+    let measure = if quick {
+        Duration::from_millis(600)
+    } else {
+        Duration::from_secs(3)
+    };
     let serial = Bench::new()
         .warmup(Duration::from_millis(300))
-        .measure_time(Duration::from_secs(3))
+        .measure_time(measure)
         .max_iters(20)
         .items(total_trials)
         .run("sweep::serial_per_cell", || {
@@ -61,7 +69,7 @@ fn main() {
     let runner = BatchRunner::default();
     let batched = Bench::new()
         .warmup(Duration::from_millis(300))
-        .measure_time(Duration::from_secs(3))
+        .measure_time(measure)
         .max_iters(20)
         .items(total_trials)
         .run("sweep::batched_shared_pool", || {
@@ -71,7 +79,7 @@ fn main() {
 
     let speedup = serial.mean.as_secs_f64() / batched.mean.as_secs_f64();
     println!("\nbatched/serial wall-time speedup: {speedup:.2}×");
-    write_json("BENCH_sweep.json", "sweep", &[serial, batched])
-        .expect("write BENCH_sweep.json");
-    println!("wrote BENCH_sweep.json");
+    let out = repo_root_record("BENCH_sweep.json");
+    write_json(&out, "sweep", &[serial, batched]).expect("write BENCH_sweep.json");
+    println!("wrote {out}");
 }

@@ -121,7 +121,8 @@ USAGE:
   coded-coop sweep list
   coded-coop sweep export --figure <id> [--trials N] [--seed S] [--out FILE.json]
   coded-coop sweep run (--spec FILE.json | --figure <id>) [--trials N]
-                  [--seed S] [--threads T] [--cell-streams C] [--out results.json]
+                  [--seed S] [--threads T] [--cell-streams C]
+                  [--order trial_major|blocked] [--out results.json]
   coded-coop e2e  [--masters M] [--workers N] [--rows L] [--cols S]
                   [--policy P] [--seed S] [--native] [--time-scale X]
   coded-coop version | help
@@ -459,7 +460,7 @@ fn cmd_sweep_export(args: &Args) -> anyhow::Result<()> {
 /// `sweep run`: execute a `SweepSpec` (exported JSON or catalog id) on
 /// the batched engine; per-cell `Outcome` table + optional JSON out.
 fn cmd_sweep_run(args: &Args) -> anyhow::Result<()> {
-    let spec = match (args.flag("spec"), args.flag("figure")) {
+    let mut spec = match (args.flag("spec"), args.flag("figure")) {
         (Some(path), _) => {
             let text = std::fs::read_to_string(path)?;
             let mut spec = SweepSpec::from_json(
@@ -481,6 +482,11 @@ fn cmd_sweep_run(args: &Args) -> anyhow::Result<()> {
         )?,
         (None, None) => anyhow::bail!("sweep run needs --spec FILE.json or --figure <id>"),
     };
+    if let Some(o) = args.flag("order") {
+        // Kernel sampling order: `blocked` trades bit-reproducibility
+        // against trial-major runs for throughput (same distribution).
+        spec.sample_order = crate::sim::SampleOrder::parse(o)?;
+    }
     let opts = SweepOptions {
         threads: args.usize_flag("threads", 0)?,
         cell_streams: args.usize_flag("cell-streams", 0)?,

@@ -5,9 +5,11 @@
 //! (a figure roster, a parameter sweep) pays the spawn + join cost once
 //! per cell and leaves cores idle while a cell's slowest shard finishes.
 //! [`BatchRunner`] instead flattens every cell into RNG-stream shards and
-//! drains them all through one work-stealing pool: threads spawn once per
-//! grid, and a fast cell's leftover capacity immediately picks up the
-//! next cell's shards.
+//! drains them all through one pool: by default the shared process pool
+//! ([`crate::exec::pool`], zero spawns per grid), or a scoped pool of
+//! exactly `pool_threads` threads when an explicit width is requested. A
+//! fast cell's leftover capacity immediately picks up the next cell's
+//! shards, and zero-trial trailing shards are never scheduled.
 //!
 //! **Bit-for-bit parity:** each cell is split into the exact shards
 //! `sim::run` would use for `cell_streams` threads
@@ -24,12 +26,13 @@
 //! `crn` flag does exactly that).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use crate::config::Scenario;
 use crate::plan::Plan;
-use crate::sim::engine::{self, Compiled, ShardOut};
+use crate::sim::engine::{self, Compiled, SampleOrder, ShardOut};
 
-use super::Outcome;
+use super::{pool, Outcome};
 
 /// One grid cell: evaluate `plan` on `scenario` for `trials` sampled
 /// realizations seeded by `seed`.
@@ -41,6 +44,10 @@ pub struct BatchJob {
     pub trials: usize,
     /// Keep raw per-trial system delays (needed for CDFs).
     pub keep_samples: bool,
+    /// RNG consumption order (`TrialMajor` reproduces `sim::run`
+    /// bit-for-bit; `Blocked` is the different-bits/same-distribution
+    /// fast path — see `sim::engine`'s bit contract).
+    pub order: SampleOrder,
 }
 
 /// Shared-pool batch engine over [`crate::sim::engine`] shards.
@@ -55,10 +62,16 @@ pub struct BatchRunner {
     pub cell_streams: usize,
 }
 
+/// One schedulable unit: everything `engine::run_shard_ordered` needs,
+/// copied out of the job so pool closures own their inputs.
+#[derive(Clone, Copy)]
 struct Shard {
     job: usize,
     stream: u64,
     trials: usize,
+    seed: u64,
+    keep_samples: bool,
+    order: SampleOrder,
 }
 
 impl BatchRunner {
@@ -71,83 +84,101 @@ impl BatchRunner {
                 .validate(&j.scenario)
                 .map_err(|e| anyhow::anyhow!("batch job {i} ('{}'): {e}", j.plan.label))?;
         }
-        let compiled: Vec<Compiled> = jobs
-            .iter()
-            .map(|j| Compiled::new(&j.scenario, &j.plan))
-            .collect();
+        let compiled: Arc<Vec<Compiled>> = Arc::new(
+            jobs.iter()
+                .map(|j| Compiled::new(&j.scenario, &j.plan))
+                .collect(),
+        );
 
         // Flatten cells into shards; shard indices are contiguous and in
         // stream order per job, so regrouping below preserves the merge
-        // order `sim::run` uses.
+        // order `sim::run` uses. Zero-trial trailing shards (ceil-split
+        // remainders) are never scheduled — their merge contribution is
+        // the empty `ShardOut`, injected in stream order at regroup.
         let mut shards: Vec<Shard> = Vec::new();
-        let mut streams_per_job: Vec<usize> = Vec::with_capacity(jobs.len());
+        let mut sizes_per_job: Vec<Vec<usize>> = Vec::with_capacity(jobs.len());
         for (ji, j) in jobs.iter().enumerate() {
             let streams = engine::effective_streams(j.trials, self.cell_streams);
             let sizes = engine::shard_sizes(j.trials, streams);
-            streams_per_job.push(sizes.len());
             for (ti, &t) in sizes.iter().enumerate() {
-                shards.push(Shard {
-                    job: ji,
-                    stream: ti as u64 + 1,
-                    trials: t,
-                });
+                if t > 0 {
+                    shards.push(Shard {
+                        job: ji,
+                        stream: ti as u64 + 1,
+                        trials: t,
+                        seed: j.seed,
+                        keep_samples: j.keep_samples,
+                        order: j.order,
+                    });
+                }
             }
+            sizes_per_job.push(sizes);
         }
 
-        let pool = if self.pool_threads == 0 {
-            std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(4)
-        } else {
-            self.pool_threads
-        }
-        .min(shards.len().max(1));
-
-        let next = AtomicUsize::new(0);
-        let mut collected: Vec<(usize, ShardOut)> = std::thread::scope(|scope| {
-            let shards_ref = &shards;
-            let compiled_ref = &compiled;
-            let next_ref = &next;
-            let handles: Vec<_> = (0..pool)
-                .map(|_| {
-                    scope.spawn(move || {
-                        let mut local: Vec<(usize, ShardOut)> = Vec::new();
-                        loop {
-                            let i = next_ref.fetch_add(1, Ordering::Relaxed);
-                            if i >= shards_ref.len() {
-                                break;
-                            }
-                            let sh = &shards_ref[i];
-                            let job = &jobs[sh.job];
-                            local.push((
-                                i,
-                                engine::run_shard(
-                                    &compiled_ref[sh.job],
-                                    job.seed,
-                                    sh.stream,
-                                    sh.trials,
-                                    job.keep_samples,
-                                ),
-                            ));
-                        }
-                        local
+        let run_one = |c: &Compiled, sh: Shard| {
+            engine::run_shard_ordered(c, sh.seed, sh.stream, sh.trials, sh.keep_samples, sh.order)
+        };
+        let outs: Vec<ShardOut> = if self.pool_threads == 0 {
+            // Shared process pool: no spawn/join per grid at all.
+            pool::run_all(
+                shards
+                    .iter()
+                    .map(|&sh| {
+                        let c = Arc::clone(&compiled);
+                        move || run_one(&c[sh.job], sh)
                     })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .flat_map(|h| h.join().unwrap())
-                .collect()
-        });
-        collected.sort_by_key(|&(i, _)| i);
+                    .collect(),
+            )
+        } else {
+            // Explicit width: a scoped work-stealing pool of exactly
+            // `pool_threads` threads (sizing tests pin this path).
+            let width = self.pool_threads.min(shards.len().max(1));
+            let next = AtomicUsize::new(0);
+            let mut collected: Vec<(usize, ShardOut)> = std::thread::scope(|scope| {
+                let shards_ref = &shards;
+                let compiled_ref = &compiled;
+                let next_ref = &next;
+                let run_ref = &run_one;
+                let handles: Vec<_> = (0..width)
+                    .map(|_| {
+                        scope.spawn(move || {
+                            let mut local: Vec<(usize, ShardOut)> = Vec::new();
+                            loop {
+                                let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                                if i >= shards_ref.len() {
+                                    break;
+                                }
+                                let sh = shards_ref[i];
+                                local.push((i, run_ref(&compiled_ref[sh.job], sh)));
+                            }
+                            local
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .flat_map(|h| h.join().unwrap())
+                    .collect()
+            });
+            collected.sort_by_key(|&(i, _)| i);
+            collected.into_iter().map(|(_, o)| o).collect()
+        };
 
-        let mut outs_iter = collected.into_iter().map(|(_, o)| o);
+        let mut outs_iter = outs.into_iter();
         let mut outcomes = Vec::with_capacity(jobs.len());
         for (ji, j) in jobs.iter().enumerate() {
-            let outs: Vec<ShardOut> = (0..streams_per_job[ji])
-                .map(|_| outs_iter.next().expect("one output per shard"))
+            let m_cnt = compiled[ji].n_masters();
+            let outs: Vec<ShardOut> = sizes_per_job[ji]
+                .iter()
+                .map(|&t| {
+                    if t > 0 {
+                        outs_iter.next().expect("one output per scheduled shard")
+                    } else {
+                        ShardOut::empty(m_cnt, j.keep_samples)
+                    }
+                })
                 .collect();
-            let r = engine::merge_shards(compiled[ji].n_masters(), outs, j.keep_samples);
+            let r = engine::merge_shards(m_cnt, outs, j.keep_samples);
             outcomes.push(Outcome {
                 label: j.plan.label.clone(),
                 executor: "batch".to_string(),
@@ -178,6 +209,7 @@ mod tests {
             seed,
             trials,
             keep_samples: true,
+            order: SampleOrder::TrialMajor,
         }
     }
 
@@ -244,6 +276,67 @@ mod tests {
             assert_eq!(x.system.mean(), y.system.mean());
             assert_eq!(x.samples, y.samples);
         }
+    }
+
+    #[test]
+    fn zero_trial_shards_skipped_without_changing_results() {
+        // trials=4 at cell_streams=3 → shard split [2, 2, 0]; the zero
+        // shard is never scheduled but the merged cell still matches a
+        // serial sim::run at the same stream count, bit-for-bit.
+        let s = Scenario::small_scale(6, 2.0, CommModel::Stochastic);
+        let jobs = vec![job(&s, "dedi-iter", 3, 4)];
+        let outs = BatchRunner {
+            pool_threads: 2,
+            cell_streams: 3,
+        }
+        .run(&jobs)
+        .unwrap();
+        let direct = sim::run(
+            &s,
+            &jobs[0].plan,
+            &McOptions {
+                trials: 4,
+                seed: 3,
+                keep_samples: true,
+                threads: 3,
+            },
+        );
+        assert_eq!(outs[0].system.count(), 4);
+        assert_eq!(outs[0].system.mean(), direct.system.mean());
+        assert_eq!(
+            outs[0].samples.as_ref().unwrap(),
+            direct.samples.as_ref().unwrap()
+        );
+    }
+
+    #[test]
+    fn blocked_jobs_match_run_ordered() {
+        let s = Scenario::small_scale(9, 2.0, CommModel::Stochastic);
+        let mut j = job(&s, "dedi-iter", 17, 2_500);
+        j.order = SampleOrder::Blocked;
+        let plan = j.plan.clone();
+        let outs = BatchRunner {
+            pool_threads: 2,
+            cell_streams: 2,
+        }
+        .run(&[j])
+        .unwrap();
+        let direct = sim::run_ordered(
+            &s,
+            &plan,
+            &McOptions {
+                trials: 2_500,
+                seed: 17,
+                keep_samples: true,
+                threads: 2,
+            },
+            SampleOrder::Blocked,
+        );
+        assert_eq!(outs[0].system.mean(), direct.system.mean());
+        assert_eq!(
+            outs[0].samples.as_ref().unwrap(),
+            direct.samples.as_ref().unwrap()
+        );
     }
 
     #[test]

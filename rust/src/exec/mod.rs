@@ -19,6 +19,7 @@
 //! cell to [`SimExecutor`] (the `experiment` sweep layer runs on it).
 
 pub mod batch;
+pub mod pool;
 
 pub use batch::{BatchJob, BatchRunner};
 

@@ -1,0 +1,162 @@
+//! Process-wide shared worker pool.
+//!
+//! `sim::run` used to spawn (and join) a fresh set of OS threads on
+//! every call, so a figure roster or a short sweep paid thread creation
+//! once per Monte-Carlo run — a fixed ~100µs-per-thread tax that
+//! dominates small-trial cells. The pool here is created once per
+//! process (first use) and reused by every subsequent run: callers
+//! submit `'static` jobs and block until their own batch completes.
+//!
+//! Determinism is untouched by construction: the work a job does is
+//! fully described by its inputs (RNG stream id, trial count), never by
+//! which worker executes it or in which order batches drain.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex, Once, OnceLock};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Shared FIFO pool. Obtain via [`global`]; there is one per process.
+pub struct Pool {
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    workers: usize,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+static SPAWN: Once = Once::new();
+
+/// The process-wide pool, created (and its workers spawned) on first
+/// use. Width = available cores.
+pub fn global() -> &'static Pool {
+    let pool: &'static Pool = POOL.get_or_init(|| Pool {
+        queue: Mutex::new(VecDeque::new()),
+        cv: Condvar::new(),
+        workers: std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4),
+    });
+    SPAWN.call_once(|| {
+        for i in 0..pool.workers {
+            std::thread::Builder::new()
+                .name(format!("coded-coop-pool-{i}"))
+                .spawn(move || worker_loop(pool))
+                .expect("spawn pool worker");
+        }
+    });
+    pool
+}
+
+fn worker_loop(pool: &'static Pool) {
+    loop {
+        let job = {
+            let mut q = pool.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                q = pool.cv.wait(q).unwrap();
+            }
+        };
+        // Keep the worker alive across a panicking job; the submitter
+        // notices the missing result (its channel sender is dropped
+        // during unwind) and reports from its own thread.
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+    }
+}
+
+impl Pool {
+    /// Pool width (worker thread count).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Enqueue one job.
+    pub fn spawn(&self, job: Job) {
+        self.queue.lock().unwrap().push_back(job);
+        self.cv.notify_one();
+    }
+}
+
+/// Run every thunk on the shared pool and return the results in input
+/// order, blocking the caller until its whole batch is done. Panics if a
+/// thunk panicked on a worker.
+pub fn run_all<T, F>(thunks: Vec<F>) -> Vec<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    let n = thunks.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let pool = global();
+    let (tx, rx) = mpsc::channel();
+    for (i, f) in thunks.into_iter().enumerate() {
+        let tx = tx.clone();
+        pool.spawn(Box::new(move || {
+            let _ = tx.send((i, f()));
+        }));
+    }
+    drop(tx);
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for _ in 0..n {
+        let (i, v) = rx
+            .recv()
+            .expect("pool job vanished (worker panicked while running it)");
+        slots[i] = Some(v);
+    }
+    slots
+        .into_iter()
+        .map(|s| s.expect("every job index delivered exactly once"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_come_back_in_input_order() {
+        let out = run_all((0..64usize).map(|i| move || i * i).collect::<Vec<_>>());
+        assert_eq!(out.len(), 64);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_ok() {
+        let out: Vec<u32> = run_all(Vec::<fn() -> u32>::new());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn pool_is_reused_across_batches() {
+        let p1 = global() as *const Pool;
+        let _ = run_all(vec![|| 1u8]);
+        let p2 = global() as *const Pool;
+        assert_eq!(p1, p2);
+        assert!(global().workers() >= 1);
+    }
+
+    #[test]
+    fn many_concurrent_submitters_all_complete() {
+        // Mimics the test harness: several threads each block on their
+        // own batch against the one shared pool.
+        let handles: Vec<_> = (0..4usize)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let out =
+                        run_all((0..16usize).map(|i| move || t * 100 + i).collect::<Vec<_>>());
+                    out.iter().sum::<usize>()
+                })
+            })
+            .collect();
+        for (t, h) in handles.into_iter().enumerate() {
+            let want = (0..16usize).map(|i| t * 100 + i).sum::<usize>();
+            assert_eq!(h.join().unwrap(), want);
+        }
+    }
+}

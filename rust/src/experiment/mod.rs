@@ -154,6 +154,7 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> anyhow::Result<SweepR
             seed: c.seed,
             trials: spec.trials,
             keep_samples: spec.keep_samples,
+            order: spec.sample_order,
         });
     }
     let runner = BatchRunner {
@@ -266,6 +267,25 @@ mod tests {
             a.cells[0].outcome.system.mean(),
             "independent seeds must change the draws"
         );
+    }
+
+    #[test]
+    fn blocked_sample_order_flows_through_the_sweep() {
+        let mut spec = two_policy_spec();
+        spec.trials = 2_000;
+        spec.sample_order = crate::sim::SampleOrder::Blocked;
+        let blocked = run_sweep(&spec, &SweepOptions::default()).unwrap();
+        spec.sample_order = crate::sim::SampleOrder::TrialMajor;
+        let tm = run_sweep(&spec, &SweepOptions::default()).unwrap();
+        for (b, t) in blocked.cells.iter().zip(&tm.cells) {
+            // Different bits (the blocked contract) ...
+            assert_ne!(b.outcome.system.mean(), t.outcome.system.mean());
+            // ... same distribution (loose sanity bound; the tight
+            // statistical-equivalence tests live in sim::engine).
+            let rel = (b.outcome.system.mean() - t.outcome.system.mean()).abs()
+                / t.outcome.system.mean();
+            assert!(rel < 0.1, "blocked vs trial-major means diverge: {rel}");
+        }
     }
 
     #[test]

@@ -10,6 +10,7 @@
 
 use crate::config::{AShift, CommModel, Scenario, Transform};
 use crate::policy::PolicySpec;
+use crate::sim::SampleOrder;
 use crate::util::json::Json;
 use crate::util::rng::SplitMix64;
 
@@ -415,6 +416,12 @@ pub struct SweepSpec {
     pub crn: bool,
     /// Keep raw per-trial system delays (needed for CDF readouts).
     pub keep_samples: bool,
+    /// RNG consumption order of the Monte-Carlo kernel. `TrialMajor`
+    /// (default) is bit-for-bit reproducible against serial `sim::run`;
+    /// `Blocked` is the column-filled fast path — same distribution,
+    /// different bits (`sim::engine`'s documented contract), so golden
+    /// parity only holds trial-major.
+    pub sample_order: SampleOrder,
 }
 
 impl SweepSpec {
@@ -434,6 +441,7 @@ impl SweepSpec {
             seed: 2022,
             crn: true,
             keep_samples: false,
+            sample_order: SampleOrder::TrialMajor,
         }
     }
 
@@ -573,6 +581,10 @@ impl SweepSpec {
         j.set("seed", Json::Num(self.seed as f64));
         j.set("crn", Json::Bool(self.crn));
         j.set("keep_samples", Json::Bool(self.keep_samples));
+        j.set(
+            "sample_order",
+            Json::Str(self.sample_order.as_str().to_string()),
+        );
         j
     }
 
@@ -626,6 +638,12 @@ impl SweepSpec {
                 .get("keep_samples")
                 .and_then(Json::as_bool)
                 .unwrap_or(false),
+            sample_order: match j.get("sample_order") {
+                None | Some(Json::Null) => SampleOrder::TrialMajor,
+                Some(v) => SampleOrder::parse(v.as_str().ok_or_else(|| {
+                    anyhow::anyhow!("'sample_order' must be a string")
+                })?)?,
+            },
         })
     }
 }
@@ -885,6 +903,28 @@ mod tests {
     }
 
     #[test]
+    fn sample_order_parses_defaults_and_rejects() {
+        let text = r#"{
+            "schema": 1,
+            "policies": [{"policy": "dedi-iter", "values": "markov", "loads": "markov"}]
+        }"#;
+        let spec = SweepSpec::from_json(&json::parse(text).unwrap()).unwrap();
+        assert_eq!(spec.sample_order, SampleOrder::TrialMajor);
+        let text = r#"{
+            "schema": 1, "sample_order": "blocked",
+            "policies": [{"policy": "dedi-iter", "values": "markov", "loads": "markov"}]
+        }"#;
+        let spec = SweepSpec::from_json(&json::parse(text).unwrap()).unwrap();
+        assert_eq!(spec.sample_order, SampleOrder::Blocked);
+        let text = r#"{
+            "schema": 1, "sample_order": "spiral",
+            "policies": [{"policy": "dedi-iter", "values": "markov", "loads": "markov"}]
+        }"#;
+        let e = SweepSpec::from_json(&json::parse(text).unwrap()).unwrap_err();
+        assert!(e.to_string().contains("sample order"), "{e}");
+    }
+
+    #[test]
     fn from_json_rejects_bad_documents() {
         let parse = |s: &str| json::parse(s).unwrap();
         // wrong schema
@@ -953,6 +993,11 @@ mod tests {
                     seed: g.rng().next_u64() >> 12,
                     crn: g.bool(),
                     keep_samples: g.bool(),
+                    sample_order: if g.bool() {
+                        SampleOrder::Blocked
+                    } else {
+                        SampleOrder::TrialMajor
+                    },
                 };
                 let text = spec.to_json().to_string_pretty();
                 let back = SweepSpec::from_json(&json::parse(&text).unwrap()).unwrap();

@@ -54,9 +54,10 @@ fn redundancy(opts: &FigureOptions) -> Figure {
     let result = sweep("ablation_redundancy", opts);
     let mut t = Table::new(&["overhead β", "mean delay (ms)", "ρ=0.95 (ms)"]);
     let mut arr = Vec::new();
-    for c in &result.cells {
+    for c in result.cells {
         let beta = c.overhead.expect("redundancy sweep sets overhead");
-        let rho = Ecdf::new(c.outcome.samples.clone().expect("samples kept")).inverse(0.95);
+        // Consuming iteration: the sample vector moves into the ECDF.
+        let rho = Ecdf::new(c.outcome.samples.expect("samples kept")).inverse(0.95);
         t.row_fmt(&format!("{beta:.2}"), &[c.outcome.system.mean(), rho], 3);
         let mut j = Json::obj();
         j.set("beta", Json::Num(beta));

@@ -52,10 +52,12 @@ pub fn validation(id: &str, title: &str, opts: &FigureOptions) -> Figure {
 
     // (b) CDF of the all-tasks completion delay.
     let mut tb = Table::new(&["P[T ≤ t]", "Exact (ms)", "Approx (ms)", "Approx, enhanced (ms)"]);
+    // Last use of the cells: consume them so the sample vectors move
+    // straight into the ECDFs (no copy).
     let ecdfs: Vec<Ecdf> = result
         .cells
-        .iter()
-        .map(|c| Ecdf::new(c.outcome.samples.clone().expect("sweep keeps samples")))
+        .into_iter()
+        .map(|c| Ecdf::new(c.outcome.samples.expect("sweep keeps samples")))
         .collect();
     let mut series = Vec::new();
     for p in [0.05, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99] {

@@ -12,13 +12,16 @@ use crate::util::table::Table;
 
 fn cdf_panel(fig: &mut Figure, tag: &str, id: &str, opts: &FigureOptions) {
     let result = sweep(id, opts);
+    // Consume the cells: the sample vectors move straight into the
+    // ECDFs (no copy), which at CDF trial counts is the panel's largest
+    // allocation.
     let rows: Vec<(String, Ecdf)> = result
         .cells
-        .iter()
+        .into_iter()
         .map(|c| {
             (
-                c.outcome.label.clone(),
-                Ecdf::new(c.outcome.samples.clone().expect("samples kept")),
+                c.outcome.label,
+                Ecdf::new(c.outcome.samples.expect("samples kept")),
             )
         })
         .collect();

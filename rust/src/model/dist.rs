@@ -116,6 +116,23 @@ impl LinkDelay {
         self.shift
     }
 
+    /// Communication rate `bγ/l` (`∞` for local links). Exposed so the
+    /// SoA Monte-Carlo kernel can compile link columns without
+    /// re-deriving the eq. (3) parameterization.
+    pub fn comm_rate(&self) -> f64 {
+        self.comm_rate
+    }
+
+    /// Computation rate `k·u/l`.
+    pub fn comp_rate(&self) -> f64 {
+        self.comp_rate
+    }
+
+    /// Heavy-tail mixture applied to the computation legs, if any.
+    pub fn straggler(&self) -> Option<super::params::Straggler> {
+        self.straggler
+    }
+
     /// `E[T] = 1/(bγ/l) + a·l/k + 1/(k·u/l)` — the Markov-inequality
     /// numerator `l·θ` (eqs. 9, 23).
     pub fn mean(&self) -> f64 {

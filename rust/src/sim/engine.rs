@@ -1,6 +1,45 @@
-//! Trial sampler + thread-parallel Monte-Carlo driver.
+//! Trial sampler + thread-parallel Monte-Carlo driver — **kernel v2**.
+//!
+//! Every figure, sweep cell and ablation bottoms out in this per-trial
+//! loop, so it is the hottest path in the codebase. v2 is a
+//! structure-of-arrays rework of the original AoS kernel (preserved
+//! verbatim as [`oracle`] for parity tests and bench baselines):
+//!
+//! * **SoA compiled plans** — [`Compiled`] stores per-master flat columns
+//!   (`comm_rate[]`, `shift[]`, `comp_rate[]`, `load[]`, straggler
+//!   mixture) instead of `Vec<(LinkDelay, f64)>`, and the trial loop
+//!   samples into reusable split key/payload buffers (`times: Vec<f64>`,
+//!   `loads: Vec<f64>`) so the completion scan does branch-predictable
+//!   plain-`f64` compares instead of tuple moves through a `partial_cmp`
+//!   closure.
+//! * **Weighted-selection completion scan** — [`completion_scan`]
+//!   replaces the full per-trial `sort_unstable` with a quickselect-style
+//!   3-way partition that only ever sorts (and prefix-sums) the elements
+//!   at or before the `Σ load ≥ L_m` crossing; the tail past the crossing
+//!   is partitioned away untouched. Exactness note: the crossing test is
+//!   a *sequential* floating-point prefix sum, so the scan accumulates in
+//!   true sorted order (left partitions are resolved before the pivot
+//!   block, the pivot block before the right) — bit-for-bit the same
+//!   completion time as the legacy sort-then-scan, not merely the same in
+//!   exact arithmetic.
+//! * **Blocked sampling** (opt-in, [`SampleOrder::Blocked`]) — fills
+//!   B-trial blocks column-per-link so per-link constants (rates, local /
+//!   straggler branches) are hoisted out of the inner loop and the
+//!   inverse-transform sampling runs as batched [`crate::util::rng::Rng::fill_exp`]
+//!   column fills. **Bit contract:** blocked mode consumes the RNG in a
+//!   different order than trial-major, so it produces *different bits
+//!   from the same distribution* — statistically equivalent, never
+//!   bit-equal. The default everywhere is [`SampleOrder::TrialMajor`],
+//!   which reproduces the legacy kernel exactly.
+//! * **Shared thread pool** — [`run`] submits shards to the process-wide
+//!   [`crate::exec::pool`] instead of spawning fresh threads per call,
+//!   and skips zero-trial trailing shards (`shard_sizes(4, 3) = [2,2,0]`)
+//!   at submit time while preserving stream numbering.
+
+use std::sync::Arc;
 
 use crate::config::Scenario;
+use crate::exec::pool;
 use crate::model::dist::LinkDelay;
 use crate::plan::Plan;
 use crate::util::rng::Rng;
@@ -13,7 +52,9 @@ pub struct McOptions {
     pub seed: u64,
     /// Keep raw per-trial system delays (needed for CDFs, Fig. 5).
     pub keep_samples: bool,
-    /// Worker threads (0 = all available cores).
+    /// RNG stream count (0 = all available cores). The split determines
+    /// the sampled values bit-for-bit; actual parallelism comes from the
+    /// shared process pool.
     pub threads: usize,
 }
 
@@ -24,6 +65,36 @@ impl Default for McOptions {
             seed: 0x51D_E0,
             keep_samples: false,
             threads: 0,
+        }
+    }
+}
+
+/// RNG consumption order of the trial loop.
+///
+/// `TrialMajor` (default) draws link-by-link within each trial — the
+/// legacy order, bit-for-bit reproducible across kernel versions.
+/// `Blocked` fills B-trial blocks column-per-link: same delay
+/// distribution, different bits (see the module docs' bit contract).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SampleOrder {
+    #[default]
+    TrialMajor,
+    Blocked,
+}
+
+impl SampleOrder {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SampleOrder::TrialMajor => "trial_major",
+            SampleOrder::Blocked => "blocked",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "trial_major" | "trial-major" => Ok(SampleOrder::TrialMajor),
+            "blocked" => Ok(SampleOrder::Blocked),
+            other => anyhow::bail!("unknown sample order '{other}' (trial_major|blocked)"),
         }
     }
 }
@@ -42,48 +113,293 @@ pub struct McResults {
 }
 
 impl McResults {
+    /// ECDF of the system delay from a shared reference (one copy — the
+    /// sorted vector must be owned). Prefer [`McResults::into_system_ecdf`]
+    /// when the results are done: it moves the samples, zero copies.
     pub fn system_ecdf(&self) -> Option<Ecdf> {
-        self.samples.clone().map(Ecdf::new)
+        self.samples.as_deref().map(Ecdf::from_slice)
+    }
+
+    /// Consuming variant: moves the sample vector straight into the
+    /// [`Ecdf`] — zero copies. Preferred when the results are done.
+    pub fn into_system_ecdf(self) -> Option<Ecdf> {
+        self.samples.map(Ecdf::new)
     }
 }
 
-/// Precompiled sampling state for one master: `(delay dist, load)` pairs.
-struct MasterSim {
-    links: Vec<(LinkDelay, f64)>,
+// ----------------------------------------------------------------------
+// Weighted-selection completion scan
+// ----------------------------------------------------------------------
+
+/// Below this range length the scan falls back to insertion sort — the
+/// partition bookkeeping costs more than sorting outright.
+const SCAN_SORT_CUTOFF: usize = 24;
+
+/// Completion time of a coded master: the smallest sampled finish time
+/// `t` at which the loads of all sub-tasks finished by `t` accumulate to
+/// `l_rows` — evaluated with the exact floating-point semantics of
+/// "sort by time, then `acc += load` in order until `acc ≥ l_rows`".
+///
+/// Both input slices are permuted in place (they are reusable per-trial
+/// scratch). Returns `f64::INFINITY` when the total assigned load never
+/// reaches `l_rows` (malformed plans: the task never completes).
+///
+/// Times must not be NaN (they are sums of finite sampled delays).
+pub fn completion_scan(times: &mut [f64], loads: &mut [f64], l_rows: f64) -> f64 {
+    debug_assert_eq!(times.len(), loads.len());
+    let n = times.len();
+    let mut acc = 0.0f64;
+    scan_range(times, loads, 0, n, &mut acc, l_rows).unwrap_or(f64::INFINITY)
+}
+
+/// Resolve `[lo, hi)`: establish its elements in sorted position only as
+/// far as the prefix sum needs, accumulating into `acc` in true sorted
+/// order. `Some(t)` = crossing found at time `t`.
+fn scan_range(
+    times: &mut [f64],
+    loads: &mut [f64],
+    lo: usize,
+    hi: usize,
+    acc: &mut f64,
+    target: f64,
+) -> Option<f64> {
+    if hi - lo <= SCAN_SORT_CUTOFF {
+        insertion_sort_pair(times, loads, lo, hi);
+        for i in lo..hi {
+            *acc += loads[i];
+            if *acc >= target {
+                return Some(times[i]);
+            }
+        }
+        return None;
+    }
+    let p = median3(times[lo], times[lo + (hi - lo) / 2], times[hi - 1]);
+    let (lt, gt) = partition3(times, loads, lo, hi, p);
+    // Everything < p, in sorted order, with exact sequential accumulation.
+    if let Some(t) = scan_range(times, loads, lo, lt, acc, target) {
+        return Some(t);
+    }
+    // The pivot block: every time equals p, so a crossing here is at p.
+    for i in lt..gt {
+        *acc += loads[i];
+        if *acc >= target {
+            return Some(times[i]);
+        }
+    }
+    // Only now does the right side matter; the pivot guarantees progress
+    // (the block is non-empty), so this terminates.
+    scan_range(times, loads, gt, hi, acc, target)
+}
+
+#[inline]
+fn median3(a: f64, b: f64, c: f64) -> f64 {
+    let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+    if c < lo {
+        lo
+    } else if c > hi {
+        hi
+    } else {
+        c
+    }
+}
+
+/// Dutch-national-flag 3-way partition of `[lo, hi)` around the value
+/// `p`, permuting `loads` alongside. Returns `(lt, gt)`:
+/// `[lo, lt) < p`, `[lt, gt) == p`, `[gt, hi) > p`.
+fn partition3(
+    times: &mut [f64],
+    loads: &mut [f64],
+    lo: usize,
+    hi: usize,
+    p: f64,
+) -> (usize, usize) {
+    let (mut lt, mut i, mut gt) = (lo, lo, hi);
+    while i < gt {
+        let t = times[i];
+        if t < p {
+            times.swap(lt, i);
+            loads.swap(lt, i);
+            lt += 1;
+            i += 1;
+        } else if t > p {
+            gt -= 1;
+            times.swap(i, gt);
+            loads.swap(i, gt);
+        } else {
+            i += 1;
+        }
+    }
+    (lt, gt)
+}
+
+fn insertion_sort_pair(times: &mut [f64], loads: &mut [f64], lo: usize, hi: usize) {
+    for i in (lo + 1)..hi {
+        let (t, l) = (times[i], loads[i]);
+        let mut j = i;
+        while j > lo && times[j - 1] > t {
+            times[j] = times[j - 1];
+            loads[j] = loads[j - 1];
+            j -= 1;
+        }
+        times[j] = t;
+        loads[j] = l;
+    }
+}
+
+// ----------------------------------------------------------------------
+// SoA compiled plans
+// ----------------------------------------------------------------------
+
+/// Per-master flat sampling columns. `strag_prob < 0` encodes "no
+/// straggler mixture attached" — the distinction matters beyond the
+/// probability value because an attached mixture consumes one uniform
+/// draw per sample even when it does not fire.
+struct MasterSoA {
+    comm_rate: Vec<f64>, // ∞ = local link (no comm leg, no comm draw)
+    shift: Vec<f64>,
+    comp_rate: Vec<f64>,
+    load: Vec<f64>,
+    strag_prob: Vec<f64>,
+    strag_slow: Vec<f64>,
     l_rows: f64,
     uncoded: bool,
 }
 
-impl MasterSim {
-    /// Sample one completion time.
-    ///
-    /// Coded: sort finish times, accumulate loads until `L_m` rows have
-    /// arrived — that arrival instant is the completion (the master then
-    /// cancels the rest). Uncoded: every sub-task must finish.
-    fn sample(&self, rng: &mut Rng, scratch: &mut Vec<(f64, f64)>) -> f64 {
+impl MasterSoA {
+    /// One delay draw for link `i` — the exact RNG consumption of
+    /// `LinkDelay::sample`: comm leg (non-local only), straggler uniform
+    /// (attached mixtures only), computation leg.
+    #[inline]
+    fn draw(&self, rng: &mut Rng, i: usize) -> f64 {
+        let comm = if self.comm_rate[i].is_finite() {
+            rng.exp(self.comm_rate[i])
+        } else {
+            0.0
+        };
+        let factor = if self.strag_prob[i] >= 0.0 {
+            if rng.f64() < self.strag_prob[i] {
+                self.strag_slow[i]
+            } else {
+                1.0
+            }
+        } else {
+            1.0
+        };
+        comm + factor * (self.shift[i] + rng.exp(self.comp_rate[i]))
+    }
+
+    /// Trial-major completion sample (bit-compatible with the legacy
+    /// kernel: same draws, same completion arithmetic).
+    fn sample_trial(&self, rng: &mut Rng, times: &mut Vec<f64>, loads: &mut Vec<f64>) -> f64 {
+        let n = self.comm_rate.len();
         if self.uncoded {
-            return self
-                .links
-                .iter()
-                .map(|(d, _)| d.sample(rng))
-                .fold(0.0, f64::max);
+            // Every sub-task must finish.
+            let mut mx = 0.0f64;
+            for i in 0..n {
+                mx = f64::max(mx, self.draw(rng, i));
+            }
+            return mx;
         }
-        scratch.clear();
-        for (d, l) in &self.links {
-            scratch.push((d.sample(rng), *l));
+        times.clear();
+        for i in 0..n {
+            times.push(self.draw(rng, i));
         }
-        // §Perf item 2: unstable sort — no allocation, ~6% engine gain.
-        scratch.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-        let mut acc = 0.0;
-        for &(t, l) in scratch.iter() {
-            acc += l;
-            if acc >= self.l_rows {
-                return t;
+        loads.clear();
+        loads.extend_from_slice(&self.load);
+        completion_scan(times, loads, self.l_rows)
+    }
+
+    /// Blocked completion samples for `nb` trials: per link, fill one
+    /// column of comm draws, straggler uniforms and computation draws,
+    /// then scan each trial's gathered row. Different RNG order than
+    /// [`MasterSoA::sample_trial`] (see the module bit contract).
+    #[allow(clippy::too_many_arguments)]
+    fn sample_block(
+        &self,
+        rng: &mut Rng,
+        nb: usize,
+        cols: &mut [f64],
+        comm_buf: &mut [f64],
+        u_buf: &mut [f64],
+        times: &mut [f64],
+        loads: &mut [f64],
+        out: &mut [f64],
+    ) {
+        let n = self.comm_rate.len();
+        debug_assert!(cols.len() >= n * nb || self.uncoded);
+        if self.uncoded {
+            // Running max over link columns; one column buffer suffices.
+            out.fill(0.0);
+            let col = &mut cols[..nb];
+            for i in 0..n {
+                self.fill_link_column(rng, i, col, comm_buf, u_buf);
+                for (o, &t) in out.iter_mut().zip(col.iter()) {
+                    *o = f64::max(*o, t);
+                }
+            }
+            return;
+        }
+        for i in 0..n {
+            self.fill_link_column(rng, i, &mut cols[i * nb..(i + 1) * nb], comm_buf, u_buf);
+        }
+        for (t, o) in out.iter_mut().enumerate() {
+            for i in 0..n {
+                times[i] = cols[i * nb + t];
+            }
+            loads[..n].copy_from_slice(&self.load);
+            *o = completion_scan(&mut times[..n], &mut loads[..n], self.l_rows);
+        }
+    }
+
+    /// Fill `col` with `col.len()` delay draws of link `i`. Leg order per
+    /// column mirrors the per-trial leg order (comm, straggler uniform,
+    /// computation), with the local / straggler branches hoisted out of
+    /// the element loops.
+    fn fill_link_column(
+        &self,
+        rng: &mut Rng,
+        i: usize,
+        col: &mut [f64],
+        comm_buf: &mut [f64],
+        u_buf: &mut [f64],
+    ) {
+        let nb = col.len();
+        let local = !self.comm_rate[i].is_finite();
+        let strag = self.strag_prob[i] >= 0.0;
+        if !local {
+            rng.fill_exp(self.comm_rate[i], &mut comm_buf[..nb]);
+        }
+        if strag {
+            rng.fill_f64(&mut u_buf[..nb]);
+        }
+        rng.fill_exp(self.comp_rate[i], col);
+        let shift = self.shift[i];
+        match (local, strag) {
+            (true, false) => {
+                for c in col.iter_mut() {
+                    *c += shift;
+                }
+            }
+            (false, false) => {
+                for (c, &comm) in col.iter_mut().zip(comm_buf.iter()) {
+                    *c = comm + (shift + *c);
+                }
+            }
+            (true, true) => {
+                let (p, s) = (self.strag_prob[i], self.strag_slow[i]);
+                for (c, &u) in col.iter_mut().zip(u_buf.iter()) {
+                    let f = if u < p { s } else { 1.0 };
+                    *c = f * (shift + *c);
+                }
+            }
+            (false, true) => {
+                let (p, s) = (self.strag_prob[i], self.strag_slow[i]);
+                for ((c, &comm), &u) in col.iter_mut().zip(comm_buf.iter()).zip(u_buf.iter()) {
+                    let f = if u < p { s } else { 1.0 };
+                    *c = comm + f * (shift + *c);
+                }
             }
         }
-        // Total assigned < L_m can only happen for malformed plans; the
-        // task never completes.
-        f64::INFINITY
     }
 }
 
@@ -91,35 +407,63 @@ impl MasterSim {
 /// streams. Shared by [`run`] and the batched engine
 /// ([`crate::exec::BatchRunner`]) so both sample the exact same way.
 pub struct Compiled {
-    sims: Vec<MasterSim>,
+    sims: Vec<MasterSoA>,
+    max_links: usize,
 }
 
 impl Compiled {
     pub fn new(s: &Scenario, plan: &Plan) -> Self {
-        let sims = plan
+        let sims: Vec<MasterSoA> = plan
             .masters
             .iter()
             .enumerate()
-            .map(|(m, mp)| MasterSim {
-                links: mp
-                    .entries
-                    .iter()
-                    .map(|e| {
-                        let p = s.link(m, e.node);
-                        (LinkDelay::new(&p, e.load, e.k, e.b), e.load)
-                    })
-                    .collect(),
-                l_rows: mp.l_rows,
-                uncoded: plan.uncoded,
+            .map(|(m, mp)| {
+                let n = mp.entries.len();
+                let mut soa = MasterSoA {
+                    comm_rate: Vec::with_capacity(n),
+                    shift: Vec::with_capacity(n),
+                    comp_rate: Vec::with_capacity(n),
+                    load: Vec::with_capacity(n),
+                    strag_prob: Vec::with_capacity(n),
+                    strag_slow: Vec::with_capacity(n),
+                    l_rows: mp.l_rows,
+                    uncoded: plan.uncoded,
+                };
+                for e in &mp.entries {
+                    let p = s.link(m, e.node);
+                    // One source of truth for the eq. (3) parameterization:
+                    // compile through LinkDelay, then flatten.
+                    let d = LinkDelay::new(&p, e.load, e.k, e.b);
+                    soa.comm_rate.push(d.comm_rate());
+                    soa.shift.push(d.shift());
+                    soa.comp_rate.push(d.comp_rate());
+                    soa.load.push(e.load);
+                    match d.straggler() {
+                        Some(st) => {
+                            soa.strag_prob.push(st.prob);
+                            soa.strag_slow.push(st.slowdown);
+                        }
+                        None => {
+                            soa.strag_prob.push(-1.0);
+                            soa.strag_slow.push(1.0);
+                        }
+                    }
+                }
+                soa
             })
             .collect();
-        Compiled { sims }
+        let max_links = sims.iter().map(|s| s.comm_rate.len()).max().unwrap_or(0);
+        Compiled { sims, max_links }
     }
 
     pub fn n_masters(&self) -> usize {
         self.sims.len()
     }
 }
+
+// ----------------------------------------------------------------------
+// Shard primitives
+// ----------------------------------------------------------------------
 
 /// The RNG-stream count [`run`] uses for a request: `threads` if nonzero,
 /// else all cores, never more than `trials`. The split determines the
@@ -154,9 +498,52 @@ pub struct ShardOut {
     pub master_samples: Vec<Vec<f64>>,
 }
 
+impl ShardOut {
+    /// What a zero-trial shard produces — exactly `run_shard(.., 0, ..)`,
+    /// so skipping empty shards at spawn time cannot change a merge.
+    pub fn empty(m_cnt: usize, keep_samples: bool) -> Self {
+        ShardOut {
+            per_master: vec![Summary::new(); m_cnt],
+            system: Summary::new(),
+            samples: Vec::new(),
+            master_samples: if keep_samples {
+                vec![Vec::new(); m_cnt]
+            } else {
+                vec![]
+            },
+        }
+    }
+}
+
 /// Run `trials` trials on RNG stream `stream` (1-based, exactly how
-/// [`run`] numbers its threads) of the generator seeded by `seed`.
+/// [`run`] numbers its threads) of the generator seeded by `seed`, in
+/// the default trial-major order.
 pub fn run_shard(
+    c: &Compiled,
+    seed: u64,
+    stream: u64,
+    trials: usize,
+    keep_samples: bool,
+) -> ShardOut {
+    run_shard_ordered(c, seed, stream, trials, keep_samples, SampleOrder::TrialMajor)
+}
+
+/// [`run_shard`] with an explicit RNG consumption order.
+pub fn run_shard_ordered(
+    c: &Compiled,
+    seed: u64,
+    stream: u64,
+    trials: usize,
+    keep_samples: bool,
+    order: SampleOrder,
+) -> ShardOut {
+    match order {
+        SampleOrder::TrialMajor => run_shard_trial_major(c, seed, stream, trials, keep_samples),
+        SampleOrder::Blocked => run_shard_blocked(c, seed, stream, trials, keep_samples),
+    }
+}
+
+fn run_shard_trial_major(
     c: &Compiled,
     seed: u64,
     stream: u64,
@@ -173,11 +560,12 @@ pub fn run_shard(
     } else {
         vec![]
     };
-    let mut scratch = Vec::new();
+    let mut times: Vec<f64> = Vec::with_capacity(c.max_links);
+    let mut loads: Vec<f64> = Vec::with_capacity(c.max_links);
     for _ in 0..trials {
         let mut sys = 0.0f64;
         for (m, sim) in c.sims.iter().enumerate() {
-            let t = sim.sample(&mut rng, &mut scratch);
+            let t = sim.sample_trial(&mut rng, &mut times, &mut loads);
             per_master[m].push(t);
             if keep_samples {
                 master_samples[m].push(t);
@@ -188,6 +576,78 @@ pub fn run_shard(
         if keep_samples {
             samples.push(sys);
         }
+    }
+    ShardOut {
+        per_master,
+        system,
+        samples,
+        master_samples,
+    }
+}
+
+/// Trials per block in [`SampleOrder::Blocked`]: big enough to amortize
+/// per-link constants and keep the `fill_exp` columns in the
+/// vectorizable sweet spot, small enough that the per-master column
+/// matrix (`max_links × BLOCK_TRIALS` doubles) stays cache-resident.
+const BLOCK_TRIALS: usize = 256;
+
+fn run_shard_blocked(
+    c: &Compiled,
+    seed: u64,
+    stream: u64,
+    trials: usize,
+    keep_samples: bool,
+) -> ShardOut {
+    let m_cnt = c.sims.len();
+    let mut rng = Rng::new(seed).fork(stream);
+    let mut per_master = vec![Summary::new(); m_cnt];
+    let mut system = Summary::new();
+    let mut samples = Vec::with_capacity(if keep_samples { trials } else { 0 });
+    let mut master_samples = if keep_samples {
+        vec![Vec::with_capacity(trials); m_cnt]
+    } else {
+        vec![]
+    };
+    let b = BLOCK_TRIALS.min(trials.max(1));
+    let mut vals = vec![0.0f64; m_cnt * b];
+    let mut cols = vec![0.0f64; c.max_links.max(1) * b];
+    let mut comm_buf = vec![0.0f64; b];
+    let mut u_buf = vec![0.0f64; b];
+    let mut times = vec![0.0f64; c.max_links];
+    let mut loads = vec![0.0f64; c.max_links];
+    let mut done = 0usize;
+    while done < trials {
+        let nb = b.min(trials - done);
+        for (m, sim) in c.sims.iter().enumerate() {
+            sim.sample_block(
+                &mut rng,
+                nb,
+                &mut cols,
+                &mut comm_buf,
+                &mut u_buf,
+                &mut times,
+                &mut loads,
+                &mut vals[m * b..m * b + nb],
+            );
+        }
+        // Same push/merge sequence per trial as trial-major, so summary
+        // accumulation is structurally identical — only values differ.
+        for t in 0..nb {
+            let mut sys = 0.0f64;
+            for (m, acc) in per_master.iter_mut().enumerate() {
+                let v = vals[m * b + t];
+                acc.push(v);
+                if keep_samples {
+                    master_samples[m].push(v);
+                }
+                sys = sys.max(v);
+            }
+            system.push(sys);
+            if keep_samples {
+                samples.push(sys);
+            }
+        }
+        done += nb;
     }
     ShardOut {
         per_master,
@@ -223,25 +683,192 @@ pub fn merge_shards(m_cnt: usize, outs: Vec<ShardOut>, keep_samples: bool) -> Mc
     }
 }
 
-/// Run the Monte-Carlo evaluation of `plan` on `s`.
+/// Run the Monte-Carlo evaluation of `plan` on `s` (trial-major order).
 pub fn run(s: &Scenario, plan: &Plan, opts: &McOptions) -> McResults {
-    let compiled = Compiled::new(s, plan);
+    run_ordered(s, plan, opts, SampleOrder::TrialMajor)
+}
+
+/// [`run`] with an explicit RNG consumption order. Shards execute on the
+/// shared process pool ([`crate::exec::pool`]); zero-trial trailing
+/// shards are never submitted (their merge contribution is the empty
+/// [`ShardOut`], injected in stream order).
+pub fn run_ordered(s: &Scenario, plan: &Plan, opts: &McOptions, order: SampleOrder) -> McResults {
+    let compiled = Arc::new(Compiled::new(s, plan));
+    let m_cnt = compiled.n_masters();
     let streams = effective_streams(opts.trials, opts.threads);
     let sizes = shard_sizes(opts.trials, streams);
-    let outs: Vec<ShardOut> = std::thread::scope(|scope| {
-        let c = &compiled;
-        let handles: Vec<_> = sizes
-            .iter()
-            .enumerate()
-            .map(|(ti, &trials)| {
-                scope.spawn(move || {
-                    run_shard(c, opts.seed, ti as u64 + 1, trials, opts.keep_samples)
+    let (seed, keep) = (opts.seed, opts.keep_samples);
+    let thunks: Vec<_> = sizes
+        .iter()
+        .enumerate()
+        .filter(|&(_, &t)| t > 0)
+        .map(|(ti, &t)| {
+            let c = Arc::clone(&compiled);
+            move || {
+                (
+                    ti,
+                    run_shard_ordered(&c, seed, ti as u64 + 1, t, keep, order),
+                )
+            }
+        })
+        .collect();
+    let mut slots: Vec<Option<ShardOut>> = sizes.iter().map(|_| None).collect();
+    for (ti, out) in pool::run_all(thunks) {
+        slots[ti] = Some(out);
+    }
+    let outs: Vec<ShardOut> = slots
+        .into_iter()
+        .map(|o| o.unwrap_or_else(|| ShardOut::empty(m_cnt, keep)))
+        .collect();
+    merge_shards(m_cnt, outs, keep)
+}
+
+// ----------------------------------------------------------------------
+// Legacy kernel (parity oracle)
+// ----------------------------------------------------------------------
+
+/// The pre-v2 AoS kernel, preserved as a reference implementation.
+///
+/// Kept for two consumers only: the bit-for-bit parity tests (kernel v2
+/// in trial-major order must reproduce it exactly) and the
+/// `benches/engine.rs` old-vs-new trajectory rows. Not for production
+/// paths — it re-sorts every trial and spawns threads per run.
+pub mod oracle {
+    use super::{
+        effective_streams, merge_shards, shard_sizes, McOptions, McResults, ShardOut,
+    };
+    use crate::config::Scenario;
+    use crate::model::dist::LinkDelay;
+    use crate::plan::Plan;
+    use crate::util::rng::Rng;
+    use crate::util::stats::Summary;
+
+    struct MasterSim {
+        links: Vec<(LinkDelay, f64)>,
+        l_rows: f64,
+        uncoded: bool,
+    }
+
+    impl MasterSim {
+        fn sample(&self, rng: &mut Rng, scratch: &mut Vec<(f64, f64)>) -> f64 {
+            if self.uncoded {
+                return self
+                    .links
+                    .iter()
+                    .map(|(d, _)| d.sample(rng))
+                    .fold(0.0, f64::max);
+            }
+            scratch.clear();
+            for (d, l) in &self.links {
+                scratch.push((d.sample(rng), *l));
+            }
+            scratch.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let mut acc = 0.0;
+            for &(t, l) in scratch.iter() {
+                acc += l;
+                if acc >= self.l_rows {
+                    return t;
+                }
+            }
+            f64::INFINITY
+        }
+    }
+
+    /// AoS compiled state (the legacy `Compiled`).
+    pub struct Compiled {
+        sims: Vec<MasterSim>,
+    }
+
+    impl Compiled {
+        pub fn new(s: &Scenario, plan: &Plan) -> Self {
+            let sims = plan
+                .masters
+                .iter()
+                .enumerate()
+                .map(|(m, mp)| MasterSim {
+                    links: mp
+                        .entries
+                        .iter()
+                        .map(|e| {
+                            let p = s.link(m, e.node);
+                            (LinkDelay::new(&p, e.load, e.k, e.b), e.load)
+                        })
+                        .collect(),
+                    l_rows: mp.l_rows,
+                    uncoded: plan.uncoded,
                 })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
-    });
-    merge_shards(compiled.n_masters(), outs, opts.keep_samples)
+                .collect();
+            Compiled { sims }
+        }
+
+        pub fn n_masters(&self) -> usize {
+            self.sims.len()
+        }
+    }
+
+    /// The legacy shard loop, verbatim.
+    pub fn run_shard(
+        c: &Compiled,
+        seed: u64,
+        stream: u64,
+        trials: usize,
+        keep_samples: bool,
+    ) -> ShardOut {
+        let m_cnt = c.sims.len();
+        let mut rng = Rng::new(seed).fork(stream);
+        let mut per_master = vec![Summary::new(); m_cnt];
+        let mut system = Summary::new();
+        let mut samples = Vec::with_capacity(if keep_samples { trials } else { 0 });
+        let mut master_samples = if keep_samples {
+            vec![Vec::with_capacity(trials); m_cnt]
+        } else {
+            vec![]
+        };
+        let mut scratch = Vec::new();
+        for _ in 0..trials {
+            let mut sys = 0.0f64;
+            for (m, sim) in c.sims.iter().enumerate() {
+                let t = sim.sample(&mut rng, &mut scratch);
+                per_master[m].push(t);
+                if keep_samples {
+                    master_samples[m].push(t);
+                }
+                sys = sys.max(t);
+            }
+            system.push(sys);
+            if keep_samples {
+                samples.push(sys);
+            }
+        }
+        ShardOut {
+            per_master,
+            system,
+            samples,
+            master_samples,
+        }
+    }
+
+    /// The legacy driver, verbatim: spawn one scoped thread per shard
+    /// (including zero-trial shards), join in stream order, merge.
+    pub fn run(s: &Scenario, plan: &Plan, opts: &McOptions) -> McResults {
+        let compiled = Compiled::new(s, plan);
+        let streams = effective_streams(opts.trials, opts.threads);
+        let sizes = shard_sizes(opts.trials, streams);
+        let outs: Vec<ShardOut> = std::thread::scope(|scope| {
+            let c = &compiled;
+            let handles: Vec<_> = sizes
+                .iter()
+                .enumerate()
+                .map(|(ti, &trials)| {
+                    scope.spawn(move || {
+                        run_shard(c, opts.seed, ti as u64 + 1, trials, opts.keep_samples)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        merge_shards(compiled.n_masters(), outs, opts.keep_samples)
+    }
 }
 
 #[cfg(test)]
@@ -250,6 +877,7 @@ mod tests {
     use crate::assign::ValueModel;
     use crate::config::{CommModel, Scenario};
     use crate::plan::{build, LoadMethod, PlanSpec, Policy};
+    use crate::util::prop::{check, Config};
 
     fn mc(trials: usize, keep: bool) -> McOptions {
         McOptions {
@@ -337,6 +965,18 @@ mod tests {
     }
 
     #[test]
+    fn into_system_ecdf_consumes_without_changing_values() {
+        let s = Scenario::small_scale(5, 2.0, CommModel::Stochastic);
+        let p = build(&s, &spec(Policy::DediIter, LoadMethod::Markov));
+        let r = run(&s, &p, &mc(1_000, true));
+        let borrowed = r.system_ecdf().unwrap();
+        let owned = r.into_system_ecdf().unwrap();
+        assert_eq!(borrowed.len(), owned.len());
+        assert_eq!(borrowed.inverse(0.5), owned.inverse(0.5));
+        assert_eq!(borrowed.inverse(0.95), owned.inverse(0.95));
+    }
+
+    #[test]
     fn comp_dominant_sampling_has_no_comm_leg() {
         // In comp-dominant mode the minimum possible delay is the pure
         // shift; with comm it would be strictly larger on average.
@@ -359,6 +999,22 @@ mod tests {
         assert_eq!(effective_streams(10, 4), 4);
         assert!(effective_streams(2, 0) <= 2);
         assert_eq!(effective_streams(0, 0), 1);
+        // Zero-trial trailing shards are skipped at submit time; with
+        // the skip in place the run must still match the legacy driver
+        // (which spawns them) bit-for-bit, stream ids intact.
+        let s = Scenario::small_scale(8, 2.0, CommModel::Stochastic);
+        let p = build(&s, &spec(Policy::DediIter, LoadMethod::Markov));
+        let o = McOptions {
+            trials: 4, // → [2, 2, 0] at 3 streams
+            seed: 13,
+            keep_samples: true,
+            threads: 3,
+        };
+        let skipping = run(&s, &p, &o);
+        let legacy = oracle::run(&s, &p, &o);
+        assert_eq!(skipping.system.count(), 4);
+        assert_eq!(skipping.system.mean(), legacy.system.mean());
+        assert_eq!(skipping.samples.unwrap(), legacy.samples.unwrap());
     }
 
     #[test]
@@ -410,5 +1066,206 @@ mod tests {
         );
         let (m1, m8) = (r1.system.mean(), r8.system.mean());
         assert!((m1 - m8).abs() / m1 < 0.05, "{m1} vs {m8}");
+    }
+
+    // ------------------------------------------------------------------
+    // Kernel v2 specifics
+    // ------------------------------------------------------------------
+
+    fn assert_bitwise_equal(a: &McResults, b: &McResults, ctx: &str) {
+        assert_eq!(a.system.mean(), b.system.mean(), "{ctx}: system mean");
+        assert_eq!(a.system.sem(), b.system.sem(), "{ctx}: system sem");
+        assert_eq!(a.system.count(), b.system.count(), "{ctx}: count");
+        assert_eq!(a.system.min(), b.system.min(), "{ctx}: min");
+        assert_eq!(a.system.max(), b.system.max(), "{ctx}: max");
+        for (m, (x, y)) in a.per_master.iter().zip(&b.per_master).enumerate() {
+            assert_eq!(x.mean(), y.mean(), "{ctx}: master {m} mean");
+            assert_eq!(x.sem(), y.sem(), "{ctx}: master {m} sem");
+        }
+        assert_eq!(a.samples, b.samples, "{ctx}: samples");
+        assert_eq!(a.master_samples, b.master_samples, "{ctx}: master samples");
+    }
+
+    #[test]
+    fn v2_trial_major_matches_legacy_oracle_bit_for_bit() {
+        // The acceptance bar of the kernel rewrite: identical draws,
+        // identical completion times, identical merges — across coded /
+        // uncoded plans, comm models, straggler mixtures, and the
+        // >cutoff link counts that exercise the quickselect path.
+        let cases: Vec<(&str, Scenario, PlanSpec)> = vec![
+            (
+                "small/dedi-iter",
+                Scenario::small_scale(31, 2.0, CommModel::Stochastic),
+                spec(Policy::DediIter, LoadMethod::Markov),
+            ),
+            (
+                "small/uncoded",
+                Scenario::small_scale(32, 2.0, CommModel::Stochastic),
+                spec(Policy::UncodedUniform, LoadMethod::Markov),
+            ),
+            (
+                "small-comp-dominant/frac",
+                Scenario::small_scale(33, 2.0, CommModel::CompDominant),
+                spec(Policy::Frac, LoadMethod::Markov),
+            ),
+            (
+                "large/dedi-iter", // 50 workers: selection scan beyond the sort cutoff
+                Scenario::large_scale(34, 2.0, CommModel::Stochastic),
+                spec(Policy::DediIter, LoadMethod::Markov),
+            ),
+            (
+                "ec2-stragglers/dedi-simple", // straggler uniforms consume RNG draws
+                Scenario::ec2(6, 2, true),
+                spec(Policy::DediSimple, LoadMethod::Markov),
+            ),
+        ];
+        for (ctx, s, ps) in cases {
+            let p = build(&s, &ps);
+            let o = McOptions {
+                trials: if ctx.starts_with("large") { 500 } else { 2_000 },
+                seed: 4242,
+                keep_samples: true,
+                threads: 2,
+            };
+            let v2 = run(&s, &p, &o);
+            let legacy = oracle::run(&s, &p, &o);
+            assert_bitwise_equal(&v2, &legacy, ctx);
+        }
+    }
+
+    #[test]
+    fn completion_scan_matches_sort_oracle_property() {
+        // Random loads/times on an exact-arithmetic grid (quarters: every
+        // partial sum is exact, so the crossing is order-independent and
+        // the comparison is meaningful to the last bit), with heavy
+        // duplicate pressure, Σl < L infinity cases and single-link
+        // edges.
+        check(
+            Config::default().cases(300),
+            "selection scan == sort-then-scan",
+            |g| {
+                let n = g.usize_range(1, 257);
+                let times: Vec<f64> = (0..n)
+                    .map(|_| g.rng().index(64) as f64 * 0.25)
+                    .collect();
+                let loads: Vec<f64> =
+                    (0..n).map(|_| (1 + g.rng().index(8)) as f64 * 0.25).collect();
+                let total_units: usize = loads.iter().map(|&l| (l * 4.0) as usize).sum();
+                // Sometimes beyond the total: the task never completes.
+                let target = (1 + g.rng().index(total_units + total_units / 4 + 1)) as f64 * 0.25;
+
+                let mut pairs: Vec<(f64, f64)> =
+                    times.iter().copied().zip(loads.iter().copied()).collect();
+                pairs.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                let mut acc = 0.0;
+                let mut want = f64::INFINITY;
+                for &(t, l) in &pairs {
+                    acc += l;
+                    if acc >= target {
+                        want = t;
+                        break;
+                    }
+                }
+
+                let mut ts = times.clone();
+                let mut ls = loads.clone();
+                let got = completion_scan(&mut ts, &mut ls, target);
+                assert_eq!(got, want, "n={n} target={target}");
+                // The scan permutes, never loses: same multisets.
+                let mut st = times;
+                let mut sl = loads;
+                st.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+                sl.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+                ts.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+                ls.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+                assert_eq!(ts, st);
+                assert_eq!(ls, sl);
+            },
+        );
+    }
+
+    #[test]
+    fn completion_scan_edge_cases() {
+        // Empty: nothing ever accumulates.
+        assert_eq!(completion_scan(&mut [], &mut [], 1.0), f64::INFINITY);
+        // Single link, reached and not reached.
+        assert_eq!(completion_scan(&mut [3.5], &mut [2.0], 2.0), 3.5);
+        assert_eq!(completion_scan(&mut [3.5], &mut [1.0], 2.0), f64::INFINITY);
+        // All-duplicate times: crossing lands inside the tie block.
+        let mut t = vec![1.25; 100];
+        let mut l = vec![0.5; 100];
+        assert_eq!(completion_scan(&mut t, &mut l, 10.0), 1.25);
+    }
+
+    #[test]
+    fn blocked_mode_is_deterministic_and_well_formed() {
+        let s = Scenario::small_scale(12, 2.0, CommModel::Stochastic);
+        let p = build(&s, &spec(Policy::DediIter, LoadMethod::Markov));
+        let o = McOptions {
+            trials: 3_000, // not a multiple of BLOCK_TRIALS: tail block covered
+            seed: 5,
+            keep_samples: true,
+            threads: 2,
+        };
+        let a = run_ordered(&s, &p, &o, SampleOrder::Blocked);
+        let b = run_ordered(&s, &p, &o, SampleOrder::Blocked);
+        assert_eq!(a.system.count(), 3_000);
+        assert_eq!(a.system.mean(), b.system.mean());
+        assert_eq!(a.samples, b.samples);
+        // System is still the max over masters, per trial.
+        let samples = a.samples.unwrap();
+        let ms = a.master_samples.unwrap();
+        for (i, &sys) in samples.iter().enumerate() {
+            let mx = ms.iter().map(|v| v[i]).fold(0.0, f64::max);
+            assert!((sys - mx).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn blocked_mode_statistically_equivalent_to_trial_major() {
+        // The different-bits/same-distribution contract: compare the two
+        // orders on the same seed. Tolerances are sized from the MC
+        // noise at 40 000 trials (mean: 6× the rss SEM ≈ 6σ of the
+        // paired difference; ECDF sup distance: ~3.5× the two-sample
+        // KS scale sqrt(2/n) ≈ 0.007).
+        for (label, s, ps) in [
+            (
+                "small/dedi-iter",
+                Scenario::small_scale(14, 2.0, CommModel::Stochastic),
+                spec(Policy::DediIter, LoadMethod::Markov),
+            ),
+            (
+                "ec2-stragglers/dedi-simple",
+                Scenario::ec2(6, 2, true),
+                spec(Policy::DediSimple, LoadMethod::Markov),
+            ),
+        ] {
+            let p = build(&s, &ps);
+            let o = McOptions {
+                trials: 40_000,
+                seed: 2024,
+                keep_samples: true,
+                threads: 2,
+            };
+            let tm = run_ordered(&s, &p, &o, SampleOrder::TrialMajor);
+            let bl = run_ordered(&s, &p, &o, SampleOrder::Blocked);
+            let (m1, m2) = (tm.system.mean(), bl.system.mean());
+            let sem = (tm.system.sem().powi(2) + bl.system.sem().powi(2)).sqrt();
+            assert!(
+                (m1 - m2).abs() < 6.0 * sem,
+                "{label}: mean {m1} vs {m2} (6σ = {})",
+                6.0 * sem
+            );
+            let (v1, v2) = (tm.system.var(), bl.system.var());
+            assert!(
+                (v1 - v2).abs() / v1 < 0.10,
+                "{label}: variance {v1} vs {v2}"
+            );
+            let d = tm
+                .system_ecdf()
+                .unwrap()
+                .sup_distance(&bl.system_ecdf().unwrap());
+            assert!(d < 0.025, "{label}: ECDF sup distance {d}");
+        }
     }
 }

@@ -5,8 +5,14 @@
 //! instant the accumulated coded rows reach `L_m` (or, uncoded, the
 //! slowest sub-task). [`engine`] runs trials thread-parallel and returns
 //! mean/CDF statistics for each master and for the system maximum.
+//!
+//! The kernel is the v2 structure-of-arrays engine (see [`engine`]):
+//! SoA compiled plans, a weighted-selection completion scan, an opt-in
+//! blocked sampling order ([`SampleOrder`]) and shards executed on the
+//! shared process pool. The pre-v2 kernel survives as
+//! [`engine::oracle`] for parity tests and bench baselines.
 
 pub mod engine;
 pub mod multimsg;
 
-pub use engine::{run, McOptions, McResults};
+pub use engine::{run, run_ordered, McOptions, McResults, SampleOrder};

@@ -16,6 +16,7 @@
 //! * each return message adds a fixed `overhead_ms` (the [20] cost), so
 //!   chunk `j` is *available* at `t_j + j·overhead_ms`.
 
+use super::engine::completion_scan;
 use crate::config::Scenario;
 use crate::plan::Plan;
 use crate::util::rng::Rng;
@@ -43,16 +44,17 @@ impl Default for MultiMsgOptions {
     }
 }
 
-struct ChunkedLink {
-    comm_rate: f64, // ∞ ⇒ no comm leg
-    chunk_shift: f64,
-    chunk_rate: f64,
-    chunk_load: f64,
-    chunks: usize,
-}
-
+/// Per-master chunk-event sampling state, SoA like the main kernel
+/// ([`crate::sim::engine`]): per-link flat columns plus a precomputed
+/// per-event load template (chunk loads are trial-invariant, so each
+/// trial just memcpys the template into the scan's payload buffer).
 struct MasterSim {
-    links: Vec<ChunkedLink>,
+    comm_rate: Vec<f64>, // ∞ ⇒ no comm leg
+    chunk_shift: Vec<f64>,
+    chunk_rate: Vec<f64>,
+    chunks: usize,
+    /// Event loads in link-major emission order (`links × chunks`).
+    load_template: Vec<f64>,
     l_rows: f64,
 }
 
@@ -61,60 +63,64 @@ fn compile(s: &Scenario, plan: &Plan, chunks: usize) -> Vec<MasterSim> {
     plan.masters
         .iter()
         .enumerate()
-        .map(|(m, mp)| MasterSim {
-            links: mp
-                .entries
-                .iter()
-                .map(|e| {
-                    let p = s.link(m, e.node);
-                    let lc = e.load / chunks as f64;
-                    ChunkedLink {
-                        comm_rate: if p.is_local() {
-                            f64::INFINITY
-                        } else {
-                            e.b * p.gamma / e.load
-                        },
-                        chunk_shift: p.a * lc / e.k,
-                        chunk_rate: e.k * p.u / lc,
-                        chunk_load: lc,
-                        chunks,
-                    }
-                })
-                .collect(),
-            l_rows: mp.l_rows,
+        .map(|(m, mp)| {
+            let n = mp.entries.len();
+            let mut sim = MasterSim {
+                comm_rate: Vec::with_capacity(n),
+                chunk_shift: Vec::with_capacity(n),
+                chunk_rate: Vec::with_capacity(n),
+                chunks,
+                load_template: Vec::with_capacity(n * chunks),
+                l_rows: mp.l_rows,
+            };
+            for e in &mp.entries {
+                let p = s.link(m, e.node);
+                let lc = e.load / chunks as f64;
+                sim.comm_rate.push(if p.is_local() {
+                    f64::INFINITY
+                } else {
+                    e.b * p.gamma / e.load
+                });
+                sim.chunk_shift.push(p.a * lc / e.k);
+                sim.chunk_rate.push(e.k * p.u / lc);
+                for _ in 0..chunks {
+                    sim.load_template.push(lc);
+                }
+            }
+            sim
         })
         .collect()
 }
 
 impl MasterSim {
+    /// Sample one completion: emit every link's chunk-availability times
+    /// (same RNG draw order as the pre-SoA sampler), then resolve the
+    /// `Σ load ≥ L_m` crossing with the shared weighted-selection scan
+    /// instead of a full event sort.
     fn sample(
         &self,
         rng: &mut Rng,
         overhead: f64,
-        events: &mut Vec<(f64, f64)>,
+        times: &mut Vec<f64>,
+        loads: &mut Vec<f64>,
     ) -> f64 {
-        events.clear();
-        for link in &self.links {
-            let comm = if link.comm_rate.is_infinite() {
-                0.0
-            } else {
-                rng.exp(link.comm_rate)
-            };
+        times.clear();
+        for ((&cr, &shift), &rate) in self
+            .comm_rate
+            .iter()
+            .zip(&self.chunk_shift)
+            .zip(&self.chunk_rate)
+        {
+            let comm = if cr.is_infinite() { 0.0 } else { rng.exp(cr) };
             let mut t = comm;
-            for j in 1..=link.chunks {
-                t += link.chunk_shift + rng.exp(link.chunk_rate);
-                events.push((t + j as f64 * overhead, link.chunk_load));
+            for j in 1..=self.chunks {
+                t += shift + rng.exp(rate);
+                times.push(t + j as f64 * overhead);
             }
         }
-        events.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-        let mut acc = 0.0;
-        for &(t, l) in events.iter() {
-            acc += l;
-            if acc >= self.l_rows {
-                return t;
-            }
-        }
-        f64::INFINITY
+        loads.clear();
+        loads.extend_from_slice(&self.load_template);
+        completion_scan(times, loads, self.l_rows)
     }
 }
 
@@ -123,11 +129,12 @@ pub fn run(s: &Scenario, plan: &Plan, opts: &MultiMsgOptions) -> Summary {
     let sims = compile(s, plan, opts.chunks);
     let mut rng = Rng::new(opts.seed);
     let mut system = Summary::new();
-    let mut events = Vec::new();
+    let mut times = Vec::new();
+    let mut loads = Vec::new();
     for _ in 0..opts.trials {
         let mut sys: f64 = 0.0;
         for sim in &sims {
-            sys = sys.max(sim.sample(&mut rng, opts.overhead_ms, &mut events));
+            sys = sys.max(sim.sample(&mut rng, opts.overhead_ms, &mut times, &mut loads));
         }
         system.push(sys);
     }

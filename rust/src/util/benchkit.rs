@@ -87,6 +87,20 @@ pub fn write_json(path: &str, bench: &str, results: &[BenchResult]) -> std::io::
     std::fs::write(path, j.to_string_pretty())
 }
 
+/// True when `BENCH_QUICK` is set (to anything but `""`/`"0"`): benches
+/// shrink their measurement windows for CI smoke runs. One definition so
+/// every bench binary agrees on the env contract.
+pub fn quick_mode() -> bool {
+    std::env::var("BENCH_QUICK").is_ok_and(|v| v != "0" && !v.is_empty())
+}
+
+/// Absolute path of a perf-trajectory record at the **repo root**
+/// (`BENCH_*.json` live one level above the crate, next to ROADMAP.md),
+/// independent of the caller's working directory.
+pub fn repo_root_record(file: &str) -> String {
+    format!("{}/../{file}", env!("CARGO_MANIFEST_DIR"))
+}
+
 fn fmt_dur(d: Duration) -> String {
     let ns = d.as_nanos() as f64;
     if ns < 1e3 {

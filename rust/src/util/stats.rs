@@ -116,6 +116,26 @@ impl Ecdf {
         Self { sorted: samples }
     }
 
+    /// Borrowing constructor for callers that only hold `&[f64]` (e.g.
+    /// `McResults::system_ecdf` on a shared result). Still one copy —
+    /// the sorted vector must be owned; callers done with their samples
+    /// should move them into [`Ecdf::new`] instead (zero copies), as
+    /// `McResults::into_system_ecdf` and the figure CDF panels do.
+    pub fn from_slice(samples: &[f64]) -> Self {
+        Self::new(samples.to_vec())
+    }
+
+    /// Kolmogorov–Smirnov-style sup distance `sup_t |F(t) − G(t)|`
+    /// between two ECDFs (used by the blocked-sampling
+    /// distribution-equivalence tests).
+    pub fn sup_distance(&self, other: &Ecdf) -> f64 {
+        let mut d = 0.0f64;
+        for &t in self.sorted.iter().chain(&other.sorted) {
+            d = d.max((self.eval(t) - other.eval(t)).abs());
+        }
+        d
+    }
+
     /// `P[X ≤ t]`.
     pub fn eval(&self, t: f64) -> f64 {
         // partition_point = number of samples ≤ t
@@ -295,6 +315,28 @@ mod tests {
             let t = e.inverse(p);
             assert!(e.eval(t) >= p - 1e-9, "p={p} t={t} F={}", e.eval(t));
         }
+    }
+
+    #[test]
+    fn ecdf_from_slice_matches_new() {
+        let v = vec![3.0, 1.0, 2.0, 4.0];
+        let a = Ecdf::from_slice(&v);
+        let b = Ecdf::new(v);
+        for &t in &[0.5, 1.0, 2.5, 4.0, 9.0] {
+            assert_eq!(a.eval(t), b.eval(t));
+        }
+    }
+
+    #[test]
+    fn ecdf_sup_distance_basics() {
+        let a = Ecdf::new((1..=100).map(|i| i as f64).collect());
+        let b = Ecdf::new((1..=100).map(|i| i as f64).collect());
+        assert_eq!(a.sup_distance(&b), 0.0);
+        // Shift by half the support: distance is large and symmetric.
+        let c = Ecdf::new((51..=150).map(|i| i as f64).collect());
+        let d = a.sup_distance(&c);
+        assert!((d - 0.5).abs() < 0.02, "sup distance {d}");
+        assert_eq!(d, c.sup_distance(&a));
     }
 
     #[test]

@@ -1,0 +1,75 @@
+//! Perf-trajectory smoke: a miniature of `benches/engine.rs` that runs
+//! under plain `cargo test -q`, so `BENCH_engine.json` lands at the repo
+//! root on every test run — the trajectory never depends on someone
+//! remembering `cargo bench`. (`cargo bench --bench engine` overwrites
+//! the file with full-length measurements; the record notes its source.)
+//!
+//! Deliberately NO timing assertions here: wall-clock ratios on a busy
+//! test machine are flaky. The relative old-vs-new gate runs in CI on
+//! the bench output (`python/bench_gate.py`), where the two kernels are
+//! measured back-to-back under the same load.
+
+use std::time::Duration;
+
+use coded_coop::assign::ValueModel;
+use coded_coop::config::{CommModel, Scenario};
+use coded_coop::plan::{self, LoadMethod, PlanSpec, Policy};
+use coded_coop::sim::engine::oracle;
+use coded_coop::sim::{self, McOptions, SampleOrder};
+use coded_coop::util::benchkit::{repo_root_record, write_json, Bench};
+use coded_coop::util::json;
+
+#[test]
+fn perf_trajectory_lands_at_repo_root() {
+    let out_path = repo_root_record("BENCH_engine.json");
+    let trials = 2_000usize;
+    let s = Scenario::small_scale(2022, 2.0, CommModel::Stochastic);
+    let p = plan::build(
+        &s,
+        &PlanSpec {
+            policy: Policy::DediIter,
+            values: ValueModel::Markov,
+            loads: LoadMethod::Markov,
+        },
+    );
+    let o = McOptions {
+        trials,
+        seed: 2022,
+        keep_samples: false,
+        threads: 1,
+    };
+    let bench = || {
+        Bench::new()
+            .warmup(Duration::from_millis(30))
+            .measure_time(Duration::from_millis(150))
+            .items(trials as f64)
+    };
+    let results = vec![
+        bench().run("small/legacy", || oracle::run(&s, &p, &o).system.mean()),
+        bench().run("small/v2-trial-major", || {
+            sim::run_ordered(&s, &p, &o, SampleOrder::TrialMajor).system.mean()
+        }),
+        bench().run("small/v2-blocked", || {
+            sim::run_ordered(&s, &p, &o, SampleOrder::Blocked).system.mean()
+        }),
+    ];
+    write_json(
+        &out_path,
+        "engine (test smoke — rerun `cargo bench --bench engine` for full numbers)",
+        &results,
+    )
+    .expect("write BENCH_engine.json at the repo root");
+
+    // The record must parse back and carry a throughput figure per row —
+    // that is what the CI gate and the trajectory consume.
+    let text = std::fs::read_to_string(&out_path).unwrap();
+    let j = json::parse(&text).unwrap();
+    let rows = j.get("results").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 3);
+    for row in rows {
+        let tput = row.get("items_per_sec").unwrap().as_f64().unwrap();
+        assert!(tput > 0.0, "trials/s must be positive");
+        let name = row.get("name").unwrap().as_str().unwrap();
+        assert!(name.starts_with("small/"), "scenario/kernel naming: {name}");
+    }
+}
