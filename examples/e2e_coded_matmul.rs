@@ -92,7 +92,7 @@ fn main() -> anyhow::Result<()> {
     println!("-- real PJRT mat-vec delay traces (Fig. 7 pipeline on real data) --");
     for (name, r, c) in [("bucket-512x512", 512, 512), ("bucket-128x256", 128, 256)] {
         let trace = service.handle().measure_matvec(r, c, 60, false)?;
-        let fit = fit_shifted_exp(&trace);
+        let fit = fit_shifted_exp(&trace)?;
         println!(
             "{name}: n={} fit a={:.3} ms, u={:.3} /ms, KS={:.3}",
             trace.len(),

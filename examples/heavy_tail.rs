@@ -1,0 +1,105 @@
+//! Heavy-tail scenario gallery: one planner, four delay families.
+//!
+//! ```bash
+//! cargo run --release --example heavy_tail
+//! ```
+//!
+//! Every worker link keeps the SAME fitted mean delay (`a + 1/u`), but
+//! the realized per-row distribution is swapped through the delay-model
+//! layer: the paper's shifted exponential, a heavy Weibull tail, a
+//! power-law Pareto tail, a burst-throttling bimodal mixture, and a
+//! trace-driven empirical family packaged by `traces::package_trace`.
+//! The plan is held fixed (Theorem-1 loads on dedicated Alg.-1
+//! assignment — distribution-free, so mean-matched families plan
+//! identically), which isolates how tail weight alone moves the mean,
+//! p95 and p99 completion delay relative to the planner's estimate.
+
+use coded_coop::assign::ValueModel;
+use coded_coop::config::{CommModel, Scenario, Transform};
+use coded_coop::model::dist::FamilyKind;
+use coded_coop::plan::{self, LoadMethod, PlanSpec, Policy};
+use coded_coop::sim::{self, McOptions};
+use coded_coop::traces::package_trace;
+use coded_coop::util::rng::Rng;
+use coded_coop::util::table::Table;
+
+fn main() {
+    let base = || Scenario::small_scale(7, 2.0, CommModel::Stochastic);
+    let spec = PlanSpec {
+        policy: Policy::DediIter,
+        values: ValueModel::Markov,
+        loads: LoadMethod::Markov,
+    };
+    let mc = McOptions {
+        trials: 60_000,
+        seed: 7,
+        keep_samples: true,
+        threads: 0,
+    };
+
+    // A synthetic "measured" trace: shifted-exp base with a 4% population
+    // of 15× throttled rows — the kind of lump a real fleet shows.
+    let mut rng = Rng::new(99);
+    let samples: Vec<f64> = (0..5_000)
+        .map(|_| (0.25 + rng.exp(4.0)) * if rng.f64() < 0.04 { 15.0 } else { 1.0 })
+        .collect();
+    let (trace, fitted) = package_trace("synthetic-fleet", samples).expect("fit");
+    println!(
+        "trace fit: a = {:.3} ms, u = {:.3} /ms, KS = {:.3} (heavy tail ⇒ poor fit)\n",
+        fitted.a, fitted.u, fitted.ks
+    );
+
+    let gallery: Vec<(&str, Option<FamilyKind>)> = vec![
+        ("shifted-exp (paper)", None),
+        ("weibull k=0.6", Some(FamilyKind::Weibull { shape: 0.6 })),
+        ("pareto α=2.2", Some(FamilyKind::Pareto { alpha: 2.2 })),
+        (
+            "bimodal 5% × 10×",
+            Some(FamilyKind::Bimodal {
+                prob: 0.05,
+                slow: 10.0,
+            }),
+        ),
+        ("trace-driven", None), // handled specially below
+    ];
+
+    let mut table = Table::new(&[
+        "delay family",
+        "t* est (ms)",
+        "mean (ms)",
+        "p95 (ms)",
+        "p99 (ms)",
+    ]);
+    for (label, kind) in gallery {
+        let s = if label == "trace-driven" {
+            let mut s = base();
+            let id = s.add_trace(trace.clone());
+            s.transformed(&[Transform::Family(FamilyKind::Trace { id })])
+        } else {
+            match kind {
+                Some(k) => base().transformed(&[Transform::Family(k)]),
+                None => base(),
+            }
+        };
+        let p = plan::build(&s, &spec);
+        let r = sim::run(&s, &p, &mc);
+        let mean = r.system.mean();
+        let t_est = p.t_est();
+        let ecdf = r.into_system_ecdf().expect("samples kept");
+        table.row(&[
+            label.to_string(),
+            format!("{t_est:.1}"),
+            format!("{mean:.1}"),
+            format!("{:.1}", ecdf.inverse(0.95)),
+            format!("{:.1}", ecdf.inverse(0.99)),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "Reading: the Markov plan only sees first moments, and all families\n\
+         are mean-matched — so the plan is identical across rows (the trace\n\
+         row re-plans on the trace's own mean). Heavier tails leave the mean\n\
+         almost untouched but stretch p95/p99; coding redundancy absorbs part\n\
+         of it, and the gap to t* is the price of tail-blind planning."
+    );
+}

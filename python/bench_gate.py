@@ -7,10 +7,15 @@ legacy kernel measured in the SAME run. Relative comparison only — both
 kernels saw identical machine load, so no absolute thresholds and no
 cross-run flakiness.
 
-Per scenario tag (``small``, ``large``, ``ec2``):
+Per scenario tag:
 
-* HARD: ``<tag>/v2-trial-major`` trials/s must be >= ``<tag>/legacy``
-  (within a small jitter allowance).
+* HARD (``small``, ``large``, ``ec2`` — the shifted-exponential
+  kernels): ``<tag>/v2-trial-major`` trials/s must be >=
+  ``<tag>/legacy`` (within a small jitter allowance).
+* INFO (every other tag, e.g. the per-delay-family ``fam-*`` rows and
+  any future additions): the same ratio is printed but never fails the
+  build — the gate tolerates new keys so the record can grow without
+  breaking CI.
 * INFO: ``<tag>/v2-blocked`` vs trial-major is reported; blocked is a
   different-bits fast path whose win varies with link count, so it
   warns rather than fails.
@@ -24,6 +29,10 @@ import sys
 # One-sided jitter allowance on the HARD compare: CI runners schedule
 # noisily even back-to-back; a true regression shows up far below 1.0.
 JITTER = 0.95
+
+# Tags whose v2-vs-legacy ratio gates the build. Everything else is
+# reported informationally (new keys must never break the gate).
+HARD_TAGS = ("small", "large", "ec2")
 
 
 def main() -> int:
@@ -42,7 +51,7 @@ def main() -> int:
             tput[name] = float(ips)
 
     tags = sorted({n.split("/", 1)[0] for n in tput if "/" in n})
-    pairs = 0
+    hard_pairs = 0
     failures = []
     for tag in tags:
         legacy = tput.get(f"{tag}/legacy")
@@ -50,12 +59,17 @@ def main() -> int:
         blocked = tput.get(f"{tag}/v2-blocked")
         if legacy is None or v2 is None:
             continue
-        pairs += 1
+        hard = tag in HARD_TAGS
+        if hard:
+            hard_pairs += 1
         ratio = v2 / legacy
-        verdict = "OK" if ratio >= JITTER else "REGRESSION"
+        if hard:
+            verdict = "OK" if ratio >= JITTER else "REGRESSION"
+        else:
+            verdict = "INFO"
         print(f"{tag:<12} legacy {legacy:>12.0f} trials/s   "
               f"v2 {v2:>12.0f} trials/s   x{ratio:.2f}  [{verdict}]")
-        if ratio < JITTER:
+        if hard and ratio < JITTER:
             failures.append(f"{tag}: v2-trial-major is {ratio:.2f}x legacy")
         if blocked is not None:
             bratio = blocked / v2
@@ -63,15 +77,16 @@ def main() -> int:
             print(f"{'':<12} blocked {blocked:>11.0f} trials/s   "
                   f"x{bratio:.2f} vs trial-major{note}")
 
-    if pairs == 0:
-        print("bench gate: no legacy/v2 pairs found in the record", file=sys.stderr)
+    if hard_pairs == 0:
+        print("bench gate: no hard legacy/v2 pairs found in the record",
+              file=sys.stderr)
         return 2
     if failures:
         print("\nbench gate FAILED:", file=sys.stderr)
         for f_ in failures:
             print(f"  {f_}", file=sys.stderr)
         return 1
-    print(f"\nbench gate passed ({pairs} scenario pair(s)).")
+    print(f"\nbench gate passed ({hard_pairs} hard scenario pair(s)).")
     return 0
 
 

@@ -13,7 +13,11 @@
 //!
 //! Kernel rows pin `threads: 1` so the comparison is the sampling loop,
 //! not the scheduler; one all-cores pair quantifies the pool-reuse win on
-//! short runs. Writes `BENCH_engine.json` to the **repo root** — the
+//! short runs. Per-delay-family rows (`fam-*` tags: Weibull, Pareto,
+//! bimodal, trace-driven on the small scenario) track the family-tagged
+//! kernel paths; the gate treats them as informational — only the
+//! shifted-exp `small`/`large`/`ec2` v2-vs-legacy ratios are hard.
+//! Writes `BENCH_engine.json` to the **repo root** — the
 //! perf-trajectory record CI archives and gates on
 //! (`python/bench_gate.py`). `BENCH_QUICK=1` shrinks the measurement for
 //! CI smoke runs.
@@ -21,13 +25,15 @@
 use std::time::Duration;
 
 use coded_coop::assign::ValueModel;
-use coded_coop::config::{CommModel, Scenario};
+use coded_coop::config::{CommModel, Scenario, Transform};
+use coded_coop::model::dist::{FamilyKind, TraceDist};
 use coded_coop::plan::{self, LoadMethod, PlanSpec, Policy};
 use coded_coop::sim::engine::oracle;
 use coded_coop::sim::{self, McOptions, SampleOrder};
 use coded_coop::util::benchkit::{
     group, quick_mode, repo_root_record, write_json, Bench, BenchResult,
 };
+use coded_coop::util::rng::Rng;
 
 fn bench(trials: usize) -> Bench {
     let (warm, measure) = if quick_mode() {
@@ -100,6 +106,33 @@ fn main() {
     let s = Scenario::ec2(40, 10, true);
     let p = plan::build(&s, &dedi);
     kernel_rows(&mut results, "ec2", &s, &p, trials);
+
+    // Per-delay-family rows (small scenario, mean-matched families):
+    // the family-tagged kernel paths vs the same oracle.
+    let small = || Scenario::small_scale(2022, 2.0, CommModel::Stochastic);
+    for (tag, kind) in [
+        ("fam-weibull", FamilyKind::Weibull { shape: 0.6 }),
+        ("fam-pareto", FamilyKind::Pareto { alpha: 2.5 }),
+        (
+            "fam-bimodal",
+            FamilyKind::Bimodal {
+                prob: 0.02,
+                slow: 20.0,
+            },
+        ),
+    ] {
+        let s = small().transformed(&[Transform::Family(kind)]);
+        let p = plan::build(&s, &dedi);
+        kernel_rows(&mut results, tag, &s, &p, trials);
+    }
+    // Trace-driven family: quantile lookups per draw over a 1k trace.
+    let mut s = small();
+    let mut rng = Rng::new(7);
+    let samples: Vec<f64> = (0..1_000).map(|_| 0.2 + rng.exp(4.0)).collect();
+    let id = s.add_trace(TraceDist::from_samples("syn", samples).unwrap());
+    let s = s.transformed(&[Transform::Family(FamilyKind::Trace { id })]);
+    let p = plan::build(&s, &dedi);
+    kernel_rows(&mut results, "fam-trace", &s, &p, trials);
 
     // Scheduler row: short all-cores runs, where the legacy per-run
     // thread spawn dominates and the shared pool pays off.

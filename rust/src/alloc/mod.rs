@@ -14,6 +14,16 @@
 //! The shared currency is [`EffLink`]: per-row delay parameters after
 //! resource scaling (`γ → bγ`, `u → ku`, `a → a/k`), so every allocator
 //! works unchanged for both dedicated and fractional policies.
+//!
+//! **Delay-family validity.** [`EffLink`] is intrinsically the
+//! shifted-exponential analytic machinery — its CDF is eqs. (3)–(5).
+//! The distribution-free Theorem-1 path ([`markov`]) instead consumes
+//! first moments through the family-aware
+//! [`crate::config::Scenario::theta`], so it is exact-assumption-clean
+//! for every delay family; [`comp_dominant`] and [`sca`] require the
+//! closed-form CDF and therefore operate on the fitted `(a, u)`
+//! surrogate for non-shifted families (DESIGN.md §Delay-model layer
+//! tabulates which bounds hold where).
 
 pub mod markov;
 pub mod comp_dominant;

@@ -13,7 +13,6 @@
 use super::{Dedicated, Fractional, ValueMatrix};
 use crate::alloc::markov::node_value;
 use crate::config::Scenario;
-use crate::model::params::theta_fractional;
 
 /// Options for Algorithm 4.
 #[derive(Clone, Copy, Debug)]
@@ -32,15 +31,18 @@ impl Default for FracOptions {
     }
 }
 
-/// Sum values `V_m` under the current shares (eq. 28a).
+/// Sum values `V_m` under the current shares (eq. 28a). θ flows through
+/// the family-aware moment interface ([`Scenario::theta`]) — the
+/// balancing currency stays correct for heavy-tail and trace-driven
+/// links (bit-identical to the legacy formulas on shifted-exp links).
 pub fn sum_values(s: &Scenario, f: &Fractional) -> Vec<f64> {
     (0..s.n_masters())
         .map(|m| {
             let l = s.l_rows(m);
-            let mut v = node_value(s.link(m, 0).theta(), l);
+            let mut v = node_value(s.theta(m, 0, 1.0, 1.0), l);
             for w in 0..s.n_workers() {
                 if f.k[m][w] > 0.0 {
-                    let th = theta_fractional(&s.link(m, w + 1), f.k[m][w], f.b[m][w]);
+                    let th = s.theta(m, w + 1, f.k[m][w], f.b[m][w]);
                     v += node_value(th, l);
                 }
             }
@@ -63,7 +65,7 @@ pub fn assign(s: &Scenario, start: &Dedicated, opts: &FracOptions) -> Fractional
         if k <= 0.0 || b <= 0.0 {
             return 0.0;
         }
-        node_value(theta_fractional(&s.link(m, w + 1), k, b), s.l_rows(m))
+        node_value(s.theta(m, w + 1, k, b), s.l_rows(m))
     };
 
     for _ in 0..opts.max_iters {

@@ -49,14 +49,23 @@ impl ValueMatrix {
         let m = s.n_masters();
         let n = s.n_workers();
         let value = |mm: usize, node: usize| -> f64 {
-            let p = s.link(mm, node);
             let l = s.l_rows(mm);
             match model {
-                ValueModel::Markov => markov::node_value(p.theta(), l),
-                ValueModel::Exact => comp_dominant::node_value(
-                    comp_dominant::CompParams { a: p.a, u: p.u },
-                    l,
-                ),
+                // Markov values are distribution-free (Remark 1): they
+                // consume the family-aware first moment θ, not the raw
+                // (a, u) pair — heavy-tail and trace-driven links value
+                // through their true means.
+                ValueModel::Markov => markov::node_value(s.theta(mm, node, 1.0, 1.0), l),
+                // Theorem-2 values are closed-form in the shifted-exp
+                // parameters; for other families they evaluate the
+                // fitted (a, u) surrogate (DESIGN.md §Delay-model layer).
+                ValueModel::Exact => {
+                    let p = s.link(mm, node);
+                    comp_dominant::node_value(
+                        comp_dominant::CompParams { a: p.a, u: p.u },
+                        l,
+                    )
+                }
             }
         };
         Self {

@@ -16,7 +16,6 @@
 use super::Fractional;
 use crate::alloc::markov::node_value;
 use crate::config::Scenario;
-use crate::model::params::theta_fractional;
 
 /// Search options.
 #[derive(Clone, Copy, Debug)]
@@ -54,13 +53,12 @@ pub fn assign(s: &Scenario, opts: &OptimalOptions) -> Fractional {
         if k <= 0.0 || b <= 0.0 {
             return 0.0;
         }
-        node_value(
-            theta_fractional(&s.link(m, w + 1), k, b),
-            s.l_rows(m),
-        )
+        // Family-aware θ: the grid search values heavy-tail/trace links
+        // by their true means (bit-identical legacy on shifted-exp).
+        node_value(s.theta(m, w + 1, k, b), s.l_rows(m))
     };
     let v0: Vec<f64> = (0..2)
-        .map(|m| node_value(s.link(m, 0).theta(), s.l_rows(m)))
+        .map(|m| node_value(s.theta(m, 0, 1.0, 1.0), s.l_rows(m)))
         .collect();
 
     // Assignment state: per worker the (k1, b1) grid indices; master 2

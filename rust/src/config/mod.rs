@@ -12,7 +12,8 @@
 //! * [`Scenario::ec2`] — Fig. 8: 4 t2.micro masters, 40 t2.micro + 10
 //!   c5.large workers with the paper's fitted shifted-exponentials.
 
-use crate::model::params::LinkParams;
+use crate::model::dist::{DelayFamily, FamilyKind, LinkDelay, TraceDist};
+use crate::model::params::{theta_fractional, theta_from_comp_mean, LinkParams};
 use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
 
@@ -43,6 +44,9 @@ pub struct Scenario {
     pub masters: Vec<MasterCfg>,
     /// `links[m][n-1]` = parameters of link (master m, worker n), n ∈ 1..=N.
     pub links: Vec<Vec<LinkParams>>,
+    /// Delay-trace table for [`FamilyKind::Trace`] links (usually empty;
+    /// register with [`Scenario::add_trace`] or a `"traces"` JSON array).
+    pub traces: Vec<TraceDist>,
 }
 
 impl Scenario {
@@ -77,6 +81,53 @@ impl Scenario {
         self.masters[m].l_rows
     }
 
+    /// Resolve the per-row computation-delay family of link (m, n)
+    /// against this scenario's trace table.
+    pub fn comp_family(&self, m: usize, n: usize) -> DelayFamily {
+        let p = self.link(m, n);
+        p.family.resolve(p.a, p.u, &self.traces)
+    }
+
+    /// Family-aware compile of one sub-task's total delay — the single
+    /// entry point the Monte-Carlo kernels and the coordinator use.
+    /// Shifted-exponential links go through [`LinkDelay::new`] (the
+    /// exact legacy arithmetic, bit-for-bit); every other family is
+    /// resolved and block-scaled.
+    pub fn link_delay(&self, m: usize, n: usize, l: f64, k: f64, b: f64) -> LinkDelay {
+        let p = self.link(m, n);
+        match p.family {
+            FamilyKind::ShiftedExp => LinkDelay::new(&p, l, k, b),
+            kind => LinkDelay::with_family(&p, &kind.resolve(p.a, p.u, &self.traces), l, k, b),
+        }
+    }
+
+    /// Family-aware expected unit delay θ (eqs. 10/24 via Remark 1):
+    /// comm mean + `E[X]/k` with `X` the link's per-row computation
+    /// family. Shifted-exponential links evaluate the legacy
+    /// [`theta_fractional`] formula bit-for-bit; other families thread
+    /// their true first moment ([`DelayFamily::mean`]) to the planner —
+    /// this is the moment interface the Markov-inequality allocators
+    /// consume instead of raw `(a, u)` pairs.
+    pub fn theta(&self, m: usize, n: usize, k: f64, b: f64) -> f64 {
+        let p = self.link(m, n);
+        match p.family {
+            FamilyKind::ShiftedExp => theta_fractional(&p, k, b),
+            kind => theta_from_comp_mean(
+                &p,
+                kind.resolve(p.a, p.u, &self.traces).mean(),
+                k,
+                b,
+            ),
+        }
+    }
+
+    /// Register a delay trace; returns the id [`FamilyKind::Trace`]
+    /// links reference.
+    pub fn add_trace(&mut self, trace: TraceDist) -> usize {
+        self.traces.push(trace);
+        self.traces.len() - 1
+    }
+
     fn check(self) -> Self {
         assert!(!self.masters.is_empty(), "scenario needs ≥1 master");
         assert_eq!(
@@ -89,6 +140,19 @@ impl Scenario {
             self.links.iter().all(|row| row.len() == n),
             "ragged link matrix"
         );
+        for (m, row) in self.links.iter().enumerate() {
+            for (w, p) in row.iter().enumerate() {
+                p.family.validate(self.traces.len()).unwrap_or_else(|e| {
+                    panic!("link (master {m}, worker {}): {e}", w + 1)
+                });
+            }
+        }
+        for (m, mc) in self.masters.iter().enumerate() {
+            mc.local
+                .family
+                .validate(self.traces.len())
+                .unwrap_or_else(|e| panic!("master {m} local link: {e}"));
+        }
         self
     }
 
@@ -164,6 +228,7 @@ impl Scenario {
             comm,
             masters,
             links,
+            traces: Vec::new(),
         }
         .check()
     }
@@ -215,6 +280,7 @@ impl Scenario {
             comm: CommModel::CompDominant,
             masters,
             links,
+            traces: Vec::new(),
         }
         .check()
     }
@@ -246,6 +312,9 @@ impl Scenario {
                         o.set("l_rows", Json::Num(mc.l_rows));
                         o.set("a0", Json::Num(mc.local.a));
                         o.set("u0", Json::Num(mc.local.u));
+                        if mc.local.family != FamilyKind::ShiftedExp {
+                            o.set("family", mc.local.family.to_json());
+                        }
                         o
                     })
                     .collect(),
@@ -264,6 +333,9 @@ impl Scenario {
                                     o.set("gamma", Json::Num(p.gamma));
                                     o.set("a", Json::Num(p.a));
                                     o.set("u", Json::Num(p.u));
+                                    if p.family != FamilyKind::ShiftedExp {
+                                        o.set("family", p.family.to_json());
+                                    }
                                     o
                                 })
                                 .collect(),
@@ -272,6 +344,12 @@ impl Scenario {
                     .collect(),
             ),
         );
+        if !self.traces.is_empty() {
+            j.set(
+                "traces",
+                Json::Arr(self.traces.iter().map(TraceDist::to_json).collect()),
+            );
+        }
         j
     }
 
@@ -290,15 +368,30 @@ impl Scenario {
             Some("comp_dominant") => CommModel::CompDominant,
             _ => CommModel::Stochastic,
         };
+        let traces = match j.get("traces") {
+            None | Some(Json::Null) => Vec::new(),
+            Some(tj) => tj
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("'traces' must be an array"))?
+                .iter()
+                .map(TraceDist::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?,
+        };
         let masters = j
             .get("masters")
             .and_then(Json::as_arr)
             .ok_or_else(|| anyhow::anyhow!("missing 'masters'"))?
             .iter()
             .map(|mj| {
+                let mut local = LinkParams::local(get(mj, "a0")?, get(mj, "u0")?);
+                if let Some(fj) = mj.get("family") {
+                    let kind = FamilyKind::from_json(fj)?;
+                    kind.validate(traces.len())?;
+                    local.family = kind;
+                }
                 Ok(MasterCfg {
                     l_rows: get(mj, "l_rows")?,
-                    local: LinkParams::local(get(mj, "a0")?, get(mj, "u0")?),
+                    local,
                 })
             })
             .collect::<anyhow::Result<Vec<_>>>()?;
@@ -312,11 +405,17 @@ impl Scenario {
                     .ok_or_else(|| anyhow::anyhow!("'links' rows must be arrays"))?
                     .iter()
                     .map(|pj| {
-                        Ok(LinkParams::new(
+                        let mut p = LinkParams::new(
                             get(pj, "gamma")?,
                             get(pj, "a")?,
                             get(pj, "u")?,
-                        ))
+                        );
+                        if let Some(fj) = pj.get("family") {
+                            let kind = FamilyKind::from_json(fj)?;
+                            kind.validate(traces.len())?;
+                            p.family = kind;
+                        }
+                        Ok(p)
                     })
                     .collect::<anyhow::Result<Vec<_>>>()
             })
@@ -326,6 +425,7 @@ impl Scenario {
             comm,
             masters,
             links,
+            traces,
         }
         .check())
     }
@@ -358,6 +458,12 @@ pub enum Transform {
     Straggler { prob: f64, slowdown: f64 },
     /// Switch the communication regime.
     Comm(CommModel),
+    /// Select the computation-delay family of every worker link
+    /// (master-local links keep the shifted exponential). Parametric
+    /// kinds are mean-matched to each link's fitted `(a, u)`
+    /// ([`FamilyKind::resolve`]); trace ids must already be registered
+    /// on the scenario ([`Scenario::add_trace`]).
+    Family(FamilyKind),
 }
 
 impl Transform {
@@ -396,6 +502,15 @@ impl Transform {
                 }
             }
             Transform::Comm(c) => s.comm = c,
+            Transform::Family(kind) => {
+                kind.validate(s.traces.len())
+                    .expect("invalid delay-family transform");
+                for row in &mut s.links {
+                    for p in row.iter_mut() {
+                        p.family = kind;
+                    }
+                }
+            }
         }
     }
 }
@@ -560,6 +675,109 @@ mod tests {
             },
         ]);
         assert!(s2.links[0][0].straggler.is_none());
+    }
+
+    #[test]
+    fn family_transform_hits_worker_links_only() {
+        let s = Scenario::small_scale(1, 2.0, CommModel::Stochastic)
+            .transformed(&[Transform::Family(FamilyKind::Weibull { shape: 0.6 })]);
+        for m in 0..s.n_masters() {
+            assert_eq!(s.link(m, 0).family, FamilyKind::ShiftedExp, "local link");
+            for n in 1..=s.n_workers() {
+                assert_eq!(s.link(m, n).family, FamilyKind::Weibull { shape: 0.6 });
+                // (a, u) untouched: the family is mean-matched on top.
+                let base = Scenario::small_scale(1, 2.0, CommModel::Stochastic);
+                assert_eq!(s.link(m, n).a, base.link(m, n).a);
+                assert_eq!(s.link(m, n).u, base.link(m, n).u);
+            }
+        }
+        // CompDominant still drops the comm leg, family intact.
+        let cd = Scenario::small_scale(1, 2.0, CommModel::CompDominant)
+            .transformed(&[Transform::Family(FamilyKind::Pareto { alpha: 2.5 })]);
+        assert!(cd.link(0, 1).is_local());
+        assert_eq!(cd.link(0, 1).family, FamilyKind::Pareto { alpha: 2.5 });
+    }
+
+    #[test]
+    fn family_json_roundtrip_with_traces() {
+        let mut s = Scenario::small_scale(3, 2.0, CommModel::Stochastic);
+        let id = s.add_trace(TraceDist::from_samples("toy", vec![0.5, 1.0, 2.0]).unwrap());
+        s = s.transformed(&[Transform::Family(FamilyKind::Trace { id })]);
+        let text = s.to_json().to_string_pretty();
+        let back = Scenario::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.traces.len(), 1);
+        assert_eq!(back.traces[0].name(), "toy");
+        for n in 1..=back.n_workers() {
+            assert_eq!(back.link(0, n).family, FamilyKind::Trace { id: 0 });
+        }
+        // Trace id out of range is a graceful JSON error, not a panic.
+        let bad = text.replace("\"id\": 0", "\"id\": 7");
+        assert!(Scenario::from_json(&crate::util::json::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn master_local_family_roundtrips_too() {
+        // A programmatically-set local family must survive export →
+        // reload, like worker links do.
+        let mut s = Scenario::small_scale(4, 2.0, CommModel::Stochastic);
+        s.masters[0].local = s.masters[0]
+            .local
+            .with_family(FamilyKind::Weibull { shape: 0.7 });
+        let text = s.to_json().to_string_pretty();
+        let back = Scenario::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.link(0, 0).family, FamilyKind::Weibull { shape: 0.7 });
+        assert_eq!(back.link(1, 0).family, FamilyKind::ShiftedExp);
+    }
+
+    #[test]
+    fn family_aware_theta_dispatch() {
+        // Shifted-exp links: bit-for-bit the legacy formula.
+        let s = Scenario::small_scale(5, 2.0, CommModel::Stochastic);
+        for n in 0..=s.n_workers() {
+            assert_eq!(s.theta(0, n, 1.0, 1.0), theta_fractional(&s.link(0, n), 1.0, 1.0));
+            assert_eq!(s.theta(0, n, 0.5, 0.25), theta_fractional(&s.link(0, n), 0.5, 0.25));
+        }
+        // Mean-matched parametric families: same θ up to rounding.
+        for kind in [
+            FamilyKind::Weibull { shape: 0.6 },
+            FamilyKind::Pareto { alpha: 2.5 },
+            FamilyKind::Bimodal { prob: 0.05, slow: 10.0 },
+        ] {
+            let t = Scenario::small_scale(5, 2.0, CommModel::Stochastic)
+                .transformed(&[Transform::Family(kind)]);
+            for n in 1..=t.n_workers() {
+                let want = theta_fractional(&t.link(0, n), 0.5, 0.5);
+                let got = t.theta(0, n, 0.5, 0.5);
+                assert!(
+                    (got - want).abs() / want < 1e-9,
+                    "{kind:?} n={n}: {got} vs {want}"
+                );
+            }
+        }
+        // Trace-driven links: θ uses the TRUE trace mean, not (a, u).
+        let mut t = Scenario::small_scale(5, 2.0, CommModel::Stochastic);
+        let id = t.add_trace(TraceDist::from_samples("slow", vec![5.0, 7.0]).unwrap());
+        let t = t.transformed(&[Transform::Family(FamilyKind::Trace { id })]);
+        let p = t.link(0, 1);
+        let got = t.theta(0, 1, 1.0, 1.0);
+        let want = 1.0 / p.gamma + 6.0; // comm mean + trace mean
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+        // Zero shares still degrade to ∞ like theta_fractional.
+        assert!(t.theta(0, 1, 0.0, 1.0).is_infinite());
+    }
+
+    #[test]
+    fn link_delay_dispatches_on_family() {
+        let s = Scenario::small_scale(6, 2.0, CommModel::Stochastic);
+        let d = s.link_delay(0, 1, 10.0, 1.0, 1.0);
+        assert!(matches!(d.comp(), DelayFamily::ShiftedExp { .. }));
+        let t = Scenario::small_scale(6, 2.0, CommModel::Stochastic)
+            .transformed(&[Transform::Family(FamilyKind::Weibull { shape: 0.7 })]);
+        let d = t.link_delay(0, 1, 10.0, 1.0, 1.0);
+        assert!(matches!(d.comp(), DelayFamily::Weibull { .. }));
+        // Block scaling: mean equals comm mean + (l/k)·E[X] = l·θ.
+        let want = 10.0 * t.theta(0, 1, 1.0, 1.0);
+        assert!((d.mean() - want).abs() / want < 1e-9);
     }
 
     #[test]

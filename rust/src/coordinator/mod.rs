@@ -32,7 +32,6 @@ use std::time::Instant;
 
 use crate::coding::MdsCode;
 use crate::config::Scenario;
-use crate::model::dist::LinkDelay;
 use crate::plan::{self, Plan, PlanSpec};
 use crate::runtime::RuntimeHandle;
 use crate::util::rng::Rng;
@@ -345,8 +344,12 @@ pub fn run_plan(s: &Scenario, plan: &Plan, opts: &RunOptions) -> anyhow::Result<
             if l_int == 0 {
                 continue;
             }
-            let p = s.link(m, e.node);
-            let delay = LinkDelay::new(&p, l_int as f64, e.k, e.b).sample(&mut rng);
+            // Family-aware delay injection: shifted-exp links sample the
+            // legacy eq.-(3) draws bit-for-bit, other families through
+            // the same DelayFamily interface as the Monte-Carlo engine.
+            let delay = s
+                .link_delay(m, e.node, l_int as f64, e.k, e.b)
+                .sample(&mut rng);
             let a_block = coded[start * opts.cols..(start + l_int) * opts.cols].to_vec();
             let queue_idx = if e.node == 0 {
                 n_workers + m

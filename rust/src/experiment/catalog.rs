@@ -27,7 +27,9 @@ use crate::traces::ec2::T2_MICRO_THROTTLE;
 
 use super::spec::{Axis, ScenarioSpec, SweepSpec};
 
-/// All catalog ids, paper order.
+/// All catalog ids, paper order (the `heavy_tail` scenario-gallery
+/// sweep goes beyond the paper: a delay-family axis over mean-matched
+/// Weibull tails — see DESIGN.md §Delay-model layer).
 pub const IDS: &[&str] = &[
     "fig2",
     "fig3",
@@ -40,8 +42,14 @@ pub const IDS: &[&str] = &[
     "fig8_measured",
     "ablation_redundancy",
     "ablation_straggler",
+    "heavy_tail",
     "smoke",
 ];
+
+/// Weibull shapes of the `heavy_tail` sweep: 1.0 is the exponential
+/// tail (the shifted-exp law itself, different sampler bits), smaller
+/// shapes are progressively heavier tails at the SAME per-link mean.
+pub const HEAVY_TAIL_SHAPES: &[f64] = &[1.0, 0.8, 0.65, 0.5];
 
 /// Figure-harness Monte-Carlo seed derivation: figures decouple the MC
 /// stream from the scenario-generation seed (`FigureOptions::mc` uses
@@ -232,6 +240,22 @@ pub fn spec(id: &str, trials: usize, seed: u64) -> anyhow::Result<SweepSpec> {
                 ],
             )
         },
+        "heavy_tail" => SweepSpec {
+            axes: vec![Axis::single("weibull_shape", HEAVY_TAIL_SHAPES)],
+            trials,
+            seed: fig_mc_seed(seed),
+            keep_samples: true, // tail readouts want the CDF
+            ..SweepSpec::new(
+                id,
+                ScenarioSpec::base("small", seed, CommModel::Stochastic),
+                vec![
+                    PolicySpec::new("uncoded", ValueModel::Markov, "markov"),
+                    PolicySpec::new("dedi-iter", ValueModel::Markov, "markov"),
+                    PolicySpec::new("dedi-iter", ValueModel::Markov, "sca"),
+                    PolicySpec::new("frac", ValueModel::Markov, "markov"),
+                ],
+            )
+        },
         "smoke" => SweepSpec {
             trials,
             seed: fig_mc_seed(seed),
@@ -292,6 +316,23 @@ mod tests {
             12
         );
         assert_eq!(spec("smoke", 100, 1).unwrap().expand().unwrap().len(), 2);
+        // 4 Weibull shapes × 4 policies.
+        assert_eq!(spec("heavy_tail", 100, 1).unwrap().expand().unwrap().len(), 16);
+    }
+
+    #[test]
+    fn heavy_tail_sweep_selects_families_per_cell() {
+        use crate::model::dist::FamilyKind;
+        let cells = spec("heavy_tail", 100, 7).unwrap().expand().unwrap();
+        // Policies innermost: the first 4 cells share shape 1.0.
+        assert_eq!(
+            cells[0].scenario.link(0, 1).family,
+            FamilyKind::Weibull { shape: 1.0 }
+        );
+        assert_eq!(
+            cells[cells.len() - 1].scenario.link(0, 1).family,
+            FamilyKind::Weibull { shape: 0.5 }
+        );
     }
 
     #[test]

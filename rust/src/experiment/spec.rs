@@ -9,6 +9,7 @@
 //! module.
 
 use crate::config::{AShift, CommModel, Scenario, Transform};
+use crate::model::dist::FamilyKind;
 use crate::policy::PolicySpec;
 use crate::sim::SampleOrder;
 use crate::util::json::Json;
@@ -29,7 +30,11 @@ pub const MAX_SEED: u64 = 1 << 52;
 /// Axis parameter names [`SweepSpec::expand`] understands. All but
 /// `overhead` rewrite the [`ScenarioSpec`] (`n_masters` / `n_workers`
 /// apply to the `random` base only); `overhead` rescales the built plan
-/// via [`crate::plan::Plan::with_overhead`].
+/// via [`crate::plan::Plan::with_overhead`]. The `weibull_shape` /
+/// `pareto_alpha` / `bimodal_prob` / `bimodal_slow` params sweep the
+/// worker delay family ([`ScenarioSpec::delay_family`]): each point
+/// selects a mean-matched family with that parameter, overriding the
+/// template's own family (the two bimodal params zip naturally).
 pub const KNOWN_PARAMS: &[&str] = &[
     "seed",
     "gamma_ratio",
@@ -39,6 +44,10 @@ pub const KNOWN_PARAMS: &[&str] = &[
     "u_scale",
     "straggler_prob",
     "straggler_slow",
+    "weibull_shape",
+    "pareto_alpha",
+    "bimodal_prob",
+    "bimodal_slow",
     "overhead",
 ];
 
@@ -75,6 +84,11 @@ pub struct ScenarioSpec {
     /// other base it applies to all worker links. `prob = 0` disables it.
     pub straggler_prob: f64,
     pub straggler_slow: f64,
+    /// Worker-link computation-delay family (mean-matched to each
+    /// link's `(a, u)`; [`FamilyKind::ShiftedExp`] = the paper's model).
+    /// Trace-driven families are a scenario-config/API feature — specs
+    /// reject [`FamilyKind::Trace`] because they carry no trace table.
+    pub delay_family: FamilyKind,
 }
 
 impl Default for ScenarioSpec {
@@ -94,6 +108,7 @@ impl Default for ScenarioSpec {
             u_scale: 1.0,
             straggler_prob: 0.0,
             straggler_slow: 1.0,
+            delay_family: FamilyKind::ShiftedExp,
         }
     }
 }
@@ -195,6 +210,16 @@ impl ScenarioSpec {
                 });
             }
         }
+        if self.delay_family != FamilyKind::ShiftedExp {
+            anyhow::ensure!(
+                !matches!(self.delay_family, FamilyKind::Trace { .. }),
+                "trace-driven delay families are selected on scenario configs \
+                 (a 'traces' table + per-link 'family') or via Scenario::add_trace, \
+                 not on sweep specs"
+            );
+            self.delay_family.validate(0)?;
+            ts.push(Transform::Family(self.delay_family));
+        }
         Ok(s.transformed(&ts))
     }
 
@@ -225,6 +250,9 @@ impl ScenarioSpec {
         j.set("u_scale", Json::Num(self.u_scale));
         j.set("straggler_prob", Json::Num(self.straggler_prob));
         j.set("straggler_slow", Json::Num(self.straggler_slow));
+        if self.delay_family != FamilyKind::ShiftedExp {
+            j.set("delay_family", self.delay_family.to_json());
+        }
         j
     }
 
@@ -280,6 +308,10 @@ impl ScenarioSpec {
             u_scale: num("u_scale", d.u_scale)?,
             straggler_prob: num("straggler_prob", d.straggler_prob)?,
             straggler_slow: num("straggler_slow", d.straggler_slow)?,
+            delay_family: match j.get("delay_family") {
+                None | Some(Json::Null) => d.delay_family,
+                Some(fj) => FamilyKind::from_json(fj)?,
+            },
         })
     }
 }
@@ -683,6 +715,46 @@ fn apply_param(
         "u_scale" => sc.u_scale = v,
         "straggler_prob" => sc.straggler_prob = v,
         "straggler_slow" => sc.straggler_slow = v,
+        "weibull_shape" => {
+            // Same bound as FamilyKind::validate (Γ-overflow guard).
+            anyhow::ensure!(
+                v.is_finite() && v >= 0.01,
+                "weibull_shape axis value {v} must be ≥ 0.01"
+            );
+            sc.delay_family = FamilyKind::Weibull { shape: v };
+        }
+        "pareto_alpha" => {
+            anyhow::ensure!(
+                v.is_finite() && v > 1.0,
+                "pareto_alpha axis value {v} must be > 1 (finite mean)"
+            );
+            sc.delay_family = FamilyKind::Pareto { alpha: v };
+        }
+        // The two bimodal params read-modify the current family so a
+        // zipped (prob, slow) axis composes; a lone param starts from
+        // the t2.micro-throttle-flavored default for the other half.
+        "bimodal_prob" => {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&v),
+                "bimodal_prob axis value {v} outside [0, 1]"
+            );
+            let slow = match sc.delay_family {
+                FamilyKind::Bimodal { slow, .. } => slow,
+                _ => 10.0,
+            };
+            sc.delay_family = FamilyKind::Bimodal { prob: v, slow };
+        }
+        "bimodal_slow" => {
+            anyhow::ensure!(
+                v.is_finite() && v >= 1.0,
+                "bimodal_slow axis value {v} must be ≥ 1"
+            );
+            let prob = match sc.delay_family {
+                FamilyKind::Bimodal { prob, .. } => prob,
+                _ => 0.02,
+            };
+            sc.delay_family = FamilyKind::Bimodal { prob, slow: v };
+        }
         "overhead" => *overhead = Some(v),
         other => anyhow::bail!("unknown axis param '{other}'"),
     }
@@ -837,6 +909,71 @@ mod tests {
     }
 
     #[test]
+    fn delay_family_axis_sets_worker_families_per_cell() {
+        let mut s = base_spec();
+        s.axes.push(Axis::single("weibull_shape", &[1.0, 0.6]));
+        let cells = s.expand().unwrap();
+        assert_eq!(cells.len(), 2);
+        for (cell, shape) in cells.iter().zip([1.0, 0.6]) {
+            for n in 1..=cell.scenario.n_workers() {
+                assert_eq!(
+                    cell.scenario.link(0, n).family,
+                    FamilyKind::Weibull { shape },
+                    "cell {} worker {n}",
+                    cell.index
+                );
+            }
+            assert_eq!(cell.scenario.link(0, 0).family, FamilyKind::ShiftedExp);
+        }
+        // Zipped bimodal axis: both params move together.
+        let mut s = base_spec();
+        s.axes.push(Axis::zipped(
+            "bimodal",
+            &["bimodal_prob", "bimodal_slow"],
+            vec![vec![0.01, 5.0], vec![0.1, 20.0]],
+        ));
+        let cells = s.expand().unwrap();
+        assert_eq!(
+            cells[0].scenario.link(0, 1).family,
+            FamilyKind::Bimodal { prob: 0.01, slow: 5.0 }
+        );
+        assert_eq!(
+            cells[1].scenario.link(0, 1).family,
+            FamilyKind::Bimodal { prob: 0.1, slow: 20.0 }
+        );
+        // Invalid family axis values error gracefully at expand.
+        let mut s = base_spec();
+        s.axes.push(Axis::single("pareto_alpha", &[0.5]));
+        assert!(s.expand().unwrap_err().to_string().contains("pareto_alpha"));
+    }
+
+    #[test]
+    fn delay_family_template_roundtrips_and_rejects_traces() {
+        let mut s = base_spec();
+        s.scenario.delay_family = FamilyKind::Pareto { alpha: 2.5 };
+        let text = s.to_json().to_string_pretty();
+        let back = SweepSpec::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, s);
+        let cells = back.expand().unwrap();
+        assert_eq!(
+            cells[0].scenario.link(0, 1).family,
+            FamilyKind::Pareto { alpha: 2.5 }
+        );
+        // Specs carry no trace table ⇒ trace families are rejected.
+        let mut s = base_spec();
+        s.scenario.delay_family = FamilyKind::Trace { id: 0 };
+        let e = s.expand().unwrap_err();
+        assert!(e.to_string().contains("trace"), "{e}");
+        // Unknown family kinds in JSON error gracefully too.
+        let bad = r#"{
+            "schema": 1,
+            "scenario": {"delay_family": {"kind": "cauchy"}},
+            "policies": [{"policy": "dedi-iter", "values": "markov", "loads": "markov"}]
+        }"#;
+        assert!(SweepSpec::from_json(&json::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
     fn unknown_base_rejected() {
         let mut s = base_spec();
         s.scenario.base = "quantum".into();
@@ -967,6 +1104,17 @@ mod tests {
                 if g.bool() {
                     sc.straggler_prob = g.f64_range(0.0, 0.2);
                     sc.straggler_slow = g.f64_range(1.0, 20.0);
+                }
+                if g.bool() {
+                    sc.delay_family = if g.bool() {
+                        FamilyKind::Weibull {
+                            shape: g.f64_range(0.4, 1.5),
+                        }
+                    } else {
+                        FamilyKind::Pareto {
+                            alpha: g.f64_range(1.5, 4.0),
+                        }
+                    };
                 }
                 let params = ["gamma_ratio", "u_scale", "l_rows", "overhead"];
                 let n_axes = g.usize_range(0, 2);

@@ -41,7 +41,8 @@ pub fn run(opts: &FigureOptions) -> Figure {
 
 fn fit_one(inst: &InstanceType, n: usize, rng: &mut Rng) -> (Vec<f64>, Json) {
     let trace = inst.sample_trace(n, rng);
-    let fit = fit_shifted_exp(&trace);
+    let fit = fit_shifted_exp(&trace)
+        .expect("synthetic EC2 traces are non-degenerate by construction");
     let ecdf = Ecdf::new(trace);
     let mut j = Json::obj();
     j.set("instance", Json::Str(inst.name.into()));

@@ -1,13 +1,19 @@
-//! The paper's stochastic delay model (§II-B).
+//! The paper's stochastic delay model (§II-B) and the pluggable
+//! delay-family layer that generalizes it.
 //!
 //! * [`params`] — per-link `(γ, a, u)` parameters, resource-scaled expected
-//!   unit delays `θ_{m,n}` (eqs. 10 and 24).
+//!   unit delays `θ_{m,n}` (eqs. 10 and 24), and the per-link
+//!   [`FamilyKind`] selector.
 //! * [`dist`] — the delay distributions themselves: eqs. (1)–(5) CDFs,
-//!   densities where needed, means, and exact samplers used by both the
-//!   Monte-Carlo engine and the coordinator's delay injection.
+//!   means, quantiles and exact samplers used by both the Monte-Carlo
+//!   engine and the coordinator's delay injection, plus the
+//!   [`DelayFamily`] abstraction (shifted-exp, Weibull/Pareto heavy
+//!   tails, bimodal throttling mixtures, trace-driven empirical).
 
 pub mod params;
 pub mod dist;
 
-pub use dist::{Exponential, LinkDelay, ShiftedExp};
-pub use params::{theta_dedicated, theta_fractional, theta_local, LinkParams};
+pub use dist::{DelayFamily, Exponential, FamilyKind, LinkDelay, ShiftedExp, TraceDist};
+pub use params::{
+    theta_dedicated, theta_fractional, theta_from_comp_mean, theta_local, LinkParams,
+};

@@ -14,6 +14,8 @@
 //! only statistic the Markov-approximation algorithms need (Remark 1):
 //! dedicated (eq. 10) and fractional (eq. 24) variants below.
 
+use super::dist::FamilyKind;
+
 /// Occasional multiplicative slowdown of the computation legs — models
 /// the heavy-tailed stragglers of real measured traces (e.g. t2.micro
 /// CPU-credit throttling on EC2) that a fitted shifted exponential cannot
@@ -29,6 +31,12 @@ pub struct Straggler {
 
 /// Delay parameters of one (master, node) link. Times are milliseconds
 /// throughout (matching §V); rates are 1/ms.
+///
+/// `(a, u)` are the *fitted* shifted-exponential parameters (eq. 2);
+/// [`LinkParams::family`] selects the delay family actually sampled —
+/// [`FamilyKind::ShiftedExp`] (the default) samples the fit itself,
+/// every other kind a mean-matched or trace-driven alternative (see
+/// [`crate::model::dist`]).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct LinkParams {
     /// Communication rate per coded row at full bandwidth (1/ms);
@@ -40,6 +48,9 @@ pub struct LinkParams {
     pub u: f64,
     /// Optional heavy-tail mixture applied when *sampling* (not planning).
     pub straggler: Option<Straggler>,
+    /// Computation-delay family selector (default: the eq.-2 shifted
+    /// exponential). Trace ids resolve against the scenario's table.
+    pub family: FamilyKind,
 }
 
 impl LinkParams {
@@ -52,6 +63,7 @@ impl LinkParams {
             a,
             u,
             straggler: None,
+            family: FamilyKind::ShiftedExp,
         }
     }
 
@@ -62,6 +74,7 @@ impl LinkParams {
             a,
             u,
             straggler: None,
+            family: FamilyKind::ShiftedExp,
         }
     }
 
@@ -69,6 +82,18 @@ impl LinkParams {
     pub fn with_straggler(mut self, prob: f64, slowdown: f64) -> Self {
         assert!((0.0..=1.0).contains(&prob) && slowdown >= 1.0);
         self.straggler = Some(Straggler { prob, slowdown });
+        self
+    }
+
+    /// Select the computation-delay family (panics on invalid
+    /// parameters; trace ids are validated by the scenario).
+    pub fn with_family(mut self, family: FamilyKind) -> Self {
+        if !matches!(family, FamilyKind::Trace { .. }) {
+            family
+                .validate(0)
+                .expect("with_family: invalid family parameters");
+        }
+        self.family = family;
         self
     }
 
@@ -104,6 +129,23 @@ pub fn theta_fractional(p: &LinkParams, k: f64, b: f64) -> f64 {
     }
     let comm = if p.is_local() { 0.0 } else { 1.0 / (b * p.gamma) };
     comm + 1.0 / (k * p.u) + p.a / k
+}
+
+/// θ from an arbitrary per-row computation-delay mean `E[X]` — the
+/// family-aware generalization of eq. (24) via Remark 1:
+/// `1/(bγ) + E[X]/k`, with the same share guards and zero-share → ∞
+/// degradation as [`theta_fractional`]. One home for the moment-based
+/// formula so the family path cannot drift from the share/comm
+/// conventions. The shifted-exp fast path deliberately does NOT route
+/// through here: [`theta_fractional`] keeps the legacy
+/// `1/(k·u) + a/k` expression bit-for-bit.
+pub fn theta_from_comp_mean(p: &LinkParams, comp_mean: f64, k: f64, b: f64) -> f64 {
+    debug_assert!((0.0..=1.0).contains(&k) && (0.0..=1.0).contains(&b));
+    if k <= 0.0 || (!p.is_local() && b <= 0.0) {
+        return f64::INFINITY;
+    }
+    let comm = if p.is_local() { 0.0 } else { 1.0 / (b * p.gamma) };
+    comm + comp_mean / k
 }
 
 #[cfg(test)]
@@ -147,6 +189,21 @@ mod tests {
         // local: b is irrelevant (b_{m,0}=1 by assumption)
         let t = theta_fractional(&p, 1.0, 0.0);
         assert!((t - p.theta()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn theta_from_mean_generalizes_eq24() {
+        let p = LinkParams::new(2.0, 0.25, 4.0);
+        // With E[X] = a + 1/u the moment formula agrees with eq. (24)
+        // up to association (the shifted-exp fast path never routes
+        // through it, so only value agreement matters here).
+        let want = theta_fractional(&p, 0.5, 0.5);
+        let got = theta_from_comp_mean(&p, p.a + 1.0 / p.u, 0.5, 0.5);
+        assert!((got - want).abs() / want < 1e-12);
+        // Same zero-share degradation and local-link conventions.
+        assert!(theta_from_comp_mean(&p, 1.0, 0.0, 0.5).is_infinite());
+        let local = LinkParams::local(0.4, 2.5);
+        assert!((theta_from_comp_mean(&local, 0.8, 1.0, 1.0) - 0.8).abs() < 1e-12);
     }
 
     #[test]

@@ -20,7 +20,6 @@ use crate::assign::{
     ValueModel,
 };
 use crate::config::Scenario;
-use crate::model::params::theta_fractional;
 
 // ---------------------------------------------------------------------------
 // Assigners
@@ -143,6 +142,11 @@ impl Assigner for FracOptimalAssigner {
 // ---------------------------------------------------------------------------
 
 /// Theorem 1 closed form on θ (the "Approx" of Figs. 2–3).
+///
+/// Distribution-free (Remark 1): consumes the family-aware moment
+/// interface [`Scenario::theta`] — the Markov bound holds for EVERY
+/// delay family with a finite mean (all constructible ones), so this
+/// allocator is exact-assumption-clean under heavy tails and traces.
 pub struct MarkovAllocator;
 
 impl LoadAllocator for MarkovAllocator {
@@ -156,13 +160,18 @@ impl LoadAllocator for MarkovAllocator {
         let thetas: Vec<f64> = nodes
             .iter()
             .zip(shares)
-            .map(|(&n, &(k, b))| theta_fractional(&s.link(m, n), k, b))
+            .map(|(&n, &(k, b))| s.theta(m, n, k, b))
             .collect();
         markov::allocate(&thetas, s.l_rows(m))
     }
 }
 
 /// Theorem 2 closed form on (a, u) — computation-dominant exact.
+///
+/// Exact only for shifted-exponential computation delays; for other
+/// delay families it allocates on the fitted `(a, u)` surrogate (the
+/// paper's own plan-with-the-fit stance — DESIGN.md §Delay-model
+/// layer documents which bounds hold where).
 pub struct ExactAllocator;
 
 impl LoadAllocator for ExactAllocator {
@@ -189,6 +198,12 @@ impl LoadAllocator for ExactAllocator {
 }
 
 /// Theorem 1 start + Algorithm 3 SCA enhancement.
+///
+/// The SCA subproblems need the closed-form hypoexponential CDF
+/// (eq. 3), so the enhancement runs on the shifted-exponential fit; for
+/// other delay families the refined loads are a surrogate enhancement
+/// of the (family-aware) Markov start — conservative under mean-matched
+/// heavy tails, documented in DESIGN.md §Delay-model layer.
 pub struct ScaAllocator;
 
 impl LoadAllocator for ScaAllocator {
@@ -228,7 +243,7 @@ impl LoadAllocator for UncodedSplitAllocator {
         let share = s.l_rows(m) / nodes.len() as f64;
         let t_star = nodes
             .iter()
-            .map(|&n| share * EffLink::dedicated(&s.link(m, n)).theta())
+            .map(|&n| share * s.theta(m, n, 1.0, 1.0))
             .fold(0.0, f64::max);
         Allocation {
             loads: vec![share; nodes.len()],
@@ -261,6 +276,37 @@ mod tests {
                 }
                 Assignment::Fractional(_) => panic!("expected dedicated"),
             }
+        }
+    }
+
+    #[test]
+    fn markov_allocator_consumes_family_moments() {
+        // Identical scenarios except the workers' delay family: a trace
+        // with mean ≫ the fitted (a, u) mean must pull the Markov
+        // allocation toward the (still shifted-exp) local node and
+        // raise the predicted t* — the moment interface at work.
+        use crate::config::Transform;
+        use crate::model::dist::{FamilyKind, TraceDist};
+        let base = Scenario::small_scale(9, 2.0, CommModel::Stochastic);
+        let mut slow = base.clone();
+        let id = slow.add_trace(TraceDist::from_samples("slow", vec![4.9, 5.0, 5.1]).unwrap());
+        let slow = slow.transformed(&[Transform::Family(FamilyKind::Trace { id })]);
+        let nodes: Vec<usize> = (0..=base.n_workers()).collect();
+        let shares = vec![(1.0, 1.0); nodes.len()];
+        let fast = MarkovAllocator.allocate(&base, 0, &nodes, &shares);
+        let slowa = MarkovAllocator.allocate(&slow, 0, &nodes, &shares);
+        assert!(slowa.t_star > fast.t_star, "{} vs {}", slowa.t_star, fast.t_star);
+        let rel = |a: &Allocation| a.loads[0] / a.total_load();
+        assert!(rel(&slowa) > rel(&fast), "local share should grow");
+        // Mean-matched parametric families leave the allocation intact
+        // (same first moment ⇒ same Theorem-1 closed form).
+        let wb = base
+            .clone()
+            .transformed(&[Transform::Family(FamilyKind::Weibull { shape: 0.6 })]);
+        let wba = MarkovAllocator.allocate(&wb, 0, &nodes, &shares);
+        assert!((wba.t_star - fast.t_star).abs() / fast.t_star < 1e-9);
+        for (x, y) in wba.loads.iter().zip(&fast.loads) {
+            assert!((x - y).abs() / y.max(1e-12) < 1e-9);
         }
     }
 

@@ -5,13 +5,17 @@
 //! structure-of-arrays rework of the original AoS kernel (preserved
 //! verbatim as [`oracle`] for parity tests and bench baselines):
 //!
-//! * **SoA compiled plans** — [`Compiled`] stores per-master flat columns
-//!   (`comm_rate[]`, `shift[]`, `comp_rate[]`, `load[]`, straggler
-//!   mixture) instead of `Vec<(LinkDelay, f64)>`, and the trial loop
-//!   samples into reusable split key/payload buffers (`times: Vec<f64>`,
-//!   `loads: Vec<f64>`) so the completion scan does branch-predictable
-//!   plain-`f64` compares instead of tuple moves through a `partial_cmp`
-//!   closure.
+//! * **SoA compiled plans, family-tagged** — [`Compiled`] stores
+//!   per-master flat columns (`comm_rate[]`, `shift[]`, `comp_rate[]`,
+//!   `load[]`, straggler mixture) instead of `Vec<(LinkDelay, f64)>`,
+//!   and the trial loop samples into reusable split key/payload buffers
+//!   (`times: Vec<f64>`, `loads: Vec<f64>`) so the completion scan does
+//!   branch-predictable plain-`f64` compares instead of tuple moves
+//!   through a `partial_cmp` closure. Each link also carries a delay-
+//!   family tag ([`crate::model::dist::DelayFamily`]): shifted-exp
+//!   links keep the exact flat-column layout and arithmetic (pinned
+//!   bit-for-bit against [`oracle`]), other families sample through
+//!   their own scalar/vectorized fill paths.
 //! * **Weighted-selection completion scan** — [`completion_scan`]
 //!   replaces the full per-trial `sort_unstable` with a quickselect-style
 //!   3-way partition that only ever sorts (and prefix-sums) the elements
@@ -40,7 +44,7 @@ use std::sync::Arc;
 
 use crate::config::Scenario;
 use crate::exec::pool;
-use crate::model::dist::LinkDelay;
+use crate::model::dist::DelayFamily;
 use crate::plan::Plan;
 use crate::util::rng::Rng;
 use crate::util::stats::{Ecdf, Summary};
@@ -250,10 +254,18 @@ fn insertion_sort_pair(times: &mut [f64], loads: &mut [f64], lo: usize, hi: usiz
 // SoA compiled plans
 // ----------------------------------------------------------------------
 
-/// Per-master flat sampling columns. `strag_prob < 0` encodes "no
-/// straggler mixture attached" — the distinction matters beyond the
-/// probability value because an attached mixture consumes one uniform
-/// draw per sample even when it does not fire.
+/// Per-master flat sampling columns, family-tagged. `strag_prob < 0`
+/// encodes "no straggler mixture attached" — the distinction matters
+/// beyond the probability value because an attached mixture consumes
+/// one uniform draw per sample even when it does not fire.
+///
+/// `fams[i] = None` marks the shifted-exponential fast path: the link
+/// samples from the flat `shift[]`/`comp_rate[]` columns with the exact
+/// pre-family arithmetic (pinned by the column-layout and oracle parity
+/// tests). `Some(fam)` holds any other family, compiled to block scale
+/// (`l/k`), with its own scalar and vectorized fill paths — `shift[i]`
+/// and `comp_rate[i]` carry NaN poison for those links and are never
+/// read.
 struct MasterSoA {
     comm_rate: Vec<f64>, // ∞ = local link (no comm leg, no comm draw)
     shift: Vec<f64>,
@@ -261,6 +273,7 @@ struct MasterSoA {
     load: Vec<f64>,
     strag_prob: Vec<f64>,
     strag_slow: Vec<f64>,
+    fams: Vec<Option<DelayFamily>>,
     l_rows: f64,
     uncoded: bool,
 }
@@ -268,7 +281,8 @@ struct MasterSoA {
 impl MasterSoA {
     /// One delay draw for link `i` — the exact RNG consumption of
     /// `LinkDelay::sample`: comm leg (non-local only), straggler uniform
-    /// (attached mixtures only), computation leg.
+    /// (attached mixtures only), computation draw (family-specific; the
+    /// shifted-exp arm is the legacy `shift + Exp(rate)`).
     #[inline]
     fn draw(&self, rng: &mut Rng, i: usize) -> f64 {
         let comm = if self.comm_rate[i].is_finite() {
@@ -285,7 +299,11 @@ impl MasterSoA {
         } else {
             1.0
         };
-        comm + factor * (self.shift[i] + rng.exp(self.comp_rate[i]))
+        let comp = match &self.fams[i] {
+            None => self.shift[i] + rng.exp(self.comp_rate[i]),
+            Some(fam) => fam.sample(rng),
+        };
+        comm + factor * comp
     }
 
     /// Trial-major completion sample (bit-compatible with the legacy
@@ -321,6 +339,7 @@ impl MasterSoA {
         cols: &mut [f64],
         comm_buf: &mut [f64],
         u_buf: &mut [f64],
+        fam_buf: &mut [f64],
         times: &mut [f64],
         loads: &mut [f64],
         out: &mut [f64],
@@ -332,7 +351,7 @@ impl MasterSoA {
             out.fill(0.0);
             let col = &mut cols[..nb];
             for i in 0..n {
-                self.fill_link_column(rng, i, col, comm_buf, u_buf);
+                self.fill_link_column(rng, i, col, comm_buf, u_buf, fam_buf);
                 for (o, &t) in out.iter_mut().zip(col.iter()) {
                     *o = f64::max(*o, t);
                 }
@@ -340,7 +359,14 @@ impl MasterSoA {
             return;
         }
         for i in 0..n {
-            self.fill_link_column(rng, i, &mut cols[i * nb..(i + 1) * nb], comm_buf, u_buf);
+            self.fill_link_column(
+                rng,
+                i,
+                &mut cols[i * nb..(i + 1) * nb],
+                comm_buf,
+                u_buf,
+                fam_buf,
+            );
         }
         for (t, o) in out.iter_mut().enumerate() {
             for i in 0..n {
@@ -353,8 +379,13 @@ impl MasterSoA {
 
     /// Fill `col` with `col.len()` delay draws of link `i`. Leg order per
     /// column mirrors the per-trial leg order (comm, straggler uniform,
-    /// computation), with the local / straggler branches hoisted out of
-    /// the element loops.
+    /// computation), with the local / straggler / family branches
+    /// hoisted out of the element loops. The shifted-exp arm's combine
+    /// arithmetic is value-identical to the pre-family code (same adds
+    /// in the same order); other families fill through their own
+    /// vectorized [`DelayFamily::fill_block`] path (`fam_buf` is the
+    /// bimodal arm's mixture-uniform scratch).
+    #[allow(clippy::too_many_arguments)]
     fn fill_link_column(
         &self,
         rng: &mut Rng,
@@ -362,6 +393,7 @@ impl MasterSoA {
         col: &mut [f64],
         comm_buf: &mut [f64],
         u_buf: &mut [f64],
+        fam_buf: &mut [f64],
     ) {
         let nb = col.len();
         let local = !self.comm_rate[i].is_finite();
@@ -372,31 +404,35 @@ impl MasterSoA {
         if strag {
             rng.fill_f64(&mut u_buf[..nb]);
         }
-        rng.fill_exp(self.comp_rate[i], col);
-        let shift = self.shift[i];
-        match (local, strag) {
-            (true, false) => {
+        match &self.fams[i] {
+            None => {
+                rng.fill_exp(self.comp_rate[i], col);
+                let shift = self.shift[i];
                 for c in col.iter_mut() {
-                    *c += shift;
+                    *c = shift + *c;
                 }
             }
+            Some(fam) => fam.fill_block(rng, col, &mut fam_buf[..nb]),
+        }
+        match (local, strag) {
+            (true, false) => {}
             (false, false) => {
                 for (c, &comm) in col.iter_mut().zip(comm_buf.iter()) {
-                    *c = comm + (shift + *c);
+                    *c = comm + *c;
                 }
             }
             (true, true) => {
                 let (p, s) = (self.strag_prob[i], self.strag_slow[i]);
                 for (c, &u) in col.iter_mut().zip(u_buf.iter()) {
                     let f = if u < p { s } else { 1.0 };
-                    *c = f * (shift + *c);
+                    *c = f * *c;
                 }
             }
             (false, true) => {
                 let (p, s) = (self.strag_prob[i], self.strag_slow[i]);
                 for ((c, &comm), &u) in col.iter_mut().zip(comm_buf.iter()).zip(u_buf.iter()) {
                     let f = if u < p { s } else { 1.0 };
-                    *c = comm + f * (shift + *c);
+                    *c = comm + f * *c;
                 }
             }
         }
@@ -426,17 +462,32 @@ impl Compiled {
                     load: Vec::with_capacity(n),
                     strag_prob: Vec::with_capacity(n),
                     strag_slow: Vec::with_capacity(n),
+                    fams: Vec::with_capacity(n),
                     l_rows: mp.l_rows,
                     uncoded: plan.uncoded,
                 };
                 for e in &mp.entries {
-                    let p = s.link(m, e.node);
-                    // One source of truth for the eq. (3) parameterization:
-                    // compile through LinkDelay, then flatten.
-                    let d = LinkDelay::new(&p, e.load, e.k, e.b);
+                    // One source of truth for the parameterization:
+                    // compile through the scenario's family-aware
+                    // LinkDelay (eq. 3 for shifted-exp links — the exact
+                    // legacy arithmetic — or a block-scaled family),
+                    // then flatten.
+                    let d = s.link_delay(m, e.node, e.load, e.k, e.b);
                     soa.comm_rate.push(d.comm_rate());
-                    soa.shift.push(d.shift());
-                    soa.comp_rate.push(d.comp_rate());
+                    match d.comp() {
+                        DelayFamily::ShiftedExp { shift, rate } => {
+                            soa.shift.push(*shift);
+                            soa.comp_rate.push(*rate);
+                            soa.fams.push(None);
+                        }
+                        fam => {
+                            // Poison the unused flat columns: the family
+                            // arm never reads them.
+                            soa.shift.push(f64::NAN);
+                            soa.comp_rate.push(f64::NAN);
+                            soa.fams.push(Some(fam.clone()));
+                        }
+                    }
                     soa.load.push(e.load);
                     match d.straggler() {
                         Some(st) => {
@@ -613,6 +664,7 @@ fn run_shard_blocked(
     let mut cols = vec![0.0f64; c.max_links.max(1) * b];
     let mut comm_buf = vec![0.0f64; b];
     let mut u_buf = vec![0.0f64; b];
+    let mut fam_buf = vec![0.0f64; b];
     let mut times = vec![0.0f64; c.max_links];
     let mut loads = vec![0.0f64; c.max_links];
     let mut done = 0usize;
@@ -625,6 +677,7 @@ fn run_shard_blocked(
                 &mut cols,
                 &mut comm_buf,
                 &mut u_buf,
+                &mut fam_buf,
                 &mut times,
                 &mut loads,
                 &mut vals[m * b..m * b + nb],
@@ -733,6 +786,12 @@ pub fn run_ordered(s: &Scenario, plan: &Plan, opts: &McOptions, order: SampleOrd
 /// in trial-major order must reproduce it exactly) and the
 /// `benches/engine.rs` old-vs-new trajectory rows. Not for production
 /// paths — it re-sorts every trial and spawns threads per run.
+///
+/// The sampling/merging loops are verbatim legacy; the compile step now
+/// routes through the family-aware [`Scenario::link_delay`] (identical
+/// `LinkDelay` for shifted-exp links), so the oracle doubles as the
+/// parity reference for every delay family — `LinkDelay::sample` and
+/// the SoA kernel consume the RNG identically per link.
 pub mod oracle {
     use super::{
         effective_streams, merge_shards, shard_sizes, McOptions, McResults, ShardOut,
@@ -790,8 +849,7 @@ pub mod oracle {
                         .entries
                         .iter()
                         .map(|e| {
-                            let p = s.link(m, e.node);
-                            (LinkDelay::new(&p, e.load, e.k, e.b), e.load)
+                            (s.link_delay(m, e.node, e.load, e.k, e.b), e.load)
                         })
                         .collect(),
                     l_rows: mp.l_rows,
@@ -1130,6 +1188,128 @@ mod tests {
             let v2 = run(&s, &p, &o);
             let legacy = oracle::run(&s, &p, &o);
             assert_bitwise_equal(&v2, &legacy, ctx);
+        }
+    }
+
+    fn family_scenarios() -> Vec<(&'static str, Scenario)> {
+        use crate::config::Transform;
+        use crate::model::dist::{FamilyKind, TraceDist};
+        let base = |seed| Scenario::small_scale(seed, 2.0, CommModel::Stochastic);
+        let mut trace_s = base(44);
+        let mut rng = Rng::new(909);
+        let samples: Vec<f64> = (0..300)
+            .map(|_| 0.2 + rng.exp(4.0) * if rng.f64() < 0.04 { 15.0 } else { 1.0 })
+            .collect();
+        let id = trace_s.add_trace(TraceDist::from_samples("syn", samples).unwrap());
+        let trace_s = trace_s.transformed(&[Transform::Family(FamilyKind::Trace { id })]);
+        vec![
+            (
+                "weibull",
+                base(41).transformed(&[Transform::Family(FamilyKind::Weibull {
+                    shape: 0.6,
+                })]),
+            ),
+            (
+                "pareto",
+                base(42).transformed(&[Transform::Family(FamilyKind::Pareto {
+                    alpha: 2.5,
+                })]),
+            ),
+            (
+                "bimodal",
+                base(43).transformed(&[Transform::Family(FamilyKind::Bimodal {
+                    prob: 0.1,
+                    slow: 10.0,
+                })]),
+            ),
+            ("trace", trace_s),
+        ]
+    }
+
+    #[test]
+    fn family_kernels_match_oracle_bit_for_bit() {
+        // Every non-shifted family flows through the same compile entry
+        // (`Scenario::link_delay`) in both kernels, and the SoA draw
+        // consumes the RNG exactly like `LinkDelay::sample` — so the
+        // oracle stays the parity reference family-generically.
+        for (ctx, s) in family_scenarios() {
+            let p = build(&s, &spec(Policy::DediIter, LoadMethod::Markov));
+            let o = McOptions {
+                trials: 2_000,
+                seed: 777,
+                keep_samples: true,
+                threads: 2,
+            };
+            let v2 = run(&s, &p, &o);
+            let legacy = oracle::run(&s, &p, &o);
+            assert_bitwise_equal(&v2, &legacy, ctx);
+            assert!(v2.system.mean().is_finite(), "{ctx}");
+        }
+    }
+
+    #[test]
+    fn shifted_exp_compiles_to_legacy_column_layout() {
+        // The acceptance pin of the family refactor: a pure shifted-exp
+        // scenario must compile to the exact pre-refactor SoA columns —
+        // all links on the flat-column fast path (no family tags), with
+        // the eq.-(3) values LinkDelay::new produces.
+        use crate::model::dist::LinkDelay;
+        for s in [
+            Scenario::small_scale(31, 2.0, CommModel::Stochastic),
+            Scenario::ec2(6, 2, true),
+        ] {
+            let p = build(&s, &spec(Policy::DediIter, LoadMethod::Markov));
+            let c = Compiled::new(&s, &p);
+            for (m, (soa, mp)) in c.sims.iter().zip(&p.masters).enumerate() {
+                assert!(
+                    soa.fams.iter().all(Option::is_none),
+                    "master {m}: shifted-exp link left the fast path"
+                );
+                for (i, e) in mp.entries.iter().enumerate() {
+                    let d = LinkDelay::new(&s.link(m, e.node), e.load, e.k, e.b);
+                    assert_eq!(soa.comm_rate[i], d.comm_rate(), "m{m} link {i} comm");
+                    assert_eq!(soa.shift[i], d.shift(), "m{m} link {i} shift");
+                    assert_eq!(soa.comp_rate[i], d.comp_rate(), "m{m} link {i} rate");
+                    assert_eq!(soa.load[i], e.load, "m{m} link {i} load");
+                    match d.straggler() {
+                        Some(st) => {
+                            assert_eq!(soa.strag_prob[i], st.prob);
+                            assert_eq!(soa.strag_slow[i], st.slowdown);
+                        }
+                        None => assert!(soa.strag_prob[i] < 0.0),
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn family_blocked_statistically_equivalent_to_trial_major() {
+        // The blocked fill paths of the new families obey the same
+        // different-bits/same-distribution contract as the shifted-exp
+        // kernel (tolerances sized as in the shifted-exp test below).
+        for (ctx, s) in family_scenarios() {
+            let p = build(&s, &spec(Policy::DediIter, LoadMethod::Markov));
+            let o = McOptions {
+                trials: 40_000,
+                seed: 31337,
+                keep_samples: true,
+                threads: 2,
+            };
+            let tm = run_ordered(&s, &p, &o, SampleOrder::TrialMajor);
+            let bl = run_ordered(&s, &p, &o, SampleOrder::Blocked);
+            let (m1, m2) = (tm.system.mean(), bl.system.mean());
+            let sem = (tm.system.sem().powi(2) + bl.system.sem().powi(2)).sqrt();
+            assert!(
+                (m1 - m2).abs() < 6.0 * sem,
+                "{ctx}: mean {m1} vs {m2} (6σ = {})",
+                6.0 * sem
+            );
+            let d = tm
+                .system_ecdf()
+                .unwrap()
+                .sup_distance(&bl.system_ecdf().unwrap());
+            assert!(d < 0.025, "{ctx}: ECDF sup distance {d}");
         }
     }
 

@@ -18,6 +18,7 @@
 
 use super::engine::completion_scan;
 use crate::config::Scenario;
+use crate::model::dist::{DelayFamily, FamilyKind};
 use crate::plan::Plan;
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
@@ -48,10 +49,13 @@ impl Default for MultiMsgOptions {
 /// ([`crate::sim::engine`]): per-link flat columns plus a precomputed
 /// per-event load template (chunk loads are trial-invariant, so each
 /// trial just memcpys the template into the scan's payload buffer).
+/// Chunk computation delays sample through the per-link
+/// [`DelayFamily`] (compiled at chunk scale `lc/k`); shifted-exp links
+/// compile to the exact pre-family `a·lc/k` / `k·u/lc` parameters and
+/// draw in the same RNG order, so their values are unchanged.
 struct MasterSim {
     comm_rate: Vec<f64>, // ∞ ⇒ no comm leg
-    chunk_shift: Vec<f64>,
-    chunk_rate: Vec<f64>,
+    chunk_comp: Vec<DelayFamily>,
     chunks: usize,
     /// Event loads in link-major emission order (`links × chunks`).
     load_template: Vec<f64>,
@@ -67,8 +71,7 @@ fn compile(s: &Scenario, plan: &Plan, chunks: usize) -> Vec<MasterSim> {
             let n = mp.entries.len();
             let mut sim = MasterSim {
                 comm_rate: Vec::with_capacity(n),
-                chunk_shift: Vec::with_capacity(n),
-                chunk_rate: Vec::with_capacity(n),
+                chunk_comp: Vec::with_capacity(n),
                 chunks,
                 load_template: Vec::with_capacity(n * chunks),
                 l_rows: mp.l_rows,
@@ -81,8 +84,14 @@ fn compile(s: &Scenario, plan: &Plan, chunks: usize) -> Vec<MasterSim> {
                 } else {
                     e.b * p.gamma / e.load
                 });
-                sim.chunk_shift.push(p.a * lc / e.k);
-                sim.chunk_rate.push(e.k * p.u / lc);
+                sim.chunk_comp.push(match p.family {
+                    // Legacy chunk parameterization, expression-exact.
+                    FamilyKind::ShiftedExp => DelayFamily::ShiftedExp {
+                        shift: p.a * lc / e.k,
+                        rate: e.k * p.u / lc,
+                    },
+                    kind => kind.resolve(p.a, p.u, &s.traces).scaled(lc / e.k),
+                });
                 for _ in 0..chunks {
                     sim.load_template.push(lc);
                 }
@@ -105,16 +114,11 @@ impl MasterSim {
         loads: &mut Vec<f64>,
     ) -> f64 {
         times.clear();
-        for ((&cr, &shift), &rate) in self
-            .comm_rate
-            .iter()
-            .zip(&self.chunk_shift)
-            .zip(&self.chunk_rate)
-        {
+        for (&cr, comp) in self.comm_rate.iter().zip(&self.chunk_comp) {
             let comm = if cr.is_infinite() { 0.0 } else { rng.exp(cr) };
             let mut t = comm;
             for j in 1..=self.chunks {
-                t += shift + rng.exp(rate);
+                t += comp.sample(rng);
                 times.push(t + j as f64 * overhead);
             }
         }
@@ -223,6 +227,35 @@ mod tests {
         let c1 = run(&s, &p, &opts(1, heavy)).mean();
         let c16 = run(&s, &p, &opts(16, heavy)).mean();
         assert!(c16 > c1, "chunking should lose under heavy overhead");
+    }
+
+    #[test]
+    fn family_links_sample_through_chunk_interface() {
+        // A heavy-tail scenario flows through the same chunk engine;
+        // free chunking still helps (partial results from stragglers),
+        // and more so than under the light tail.
+        use crate::config::Transform;
+        use crate::model::dist::FamilyKind;
+        let s = Scenario::small_scale(1, 2.0, CommModel::Stochastic)
+            .transformed(&[Transform::Family(FamilyKind::Pareto { alpha: 2.2 })]);
+        let p = build(
+            &s,
+            &PlanSpec {
+                policy: Policy::DediIter,
+                values: ValueModel::Markov,
+                loads: LoadMethod::Markov,
+            },
+        );
+        let opts = |c| MultiMsgOptions {
+            chunks: c,
+            overhead_ms: 0.0,
+            trials: 20_000,
+            seed: 11,
+        };
+        let c1 = run(&s, &p, &opts(1)).mean();
+        let c8 = run(&s, &p, &opts(8)).mean();
+        assert!(c1.is_finite() && c8.is_finite());
+        assert!(c8 < c1, "free chunking should help: c8 {c8} ≥ c1 {c1}");
     }
 
     #[test]

@@ -6,11 +6,47 @@
 //! the standard unbiasing `â = min − (mean − min)/(n−1)` (since
 //! `E[mean − min] = (n−1)/(n·u)`), which matters only for small traces but
 //! keeps the estimator consistent.
+//!
+//! Fitting is fallible — short or constant traces have no
+//! shifted-exponential MLE — and sweep-driven pipelines fit thousands of
+//! traces unattended, so [`fit_shifted_exp`] returns a typed
+//! [`FitError`] instead of panicking.
+
+use std::fmt;
 
 use crate::model::dist::ShiftedExp;
 
+/// Why a trace could not be fitted. Typed (not a string) so sweep
+/// pipelines can branch on the cause — e.g. skip degenerate cells but
+/// fail loudly on non-finite data.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FitError {
+    /// Fewer than two samples: the MLE needs min AND mean information.
+    TooFewSamples { n: usize },
+    /// All samples equal: `û = 1/(mean − â)` has no finite solution.
+    DegenerateTrace { value: f64 },
+    /// A sample was NaN/∞ — upstream measurement corruption.
+    NonFinite,
+}
+
+impl fmt::Display for FitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FitError::TooFewSamples { n } => {
+                write!(f, "need ≥2 samples to fit a shifted exponential, got {n}")
+            }
+            FitError::DegenerateTrace { value } => {
+                write!(f, "degenerate trace: all samples equal ({value})")
+            }
+            FitError::NonFinite => write!(f, "trace contains non-finite samples"),
+        }
+    }
+}
+
+impl std::error::Error for FitError {}
+
 /// A fitted shifted exponential with fit diagnostics.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct FittedShiftedExp {
     pub a: f64,
     pub u: f64,
@@ -25,17 +61,22 @@ impl FittedShiftedExp {
     }
 }
 
-/// Fit a shifted exponential to a delay trace. Panics on fewer than two
-/// samples or a degenerate (constant) trace.
-pub fn fit_shifted_exp(samples: &[f64]) -> FittedShiftedExp {
-    assert!(samples.len() >= 2, "need ≥2 samples to fit");
+/// Fit a shifted exponential to a delay trace. Errors (never panics) on
+/// traces with fewer than two samples, non-finite samples, or all
+/// samples equal.
+pub fn fit_shifted_exp(samples: &[f64]) -> Result<FittedShiftedExp, FitError> {
+    if samples.len() < 2 {
+        return Err(FitError::TooFewSamples { n: samples.len() });
+    }
+    if samples.iter().any(|x| !x.is_finite()) {
+        return Err(FitError::NonFinite);
+    }
     let n = samples.len() as f64;
     let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
     let mean = samples.iter().sum::<f64>() / n;
-    assert!(
-        mean > min,
-        "degenerate trace: all samples equal ({min})"
-    );
+    if mean <= min {
+        return Err(FitError::DegenerateTrace { value: min });
+    }
     // Bias-corrected shift and the matching rate.
     let a = min - (mean - min) / (n - 1.0);
     let u = 1.0 / (mean - a);
@@ -52,12 +93,12 @@ pub fn fit_shifted_exp(samples: &[f64]) -> FittedShiftedExp {
         ks = ks.max((f - lo).abs()).max((hi - f).abs());
     }
 
-    FittedShiftedExp {
+    Ok(FittedShiftedExp {
         a,
         u,
         ks,
         n: samples.len(),
-    }
+    })
 }
 
 #[cfg(test)]
@@ -70,7 +111,7 @@ mod tests {
     fn recovers_t2_micro_parameters() {
         let mut rng = Rng::new(42);
         let trace = T2_MICRO.sample_trace(200_000, &mut rng);
-        let fit = fit_shifted_exp(&trace);
+        let fit = fit_shifted_exp(&trace).unwrap();
         assert!(
             (fit.a - T2_MICRO.a).abs() / T2_MICRO.a < 0.01,
             "a: {} vs {}",
@@ -91,7 +132,7 @@ mod tests {
     fn recovers_c5_large_parameters() {
         let mut rng = Rng::new(43);
         let trace = C5_LARGE.sample_trace(200_000, &mut rng);
-        let fit = fit_shifted_exp(&trace);
+        let fit = fit_shifted_exp(&trace).unwrap();
         assert!((fit.a - C5_LARGE.a).abs() / C5_LARGE.a < 0.01);
         assert!((fit.u - C5_LARGE.u).abs() / C5_LARGE.u < 0.02);
     }
@@ -102,14 +143,47 @@ mod tests {
         // relative to the correct-model case.
         let mut rng = Rng::new(44);
         let unif: Vec<f64> = (0..50_000).map(|_| rng.f64()).collect();
-        let fit = fit_shifted_exp(&unif);
+        let fit = fit_shifted_exp(&unif).unwrap();
         assert!(fit.ks > 0.05, "ks={} unexpectedly small", fit.ks);
     }
 
     #[test]
-    #[should_panic(expected = "need ≥2")]
-    fn rejects_tiny_traces() {
-        fit_shifted_exp(&[1.0]);
+    fn typed_errors_instead_of_panics() {
+        assert_eq!(
+            fit_shifted_exp(&[1.0]),
+            Err(FitError::TooFewSamples { n: 1 })
+        );
+        assert_eq!(fit_shifted_exp(&[]), Err(FitError::TooFewSamples { n: 0 }));
+        assert_eq!(
+            fit_shifted_exp(&[2.5, 2.5, 2.5]),
+            Err(FitError::DegenerateTrace { value: 2.5 })
+        );
+        assert_eq!(
+            fit_shifted_exp(&[1.0, f64::NAN, 2.0]),
+            Err(FitError::NonFinite)
+        );
+        assert_eq!(
+            fit_shifted_exp(&[1.0, f64::INFINITY]),
+            Err(FitError::NonFinite)
+        );
+        // Display strings name the cause for humans.
+        let msg = FitError::DegenerateTrace { value: 2.5 }.to_string();
+        assert!(msg.contains("degenerate"), "{msg}");
+        // And the error type flows through anyhow (`?` in callers).
+        fn through_anyhow(xs: &[f64]) -> anyhow::Result<f64> {
+            Ok(fit_shifted_exp(xs)?.a)
+        }
+        assert!(through_anyhow(&[0.5]).is_err());
+        assert!(through_anyhow(&[0.5, 1.5, 2.0]).is_ok());
+    }
+
+    #[test]
+    fn fitted_errors_are_partialeq_not_strings() {
+        // Sweep pipelines branch on the variant, not the message.
+        match fit_shifted_exp(&[3.0]) {
+            Err(FitError::TooFewSamples { n }) => assert_eq!(n, 1),
+            other => panic!("unexpected: {other:?}"),
+        }
     }
 
     #[test]
@@ -121,7 +195,7 @@ mod tests {
         let reps = 3000;
         for _ in 0..reps {
             let trace = T2_MICRO.sample_trace(20, &mut rng);
-            sum_a += fit_shifted_exp(&trace).a;
+            sum_a += fit_shifted_exp(&trace).unwrap().a;
         }
         let avg_a = sum_a / reps as f64;
         assert!(

@@ -4,5 +4,43 @@
 pub mod ec2;
 pub mod fit;
 
+use crate::model::dist::TraceDist;
+
 pub use ec2::{InstanceType, C5_LARGE, T2_MICRO};
-pub use fit::{fit_shifted_exp, FittedShiftedExp};
+pub use fit::{fit_shifted_exp, FitError, FittedShiftedExp};
+
+/// Package a measured per-row delay trace for the delay-model layer:
+/// the raw empirical distribution (register with
+/// [`crate::config::Scenario::add_trace`] and select with
+/// [`crate::model::dist::FamilyKind::Trace`] to sample it verbatim via
+/// ECDF inverse transform) plus its shifted-exponential fit (the
+/// `(a, u)` surrogate the closed-form allocators keep planning with).
+/// One call turns a measurement campaign into everything a scenario
+/// needs.
+pub fn package_trace(
+    name: &str,
+    samples: Vec<f64>,
+) -> anyhow::Result<(TraceDist, FittedShiftedExp)> {
+    let fitted = fit_shifted_exp(&samples)?;
+    let dist = TraceDist::from_samples(name, samples)?;
+    Ok((dist, fitted))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn package_trace_yields_sampler_and_surrogate() {
+        let mut rng = Rng::new(21);
+        let samples = T2_MICRO.sample_trace(50_000, &mut rng);
+        let (dist, fitted) = package_trace("t2", samples).unwrap();
+        // The empirical mean and the fit's mean agree (the shifted-exp
+        // MLE preserves the sample mean exactly: a + 1/u = mean).
+        let fit_mean = fitted.a + 1.0 / fitted.u;
+        assert!((dist.mean() - fit_mean).abs() / fit_mean < 1e-9);
+        // Degenerate traces error through the typed path.
+        assert!(package_trace("bad", vec![1.0, 1.0]).is_err());
+    }
+}
