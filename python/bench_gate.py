@@ -24,11 +24,15 @@ Usage: python3 bench_gate.py [path/to/BENCH_engine.json]
 """
 
 import json
+import os
 import sys
 
-# One-sided jitter allowance on the HARD compare: CI runners schedule
-# noisily even back-to-back; a true regression shows up far below 1.0.
-JITTER = 0.95
+# One-sided jitter allowance on the HARD compare — a 5% noise band, NOT
+# an exact v2 >= legacy comparison: CI runners schedule noisily even
+# back-to-back, so requiring ratio >= 1.0 was flake-prone on shared
+# runners; a true regression shows up far below 1.0. Override with
+# BENCH_GATE_JITTER for stricter/looser local runs.
+JITTER = float(os.environ.get("BENCH_GATE_JITTER", "0.95"))
 
 # Tags whose v2-vs-legacy ratio gates the build. Everything else is
 # reported informationally (new keys must never break the gate).

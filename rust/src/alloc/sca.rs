@@ -85,13 +85,25 @@ impl Decomp {
                 c_minus: 0.0,
                 shift: link.shift,
             },
-            Some(mut g) => {
-                // Equal-rate case (eq. 4) is measure-zero; perturb so the
-                // two-exponential decomposition applies (documented).
-                if (g - link.comp).abs() < 1e-9 * g.max(link.comp) {
-                    g *= 1.0 + 1e-6;
-                }
-                let (lo, hi) = if g < link.comp {
+            Some(g) => {
+                // Near-equal rates (eq. 4's Erlang-2 limit) make the
+                // two-exponential decomposition ill-conditioned: with
+                // hi − lo = ε·r the mixture weights blow up as
+                // c± ≈ r/(hi − lo), and c⁺ψ − c⁻ψ (plus the linearized
+                // subproblem constants, which multiply ∇ψ by c⁻)
+                // cancels catastrophically. The old code perturbed one
+                // rate by 1e-6, yielding c± ≈ 1e6 AND a first-order
+                // O(ε) model error. Instead split SYMMETRICALLY around
+                // the mean rate, r(1 ± δ): the odd error terms cancel,
+                // so the mixture reproduces the Erlang-2 survival to
+                // O(δ²) while the weights stay at c± ≈ 1/(2δ) ≈ 5e3 —
+                // both the conditioning and the accuracy improve.
+                const EQUAL_RATE_DELTA: f64 = 1e-4;
+                let rel = (g - link.comp).abs() / g.max(link.comp);
+                let (lo, hi) = if rel < 2.0 * EQUAL_RATE_DELTA {
+                    let r = 0.5 * (g + link.comp);
+                    (r * (1.0 - EQUAL_RATE_DELTA), r * (1.0 + EQUAL_RATE_DELTA))
+                } else if g < link.comp {
                     (g, link.comp)
                 } else {
                     (link.comp, g)
@@ -230,6 +242,18 @@ pub fn enhance(
     start: &Allocation,
     opts: &ScaOptions,
 ) -> Allocation {
+    enhance_traced(links, l_rows, start, opts).0
+}
+
+/// [`enhance`] plus the number of subproblem solves performed — the cost
+/// metric warm-started re-planning (the serving layer seeds SCA with the
+/// previous epoch's allocation) is trying to minimize.
+pub fn enhance_traced(
+    links: &[EffLink],
+    l_rows: f64,
+    start: &Allocation,
+    opts: &ScaOptions,
+) -> (Allocation, usize) {
     assert_eq!(links.len(), start.loads.len());
     // Filter zero-load nodes (zero-share in fractional plans): they stay
     // at zero load.
@@ -237,7 +261,7 @@ pub fn enhance(
         .filter(|&i| start.loads[i] > 0.0 && links[i].theta().is_finite())
         .collect();
     if active.is_empty() {
-        return start.clone();
+        return (start.clone(), 0);
     }
     let decomps: Vec<Decomp> = active
         .iter()
@@ -251,8 +275,10 @@ pub fn enhance(
     };
     let mut gamma = 1.0f64;
     let mut prev_w_t = f64::INFINITY;
+    let mut iters = 0usize;
     for _ in 0..opts.max_iters {
         let w = solve_subproblem(&decomps, l_rows, &z, cap);
+        iters += 1;
         // Fixed-point stop: once successive subproblem solutions agree,
         // the stationary point is reached — adopt w and stop.
         if (w.t - prev_w_t).abs() <= opts.tol * w.t.max(1e-300) {
@@ -293,10 +319,13 @@ pub fn enhance(
     for (slot, &i) in active.iter().enumerate() {
         loads[i] = z.loads[slot];
     }
-    Allocation {
-        loads,
-        t_star: t_final.min(z.t),
-    }
+    (
+        Allocation {
+            loads,
+            t_star: t_final.min(z.t),
+        },
+        iters,
+    )
 }
 
 /// Convenience: Theorem-1 start + SCA enhancement in one call.
@@ -497,7 +526,7 @@ mod tests {
 
     #[test]
     fn equal_rate_links_handled() {
-        // γ == u triggers the perturbation path.
+        // γ == u triggers the symmetric Erlang-limit branch.
         let links = vec![
             EffLink::dedicated(&LinkParams::new(5.0, 0.2, 5.0)),
             EffLink::dedicated(&LinkParams::new(4.0, 0.25, 4.0)),
@@ -506,5 +535,83 @@ mod tests {
         assert!(alloc.t_star.is_finite() && alloc.t_star > 0.0);
         let progress = expected_results(&links, &alloc.loads, alloc.t_star);
         assert!(progress >= 1e3 * (1.0 - 1e-6));
+    }
+
+    #[test]
+    fn equal_rate_decomposition_is_well_conditioned() {
+        // The regression the symmetric split fixes: at γ_eff = u_eff the
+        // old one-sided 1e-6 perturbation produced c± ≈ 1e6 and
+        // catastrophic cancellation in c⁺ψ − c⁻ψ. The weights must now
+        // stay at the O(1/(2δ)) ≈ 5e3 scale.
+        let d = Decomp::new(&EffLink::dedicated(&LinkParams::new(5.0, 0.2, 5.0)));
+        assert!(
+            d.c_plus < 1e4 && d.c_minus < 1e4,
+            "ill-conditioned equal-rate weights: c⁺={} c⁻={}",
+            d.c_plus,
+            d.c_minus
+        );
+        assert!((d.c_plus - d.c_minus - 1.0).abs() < 1e-9, "mixture weights must differ by 1");
+        // Rates that are merely close (but outside the branch) keep the
+        // exact decomposition.
+        let e = Decomp::new(&EffLink::dedicated(&LinkParams::new(5.05, 0.2, 5.0)));
+        assert_eq!(e.r_lo, 5.0);
+        assert_eq!(e.r_hi, Some(5.05));
+    }
+
+    #[test]
+    fn equal_rate_allocation_pinned_against_nearby_rate_reference() {
+        // Allocation at exactly γ = u must agree with a reference link
+        // whose comm rate is nudged just outside the Erlang branch
+        // (continuity of the optimum in γ): same t* and loads to ~1%.
+        let mk = |ratio: f64| -> Vec<EffLink> {
+            [(0.2, 5.0), (0.25, 4.0), (0.3, 10.0 / 3.0)]
+                .iter()
+                .map(|&(a, u)| EffLink::dedicated(&LinkParams::new(ratio * u, a, u)))
+                .collect()
+        };
+        let l_rows = 1e4;
+        let at_equal = allocate(&mk(1.0), l_rows, &ScaOptions::default());
+        let nearby = allocate(&mk(1.001), l_rows, &ScaOptions::default());
+        assert!(
+            (at_equal.t_star - nearby.t_star).abs() / nearby.t_star < 0.01,
+            "t* discontinuous at the Erlang limit: {} vs {}",
+            at_equal.t_star,
+            nearby.t_star
+        );
+        for (x, y) in at_equal.loads.iter().zip(&nearby.loads) {
+            assert!(
+                (x - y).abs() / y.max(1.0) < 0.02,
+                "loads discontinuous at the Erlang limit: {x} vs {y}"
+            );
+        }
+        // And the equal-rate solution is feasible under the EXACT
+        // (eq. 4 Erlang) model, not just the δ-mixture surrogate.
+        let progress = expected_results(&mk(1.0), &at_equal.loads, at_equal.t_star);
+        assert!(
+            progress >= l_rows * (1.0 - 1e-5),
+            "equal-rate allocation infeasible: E[X] = {progress}"
+        );
+    }
+
+    #[test]
+    fn enhance_traced_counts_subproblem_solves() {
+        let mut rng = Rng::new(33);
+        let links = random_links(&mut rng, 5, 2.0);
+        let thetas: Vec<f64> = links.iter().map(EffLink::theta).collect();
+        let l_rows = 1e4;
+        let start = markov::allocate(&thetas, l_rows);
+        let (cold, cold_iters) = enhance_traced(&links, l_rows, &start, &ScaOptions::default());
+        assert!(cold_iters >= 1, "at least one subproblem solve");
+        // Warm start from the stationary point itself: the fixed-point
+        // stop must fire almost immediately, never later than cold.
+        let (warm, warm_iters) =
+            enhance_traced(&links, l_rows, &cold, &ScaOptions::default());
+        assert!(warm_iters <= cold_iters, "warm {warm_iters} > cold {cold_iters}");
+        assert!(
+            (warm.t_star - cold.t_star).abs() / cold.t_star < 1e-6,
+            "warm restart moved the optimum: {} vs {}",
+            warm.t_star,
+            cold.t_star
+        );
     }
 }

@@ -21,11 +21,12 @@ use crate::assign::ValueModel;
 use crate::config::{AShift, CommModel, Scenario};
 use crate::coordinator::{self, Backend, RunOptions};
 use crate::exec::{self, ExecOptions, Executor};
-use crate::experiment::{self, catalog, SweepOptions, SweepSpec};
+use crate::experiment::{self, catalog, CellResult, SweepOptions, SweepSpec};
 use crate::figures::{self, FigureOptions};
 use crate::plan::{LoadMethod, Plan, Policy};
 use crate::policy::{parse_value_model, registry, PolicySpec};
 use crate::runtime::RuntimeService;
+use crate::serve::{self, ArrivalProcess, JobRecord};
 use crate::util::json::{self, Json};
 use crate::util::table::Table;
 
@@ -123,12 +124,20 @@ USAGE:
   coded-coop sweep run (--spec FILE.json | --figure <id>) [--trials N]
                   [--seed S] [--threads T] [--cell-streams C]
                   [--order trial_major|blocked] [--out results.json]
+  coded-coop serve [--figure serving] [--trials N] [--jobs N] [--seed S]
+                  [--records FILE] [--no-records] [--out results.json]
+  coded-coop serve --scenario <small|large|ec2|FILE.json> [--policy P] [--loads L]
+                  [--jobs N] [--load-factor F] [--churn-rate R] [--churn-downtime D]
+                  [--process deterministic|poisson] [--seed S] [--records FILE] [--no-records]
   coded-coop e2e  [--masters M] [--workers N] [--rows L] [--cols S]
                   [--policy P] [--seed S] [--native] [--time-scale X]
+                  [--stream-jobs N] [--period-ms X]   (queued-job stream)
   coded-coop version | help
 
 figures:  fig2 fig3 fig4a fig4b fig5 fig6 fig7 fig8 (see DESIGN.md)
 sweeps:   {} (batched grid engine; JSON SweepSpec in, per-cell table + JSON out)
+serve:    streams one JSON record per job on stdout (summary table -> stderr);
+          use --records FILE to keep stdout for the table
 policies: {}
 loads:    {}
 ",
@@ -186,6 +195,7 @@ pub fn run() -> anyhow::Result<()> {
         Some("ablation") => cmd_ablation(&args),
         Some("plan") => cmd_plan(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("serve") => cmd_serve(&args),
         Some("e2e") => cmd_e2e(&args),
         Some("version") => {
             println!("coded-coop {}", crate::VERSION);
@@ -512,6 +522,241 @@ fn cmd_sweep_run(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Print a line to stdout tolerating a closed downstream pipe: `serve
+/// | head` must not panic in the summary prints after the stream ends.
+fn println_safe(text: &str) {
+    use std::io::Write as _;
+    let _ = writeln!(std::io::stdout(), "{text}");
+}
+
+/// JSONL record sink for the serve commands: `--records FILE`, stdout
+/// (default), or disabled (`--no-records`). Tracks write failures — a
+/// truncated record stream must not exit 0 — while treating a closed
+/// downstream pipe (`| head`) as a conventional end-of-stream.
+struct RecordSink {
+    out: Box<dyn std::io::Write>,
+    streaming: bool,
+    to_file: bool,
+    err: Option<std::io::Error>,
+}
+
+impl RecordSink {
+    fn from_args(args: &Args) -> anyhow::Result<Self> {
+        let streaming = !args.switch("no-records");
+        let to_file = matches!(args.flag("records"), Some(p) if p != "-");
+        // Create the file only when streaming is on: `--no-records
+        // --records FILE` must not truncate an existing record file.
+        let out: Box<dyn std::io::Write> = if !streaming {
+            Box::new(std::io::sink())
+        } else {
+            match args.flag("records") {
+                Some(path) if path != "-" => {
+                    Box::new(std::io::BufWriter::new(std::fs::File::create(path)?))
+                }
+                _ => Box::new(std::io::stdout()),
+            }
+        };
+        Ok(Self {
+            out,
+            streaming,
+            to_file,
+            err: None,
+        })
+    }
+
+    /// Whether the human summary must move to stderr (the JSONL records
+    /// own stdout, which must stay machine-parseable end to end).
+    fn summary_to_stderr(&self) -> bool {
+        self.streaming && !self.to_file
+    }
+
+    fn write_line(&mut self, line: &str) {
+        use std::io::Write as _;
+        if !self.streaming {
+            return;
+        }
+        if let Err(e) = writeln!(self.out, "{line}") {
+            if e.kind() != std::io::ErrorKind::BrokenPipe {
+                self.err = Some(e);
+            }
+            self.streaming = false;
+        }
+    }
+
+    /// Flush and surface any write failure.
+    fn finish(mut self) -> anyhow::Result<()> {
+        use std::io::Write as _;
+        if self.err.is_none() && self.streaming {
+            if let Err(e) = self.out.flush() {
+                if e.kind() != std::io::ErrorKind::BrokenPipe {
+                    self.err = Some(e);
+                }
+            }
+        }
+        match self.err {
+            Some(e) => {
+                anyhow::bail!("failed writing job records ({e}); the JSONL stream is truncated")
+            }
+            None => Ok(()),
+        }
+    }
+}
+
+/// One streaming JSONL line: the job record plus its cell coordinates.
+fn record_line(cell: &CellResult, r: &JobRecord) -> String {
+    let mut j = r.to_json();
+    j.set("cell", Json::Num(cell.index as f64));
+    j.set("policy", Json::Str(cell.outcome.label.clone()));
+    for (k, v) in &cell.axis_values {
+        j.set(k, Json::Num(*v));
+    }
+    serve::json_line(&j)
+}
+
+/// `serve`: the online serving layer. Default runs the `serving`
+/// catalog sweep (load factor × churn rate × policy), streaming one
+/// JSON record per job; with `--scenario` it runs a single configurable
+/// job stream instead.
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    if args.flag("scenario").is_some() {
+        return cmd_serve_single(args);
+    }
+    let id = args.flag("figure").unwrap_or("serving");
+    let mut spec = catalog::spec(
+        id,
+        args.usize_flag("trials", 20_000)?,
+        args.u64_flag("seed", 2022)?,
+    )?;
+    anyhow::ensure!(
+        spec.arrivals.is_some(),
+        "catalog sweep '{id}' is not a serving sweep (no arrivals block); \
+         run it with 'coded-coop sweep run --figure {id}'"
+    );
+    if args.flag("jobs").is_some() {
+        let arr = spec.arrivals.as_mut().expect("checked above");
+        arr.jobs = args.usize_flag("jobs", arr.jobs)?;
+    } else {
+        // No silent caps: the catalog bounds jobs per master (the cost
+        // knob would otherwise explode on figure-sized --trials values).
+        let arr_jobs = spec.arrivals.as_ref().expect("checked above").jobs;
+        let requested = args.usize_flag("trials", 20_000)?;
+        if arr_jobs < requested {
+            eprintln!(
+                "note: '{id}' caps --trials at {arr_jobs} jobs per master \
+                 (pass --jobs to override)"
+            );
+        }
+    }
+    let mut sink = RecordSink::from_args(args)?;
+    let summary: fn(&str) = if sink.summary_to_stderr() {
+        |s| eprintln!("{s}")
+    } else {
+        println_safe
+    };
+    let t0 = std::time::Instant::now();
+    // Incremental record streaming needs the sequential per-cell path;
+    // without it the grid runs on the shared pool like `sweep run`.
+    let result = if sink.streaming {
+        experiment::run_serving_with(&spec, |c| {
+            for r in &c.records {
+                sink.write_line(&record_line(c, r));
+            }
+        })?
+    } else {
+        experiment::run_sweep(&spec, &SweepOptions::default())?
+    };
+    sink.finish()?;
+    let mut t = Table::new(&[
+        "cell",
+        "axes",
+        "policy",
+        "jobs",
+        "mean sojourn (ms)",
+        "p99 (ms)",
+        "starved",
+    ]);
+    for c in &result.cells {
+        let axes = c
+            .axis_values
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        let starved = c.records.iter().filter(|r| !r.feasible()).count();
+        t.row(&[
+            format!("{}", c.index),
+            axes,
+            c.outcome.label.clone(),
+            format!("{}", c.records.len()),
+            format!("{:.3}", c.outcome.system.mean()),
+            serve::p99_sojourn_ms(&c.records)
+                .map(|p| format!("{p:.3}"))
+                .unwrap_or_else(|| "-".into()),
+            format!("{starved}"),
+        ]);
+    }
+    summary(&format!(
+        "\nserving sweep: {} ({} cells)\n\n{}",
+        result.name,
+        result.cells.len(),
+        t.render()
+    ));
+    summary(&format!(
+        "[{} cells in {:.1}s]",
+        result.cells.len(),
+        t0.elapsed().as_secs_f64()
+    ));
+    if let Some(path) = args.flag("out") {
+        std::fs::write(path, result.to_json().to_string_pretty())?;
+        summary(&format!("wrote {path}"));
+    }
+    Ok(())
+}
+
+/// `serve --scenario …`: one configurable job stream.
+fn cmd_serve_single(args: &Args) -> anyhow::Result<()> {
+    let s = parse_scenario(args)?;
+    let spec = parse_policy_spec(args)?;
+    let mut cfg = serve::ServeConfig::new(spec);
+    cfg.jobs = args.usize_flag("jobs", 50)?;
+    cfg.load_factor = args.f64_flag("load-factor", 0.8)?;
+    cfg.churn_rate = args.f64_flag("churn-rate", 0.0)?;
+    cfg.churn_downtime = args.f64_flag("churn-downtime", 0.5)?;
+    cfg.process = ArrivalProcess::parse(args.flag("process").unwrap_or("poisson"))?;
+    cfg.seed = args.u64_flag("seed", 2022)?;
+    // Open the record sink BEFORE the run: a bad --records path must
+    // fail fast, not after the whole stream has been served.
+    let mut sink = RecordSink::from_args(args)?;
+    let summary: fn(&str) = if sink.summary_to_stderr() {
+        |s| eprintln!("{s}")
+    } else {
+        println_safe
+    };
+    let out = serve::run(&s, &cfg)?;
+    for r in &out.records {
+        sink.write_line(&serve::json_line(&r.to_json()));
+    }
+    sink.finish()?;
+    summary(&format!("\nscenario: {}", s.name));
+    summary(&format!(
+        "plan:     {}  (t* = {:.3} ms, inter-arrival {:.3} ms)",
+        out.label, out.t_est_ms, out.period_ms
+    ));
+    summary(&format!(
+        "jobs: {} ({} starved) | mean sojourn {:.3} ms | p99 {} | replans {} | cache hits {} | sca iters {}",
+        out.records.len(),
+        out.infeasible,
+        out.system.mean(),
+        out.p99_ms()
+            .map(|p| format!("{p:.3} ms"))
+            .unwrap_or_else(|| "-".into()),
+        out.replans,
+        out.cache_hits,
+        out.sca_iters,
+    ));
+    Ok(())
+}
+
 fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
     let m = args.usize_flag("masters", 2)?;
     let n = args.usize_flag("workers", 6)?;
@@ -540,6 +785,55 @@ fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
         service = RuntimeService::start(&crate::runtime::default_artifact_dir())?;
         Backend::Pjrt(service.handle())
     };
+
+    // --stream-jobs N: the queued-job stream (coordinator::run_stream) —
+    // N tasks per master over ONE long-lived worker-thread set, the real
+    // runtime's counterpart of the virtual-time serving layer.
+    let stream_jobs = args.usize_flag("stream-jobs", 0)?;
+    if stream_jobs > 0 {
+        let outs = coordinator::run_stream(
+            &scenario,
+            &plan,
+            &coordinator::StreamOptions {
+                jobs: stream_jobs,
+                period_ms: args.f64_flag("period-ms", plan.t_est())?,
+                cols,
+                time_scale: args.f64_flag("time-scale", 1e-4)?,
+                backend,
+                seed,
+                verify: true,
+            },
+        )?;
+        let mut t = Table::new(&[
+            "job",
+            "master",
+            "arrival (ms)",
+            "completion (ms)",
+            "sojourn (ms)",
+            "rows",
+            "max rel err",
+        ]);
+        for o in &outs {
+            t.row(&[
+                format!("{}", o.job),
+                format!("{}", o.master + 1),
+                format!("{:.3}", o.arrival_ms),
+                format!("{:.3}", o.completion_ms),
+                format!("{:.3}", o.sojourn_ms()),
+                format!("{}", o.rows_used),
+                o.max_rel_err
+                    .map(|e| format!("{e:.2e}"))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        println!(
+            "queued-job stream: {} jobs × {} masters on one worker-thread set\n{}",
+            stream_jobs,
+            scenario.n_masters(),
+            t.render()
+        );
+        return Ok(());
+    }
 
     let report = coordinator::run_plan(
         &scenario,
@@ -655,9 +949,40 @@ mod tests {
         let h = help_text();
         assert!(h.contains("sweep export"), "help misses sweep export");
         assert!(h.contains("sweep run"), "help misses sweep run");
-        for id in ["fig6", "fig8_measured", "smoke"] {
+        for id in ["fig6", "fig8_measured", "smoke", "serving"] {
             assert!(h.contains(id), "help missing catalog id {id}");
         }
+        assert!(h.contains("coded-coop serve"), "help misses the serve command");
+        assert!(h.contains("--load-factor"), "help misses serve knobs");
+    }
+
+    #[test]
+    fn serve_record_lines_are_jsonl_with_cell_coordinates() {
+        // Library-level check of what `coded-coop serve` streams.
+        let mut spec = catalog::spec("serving", 4, 3).unwrap();
+        spec.axes = vec![experiment::Axis::single("load_factor", &[0.7])];
+        spec.policies.truncate(1);
+        let mut lines = Vec::new();
+        let result = experiment::run_serving_with(&spec, |c| {
+            for r in &c.records {
+                lines.push(record_line(c, r));
+            }
+        })
+        .unwrap();
+        assert_eq!(result.cells.len(), 1);
+        assert_eq!(lines.len(), 2 * 4); // M = 2 masters × 4 jobs
+        for line in &lines {
+            assert!(!line.contains('\n'));
+            let j = json::parse(line).unwrap();
+            assert_eq!(j.get("cell").and_then(Json::as_usize), Some(0));
+            assert_eq!(j.get("load_factor").and_then(Json::as_f64), Some(0.7));
+            assert!(j.get("sojourn_ms").is_some());
+            assert_eq!(j.get("feasible").and_then(Json::as_bool), Some(true));
+            assert!(j.get("policy").and_then(Json::as_str).is_some());
+        }
+        // And the p99 helper orders sanely.
+        let p99 = serve::p99_sojourn_ms(&result.cells[0].records).unwrap();
+        assert!(p99 >= result.cells[0].outcome.system.mean());
     }
 
     #[test]

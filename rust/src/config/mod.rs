@@ -128,6 +128,39 @@ impl Scenario {
         self.traces.len() - 1
     }
 
+    /// The scenario restricted to the 1-based worker ids in `active`
+    /// (strictly increasing, in range): worker `j` of the result is
+    /// worker `active[j-1]` of `self`; masters, local links, comm model
+    /// and the trace table are untouched. The serving layer plans on
+    /// this subset while workers are away (churn) and remaps the plan's
+    /// node ids back onto the full fleet.
+    pub fn subset_workers(&self, active: &[usize]) -> anyhow::Result<Scenario> {
+        let n = self.n_workers();
+        anyhow::ensure!(!active.is_empty(), "subset_workers needs ≥ 1 active worker");
+        for (i, &w) in active.iter().enumerate() {
+            anyhow::ensure!(
+                (1..=n).contains(&w),
+                "subset_workers: worker id {w} outside 1..={n}"
+            );
+            anyhow::ensure!(
+                i == 0 || active[i - 1] < w,
+                "subset_workers: ids must be strictly increasing"
+            );
+        }
+        Ok(Scenario {
+            name: format!("{} [{}/{n} workers]", self.name, active.len()),
+            comm: self.comm,
+            masters: self.masters.clone(),
+            links: self
+                .links
+                .iter()
+                .map(|row| active.iter().map(|&w| row[w - 1]).collect())
+                .collect(),
+            traces: self.traces.clone(),
+        }
+        .check())
+    }
+
     fn check(self) -> Self {
         assert!(!self.masters.is_empty(), "scenario needs ≥1 master");
         assert_eq!(
@@ -624,6 +657,32 @@ mod tests {
                 assert!((a.u - b.u).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn subset_workers_selects_columns() {
+        let s = Scenario::small_scale(11, 2.0, CommModel::Stochastic);
+        let sub = s.subset_workers(&[2, 5]).unwrap();
+        assert_eq!(sub.n_workers(), 2);
+        assert_eq!(sub.n_masters(), s.n_masters());
+        for m in 0..s.n_masters() {
+            assert_eq!(sub.link(m, 0), s.link(m, 0), "local link untouched");
+            assert_eq!(sub.link(m, 1), s.link(m, 2));
+            assert_eq!(sub.link(m, 2), s.link(m, 5));
+        }
+        // Full subset reproduces the original link matrix.
+        let all = s.subset_workers(&[1, 2, 3, 4, 5]).unwrap();
+        for m in 0..s.n_masters() {
+            for w in 1..=5 {
+                assert_eq!(all.link(m, w), s.link(m, w));
+            }
+        }
+        // Malformed subsets are graceful errors.
+        assert!(s.subset_workers(&[]).is_err());
+        assert!(s.subset_workers(&[0]).is_err());
+        assert!(s.subset_workers(&[6]).is_err());
+        assert!(s.subset_workers(&[3, 3]).is_err());
+        assert!(s.subset_workers(&[4, 2]).is_err());
     }
 
     #[test]

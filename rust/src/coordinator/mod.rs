@@ -32,7 +32,7 @@ use std::time::Instant;
 
 use crate::coding::MdsCode;
 use crate::config::Scenario;
-use crate::plan::{self, Plan, PlanSpec};
+use crate::plan::{self, MasterPlan, Plan, PlanSpec};
 use crate::runtime::RuntimeHandle;
 use crate::util::rng::Rng;
 use worker::{Outcome, SubTask, TaskEvent, WorkerResult};
@@ -234,7 +234,7 @@ pub fn round_loads(loads: &[f64], l_rows: usize) -> Vec<usize> {
         .enumerate()
         .map(|(i, &l)| (i, l - l.floor()))
         .collect();
-    rem.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    rem.sort_by(|a, b| b.1.total_cmp(&a.1));
     let mut total: usize = out.iter().sum();
     let mut k = 0;
     while total < target {
@@ -243,6 +243,252 @@ pub fn round_loads(loads: &[f64], l_rows: usize) -> Vec<usize> {
         k += 1;
     }
     out
+}
+
+/// One master-task prepared for dispatch: MDS code + ground truth + the
+/// delay-sampled sub-tasks, ready to be queued on the worker threads.
+/// Shared by [`run_plan`] (one task per master) and [`run_stream`] (a
+/// queue of tasks per master) so the encode/dispatch semantics cannot
+/// drift apart.
+struct PreparedTask {
+    code: MdsCode,
+    truth: Vec<f64>,
+    l_rows: usize,
+    /// `(worker-queue index, sub-task)` pairs.
+    subtasks: Vec<(usize, SubTask)>,
+    /// Total coded rows dispatched.
+    dispatched: usize,
+    encode_wall_ms: f64,
+}
+
+/// Generate data, encode and delay-sample one master's task. `task_id`
+/// is the id workers report back (`SubTask::master` — a flat per-job id
+/// in stream mode); `deadline_offset` shifts every sampled delay (a
+/// stream job's arrival time; 0 for one-shot runs). RNG consumption
+/// order is the legacy `run_plan` order bit-for-bit: data, model
+/// vector, MDS code, then one delay per dispatched entry.
+#[allow(clippy::too_many_arguments)]
+fn prepare_task(
+    s: &Scenario,
+    mp: &MasterPlan,
+    uncoded: bool,
+    m: usize,
+    task_id: usize,
+    cols: usize,
+    backend: &Backend,
+    deadline_offset: f64,
+    rng: &mut Rng,
+) -> anyhow::Result<PreparedTask> {
+    let n_workers = s.n_workers();
+    let l_rows = mp.l_rows as usize;
+    anyhow::ensure!(
+        l_rows > 0 && (mp.l_rows - l_rows as f64).abs() < 1e-9,
+        "coordinator needs integer L_m"
+    );
+    // Data + model vector.
+    let a: Vec<f32> = (0..l_rows * cols).map(|_| rng.normal() as f32).collect();
+    let x: Vec<f32> = (0..cols).map(|_| rng.normal() as f32).collect();
+    // Direct product (f64 accumulation) for verification.
+    let truth: Vec<f64> = (0..l_rows)
+        .map(|i| {
+            a[i * cols..(i + 1) * cols]
+                .iter()
+                .zip(&x)
+                .map(|(&av, &xv)| av as f64 * xv as f64)
+                .sum()
+        })
+        .collect();
+
+    // Integer loads; the plan keeps entries ordered [local, workers…].
+    let loads = round_loads(
+        &mp.entries.iter().map(|e| e.load).collect::<Vec<_>>(),
+        if uncoded { l_rows.saturating_sub(1) } else { l_rows },
+    );
+    let l_coded: usize = loads.iter().sum();
+    let code = MdsCode::new(l_rows, l_coded, rng);
+
+    // Encode: Ã = G·A through the backend. Fault injection targets
+    // worker compute only; the master's encode is assumed reliable (as
+    // in the paper's model).
+    let g32: Vec<f32> = code.generator().data().iter().map(|&v| v as f32).collect();
+    let t0 = Instant::now();
+    let coded: Vec<f32> = match backend {
+        Backend::Pjrt(h) => h.encode(g32, l_coded, l_rows, a.clone(), cols)?,
+        Backend::Native | Backend::Flaky { .. } => {
+            native_matmul(&g32, l_coded, l_rows, &a, cols)
+        }
+    };
+    let encode_wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    // Split into per-entry row blocks and sample each entry's delay.
+    // Family-aware injection: shifted-exp links sample the legacy
+    // eq.-(3) draws bit-for-bit, other families through the same
+    // DelayFamily interface as the Monte-Carlo engine.
+    let x_arc = Arc::new(x);
+    let mut subtasks = Vec::new();
+    let mut start = 0usize;
+    let mut dispatched = 0usize;
+    for (e, &l_int) in mp.entries.iter().zip(&loads) {
+        if l_int == 0 {
+            continue;
+        }
+        let delay = s.link_delay(m, e.node, l_int as f64, e.k, e.b).sample(rng);
+        let a_block = coded[start * cols..(start + l_int) * cols].to_vec();
+        let queue_idx = if e.node == 0 { n_workers + m } else { e.node - 1 };
+        subtasks.push((
+            queue_idx,
+            SubTask {
+                master: task_id,
+                coded_start: start,
+                rows: l_int,
+                cols,
+                a_block,
+                x: Arc::clone(&x_arc),
+                delay_ms: deadline_offset + delay,
+            },
+        ));
+        start += l_int;
+        dispatched += l_int;
+    }
+    Ok(PreparedTask {
+        code,
+        truth,
+        l_rows,
+        subtasks,
+        dispatched,
+        encode_wall_ms,
+    })
+}
+
+/// Per-task result accumulator shared by both runtimes: coded-row
+/// arrivals in, completion decision out.
+struct TaskCollector {
+    /// (coded row, value) in arrival order.
+    received: Vec<(usize, f64)>,
+    rows_got: usize,
+    /// Largest VIRTUAL delay among counted arrivals. Wall-clock publish
+    /// order is deadline + real compute time, so it does not track
+    /// virtual-delay order; the completion instant is the max virtual
+    /// delay over the rows decode consumed.
+    max_delay_ms: f64,
+    completion: Option<f64>,
+    l_rows: usize,
+}
+
+impl TaskCollector {
+    fn new(l_rows: usize, t0_ms: f64) -> Self {
+        Self {
+            received: Vec::new(),
+            rows_got: 0,
+            max_delay_ms: t0_ms,
+            completion: None,
+            l_rows,
+        }
+    }
+
+    /// Absorb one worker result; `true` exactly when this arrival
+    /// completed the task (the caller fires cancellation). Arrivals
+    /// after completion are dropped (already cancelled).
+    fn absorb(&mut self, r: &WorkerResult) -> bool {
+        if self.completion.is_some() {
+            return false;
+        }
+        for (i, &v) in r.values.iter().enumerate() {
+            self.received.push((r.coded_start + i, v as f64));
+        }
+        self.rows_got += r.rows;
+        self.max_delay_ms = self.max_delay_ms.max(r.delay_ms);
+        if self.rows_got >= self.l_rows {
+            // Completion = slowest virtual delay among the rows decode
+            // consumed (publish order is wall-clock and may differ).
+            self.completion = Some(self.max_delay_ms);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn complete(&self) -> bool {
+        self.rows_got >= self.l_rows
+    }
+
+    /// Decode consumes exactly L rows; arrivals past that (landed
+    /// before cancellation took hold) are not "used".
+    fn rows_used(&self) -> usize {
+        self.rows_got.min(self.l_rows)
+    }
+}
+
+/// Launch one worker thread per non-empty queue, route every
+/// [`WorkerResult`] to `collectors[result.master]` — cancelling that
+/// task's remaining redundancy the moment it completes — then join.
+/// Returns per-worker computed/skipped counts, the event log and the
+/// wall time (ms): the dispatch half both runtimes share, so the
+/// completion/cancellation semantics cannot drift between the one-shot
+/// and stream paths.
+fn dispatch_and_collect(
+    queues: Vec<Vec<SubTask>>,
+    collectors: &mut [TaskCollector],
+    backend: &Backend,
+    time_scale: f64,
+) -> anyhow::Result<(Vec<usize>, Vec<usize>, Vec<TaskEvent>, f64)> {
+    let cancel: Arc<Vec<AtomicBool>> = Arc::new(
+        (0..collectors.len()).map(|_| AtomicBool::new(false)).collect(),
+    );
+    let (res_tx, res_rx) = channel::<WorkerResult>();
+    let t_start = Instant::now();
+    let mut join = Vec::new();
+    let mut worker_computed = vec![0usize; queues.len()];
+    let mut worker_skipped = vec![0usize; queues.len()];
+    for (wid, tasks) in queues.into_iter().enumerate() {
+        if tasks.is_empty() {
+            continue;
+        }
+        let backend = backend.clone();
+        let cancel = Arc::clone(&cancel);
+        let tx = res_tx.clone();
+        join.push((
+            wid,
+            std::thread::Builder::new()
+                .name(format!("worker-{wid}"))
+                .spawn(move || {
+                    worker::run_worker(wid, tasks, backend, cancel, tx, time_scale, t_start)
+                })?,
+        ));
+    }
+    drop(res_tx);
+    while let Ok(r) = res_rx.recv() {
+        if collectors[r.master].absorb(&r) {
+            cancel[r.master].store(true, Ordering::SeqCst);
+        }
+    }
+    let mut events: Vec<TaskEvent> = Vec::new();
+    for (wid, h) in join {
+        let (computed, skipped, ev) = h.join().expect("worker panicked");
+        worker_computed[wid] = computed;
+        worker_skipped[wid] = skipped;
+        events.extend(ev);
+    }
+    Ok((
+        worker_computed,
+        worker_skipped,
+        events,
+        t_start.elapsed().as_secs_f64() * 1e3,
+    ))
+}
+
+/// Max relative decode error of a completed task against the direct
+/// product — the verify metric shared by both runtimes. Relative,
+/// because the LU decode of an L×L Gaussian sub-generator amplifies
+/// f32 rounding with L.
+fn decode_rel_err(code: &MdsCode, received: &[(usize, f64)], truth: &[f64]) -> f64 {
+    let z = code
+        .decode(received)
+        .expect("any L rows decode (Gaussian parity)");
+    z.iter()
+        .zip(truth)
+        .map(|(a, b)| (a - b).abs() / (1.0 + b.abs()))
+        .fold(0.0, f64::max)
 }
 
 /// Plan + run the coordinator end-to-end. Returns the per-master reports.
@@ -270,201 +516,65 @@ pub fn run_plan(s: &Scenario, plan: &Plan, opts: &RunOptions) -> anyhow::Result<
     let mut rng = Rng::new(opts.seed);
 
     // ---- Per-master data, codes and sub-task construction -------------
-    struct MasterState {
+    // Static per-master facts; the arrival/completion state lives in the
+    // shared [`TaskCollector`]s.
+    struct MasterMeta {
         code: MdsCode,
         truth: Vec<f64>,
-        l_rows: usize,
         t_est: f64,
-        received: Vec<(usize, f64)>, // (coded row, value) in arrival order
-        rows_got: usize,
-        /// Largest VIRTUAL delay among counted arrivals. Wall-clock
-        /// publish order is deadline + real compute time, so it does not
-        /// track virtual-delay order; the completion instant is the max
-        /// virtual delay over the rows decode consumed.
-        max_delay_ms: f64,
-        completion: Option<f64>,
         encode_wall_ms: f64,
         total_dispatched: usize,
     }
 
-    let mut states: Vec<MasterState> = Vec::with_capacity(m_cnt);
+    let mut metas: Vec<MasterMeta> = Vec::with_capacity(m_cnt);
+    let mut collectors: Vec<TaskCollector> = Vec::with_capacity(m_cnt);
     // Sub-task queues: one per worker thread; local processing of master m
     // runs on its own thread (index n_workers + m).
     let mut queues: Vec<Vec<SubTask>> =
         (0..n_workers + m_cnt).map(|_| Vec::new()).collect();
 
     for (m, mp) in plan.masters.iter().enumerate() {
-        let l_rows = mp.l_rows as usize;
-        anyhow::ensure!(
-            l_rows > 0 && (mp.l_rows - l_rows as f64).abs() < 1e-9,
-            "coordinator needs integer L_m"
-        );
-        // Data + model vector.
-        let a: Vec<f32> = (0..l_rows * opts.cols)
-            .map(|_| rng.normal() as f32)
-            .collect();
-        let x: Vec<f32> = (0..opts.cols).map(|_| rng.normal() as f32).collect();
-        // Direct product (f64 accumulation) for verification.
-        let truth: Vec<f64> = (0..l_rows)
-            .map(|i| {
-                a[i * opts.cols..(i + 1) * opts.cols]
-                    .iter()
-                    .zip(&x)
-                    .map(|(&av, &xv)| av as f64 * xv as f64)
-                    .sum()
-            })
-            .collect();
-
-        // Integer loads; the plan keeps entries ordered [local, workers…].
-        let loads = round_loads(
-            &mp.entries.iter().map(|e| e.load).collect::<Vec<_>>(),
-            if plan.uncoded { l_rows.saturating_sub(1) } else { l_rows },
-        );
-        let l_coded: usize = loads.iter().sum();
-        let code = MdsCode::new(l_rows, l_coded, &mut rng);
-
-        // Encode: Ã = G·A through the backend.
-        let g32: Vec<f32> = code.generator().data().iter().map(|&v| v as f32).collect();
-        let t0 = Instant::now();
-        let coded: Vec<f32> = match &opts.backend {
-            Backend::Pjrt(h) => h.encode(g32, l_coded, l_rows, a.clone(), opts.cols)?,
-            // Fault injection targets worker compute only; the master's
-            // encode is assumed reliable (as in the paper's model).
-            Backend::Native | Backend::Flaky { .. } => {
-                native_matmul(&g32, l_coded, l_rows, &a, opts.cols)
-            }
-        };
-        let encode_wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-
-        // Split into per-entry row blocks and sample each entry's delay.
-        let x_arc = Arc::new(x);
-        let mut start = 0usize;
-        let mut dispatched = 0usize;
-        for (e, &l_int) in mp.entries.iter().zip(&loads) {
-            if l_int == 0 {
-                continue;
-            }
-            // Family-aware delay injection: shifted-exp links sample the
-            // legacy eq.-(3) draws bit-for-bit, other families through
-            // the same DelayFamily interface as the Monte-Carlo engine.
-            let delay = s
-                .link_delay(m, e.node, l_int as f64, e.k, e.b)
-                .sample(&mut rng);
-            let a_block = coded[start * opts.cols..(start + l_int) * opts.cols].to_vec();
-            let queue_idx = if e.node == 0 {
-                n_workers + m
-            } else {
-                e.node - 1
-            };
-            queues[queue_idx].push(SubTask {
-                master: m,
-                coded_start: start,
-                rows: l_int,
-                cols: opts.cols,
-                a_block,
-                x: Arc::clone(&x_arc),
-                delay_ms: delay,
-            });
-            start += l_int;
-            dispatched += l_int;
+        let prep = prepare_task(
+            s,
+            mp,
+            plan.uncoded,
+            m,
+            m,
+            opts.cols,
+            &opts.backend,
+            0.0,
+            &mut rng,
+        )?;
+        for (queue_idx, t) in prep.subtasks {
+            queues[queue_idx].push(t);
         }
-
-        states.push(MasterState {
-            code,
-            truth,
-            l_rows,
+        collectors.push(TaskCollector::new(prep.l_rows, 0.0));
+        metas.push(MasterMeta {
+            code: prep.code,
+            truth: prep.truth,
             t_est: mp.t_est,
-            received: Vec::new(),
-            rows_got: 0,
-            max_delay_ms: 0.0,
-            completion: None,
-            encode_wall_ms,
-            total_dispatched: dispatched,
+            encode_wall_ms: prep.encode_wall_ms,
+            total_dispatched: prep.dispatched,
         });
     }
 
-    // ---- Launch workers -------------------------------------------------
-    let cancel: Arc<Vec<AtomicBool>> =
-        Arc::new((0..m_cnt).map(|_| AtomicBool::new(false)).collect());
-    let (res_tx, res_rx) = channel::<WorkerResult>();
-    let t_start = Instant::now();
-
-    let mut join = Vec::new();
-    let mut worker_computed = vec![0usize; queues.len()];
-    let mut worker_skipped = vec![0usize; queues.len()];
-    for (wid, tasks) in queues.into_iter().enumerate() {
-        if tasks.is_empty() {
-            continue;
-        }
-        let backend = opts.backend.clone();
-        let cancel = Arc::clone(&cancel);
-        let tx = res_tx.clone();
-        let scale = opts.time_scale;
-        join.push((
-            wid,
-            std::thread::Builder::new()
-                .name(format!("worker-{wid}"))
-                .spawn(move || worker::run_worker(wid, tasks, backend, cancel, tx, scale, t_start))?,
-        ));
-    }
-    drop(res_tx);
-
-    // ---- Collector: decode at L_m rows, cancel the rest -----------------
-    while let Ok(r) = res_rx.recv() {
-        let st = &mut states[r.master];
-        if st.completion.is_some() {
-            continue; // late arrival after decode (already cancelled)
-        }
-        for (i, &v) in r.values.iter().enumerate() {
-            st.received.push((r.coded_start + i, v as f64));
-        }
-        st.rows_got += r.rows;
-        st.max_delay_ms = st.max_delay_ms.max(r.delay_ms);
-        if st.rows_got >= st.l_rows {
-            // Completion = slowest virtual delay among the rows decode
-            // consumed (publish order is wall-clock and may differ).
-            st.completion = Some(st.max_delay_ms);
-            cancel[r.master].store(true, Ordering::SeqCst);
-        }
-    }
-
-    let mut events: Vec<TaskEvent> = Vec::new();
-    for (wid, h) in join {
-        let (computed, skipped, ev) = h.join().expect("worker panicked");
-        worker_computed[wid] = computed;
-        worker_skipped[wid] = skipped;
-        events.extend(ev);
-    }
-    let wall_ms = t_start.elapsed().as_secs_f64() * 1e3;
+    let (worker_computed, worker_skipped, events, wall_ms) =
+        dispatch_and_collect(queues, &mut collectors, &opts.backend, opts.time_scale)?;
 
     // ---- Decode + verify -------------------------------------------------
-    let masters = states
+    let masters = metas
         .into_iter()
-        .map(|st| {
-            let completion = st.completion.unwrap_or(f64::INFINITY);
-            let max_rel_err = if opts.verify && st.rows_got >= st.l_rows {
-                let z = st
-                    .code
-                    .decode(&st.received)
-                    .expect("any L rows decode (Gaussian parity)");
-                Some(
-                    z.iter()
-                        .zip(&st.truth)
-                        .map(|(a, b)| (a - b).abs() / (1.0 + b.abs()))
-                        .fold(0.0, f64::max),
-                )
-            } else {
-                None
-            };
+        .zip(collectors)
+        .map(|(meta, col)| {
+            let max_rel_err = (opts.verify && col.complete())
+                .then(|| decode_rel_err(&meta.code, &col.received, &meta.truth));
             MasterReport {
-                completion_ms: completion,
-                t_est_ms: st.t_est,
-                // Decode consumes exactly L_m rows; arrivals past that
-                // (landed before cancellation took hold) are not "used".
-                rows_used: st.rows_got.min(st.l_rows),
-                rows_cancelled: st.total_dispatched.saturating_sub(st.rows_got),
+                completion_ms: col.completion.unwrap_or(f64::INFINITY),
+                t_est_ms: meta.t_est,
+                rows_used: col.rows_used(),
+                rows_cancelled: meta.total_dispatched.saturating_sub(col.rows_got),
                 max_rel_err,
-                encode_wall_ms: st.encode_wall_ms,
+                encode_wall_ms: meta.encode_wall_ms,
             }
         })
         .collect();
@@ -477,6 +587,130 @@ pub fn run_plan(s: &Scenario, plan: &Plan, opts: &RunOptions) -> anyhow::Result<
         worker_skipped,
         events,
     })
+}
+
+/// Options for [`run_stream`]: a queue of `jobs` tasks per master,
+/// arriving every `period_ms` of virtual time, all dispatched over ONE
+/// long-lived set of worker threads (the shared pool of the serving
+/// story — no per-job thread spawning).
+#[derive(Clone)]
+pub struct StreamOptions {
+    /// Jobs per master.
+    pub jobs: usize,
+    /// Virtual inter-arrival per master (ms).
+    pub period_ms: f64,
+    /// Task width `S_m`.
+    pub cols: usize,
+    /// Wall-clock seconds per virtual millisecond.
+    pub time_scale: f64,
+    pub backend: Backend,
+    pub seed: u64,
+    pub verify: bool,
+}
+
+/// One streamed job's outcome on the real runtime.
+#[derive(Clone, Debug)]
+pub struct JobOutcome {
+    pub master: usize,
+    pub job: usize,
+    pub arrival_ms: f64,
+    /// Absolute virtual completion (∞ if the job never decoded).
+    pub completion_ms: f64,
+    pub rows_used: usize,
+    pub max_rel_err: Option<f64>,
+}
+
+impl JobOutcome {
+    /// Arrival → completion (the serving metric).
+    pub fn sojourn_ms(&self) -> f64 {
+        self.completion_ms - self.arrival_ms
+    }
+}
+
+/// Deploy a QUEUE of jobs — `jobs` tasks per master, arriving every
+/// `period_ms` — on the real multi-threaded runtime. Unlike
+/// [`run_plan`] (one task per master, fresh threads per call), the
+/// whole stream shares one set of worker threads: every worker receives
+/// all of its sub-tasks across all jobs up front (absolute virtual
+/// deadlines = arrival + sampled delay) and serves them in deadline
+/// order, while the collector decodes each `(master, job)` pair
+/// independently and cancels its redundancy. Queueing *between* jobs of
+/// one master is open-loop here (arrivals don't wait for completions) —
+/// the closed-loop FIFO semantics live in the virtual-time serving
+/// layer ([`crate::serve`]); this is its executable counterpart for
+/// real encode/compute/decode streams.
+pub fn run_stream(s: &Scenario, plan: &Plan, opts: &StreamOptions) -> anyhow::Result<Vec<JobOutcome>> {
+    let m_cnt = s.n_masters();
+    let n_workers = s.n_workers();
+    anyhow::ensure!(opts.jobs > 0, "run_stream needs ≥ 1 job per master");
+    anyhow::ensure!(
+        opts.period_ms.is_finite() && opts.period_ms >= 0.0,
+        "period_ms must be finite and ≥ 0"
+    );
+    let mut rng = Rng::new(opts.seed);
+
+    struct JobMeta {
+        code: MdsCode,
+        truth: Vec<f64>,
+        arrival_ms: f64,
+    }
+
+    // Flat id = job * m_cnt + master; worker queues span the stream.
+    let mut metas: Vec<JobMeta> = Vec::with_capacity(m_cnt * opts.jobs);
+    let mut collectors: Vec<TaskCollector> = Vec::with_capacity(m_cnt * opts.jobs);
+    let mut queues: Vec<Vec<SubTask>> =
+        (0..n_workers + m_cnt).map(|_| Vec::new()).collect();
+
+    for job in 0..opts.jobs {
+        let arrival = job as f64 * opts.period_ms;
+        for (m, mp) in plan.masters.iter().enumerate() {
+            // Flat (job, master) id: the worker threads and the
+            // cancellation flags are per-job-per-master; the arrival
+            // offset makes deadlines absolute across the stream.
+            let flat = job * m_cnt + m;
+            let prep = prepare_task(
+                s,
+                mp,
+                plan.uncoded,
+                m,
+                flat,
+                opts.cols,
+                &opts.backend,
+                arrival,
+                &mut rng,
+            )?;
+            for (queue_idx, t) in prep.subtasks {
+                queues[queue_idx].push(t);
+            }
+            collectors.push(TaskCollector::new(prep.l_rows, arrival));
+            metas.push(JobMeta {
+                code: prep.code,
+                truth: prep.truth,
+                arrival_ms: arrival,
+            });
+        }
+    }
+
+    let (_computed, _skipped, _events, _wall_ms) =
+        dispatch_and_collect(queues, &mut collectors, &opts.backend, opts.time_scale)?;
+
+    Ok(metas
+        .into_iter()
+        .zip(collectors)
+        .enumerate()
+        .map(|(flat, (meta, col))| {
+            let max_rel_err = (opts.verify && col.complete())
+                .then(|| decode_rel_err(&meta.code, &col.received, &meta.truth));
+            JobOutcome {
+                master: flat % m_cnt,
+                job: flat / m_cnt,
+                arrival_ms: meta.arrival_ms,
+                completion_ms: col.completion.unwrap_or(f64::INFINITY),
+                rows_used: col.rows_used(),
+                max_rel_err,
+            }
+        })
+        .collect())
 }
 
 /// Naive f32 matmul fallback (row-major).
@@ -686,6 +920,59 @@ mod tests {
             .sum();
         assert!(computed_rows >= received);
         assert!(report.saved_fraction() >= 0.0 && report.saved_fraction() < 1.0);
+    }
+
+    #[test]
+    fn job_stream_shares_worker_threads_and_decodes_every_job() {
+        // Queued-job dispatch: 3 jobs per master arrive over virtual
+        // time and run on ONE long-lived worker-thread set; every
+        // (master, job) pair must decode and verify independently.
+        let s = Scenario::random(
+            "stream-test",
+            2,
+            4,
+            64.0,
+            AShift::Range(0.01, 0.05),
+            2.0,
+            CommModel::Stochastic,
+            11,
+        );
+        let p = plan::build(
+            &s,
+            &PlanSpec {
+                policy: Policy::DediIter,
+                values: ValueModel::Markov,
+                loads: LoadMethod::Markov,
+            },
+        );
+        let outs = run_stream(
+            &s,
+            &p,
+            &StreamOptions {
+                jobs: 3,
+                period_ms: 5.0,
+                cols: 8,
+                time_scale: 2e-5,
+                backend: Backend::Native,
+                seed: 11,
+                verify: true,
+            },
+        )
+        .unwrap();
+        assert_eq!(outs.len(), 6);
+        for o in &outs {
+            assert!(o.completion_ms.is_finite(), "{o:?}");
+            assert_eq!(o.arrival_ms, o.job as f64 * 5.0);
+            assert!(o.sojourn_ms() > 0.0, "{o:?}");
+            assert_eq!(o.rows_used, 64);
+            let err = o.max_rel_err.expect("verified");
+            assert!(err < 1e-3, "job ({}, {}) decode error {err}", o.master, o.job);
+        }
+        // Outcomes are flat-ordered (job-major, master-minor).
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(o.job, i / 2);
+            assert_eq!(o.master, i % 2);
+        }
     }
 
     #[test]

@@ -108,8 +108,11 @@ pub fn run_worker(
     time_scale: f64,
     t_start: Instant,
 ) -> (usize, usize, Vec<TaskEvent>) {
-    // Deadline order = arrival order under processor sharing.
-    tasks.sort_by(|a, b| a.delay_ms.partial_cmp(&b.delay_ms).unwrap());
+    // Deadline order = arrival order under processor sharing. total_cmp:
+    // deadlines are sums of finite sampled delays plus arrival offsets,
+    // but a long-lived serving loop must not be one NaN away from a
+    // worker-thread panic.
+    tasks.sort_by(|a, b| a.delay_ms.total_cmp(&b.delay_ms));
     let mut computed = 0usize;
     let mut skipped = 0usize;
     let mut events = Vec::with_capacity(tasks.len());

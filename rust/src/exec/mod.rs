@@ -88,11 +88,18 @@ impl Outcome {
     }
 
     /// Structured export (one record per master + the system view).
+    ///
+    /// Non-finite delays serialize as JSON `null` (JSON has no `Inf`),
+    /// which on its own loses the *reason* on a round-trip — so every
+    /// outcome also carries an explicit `"feasible"` flag: `false` marks
+    /// an infeasible cell (Σl < L, a starved serving job, …) whose mean
+    /// delay is `∞`, distinguishing it from merely-missing data.
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         j.set("label", Json::Str(self.label.clone()));
         j.set("executor", Json::Str(self.executor.clone()));
         j.set("mean_system_delay_ms", Json::Num(self.system.mean()));
+        j.set("feasible", Json::Bool(self.system.mean().is_finite()));
         j.set("sem_ms", Json::Num(self.system.sem()));
         j.set("t_est_ms", Json::Num(self.t_est_ms));
         j.set("realizations", Json::Num(self.system.count() as f64));
@@ -331,6 +338,39 @@ mod tests {
         assert_eq!(
             back.get("realizations").and_then(|v| v.as_usize()),
             Some(500)
+        );
+        assert_eq!(back.get("feasible").and_then(|v| v.as_bool()), Some(true));
+    }
+
+    #[test]
+    fn infeasible_outcome_exports_null_delay_with_explicit_flag() {
+        // The round-trip-fidelity regression: a cell whose delay is ∞
+        // must not silently collapse into "no data" — the JSON carries
+        // `"mean_system_delay_ms": null` AND `"feasible": false`, and a
+        // parser can reconstruct the infeasibility from the export.
+        let mut sm = Summary::new();
+        sm.push(f64::INFINITY);
+        let out = Outcome {
+            label: "starved".into(),
+            executor: "serve".into(),
+            per_master: vec![sm.clone()],
+            system: sm,
+            t_est_ms: 1.0,
+            samples: None,
+        };
+        let text = out.to_json().to_string_pretty();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(
+            back.get("mean_system_delay_ms"),
+            Some(&crate::util::json::Json::Null),
+            "non-finite delay must serialize as null"
+        );
+        assert_eq!(back.get("feasible").and_then(|v| v.as_bool()), Some(false));
+        // Export → parse → re-export is stable (no information decays
+        // further on a second round-trip).
+        assert_eq!(
+            crate::util::json::parse(&back.to_string_pretty()).unwrap(),
+            back
         );
     }
 }

@@ -15,6 +15,7 @@
 //! | `fig8_fitted` / `fig8_measured` | Fig. 8 | EC2 roster, ± throttling |
 //! | `ablation_redundancy` | ablation | overhead-β axis, samples kept |
 //! | `ablation_straggler` | ablation | zipped (prob, slowdown) × 2 policies |
+//! | `serving` | — | online serving: load factor × churn rate × 3 policies (sojourn mean/p99) |
 //! | `smoke` | — | 2-cell CI smoke grid |
 //!
 //! Figs. 7 (trace fitting) and the `multimsg` / `sca_step` ablations are
@@ -23,9 +24,10 @@
 use crate::assign::ValueModel;
 use crate::config::CommModel;
 use crate::policy::PolicySpec;
+use crate::serve::ArrivalProcess;
 use crate::traces::ec2::T2_MICRO_THROTTLE;
 
-use super::spec::{Axis, ScenarioSpec, SweepSpec};
+use super::spec::{ArrivalSpec, Axis, ScenarioSpec, SweepSpec};
 
 /// All catalog ids, paper order (the `heavy_tail` scenario-gallery
 /// sweep goes beyond the paper: a delay-family axis over mean-matched
@@ -43,8 +45,17 @@ pub const IDS: &[&str] = &[
     "ablation_redundancy",
     "ablation_straggler",
     "heavy_tail",
+    "serving",
     "smoke",
 ];
+
+/// Load factors of the `serving` sweep: underload, near-capacity, and
+/// overload relative to the planner's one-shot estimate.
+pub const SERVING_LOAD_FACTORS: &[f64] = &[0.5, 0.9, 1.3];
+
+/// Churn rates of the `serving` sweep (worker leave/rejoin cycles per
+/// mean one-shot service): a static fleet and a churning one.
+pub const SERVING_CHURN_RATES: &[f64] = &[0.0, 1.0];
 
 /// Weibull shapes of the `heavy_tail` sweep: 1.0 is the exponential
 /// tail (the shifted-exp law itself, different sampler bits), smaller
@@ -256,6 +267,35 @@ pub fn spec(id: &str, trials: usize, seed: u64) -> anyhow::Result<SweepSpec> {
                 ],
             )
         },
+        // Beyond the paper: the online serving sweep — load factor ×
+        // churn rate × policy on the small-scale fleet, per-job sojourn
+        // (mean / p99) instead of one-shot delay. `trials` caps the job
+        // count per master so `--trials` stays the single cost knob.
+        "serving" => SweepSpec {
+            axes: vec![
+                Axis::single("load_factor", SERVING_LOAD_FACTORS),
+                Axis::single("churn_rate", SERVING_CHURN_RATES),
+            ],
+            trials,
+            seed: fig_mc_seed(seed),
+            keep_samples: true, // p99 sojourn readout
+            arrivals: Some(ArrivalSpec {
+                process: ArrivalProcess::Poisson,
+                load_factor: 0.8,
+                jobs: trials.clamp(1, 400),
+                churn_rate: 0.0,
+                churn_downtime: 0.5,
+            }),
+            ..SweepSpec::new(
+                id,
+                ScenarioSpec::base("small", seed, CommModel::Stochastic),
+                vec![
+                    PolicySpec::new("dedi-iter", ValueModel::Markov, "markov"),
+                    PolicySpec::new("dedi-iter", ValueModel::Markov, "sca"),
+                    PolicySpec::new("frac", ValueModel::Markov, "markov"),
+                ],
+            )
+        },
         "smoke" => SweepSpec {
             trials,
             seed: fig_mc_seed(seed),
@@ -318,6 +358,29 @@ mod tests {
         assert_eq!(spec("smoke", 100, 1).unwrap().expand().unwrap().len(), 2);
         // 4 Weibull shapes × 4 policies.
         assert_eq!(spec("heavy_tail", 100, 1).unwrap().expand().unwrap().len(), 16);
+        // 3 load factors × 2 churn rates × 3 policies.
+        assert_eq!(spec("serving", 100, 1).unwrap().expand().unwrap().len(), 18);
+    }
+
+    #[test]
+    fn serving_catalog_cells_carry_arrivals() {
+        let sp = spec("serving", 5_000, 7).unwrap();
+        assert!(sp.arrivals.is_some());
+        assert_eq!(sp.arrivals.as_ref().unwrap().jobs, 400, "jobs cap at 400");
+        assert!(sp.keep_samples, "p99 readout needs samples");
+        let cells = sp.expand().unwrap();
+        // Policies innermost, churn next, load factor outermost.
+        let a0 = cells[0].arrivals.as_ref().unwrap();
+        assert_eq!(a0.load_factor, 0.5);
+        assert_eq!(a0.churn_rate, 0.0);
+        let last = cells[17].arrivals.as_ref().unwrap();
+        assert_eq!(last.load_factor, 1.3);
+        assert_eq!(last.churn_rate, 1.0);
+        // Tiny --trials values floor at one job.
+        assert_eq!(
+            spec("serving", 0, 1).unwrap().arrivals.unwrap().jobs,
+            1
+        );
     }
 
     #[test]

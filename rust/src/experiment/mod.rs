@@ -25,12 +25,14 @@
 pub mod catalog;
 pub mod spec;
 
-pub use spec::{Axis, Cell, ScenarioSpec, SweepSpec, KNOWN_PARAMS, MAX_CELLS, MAX_SEED};
+pub use spec::{ArrivalSpec, Axis, Cell, ScenarioSpec, SweepSpec, KNOWN_PARAMS, MAX_CELLS, MAX_SEED};
 
-use crate::exec::{BatchJob, BatchRunner, Outcome};
+use crate::exec::{pool, BatchJob, BatchRunner, Outcome};
 use crate::plan::Plan;
 use crate::policy::PolicySpec;
+use crate::serve::{self, JobRecord, ServeConfig};
 use crate::util::json::Json;
+use crate::util::stats::percentile;
 use crate::util::table::Table;
 
 /// Execution knobs for [`run_sweep`] (everything statistical lives in the
@@ -52,9 +54,12 @@ pub struct CellResult {
     pub policy: PolicySpec,
     /// Plan-load rescale applied (from an `overhead` axis).
     pub overhead: Option<f64>,
-    /// The plan the cell actually ran (post-overhead rescale).
+    /// The plan the cell actually ran (post-overhead rescale; for
+    /// serving cells, the initial-fleet plan).
     pub plan: Plan,
     pub outcome: Outcome,
+    /// Per-job records (serving cells only; empty on batch cells).
+    pub records: Vec<JobRecord>,
 }
 
 impl CellResult {
@@ -97,6 +102,19 @@ impl SweepResult {
                         if let Some(b) = c.overhead {
                             o.set("overhead", Json::Num(b));
                         }
+                        // Tail readout whenever raw samples were kept
+                        // (serving sweeps report mean AND p99 sojourn).
+                        if let Some(p99) =
+                            c.outcome.samples.as_deref().and_then(|xs| percentile(xs, 0.99))
+                        {
+                            o.set("p99_ms", Json::Num(p99));
+                        }
+                        if !c.records.is_empty() {
+                            let starved =
+                                c.records.iter().filter(|r| !r.feasible()).count();
+                            o.set("jobs", Json::Num(c.records.len() as f64));
+                            o.set("starved_jobs", Json::Num(starved as f64));
+                        }
                         o
                     })
                     .collect(),
@@ -136,8 +154,13 @@ impl SweepResult {
 }
 
 /// Expand `spec`, build every cell's plan, and evaluate the whole grid on
-/// one shared thread pool.
+/// one shared thread pool. Serving specs (an `arrivals` block present)
+/// route to the online serving layer instead — each cell becomes a job
+/// stream and the outcome is the sojourn distribution.
 pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> anyhow::Result<SweepResult> {
+    if spec.arrivals.is_some() {
+        return run_serving_pooled(spec, opts.threads);
+    }
     let cells = spec.expand()?;
     let mut jobs = Vec::with_capacity(cells.len());
     for c in &cells {
@@ -171,6 +194,7 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> anyhow::Result<SweepR
             overhead: cell.overhead,
             plan: job.plan,
             outcome,
+            records: Vec::new(),
         });
     }
     Ok(SweepResult {
@@ -178,6 +202,134 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> anyhow::Result<SweepR
         trials: spec.trials,
         cells: results,
     })
+}
+
+/// Run a serving sweep cell-by-cell (sequential and deterministic),
+/// invoking `on_cell` as each cell finishes — the CLI streams per-job
+/// JSON records through this hook. Every cell's [`Outcome`] summarizes
+/// the **sojourn** (arrival → completion) distribution over feasible
+/// jobs; starved jobs surface in `records` (`feasible: false`) and the
+/// `starved_jobs` export field. `run_sweep` routes serving specs through
+/// the pooled variant instead (no callback ⇒ cells may run concurrently).
+pub fn run_serving_with<F: FnMut(&CellResult)>(
+    spec: &SweepSpec,
+    mut on_cell: F,
+) -> anyhow::Result<SweepResult> {
+    anyhow::ensure!(
+        spec.arrivals.is_some(),
+        "sweep spec '{}' has no 'arrivals' block (use run_sweep for batch specs)",
+        spec.name
+    );
+    let cells = spec.expand()?;
+    let mut results = Vec::with_capacity(cells.len());
+    for cell in cells {
+        let cr = serve_cell(spec, cell)?;
+        on_cell(&cr);
+        results.push(cr);
+    }
+    Ok(SweepResult {
+        name: spec.name.clone(),
+        trials: spec.trials,
+        cells: results,
+    })
+}
+
+/// Serving-grid execution for [`run_sweep`]: independent, deterministic
+/// cells evaluated concurrently on the shared process pool. `threads ==
+/// 1` forces a serial run; other explicit widths degrade to the shared
+/// pool (values never change — cells are self-contained — only wall
+/// time does). Per-cell streaming callers use [`run_serving_with`].
+fn run_serving_pooled(spec: &SweepSpec, threads: usize) -> anyhow::Result<SweepResult> {
+    anyhow::ensure!(
+        spec.arrivals.is_some(),
+        "sweep spec '{}' has no 'arrivals' block",
+        spec.name
+    );
+    let cells = spec.expand()?;
+    let outs: Vec<anyhow::Result<CellResult>> = if threads == 1 || cells.len() <= 1 {
+        cells.into_iter().map(|c| serve_cell(spec, c)).collect()
+    } else {
+        pool::run_all(
+            cells
+                .into_iter()
+                .map(|cell| {
+                    let spec = spec.clone();
+                    move || serve_cell(&spec, cell)
+                })
+                .collect(),
+        )
+    };
+    let mut results = Vec::with_capacity(outs.len());
+    for r in outs {
+        results.push(r?);
+    }
+    Ok(SweepResult {
+        name: spec.name.clone(),
+        trials: spec.trials,
+        cells: results,
+    })
+}
+
+/// Evaluate one serving cell: job stream in, [`CellResult`] out.
+fn serve_cell(spec: &SweepSpec, cell: Cell) -> anyhow::Result<CellResult> {
+    let arr = cell
+        .arrivals
+        .clone()
+        .expect("serving cells carry an arrival spec");
+    let cfg = ServeConfig {
+        policy: cell.policy.clone(),
+        process: arr.process,
+        load_factor: arr.load_factor,
+        jobs: arr.jobs,
+        script: None,
+        churn_rate: arr.churn_rate,
+        churn_downtime: arr.churn_downtime,
+        seed: cell.seed,
+        use_cache: true,
+        warm_start: true,
+    };
+    let out = serve::run(&cell.scenario, &cfg)
+        .map_err(|e| anyhow::anyhow!("serving cell {}: {e}", cell.index))?;
+    let samples = spec.keep_samples.then(|| out.sojourn_samples());
+    // Sojourn summaries cover feasible jobs only (one starved job
+    // must not poison the mean) — but a summary that saw NO job at
+    // all because EVERY job starved would read as a feasible 0 ms
+    // cell in the export. Mark that case with an explicit ∞ so
+    // `Outcome::to_json` emits null + `"feasible": false`.
+    let starved_out = |sm: &crate::util::stats::Summary, had_jobs: bool| {
+        let mut sm = sm.clone();
+        if had_jobs && sm.count() == 0 {
+            sm.push(f64::INFINITY);
+        }
+        sm
+    };
+    let per_master: Vec<_> = out
+        .per_master
+        .iter()
+        .enumerate()
+        .map(|(m, sm)| {
+            let had = out.records.iter().any(|r| r.master == m);
+            starved_out(sm, had)
+        })
+        .collect();
+    let system = starved_out(&out.system, !out.records.is_empty());
+    let cr = CellResult {
+        index: cell.index,
+        axis_values: cell.axis_values,
+        policy: cell.policy,
+        overhead: None,
+        plan: out.cold_plan.clone(),
+        outcome: Outcome {
+            label: out.label.clone(),
+            executor: "serve".to_string(),
+            per_master,
+            system,
+            t_est_ms: out.t_est_ms,
+            samples,
+        },
+        records: out.records,
+    };
+    Ok(cr)
 }
 
 #[cfg(test)]
@@ -286,6 +438,54 @@ mod tests {
                 / t.outcome.system.mean();
             assert!(rel < 0.1, "blocked vs trial-major means diverge: {rel}");
         }
+    }
+
+    #[test]
+    fn serving_sweep_runs_deterministically_over_the_grid() {
+        let mut spec = two_policy_spec();
+        spec.keep_samples = true;
+        spec.arrivals = Some(ArrivalSpec {
+            jobs: 15,
+            churn_rate: 0.0,
+            ..Default::default()
+        });
+        spec.axes.push(Axis::single("load_factor", &[0.5, 4.0]));
+        let mut streamed = 0usize;
+        let a = run_serving_with(&spec, |c| {
+            assert_eq!(c.outcome.executor, "serve");
+            streamed += c.records.len();
+        })
+        .unwrap();
+        assert_eq!(a.cells.len(), 4);
+        // M = 2 masters × 15 jobs per cell.
+        assert_eq!(streamed, 4 * 30);
+        // run_sweep routes serving specs here automatically.
+        let b = run_sweep(&spec, &SweepOptions::default()).unwrap();
+        for (x, y) in a.cells.iter().zip(&b.cells) {
+            assert_eq!(x.outcome.system.mean(), y.outcome.system.mean());
+            assert_eq!(x.records, y.records);
+            assert_eq!(x.outcome.samples, y.outcome.samples);
+        }
+        // Deep overload queues far more than underload (same policy
+        // column; queueing delay dominates the draw-order noise).
+        for pol in 0..2 {
+            let low = &a.cells[pol];
+            let high = &a.cells[2 + pol];
+            assert!(
+                high.outcome.system.mean() >= low.outcome.system.mean(),
+                "policy {pol}: 8× overload sojourn below 0.5× underload"
+            );
+        }
+        // Export carries the serving extras.
+        let j = a.to_json();
+        let cells = j.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells[0].get("jobs").and_then(Json::as_usize), Some(30));
+        assert_eq!(cells[0].get("starved_jobs").and_then(Json::as_usize), Some(0));
+        assert!(cells[0].get("p99_ms").and_then(Json::as_f64).unwrap() > 0.0);
+        assert_eq!(
+            cells[0].get("executor").and_then(Json::as_str),
+            Some("serve")
+        );
     }
 
     #[test]

@@ -11,6 +11,7 @@
 use crate::config::{AShift, CommModel, Scenario, Transform};
 use crate::model::dist::FamilyKind;
 use crate::policy::PolicySpec;
+use crate::serve::ArrivalProcess;
 use crate::sim::SampleOrder;
 use crate::util::json::Json;
 use crate::util::rng::SplitMix64;
@@ -28,13 +29,16 @@ pub const MAX_CELLS: usize = 10_000;
 pub const MAX_SEED: u64 = 1 << 52;
 
 /// Axis parameter names [`SweepSpec::expand`] understands. All but
-/// `overhead` rewrite the [`ScenarioSpec`] (`n_masters` / `n_workers`
-/// apply to the `random` base only); `overhead` rescales the built plan
-/// via [`crate::plan::Plan::with_overhead`]. The `weibull_shape` /
+/// `overhead`, `load_factor` and `churn_rate` rewrite the
+/// [`ScenarioSpec`] (`n_masters` / `n_workers` apply to the `random`
+/// base only); `overhead` rescales the built plan via
+/// [`crate::plan::Plan::with_overhead`]. The `weibull_shape` /
 /// `pareto_alpha` / `bimodal_prob` / `bimodal_slow` params sweep the
 /// worker delay family ([`ScenarioSpec::delay_family`]): each point
 /// selects a mean-matched family with that parameter, overriding the
 /// template's own family (the two bimodal params zip naturally).
+/// `load_factor` / `churn_rate` rewrite the spec's [`ArrivalSpec`] and
+/// are only valid on serving sweeps (specs with an `arrivals` block).
 pub const KNOWN_PARAMS: &[&str] = &[
     "seed",
     "gamma_ratio",
@@ -49,7 +53,98 @@ pub const KNOWN_PARAMS: &[&str] = &[
     "bimodal_prob",
     "bimodal_slow",
     "overhead",
+    "load_factor",
+    "churn_rate",
 ];
+
+/// Serving-mode template: when a [`SweepSpec`] carries one of these,
+/// its cells run on the online serving layer ([`crate::serve`]) instead
+/// of the one-shot batch engine — each cell becomes a job stream
+/// (arrival process × load factor × synthesized churn) whose outcome is
+/// the per-job **sojourn** distribution rather than a one-shot delay.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArrivalSpec {
+    pub process: ArrivalProcess,
+    /// Arrival rate × mean one-shot service (see
+    /// [`crate::serve::ServeConfig::load_factor`]).
+    pub load_factor: f64,
+    /// Jobs per master per cell.
+    pub jobs: usize,
+    /// Worker leave/rejoin cycles per mean one-shot service (0 = static
+    /// fleet; the script is synthesized per cell from the cell seed).
+    pub churn_rate: f64,
+    /// Fraction of each churn cycle spent away.
+    pub churn_downtime: f64,
+}
+
+impl Default for ArrivalSpec {
+    fn default() -> Self {
+        Self {
+            process: ArrivalProcess::Poisson,
+            load_factor: 0.8,
+            jobs: 200,
+            churn_rate: 0.0,
+            churn_downtime: 0.5,
+        }
+    }
+}
+
+impl ArrivalSpec {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        // One validator shared with the direct ServeConfig path.
+        crate::serve::validate_arrival_knobs(
+            self.load_factor,
+            self.churn_rate,
+            self.churn_downtime,
+        )?;
+        // Sweep cells additionally need ≥ 1 job: an empty stream would
+        // export as a feasible 0 ms measurement (empty Welford summary)
+        // instead of "no data".
+        anyhow::ensure!(
+            self.jobs >= 1,
+            "arrivals.jobs must be ≥ 1 on serving sweeps (a zero-job cell has no data)"
+        );
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("process", Json::Str(self.process.as_str().to_string()));
+        j.set("load_factor", Json::Num(self.load_factor));
+        j.set("jobs", Json::Num(self.jobs as f64));
+        j.set("churn_rate", Json::Num(self.churn_rate));
+        j.set("churn_downtime", Json::Num(self.churn_downtime));
+        j
+    }
+
+    /// Parse, defaulting omitted fields.
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let d = ArrivalSpec::default();
+        let num = |k: &str, dv: f64| -> anyhow::Result<f64> {
+            match j.get(k) {
+                None => Ok(dv),
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("arrivals field '{k}' must be a number")),
+            }
+        };
+        Ok(Self {
+            process: match j.get("process").and_then(Json::as_str) {
+                None => d.process,
+                Some(s) => ArrivalProcess::parse(s)?,
+            },
+            load_factor: num("load_factor", d.load_factor)?,
+            jobs: match j.get("jobs") {
+                None => d.jobs,
+                Some(v) => v.as_usize().ok_or_else(|| {
+                    anyhow::anyhow!("arrivals field 'jobs' must be a non-negative integer")
+                })?,
+            },
+            churn_rate: num("churn_rate", d.churn_rate)?,
+            churn_downtime: num("churn_downtime", d.churn_downtime)?,
+        })
+    }
+}
 
 /// Serializable scenario template: a named base plus the knobs the sweep
 /// axes may override. `build` composes the base constructor with
@@ -424,6 +519,9 @@ pub struct Cell {
     pub policy: PolicySpec,
     /// Plan-load rescale target from an `overhead` axis.
     pub overhead: Option<f64>,
+    /// Serving-mode arrivals of this cell (the spec template with any
+    /// `load_factor` / `churn_rate` axis values applied).
+    pub arrivals: Option<ArrivalSpec>,
     /// Per-cell Monte-Carlo seed (identical across cells under CRN).
     pub seed: u64,
 }
@@ -454,6 +552,10 @@ pub struct SweepSpec {
     /// different bits (`sim::engine`'s documented contract), so golden
     /// parity only holds trial-major.
     pub sample_order: SampleOrder,
+    /// Serving mode: when present, cells run as online job streams on
+    /// [`crate::serve`] (sojourn-time outcomes) instead of one-shot
+    /// Monte-Carlo batches; `load_factor` / `churn_rate` axes apply.
+    pub arrivals: Option<ArrivalSpec>,
 }
 
 impl SweepSpec {
@@ -474,6 +576,7 @@ impl SweepSpec {
             crn: true,
             keep_samples: false,
             sample_order: SampleOrder::TrialMajor,
+            arrivals: None,
         }
     }
 
@@ -524,6 +627,18 @@ impl SweepSpec {
                     !seen.contains(&p.as_str()),
                     "param '{p}' appears on two axes"
                 );
+                if matches!(p.as_str(), "load_factor" | "churn_rate") {
+                    anyhow::ensure!(
+                        self.arrivals.is_some(),
+                        "axis param '{p}' needs an 'arrivals' block (serving sweeps only)"
+                    );
+                }
+                if p == "overhead" {
+                    anyhow::ensure!(
+                        self.arrivals.is_none(),
+                        "the 'overhead' axis is not supported on serving sweeps"
+                    );
+                }
                 seen.push(p.as_str());
             }
             for (i, pt) in ax.points.iter().enumerate() {
@@ -549,17 +664,22 @@ impl SweepSpec {
             p.resolve()
                 .map_err(|e| anyhow::anyhow!("sweep spec '{}': {e}", self.name))?;
         }
+        if let Some(a) = &self.arrivals {
+            a.validate()
+                .map_err(|e| anyhow::anyhow!("sweep spec '{}': {e}", self.name))?;
+        }
 
         let mut cells = Vec::with_capacity(total);
         let mut idx = vec![0usize; self.axes.len()];
         loop {
             let mut sc = self.scenario.clone();
             let mut overhead = None;
+            let mut arrivals = self.arrivals.clone();
             let mut axis_values = Vec::new();
             for (ai, ax) in self.axes.iter().enumerate() {
                 let pt = &ax.points[idx[ai]];
                 for (pi, param) in ax.params.iter().enumerate() {
-                    apply_param(&mut sc, &mut overhead, param, pt[pi])?;
+                    apply_param(&mut sc, &mut overhead, &mut arrivals, param, pt[pi])?;
                     axis_values.push((param.clone(), pt[pi]));
                 }
             }
@@ -577,6 +697,7 @@ impl SweepSpec {
                     scenario: scenario.clone(),
                     policy: policy.clone(),
                     overhead,
+                    arrivals: arrivals.clone(),
                     seed,
                 });
             }
@@ -617,6 +738,9 @@ impl SweepSpec {
             "sample_order",
             Json::Str(self.sample_order.as_str().to_string()),
         );
+        if let Some(a) = &self.arrivals {
+            j.set("arrivals", a.to_json());
+        }
         j
     }
 
@@ -676,6 +800,10 @@ impl SweepSpec {
                     anyhow::anyhow!("'sample_order' must be a string")
                 })?)?,
             },
+            arrivals: match j.get("arrivals") {
+                None | Some(Json::Null) => None,
+                Some(aj) => Some(ArrivalSpec::from_json(aj)?),
+            },
         })
     }
 }
@@ -683,6 +811,7 @@ impl SweepSpec {
 fn apply_param(
     sc: &mut ScenarioSpec,
     overhead: &mut Option<f64>,
+    arrivals: &mut Option<ArrivalSpec>,
     param: &str,
     v: f64,
 ) -> anyhow::Result<()> {
@@ -756,6 +885,26 @@ fn apply_param(
             sc.delay_family = FamilyKind::Bimodal { prob, slow: v };
         }
         "overhead" => *overhead = Some(v),
+        "load_factor" => {
+            let a = arrivals
+                .as_mut()
+                .ok_or_else(|| anyhow::anyhow!("'load_factor' axis needs an 'arrivals' block"))?;
+            anyhow::ensure!(
+                v.is_finite() && v > 0.0,
+                "load_factor axis value {v} must be positive and finite"
+            );
+            a.load_factor = v;
+        }
+        "churn_rate" => {
+            let a = arrivals
+                .as_mut()
+                .ok_or_else(|| anyhow::anyhow!("'churn_rate' axis needs an 'arrivals' block"))?;
+            anyhow::ensure!(
+                v.is_finite() && v >= 0.0,
+                "churn_rate axis value {v} must be finite and ≥ 0"
+            );
+            a.churn_rate = v;
+        }
         other => anyhow::bail!("unknown axis param '{other}'"),
     }
     Ok(())
@@ -974,6 +1123,108 @@ mod tests {
     }
 
     #[test]
+    fn serving_axes_rewrite_the_arrival_spec_per_cell() {
+        let mut s = base_spec();
+        s.arrivals = Some(ArrivalSpec {
+            jobs: 50,
+            ..Default::default()
+        });
+        s.axes.push(Axis::single("load_factor", &[0.5, 1.25]));
+        s.axes.push(Axis::single("churn_rate", &[0.0, 2.0]));
+        let cells = s.expand().unwrap();
+        assert_eq!(cells.len(), 4);
+        let ax = |c: &Cell, p: &str| {
+            c.axis_values
+                .iter()
+                .find(|(k, _)| k == p)
+                .map(|&(_, v)| v)
+                .unwrap()
+        };
+        for c in &cells {
+            let a = c.arrivals.as_ref().unwrap();
+            assert_eq!(a.jobs, 50);
+            assert_eq!(a.load_factor, ax(c, "load_factor"));
+            assert_eq!(a.churn_rate, ax(c, "churn_rate"));
+        }
+        // Batch cells carry no arrivals.
+        let batch = base_spec().expand().unwrap();
+        assert!(batch[0].arrivals.is_none());
+    }
+
+    #[test]
+    fn serving_param_guards() {
+        // load_factor / churn_rate axes need an arrivals block…
+        let mut s = base_spec();
+        s.axes.push(Axis::single("load_factor", &[0.5]));
+        let e = s.expand().unwrap_err();
+        assert!(e.to_string().contains("arrivals"), "{e}");
+        // …and overhead is batch-only.
+        let mut s = base_spec();
+        s.arrivals = Some(ArrivalSpec::default());
+        s.axes.push(Axis::single("overhead", &[1.5]));
+        let e = s.expand().unwrap_err();
+        assert!(e.to_string().contains("overhead"), "{e}");
+        // Malformed arrival templates fail at expand.
+        let mut s = base_spec();
+        s.arrivals = Some(ArrivalSpec {
+            load_factor: 0.0,
+            ..Default::default()
+        });
+        assert!(s.expand().unwrap_err().to_string().contains("load_factor"));
+        let mut s = base_spec();
+        s.arrivals = Some(ArrivalSpec {
+            churn_downtime: 1.5,
+            ..Default::default()
+        });
+        assert!(s.expand().is_err());
+        // Invalid axis values too.
+        let mut s = base_spec();
+        s.arrivals = Some(ArrivalSpec::default());
+        s.axes.push(Axis::single("churn_rate", &[-1.0]));
+        assert!(s.expand().is_err());
+        // Zero-job cells would export as feasible 0 ms measurements.
+        let mut s = base_spec();
+        s.arrivals = Some(ArrivalSpec {
+            jobs: 0,
+            ..Default::default()
+        });
+        assert!(s.expand().unwrap_err().to_string().contains("jobs"));
+    }
+
+    #[test]
+    fn arrival_spec_json_roundtrips_with_defaults() {
+        let mut s = base_spec();
+        s.arrivals = Some(ArrivalSpec {
+            process: ArrivalProcess::Deterministic,
+            load_factor: 1.25,
+            jobs: 77,
+            churn_rate: 0.5,
+            churn_downtime: 0.25,
+        });
+        let text = s.to_json().to_string_pretty();
+        let back = SweepSpec::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, s);
+        // A minimal hand-written arrivals block picks up defaults.
+        let text = r#"{
+            "schema": 1,
+            "arrivals": {"load_factor": 1.1},
+            "policies": [{"policy": "dedi-iter", "values": "markov", "loads": "markov"}]
+        }"#;
+        let spec = SweepSpec::from_json(&json::parse(text).unwrap()).unwrap();
+        let a = spec.arrivals.unwrap();
+        assert_eq!(a.load_factor, 1.1);
+        assert_eq!(a.jobs, ArrivalSpec::default().jobs);
+        assert_eq!(a.process, ArrivalProcess::Poisson);
+        // Unknown process names error gracefully.
+        let bad = r#"{
+            "schema": 1,
+            "arrivals": {"process": "bursty"},
+            "policies": [{"policy": "dedi-iter", "values": "markov", "loads": "markov"}]
+        }"#;
+        assert!(SweepSpec::from_json(&json::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
     fn unknown_base_rejected() {
         let mut s = base_spec();
         s.scenario.base = "quantum".into();
@@ -1145,6 +1396,21 @@ mod tests {
                         SampleOrder::Blocked
                     } else {
                         SampleOrder::TrialMajor
+                    },
+                    arrivals: if g.bool() {
+                        Some(ArrivalSpec {
+                            process: if g.bool() {
+                                ArrivalProcess::Poisson
+                            } else {
+                                ArrivalProcess::Deterministic
+                            },
+                            load_factor: g.f64_range(0.25, 2.0),
+                            jobs: g.usize_range(0, 500),
+                            churn_rate: g.f64_range(0.0, 4.0),
+                            churn_downtime: g.f64_range(0.1, 0.9),
+                        })
+                    } else {
+                        None
                     },
                 };
                 let text = spec.to_json().to_string_pretty();

@@ -32,9 +32,10 @@
 //! | [`assign`] | worker assignment: Alg. 1 (iterated greedy), Alg. 2 (simple greedy), Alg. 4 (fractional), λ-sweep optimum, uniform benchmarks |
 //! | [`policy`] | OPEN strategy API: `Assigner`/`LoadAllocator` traits, string-keyed registry, serializable `PolicySpec` |
 //! | [`plan`] | strategy pair → `Plan` (assignment + allocation) pipeline; schema-versioned plan JSON |
-//! | [`sim`] | Monte-Carlo completion-delay engine (multi-threaded) |
+//! | [`sim`] | Monte-Carlo completion-delay engine (multi-threaded), incl. time-varying-share capacity profiles |
 //! | [`exec`] | unified `Executor` seam over [`sim`] and [`coordinator`]; shared-pool `BatchRunner` for cell grids |
-//! | [`experiment`] | declarative sweeps: schema-versioned `SweepSpec` (axes × policies), figure catalog, batched `run_sweep` |
+//! | [`serve`] | online serving: job arrivals + worker churn, plan cache with warm-started replanning, per-job sojourn records |
+//! | [`experiment`] | declarative sweeps: schema-versioned `SweepSpec` (axes × policies + serving arrivals), figure catalog, batched `run_sweep` |
 //! | [`traces`] | EC2-style instance profiles + shifted-exponential fitting (Fig. 7) |
 //! | [`figures`] | regenerates every figure of §V (Figs. 2–8) |
 //! | [`runtime`] | PJRT bridge: artifact manifest, executable cache, typed execute |
@@ -51,6 +52,7 @@ pub mod policy;
 pub mod plan;
 pub mod sim;
 pub mod exec;
+pub mod serve;
 pub mod experiment;
 pub mod traces;
 pub mod figures;

@@ -135,7 +135,9 @@ impl TraceDist {
         );
         Ok(Self {
             name: name.to_string(),
-            ecdf: Arc::new(Ecdf::new(samples)),
+            // Checked path even though the guards above already hold:
+            // trace JSON must never reach a panicking constructor.
+            ecdf: Arc::new(Ecdf::try_new(samples)?),
         })
     }
 
@@ -1026,7 +1028,7 @@ mod tests {
     fn ks_stat(fam: &DelayFamily, n: usize, seed: u64) -> f64 {
         let mut rng = Rng::new(seed);
         let mut xs: Vec<f64> = (0..n).map(|_| fam.sample(&mut rng)).collect();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(f64::total_cmp);
         let nn = n as f64;
         let mut ks = 0.0f64;
         for (i, &x) in xs.iter().enumerate() {

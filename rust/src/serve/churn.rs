@@ -1,0 +1,225 @@
+//! Worker churn: scripted join/leave/throttle events and their
+//! compilation into per-worker [`CapacityProfile`]s.
+//!
+//! A [`ChurnScript`] is the static description of how the shared worker
+//! fleet changes over a serving run's virtual timeline: workers leave
+//! (capacity → 0; in-flight work suspends and resumes on rejoin), join
+//! back, or get throttled to a fraction of their planned rate. The
+//! script is known up front — the serving loop queries the *state at
+//! admission time* for planning (the fingerprint the plan cache keys
+//! on) and warps in-flight sub-task durations through the full profile
+//! (see [`CapacityProfile::warp`]), so no event rescheduling is ever
+//! needed.
+
+use crate::sim::engine::CapacityProfile;
+use crate::util::rng::Rng;
+
+/// What happens to a worker at one churn event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ChurnAction {
+    /// Capacity → 0: the worker is gone; its in-flight work suspends.
+    Leave,
+    /// Capacity → 1: back at full planned rate.
+    Join,
+    /// Capacity → the given factor (relative to the fitted rate).
+    Throttle(f64),
+}
+
+/// One scripted fleet change.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChurnEvent {
+    /// Virtual time of the change (ms).
+    pub at_ms: f64,
+    /// 1-based worker id.
+    pub worker: usize,
+    pub action: ChurnAction,
+}
+
+/// A whole run's scripted fleet timeline.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ChurnScript {
+    pub events: Vec<ChurnEvent>,
+}
+
+/// Synthesized scripts never exceed this many events — a guard against
+/// degenerate `t_ref / rate` spacings producing absurd timelines.
+const MAX_SYNTH_EVENTS: usize = 200_000;
+
+impl ChurnScript {
+    /// The empty script (a static fleet).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Check every event against a fleet of `n_workers` workers.
+    pub fn validate(&self, n_workers: usize) -> anyhow::Result<()> {
+        for e in &self.events {
+            anyhow::ensure!(
+                e.at_ms.is_finite() && e.at_ms >= 0.0,
+                "churn event time {} must be finite and ≥ 0",
+                e.at_ms
+            );
+            anyhow::ensure!(
+                (1..=n_workers).contains(&e.worker),
+                "churn event names worker {} (scenario has workers 1..={n_workers})",
+                e.worker
+            );
+            if let ChurnAction::Throttle(f) = e.action {
+                anyhow::ensure!(
+                    f.is_finite() && f >= 0.0,
+                    "throttle factor {f} must be finite and ≥ 0"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Compile into per-node capacity profiles: index 0 is the
+    /// master-local slot (always constant — churn addresses shared
+    /// workers only), index `w` is worker `w`. Events apply in time
+    /// order (ties: script order).
+    pub fn profiles(&self, n_workers: usize) -> anyhow::Result<Vec<CapacityProfile>> {
+        self.validate(n_workers)?;
+        let mut sorted = self.events.clone();
+        sorted.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms)); // stable
+        let mut points: Vec<Vec<(f64, f64)>> = vec![Vec::new(); n_workers + 1];
+        for e in &sorted {
+            let f = match e.action {
+                ChurnAction::Leave => 0.0,
+                ChurnAction::Join => 1.0,
+                ChurnAction::Throttle(f) => f,
+            };
+            points[e.worker].push((e.at_ms, f));
+        }
+        points
+            .into_iter()
+            .map(CapacityProfile::from_breakpoints)
+            .collect()
+    }
+
+    /// Number of script events at or before `t` — the fleet "epoch"
+    /// stamped on job records for observability.
+    pub fn epoch_at(&self, t: f64) -> usize {
+        self.events.iter().filter(|e| e.at_ms <= t).count()
+    }
+
+    /// Synthesize a leave/rejoin timeline: every `t_ref / rate` ms one
+    /// seed-chosen worker leaves and rejoins after `downtime` (clamped
+    /// to [0.05, 0.95]) of that cycle, until `horizon_ms`. `rate = 0`
+    /// (or an empty fleet) yields the empty script. Because the
+    /// downtime is strictly shorter than the cycle, at most one worker
+    /// is away at any instant — the fleet state space stays small and
+    /// the serving layer's plan cache converges after one cycle per
+    /// distinct worker.
+    pub fn synthesize(
+        n_workers: usize,
+        rate: f64,
+        downtime: f64,
+        t_ref: f64,
+        horizon_ms: f64,
+        seed: u64,
+    ) -> Self {
+        if !(rate.is_finite() && rate > 0.0) || n_workers == 0 {
+            return Self::none();
+        }
+        let spacing = t_ref / rate;
+        if !(spacing.is_finite() && spacing > 0.0) {
+            return Self::none();
+        }
+        let down = spacing * downtime.clamp(0.05, 0.95);
+        let mut rng = Rng::new(seed ^ 0xC42A_51ED);
+        let mut events = Vec::new();
+        let mut t = spacing;
+        while t < horizon_ms && events.len() + 2 <= MAX_SYNTH_EVENTS {
+            let w = 1 + rng.index(n_workers);
+            events.push(ChurnEvent {
+                at_ms: t,
+                worker: w,
+                action: ChurnAction::Leave,
+            });
+            events.push(ChurnEvent {
+                at_ms: t + down,
+                worker: w,
+                action: ChurnAction::Join,
+            });
+            t += spacing;
+        }
+        Self { events }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_follow_leave_join_throttle() {
+        let script = ChurnScript {
+            events: vec![
+                ChurnEvent { at_ms: 10.0, worker: 2, action: ChurnAction::Leave },
+                ChurnEvent { at_ms: 20.0, worker: 2, action: ChurnAction::Join },
+                ChurnEvent { at_ms: 15.0, worker: 1, action: ChurnAction::Throttle(0.25) },
+            ],
+        };
+        let profiles = script.profiles(3).unwrap();
+        assert_eq!(profiles.len(), 4);
+        assert!(profiles[0].is_constant(), "local slot never churns");
+        assert!(profiles[3].is_constant(), "untouched worker stays constant");
+        assert_eq!(profiles[2].factor_at(5.0), 1.0);
+        assert_eq!(profiles[2].factor_at(10.0), 0.0);
+        assert_eq!(profiles[2].factor_at(19.9), 0.0);
+        assert_eq!(profiles[2].factor_at(20.0), 1.0);
+        assert_eq!(profiles[1].factor_at(14.0), 1.0);
+        assert_eq!(profiles[1].factor_at(15.0), 0.25);
+        // Epochs count events at or before t.
+        assert_eq!(script.epoch_at(0.0), 0);
+        assert_eq!(script.epoch_at(10.0), 1);
+        assert_eq!(script.epoch_at(15.0), 2);
+        assert_eq!(script.epoch_at(1e9), 3);
+    }
+
+    #[test]
+    fn validation_rejects_malformed_events() {
+        let bad_worker = ChurnScript {
+            events: vec![ChurnEvent { at_ms: 1.0, worker: 9, action: ChurnAction::Leave }],
+        };
+        assert!(bad_worker.validate(3).is_err());
+        let bad_time = ChurnScript {
+            events: vec![ChurnEvent { at_ms: f64::NAN, worker: 1, action: ChurnAction::Join }],
+        };
+        assert!(bad_time.validate(3).is_err());
+        let bad_factor = ChurnScript {
+            events: vec![ChurnEvent { at_ms: 1.0, worker: 1, action: ChurnAction::Throttle(-0.5) }],
+        };
+        assert!(bad_factor.validate(3).is_err());
+        assert!(ChurnScript::none().validate(0).is_ok());
+    }
+
+    #[test]
+    fn synthesized_scripts_alternate_leave_join_and_terminate() {
+        let sc = ChurnScript::synthesize(5, 1.0, 0.5, 20.0, 200.0, 7);
+        assert!(!sc.is_empty());
+        sc.validate(5).unwrap();
+        assert_eq!(sc.events.len() % 2, 0);
+        for pair in sc.events.chunks(2) {
+            assert_eq!(pair[0].action, ChurnAction::Leave);
+            assert_eq!(pair[1].action, ChurnAction::Join);
+            assert_eq!(pair[0].worker, pair[1].worker);
+            assert!(pair[1].at_ms > pair[0].at_ms);
+            // Downtime strictly inside the cycle: at most one worker out.
+            assert!(pair[1].at_ms - pair[0].at_ms < 20.0);
+        }
+        // Deterministic in the seed; different seeds pick differently.
+        assert_eq!(sc, ChurnScript::synthesize(5, 1.0, 0.5, 20.0, 200.0, 7));
+        // Zero rate or empty fleet → empty script.
+        assert!(ChurnScript::synthesize(5, 0.0, 0.5, 20.0, 200.0, 7).is_empty());
+        assert!(ChurnScript::synthesize(0, 1.0, 0.5, 20.0, 200.0, 7).is_empty());
+        // Degenerate spacings terminate via the event cap.
+        let huge = ChurnScript::synthesize(5, 1e12, 0.5, 1.0, 1e9, 7);
+        assert!(huge.events.len() <= super::MAX_SYNTH_EVENTS);
+    }
+}

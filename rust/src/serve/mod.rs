@@ -1,0 +1,1121 @@
+//! Online serving: task arrivals over time + worker churn on one shared
+//! heterogeneous fleet.
+//!
+//! The paper plans ONE batch of `M` matmul tasks; a production system
+//! serves a continuous stream (the regime of Stream Distributed Coded
+//! Computing, arXiv:2103.01921). This module is that serving layer, in
+//! virtual time:
+//!
+//! * **Arrivals** — each master receives `jobs` tasks from a
+//!   deterministic or Poisson process whose mean inter-arrival is
+//!   `t*_base / load_factor` (`t*_base` = the full-fleet planner
+//!   estimate), so `load_factor < 1` is underload and `> 1` overload.
+//!   Each master serves its own queue FIFO, one job at a time; all
+//!   masters run concurrently on the shared fleet (the paper's
+//!   fractional sharing).
+//! * **Admission → (re)planning** — when a job reaches the head of its
+//!   queue, the serving loop needs a plan for the CURRENT fleet state.
+//!   A **plan cache** keyed by the fleet fingerprint (every worker's
+//!   capacity factor, bit-exact) skips replanning while the state is
+//!   unchanged; on a miss, the policy registry replans on the active
+//!   subset ([`crate::config::Scenario::subset_workers`]), with a
+//!   **warm start** for SCA-load policies — the previous plan's
+//!   [`crate::alloc::Allocation`] (projected onto the surviving
+//!   workers) seeds Algorithm 3 instead of the Theorem-1 start.
+//! * **Churn** — a [`ChurnScript`] moves workers in/out/throttled over
+//!   the timeline; compiled per-worker [`CapacityProfile`]s both drive
+//!   the fingerprint and time-warp in-flight sub-task durations
+//!   ([`crate::sim::engine::Compiled::sample_master_warped`]), so a job
+//!   whose worker leaves mid-service suspends that link (and starves —
+//!   `feasible: false` — only if the surviving coded links cannot reach
+//!   `L_m`).
+//! * **Records** — every job yields a [`JobRecord`] (arrival, start,
+//!   service, sojourn, epoch, cache hit) that streams as one JSON line
+//!   from `coded-coop serve`; the aggregate [`ServeOutcome`] reports
+//!   per-master and system sojourn summaries (mean / p99).
+//!
+//! **Parity contract:** with constant shares and no churn, the plan is
+//! built once, every admission is a cache hit, and job service times
+//! are drawn from the stream `Rng::new(seed).fork(1)` through the exact
+//! batch-kernel draw ([`Compiled::sample_master`]) — so a deterministic
+//! lockstep arrival pattern reproduces `sim::run`'s completion delays
+//! **bit-for-bit** on the same seed (`rust/tests/serving.rs` pins this).
+
+pub mod churn;
+
+pub use churn::{ChurnAction, ChurnEvent, ChurnScript};
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
+
+use crate::alloc::{self, markov, sca, Allocation, EffLink};
+use crate::config::Scenario;
+use crate::plan::{self, Plan};
+use crate::policy::{LoadAllocator, PolicySpec};
+use crate::sim::engine::{CapacityProfile, Compiled};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::{percentile, Summary};
+
+/// XOR salt separating the arrival-time RNG from the service stream —
+/// service draws must consume `Rng::new(seed).fork(1)` exactly like the
+/// batch engine's stream 1, independent of how arrivals are generated.
+const ARRIVAL_SALT: u64 = 0x0A44_1CA1;
+
+/// Shared validation of the arrival/churn knobs, used by both direct
+/// [`ServeConfig`] runs and `experiment::ArrivalSpec` templates so the
+/// two entry paths cannot drift. (Job counts are NOT checked here: a
+/// zero-job stream is a legitimate library edge case, while the sweep
+/// layer rejects it because an empty cell would export as a feasible
+/// 0 ms measurement.)
+pub fn validate_arrival_knobs(
+    load_factor: f64,
+    churn_rate: f64,
+    churn_downtime: f64,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        load_factor.is_finite() && load_factor > 0.0,
+        "load_factor must be positive and finite, got {load_factor}"
+    );
+    anyhow::ensure!(
+        churn_rate.is_finite() && churn_rate >= 0.0,
+        "churn_rate must be finite and ≥ 0, got {churn_rate}"
+    );
+    anyhow::ensure!(
+        churn_downtime > 0.0 && churn_downtime < 1.0,
+        "churn_downtime must be in (0, 1), got {churn_downtime}"
+    );
+    Ok(())
+}
+
+/// Render a JSON value as one line — the JSONL record form `coded-coop
+/// serve` streams. The pretty serializer's newlines are purely
+/// structural (string contents escape theirs as `\n`), so stripping
+/// each newline together with the indentation that follows it yields
+/// equivalent compact JSON.
+pub fn json_line(j: &Json) -> String {
+    let pretty = j.to_string_pretty();
+    let mut out = String::with_capacity(pretty.len());
+    for (i, line) in pretty.lines().enumerate() {
+        out.push_str(if i == 0 { line } else { line.trim_start() });
+    }
+    out
+}
+
+/// Per-master job arrival process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalProcess {
+    /// Fixed inter-arrival `period`; every master arrives in lockstep.
+    Deterministic,
+    /// Exponential inter-arrivals with mean `period`, independent per
+    /// master.
+    Poisson,
+}
+
+impl ArrivalProcess {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ArrivalProcess::Deterministic => "deterministic",
+            ArrivalProcess::Poisson => "poisson",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "deterministic" => Ok(ArrivalProcess::Deterministic),
+            "poisson" => Ok(ArrivalProcess::Poisson),
+            other => anyhow::bail!("unknown arrival process '{other}' (deterministic|poisson)"),
+        }
+    }
+}
+
+/// Everything one serving run needs beyond the scenario.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub policy: PolicySpec,
+    pub process: ArrivalProcess,
+    /// Arrival rate × mean one-shot service (per master): the mean
+    /// inter-arrival is `t*_base / load_factor`.
+    pub load_factor: f64,
+    /// Jobs per master.
+    pub jobs: usize,
+    /// Explicit fleet timeline; `None` synthesizes one from
+    /// `churn_rate` / `churn_downtime` ([`ChurnScript::synthesize`]).
+    pub script: Option<ChurnScript>,
+    /// Worker leave/rejoin cycles per `t*_base` (0 = static fleet).
+    pub churn_rate: f64,
+    /// Fraction of each churn cycle the worker spends away.
+    pub churn_downtime: f64,
+    pub seed: u64,
+    /// Reuse plans across admissions with an unchanged fleet state
+    /// (disable to force a cold replan per admission — the plan-cache
+    /// parity tests do).
+    pub use_cache: bool,
+    /// Seed SCA-load replans with the previous allocation.
+    pub warm_start: bool,
+}
+
+impl ServeConfig {
+    /// Defaults: deterministic arrivals at 0.8 load, 50 jobs/master,
+    /// static fleet, cache + warm starts on.
+    pub fn new(policy: PolicySpec) -> Self {
+        Self {
+            policy,
+            process: ArrivalProcess::Deterministic,
+            load_factor: 0.8,
+            jobs: 50,
+            script: None,
+            churn_rate: 0.0,
+            churn_downtime: 0.5,
+            seed: 2022,
+            use_cache: true,
+            warm_start: true,
+        }
+    }
+}
+
+/// One served job's lifecycle.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobRecord {
+    /// Per-master job index (arrival order).
+    pub job: usize,
+    pub master: usize,
+    pub arrival_ms: f64,
+    /// Admission (service start) time.
+    pub start_ms: f64,
+    /// Sampled service duration; `∞` = the job starved (the coded links
+    /// still finishing carry fewer than `L_m` rows after churn).
+    pub service_ms: f64,
+    /// Churn-script epoch at admission (events at or before start).
+    pub epoch: usize,
+    /// Whether admission reused a cached plan for the fleet state.
+    pub cache_hit: bool,
+}
+
+impl JobRecord {
+    pub fn feasible(&self) -> bool {
+        self.service_ms.is_finite()
+    }
+
+    pub fn wait_ms(&self) -> f64 {
+        self.start_ms - self.arrival_ms
+    }
+
+    pub fn completion_ms(&self) -> f64 {
+        self.start_ms + self.service_ms
+    }
+
+    /// Arrival → completion (the serving metric; `∞` when starved).
+    pub fn sojourn_ms(&self) -> f64 {
+        self.completion_ms() - self.arrival_ms
+    }
+
+    /// One streaming record. Non-finite durations serialize as `null`
+    /// with the explicit `"feasible": false` flag alongside, so an
+    /// export → parse round-trip keeps the starvation information.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("job", Json::Num(self.job as f64));
+        j.set("master", Json::Num(self.master as f64));
+        j.set("arrival_ms", Json::Num(self.arrival_ms));
+        j.set("start_ms", Json::Num(self.start_ms));
+        j.set("wait_ms", Json::Num(self.wait_ms()));
+        j.set("service_ms", Json::Num(self.service_ms));
+        j.set("sojourn_ms", Json::Num(self.sojourn_ms()));
+        j.set("feasible", Json::Bool(self.feasible()));
+        j.set("epoch", Json::Num(self.epoch as f64));
+        j.set("cache_hit", Json::Bool(self.cache_hit));
+        j
+    }
+}
+
+/// Aggregate result of one serving run.
+#[derive(Clone, Debug)]
+pub struct ServeOutcome {
+    /// Plan legend label (policy roster name).
+    pub label: String,
+    /// Every job in admission order.
+    pub records: Vec<JobRecord>,
+    /// Sojourn summaries over FEASIBLE jobs per master.
+    pub per_master: Vec<Summary>,
+    /// Sojourn summary over all feasible jobs.
+    pub system: Summary,
+    /// The t = 0 fleet plan's predicted system delay.
+    pub t_est_ms: f64,
+    /// The plan of the initial fleet state.
+    pub cold_plan: Plan,
+    /// Plans actually built (cache misses).
+    pub replans: usize,
+    /// Admissions that reused a cached plan.
+    pub cache_hits: usize,
+    /// Jobs that never completed (recorded `feasible: false`).
+    pub infeasible: usize,
+    /// Total SCA subproblem solves across replans (0 for closed-form
+    /// load policies).
+    pub sca_iters: usize,
+    /// Mean inter-arrival the run used (`t*_base / load_factor`).
+    pub period_ms: f64,
+}
+
+impl ServeOutcome {
+    /// Sojourns of the feasible jobs, admission order.
+    pub fn sojourn_samples(&self) -> Vec<f64> {
+        self.records
+            .iter()
+            .filter(|r| r.feasible())
+            .map(JobRecord::sojourn_ms)
+            .collect()
+    }
+
+    /// p99 sojourn over feasible jobs (`None` when nothing completed).
+    pub fn p99_ms(&self) -> Option<f64> {
+        p99_sojourn_ms(&self.records)
+    }
+}
+
+/// p99 sojourn over the feasible jobs of a record set (`None` when
+/// nothing completed) — the one tail readout shared by the CLI tables
+/// and [`ServeOutcome::p99_ms`].
+pub fn p99_sojourn_ms(records: &[JobRecord]) -> Option<f64> {
+    let xs: Vec<f64> = records
+        .iter()
+        .filter(|r| r.feasible())
+        .map(JobRecord::sojourn_ms)
+        .collect();
+    percentile(&xs, 0.99)
+}
+
+// ----------------------------------------------------------------------
+// Planning at a fleet state (subset + throttle + warm start)
+// ----------------------------------------------------------------------
+
+/// Build the plan for a fleet state. `factors[w]` (`w = 1..=N`; index 0
+/// is the master-local slot and must stay 1.0) is each worker's current
+/// capacity factor: 0 excludes the worker from planning, other values
+/// scale its fitted computation rate `u`. Node ids in the returned plan
+/// refer to the FULL scenario. `warm` seeds SCA-load policies with a
+/// previous plan's allocation projected onto the surviving workers; the
+/// second return value counts SCA subproblem solves (0 for closed-form
+/// allocators).
+pub fn plan_for(
+    s: &Scenario,
+    policy: &PolicySpec,
+    factors: &[f64],
+    warm: Option<&Plan>,
+) -> anyhow::Result<(Plan, usize)> {
+    let n = s.n_workers();
+    anyhow::ensure!(
+        factors.len() == n + 1,
+        "need one capacity factor per node (index 0 = local), got {} for {n} workers",
+        factors.len()
+    );
+    for (i, &f) in factors.iter().enumerate() {
+        anyhow::ensure!(
+            f.is_finite() && f >= 0.0,
+            "capacity factor {f} at node {i} must be finite and ≥ 0"
+        );
+    }
+    let active: Vec<usize> = (1..=n).filter(|&w| factors[w] > 0.0).collect();
+    anyhow::ensure!(
+        !active.is_empty(),
+        "no active workers to plan on (every capacity factor is 0)"
+    );
+    let full_fleet = active.len() == n && active.iter().all(|&w| factors[w] == 1.0);
+    let sub = if full_fleet {
+        s.clone()
+    } else {
+        let mut sub = s.subset_workers(&active)?;
+        for (j, &w) in active.iter().enumerate() {
+            throttle_link_u(&mut sub, j, factors[w]);
+        }
+        sub
+    };
+    let resolved = policy.resolve()?;
+    let (mut built, iters) = if resolved.loads == "sca" {
+        // SCA with an optional warm start: project the previous plan's
+        // loads onto the surviving nodes (sub-scenario ids) and seed
+        // Algorithm 3 there instead of at the Theorem-1 closed form.
+        let prev: Vec<HashMap<usize, f64>> = (0..s.n_masters())
+            .map(|m| match warm {
+                Some(p) => p.masters[m]
+                    .entries
+                    .iter()
+                    .filter_map(|e| {
+                        let sub_node = if e.node == 0 {
+                            Some(0)
+                        } else {
+                            active.binary_search(&e.node).ok().map(|j| j + 1)
+                        };
+                        sub_node.map(|sn| (sn, e.load))
+                    })
+                    .collect(),
+                None => HashMap::new(),
+            })
+            .collect();
+        let warm_alloc = WarmSca {
+            prev,
+            iters: AtomicUsize::new(0),
+        };
+        let p = plan::build_with(&sub, resolved.assigner.as_ref(), &warm_alloc, &resolved.label());
+        let iters = warm_alloc.iters.load(AtomicOrdering::Relaxed);
+        (p, iters)
+    } else {
+        (resolved.build(&sub), 0)
+    };
+    if active.len() != n {
+        // Remap sub-scenario worker ids back onto the full fleet.
+        for mp in built.masters.iter_mut() {
+            for e in mp.entries.iter_mut() {
+                if e.node >= 1 {
+                    e.node = active[e.node - 1];
+                }
+            }
+        }
+    }
+    Ok((built, iters))
+}
+
+/// The plan-time throttling rule, in ONE place for both the planning
+/// subset and the execution scenario: a host running at `factor` of its
+/// capacity stretches its WHOLE per-row computation law by `1/factor`
+/// (`a → a/factor`, `u → u·factor` — every mean-matched parametric
+/// family resolves to the base law scaled by `1/factor`), leaving the
+/// comm parameters alone. Stretching the whole law is what makes
+/// [`CapacityProfile::warp_scaled`]'s normalization (`work = d·f_admit`)
+/// EXACT for parametric families: a duration sampled under the throttle
+/// is the base draw over `factor`. Factors of 0 (absent — never planned
+/// onto) and exactly 1 (bit-exact full rate) are no-ops.
+///
+/// Trace-driven links cannot be throttled this way — their sampler
+/// ignores the fitted `(a, u)` surrogate — so [`run`] rejects
+/// fractional throttles on scenarios with trace-family worker links
+/// (leave/join churn is fine: it never rescales the law).
+fn throttle_link_u(s: &mut Scenario, col: usize, factor: f64) {
+    if factor > 0.0 && factor != 1.0 {
+        for row in s.links.iter_mut() {
+            row[col].a /= factor;
+            row[col].u *= factor;
+        }
+    }
+}
+
+/// The full scenario with each worker's fitted computation rate scaled
+/// by its current capacity factor — what serving plans compile against
+/// (absent workers keep their base parameters; no plan references them).
+fn throttled_scenario(s: &Scenario, factors: &[f64]) -> Scenario {
+    let mut out = s.clone();
+    for w in 1..=s.n_workers() {
+        throttle_link_u(&mut out, w - 1, factors[w]);
+    }
+    out
+}
+
+/// SCA load allocator with a warm-start seed (the serving layer's
+/// replacement for the registry's cold `ScaAllocator` — identical when
+/// `prev` is empty).
+struct WarmSca {
+    /// Per-master previous loads keyed by SUB-scenario node id.
+    prev: Vec<HashMap<usize, f64>>,
+    iters: AtomicUsize,
+}
+
+impl LoadAllocator for WarmSca {
+    fn label_suffix(&self) -> &'static str {
+        " + SCA"
+    }
+
+    fn allocate(
+        &self,
+        s: &Scenario,
+        m: usize,
+        nodes: &[usize],
+        shares: &[(f64, f64)],
+    ) -> Allocation {
+        let l_rows = s.l_rows(m);
+        let links: Vec<EffLink> = nodes
+            .iter()
+            .zip(shares)
+            .map(|(&nd, &(k, b))| EffLink::fractional(&s.link(m, nd), k, b))
+            .collect();
+        let thetas: Vec<f64> = links.iter().map(EffLink::theta).collect();
+        let cold = markov::allocate(&thetas, l_rows);
+        let start = if self.prev[m].is_empty() {
+            cold
+        } else {
+            let mut loads = cold.loads.clone();
+            for (i, nd) in nodes.iter().enumerate() {
+                if let Some(&pl) = self.prev[m].get(nd) {
+                    if pl > 0.0 && thetas[i].is_finite() {
+                        loads[i] = pl;
+                    }
+                }
+            }
+            let total: f64 = loads.iter().sum();
+            if total > l_rows * (1.0 + 1e-9) {
+                // Exact-model boundary t for the projected loads — a
+                // feasible SCA start by construction.
+                let t = alloc::exact_t_for_loads(&links, &loads, l_rows);
+                Allocation { loads, t_star: t }
+            } else {
+                cold
+            }
+        };
+        let (a, it) = sca::enhance_traced(&links, l_rows, &start, &sca::ScaOptions::default());
+        self.iters.fetch_add(it, AtomicOrdering::Relaxed);
+        a
+    }
+}
+
+// ----------------------------------------------------------------------
+// The event loop
+// ----------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+enum EvKind {
+    Arrival { master: usize, job: usize },
+    Completion { master: usize },
+}
+
+/// Heap key: virtual time, ties broken by insertion sequence (so
+/// same-instant arrivals process in master order — the lockstep case
+/// the batch-parity test relies on).
+#[derive(Clone, Copy, Debug)]
+struct Ev {
+    at: f64,
+    seq: u64,
+    kind: EvKind,
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, o: &Self) -> bool {
+        self.at.to_bits() == o.at.to_bits() && self.seq == o.seq
+    }
+}
+impl Eq for Ev {}
+impl Ord for Ev {
+    fn cmp(&self, o: &Self) -> Ordering {
+        self.at.total_cmp(&o.at).then(self.seq.cmp(&o.seq))
+    }
+}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+
+struct PlanCtx {
+    plan: Plan,
+    compiled: Compiled,
+}
+
+struct ServeLoop<'a> {
+    s: &'a Scenario,
+    cfg: &'a ServeConfig,
+    profiles: &'a [CapacityProfile],
+    /// Script event times, presorted for O(log n) epoch lookups.
+    epoch_times: Vec<f64>,
+    heap: BinaryHeap<Reverse<Ev>>,
+    seq: u64,
+    queues: Vec<VecDeque<(usize, f64)>>,
+    busy: Vec<bool>,
+    cache: HashMap<Vec<u64>, Rc<PlanCtx>>,
+    cold: Option<Rc<PlanCtx>>,
+    last_plan: Option<Plan>,
+    service_rng: Rng,
+    times: Vec<f64>,
+    loads: Vec<f64>,
+    records: Vec<JobRecord>,
+    replans: usize,
+    cache_hits: usize,
+    infeasible: usize,
+    sca_iters: usize,
+}
+
+impl ServeLoop<'_> {
+    fn push(&mut self, at: f64, kind: EvKind) {
+        let ev = Ev {
+            at,
+            seq: self.seq,
+            kind,
+        };
+        self.seq += 1;
+        self.heap.push(Reverse(ev));
+    }
+
+    /// Churn epoch at `t` — [`ChurnScript::epoch_at`] over the
+    /// presorted event times, O(log events) per admission instead of a
+    /// linear scan (synthesized scripts can carry thousands of events).
+    fn epoch_at(&self, t: f64) -> usize {
+        self.epoch_times.partition_point(|&bt| bt <= t)
+    }
+
+    /// Plan (or fetch) for the fleet state at `now`. Either way, the
+    /// FIRST plan an admission actually uses becomes `cold` — the
+    /// "initial fleet state" plan the outcome reports (a cache hit on
+    /// the pre-seeded full-fleet entry counts; a churned first
+    /// admission does too).
+    fn plan_at(&mut self, now: f64) -> anyhow::Result<(Rc<PlanCtx>, bool)> {
+        let n = self.s.n_workers();
+        let key: Vec<u64> = (1..=n)
+            .map(|w| self.profiles[w].factor_at(now).to_bits())
+            .collect();
+        if self.cfg.use_cache {
+            if let Some(ctx) = self.cache.get(&key) {
+                self.cache_hits += 1;
+                let ctx = Rc::clone(ctx);
+                if self.cold.is_none() {
+                    self.cold = Some(Rc::clone(&ctx));
+                }
+                return Ok((ctx, true));
+            }
+        }
+        let mut factors = vec![1.0f64; n + 1];
+        for w in 1..=n {
+            factors[w] = self.profiles[w].factor_at(now);
+        }
+        let warm = if self.cfg.warm_start {
+            self.last_plan.as_ref()
+        } else {
+            None
+        };
+        let (built, iters) = plan_for(self.s, &self.cfg.policy, &factors, warm)?;
+        self.replans += 1;
+        self.sca_iters += iters;
+        let exec_s = throttled_scenario(self.s, &factors);
+        built.validate(&exec_s)?;
+        let compiled = Compiled::new(&exec_s, &built);
+        self.last_plan = Some(built.clone());
+        let ctx = Rc::new(PlanCtx {
+            plan: built,
+            compiled,
+        });
+        if self.cold.is_none() {
+            self.cold = Some(Rc::clone(&ctx));
+        }
+        if self.cfg.use_cache {
+            self.cache.insert(key, Rc::clone(&ctx));
+        }
+        Ok((ctx, false))
+    }
+
+    /// Admit the head of master `m`'s queue at time `now`. Starved jobs
+    /// (`service = ∞`) are recorded infeasible and the server freed
+    /// immediately — an operator would kill a stalled job rather than
+    /// block the queue forever — so admission loops until a feasible
+    /// job is in service or the queue drains. A job admitted while the
+    /// ENTIRE fleet is away (an explicit script can empty it; synthesized
+    /// churn never does) is the same starvation case, not a run abort.
+    fn admit(&mut self, m: usize, now: f64) -> anyhow::Result<()> {
+        while let Some((job, arrival)) = self.queues[m].pop_front() {
+            let n = self.s.n_workers();
+            if !(1..=n).any(|w| self.profiles[w].factor_at(now) > 0.0) {
+                self.records.push(JobRecord {
+                    job,
+                    master: m,
+                    arrival_ms: arrival,
+                    start_ms: now,
+                    service_ms: f64::INFINITY,
+                    epoch: self.epoch_at(now),
+                    cache_hit: false,
+                });
+                self.infeasible += 1;
+                continue;
+            }
+            let (ctx, cache_hit) = self.plan_at(now)?;
+            let service = ctx.compiled.sample_master_warped(
+                m,
+                &mut self.service_rng,
+                now,
+                self.profiles,
+                &mut self.times,
+                &mut self.loads,
+            );
+            self.records.push(JobRecord {
+                job,
+                master: m,
+                arrival_ms: arrival,
+                start_ms: now,
+                service_ms: service,
+                epoch: self.epoch_at(now),
+                cache_hit,
+            });
+            if service.is_finite() {
+                self.busy[m] = true;
+                self.push(now + service, EvKind::Completion { master: m });
+                return Ok(());
+            }
+            self.infeasible += 1;
+        }
+        Ok(())
+    }
+}
+
+/// Run one serving timeline on `s`. Deterministic in `(scenario, cfg)`:
+/// arrivals, churn synthesis and service draws all derive from
+/// `cfg.seed` through separate streams.
+pub fn run(s: &Scenario, cfg: &ServeConfig) -> anyhow::Result<ServeOutcome> {
+    validate_arrival_knobs(cfg.load_factor, cfg.churn_rate, cfg.churn_downtime)?;
+    let m_cnt = s.n_masters();
+    let n = s.n_workers();
+
+    // Time-scale reference: the full-fleet plan's predicted system delay.
+    let base_plan = cfg.policy.build(s)?;
+    let t_ref = base_plan.t_est();
+    anyhow::ensure!(
+        t_ref.is_finite() && t_ref > 0.0,
+        "planner t* must be positive and finite to scale arrivals (got {t_ref})"
+    );
+    let period = t_ref / cfg.load_factor;
+    // The synthesized-churn horizon must cover the whole run even under
+    // overload, where the busy period (≈ jobs × service ≈ jobs × t*)
+    // outlives the arrival span (jobs × period) — otherwise the queue's
+    // tail would silently serve a static fleet. 4·t* per job bounds the
+    // empirical mean service (≤ ~2·t*) with slack.
+    let span = period.max(4.0 * t_ref) * cfg.jobs.max(1) as f64;
+    let horizon = span * 2.0 + 4.0 * t_ref;
+    let script = match &cfg.script {
+        Some(sc) => sc.clone(),
+        None => ChurnScript::synthesize(
+            n,
+            cfg.churn_rate,
+            cfg.churn_downtime,
+            t_ref,
+            horizon,
+            cfg.seed,
+        ),
+    };
+    script.validate(n)?;
+    // No silent caps: a synthesized script that hit MAX_SYNTH_EVENTS
+    // before covering the horizon leaves the tail of the run on a
+    // static fleet — say so instead of letting the churn axis lie.
+    if cfg.script.is_none() {
+        if let Some(last) = script.events.last() {
+            if last.at_ms < horizon * 0.9 {
+                eprintln!(
+                    "serve: synthesized churn truncated at {} events (covers {:.0} of \
+                     {:.0} virtual ms); later jobs run on a static fleet",
+                    script.events.len(),
+                    last.at_ms,
+                    horizon
+                );
+            }
+        }
+    }
+    // Fractional throttles rescale the fitted computation law, which
+    // trace-driven links ignore entirely (they sample the raw ECDF) —
+    // the throttle would be a silent sampling no-op while the warp
+    // still renormalized by it, producing impossible service times.
+    // Leave/join churn (factors 0 / 1) never rescales and stays valid.
+    let has_trace = (0..m_cnt).any(|m| {
+        (1..=n).any(|w| {
+            matches!(
+                s.link(m, w).family,
+                crate::model::dist::FamilyKind::Trace { .. }
+            )
+        })
+    });
+    if has_trace {
+        let fractional = script.events.iter().any(
+            |e| matches!(e.action, ChurnAction::Throttle(f) if f != 0.0 && f != 1.0),
+        );
+        anyhow::ensure!(
+            !fractional,
+            "fractional throttles are not supported on scenarios with trace-driven \
+             worker links (the trace sampler ignores the fitted rate); use leave/join churn"
+        );
+    }
+    let profiles = script.profiles(n)?;
+
+    // Pre-seed the plan cache with the full-fleet plan: it was already
+    // built above for the arrival time scale, and the t = 0 fingerprint
+    // is the all-ones fleet whenever the script carries no event at 0 —
+    // without this the first admission would redo the identical (for
+    // SCA-load policies, expensive) solve.
+    let mut cache: HashMap<Vec<u64>, Rc<PlanCtx>> = HashMap::new();
+    if cfg.use_cache {
+        let base_ctx = Rc::new(PlanCtx {
+            compiled: Compiled::new(s, &base_plan),
+            plan: base_plan.clone(),
+        });
+        cache.insert(vec![1.0f64.to_bits(); n], base_ctx);
+    }
+
+    // Arrival streams (salted: independent of the service stream).
+    let arrivals: Vec<Vec<f64>> = (0..m_cnt)
+        .map(|m| match cfg.process {
+            ArrivalProcess::Deterministic => {
+                (0..cfg.jobs).map(|j| j as f64 * period).collect()
+            }
+            ArrivalProcess::Poisson => {
+                let mut rng = Rng::new(cfg.seed ^ ARRIVAL_SALT).fork(m as u64 + 1);
+                let rate = 1.0 / period;
+                let mut t = 0.0;
+                (0..cfg.jobs)
+                    .map(|_| {
+                        t += rng.exp(rate);
+                        t
+                    })
+                    .collect()
+            }
+        })
+        .collect();
+
+    let mut lp = ServeLoop {
+        s,
+        cfg,
+        profiles: &profiles,
+        epoch_times: {
+            let mut ts: Vec<f64> = script.events.iter().map(|e| e.at_ms).collect();
+            ts.sort_by(f64::total_cmp);
+            ts
+        },
+        heap: BinaryHeap::new(),
+        seq: 0,
+        queues: vec![VecDeque::new(); m_cnt],
+        busy: vec![false; m_cnt],
+        cache,
+        cold: None,
+        // Warm starts may seed from the full-fleet plan on the very
+        // first state change, not only from replans this loop performed.
+        last_plan: cfg.warm_start.then(|| base_plan.clone()),
+        // Stream 1 = the batch engine's first shard stream: the
+        // constant-share parity contract (module docs).
+        service_rng: Rng::new(cfg.seed).fork(1),
+        times: Vec::new(),
+        loads: Vec::new(),
+        records: Vec::with_capacity(m_cnt * cfg.jobs),
+        replans: 0,
+        cache_hits: 0,
+        infeasible: 0,
+        sca_iters: 0,
+    };
+    // Arrivals pushed job-major, master-minor: same-instant ties process
+    // in master order (lockstep = the batch trial loop's master order).
+    for j in 0..cfg.jobs {
+        for (m, arr) in arrivals.iter().enumerate() {
+            lp.push(arr[j], EvKind::Arrival { master: m, job: j });
+        }
+    }
+    while let Some(Reverse(ev)) = lp.heap.pop() {
+        match ev.kind {
+            EvKind::Arrival { master, job } => {
+                lp.queues[master].push_back((job, ev.at));
+                if !lp.busy[master] {
+                    lp.admit(master, ev.at)?;
+                }
+            }
+            EvKind::Completion { master } => {
+                lp.busy[master] = false;
+                if !lp.queues[master].is_empty() {
+                    lp.admit(master, ev.at)?;
+                }
+            }
+        }
+    }
+
+    let mut per_master = vec![Summary::new(); m_cnt];
+    let mut system = Summary::new();
+    for r in &lp.records {
+        if r.feasible() {
+            per_master[r.master].push(r.sojourn_ms());
+            system.push(r.sojourn_ms());
+        }
+    }
+    let (cold_plan, t_est_ms) = match &lp.cold {
+        Some(ctx) => (ctx.plan.clone(), ctx.plan.t_est()),
+        None => (base_plan.clone(), t_ref),
+    };
+    Ok(ServeOutcome {
+        label: cold_plan.label.clone(),
+        records: lp.records,
+        per_master,
+        system,
+        t_est_ms,
+        cold_plan,
+        replans: lp.replans,
+        cache_hits: lp.cache_hits,
+        infeasible: lp.infeasible,
+        sca_iters: lp.sca_iters,
+        period_ms: period,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assign::ValueModel;
+    use crate::config::CommModel;
+
+    fn policy(loads: &str) -> PolicySpec {
+        PolicySpec::new("dedi-iter", ValueModel::Markov, loads)
+    }
+
+    fn small() -> Scenario {
+        Scenario::small_scale(5, 2.0, CommModel::Stochastic)
+    }
+
+    #[test]
+    fn static_fleet_run_is_deterministic_and_well_formed() {
+        let s = small();
+        let mut cfg = ServeConfig::new(policy("markov"));
+        cfg.jobs = 20;
+        cfg.load_factor = 0.9;
+        let a = run(&s, &cfg).unwrap();
+        let b = run(&s, &cfg).unwrap();
+        assert_eq!(a.records, b.records, "serving must be deterministic");
+        assert_eq!(a.records.len(), 2 * 20);
+        assert_eq!(a.infeasible, 0);
+        // The full-fleet plan is built once up front (the time-scale
+        // reference doubles as the cache seed): a static fleet never
+        // replans at all.
+        assert_eq!(a.replans, 0, "static fleet must reuse the pre-seeded plan");
+        assert_eq!(a.cache_hits, 2 * 20);
+        assert!(a.system.count() == 40 && a.system.mean() > 0.0);
+        for r in &a.records {
+            assert!(r.feasible());
+            assert!(r.wait_ms() >= 0.0, "{r:?}");
+            assert!(r.start_ms >= r.arrival_ms);
+            assert!(
+                (r.sojourn_ms() - (r.wait_ms() + r.service_ms)).abs() < 1e-9,
+                "{r:?}"
+            );
+            assert!(r.cache_hit, "static fleet: every admission is a cache hit");
+            assert_eq!(r.epoch, 0);
+        }
+        // Per-master jobs appear in order.
+        for m in 0..2 {
+            let jobs: Vec<usize> = a
+                .records
+                .iter()
+                .filter(|r| r.master == m)
+                .map(|r| r.job)
+                .collect();
+            assert_eq!(jobs, (0..20).collect::<Vec<_>>());
+        }
+        assert!(a.p99_ms().unwrap() >= a.system.mean());
+    }
+
+    #[test]
+    fn overload_queues_and_underload_does_not() {
+        let s = small();
+        let mut cfg = ServeConfig::new(policy("markov"));
+        cfg.jobs = 30;
+        cfg.load_factor = 8.0; // heavy overload: arrivals far above service rate
+        let over = run(&s, &cfg).unwrap();
+        let waited = over.records.iter().filter(|r| r.wait_ms() > 1e-9).count();
+        assert!(waited > 10, "overload produced almost no queueing ({waited})");
+        cfg.load_factor = 0.05; // deep underload
+        let under = run(&s, &cfg).unwrap();
+        let waited = under.records.iter().filter(|r| r.wait_ms() > 1e-9).count();
+        assert!(waited < 5, "deep underload queued {waited} jobs");
+        assert!(under.system.mean() < over.system.mean());
+    }
+
+    #[test]
+    fn poisson_arrivals_are_seeded_and_monotone() {
+        let s = small();
+        let mut cfg = ServeConfig::new(policy("markov"));
+        cfg.process = ArrivalProcess::Poisson;
+        cfg.jobs = 15;
+        let a = run(&s, &cfg).unwrap();
+        let b = run(&s, &cfg).unwrap();
+        assert_eq!(a.records, b.records);
+        for m in 0..2 {
+            let arr: Vec<f64> = a
+                .records
+                .iter()
+                .filter(|r| r.master == m)
+                .map(|r| r.arrival_ms)
+                .collect();
+            assert!(arr.windows(2).all(|w| w[1] > w[0]), "arrivals not increasing");
+        }
+        cfg.seed = 777;
+        let c = run(&s, &cfg).unwrap();
+        assert_ne!(a.records[0].arrival_ms, c.records[0].arrival_ms);
+    }
+
+    #[test]
+    fn zero_arrival_stream_is_empty_but_well_formed() {
+        let s = small();
+        let mut cfg = ServeConfig::new(policy("markov"));
+        cfg.jobs = 0;
+        let out = run(&s, &cfg).unwrap();
+        assert!(out.records.is_empty());
+        assert_eq!(out.system.count(), 0);
+        assert_eq!(out.replans, 0);
+        assert!(out.p99_ms().is_none());
+        assert!(out.t_est_ms > 0.0);
+        assert_eq!(out.cold_plan.label, out.label);
+    }
+
+    #[test]
+    fn plan_for_excludes_absent_workers_and_remaps_ids() {
+        let s = small();
+        let n = s.n_workers();
+        let mut factors = vec![1.0; n + 1];
+        factors[2] = 0.0; // worker 2 away
+        let (p, _) = plan_for(&s, &policy("markov"), &factors, None).unwrap();
+        for mp in &p.masters {
+            for e in &mp.entries {
+                assert_ne!(e.node, 2, "absent worker planned");
+                assert!(e.node <= n, "node id not remapped to the full fleet");
+            }
+        }
+        p.validate(&s).unwrap();
+        // Full-capacity factors reproduce the registry build exactly.
+        let ones = vec![1.0; n + 1];
+        let (full, _) = plan_for(&s, &policy("markov"), &ones, None).unwrap();
+        assert_eq!(full, policy("markov").build(&s).unwrap());
+        // All-zero factors are a graceful error.
+        let mut dead = vec![1.0; n + 1];
+        for f in dead.iter_mut().skip(1) {
+            *f = 0.0;
+        }
+        assert!(plan_for(&s, &policy("markov"), &dead, None).is_err());
+        // Throttling raises the planner's estimate.
+        let mut slow = vec![1.0; n + 1];
+        for f in slow.iter_mut().skip(1) {
+            *f = 0.25;
+        }
+        let (thr, _) = plan_for(&s, &policy("markov"), &slow, None).unwrap();
+        assert!(thr.t_est() > full.t_est());
+    }
+
+    #[test]
+    fn warm_started_sca_replan_matches_cold_and_is_no_slower() {
+        let s = small();
+        let n = s.n_workers();
+        let full = vec![1.0; n + 1];
+        let (cold, cold_iters) = plan_for(&s, &policy("sca"), &full, None).unwrap();
+        assert!(cold_iters >= 1);
+        // Warm start from the cold optimum on the SAME fleet state: the
+        // fixed point must be reached at least as fast, same plan.
+        let (warm, warm_iters) = plan_for(&s, &policy("sca"), &full, Some(&cold)).unwrap();
+        assert!(warm_iters <= cold_iters, "warm {warm_iters} > cold {cold_iters}");
+        assert!(
+            (warm.t_est() - cold.t_est()).abs() / cold.t_est() < 1e-6,
+            "warm restart moved the optimum: {} vs {}",
+            warm.t_est(),
+            cold.t_est()
+        );
+        // Across a fleet change the warm plan still matches a cold
+        // replan's quality on the new state.
+        let mut less = vec![1.0; n + 1];
+        less[1] = 0.0;
+        let (cold2, _) = plan_for(&s, &policy("sca"), &less, None).unwrap();
+        let (warm2, _) = plan_for(&s, &policy("sca"), &less, Some(&cold)).unwrap();
+        assert!(
+            (warm2.t_est() - cold2.t_est()).abs() / cold2.t_est() < 1e-3,
+            "warm replan degraded the optimum: {} vs {}",
+            warm2.t_est(),
+            cold2.t_est()
+        );
+    }
+
+    #[test]
+    fn churned_fleet_replans_and_caches_per_state() {
+        let s = small();
+        let mut cfg = ServeConfig::new(policy("markov"));
+        cfg.jobs = 40;
+        cfg.load_factor = 0.8;
+        cfg.churn_rate = 1.0;
+        cfg.churn_downtime = 0.5;
+        let out = run(&s, &cfg).unwrap();
+        assert!(out.replans >= 2, "churn never triggered a replan");
+        assert!(
+            out.replans <= s.n_workers() + 1,
+            "cache missed repeated fleet states ({} replans)",
+            out.replans
+        );
+        assert!(out.cache_hits > 0);
+        assert!(out.records.iter().any(|r| r.epoch > 0));
+        // The reported cold plan is the INITIAL fleet's (admissions at
+        // t = 0 precede the first churn event), never a churned replan.
+        assert_eq!(
+            out.cold_plan,
+            policy("markov").build(&s).unwrap(),
+            "cold plan drifted to a churned state"
+        );
+        // The serving stream still completes almost everywhere (churned
+        // workers rejoin).
+        assert!(out.infeasible <= out.records.len() / 4);
+    }
+
+    #[test]
+    fn empty_fleet_admission_starves_instead_of_aborting() {
+        let s = small();
+        let n = s.n_workers();
+        let period = policy("markov").build(&s).unwrap().t_est() * 1e6;
+        // Every worker away across job 1's arrival; back before job 2's.
+        let mut events = Vec::new();
+        for w in 1..=n {
+            events.push(ChurnEvent {
+                at_ms: 0.5 * period,
+                worker: w,
+                action: ChurnAction::Leave,
+            });
+            events.push(ChurnEvent {
+                at_ms: 1.5 * period,
+                worker: w,
+                action: ChurnAction::Join,
+            });
+        }
+        let mut cfg = ServeConfig::new(policy("markov"));
+        cfg.jobs = 3;
+        cfg.load_factor = 1e-6; // lockstep spacing ≫ any service time
+        cfg.script = Some(ChurnScript { events });
+        let out = run(&s, &cfg).expect("empty fleet must starve jobs, not abort");
+        assert_eq!(out.records.len(), 2 * 3);
+        for m in 0..2 {
+            let by_job: Vec<bool> = (0..3)
+                .map(|j| {
+                    out.records
+                        .iter()
+                        .find(|r| r.master == m && r.job == j)
+                        .unwrap()
+                        .feasible()
+                })
+                .collect();
+            assert_eq!(by_job, vec![true, false, true], "master {m}");
+        }
+        assert_eq!(out.infeasible, 2);
+    }
+
+    #[test]
+    fn arrival_process_names_roundtrip() {
+        for p in [ArrivalProcess::Deterministic, ArrivalProcess::Poisson] {
+            assert_eq!(ArrivalProcess::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(ArrivalProcess::parse("bursty").is_err());
+    }
+
+    #[test]
+    fn job_record_json_keeps_starvation_information() {
+        let rec = JobRecord {
+            job: 3,
+            master: 1,
+            arrival_ms: 10.0,
+            start_ms: 12.5,
+            service_ms: f64::INFINITY,
+            epoch: 2,
+            cache_hit: false,
+        };
+        let line = json_line(&rec.to_json());
+        assert!(!line.contains('\n'));
+        let back = crate::util::json::parse(&line).unwrap();
+        assert_eq!(back.get("service_ms"), Some(&Json::Null));
+        assert_eq!(back.get("sojourn_ms"), Some(&Json::Null));
+        assert_eq!(back.get("feasible").and_then(Json::as_bool), Some(false));
+        assert_eq!(back.get("epoch").and_then(Json::as_usize), Some(2));
+        // Feasible records carry numbers and the true flag.
+        let ok = JobRecord {
+            service_ms: 4.0,
+            ..rec
+        };
+        let back = crate::util::json::parse(&json_line(&ok.to_json())).unwrap();
+        assert_eq!(back.get("sojourn_ms").and_then(Json::as_f64), Some(6.5));
+        assert_eq!(back.get("feasible").and_then(Json::as_bool), Some(true));
+    }
+}

@@ -274,6 +274,10 @@ struct MasterSoA {
     strag_prob: Vec<f64>,
     strag_slow: Vec<f64>,
     fams: Vec<Option<DelayFamily>>,
+    /// Scenario node id per link (0 = master-local, `w ≥ 1` = worker w) —
+    /// the serving layer's key into per-worker [`CapacityProfile`]s. Not
+    /// read by the batch trial loops.
+    nodes: Vec<usize>,
     l_rows: f64,
     uncoded: bool,
 }
@@ -285,6 +289,17 @@ impl MasterSoA {
     /// shifted-exp arm is the legacy `shift + Exp(rate)`).
     #[inline]
     fn draw(&self, rng: &mut Rng, i: usize) -> f64 {
+        let (comm, comp) = self.draw_parts(rng, i);
+        comm + comp
+    }
+
+    /// [`MasterSoA::draw`] split into its `(comm, computation)` legs
+    /// (straggler factor already applied to the computation leg; the
+    /// sum `comm + comp` is bit-for-bit the `draw` value). The warped
+    /// sampler needs the legs separately: worker-capacity changes
+    /// stretch computation, never the network transfer.
+    #[inline]
+    fn draw_parts(&self, rng: &mut Rng, i: usize) -> (f64, f64) {
         let comm = if self.comm_rate[i].is_finite() {
             rng.exp(self.comm_rate[i])
         } else {
@@ -303,7 +318,7 @@ impl MasterSoA {
             None => self.shift[i] + rng.exp(self.comp_rate[i]),
             Some(fam) => fam.sample(rng),
         };
-        comm + factor * comp
+        (comm, factor * comp)
     }
 
     /// Trial-major completion sample (bit-compatible with the legacy
@@ -463,6 +478,7 @@ impl Compiled {
                     strag_prob: Vec::with_capacity(n),
                     strag_slow: Vec::with_capacity(n),
                     fams: Vec::with_capacity(n),
+                    nodes: Vec::with_capacity(n),
                     l_rows: mp.l_rows,
                     uncoded: plan.uncoded,
                 };
@@ -489,6 +505,7 @@ impl Compiled {
                         }
                     }
                     soa.load.push(e.load);
+                    soa.nodes.push(e.node);
                     match d.straggler() {
                         Some(st) => {
                             soa.strag_prob.push(st.prob);
@@ -509,6 +526,212 @@ impl Compiled {
 
     pub fn n_masters(&self) -> usize {
         self.sims.len()
+    }
+
+    /// Link count of master `m`'s compiled plan.
+    pub fn n_links(&self, m: usize) -> usize {
+        self.sims[m].comm_rate.len()
+    }
+
+    /// Scenario node id of link `i` of master `m` (0 = master-local).
+    pub fn node_of(&self, m: usize, i: usize) -> usize {
+        self.sims[m].nodes[i]
+    }
+
+    /// One completion sample of master `m` — exactly the per-master draw
+    /// of the trial loop ([`run_shard`] consumes the RNG through this
+    /// same code), exposed so the serving layer can sample jobs one at a
+    /// time from its own stream. `times`/`loads` are reusable scratch.
+    pub fn sample_master(
+        &self,
+        m: usize,
+        rng: &mut Rng,
+        times: &mut Vec<f64>,
+        loads: &mut Vec<f64>,
+    ) -> f64 {
+        self.sims[m].sample_trial(rng, times, loads)
+    }
+
+    /// Time-varying-share completion sample: draws each link's delay
+    /// exactly like [`Compiled::sample_master`] (identical RNG
+    /// consumption, link order preserved), then warps each link's
+    /// COMPUTATION leg through its node's [`CapacityProfile`] — the leg
+    /// starts when the transfer lands (`t0 + comm`), and capacity
+    /// changes stretch computation only, consistent with plan-time
+    /// throttling scaling the fitted compute rate `u` and leaving the
+    /// comm parameters alone (a transfer in flight completes; the
+    /// worker's compute on it suspends or slows).
+    ///
+    /// `profiles` is indexed by scenario node id (index 0 — the
+    /// master-local processor — is conventionally the constant profile;
+    /// churn scripts only address shared workers). **Bit contract:**
+    /// when every referenced profile is constant at and after `t0`, the
+    /// warp is the exact identity and the legs recombine as `comm +
+    /// comp` — bit-for-bit the [`Compiled::sample_master`] value; that
+    /// is the constant-share/no-churn ≡ batch-engine guarantee the
+    /// serving layer's parity tests pin.
+    pub fn sample_master_warped(
+        &self,
+        m: usize,
+        rng: &mut Rng,
+        t0: f64,
+        profiles: &[CapacityProfile],
+        times: &mut Vec<f64>,
+        loads: &mut Vec<f64>,
+    ) -> f64 {
+        let sim = &self.sims[m];
+        let n = sim.comm_rate.len();
+        times.clear();
+        for i in 0..n {
+            let (comm, comp) = sim.draw_parts(rng, i);
+            let node = sim.nodes[i];
+            debug_assert!(node < profiles.len(), "no capacity profile for node {node}");
+            times.push(match profiles.get(node) {
+                Some(p) => comm + p.warp_scaled(t0, t0 + comm, comp),
+                None => comm + comp,
+            });
+        }
+        if sim.uncoded {
+            // Every sub-task must finish — same fold as `sample_trial`.
+            let mut mx = 0.0f64;
+            for &t in times.iter() {
+                mx = f64::max(mx, t);
+            }
+            return mx;
+        }
+        loads.clear();
+        loads.extend_from_slice(&sim.load);
+        completion_scan(times, loads, sim.l_rows)
+    }
+}
+
+// ----------------------------------------------------------------------
+// Time-varying shares (piecewise-constant capacity profiles)
+// ----------------------------------------------------------------------
+
+/// Piecewise-constant capacity of one node over absolute virtual time —
+/// the engine's time-varying-share mode. Factors are RELATIVE to the
+/// capacity the plan was compiled with: 1.0 = as planned, 0.5 = running
+/// at half the planned rate (a mid-job throttle), 0.0 = away (a worker
+/// that left; its in-flight work suspends and resumes on rejoin).
+///
+/// Before the first breakpoint the factor is 1.0; breakpoint `i` sets
+/// the factor on `[times[i], times[i+1])` (left-closed).
+///
+/// A sub-task sampled with duration `d` at admission time `t0` (under
+/// the factor in force at `t0`) completes after the smallest `T` with
+/// `∫_{t0}^{t0+T} f(τ) dτ = d·f(t0)` — the standard processor-sharing
+/// time change. When the factor never changes on `[t0, ∞)` the warp is
+/// the exact identity (`T = d`, same bits), which keeps the
+/// constant-share fast path bit-for-bit.
+#[derive(Clone, Debug, Default)]
+pub struct CapacityProfile {
+    times: Vec<f64>,
+    factors: Vec<f64>,
+}
+
+impl CapacityProfile {
+    /// The always-at-planned-capacity profile (no breakpoints).
+    pub fn constant() -> Self {
+        Self::default()
+    }
+
+    /// Build from `(time, factor)` breakpoints. Times must be finite,
+    /// non-negative and non-decreasing; factors finite and ≥ 0. Equal
+    /// times are allowed — the later breakpoint wins.
+    pub fn from_breakpoints(points: Vec<(f64, f64)>) -> anyhow::Result<Self> {
+        let mut prev = 0.0f64;
+        for &(t, f) in &points {
+            anyhow::ensure!(
+                t.is_finite() && t >= 0.0,
+                "capacity breakpoint time {t} must be finite and ≥ 0"
+            );
+            anyhow::ensure!(
+                t >= prev,
+                "capacity breakpoints must be non-decreasing ({t} after {prev})"
+            );
+            anyhow::ensure!(
+                f.is_finite() && f >= 0.0,
+                "capacity factor {f} must be finite and ≥ 0"
+            );
+            prev = t;
+        }
+        let (times, factors) = points.into_iter().unzip();
+        Ok(Self { times, factors })
+    }
+
+    /// `true` when the profile never deviates from planned capacity.
+    pub fn is_constant(&self) -> bool {
+        self.factors.iter().all(|&f| f == 1.0)
+    }
+
+    /// Capacity factor in force at absolute time `t`.
+    pub fn factor_at(&self, t: f64) -> f64 {
+        let idx = self.times.partition_point(|&bt| bt <= t);
+        if idx == 0 {
+            1.0
+        } else {
+            self.factors[idx - 1]
+        }
+    }
+
+    /// Completion duration of a sub-task sampled with duration `d` at
+    /// admission time `t0` (see the type docs for the time-change
+    /// semantics). Returns `d` EXACTLY (no float round-trip) when the
+    /// factor is constant from `t0` on; `∞` when capacity drops to zero
+    /// forever before the work completes.
+    pub fn warp(&self, t0: f64, d: f64) -> f64 {
+        self.warp_scaled(t0, t0, d)
+    }
+
+    /// As [`CapacityProfile::warp`], but the work begins at `t_start ≥
+    /// t_admit` while the duration `d` was sampled under the capacity
+    /// in force at `t_admit` — the serving layer's computation legs
+    /// start only when the transfer lands (`t_admit + comm`), yet their
+    /// sampled duration reflects the plan compiled at admission.
+    pub fn warp_scaled(&self, t_admit: f64, t_start: f64, d: f64) -> f64 {
+        if self.times.is_empty() {
+            return d;
+        }
+        let f_admit = self.factor_at(t_admit);
+        // `d` encodes `d·f_admit` unit-capacity work. Admission at zero
+        // capacity never happens through serving (absent workers are
+        // not planned onto), but the API stays total: read `d` as
+        // unit-capacity work then — zero capacity forever ⇒ ∞. This
+        // case must bypass the constant-after fast path: a forever-zero
+        // tail is "constant" yet must not return `d`.
+        let need = if f_admit > 0.0 { d * f_admit } else { d };
+        let idx = self.times.partition_point(|&bt| bt <= t_start);
+        let f_start = if idx == 0 { 1.0 } else { self.factors[idx - 1] };
+        // Exact-identity fast path: capacity stays at the admission
+        // level from the work's start onward — bit-for-bit `d`.
+        if f_admit > 0.0
+            && f_start == f_admit
+            && self.factors[idx..].iter().all(|&f| f == f_admit)
+        {
+            return d;
+        }
+        self.warp_from(t_start, need, idx, f_start)
+    }
+
+    /// Walk segments from `cur = t0` (current factor `f`, next
+    /// breakpoint index `idx`) until `need` unit-capacity work is done.
+    fn warp_from(&self, t0: f64, mut need: f64, mut idx: usize, mut f: f64) -> f64 {
+        let mut cur = t0;
+        loop {
+            let end = self.times.get(idx).copied().unwrap_or(f64::INFINITY);
+            if f > 0.0 {
+                if end.is_infinite() || f * (end - cur) >= need {
+                    return cur + need / f - t0;
+                }
+                need -= f * (end - cur);
+            } else if end.is_infinite() {
+                return f64::INFINITY;
+            }
+            cur = end;
+            f = self.factors[idx];
+            idx += 1;
+        }
     }
 }
 
@@ -1336,7 +1559,7 @@ mod tests {
 
                 let mut pairs: Vec<(f64, f64)> =
                     times.iter().copied().zip(loads.iter().copied()).collect();
-                pairs.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                pairs.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
                 let mut acc = 0.0;
                 let mut want = f64::INFINITY;
                 for &(t, l) in &pairs {
@@ -1354,10 +1577,10 @@ mod tests {
                 // The scan permutes, never loses: same multisets.
                 let mut st = times;
                 let mut sl = loads;
-                st.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
-                sl.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
-                ts.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
-                ls.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+                st.sort_unstable_by(f64::total_cmp);
+                sl.sort_unstable_by(f64::total_cmp);
+                ts.sort_unstable_by(f64::total_cmp);
+                ls.sort_unstable_by(f64::total_cmp);
                 assert_eq!(ts, st);
                 assert_eq!(ls, sl);
             },
@@ -1375,6 +1598,158 @@ mod tests {
         let mut t = vec![1.25; 100];
         let mut l = vec![0.5; 100];
         assert_eq!(completion_scan(&mut t, &mut l, 10.0), 1.25);
+    }
+
+    // ------------------------------------------------------------------
+    // Time-varying shares
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn capacity_profile_warp_arithmetic() {
+        // Throttle to half speed at t = 5.
+        let p = CapacityProfile::from_breakpoints(vec![(5.0, 0.5)]).unwrap();
+        assert_eq!(p.factor_at(0.0), 1.0);
+        assert_eq!(p.factor_at(5.0), 0.5);
+        // Completes before the throttle: untouched (exact identity).
+        assert_eq!(p.warp(0.0, 4.0), 4.0);
+        // 5 units at full speed, remaining 3 at half: 5 + 6 = 11.
+        assert_eq!(p.warp(0.0, 8.0), 11.0);
+        // Admitted inside the throttled regime with no further change:
+        // exact identity (the job was sampled at the throttled rate).
+        assert_eq!(p.warp(6.0, 30.0), 30.0);
+
+        // Pause [5, 9), then resume.
+        let pause = CapacityProfile::from_breakpoints(vec![(5.0, 0.0), (9.0, 1.0)]).unwrap();
+        assert_eq!(pause.warp(0.0, 8.0), 12.0); // 5 done, 4 paused, 3 after
+        assert_eq!(pause.warp(0.0, 5.0), 5.0);  // exactly at the pause edge
+        // Leave forever: work in flight never completes.
+        let gone = CapacityProfile::from_breakpoints(vec![(5.0, 0.0)]).unwrap();
+        assert_eq!(gone.warp(0.0, 4.0), 4.0);
+        assert_eq!(gone.warp(0.0, 8.0), f64::INFINITY);
+        // Admitted AFTER capacity dropped to zero forever: also ∞ (the
+        // forever-zero tail must not hit the constant-after identity).
+        assert_eq!(gone.warp(6.0, 8.0), f64::INFINITY);
+        // Admitted during a pause that later lifts: waits, then runs.
+        let pause2 = CapacityProfile::from_breakpoints(vec![(5.0, 0.0), (9.0, 1.0)]).unwrap();
+        assert_eq!(pause2.warp(6.0, 8.0), 11.0); // wait to 9, then 8 work
+
+        // Speed-up relative to admission-time capacity: admitted at 10
+        // under a 0.5 throttle that lifts at 20 — the remaining work
+        // runs twice as fast, so 30 sampled ms finish in 20.
+        let lift =
+            CapacityProfile::from_breakpoints(vec![(0.0, 0.5), (20.0, 1.0)]).unwrap();
+        assert_eq!(lift.warp(10.0, 30.0), 20.0);
+
+        // Two-time warp: admitted at full rate (t = 0), work starting at
+        // t = 6 after the 0.5 throttle landed — the whole leg runs at
+        // half the sampled speed.
+        assert_eq!(p.warp_scaled(0.0, 6.0, 4.0), 8.0);
+        // Admitted under the throttle with no further change: identity.
+        assert_eq!(p.warp_scaled(6.0, 7.0, 4.0), 4.0);
+        // Admitted at full rate, work starts inside a forever-pause: ∞.
+        assert_eq!(gone.warp_scaled(0.0, 6.0, 1.0), f64::INFINITY);
+
+        // Constant profiles are the identity and report as such.
+        assert!(CapacityProfile::constant().is_constant());
+        assert_eq!(CapacityProfile::constant().warp(3.0, 7.25), 7.25);
+        // Malformed breakpoints are graceful errors.
+        assert!(CapacityProfile::from_breakpoints(vec![(5.0, -1.0)]).is_err());
+        assert!(CapacityProfile::from_breakpoints(vec![(5.0, 1.0), (3.0, 1.0)]).is_err());
+        assert!(CapacityProfile::from_breakpoints(vec![(f64::NAN, 1.0)]).is_err());
+    }
+
+    #[test]
+    fn sample_master_matches_trial_loop_bit_for_bit() {
+        // The serving layer's per-job draw must be exactly the batch
+        // kernel's per-master draw: same stream, same order, same bits.
+        for (ctx, s, ps) in [
+            (
+                "small/dedi-iter",
+                Scenario::small_scale(61, 2.0, CommModel::Stochastic),
+                spec(Policy::DediIter, LoadMethod::Markov),
+            ),
+            (
+                "small/uncoded",
+                Scenario::small_scale(62, 2.0, CommModel::Stochastic),
+                spec(Policy::UncodedUniform, LoadMethod::Markov),
+            ),
+            (
+                "ec2-stragglers/dedi-simple",
+                Scenario::ec2(6, 2, true),
+                spec(Policy::DediSimple, LoadMethod::Markov),
+            ),
+        ] {
+            let p = build(&s, &ps);
+            let c = Compiled::new(&s, &p);
+            let trials = 200;
+            let direct = run_shard(&c, 99, 1, trials, true);
+            let mut rng = Rng::new(99).fork(1);
+            let (mut times, mut loads) = (Vec::new(), Vec::new());
+            let trivial = vec![CapacityProfile::constant(); s.n_workers() + 1];
+            for t in 0..trials {
+                for m in 0..c.n_masters() {
+                    // Alternate the plain and the trivially-warped entry
+                    // points: both must reproduce the trial loop.
+                    let v = if (t + m) % 2 == 0 {
+                        c.sample_master(m, &mut rng, &mut times, &mut loads)
+                    } else {
+                        c.sample_master_warped(m, &mut rng, 0.0, &trivial, &mut times, &mut loads)
+                    };
+                    assert_eq!(
+                        v, direct.master_samples[m][t],
+                        "{ctx}: trial {t} master {m}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn warped_sampling_stretches_and_starves() {
+        // A non-trivial profile on every worker must stretch completion;
+        // workers gone forever starve coded masters whose remaining
+        // finite links cannot reach L.
+        let s = Scenario::small_scale(63, 2.0, CommModel::Stochastic);
+        let p = build(&s, &spec(Policy::DediIter, LoadMethod::Markov));
+        let c = Compiled::new(&s, &p);
+        let n = s.n_workers();
+        let (mut times, mut loads) = (Vec::new(), Vec::new());
+        let trivial = vec![CapacityProfile::constant(); n + 1];
+        // Workers leave (capacity 0) just after admission and never
+        // return; the draw itself happens at full capacity.
+        let mut gone = vec![CapacityProfile::constant()];
+        for _ in 0..n {
+            gone.push(CapacityProfile::from_breakpoints(vec![(1e-9, 0.0)]).unwrap());
+        }
+        let mut stretched = 0usize;
+        for seed in 0..50u64 {
+            let mut r1 = Rng::new(seed).fork(1);
+            let mut r2 = Rng::new(seed).fork(1);
+            let base = c.sample_master(0, &mut r1, &mut times, &mut loads);
+            // Throttle applied mid-stream (breakpoint after t0 = 0):
+            let thr = vec![CapacityProfile::constant()]
+                .into_iter()
+                .chain((0..n).map(|_| {
+                    CapacityProfile::from_breakpoints(vec![(1e-6, 0.01)]).unwrap()
+                }))
+                .collect::<Vec<_>>();
+            let warped =
+                c.sample_master_warped(0, &mut r2, 0.0, &thr, &mut times, &mut loads);
+            assert!(warped >= base, "seed {seed}: warp sped a job up");
+            if warped > base {
+                stretched += 1;
+            }
+        }
+        assert!(stretched > 40, "throttling almost never stretched ({stretched}/50)");
+        // Workers leaving forever right after admission: the local link
+        // alone carries less than L, so the job can never complete.
+        let mut rng = Rng::new(7).fork(1);
+        let v = c.sample_master_warped(0, &mut rng, 0.0, &gone, &mut times, &mut loads);
+        assert!(v.is_infinite(), "coded job completed without its workers");
+        // Sanity: trivial profiles at the same stream stay finite.
+        let mut rng = Rng::new(7).fork(1);
+        let v = c.sample_master_warped(0, &mut rng, 0.0, &trivial, &mut times, &mut loads);
+        assert!(v.is_finite());
     }
 
     #[test]

@@ -15,4 +15,4 @@
 pub mod engine;
 pub mod multimsg;
 
-pub use engine::{run, run_ordered, McOptions, McResults, SampleOrder};
+pub use engine::{run, run_ordered, CapacityProfile, McOptions, McResults, SampleOrder};

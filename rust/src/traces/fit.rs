@@ -83,7 +83,9 @@ pub fn fit_shifted_exp(samples: &[f64]) -> Result<FittedShiftedExp, FitError> {
 
     // KS statistic against the fitted CDF.
     let mut sorted = samples.to_vec();
-    sorted.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    // total_cmp: the NonFinite guard above already rejects NaN, but the
+    // sort itself must never be the thing that panics on a bad trace.
+    sorted.sort_by(f64::total_cmp);
     let fitted = ShiftedExp::new(a.max(0.0), u);
     let mut ks = 0.0f64;
     for (i, &x) in sorted.iter().enumerate() {

@@ -119,6 +119,18 @@ pub fn gamma_fn(x: f64) -> f64 {
     (2.0 * std::f64::consts::PI).sqrt() * t.powf(z + 0.5) * (-t).exp() * acc
 }
 
+/// Linear-interpolated quantile of an UNSORTED sample set (`None` when
+/// empty) — sorts a copy NaN-safely. The single implementation behind
+/// every tail readout (serving p99, sweep exports).
+pub fn percentile(xs: &[f64], q: f64) -> Option<f64> {
+    if xs.is_empty() {
+        return None;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(f64::total_cmp);
+    Some(quantile_sorted(&v, q))
+}
+
 /// Linear-interpolated quantile of a **sorted** slice, `q ∈ [0,1]`.
 pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
     assert!(!sorted.is_empty(), "quantile of empty slice");
@@ -146,14 +158,35 @@ pub struct Ecdf {
 }
 
 impl Ecdf {
-    pub fn new(mut samples: Vec<f64>) -> Self {
-        assert!(!samples.is_empty(), "Ecdf needs at least one sample");
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    /// Panicking constructor for internal callers whose samples are
+    /// correct by construction (Monte-Carlo outputs: finite or `+∞` for
+    /// infeasible trials, never empty). External data — config / trace
+    /// JSON, user-supplied series — must go through [`Ecdf::try_new`],
+    /// which returns a graceful error instead.
+    pub fn new(samples: Vec<f64>) -> Self {
+        Self::try_new(samples).expect("Ecdf::new: invalid sample set")
+    }
+
+    /// Fallible constructor: rejects empty inputs and NaN samples (NaN
+    /// has no place in an order statistic; `±∞` is allowed — an
+    /// infeasible Monte-Carlo trial legitimately contributes `+∞` to a
+    /// delay ECDF). This is the checked path for anything arriving from
+    /// JSON or other external sources.
+    pub fn try_new(mut samples: Vec<f64>) -> anyhow::Result<Self> {
+        anyhow::ensure!(!samples.is_empty(), "Ecdf needs at least one sample");
+        anyhow::ensure!(
+            !samples.iter().any(|x| x.is_nan()),
+            "Ecdf samples must not be NaN"
+        );
+        // total_cmp: a NaN that slips past the guard in a release build
+        // degrades to a deterministic sort position instead of a panic
+        // mid-sort (`partial_cmp(..).unwrap()` was the old behavior).
+        samples.sort_by(f64::total_cmp);
         let mean = mean(&samples);
-        Self {
+        Ok(Self {
             sorted: samples,
             mean,
-        }
+        })
     }
 
     /// Borrowing constructor for callers that only hold `&[f64]` (e.g.
@@ -365,6 +398,11 @@ mod tests {
         assert!((quantile_sorted(&xs, 0.0) - 1.0).abs() < 1e-12);
         assert!((quantile_sorted(&xs, 1.0) - 100.0).abs() < 1e-12);
         assert!((quantile_sorted(&xs, 0.5) - 50.5).abs() < 1e-12);
+        // The unsorted wrapper sorts a copy and agrees.
+        let shuffled: Vec<f64> = (1..=100).rev().map(|i| i as f64).collect();
+        assert_eq!(percentile(&shuffled, 0.5), Some(quantile_sorted(&xs, 0.5)));
+        assert_eq!(percentile(&[], 0.99), None);
+        assert_eq!(percentile(&[3.0, f64::INFINITY], 1.0), Some(f64::INFINITY));
     }
 
     #[test]
@@ -384,6 +422,23 @@ mod tests {
             let t = e.inverse(p);
             assert!(e.eval(t) >= p - 1e-9, "p={p} t={t} F={}", e.eval(t));
         }
+    }
+
+    #[test]
+    fn ecdf_try_new_rejects_bad_inputs_gracefully() {
+        // Empty and NaN inputs are typed errors, not panics — these are
+        // reachable from config/trace JSON through external callers.
+        assert!(Ecdf::try_new(vec![]).is_err());
+        assert!(Ecdf::try_new(vec![1.0, f64::NAN, 2.0]).is_err());
+        // +∞ is a legitimate delay sample (infeasible MC trials).
+        let e = Ecdf::try_new(vec![1.0, f64::INFINITY]).unwrap();
+        assert_eq!(e.len(), 2);
+        assert_eq!(e.eval(1.0), 0.5);
+        assert!(e.mean().is_infinite());
+        // The checked and panicking constructors agree on valid input.
+        let a = Ecdf::try_new(vec![3.0, 1.0, 2.0]).unwrap();
+        let b = Ecdf::new(vec![3.0, 1.0, 2.0]);
+        assert_eq!(a.sorted_samples(), b.sorted_samples());
     }
 
     #[test]

@@ -1,0 +1,327 @@
+//! Serving-layer acceptance tests: batch-engine parity, plan-cache
+//! equivalence, churn edges, and the serving sweep end-to-end.
+
+use coded_coop::assign::ValueModel;
+use coded_coop::config::{AShift, CommModel, Scenario};
+use coded_coop::experiment::{self, catalog};
+use coded_coop::policy::PolicySpec;
+use coded_coop::serve::{self, ChurnAction, ChurnEvent, ChurnScript, ServeConfig};
+use coded_coop::sim::{self, McOptions};
+
+fn policy(loads: &str) -> PolicySpec {
+    PolicySpec::new("dedi-iter", ValueModel::Markov, loads)
+}
+
+fn cfg(loads: &str) -> ServeConfig {
+    ServeConfig::new(policy(loads))
+}
+
+/// The headline acceptance pin: with constant shares and no churn, a
+/// single-master serve run's per-job service delays reproduce the batch
+/// `sim::run` completion delays bit-for-bit on the same seed — queueing
+/// included (the FIFO queue changes start times, never the draws).
+#[test]
+fn constant_share_serve_matches_batch_engine_bit_for_bit_single_master() {
+    let s = Scenario::random(
+        "serve-parity-m1",
+        1,
+        4,
+        1e4,
+        AShift::Range(0.1, 0.4),
+        2.0,
+        CommModel::Stochastic,
+        31,
+    );
+    let jobs = 40;
+    let seed = 2024;
+    let mut c = cfg("markov");
+    c.jobs = jobs;
+    c.seed = seed;
+    c.load_factor = 4.0; // deep overload: the queue is exercised
+    let out = serve::run(&s, &c).unwrap();
+    assert_eq!(out.records.len(), jobs);
+    assert_eq!(out.infeasible, 0);
+
+    let plan = policy("markov").build(&s).unwrap();
+    // The serving cold plan IS the batch plan.
+    assert_eq!(out.cold_plan, plan);
+    let mc = sim::run(
+        &s,
+        &plan,
+        &McOptions {
+            trials: jobs,
+            seed,
+            keep_samples: true,
+            threads: 1, // one RNG stream = the serve service stream
+        },
+    );
+    let samples = mc.samples.unwrap();
+    for (j, r) in out.records.iter().enumerate() {
+        assert_eq!(r.job, j);
+        assert_eq!(
+            r.service_ms, samples[j],
+            "job {j}: serve service diverged from batch trial"
+        );
+        assert!(r.sojourn_ms() >= r.service_ms);
+    }
+    // Overload actually queued some jobs (so the pin covers waiting jobs).
+    assert!(out.records.iter().any(|r| r.wait_ms() > 0.0));
+}
+
+/// Multi-master lockstep: deterministic arrivals with a period far above
+/// any possible service keep all masters' admissions simultaneous, so
+/// the serve draw order equals the batch trial loop's (trial-major,
+/// masters in order) and every per-master record matches `sim::run`'s
+/// per-master samples bit-for-bit.
+#[test]
+fn constant_share_serve_matches_batch_engine_bit_for_bit_multi_master() {
+    let s = Scenario::small_scale(17, 2.0, CommModel::Stochastic);
+    let jobs = 25;
+    let seed = 555;
+    let mut c = cfg("markov");
+    c.jobs = jobs;
+    c.seed = seed;
+    // t_ref / 1e-6 ≈ 1e6 × the planner estimate: no sampled service can
+    // reach the next arrival tick (draw magnitudes are bounded by the
+    // RNG's 2⁻⁵³ resolution through -ln(u)/rate).
+    c.load_factor = 1e-6;
+    let out = serve::run(&s, &c).unwrap();
+    assert_eq!(out.records.len(), 2 * jobs);
+    let plan = policy("markov").build(&s).unwrap();
+    let mc = sim::run(
+        &s,
+        &plan,
+        &McOptions {
+            trials: jobs,
+            seed,
+            keep_samples: true,
+            threads: 1,
+        },
+    );
+    let master_samples = mc.master_samples.unwrap();
+    for r in &out.records {
+        assert_eq!(
+            r.service_ms, master_samples[r.master][r.job],
+            "master {} job {}",
+            r.master, r.job
+        );
+        assert_eq!(r.wait_ms(), 0.0, "lockstep run must never queue");
+    }
+}
+
+/// Plan-cache hits must be indistinguishable from cold replans: the same
+/// churn timeline with the cache disabled (every admission replans from
+/// scratch) produces bit-identical records.
+#[test]
+fn plan_cache_hit_equals_cold_replan_bit_for_bit() {
+    let s = Scenario::small_scale(9, 2.0, CommModel::Stochastic);
+    // Script times in units of the run's own inter-arrival (period =
+    // t*/load_factor, the same formula serve::run uses): admissions are
+    // spread over ~30 periods, so each window sees several of them.
+    let period = policy("markov").build(&s).unwrap().t_est() / 0.8;
+    let script = ChurnScript {
+        events: vec![
+            ChurnEvent { at_ms: 2.3 * period, worker: 2, action: ChurnAction::Leave },
+            ChurnEvent { at_ms: 8.6 * period, worker: 2, action: ChurnAction::Join },
+            ChurnEvent { at_ms: 14.4 * period, worker: 4, action: ChurnAction::Throttle(0.5) },
+            ChurnEvent { at_ms: 21.9 * period, worker: 4, action: ChurnAction::Join },
+        ],
+    };
+    let mut cached = cfg("markov");
+    cached.jobs = 30;
+    cached.script = Some(script.clone());
+    cached.warm_start = false; // cold replans must be pure state functions
+    let mut uncached = cached.clone();
+    uncached.use_cache = false;
+    let a = serve::run(&s, &cached).unwrap();
+    let b = serve::run(&s, &uncached).unwrap();
+    assert_eq!(a.records, b.records, "cache changed serving behavior");
+    assert!(a.cache_hits > 0, "cache never hit");
+    assert_eq!(b.cache_hits, 0);
+    assert!(
+        a.replans < b.replans,
+        "cache did not reduce replans ({} vs {})",
+        a.replans,
+        b.replans
+    );
+    // The churn timeline actually produced distinct fleet states.
+    assert!(a.replans >= 2, "script never changed the planning state");
+    assert!(a.records.iter().any(|r| r.epoch > 0));
+}
+
+/// Jobs arriving while a worker is away are planned without it; a job in
+/// service when its workers leave forever starves and is recorded
+/// `feasible: false` with an explicit null sojourn in JSON.
+#[test]
+fn jobs_during_and_across_churn() {
+    let s = Scenario::random(
+        "serve-churn-m1",
+        1,
+        2,
+        1e4,
+        AShift::Range(0.2, 0.3),
+        2.0,
+        CommModel::Stochastic,
+        77,
+    );
+    // Both workers leave almost immediately and never return: the first
+    // job (admitted at t = 0 with the full fleet) starves mid-service —
+    // its local link alone cannot reach L.
+    let gone = ChurnScript {
+        events: vec![
+            ChurnEvent { at_ms: 1e-6, worker: 1, action: ChurnAction::Leave },
+            ChurnEvent { at_ms: 1e-6, worker: 2, action: ChurnAction::Leave },
+        ],
+    };
+    let mut c = cfg("markov");
+    c.jobs = 1;
+    c.script = Some(gone);
+    let out = serve::run(&s, &c).unwrap();
+    assert_eq!(out.records.len(), 1);
+    assert_eq!(out.infeasible, 1);
+    let r = &out.records[0];
+    assert!(!r.feasible());
+    assert!(r.service_ms.is_infinite());
+    let j = r.to_json();
+    assert_eq!(
+        j.get("sojourn_ms"),
+        Some(&coded_coop::util::json::Json::Null)
+    );
+    assert_eq!(
+        j.get("feasible").and_then(coded_coop::util::json::Json::as_bool),
+        Some(false)
+    );
+    assert_eq!(out.system.count(), 0, "starved jobs stay out of the summary");
+
+    // Worker 1 leaves between job 0's completion and job 1's arrival:
+    // jobs 1.. arrive while it is away, get planned without it, and
+    // still complete (local + worker 2 carry 2L of coded load).
+    let period = policy("markov").build(&s).unwrap().t_est() * 1e6;
+    let away = ChurnScript {
+        events: vec![ChurnEvent {
+            at_ms: 0.5 * period, // far past job 0's bounded service
+            worker: 1,
+            action: ChurnAction::Leave,
+        }],
+    };
+    let mut c = cfg("markov");
+    c.jobs = 4;
+    c.load_factor = 1e-6; // spaced arrivals: jobs 1.. admitted while away
+    c.script = Some(away);
+    let out = serve::run(&s, &c).unwrap();
+    assert_eq!(out.infeasible, 0, "{:?}", out.records);
+    // The full-fleet plan is pre-seeded; only the away state replans.
+    assert_eq!(out.replans, 1, "exactly one away replan");
+    assert_eq!(out.records[0].epoch, 0);
+    assert!(out.records[0].cache_hit, "job 0 reuses the pre-seeded plan");
+    assert!(out.records.iter().skip(1).all(|r| r.epoch == 1));
+}
+
+/// Mid-service throttling of every worker strictly stretches service
+/// relative to the identical unchurned run (same seed, same draws).
+#[test]
+fn mid_service_throttle_stretches_service() {
+    let s = Scenario::small_scale(13, 2.0, CommModel::Stochastic);
+    let mut base = cfg("markov");
+    base.jobs = 5;
+    base.load_factor = 1e-6;
+    let plain = serve::run(&s, &base).unwrap();
+    let mut churned = base.clone();
+    churned.script = Some(ChurnScript {
+        events: (1..=s.n_workers())
+            .map(|w| ChurnEvent {
+                at_ms: 1e-6,
+                worker: w,
+                action: ChurnAction::Throttle(0.01),
+            })
+            .collect(),
+    });
+    let slow = serve::run(&s, &churned).unwrap();
+    // Job 0 of each master is admitted at t = 0 (pre-throttle plan and
+    // draws identical), then every worker slows 100×: its service must
+    // strictly exceed the unchurned run's.
+    for m in 0..s.n_masters() {
+        let p = plain
+            .records
+            .iter()
+            .find(|r| r.master == m && r.job == 0)
+            .unwrap();
+        let q = slow
+            .records
+            .iter()
+            .find(|r| r.master == m && r.job == 0)
+            .unwrap();
+        assert!(q.service_ms.is_finite());
+        assert!(
+            q.service_ms > p.service_ms,
+            "master {m}: throttle did not stretch ({} vs {})",
+            q.service_ms,
+            p.service_ms
+        );
+    }
+}
+
+/// Warm-started SCA serving matches cold serving's quality while
+/// spending no more subproblem solves.
+#[test]
+fn warm_start_serving_matches_cold_quality() {
+    let s = Scenario::small_scale(21, 2.0, CommModel::Stochastic);
+    let mut warm = cfg("sca");
+    warm.jobs = 12;
+    warm.churn_rate = 1.0;
+    warm.use_cache = false; // replan every admission: maximal SCA load
+    let mut cold = warm.clone();
+    cold.warm_start = false;
+    let w = serve::run(&s, &warm).unwrap();
+    let c = serve::run(&s, &cold).unwrap();
+    assert_eq!(w.records.len(), c.records.len());
+    assert!(w.sca_iters > 0 && c.sca_iters > 0);
+    assert!(
+        w.sca_iters <= c.sca_iters,
+        "warm starts cost more subproblem solves ({} vs {})",
+        w.sca_iters,
+        c.sca_iters
+    );
+    // Same stationary points ⇒ near-identical serving behavior.
+    for (x, y) in w.records.iter().zip(&c.records) {
+        assert_eq!(x.feasible(), y.feasible());
+        if x.feasible() {
+            // Stationary points agree to ~1e-3 in loads; the sampled
+            // delays inherit that scale, so allow a few percent.
+            let rel = (x.sojourn_ms() - y.sojourn_ms()).abs() / y.sojourn_ms().max(1e-9);
+            assert!(rel < 0.05, "sojourn diverged: {} vs {}", x.sojourn_ms(), y.sojourn_ms());
+        }
+    }
+}
+
+/// The `serving` catalog sweep runs end-to-end through the same entry
+/// the CLI uses, deterministically.
+#[test]
+fn serving_catalog_sweep_end_to_end() {
+    let spec = catalog::spec("serving", 6, 5).unwrap();
+    let a = experiment::run_serving_with(&spec, |_| {}).unwrap();
+    assert_eq!(a.cells.len(), 18);
+    for c in &a.cells {
+        assert_eq!(c.outcome.executor, "serve");
+        assert_eq!(c.records.len(), 2 * 6); // M = 2 × 6 jobs
+        assert!(c.outcome.system.count() > 0, "cell {} served nothing", c.index);
+        assert!(c.outcome.samples.as_ref().is_some_and(|s| !s.is_empty()));
+    }
+    let b = experiment::run_serving_with(&spec, |_| {}).unwrap();
+    for (x, y) in a.cells.iter().zip(&b.cells) {
+        assert_eq!(x.records, y.records, "serving sweep not deterministic");
+    }
+    // Churned columns replanned; static columns did not.
+    let static_cells: Vec<_> = a
+        .cells
+        .iter()
+        .filter(|c| c.axis_values.iter().any(|(k, v)| k == "churn_rate" && *v == 0.0))
+        .collect();
+    assert!(!static_cells.is_empty());
+    // Poisson processes exercise different arrival draws per master.
+    let r = &a.cells[0].records;
+    assert!(r.iter().filter(|x| x.master == 0).map(|x| x.arrival_ms).ne(r
+        .iter()
+        .filter(|x| x.master == 1)
+        .map(|x| x.arrival_ms)));
+}
