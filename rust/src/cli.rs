@@ -10,6 +10,8 @@
 //! coded-coop plan run --plan plan.json         (…execute many)
 //! coded-coop e2e    [--masters M] [--workers N] [--rows L] [--cols S]
 //!            [--policy P] [--seed S] [--native] [--time-scale X]
+//!            [--flaky N] [--transport thread|tcp] [--workers-at A1,A2,…]
+//! coded-coop worker --listen ADDR [--flaky N] [--once]
 //! coded-coop version | help
 //! ```
 //!
@@ -21,6 +23,7 @@ use crate::assign::ValueModel;
 use crate::config::{AShift, CommModel, Scenario};
 use crate::coordinator::{self, Backend, RunOptions};
 use crate::exec::{self, ExecOptions, Executor};
+use crate::net;
 use crate::experiment::{self, catalog, CellResult, SweepOptions, SweepSpec};
 use crate::figures::{self, FigureOptions};
 use crate::plan::{LoadMethod, Plan, Policy};
@@ -131,7 +134,10 @@ USAGE:
                   [--process deterministic|poisson] [--seed S] [--records FILE] [--no-records]
   coded-coop e2e  [--masters M] [--workers N] [--rows L] [--cols S]
                   [--policy P] [--seed S] [--native] [--time-scale X]
+                  [--flaky N]                         (fault injection)
+                  [--transport thread|tcp] [--workers-at ADDR1,ADDR2,…]
                   [--stream-jobs N] [--period-ms X]   (queued-job stream)
+  coded-coop worker --listen ADDR [--flaky N] [--once]   (socket-mode worker)
   coded-coop version | help
 
 figures:  fig2 fig3 fig4a fig4b fig5 fig6 fig7 fig8 (see DESIGN.md)
@@ -197,6 +203,7 @@ pub fn run() -> anyhow::Result<()> {
         Some("sweep") => cmd_sweep(&args),
         Some("serve") => cmd_serve(&args),
         Some("e2e") => cmd_e2e(&args),
+        Some("worker") => cmd_worker(&args),
         Some("version") => {
             println!("coded-coop {}", crate::VERSION);
             Ok(())
@@ -777,13 +784,40 @@ fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
     let spec = parse_policy_spec(args)?;
     let plan = spec.build(&scenario)?;
 
-    // PJRT by default; --native for environments without artifacts.
+    // --flaky N: deterministic fault injection (~1/N of sub-task
+    // computes fail and the MDS redundancy must absorb them).
+    let flaky = parse_flaky(args)?;
+    // --transport tcp: dispatch over worker processes; --workers-at
+    // gives their endpoints, empty auto-spawns loopback processes.
+    let transport = match args.flag("transport").unwrap_or("thread") {
+        "thread" => coordinator::Transport::Thread,
+        "tcp" => {
+            let addrs: Vec<String> = args
+                .flag("workers-at")
+                .map(|v| {
+                    v.split(',')
+                        .map(|s| s.trim().to_string())
+                        .filter(|s| !s.is_empty())
+                        .collect()
+                })
+                .unwrap_or_default();
+            coordinator::Transport::Tcp(coordinator::TcpOptions { addrs, flaky })
+        }
+        other => anyhow::bail!("--transport expects 'thread' or 'tcp', got '{other}'"),
+    };
+
+    // PJRT by default; --native for environments without artifacts. In
+    // thread mode --flaky swaps in the fault-injecting backend; in tcp
+    // mode the flag configures the spawned worker processes instead and
+    // this backend only serves the coordinator's encode leg.
     let service;
-    let backend = if args.switch("native") {
-        Backend::Native
-    } else {
-        service = RuntimeService::start(&crate::runtime::default_artifact_dir())?;
-        Backend::Pjrt(service.handle())
+    let backend = match (&transport, flaky) {
+        (coordinator::Transport::Thread, Some(every)) => Backend::flaky(every),
+        _ if args.switch("native") => Backend::Native,
+        _ => {
+            service = RuntimeService::start(&crate::runtime::default_artifact_dir())?;
+            Backend::Pjrt(service.handle())
+        }
     };
 
     // --stream-jobs N: the queued-job stream (coordinator::run_stream) —
@@ -802,6 +836,7 @@ fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
                 backend,
                 seed,
                 verify: true,
+                transport,
             },
         )?;
         let mut t = Table::new(&[
@@ -844,10 +879,47 @@ fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
             backend,
             seed,
             verify: true,
+            transport,
         },
     )?;
     print_report(&report);
     Ok(())
+}
+
+/// `--flaky N` with CLI-grade validation ([`Backend::flaky`] asserts).
+fn parse_flaky(args: &Args) -> anyhow::Result<Option<usize>> {
+    match args.flag("flaky") {
+        None => Ok(None),
+        Some(_) => {
+            let every = args.usize_flag("flaky", 0)?;
+            anyhow::ensure!(
+                every >= 2,
+                "--flaky N needs N ≥ 2 (N=1 would fail every sub-task)"
+            );
+            Ok(Some(every))
+        }
+    }
+}
+
+/// `worker`: a standalone socket-mode worker process. Binds `--listen`
+/// (port 0 picks a free port, announced as `LISTENING <addr>` on
+/// stdout), then serves coordinator connections until killed — or
+/// exactly one with `--once` (how auto-spawned loopback workers run).
+fn cmd_worker(args: &Args) -> anyhow::Result<()> {
+    let listen = args.flag("listen").ok_or_else(|| {
+        anyhow::anyhow!(
+            "worker needs --listen ADDR (e.g. 127.0.0.1:7431, or 127.0.0.1:0 for a free port)"
+        )
+    })?;
+    let backend = match parse_flaky(args)? {
+        Some(every) => Backend::flaky(every),
+        None => Backend::Native,
+    };
+    let server = net::WorkerServer::bind(listen)?;
+    server.run(&net::WorkerConfig {
+        backend,
+        once: args.switch("once"),
+    })
 }
 
 /// Shared report printer (also used by examples).
@@ -1007,6 +1079,22 @@ mod tests {
         .unwrap();
         assert_eq!(result.cells.len(), 2);
         assert!(result.cells.iter().all(|c| c.outcome.system.mean() > 0.0));
+    }
+
+    #[test]
+    fn flaky_flag_validated() {
+        assert_eq!(parse_flaky(&args(&["--flaky", "5"])).unwrap(), Some(5));
+        assert_eq!(parse_flaky(&args(&[])).unwrap(), None);
+        assert!(parse_flaky(&args(&["--flaky", "1"])).is_err());
+        assert!(parse_flaky(&args(&["--flaky", "nope"])).is_err());
+    }
+
+    #[test]
+    fn help_lists_worker_and_transport() {
+        let h = help_text();
+        assert!(h.contains("worker --listen"), "help misses the worker command");
+        assert!(h.contains("--transport thread|tcp"), "help misses --transport");
+        assert!(h.contains("--flaky N"), "help misses --flaky");
     }
 
     #[test]

@@ -37,6 +37,10 @@ use crate::runtime::RuntimeHandle;
 use crate::util::rng::Rng;
 use worker::{Outcome, SubTask, TaskEvent, WorkerResult};
 
+// The transport seam lives in `net`; re-exported here because it is
+// selected on [`RunOptions`]/[`StreamOptions`].
+pub use crate::net::transport::{TcpOptions, Transport};
+
 /// Compute backend for encode + worker mat-vec.
 #[derive(Clone)]
 pub enum Backend {
@@ -90,6 +94,8 @@ pub struct RunOptions {
     pub seed: u64,
     /// Verify recovered `A_m x_m` against the direct product.
     pub verify: bool,
+    /// How sub-tasks reach workers: in-process threads (default) or TCP.
+    pub transport: Transport,
 }
 
 /// Per-master outcome.
@@ -360,9 +366,10 @@ fn prepare_task(
     })
 }
 
-/// Per-task result accumulator shared by both runtimes: coded-row
-/// arrivals in, completion decision out.
-struct TaskCollector {
+/// Per-task result accumulator shared by both runtimes — and by both
+/// transports (the TCP dispatcher in [`crate::net::transport`] feeds the
+/// same collectors): coded-row arrivals in, completion decision out.
+pub(crate) struct TaskCollector {
     /// (coded row, value) in arrival order.
     received: Vec<(usize, f64)>,
     rows_got: usize,
@@ -389,7 +396,7 @@ impl TaskCollector {
     /// Absorb one worker result; `true` exactly when this arrival
     /// completed the task (the caller fires cancellation). Arrivals
     /// after completion are dropped (already cancelled).
-    fn absorb(&mut self, r: &WorkerResult) -> bool {
+    pub(crate) fn absorb(&mut self, r: &WorkerResult) -> bool {
         if self.completion.is_some() {
             return false;
         }
@@ -419,14 +426,32 @@ impl TaskCollector {
     }
 }
 
-/// Launch one worker thread per non-empty queue, route every
-/// [`WorkerResult`] to `collectors[result.master]` — cancelling that
-/// task's remaining redundancy the moment it completes — then join.
-/// Returns per-worker computed/skipped counts, the event log and the
-/// wall time (ms): the dispatch half both runtimes share, so the
-/// completion/cancellation semantics cannot drift between the one-shot
-/// and stream paths.
+/// The dispatch half both runtimes share, generalized over transports:
+/// route every queue to its worker (in-process thread or TCP peer),
+/// feed every [`WorkerResult`] to `collectors[result.master]` —
+/// cancelling that task's remaining redundancy the moment it completes
+/// — then join/drain. Returns per-worker computed/skipped counts, the
+/// event log and the wall time (ms). One seam for one-shot and stream,
+/// thread and socket: the completion/cancellation semantics cannot
+/// drift between any of the four combinations.
 fn dispatch_and_collect(
+    queues: Vec<Vec<SubTask>>,
+    collectors: &mut [TaskCollector],
+    backend: &Backend,
+    time_scale: f64,
+    transport: &Transport,
+) -> anyhow::Result<(Vec<usize>, Vec<usize>, Vec<TaskEvent>, f64)> {
+    match transport {
+        Transport::Thread => dispatch_threads(queues, collectors, backend, time_scale),
+        Transport::Tcp(opts) => {
+            crate::net::transport::dispatch_tcp(queues, collectors, opts, time_scale)
+        }
+    }
+}
+
+/// The in-process transport: one worker thread per non-empty queue, an
+/// mpsc results bus, cancellation via shared atomics.
+fn dispatch_threads(
     queues: Vec<Vec<SubTask>>,
     collectors: &mut [TaskCollector],
     backend: &Backend,
@@ -503,6 +528,7 @@ pub fn run(cfg: &CoordinatorConfig) -> anyhow::Result<Report> {
             backend: cfg.backend.clone(),
             seed: cfg.seed,
             verify: cfg.verify,
+            transport: Transport::Thread,
         },
     )
 }
@@ -558,8 +584,13 @@ pub fn run_plan(s: &Scenario, plan: &Plan, opts: &RunOptions) -> anyhow::Result<
         });
     }
 
-    let (worker_computed, worker_skipped, events, wall_ms) =
-        dispatch_and_collect(queues, &mut collectors, &opts.backend, opts.time_scale)?;
+    let (worker_computed, worker_skipped, events, wall_ms) = dispatch_and_collect(
+        queues,
+        &mut collectors,
+        &opts.backend,
+        opts.time_scale,
+        &opts.transport,
+    )?;
 
     // ---- Decode + verify -------------------------------------------------
     let masters = metas
@@ -606,6 +637,8 @@ pub struct StreamOptions {
     pub backend: Backend,
     pub seed: u64,
     pub verify: bool,
+    /// How sub-tasks reach workers: in-process threads (default) or TCP.
+    pub transport: Transport,
 }
 
 /// One streamed job's outcome on the real runtime.
@@ -691,8 +724,13 @@ pub fn run_stream(s: &Scenario, plan: &Plan, opts: &StreamOptions) -> anyhow::Re
         }
     }
 
-    let (_computed, _skipped, _events, _wall_ms) =
-        dispatch_and_collect(queues, &mut collectors, &opts.backend, opts.time_scale)?;
+    let (_computed, _skipped, _events, _wall_ms) = dispatch_and_collect(
+        queues,
+        &mut collectors,
+        &opts.backend,
+        opts.time_scale,
+        &opts.transport,
+    )?;
 
     Ok(metas
         .into_iter()
@@ -956,6 +994,7 @@ mod tests {
                 backend: Backend::Native,
                 seed: 11,
                 verify: true,
+                transport: Transport::Thread,
             },
         )
         .unwrap();

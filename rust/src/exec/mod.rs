@@ -200,6 +200,7 @@ impl Executor for CoordinatorExecutor {
                 backend: self.backend.clone(),
                 seed: opts.seed,
                 verify: opts.verify,
+                transport: coordinator::Transport::Thread,
             },
         )?;
         let mut per_master = Vec::with_capacity(report.masters.len());

@@ -40,6 +40,7 @@
 //! | [`figures`] | regenerates every figure of §V (Figs. 2–8) |
 //! | [`runtime`] | PJRT bridge: artifact manifest, executable cache, typed execute |
 //! | [`coordinator`] | the real multi-master / shared-worker runtime (threads, delay-injected channels, decode, cancellation) |
+//! | [`net`] | socket-mode execution: length-prefixed framed codec over `std::net` TCP, wire `Message` enum, worker server, coordinator transport seam |
 //! | [`cli`] | argument parsing + subcommands for the `coded-coop` binary |
 
 pub mod util;
@@ -58,6 +59,7 @@ pub mod traces;
 pub mod figures;
 pub mod runtime;
 pub mod coordinator;
+pub mod net;
 pub mod cli;
 
 /// Crate version, surfaced by the CLI.

@@ -1,0 +1,224 @@
+//! Length-prefixed framing over any byte stream.
+//!
+//! The wire unit is a *frame*: a little-endian `u32` payload length
+//! followed by exactly that many payload bytes. Framing is transport-
+//! agnostic — anything [`Read`]/[`Write`] works — so the codec tests run
+//! against in-memory cursors while production runs over `std::net` TCP.
+//! Payloads are capped at [`MAX_FRAME`] so a corrupt or hostile header
+//! can never drive an unbounded allocation.
+//!
+//! Errors are typed: a clean close *between* frames is [`FrameError::Closed`]
+//! (the conventional end-of-stream), a close *inside* a frame is
+//! [`FrameError::Truncated`] (a protocol violation), and neither ever
+//! panics.
+
+use std::io::{self, Read, Write};
+
+use super::messages::{CodecError, Message};
+
+/// Hard cap on a frame payload (bytes). The largest legitimate frame is
+/// a [`Message::TaskAssign`] carrying one coded row-block; 64 MiB leaves
+/// ample headroom (a 4096×4096 f32 block is 64 MiB) while bounding what
+/// a corrupt length header can make the receiver allocate.
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// Framing failure (transport layer; message-level failures are
+/// [`CodecError`]).
+#[derive(Debug)]
+pub enum FrameError {
+    /// Peer closed the stream cleanly between frames (end of stream).
+    Closed,
+    /// Stream ended inside a header or payload: `got` of `expected`
+    /// bytes arrived.
+    Truncated { expected: usize, got: usize },
+    /// Header announced a payload beyond [`MAX_FRAME`].
+    Oversize { len: usize, max: usize },
+    /// Underlying I/O failure.
+    Io(io::Error),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Closed => write!(f, "stream closed"),
+            FrameError::Truncated { expected, got } => {
+                write!(f, "frame truncated: got {got} of {expected} bytes")
+            }
+            FrameError::Oversize { len, max } => {
+                write!(f, "frame length {len} exceeds cap {max}")
+            }
+            FrameError::Io(e) => write!(f, "frame i/o: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FrameError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+/// Receive failure: framing or message decode.
+#[derive(Debug)]
+pub enum WireError {
+    Frame(FrameError),
+    Codec(CodecError),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Frame(e) => write!(f, "{e}"),
+            WireError::Codec(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<FrameError> for WireError {
+    fn from(e: FrameError) -> Self {
+        WireError::Frame(e)
+    }
+}
+
+impl From<CodecError> for WireError {
+    fn from(e: CodecError) -> Self {
+        WireError::Codec(e)
+    }
+}
+
+impl WireError {
+    /// True when the peer closed cleanly between frames.
+    pub fn is_closed(&self) -> bool {
+        matches!(self, WireError::Frame(FrameError::Closed))
+    }
+}
+
+/// Read until `buf` is full or EOF; returns bytes read. Interrupted
+/// reads are retried (a worker loop must survive signal noise).
+fn fill(r: &mut impl Read, buf: &mut [u8]) -> io::Result<usize> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => break,
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(got)
+}
+
+/// Write one frame (length header + payload) and flush — flushing per
+/// frame keeps control messages (Cancel, Heartbeat) low-latency behind
+/// a `BufWriter`.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
+    assert!(
+        payload.len() <= MAX_FRAME,
+        "frame payload {} exceeds MAX_FRAME {}",
+        payload.len(),
+        MAX_FRAME
+    );
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one frame payload.
+pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>, FrameError> {
+    let mut hdr = [0u8; 4];
+    let got = fill(r, &mut hdr).map_err(FrameError::Io)?;
+    if got == 0 {
+        return Err(FrameError::Closed);
+    }
+    if got < 4 {
+        return Err(FrameError::Truncated { expected: 4, got });
+    }
+    let len = u32::from_le_bytes(hdr) as usize;
+    if len > MAX_FRAME {
+        return Err(FrameError::Oversize {
+            len,
+            max: MAX_FRAME,
+        });
+    }
+    let mut payload = vec![0u8; len];
+    let got = fill(r, &mut payload).map_err(FrameError::Io)?;
+    if got < len {
+        return Err(FrameError::Truncated {
+            expected: len,
+            got,
+        });
+    }
+    Ok(payload)
+}
+
+/// Encode + frame + flush one message.
+pub fn send(w: &mut impl Write, msg: &Message) -> io::Result<()> {
+    write_frame(w, &msg.encode())
+}
+
+/// Read + decode one message.
+pub fn recv(r: &mut impl Read) -> Result<Message, WireError> {
+    Ok(Message::decode(&read_frame(r)?)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        write_frame(&mut buf, &[7u8; 1000]).unwrap();
+        let mut c = Cursor::new(buf);
+        assert_eq!(read_frame(&mut c).unwrap(), b"hello");
+        assert_eq!(read_frame(&mut c).unwrap(), b"");
+        assert_eq!(read_frame(&mut c).unwrap(), vec![7u8; 1000]);
+        assert!(matches!(read_frame(&mut c), Err(FrameError::Closed)));
+    }
+
+    #[test]
+    fn truncated_header_and_payload_are_typed() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"abcdef").unwrap();
+        // Cut inside the header.
+        let mut c = Cursor::new(&buf[..2]);
+        assert!(matches!(
+            read_frame(&mut c),
+            Err(FrameError::Truncated { expected: 4, got: 2 })
+        ));
+        // Cut inside the payload.
+        let mut c = Cursor::new(&buf[..7]);
+        assert!(matches!(
+            read_frame(&mut c),
+            Err(FrameError::Truncated { expected: 6, got: 3 })
+        ));
+    }
+
+    #[test]
+    fn oversize_header_rejected_without_allocation() {
+        let hdr = (u32::MAX).to_le_bytes();
+        let mut c = Cursor::new(hdr.to_vec());
+        assert!(matches!(
+            read_frame(&mut c),
+            Err(FrameError::Oversize { .. })
+        ));
+    }
+
+    #[test]
+    fn message_send_recv_roundtrip() {
+        let mut buf = Vec::new();
+        let m = Message::Cancel { task: 42 };
+        send(&mut buf, &m).unwrap();
+        let mut c = Cursor::new(buf);
+        assert_eq!(recv(&mut c).unwrap(), m);
+        assert!(recv(&mut c).unwrap_err().is_closed());
+    }
+}

@@ -1,0 +1,548 @@
+//! The shared wire vocabulary: one [`Message`] enum both sides of the
+//! socket speak, with version-tagged binary encode/decode.
+//!
+//! Layout: every message body starts with `[version: u8][tag: u8]`,
+//! then the variant's fields in declaration order — integers and IEEE
+//! floats little-endian, vectors as a `u32` element count followed by
+//! the elements. The version byte is checked on *every* decode, so a
+//! coordinator and a worker from different protocol revisions fail the
+//! handshake with a typed [`CodecError::BadVersion`] instead of
+//! misparsing each other's frames.
+//!
+//! Decoding is total: any byte slice either decodes to exactly one
+//! `Message` or returns a typed [`CodecError`] — truncation, unknown
+//! tags, and corrupt length prefixes are errors, never panics, and a
+//! length prefix is validated against the bytes actually present before
+//! anything is allocated (fuzz-tested in `tests/net_socket.rs`).
+
+use crate::coordinator::worker::Outcome;
+
+/// Protocol revision; bumped on any wire-incompatible change.
+pub const PROTOCOL_VERSION: u8 = 1;
+
+/// One worker-side task event as carried in [`Message::Shutdown`] — the
+/// wire twin of [`crate::coordinator::worker::TaskEvent`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WireEvent {
+    pub worker: u32,
+    /// Cancel-slot id (the coordinator's flat task id).
+    pub task: u32,
+    pub rows: u32,
+    pub deadline_ms: f64,
+    pub compute_wall_ms: f64,
+    pub outcome: Outcome,
+}
+
+/// Everything that crosses the coordinator ↔ worker wire.
+///
+/// Lifecycle: coordinator connects and sends `Hello` (answered by a
+/// `Hello` ack), then `n_tasks` × `TaskAssign`, then one `Heartbeat` as
+/// the start barrier. The worker streams `PartialResult`s as deadlines
+/// fire; the coordinator sends `Cancel` the moment a task decodes. When
+/// the worker's queue drains it sends `Shutdown` carrying its drain
+/// stats and event log, and the coordinator answers `Shutdown` to
+/// release the connection.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    /// Handshake (both directions). Coordinator → worker it announces
+    /// the logical worker id, the task count to expect, the size of the
+    /// cancellation table and the virtual-time scale; worker →
+    /// coordinator it acknowledges (counts zeroed).
+    Hello {
+        wid: u32,
+        n_tasks: u32,
+        n_cancel_slots: u32,
+        time_scale: f64,
+    },
+    /// One coded row-block assignment (the wire twin of
+    /// [`crate::coordinator::worker::SubTask`]).
+    TaskAssign {
+        /// Cancel-slot id (flat `(job, master)` id in stream mode).
+        task: u32,
+        coded_start: u32,
+        rows: u32,
+        cols: u32,
+        /// Sampled virtual deadline (ms).
+        delay_ms: f64,
+        /// Row-major `rows × cols` coded block.
+        a_block: Vec<f32>,
+        /// Model vector (`cols`).
+        x: Vec<f32>,
+    },
+    /// Computed products for one sub-task (worker → coordinator).
+    PartialResult {
+        task: u32,
+        coded_start: u32,
+        rows: u32,
+        worker: u32,
+        delay_ms: f64,
+        values: Vec<f32>,
+    },
+    /// Stop work for one task (coordinator → worker): its master
+    /// decoded. Honored between sub-tasks mid-run.
+    Cancel { task: u32 },
+    /// Liveness probe; echoed with the same nonce. Also doubles as the
+    /// post-assignment start barrier (first heartbeat after the last
+    /// `TaskAssign` starts the worker's clock).
+    Heartbeat { nonce: u64 },
+    /// Graceful teardown. Worker → coordinator it carries the drain
+    /// stats + event log; coordinator → worker (fields zeroed) it
+    /// acknowledges and releases the connection. Received mid-run it
+    /// cancels everything outstanding (drain).
+    Shutdown {
+        computed: u64,
+        skipped: u64,
+        events: Vec<WireEvent>,
+    },
+}
+
+/// Message-level decode failure. Every variant is reachable from a
+/// hostile or truncated byte slice; none of them panic.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CodecError {
+    /// Fewer bytes than the field at `offset` needs.
+    Truncated {
+        offset: usize,
+        needed: usize,
+        have: usize,
+    },
+    /// Version byte mismatch (incompatible peer).
+    BadVersion { got: u8, want: u8 },
+    /// Unknown message tag.
+    BadTag(u8),
+    /// Unknown outcome discriminant inside an event record.
+    BadOutcome(u8),
+    /// A length prefix announced more elements than the remaining bytes
+    /// can hold.
+    Oversize { elems: usize, have: usize },
+    /// Bytes left over after a complete message.
+    Trailing { extra: usize },
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::Truncated {
+                offset,
+                needed,
+                have,
+            } => write!(
+                f,
+                "message truncated at byte {offset}: need {needed}, have {have}"
+            ),
+            CodecError::BadVersion { got, want } => {
+                write!(f, "protocol version {got} (this build speaks {want})")
+            }
+            CodecError::BadTag(t) => write!(f, "unknown message tag {t}"),
+            CodecError::BadOutcome(o) => write!(f, "unknown outcome discriminant {o}"),
+            CodecError::Oversize { elems, have } => {
+                write!(f, "length prefix {elems} exceeds remaining {have} bytes")
+            }
+            CodecError::Trailing { extra } => {
+                write!(f, "{extra} trailing bytes after message")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+const TAG_HELLO: u8 = 0;
+const TAG_TASK_ASSIGN: u8 = 1;
+const TAG_PARTIAL_RESULT: u8 = 2;
+const TAG_CANCEL: u8 = 3;
+const TAG_HEARTBEAT: u8 = 4;
+const TAG_SHUTDOWN: u8 = 5;
+
+/// Bytes per encoded [`WireEvent`]: worker + task + rows (u32) +
+/// deadline + compute wall (f64) + outcome (u8).
+const EVENT_BYTES: usize = 4 + 4 + 4 + 8 + 8 + 1;
+
+fn outcome_to_u8(o: Outcome) -> u8 {
+    match o {
+        Outcome::Computed => 0,
+        Outcome::Cancelled => 1,
+        Outcome::Failed => 2,
+    }
+}
+
+fn outcome_from_u8(b: u8) -> Result<Outcome, CodecError> {
+    match b {
+        0 => Ok(Outcome::Computed),
+        1 => Ok(Outcome::Cancelled),
+        2 => Ok(Outcome::Failed),
+        other => Err(CodecError::BadOutcome(other)),
+    }
+}
+
+// ---- encoding -----------------------------------------------------------
+
+struct Enc(Vec<u8>);
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32s(&mut self, xs: &[f32]) {
+        self.u32(xs.len() as u32);
+        for &x in xs {
+            self.0.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn events(&mut self, evs: &[WireEvent]) {
+        self.u32(evs.len() as u32);
+        for e in evs {
+            self.u32(e.worker);
+            self.u32(e.task);
+            self.u32(e.rows);
+            self.f64(e.deadline_ms);
+            self.f64(e.compute_wall_ms);
+            self.u8(outcome_to_u8(e.outcome));
+        }
+    }
+}
+
+// ---- decoding -----------------------------------------------------------
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take<const N: usize>(&mut self) -> Result<[u8; N], CodecError> {
+        if self.remaining() < N {
+            return Err(CodecError::Truncated {
+                offset: self.pos,
+                needed: N,
+                have: self.remaining(),
+            });
+        }
+        let mut out = [0u8; N];
+        out.copy_from_slice(&self.buf[self.pos..self.pos + N]);
+        self.pos += N;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.take::<1>()?[0])
+    }
+    fn u32(&mut self) -> Result<u32, CodecError> {
+        Ok(u32::from_le_bytes(self.take::<4>()?))
+    }
+    fn u64(&mut self) -> Result<u64, CodecError> {
+        Ok(u64::from_le_bytes(self.take::<8>()?))
+    }
+    fn f64(&mut self) -> Result<f64, CodecError> {
+        Ok(f64::from_le_bytes(self.take::<8>()?))
+    }
+
+    /// Length prefix validated against remaining bytes BEFORE the
+    /// allocation, so a corrupt prefix cannot drive an OOM.
+    fn len_prefix(&mut self, elem_bytes: usize) -> Result<usize, CodecError> {
+        let n = self.u32()? as usize;
+        match n.checked_mul(elem_bytes) {
+            Some(need) if need <= self.remaining() => Ok(n),
+            _ => Err(CodecError::Oversize {
+                elems: n,
+                have: self.remaining(),
+            }),
+        }
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>, CodecError> {
+        let n = self.len_prefix(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(f32::from_le_bytes(self.take::<4>()?));
+        }
+        Ok(out)
+    }
+
+    fn events(&mut self) -> Result<Vec<WireEvent>, CodecError> {
+        let n = self.len_prefix(EVENT_BYTES)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(WireEvent {
+                worker: self.u32()?,
+                task: self.u32()?,
+                rows: self.u32()?,
+                deadline_ms: self.f64()?,
+                compute_wall_ms: self.f64()?,
+                outcome: outcome_from_u8(self.u8()?)?,
+            });
+        }
+        Ok(out)
+    }
+
+    fn finish(self) -> Result<(), CodecError> {
+        if self.remaining() > 0 {
+            return Err(CodecError::Trailing {
+                extra: self.remaining(),
+            });
+        }
+        Ok(())
+    }
+}
+
+impl Message {
+    /// Serialize to the version-tagged binary layout.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc(Vec::with_capacity(16));
+        e.u8(PROTOCOL_VERSION);
+        match self {
+            Message::Hello {
+                wid,
+                n_tasks,
+                n_cancel_slots,
+                time_scale,
+            } => {
+                e.u8(TAG_HELLO);
+                e.u32(*wid);
+                e.u32(*n_tasks);
+                e.u32(*n_cancel_slots);
+                e.f64(*time_scale);
+            }
+            Message::TaskAssign {
+                task,
+                coded_start,
+                rows,
+                cols,
+                delay_ms,
+                a_block,
+                x,
+            } => {
+                e.u8(TAG_TASK_ASSIGN);
+                e.u32(*task);
+                e.u32(*coded_start);
+                e.u32(*rows);
+                e.u32(*cols);
+                e.f64(*delay_ms);
+                e.f32s(a_block);
+                e.f32s(x);
+            }
+            Message::PartialResult {
+                task,
+                coded_start,
+                rows,
+                worker,
+                delay_ms,
+                values,
+            } => {
+                e.u8(TAG_PARTIAL_RESULT);
+                e.u32(*task);
+                e.u32(*coded_start);
+                e.u32(*rows);
+                e.u32(*worker);
+                e.f64(*delay_ms);
+                e.f32s(values);
+            }
+            Message::Cancel { task } => {
+                e.u8(TAG_CANCEL);
+                e.u32(*task);
+            }
+            Message::Heartbeat { nonce } => {
+                e.u8(TAG_HEARTBEAT);
+                e.u64(*nonce);
+            }
+            Message::Shutdown {
+                computed,
+                skipped,
+                events,
+            } => {
+                e.u8(TAG_SHUTDOWN);
+                e.u64(*computed);
+                e.u64(*skipped);
+                e.events(events);
+            }
+        }
+        e.0
+    }
+
+    /// Decode one message; total over arbitrary byte slices.
+    pub fn decode(buf: &[u8]) -> Result<Message, CodecError> {
+        let mut d = Dec { buf, pos: 0 };
+        let version = d.u8()?;
+        if version != PROTOCOL_VERSION {
+            return Err(CodecError::BadVersion {
+                got: version,
+                want: PROTOCOL_VERSION,
+            });
+        }
+        let tag = d.u8()?;
+        let msg = match tag {
+            TAG_HELLO => Message::Hello {
+                wid: d.u32()?,
+                n_tasks: d.u32()?,
+                n_cancel_slots: d.u32()?,
+                time_scale: d.f64()?,
+            },
+            TAG_TASK_ASSIGN => Message::TaskAssign {
+                task: d.u32()?,
+                coded_start: d.u32()?,
+                rows: d.u32()?,
+                cols: d.u32()?,
+                delay_ms: d.f64()?,
+                a_block: d.f32s()?,
+                x: d.f32s()?,
+            },
+            TAG_PARTIAL_RESULT => Message::PartialResult {
+                task: d.u32()?,
+                coded_start: d.u32()?,
+                rows: d.u32()?,
+                worker: d.u32()?,
+                delay_ms: d.f64()?,
+                values: d.f32s()?,
+            },
+            TAG_CANCEL => Message::Cancel { task: d.u32()? },
+            TAG_HEARTBEAT => Message::Heartbeat { nonce: d.u64()? },
+            TAG_SHUTDOWN => Message::Shutdown {
+                computed: d.u64()?,
+                skipped: d.u64()?,
+                events: d.events()?,
+            },
+            other => return Err(CodecError::BadTag(other)),
+        };
+        d.finish()?;
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_messages() -> Vec<Message> {
+        vec![
+            Message::Hello {
+                wid: 3,
+                n_tasks: 7,
+                n_cancel_slots: 2,
+                time_scale: 1e-4,
+            },
+            Message::TaskAssign {
+                task: 1,
+                coded_start: 64,
+                rows: 2,
+                cols: 3,
+                delay_ms: 12.5,
+                a_block: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+                x: vec![0.5, -0.5, 2.0],
+            },
+            Message::PartialResult {
+                task: 0,
+                coded_start: 0,
+                rows: 2,
+                worker: 5,
+                delay_ms: 3.25,
+                values: vec![9.0, -9.0],
+            },
+            Message::Cancel { task: 9 },
+            Message::Heartbeat { nonce: u64::MAX },
+            Message::Shutdown {
+                computed: 4,
+                skipped: 1,
+                events: vec![
+                    WireEvent {
+                        worker: 2,
+                        task: 0,
+                        rows: 8,
+                        deadline_ms: 1.5,
+                        compute_wall_ms: 0.25,
+                        outcome: Outcome::Computed,
+                    },
+                    WireEvent {
+                        worker: 2,
+                        task: 1,
+                        rows: 4,
+                        deadline_ms: 2.5,
+                        compute_wall_ms: 0.0,
+                        outcome: Outcome::Cancelled,
+                    },
+                ],
+            },
+        ]
+    }
+
+    #[test]
+    fn every_variant_roundtrips() {
+        for m in sample_messages() {
+            let bytes = m.encode();
+            assert_eq!(Message::decode(&bytes).unwrap(), m, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn every_truncation_is_a_typed_error() {
+        for m in sample_messages() {
+            let bytes = m.encode();
+            for cut in 0..bytes.len() {
+                let err = Message::decode(&bytes[..cut])
+                    .expect_err("prefix must not decode");
+                assert!(
+                    matches!(
+                        err,
+                        CodecError::Truncated { .. } | CodecError::Oversize { .. }
+                    ),
+                    "cut at {cut} of {m:?}: {err:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let mut bytes = (Message::Cancel { task: 1 }).encode();
+        bytes[0] = PROTOCOL_VERSION + 1;
+        assert_eq!(
+            Message::decode(&bytes),
+            Err(CodecError::BadVersion {
+                got: PROTOCOL_VERSION + 1,
+                want: PROTOCOL_VERSION
+            })
+        );
+    }
+
+    #[test]
+    fn unknown_tag_and_trailing_bytes_rejected() {
+        assert_eq!(
+            Message::decode(&[PROTOCOL_VERSION, 200]),
+            Err(CodecError::BadTag(200))
+        );
+        let mut bytes = (Message::Heartbeat { nonce: 7 }).encode();
+        bytes.push(0);
+        assert_eq!(Message::decode(&bytes), Err(CodecError::Trailing { extra: 1 }));
+    }
+
+    #[test]
+    fn corrupt_length_prefix_cannot_drive_allocation() {
+        // A PartialResult whose value count claims 1 billion elements:
+        // decode must reject on the length check, before allocating.
+        let mut e = Enc(Vec::new());
+        e.u8(PROTOCOL_VERSION);
+        e.u8(TAG_PARTIAL_RESULT);
+        e.u32(0);
+        e.u32(0);
+        e.u32(1);
+        e.u32(0);
+        e.f64(0.0);
+        e.u32(1_000_000_000); // length prefix with no payload behind it
+        assert!(matches!(
+            Message::decode(&e.0),
+            Err(CodecError::Oversize { elems: 1_000_000_000, .. })
+        ));
+    }
+}

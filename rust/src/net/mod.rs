@@ -1,0 +1,32 @@
+//! Socket-mode execution: the coordinator's communication leg on a
+//! real wire.
+//!
+//! The paper's central claim is that *communication* delay — not just
+//! computation — decides which assignment wins. The in-process runtime
+//! models that delay by sampling it; this subsystem additionally puts
+//! the bytes on a transport with genuine variability: `std::net` TCP,
+//! no external dependencies (same vendored spirit as `anyhow`).
+//!
+//! Layers, bottom up:
+//!
+//! - [`frame`] — length-prefixed framing over any `Read`/`Write`
+//!   (u32 LE header, [`frame::MAX_FRAME`] cap, typed errors, no panics);
+//! - [`messages`] — the one shared [`messages::Message`] enum
+//!   (Hello / TaskAssign / PartialResult / Cancel / Heartbeat /
+//!   Shutdown) with a version-tagged binary codec;
+//! - [`worker`] — [`crate::coordinator::worker::run_worker`] behind a
+//!   listener: [`worker::WorkerServer`] is the `coded-coop worker`
+//!   process;
+//! - [`transport`] — the coordinator-side seam: [`Transport`] on
+//!   `RunOptions`/`StreamOptions` selects in-process channels or TCP
+//!   per run; both paths feed the same collectors, so results and
+//!   cancellation semantics stay in lockstep (see `tests/net_socket.rs`
+//!   for the parity pin).
+
+pub mod frame;
+pub mod messages;
+pub mod transport;
+pub mod worker;
+
+pub use transport::{TcpOptions, Transport};
+pub use worker::{WorkerConfig, WorkerServer};

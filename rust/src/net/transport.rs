@@ -1,0 +1,363 @@
+//! The transport seam: how the coordinator's sub-task queues reach
+//! their workers.
+//!
+//! [`Transport::Thread`] is the legacy in-process runtime (one OS
+//! thread per worker, an mpsc results bus). [`Transport::Tcp`] puts the
+//! same queues on a real wire: one TCP connection per *logical* worker
+//! (per non-empty queue), the framed [`super::messages::Message`]
+//! protocol, cancellation as `Cancel` frames, and drain stats coming
+//! back in the worker's closing `Shutdown`. Both transports feed the
+//! same coordinator-side `TaskCollector`s, so completion/cancellation
+//! semantics — and the decoded results — cannot drift between them
+//! (pinned by the parity test in `tests/net_socket.rs`).
+//!
+//! Endpoints: explicit addresses are round-robined over the live
+//! queues (a worker process serves each connection on its own thread,
+//! so fewer processes than queues is fine); with no addresses the
+//! coordinator auto-spawns one loopback `coded-coop worker --listen
+//! 127.0.0.1:0 --once` process per queue and discovers the OS-assigned
+//! ports from their `LISTENING <addr>` announcements.
+
+use std::io::{BufRead, BufReader, BufWriter, Read};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::frame;
+use super::messages::Message;
+use super::worker::event_from_wire;
+use crate::coordinator::worker::{SubTask, TaskEvent, WorkerResult};
+use crate::coordinator::TaskCollector;
+
+/// How the coordinator reaches its workers — selected per run on
+/// [`crate::coordinator::RunOptions`] / [`crate::coordinator::StreamOptions`].
+#[derive(Clone, Debug, Default)]
+pub enum Transport {
+    /// In-process worker threads over mpsc channels (the default).
+    #[default]
+    Thread,
+    /// Worker processes over `std::net` TCP with the framed codec.
+    Tcp(TcpOptions),
+}
+
+impl Transport {
+    /// TCP transport to explicit worker endpoints (empty = auto-spawn
+    /// loopback worker processes).
+    pub fn tcp(addrs: Vec<String>) -> Self {
+        Transport::Tcp(TcpOptions {
+            addrs,
+            flaky: None,
+        })
+    }
+}
+
+/// TCP transport configuration.
+#[derive(Clone, Debug, Default)]
+pub struct TcpOptions {
+    /// Worker endpoints (`host:port`), round-robined over the live
+    /// queues. Empty: auto-spawn one loopback worker process per queue.
+    pub addrs: Vec<String>,
+    /// Fault injection forwarded to auto-spawned workers
+    /// (`--flaky N`); rejected with explicit addresses — externally
+    /// managed workers choose their own backend.
+    pub flaky: Option<usize>,
+}
+
+/// Coordinator-side connection writer (cancel broadcast + final ack).
+type ConnWriter = Arc<Mutex<BufWriter<TcpStream>>>;
+
+/// An auto-spawned loopback worker process; killed on drop unless the
+/// run reaped it cleanly.
+struct SpawnedWorker {
+    child: Child,
+    addr: String,
+    reaped: bool,
+}
+
+impl SpawnedWorker {
+    fn wait(&mut self) -> anyhow::Result<()> {
+        let status = self.child.wait()?;
+        self.reaped = true;
+        anyhow::ensure!(
+            status.success(),
+            "spawned worker at {} exited with {status}",
+            self.addr
+        );
+        Ok(())
+    }
+}
+
+impl Drop for SpawnedWorker {
+    fn drop(&mut self) {
+        if !self.reaped {
+            let _ = self.child.kill();
+            let _ = self.child.wait();
+        }
+    }
+}
+
+/// Spawn `n` loopback worker processes (`--once`: each exits when its
+/// connection closes) and discover their OS-assigned ports.
+fn spawn_loopback_workers(
+    n: usize,
+    flaky: Option<usize>,
+) -> anyhow::Result<Vec<SpawnedWorker>> {
+    // Tests and wrappers can point at a prebuilt CLI; by default the
+    // worker is this very binary re-entered as `coded-coop worker`.
+    let exe = match std::env::var_os("CODED_COOP_WORKER_BIN") {
+        Some(p) => PathBuf::from(p),
+        None => std::env::current_exe()?,
+    };
+    (0..n)
+        .map(|_| {
+            let mut cmd = Command::new(&exe);
+            cmd.arg("worker")
+                .arg("--listen")
+                .arg("127.0.0.1:0")
+                .arg("--once")
+                .stdin(Stdio::null())
+                .stdout(Stdio::piped())
+                .stderr(Stdio::inherit());
+            if let Some(every) = flaky {
+                cmd.arg("--flaky").arg(every.to_string());
+            }
+            let mut child = cmd
+                .spawn()
+                .map_err(|e| anyhow::anyhow!("spawning worker process {exe:?}: {e}"))?;
+            let stdout = child
+                .stdout
+                .take()
+                .ok_or_else(|| anyhow::anyhow!("spawned worker has no stdout"))?;
+            let mut line = String::new();
+            BufReader::new(stdout).read_line(&mut line)?;
+            let addr = line
+                .trim()
+                .strip_prefix("LISTENING ")
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "worker process announced {line:?} instead of 'LISTENING <addr>' \
+                         (is {exe:?} a coded-coop binary?)"
+                    )
+                })?
+                .to_string();
+            Ok(SpawnedWorker {
+                child,
+                addr,
+                reaped: false,
+            })
+        })
+        .collect()
+}
+
+/// Reader half of one worker connection: forward `PartialResult`s to
+/// the results bus until the worker's closing `Shutdown` delivers its
+/// drain stats. A vanished worker yields zero stats — its undelivered
+/// rows behave like stragglers that never return, which the MDS
+/// redundancy may still absorb.
+fn reader_loop<R: Read>(
+    mut reader: R,
+    tx: Sender<WorkerResult>,
+    wid: usize,
+    addr: String,
+) -> (usize, usize, Vec<TaskEvent>) {
+    loop {
+        match frame::recv(&mut reader) {
+            Ok(Message::PartialResult {
+                task,
+                coded_start,
+                rows,
+                worker,
+                delay_ms,
+                values,
+            }) => {
+                let _ = tx.send(WorkerResult {
+                    master: task as usize,
+                    coded_start: coded_start as usize,
+                    rows: rows as usize,
+                    values,
+                    delay_ms,
+                    worker: worker as usize,
+                });
+            }
+            Ok(Message::Shutdown {
+                computed,
+                skipped,
+                events,
+            }) => {
+                return (
+                    computed as usize,
+                    skipped as usize,
+                    events.iter().map(event_from_wire).collect(),
+                );
+            }
+            Ok(_) => {} // heartbeat echoes etc. — benign
+            Err(e) => {
+                eprintln!(
+                    "coordinator: worker {wid} at {addr} dropped mid-run: {e} \
+                     (its remaining rows are lost; redundancy may still decode)"
+                );
+                return (0, 0, Vec::new());
+            }
+        }
+    }
+}
+
+/// TCP counterpart of the thread dispatcher: connect, assign, release
+/// the start barrier, collect results (cancelling over the wire the
+/// moment a task completes), then gather drain stats and release every
+/// worker. Same signature contract as the thread path — per-worker
+/// computed/skipped counts, the merged event log and the wall time.
+pub(crate) fn dispatch_tcp(
+    queues: Vec<Vec<SubTask>>,
+    collectors: &mut [TaskCollector],
+    opts: &TcpOptions,
+    time_scale: f64,
+) -> anyhow::Result<(Vec<usize>, Vec<usize>, Vec<TaskEvent>, f64)> {
+    let n_queues = queues.len();
+    let mut worker_computed = vec![0usize; n_queues];
+    let mut worker_skipped = vec![0usize; n_queues];
+    let mut events: Vec<TaskEvent> = Vec::new();
+    let live: Vec<(usize, Vec<SubTask>)> = queues
+        .into_iter()
+        .enumerate()
+        .filter(|(_, tasks)| !tasks.is_empty())
+        .collect();
+    if live.is_empty() {
+        return Ok((worker_computed, worker_skipped, events, 0.0));
+    }
+
+    // ---- endpoints ------------------------------------------------------
+    let mut spawned: Vec<SpawnedWorker> = Vec::new();
+    let addrs: Vec<String> = if opts.addrs.is_empty() {
+        spawned = spawn_loopback_workers(live.len(), opts.flaky)?;
+        spawned.iter().map(|w| w.addr.clone()).collect()
+    } else {
+        anyhow::ensure!(
+            opts.flaky.is_none(),
+            "flaky injection configures auto-spawned workers; with explicit \
+             addresses pass --flaky to the `coded-coop worker` processes instead"
+        );
+        (0..live.len())
+            .map(|i| opts.addrs[i % opts.addrs.len()].clone())
+            .collect()
+    };
+
+    let t_start = Instant::now();
+
+    // ---- connect + handshake + assignment -------------------------------
+    let mut writers: Vec<(usize, ConnWriter)> = Vec::with_capacity(live.len());
+    let mut readers: Vec<(usize, String, BufReader<TcpStream>)> =
+        Vec::with_capacity(live.len());
+    for ((wid, tasks), addr) in live.into_iter().zip(&addrs) {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| anyhow::anyhow!("connecting worker {wid} at {addr}: {e}"))?;
+        stream.set_nodelay(true).ok();
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut writer = BufWriter::new(stream);
+        frame::send(
+            &mut writer,
+            &Message::Hello {
+                wid: wid as u32,
+                n_tasks: tasks.len() as u32,
+                n_cancel_slots: collectors.len() as u32,
+                time_scale,
+            },
+        )?;
+        match frame::recv(&mut reader) {
+            Ok(Message::Hello { .. }) => {}
+            Ok(other) => anyhow::bail!("worker {wid} at {addr}: expected Hello ack, got {other:?}"),
+            Err(e) => anyhow::bail!(
+                "worker {wid} at {addr}: handshake failed: {e} \
+                 (protocol version mismatch closes the connection)"
+            ),
+        }
+        for t in tasks {
+            frame::send(
+                &mut writer,
+                &Message::TaskAssign {
+                    task: t.master as u32,
+                    coded_start: t.coded_start as u32,
+                    rows: t.rows as u32,
+                    cols: t.cols as u32,
+                    delay_ms: t.delay_ms,
+                    a_block: t.a_block,
+                    x: t.x.as_ref().clone(),
+                },
+            )?;
+        }
+        writers.push((wid, Arc::new(Mutex::new(writer))));
+        readers.push((wid, addr.clone(), reader));
+    }
+
+    // ---- start barrier: every worker has its full queue — go ------------
+    for (_, w) in &writers {
+        frame::send(
+            &mut *w.lock().expect("writer lock poisoned"),
+            &Message::Heartbeat { nonce: 0 },
+        )?;
+    }
+
+    // ---- collect --------------------------------------------------------
+    let (res_tx, res_rx) = channel::<WorkerResult>();
+    let mut joins = Vec::with_capacity(readers.len());
+    for (wid, addr, reader) in readers {
+        let tx = res_tx.clone();
+        joins.push((
+            wid,
+            std::thread::Builder::new()
+                .name(format!("net-reader-{wid}"))
+                .spawn(move || reader_loop(reader, tx, wid, addr))?,
+        ));
+    }
+    drop(res_tx);
+    while let Ok(r) = res_rx.recv() {
+        let Some(c) = collectors.get_mut(r.master) else {
+            continue; // malformed task id from the wire: drop, don't panic
+        };
+        if c.absorb(&r) {
+            // This arrival completed the task: cancel its redundancy on
+            // every worker (frames are honored between sub-tasks).
+            for (_, w) in &writers {
+                let _ = frame::send(
+                    &mut *w.lock().expect("writer lock poisoned"),
+                    &Message::Cancel {
+                        task: r.master as u32,
+                    },
+                );
+            }
+        }
+    }
+
+    // ---- drain stats + release ------------------------------------------
+    for (wid, h) in joins {
+        let (computed, skipped, ev) = h
+            .join()
+            .map_err(|_| anyhow::anyhow!("reader thread for worker {wid} panicked"))?;
+        worker_computed[wid] = computed;
+        worker_skipped[wid] = skipped;
+        events.extend(ev);
+    }
+    for (_, w) in &writers {
+        let _ = frame::send(
+            &mut *w.lock().expect("writer lock poisoned"),
+            &Message::Shutdown {
+                computed: 0,
+                skipped: 0,
+                events: Vec::new(),
+            },
+        );
+    }
+    drop(writers); // close the sockets: --once workers exit now
+    for mut s in spawned {
+        s.wait()?;
+    }
+    Ok((
+        worker_computed,
+        worker_skipped,
+        events,
+        t_start.elapsed().as_secs_f64() * 1e3,
+    ))
+}

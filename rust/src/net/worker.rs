@@ -1,0 +1,320 @@
+//! The socket-mode worker: [`crate::coordinator::worker::run_worker`]
+//! behind a TCP listener.
+//!
+//! A worker process serves connections; each connection is one *logical*
+//! worker (one coordinator queue), so a single process can host many
+//! logical workers when the coordinator round-robins its queues over
+//! fewer addresses. Per connection the lifecycle is:
+//!
+//! 1. `Hello` handshake (version-checked by decode) announcing the
+//!    logical worker id, task count, cancel-table size and time scale;
+//! 2. `n_tasks` × `TaskAssign`, buffered locally;
+//! 3. one `Heartbeat` — the start barrier: the coordinator sends it
+//!    only after EVERY worker has its full queue, so clocks start
+//!    (nearly) together and wall-clock arrival order matches the
+//!    thread-mode runtime;
+//! 4. the unchanged [`run_worker`] loop executes on this thread while a
+//!    control thread keeps reading the socket — `Cancel` flips the
+//!    per-task flags mid-run, `Heartbeat` echoes, `Shutdown` (or the
+//!    peer vanishing) cancels everything outstanding so the worker
+//!    drains instead of computing for a dead coordinator;
+//! 5. a final `Shutdown` carries the drain stats + per-sub-task event
+//!    log back, and the coordinator's closing `Shutdown` releases the
+//!    connection.
+
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::frame;
+use super::messages::{Message, WireEvent};
+use crate::coordinator::worker::{run_worker, SubTask, TaskEvent};
+use crate::coordinator::Backend;
+
+/// Configuration for a worker process / in-process worker server.
+#[derive(Clone)]
+pub struct WorkerConfig {
+    /// Compute backend for sub-task mat-vecs (fault injection via
+    /// [`Backend::flaky`] works over the wire exactly as in-process —
+    /// the failing residue class hashes `(task, coded_start)`).
+    pub backend: Backend,
+    /// Serve exactly one connection, then return (used by auto-spawned
+    /// loopback workers so the process exits with its run).
+    pub once: bool,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        Self {
+            backend: Backend::Native,
+            once: false,
+        }
+    }
+}
+
+/// A bound worker listener. Binding is separated from serving so
+/// callers (tests, the auto-spawner) can learn the OS-assigned port of
+/// a `127.0.0.1:0` bind before the accept loop starts.
+pub struct WorkerServer {
+    listener: TcpListener,
+}
+
+impl WorkerServer {
+    pub fn bind(addr: &str) -> anyhow::Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("worker: cannot listen on {addr}: {e}"))?;
+        Ok(Self { listener })
+    }
+
+    pub fn local_addr(&self) -> anyhow::Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept loop. Announces `LISTENING <addr>` on stdout first (the
+    /// auto-spawner parses it for `:0` port discovery), then serves
+    /// connections — sequentially with `once`, otherwise each on its
+    /// own thread so one process can host several logical workers.
+    pub fn run(self, cfg: &WorkerConfig) -> anyhow::Result<()> {
+        let addr = self.local_addr()?;
+        // println! would sit in the pipe buffer; the spawner reads this
+        // line before connecting, so flush explicitly.
+        {
+            let mut out = io::stdout();
+            writeln!(out, "LISTENING {addr}")?;
+            out.flush()?;
+        }
+        if cfg.once {
+            let (stream, _) = self.listener.accept()?;
+            return handle_conn(stream, cfg.backend.clone());
+        }
+        loop {
+            let (stream, peer) = self.listener.accept()?;
+            let backend = cfg.backend.clone();
+            std::thread::Builder::new()
+                .name(format!("net-worker-{peer}"))
+                .spawn(move || {
+                    if let Err(e) = handle_conn(stream, backend) {
+                        eprintln!("worker: connection {peer}: {e}");
+                    }
+                })?;
+        }
+    }
+}
+
+/// Writer half shared between the result pump and the control echo.
+type SharedWriter = Arc<Mutex<BufWriter<TcpStream>>>;
+
+fn send(w: &SharedWriter, msg: &Message) -> io::Result<()> {
+    let mut g = w.lock().expect("writer lock poisoned");
+    frame::send(&mut *g, msg)
+}
+
+/// Serve one coordinator connection end-to-end (blocking).
+pub fn handle_conn(stream: TcpStream, backend: Backend) -> anyhow::Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let writer: SharedWriter = Arc::new(Mutex::new(BufWriter::new(stream)));
+
+    // ---- 1. handshake ---------------------------------------------------
+    let (wid, n_tasks, n_cancel_slots, time_scale) = match frame::recv(&mut reader) {
+        Ok(Message::Hello {
+            wid,
+            n_tasks,
+            n_cancel_slots,
+            time_scale,
+        }) => (wid as usize, n_tasks as usize, n_cancel_slots as usize, time_scale),
+        Ok(other) => anyhow::bail!("expected Hello, got {other:?}"),
+        Err(e) => anyhow::bail!("handshake failed: {e}"),
+    };
+    anyhow::ensure!(
+        time_scale.is_finite() && time_scale >= 0.0,
+        "Hello carried invalid time_scale {time_scale}"
+    );
+    send(
+        &writer,
+        &Message::Hello {
+            wid: wid as u32,
+            n_tasks: 0,
+            n_cancel_slots: 0,
+            time_scale,
+        },
+    )?;
+
+    // ---- 2./3. assignment + start barrier -------------------------------
+    let cancel: Arc<Vec<AtomicBool>> =
+        Arc::new((0..n_cancel_slots).map(|_| AtomicBool::new(false)).collect());
+    let mut tasks: Vec<SubTask> = Vec::with_capacity(n_tasks);
+    loop {
+        match frame::recv(&mut reader) {
+            Ok(Message::TaskAssign {
+                task,
+                coded_start,
+                rows,
+                cols,
+                delay_ms,
+                a_block,
+                x,
+            }) => {
+                let (rows, cols) = (rows as usize, cols as usize);
+                anyhow::ensure!(
+                    a_block.len() == rows * cols && x.len() == cols,
+                    "TaskAssign shape mismatch: {}×{} block with {} + {} elements",
+                    rows,
+                    cols,
+                    a_block.len(),
+                    x.len(),
+                );
+                anyhow::ensure!(
+                    (task as usize) < n_cancel_slots,
+                    "TaskAssign task id {task} outside the {n_cancel_slots}-slot cancel table"
+                );
+                anyhow::ensure!(
+                    tasks.len() < n_tasks,
+                    "more TaskAssign frames than the announced {n_tasks}"
+                );
+                tasks.push(SubTask {
+                    master: task as usize,
+                    coded_start: coded_start as usize,
+                    rows,
+                    cols,
+                    a_block,
+                    x: Arc::new(x),
+                    delay_ms,
+                });
+            }
+            // The start barrier: first heartbeat after (or during — the
+            // count guard above keeps phases honest) assignment.
+            Ok(Message::Heartbeat { nonce }) => {
+                if tasks.len() == n_tasks {
+                    break;
+                }
+                send(&writer, &Message::Heartbeat { nonce })?;
+            }
+            Ok(Message::Cancel { task }) => {
+                if let Some(flag) = cancel.get(task as usize) {
+                    flag.store(true, Ordering::SeqCst);
+                }
+            }
+            // Drained before it started: ack and release.
+            Ok(Message::Shutdown { .. }) => {
+                let _ = send(
+                    &writer,
+                    &Message::Shutdown {
+                        computed: 0,
+                        skipped: 0,
+                        events: Vec::new(),
+                    },
+                );
+                return Ok(());
+            }
+            Ok(other) => anyhow::bail!("unexpected {other:?} during assignment"),
+            Err(e) => anyhow::bail!("assignment stream broke: {e}"),
+        }
+    }
+
+    // ---- 4. execute: control thread + the unchanged run_worker loop -----
+    let ctl = {
+        let cancel = Arc::clone(&cancel);
+        let writer = Arc::clone(&writer);
+        std::thread::Builder::new()
+            .name(format!("net-ctl-{wid}"))
+            .spawn(move || control_loop(reader, writer, cancel))?
+    };
+
+    let (tx, rx) = channel();
+    let pump = {
+        let writer = Arc::clone(&writer);
+        std::thread::Builder::new()
+            .name(format!("net-pump-{wid}"))
+            .spawn(move || -> io::Result<()> {
+                for r in rx {
+                    send(
+                        &writer,
+                        &Message::PartialResult {
+                            task: r.master as u32,
+                            coded_start: r.coded_start as u32,
+                            rows: r.rows as u32,
+                            worker: r.worker as u32,
+                            delay_ms: r.delay_ms,
+                            values: r.values,
+                        },
+                    )?;
+                }
+                Ok(())
+            })?
+    };
+
+    let t_start = Instant::now();
+    let (computed, skipped, events) =
+        run_worker(wid, tasks, backend, cancel, tx, time_scale, t_start);
+
+    // run_worker dropped its Sender, so the pump drains and exits.
+    pump.join()
+        .map_err(|_| anyhow::anyhow!("result pump panicked"))?
+        .map_err(|e| anyhow::anyhow!("publishing results failed: {e}"))?;
+
+    // ---- 5. drain stats, then wait for the coordinator's release --------
+    send(
+        &writer,
+        &Message::Shutdown {
+            computed: computed as u64,
+            skipped: skipped as u64,
+            events: events.iter().map(event_to_wire).collect(),
+        },
+    )?;
+    ctl.join()
+        .map_err(|_| anyhow::anyhow!("control thread panicked"))?;
+    Ok(())
+}
+
+/// Keep reading control frames while (and after) the compute loop runs.
+/// Returns when the coordinator releases the connection (`Shutdown`) or
+/// vanishes — both cancel everything outstanding, so a worker never
+/// computes for a peer that stopped listening.
+fn control_loop<R: Read>(mut reader: R, writer: SharedWriter, cancel: Arc<Vec<AtomicBool>>) {
+    loop {
+        match frame::recv(&mut reader) {
+            Ok(Message::Cancel { task }) => {
+                if let Some(flag) = cancel.get(task as usize) {
+                    flag.store(true, Ordering::SeqCst);
+                }
+            }
+            Ok(Message::Heartbeat { nonce }) => {
+                let _ = send(&writer, &Message::Heartbeat { nonce });
+            }
+            Ok(Message::Shutdown { .. }) | Err(_) => {
+                for flag in cancel.iter() {
+                    flag.store(true, Ordering::SeqCst);
+                }
+                return;
+            }
+            Ok(_) => {} // benign: ignore anything else mid-run
+        }
+    }
+}
+
+fn event_to_wire(e: &TaskEvent) -> WireEvent {
+    WireEvent {
+        worker: e.worker as u32,
+        task: e.master as u32,
+        rows: e.rows as u32,
+        deadline_ms: e.deadline_ms,
+        compute_wall_ms: e.compute_wall_ms,
+        outcome: e.outcome,
+    }
+}
+
+/// Wire event → the coordinator-side event record.
+pub(crate) fn event_from_wire(e: &WireEvent) -> TaskEvent {
+    TaskEvent {
+        worker: e.worker as usize,
+        master: e.task as usize,
+        rows: e.rows as usize,
+        deadline_ms: e.deadline_ms,
+        compute_wall_ms: e.compute_wall_ms,
+        outcome: e.outcome,
+    }
+}

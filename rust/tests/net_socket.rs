@@ -1,0 +1,288 @@
+//! Socket-mode integration: the TCP transport against in-process
+//! loopback workers, pinned to the thread transport by a parity
+//! contract, plus fuzz-ish codec properties.
+//!
+//! Workers here are real [`WorkerServer`]s on `127.0.0.1:0` served from
+//! detached threads — the full wire protocol (handshake, assignment,
+//! start barrier, Cancel frames, drain stats) without process spawning,
+//! which `cargo test` cannot rely on (the test binary is not the CLI;
+//! the auto-spawn path is exercised by the CI smoke job instead).
+
+use coded_coop::config::{AShift, CommModel, Scenario};
+use coded_coop::coordinator::worker::Outcome;
+use coded_coop::coordinator::{
+    run_plan, run_stream, Backend, RunOptions, StreamOptions, Transport,
+};
+use coded_coop::net::messages::{CodecError, Message, WireEvent};
+use coded_coop::net::{frame, WorkerConfig, WorkerServer};
+use coded_coop::plan::{self, LoadMethod, PlanSpec, Policy};
+use coded_coop::util::prop::{check, Config, Gen};
+
+/// Launch `n` loopback worker servers on OS-assigned ports, each
+/// serving connections forever from a detached thread; returns their
+/// addresses. Threads die with the test process.
+fn loopback_workers(n: usize) -> Vec<String> {
+    (0..n)
+        .map(|_| {
+            let server = WorkerServer::bind("127.0.0.1:0").expect("bind loopback");
+            let addr = server.local_addr().expect("local addr").to_string();
+            std::thread::spawn(move || {
+                let _ = server.run(&WorkerConfig::default());
+            });
+            addr
+        })
+        .collect()
+}
+
+fn scenario(
+    name: &str,
+    masters: usize,
+    workers: usize,
+    l: f64,
+    spread: f64,
+    seed: u64,
+) -> Scenario {
+    Scenario::random(
+        name,
+        masters,
+        workers,
+        l,
+        AShift::Range(0.01, spread),
+        2.0,
+        CommModel::Stochastic,
+        seed,
+    )
+}
+
+fn spec() -> PlanSpec {
+    PlanSpec {
+        policy: Policy::DediIter,
+        values: coded_coop::assign::ValueModel::Markov,
+        loads: LoadMethod::Markov,
+    }
+}
+
+fn opts(seed: u64, transport: Transport) -> RunOptions {
+    RunOptions {
+        cols: 16,
+        time_scale: 2e-5,
+        backend: Backend::Native,
+        seed,
+        verify: true,
+        transport,
+    }
+}
+
+/// The sub-task assignment a run actually executed, as a sorted
+/// multiset of (worker, master, rows, deadline-bits). Outcomes are
+/// excluded: whether a given sub-task computed or was cancelled is a
+/// wall-clock race; WHAT was assigned WHERE with WHICH deadline is
+/// deterministic (sampled coordinator-side from the seeded RNG).
+type AssignmentKey = (usize, usize, usize, u64);
+
+fn assignment(events: &[coded_coop::coordinator::worker::TaskEvent]) -> Vec<AssignmentKey> {
+    let mut v: Vec<_> = events
+        .iter()
+        .map(|e| (e.worker, e.master, e.rows, e.deadline_ms.to_bits()))
+        .collect();
+    v.sort();
+    v
+}
+
+#[test]
+fn tcp_parity_with_thread_transport() {
+    // Same seed, same plan, both transports: identical decoded products
+    // (within verify tolerance) and identical sub-task assignment.
+    let s = scenario("net-parity", 2, 4, 64.0, 0.05, 11);
+    let p = plan::build(&s, &spec());
+
+    let thread_report = run_plan(&s, &p, &opts(11, Transport::Thread)).unwrap();
+    // 3 worker processes for 6 queues (2 local + 4 remote): round-robin,
+    // each connection is one logical worker.
+    let tcp_report = run_plan(&s, &p, &opts(11, Transport::tcp(loopback_workers(3)))).unwrap();
+
+    assert!(thread_report.all_verified(1e-3), "{thread_report:?}");
+    assert!(tcp_report.all_verified(1e-3), "{tcp_report:?}");
+    assert_eq!(
+        assignment(&thread_report.events),
+        assignment(&tcp_report.events),
+        "transports executed different sub-task assignments"
+    );
+    assert_eq!(thread_report.masters.len(), tcp_report.masters.len());
+    for (t, n) in thread_report.masters.iter().zip(&tcp_report.masters) {
+        // Both complete, so decode consumed exactly L rows each.
+        assert_eq!(t.rows_used, n.rows_used);
+        assert!(n.completion_ms.is_finite());
+    }
+}
+
+#[test]
+fn cancel_frames_stop_remaining_workers() {
+    // Wide node-speed spread + near-real-time scale: fast workers
+    // complete each master's L rows while slow deadlines are still
+    // pending, so Cancel frames must reach workers mid-run. Asserted
+    // via the worker-side TaskEvent logs that travel back in Shutdown.
+    let s = scenario("net-cancel", 2, 10, 256.0, 0.2, 2);
+    let p = plan::build(&s, &spec());
+    let mut o = opts(2, Transport::tcp(loopback_workers(4)));
+    o.time_scale = 2e-3;
+    let report = run_plan(&s, &p, &o).unwrap();
+
+    assert!(report.all_verified(1e-3), "{report:?}");
+    let skipped: usize = report.worker_skipped.iter().sum();
+    let cancelled_events = report
+        .events
+        .iter()
+        .filter(|e| e.outcome == Outcome::Cancelled)
+        .count();
+    let cancelled_rows: usize = report.masters.iter().map(|m| m.rows_cancelled).sum();
+    assert!(
+        skipped > 0 || cancelled_events > 0 || cancelled_rows > 0,
+        "no redundancy was cancelled over the wire: {report:?}"
+    );
+    // The drain stats from worker Shutdowns are coherent with the logs.
+    assert_eq!(skipped, cancelled_events);
+}
+
+#[test]
+fn stream_runs_over_tcp() {
+    let s = scenario("net-stream", 2, 4, 64.0, 0.05, 11);
+    let p = plan::build(&s, &spec());
+    let outs = run_stream(
+        &s,
+        &p,
+        &StreamOptions {
+            jobs: 2,
+            period_ms: 5.0,
+            cols: 8,
+            time_scale: 2e-5,
+            backend: Backend::Native,
+            seed: 11,
+            verify: true,
+            transport: Transport::tcp(loopback_workers(3)),
+        },
+    )
+    .unwrap();
+    assert_eq!(outs.len(), 4);
+    for o in &outs {
+        assert!(o.completion_ms.is_finite(), "{o:?}");
+        let err = o.max_rel_err.expect("verified");
+        assert!(err < 1e-3, "job ({}, {}) decode error {err}", o.master, o.job);
+    }
+}
+
+// ---- codec fuzz properties (satellite: random round-trips, typed ------
+// truncation errors, no panics on garbage) ------------------------------
+
+fn random_message(g: &mut Gen) -> Message {
+    let small_vec = |g: &mut Gen, max: usize| {
+        let len = g.usize_range(0, max);
+        g.vec(len, |g| g.f64_range(-1e3, 1e3) as f32)
+    };
+    match g.usize_range(0, 5) {
+        0 => Message::Hello {
+            wid: g.usize_range(0, 1000) as u32,
+            n_tasks: g.usize_range(0, 1000) as u32,
+            n_cancel_slots: g.usize_range(0, 1000) as u32,
+            time_scale: g.f64_range(0.0, 1.0),
+        },
+        1 => Message::TaskAssign {
+            task: g.usize_range(0, 100) as u32,
+            coded_start: g.usize_range(0, 10_000) as u32,
+            rows: g.usize_range(0, 64) as u32,
+            cols: g.usize_range(0, 64) as u32,
+            delay_ms: g.f64_range(0.0, 1e4),
+            a_block: small_vec(g, 256),
+            x: small_vec(g, 64),
+        },
+        2 => Message::PartialResult {
+            task: g.usize_range(0, 100) as u32,
+            coded_start: g.usize_range(0, 10_000) as u32,
+            rows: g.usize_range(0, 64) as u32,
+            worker: g.usize_range(0, 100) as u32,
+            delay_ms: g.f64_range(0.0, 1e4),
+            values: small_vec(g, 256),
+        },
+        3 => Message::Cancel {
+            task: g.usize_range(0, 1000) as u32,
+        },
+        4 => Message::Heartbeat {
+            nonce: g.rng().next_u64(),
+        },
+        _ => Message::Shutdown {
+            computed: g.usize_range(0, 1000) as u64,
+            skipped: g.usize_range(0, 1000) as u64,
+            events: {
+                let len = g.usize_range(0, 8);
+                g.vec(len, |g| WireEvent {
+                    worker: g.usize_range(0, 100) as u32,
+                    task: g.usize_range(0, 100) as u32,
+                    rows: g.usize_range(0, 1000) as u32,
+                    deadline_ms: g.f64_range(0.0, 1e4),
+                    compute_wall_ms: g.f64_range(0.0, 1e3),
+                    outcome: match g.usize_range(0, 2) {
+                        0 => Outcome::Computed,
+                        1 => Outcome::Cancelled,
+                        _ => Outcome::Failed,
+                    },
+                })
+            },
+        },
+    }
+}
+
+#[test]
+fn prop_random_messages_roundtrip() {
+    check(Config::default().cases(300), "encode ∘ decode = id", |g| {
+        let m = random_message(g);
+        let bytes = m.encode();
+        let back = Message::decode(&bytes).expect("decode own encoding");
+        assert_eq!(m, back);
+    });
+}
+
+#[test]
+fn prop_truncations_are_typed_errors_never_panics() {
+    check(
+        Config::default().cases(100),
+        "every strict prefix fails with a typed error",
+        |g| {
+            let bytes = random_message(g).encode();
+            for cut in 0..bytes.len() {
+                match Message::decode(&bytes[..cut]) {
+                    Err(CodecError::Truncated { .. }) | Err(CodecError::Oversize { .. }) => {}
+                    Err(e) => panic!("prefix {cut}/{}: unexpected error {e}", bytes.len()),
+                    Ok(m) => panic!("prefix {cut}/{} decoded as {m:?}", bytes.len()),
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_garbage_bytes_never_panic() {
+    check(Config::default().cases(300), "decode(garbage) is Err, not panic", |g| {
+        let len = g.usize_range(0, 200);
+        let bytes = g.vec(len, |g| g.rng().next_u64() as u8);
+        // Any outcome but a panic is acceptable; a lucky decode must
+        // re-encode to the same bytes it consumed.
+        if let Ok(m) = Message::decode(&bytes) {
+            assert_eq!(m.encode(), bytes);
+        }
+    });
+}
+
+#[test]
+fn prop_framed_garbage_never_panics() {
+    check(Config::default().cases(200), "read_frame(garbage) never panics", |g| {
+        let len = g.usize_range(0, 64);
+        let bytes = g.vec(len, |g| g.rng().next_u64() as u8);
+        let mut cursor = std::io::Cursor::new(bytes);
+        loop {
+            match frame::read_frame(&mut cursor) {
+                Ok(_) => continue,
+                Err(_) => break, // typed Closed/Truncated/Oversize
+            }
+        }
+    });
+}

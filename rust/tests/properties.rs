@@ -230,3 +230,51 @@ fn prop_simulator_matches_oracle_recomputation() {
         },
     );
 }
+
+#[test]
+fn prop_round_loads_decodable_and_tight() {
+    check(
+        Config::default().cases(200),
+        "round_loads: Σl ≥ L + 1, ≤ fractional total + one row per worker",
+        |g| {
+            let n = g.usize_range(1, 40);
+            let l_rows = g.usize_range(1, 5000);
+            // Random positive fractional loads, scaled so Σ ≥ L (the
+            // allocators always hand round_loads a feasible total).
+            let raw: Vec<f64> = (0..n).map(|_| g.f64_range(0.1, 10.0)).collect();
+            let raw_sum: f64 = raw.iter().sum();
+            let scale = l_rows as f64 * g.f64_range(1.0, 3.0) / raw_sum;
+            let loads: Vec<f64> = raw.iter().map(|&r| r * scale).collect();
+            let frac_sum: f64 = loads.iter().sum();
+
+            let out = coded_coop::coordinator::round_loads(&loads, l_rows);
+            let total: usize = out.iter().sum();
+
+            // Decodability: any L coded rows decode, and at least one
+            // row of redundancy keeps the system coded.
+            assert!(
+                total >= l_rows + 1,
+                "Σ rounded = {total} < L + 1 = {}",
+                l_rows + 1
+            );
+            // Tightness: never more than one extra row per worker over
+            // the fractional total (largest-remainder rounding).
+            assert!(
+                total as f64 <= frac_sum + n as f64 + 0.5,
+                "Σ rounded = {total} ≫ fractional {frac_sum} + {n}"
+            );
+            // Shape: order-preserving, no entry below its floor.
+            assert_eq!(out.len(), loads.len());
+            for (o, l) in out.iter().zip(&loads) {
+                assert!(
+                    *o >= l.floor() as usize,
+                    "entry rounded below its floor: {o} < ⌊{l}⌋"
+                );
+                assert!(
+                    (*o as f64) <= l + 2.0,
+                    "entry {o} exceeds fractional {l} by more than 2 rows"
+                );
+            }
+        },
+    );
+}
