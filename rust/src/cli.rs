@@ -10,8 +10,8 @@
 //! coded-coop plan run --plan plan.json         (…execute many)
 //! coded-coop e2e    [--masters M] [--workers N] [--rows L] [--cols S]
 //!            [--policy P] [--seed S] [--native] [--time-scale X]
-//!            [--flaky N] [--transport thread|tcp] [--workers-at A1,A2,…]
-//! coded-coop worker --listen ADDR [--flaky N] [--once]
+//!            [--fault SPEC] [--transport thread|tcp] [--workers-at A1,A2,…]
+//! coded-coop worker --listen ADDR [--fault SPEC] [--once]
 //! coded-coop version | help
 //! ```
 //!
@@ -26,6 +26,7 @@ use crate::exec::{self, ExecOptions, Executor};
 use crate::net;
 use crate::experiment::{self, catalog, CellResult, SweepOptions, SweepSpec};
 use crate::figures::{self, FigureOptions};
+use crate::health::{FaultPlan, HealthConfig};
 use crate::plan::{LoadMethod, Plan, Policy};
 use crate::policy::{parse_value_model, registry, PolicySpec};
 use crate::runtime::RuntimeService;
@@ -131,14 +132,21 @@ USAGE:
                   [--records FILE] [--no-records] [--out results.json]
   coded-coop serve --scenario <small|large|ec2|FILE.json> [--policy P] [--loads L]
                   [--jobs N] [--load-factor F] [--churn-rate R] [--churn-downtime D]
+                  [--fault SPEC]                      (health-derived churn)
                   [--process deterministic|poisson] [--seed S] [--records FILE] [--no-records]
   coded-coop e2e  [--masters M] [--workers N] [--rows L] [--cols S]
                   [--policy P] [--seed S] [--native] [--time-scale X]
-                  [--flaky N]                         (fault injection)
+                  [--fault SPEC] [--fast-health]      (fault injection + recovery)
                   [--transport thread|tcp] [--workers-at ADDR1,ADDR2,…]
                   [--stream-jobs N] [--period-ms X]   (queued-job stream)
-  coded-coop worker --listen ADDR [--flaky N] [--once]   (socket-mode worker)
+                  [--out FILE.json]                   (full report incl. health events)
+  coded-coop worker --listen ADDR [--fault SPEC] [--once]   (socket-mode worker)
   coded-coop version | help
+
+faults:   SPEC = comma list of kind:worker@frac — e.g. crash:w3@50%,gray:w2@0%,
+          spike:w1@25%x40, slow:w4@40%x30, flaky:all@7 (wN 1-based, 'all' = every
+          worker, @P% = trigger point in the task queue, xF = extra wall ms).
+          --flaky N is deprecated sugar for flaky:all@N.
 
 figures:  fig2 fig3 fig4a fig4b fig5 fig6 fig7 fig8 (see DESIGN.md)
 sweeps:   {} (batched grid engine; JSON SweepSpec in, per-cell table + JSON out)
@@ -729,6 +737,9 @@ fn cmd_serve_single(args: &Args) -> anyhow::Result<()> {
     cfg.load_factor = args.f64_flag("load-factor", 0.8)?;
     cfg.churn_rate = args.f64_flag("churn-rate", 0.0)?;
     cfg.churn_downtime = args.f64_flag("churn-downtime", 0.5)?;
+    // --fault SPEC: churn synthesized from what the health layer would
+    // observe under these faults, instead of the rate-based cycle.
+    cfg.faults = parse_fault(args)?;
     cfg.process = ArrivalProcess::parse(args.flag("process").unwrap_or("poisson"))?;
     cfg.seed = args.u64_flag("seed", 2022)?;
     // Open the record sink BEFORE the run: a bad --records path must
@@ -784,9 +795,20 @@ fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
     let spec = parse_policy_spec(args)?;
     let plan = spec.build(&scenario)?;
 
-    // --flaky N: deterministic fault injection (~1/N of sub-task
-    // computes fail and the MDS redundancy must absorb them).
-    let flaky = parse_flaky(args)?;
+    // --fault SPEC (or the deprecated --flaky N): deterministic fault
+    // injection, shared by both transports — thread workers resolve the
+    // plan in-process, tcp workers receive it on their command line.
+    let fault = parse_fault(args)?;
+    // Armed explicitly (--fast-health tightens every window for quick
+    // demos/CI) or implicitly by injecting a fault; a clean default run
+    // keeps the PR-6 dispatch path untouched.
+    let health = if args.switch("fast-health") {
+        let mut h = HealthConfig::fast();
+        h.armed = true;
+        h
+    } else {
+        HealthConfig::default()
+    };
     // --transport tcp: dispatch over worker processes; --workers-at
     // gives their endpoints, empty auto-spawns loopback processes.
     let transport = match args.flag("transport").unwrap_or("thread") {
@@ -801,23 +823,20 @@ fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
                         .collect()
                 })
                 .unwrap_or_default();
-            coordinator::Transport::Tcp(coordinator::TcpOptions { addrs, flaky })
+            coordinator::Transport::Tcp(coordinator::TcpOptions { addrs })
         }
         other => anyhow::bail!("--transport expects 'thread' or 'tcp', got '{other}'"),
     };
 
-    // PJRT by default; --native for environments without artifacts. In
-    // thread mode --flaky swaps in the fault-injecting backend; in tcp
-    // mode the flag configures the spawned worker processes instead and
-    // this backend only serves the coordinator's encode leg.
+    // PJRT by default; --native for environments without artifacts.
+    // Fault injection lives in the FaultPlan now, so the backend choice
+    // is independent of it (the encode leg is always reliable).
     let service;
-    let backend = match (&transport, flaky) {
-        (coordinator::Transport::Thread, Some(every)) => Backend::flaky(every),
-        _ if args.switch("native") => Backend::Native,
-        _ => {
-            service = RuntimeService::start(&crate::runtime::default_artifact_dir())?;
-            Backend::Pjrt(service.handle())
-        }
+    let backend = if args.switch("native") {
+        Backend::Native
+    } else {
+        service = RuntimeService::start(&crate::runtime::default_artifact_dir())?;
+        Backend::Pjrt(service.handle())
     };
 
     // --stream-jobs N: the queued-job stream (coordinator::run_stream) —
@@ -837,6 +856,8 @@ fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
                 seed,
                 verify: true,
                 transport,
+                fault,
+                health,
             },
         )?;
         let mut t = Table::new(&[
@@ -880,25 +901,45 @@ fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
             seed,
             verify: true,
             transport,
+            fault,
+            health,
         },
     )?;
     print_report(&report);
+    // --out FILE: the full structured report (masters, events, health
+    // timeline, the `verified` bit) for CI assertions and dashboards.
+    if let Some(path) = args.flag("out") {
+        std::fs::write(path, report.to_json().to_string_pretty())?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 
-/// `--flaky N` with CLI-grade validation ([`Backend::flaky`] asserts).
-fn parse_flaky(args: &Args) -> anyhow::Result<Option<usize>> {
-    match args.flag("flaky") {
-        None => Ok(None),
-        Some(_) => {
-            let every = args.usize_flag("flaky", 0)?;
-            anyhow::ensure!(
-                every >= 2,
-                "--flaky N needs N ≥ 2 (N=1 would fail every sub-task)"
-            );
-            Ok(Some(every))
-        }
+/// Fault-injection flags: `--fault SPEC` (the [`FaultPlan`] DSL) and
+/// the deprecated `--flaky N` (sugar for `flaky:all@N`); both present
+/// concatenates. Validation is CLI-grade: `--flaky 1` explains WHY the
+/// period must leave redundancy headroom instead of asserting.
+fn parse_fault(args: &Args) -> anyhow::Result<Option<FaultPlan>> {
+    let mut plan: Option<FaultPlan> = match args.flag("fault") {
+        None => None,
+        Some(s) => Some(FaultPlan::parse(s)?),
+    };
+    if args.flag("flaky").is_some() {
+        let every = args.usize_flag("flaky", 0)?;
+        eprintln!(
+            "note: --flaky N is deprecated; use --fault flaky:all@{every} \
+             (the SPEC syntax also injects crash/gray/spike/slow faults)"
+        );
+        let f = FaultPlan::flaky(every)?;
+        plan = Some(match plan {
+            None => f,
+            Some(mut p) => {
+                p.specs.extend(f.specs);
+                p
+            }
+        });
     }
+    Ok(plan)
 }
 
 /// `worker`: a standalone socket-mode worker process. Binds `--listen`
@@ -911,14 +952,11 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
             "worker needs --listen ADDR (e.g. 127.0.0.1:7431, or 127.0.0.1:0 for a free port)"
         )
     })?;
-    let backend = match parse_flaky(args)? {
-        Some(every) => Backend::flaky(every),
-        None => Backend::Native,
-    };
     let server = net::WorkerServer::bind(listen)?;
     server.run(&net::WorkerConfig {
-        backend,
+        backend: Backend::Native,
         once: args.switch("once"),
+        fault: parse_fault(args)?,
     })
 }
 
@@ -954,6 +992,18 @@ pub fn print_report(report: &coordinator::Report) {
         report.wall_ms,
         report.all_verified(1e-2),
     );
+    if !report.health.is_empty() {
+        println!("health events ({}):", report.health.len());
+        for h in &report.health {
+            println!(
+                "  {:9.1} ms  w{}  {:10}  {}",
+                h.at_ms,
+                h.worker + 1,
+                h.kind_label(),
+                h.detail()
+            );
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1082,11 +1132,26 @@ mod tests {
     }
 
     #[test]
-    fn flaky_flag_validated() {
-        assert_eq!(parse_flaky(&args(&["--flaky", "5"])).unwrap(), Some(5));
-        assert_eq!(parse_flaky(&args(&[])).unwrap(), None);
-        assert!(parse_flaky(&args(&["--flaky", "1"])).is_err());
-        assert!(parse_flaky(&args(&["--flaky", "nope"])).is_err());
+    fn fault_flags_validated() {
+        // --flaky N is deprecated sugar for flaky:all@N…
+        let p = parse_fault(&args(&["--flaky", "5"])).unwrap().unwrap();
+        assert_eq!(p, FaultPlan::flaky(5).unwrap());
+        assert!(parse_fault(&args(&[])).unwrap().is_none());
+        // …whose validation explains the redundancy requirement.
+        let e = parse_fault(&args(&["--flaky", "1"])).unwrap_err();
+        assert!(e.to_string().contains("redundancy headroom"), "{e}");
+        assert!(parse_fault(&args(&["--flaky", "nope"])).is_err());
+        // The SPEC DSL parses…
+        let p = parse_fault(&args(&["--fault", "crash:w3@50%,gray:w2@0%"]))
+            .unwrap()
+            .unwrap();
+        assert_eq!(p.specs.len(), 2);
+        assert!(parse_fault(&args(&["--fault", "meteor:w1@0%"])).is_err());
+        // …and both flags concatenate into one plan.
+        let p = parse_fault(&args(&["--fault", "crash:w1@50%", "--flaky", "7"]))
+            .unwrap()
+            .unwrap();
+        assert_eq!(p.specs.len(), 2);
     }
 
     #[test]
@@ -1094,7 +1159,9 @@ mod tests {
         let h = help_text();
         assert!(h.contains("worker --listen"), "help misses the worker command");
         assert!(h.contains("--transport thread|tcp"), "help misses --transport");
-        assert!(h.contains("--flaky N"), "help misses --flaky");
+        assert!(h.contains("--fault SPEC"), "help misses --fault");
+        assert!(h.contains("crash:w3@50%"), "help misses the fault DSL examples");
+        assert!(h.contains("--fast-health"), "help misses --fast-health");
     }
 
     #[test]

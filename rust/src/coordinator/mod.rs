@@ -32,6 +32,7 @@ use std::time::Instant;
 
 use crate::coding::MdsCode;
 use crate::config::Scenario;
+use crate::health::{FaultPlan, HealthConfig, HealthEvent, HealthEventKind};
 use crate::plan::{self, MasterPlan, Plan, PlanSpec};
 use crate::runtime::RuntimeHandle;
 use crate::util::rng::Rng;
@@ -96,6 +97,13 @@ pub struct RunOptions {
     pub verify: bool,
     /// How sub-tasks reach workers: in-process threads (default) or TCP.
     pub transport: Transport,
+    /// Injected faults (crash / gray / spike / slow-start / flaky), or
+    /// `None` for a clean run. Applies to both transports.
+    pub fault: Option<FaultPlan>,
+    /// Heartbeat / breaker thresholds. Health tracking arms itself when
+    /// `health.active(fault.is_some())` — a clean run with the default
+    /// config keeps the PR-6 dispatch path bit-identical.
+    pub health: HealthConfig,
 }
 
 /// Per-master outcome.
@@ -128,6 +136,9 @@ pub struct Report {
     pub worker_skipped: Vec<usize>,
     /// Per-sub-task event log (observability; JSON via [`Report::to_json`]).
     pub events: Vec<TaskEvent>,
+    /// Health timeline: suspicions, breaker transitions, disconnects and
+    /// re-queues. Empty when health tracking is disarmed.
+    pub health: Vec<HealthEvent>,
 }
 
 impl Report {
@@ -172,6 +183,7 @@ impl Report {
         use crate::util::json::Json;
         let mut j = Json::obj();
         j.set("label", Json::Str(self.label.clone()));
+        j.set("verified", Json::Bool(self.all_verified(1e-2)));
         j.set("system_completion_ms", Json::Num(self.system_completion_ms()));
         j.set("wall_ms", Json::Num(self.wall_ms));
         j.set("compute_wall_ms", Json::Num(self.compute_wall_ms()));
@@ -220,6 +232,22 @@ impl Report {
                                 .into(),
                             ),
                         );
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+        j.set(
+            "health",
+            Json::Arr(
+                self.health
+                    .iter()
+                    .map(|h| {
+                        let mut o = Json::obj();
+                        o.set("at_ms", Json::Num(h.at_ms));
+                        o.set("worker", Json::Num(h.worker as f64));
+                        o.set("kind", Json::Str(h.kind_label().into()));
+                        o.set("detail", Json::Str(h.detail()));
                         o
                     })
                     .collect(),
@@ -434,29 +462,42 @@ impl TaskCollector {
 /// event log and the wall time (ms). One seam for one-shot and stream,
 /// thread and socket: the completion/cancellation semantics cannot
 /// drift between any of the four combinations.
+#[allow(clippy::type_complexity)]
 fn dispatch_and_collect(
     queues: Vec<Vec<SubTask>>,
     collectors: &mut [TaskCollector],
     backend: &Backend,
     time_scale: f64,
     transport: &Transport,
-) -> anyhow::Result<(Vec<usize>, Vec<usize>, Vec<TaskEvent>, f64)> {
+    fault: Option<&FaultPlan>,
+    health: &HealthConfig,
+) -> anyhow::Result<(Vec<usize>, Vec<usize>, Vec<TaskEvent>, f64, Vec<HealthEvent>)> {
     match transport {
-        Transport::Thread => dispatch_threads(queues, collectors, backend, time_scale),
+        Transport::Thread => {
+            dispatch_threads(queues, collectors, backend, time_scale, fault)
+        }
         Transport::Tcp(opts) => {
-            crate::net::transport::dispatch_tcp(queues, collectors, opts, time_scale)
+            crate::net::transport::dispatch_tcp(
+                queues, collectors, opts, time_scale, fault, health,
+            )
         }
     }
 }
 
 /// The in-process transport: one worker thread per non-empty queue, an
-/// mpsc results bus, cancellation via shared atomics.
+/// mpsc results bus, cancellation via shared atomics. Fault injection
+/// resolves the plan to per-worker trigger indices; a crashed thread
+/// simply stops producing (its redundancy absorbs the loss — there is
+/// no re-queue in thread mode, only a [`HealthEventKind::Disconnect`]
+/// record so the report shows what happened).
+#[allow(clippy::type_complexity)]
 fn dispatch_threads(
     queues: Vec<Vec<SubTask>>,
     collectors: &mut [TaskCollector],
     backend: &Backend,
     time_scale: f64,
-) -> anyhow::Result<(Vec<usize>, Vec<usize>, Vec<TaskEvent>, f64)> {
+    fault: Option<&FaultPlan>,
+) -> anyhow::Result<(Vec<usize>, Vec<usize>, Vec<TaskEvent>, f64, Vec<HealthEvent>)> {
     let cancel: Arc<Vec<AtomicBool>> = Arc::new(
         (0..collectors.len()).map(|_| AtomicBool::new(false)).collect(),
     );
@@ -472,12 +513,17 @@ fn dispatch_threads(
         let backend = backend.clone();
         let cancel = Arc::clone(&cancel);
         let tx = res_tx.clone();
+        let faults = fault
+            .map(|p| p.for_worker(wid, tasks.len()))
+            .unwrap_or_default();
         join.push((
             wid,
             std::thread::Builder::new()
                 .name(format!("worker-{wid}"))
                 .spawn(move || {
-                    worker::run_worker(wid, tasks, backend, cancel, tx, time_scale, t_start)
+                    worker::run_worker(
+                        wid, tasks, backend, cancel, tx, time_scale, t_start, &faults,
+                    )
                 })?,
         ));
     }
@@ -488,17 +534,26 @@ fn dispatch_threads(
         }
     }
     let mut events: Vec<TaskEvent> = Vec::new();
+    let mut health: Vec<HealthEvent> = Vec::new();
     for (wid, h) in join {
-        let (computed, skipped, ev) = h.join().expect("worker panicked");
+        let (computed, skipped, ev, crashed) = h.join().expect("worker panicked");
         worker_computed[wid] = computed;
         worker_skipped[wid] = skipped;
         events.extend(ev);
+        if crashed {
+            health.push(HealthEvent {
+                at_ms: t_start.elapsed().as_secs_f64() * 1e3,
+                worker: wid,
+                kind: HealthEventKind::Disconnect,
+            });
+        }
     }
     Ok((
         worker_computed,
         worker_skipped,
         events,
         t_start.elapsed().as_secs_f64() * 1e3,
+        health,
     ))
 }
 
@@ -529,6 +584,8 @@ pub fn run(cfg: &CoordinatorConfig) -> anyhow::Result<Report> {
             seed: cfg.seed,
             verify: cfg.verify,
             transport: Transport::Thread,
+            fault: None,
+            health: HealthConfig::default(),
         },
     )
 }
@@ -584,12 +641,14 @@ pub fn run_plan(s: &Scenario, plan: &Plan, opts: &RunOptions) -> anyhow::Result<
         });
     }
 
-    let (worker_computed, worker_skipped, events, wall_ms) = dispatch_and_collect(
+    let (worker_computed, worker_skipped, events, wall_ms, health) = dispatch_and_collect(
         queues,
         &mut collectors,
         &opts.backend,
         opts.time_scale,
         &opts.transport,
+        opts.fault.as_ref(),
+        &opts.health,
     )?;
 
     // ---- Decode + verify -------------------------------------------------
@@ -617,6 +676,7 @@ pub fn run_plan(s: &Scenario, plan: &Plan, opts: &RunOptions) -> anyhow::Result<
         worker_computed,
         worker_skipped,
         events,
+        health,
     })
 }
 
@@ -639,6 +699,10 @@ pub struct StreamOptions {
     pub verify: bool,
     /// How sub-tasks reach workers: in-process threads (default) or TCP.
     pub transport: Transport,
+    /// Injected faults (see [`RunOptions::fault`]).
+    pub fault: Option<FaultPlan>,
+    /// Heartbeat / breaker thresholds (see [`RunOptions::health`]).
+    pub health: HealthConfig,
 }
 
 /// One streamed job's outcome on the real runtime.
@@ -724,12 +788,14 @@ pub fn run_stream(s: &Scenario, plan: &Plan, opts: &StreamOptions) -> anyhow::Re
         }
     }
 
-    let (_computed, _skipped, _events, _wall_ms) = dispatch_and_collect(
+    let (_computed, _skipped, _events, _wall_ms, _health) = dispatch_and_collect(
         queues,
         &mut collectors,
         &opts.backend,
         opts.time_scale,
         &opts.transport,
+        opts.fault.as_ref(),
+        &opts.health,
     )?;
 
     Ok(metas
@@ -995,6 +1061,8 @@ mod tests {
                 seed: 11,
                 verify: true,
                 transport: Transport::Thread,
+                fault: None,
+                health: HealthConfig::default(),
             },
         )
         .unwrap();

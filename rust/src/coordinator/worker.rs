@@ -14,6 +14,13 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::Backend;
+use crate::health::WorkerFaults;
+
+/// A gray-failed worker parks on its cancel flags in this granularity…
+const GRAY_POLL: Duration = Duration::from_millis(2);
+/// …but never longer than this (a liveness backstop for thread-mode
+/// runs where nothing external will ever shut the worker down).
+const GRAY_PARK_CAP: Duration = Duration::from_secs(30);
 
 /// One coded row-block assigned to a worker.
 pub struct SubTask {
@@ -98,7 +105,10 @@ pub struct TaskEvent {
     pub outcome: Outcome,
 }
 
-/// Worker main loop. Returns `(computed, skipped, events)`.
+/// Worker main loop. Returns `(computed, skipped, events, crashed)` —
+/// `crashed` is true only when an injected [`WorkerFaults::crash_at`]
+/// fired, so callers can simulate the process dying (sever the socket)
+/// rather than draining cleanly.
 pub fn run_worker(
     wid: usize,
     mut tasks: Vec<SubTask>,
@@ -107,18 +117,43 @@ pub fn run_worker(
     tx: Sender<WorkerResult>,
     time_scale: f64,
     t_start: Instant,
-) -> (usize, usize, Vec<TaskEvent>) {
+    faults: &WorkerFaults,
+) -> (usize, usize, Vec<TaskEvent>, bool) {
     // Deadline order = arrival order under processor sharing. total_cmp:
     // deadlines are sums of finite sampled delays plus arrival offsets,
     // but a long-lived serving loop must not be one NaN away from a
     // worker-thread panic.
     tasks.sort_by(|a, b| a.delay_ms.total_cmp(&b.delay_ms));
+    let backend = match faults.flaky_every {
+        Some(every) => Backend::Flaky { every },
+        None => backend,
+    };
     let mut computed = 0usize;
     let mut skipped = 0usize;
     let mut events = Vec::with_capacity(tasks.len());
-    for t in tasks {
-        // Sleep until this sub-task's virtual deadline.
-        let deadline = t_start + Duration::from_secs_f64(t.delay_ms * time_scale);
+    for (i, t) in tasks.into_iter().enumerate() {
+        if faults.crash_at.is_some_and(|at| i >= at) {
+            // The "process" dies here: remaining sub-tasks are lost
+            // without a trace — detection and re-queue are the
+            // coordinator's job.
+            return (computed, skipped, events, true);
+        }
+        // Sleep until this sub-task's virtual deadline, plus any
+        // injected degradation (spike from its trigger on, slow-start
+        // until its trigger).
+        let mut extra_ms = 0.0;
+        if let Some((from, ms)) = faults.spike {
+            if i >= from {
+                extra_ms += ms;
+            }
+        }
+        if let Some((until, ms)) = faults.slow {
+            if i < until {
+                extra_ms += ms;
+            }
+        }
+        let deadline = t_start
+            + Duration::from_secs_f64(t.delay_ms * time_scale + extra_ms * 1e-3);
         let now = Instant::now();
         if deadline > now {
             std::thread::sleep(deadline - now);
@@ -131,6 +166,28 @@ pub fn run_worker(
             compute_wall_ms: 0.0,
             outcome: Outcome::Cancelled,
         };
+        if faults.gray_from.is_some_and(|from| i >= from) {
+            // Gray failure: alive (beats keep flowing from the net
+            // layer) but compute is dead. Park until the task is
+            // cancelled — by redundancy completing the master or by the
+            // coordinator shutting this worker down — with a wall-clock
+            // backstop so a thread-mode run can never hang forever.
+            let parked = Instant::now();
+            while !cancel[t.master].load(Ordering::SeqCst) {
+                if parked.elapsed() > GRAY_PARK_CAP {
+                    break;
+                }
+                std::thread::sleep(GRAY_POLL);
+            }
+            event.outcome = if cancel[t.master].load(Ordering::SeqCst) {
+                Outcome::Cancelled
+            } else {
+                Outcome::Failed
+            };
+            skipped += 1;
+            events.push(event);
+            continue;
+        }
         if cancel[t.master].load(Ordering::SeqCst) {
             skipped += 1;
             events.push(event);
@@ -162,7 +219,7 @@ pub fn run_worker(
         }
         events.push(event);
     }
-    (computed, skipped, events)
+    (computed, skipped, events, false)
 }
 
 #[cfg(test)]
@@ -192,7 +249,7 @@ mod tests {
             mk_task(0, 0, 2, 1.0),
             mk_task(0, 20, 2, 3.0),
         ];
-        let (computed, skipped, events) = run_worker(
+        let (computed, skipped, events, crashed) = run_worker(
             7,
             tasks,
             Backend::Native,
@@ -200,7 +257,9 @@ mod tests {
             tx,
             1e-5, // fast
             Instant::now(),
+            &WorkerFaults::none(),
         );
+        assert!(!crashed);
         assert_eq!((computed, skipped), (3, 0));
         assert_eq!(events.len(), 3);
         assert!(events.iter().all(|e| e.outcome == Outcome::Computed));
@@ -222,6 +281,7 @@ mod tests {
             tx,
             1e-6,
             Instant::now(),
+            &WorkerFaults::none(),
         );
         let r = rx.recv().unwrap();
         // row of ones (len 8) · vector of twos = 16
@@ -233,7 +293,7 @@ mod tests {
     fn cancellation_skips_remaining() {
         let (tx, rx) = channel();
         let cancel = Arc::new(vec![AtomicBool::new(true)]); // already done
-        let (computed, skipped, events) = run_worker(
+        let (computed, skipped, events, _) = run_worker(
             0,
             vec![mk_task(0, 0, 2, 0.1), mk_task(0, 2, 2, 0.2)],
             Backend::Native,
@@ -241,9 +301,92 @@ mod tests {
             tx,
             1e-6,
             Instant::now(),
+            &WorkerFaults::none(),
         );
         assert_eq!((computed, skipped), (0, 2));
         assert!(events.iter().all(|e| e.outcome == Outcome::Cancelled));
         assert!(rx.recv().is_err(), "nothing should be emitted");
+    }
+
+    #[test]
+    fn injected_crash_truncates_the_run() {
+        let (tx, rx) = channel();
+        let cancel = Arc::new(vec![AtomicBool::new(false)]);
+        let faults = WorkerFaults {
+            crash_at: Some(1),
+            ..WorkerFaults::none()
+        };
+        let (computed, skipped, events, crashed) = run_worker(
+            0,
+            vec![mk_task(0, 0, 2, 0.1), mk_task(0, 2, 2, 0.2), mk_task(0, 4, 2, 0.3)],
+            Backend::Native,
+            cancel,
+            tx,
+            1e-6,
+            Instant::now(),
+            &faults,
+        );
+        assert!(crashed);
+        assert_eq!((computed, skipped), (1, 0));
+        assert_eq!(events.len(), 1);
+        let rows: Vec<usize> = rx.iter().map(|r| r.coded_start).collect();
+        assert_eq!(rows, vec![0], "only the pre-crash sub-task published");
+    }
+
+    #[test]
+    fn gray_failure_parks_until_cancelled() {
+        let (tx, rx) = channel();
+        let cancel = Arc::new(vec![AtomicBool::new(false)]);
+        let flag = Arc::clone(&cancel);
+        // Cancel arrives "from the coordinator" while the worker parks.
+        let canceller = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            flag[0].store(true, Ordering::SeqCst);
+        });
+        let faults = WorkerFaults {
+            gray_from: Some(0),
+            ..WorkerFaults::none()
+        };
+        let (computed, skipped, events, crashed) = run_worker(
+            0,
+            vec![mk_task(0, 0, 2, 0.1)],
+            Backend::Native,
+            cancel,
+            tx,
+            1e-6,
+            Instant::now(),
+            &faults,
+        );
+        canceller.join().unwrap();
+        assert!(!crashed);
+        assert_eq!((computed, skipped), (0, 1));
+        assert_eq!(events[0].outcome, Outcome::Cancelled);
+        assert!(rx.recv().is_err(), "gray compute publishes nothing");
+    }
+
+    #[test]
+    fn flaky_fault_swaps_the_backend() {
+        let (tx, rx) = channel();
+        let cancel = Arc::new(vec![AtomicBool::new(false), AtomicBool::new(false)]);
+        let faults = WorkerFaults {
+            flaky_every: Some(2),
+            ..WorkerFaults::none()
+        };
+        // Enough sub-tasks that the residue class ~1/2 hits some.
+        let tasks: Vec<SubTask> = (0..8).map(|i| mk_task(i % 2, i * 2, 1, 0.1)).collect();
+        let (computed, skipped, _, crashed) = run_worker(
+            0,
+            tasks,
+            Backend::Native,
+            cancel,
+            tx,
+            1e-6,
+            Instant::now(),
+            &faults,
+        );
+        assert!(!crashed);
+        assert_eq!(computed + skipped, 8);
+        assert!(skipped > 0, "flaky backend must fail some sub-tasks");
+        drop(rx);
     }
 }

@@ -201,6 +201,8 @@ impl Executor for CoordinatorExecutor {
                 seed: opts.seed,
                 verify: opts.verify,
                 transport: coordinator::Transport::Thread,
+                fault: None,
+                health: crate::health::HealthConfig::default(),
             },
         )?;
         let mut per_master = Vec::with_capacity(report.masters.len());

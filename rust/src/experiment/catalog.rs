@@ -16,6 +16,7 @@
 //! | `ablation_redundancy` | ablation | overhead-β axis, samples kept |
 //! | `ablation_straggler` | ablation | zipped (prob, slowdown) × 2 policies |
 //! | `serving` | — | online serving: load factor × churn rate × 3 policies (sojourn mean/p99) |
+//! | `fault_recovery` | — | serving under injected faults: fault rate × 3 policies (health-derived churn) |
 //! | `smoke` | — | 2-cell CI smoke grid |
 //!
 //! Figs. 7 (trace fitting) and the `multimsg` / `sca_step` ablations are
@@ -46,6 +47,7 @@ pub const IDS: &[&str] = &[
     "ablation_straggler",
     "heavy_tail",
     "serving",
+    "fault_recovery",
     "smoke",
 ];
 
@@ -56,6 +58,10 @@ pub const SERVING_LOAD_FACTORS: &[f64] = &[0.5, 0.9, 1.3];
 /// Churn rates of the `serving` sweep (worker leave/rejoin cycles per
 /// mean one-shot service): a static fleet and a churning one.
 pub const SERVING_CHURN_RATES: &[f64] = &[0.0, 1.0];
+
+/// Fleet fractions hit by injected faults in the `fault_recovery`
+/// sweep: clean baseline, a quarter and half of the workers.
+pub const FAULT_RECOVERY_RATES: &[f64] = &[0.0, 0.25, 0.5];
 
 /// Weibull shapes of the `heavy_tail` sweep: 1.0 is the exponential
 /// tail (the shifted-exp law itself, different sampler bits), smaller
@@ -285,6 +291,37 @@ pub fn spec(id: &str, trials: usize, seed: u64) -> anyhow::Result<SweepSpec> {
                 jobs: trials.clamp(1, 400),
                 churn_rate: 0.0,
                 churn_downtime: 0.5,
+                fault_rate: 0.0,
+            }),
+            ..SweepSpec::new(
+                id,
+                ScenarioSpec::base("small", seed, CommModel::Stochastic),
+                vec![
+                    PolicySpec::new("dedi-iter", ValueModel::Markov, "markov"),
+                    PolicySpec::new("dedi-iter", ValueModel::Markov, "sca"),
+                    PolicySpec::new("frac", ValueModel::Markov, "markov"),
+                ],
+            )
+        },
+        // Beyond the paper: serving resilience under injected faults —
+        // each cell synthesizes a deterministic FaultPlan over its
+        // fleet fraction and serves through the health-derived churn
+        // timeline (crashes leave after the missed-beat window, gray
+        // failures after the stall window, throttles recover through
+        // breaker probes). Sojourn degradation vs. fault_rate is the
+        // readout.
+        "fault_recovery" => SweepSpec {
+            axes: vec![Axis::single("fault_rate", FAULT_RECOVERY_RATES)],
+            trials,
+            seed: fig_mc_seed(seed),
+            keep_samples: true, // p99 sojourn readout
+            arrivals: Some(ArrivalSpec {
+                process: ArrivalProcess::Poisson,
+                load_factor: 0.8,
+                jobs: trials.clamp(1, 400),
+                churn_rate: 0.0,
+                churn_downtime: 0.5,
+                fault_rate: 0.0,
             }),
             ..SweepSpec::new(
                 id,
@@ -360,6 +397,23 @@ mod tests {
         assert_eq!(spec("heavy_tail", 100, 1).unwrap().expand().unwrap().len(), 16);
         // 3 load factors × 2 churn rates × 3 policies.
         assert_eq!(spec("serving", 100, 1).unwrap().expand().unwrap().len(), 18);
+        // 3 fault rates × 3 policies.
+        assert_eq!(
+            spec("fault_recovery", 100, 1).unwrap().expand().unwrap().len(),
+            9
+        );
+    }
+
+    #[test]
+    fn fault_recovery_cells_sweep_the_fault_rate() {
+        let cells = spec("fault_recovery", 100, 7).unwrap().expand().unwrap();
+        // Policies innermost: cells 0–2 are the clean baseline.
+        let rate = |c: &crate::experiment::Cell| c.arrivals.as_ref().unwrap().fault_rate;
+        assert_eq!(rate(&cells[0]), 0.0);
+        assert_eq!(rate(&cells[3]), 0.25);
+        assert_eq!(rate(&cells[8]), 0.5);
+        // No rate-based churn riding along.
+        assert!(cells.iter().all(|c| c.arrivals.as_ref().unwrap().churn_rate == 0.0));
     }
 
     #[test]

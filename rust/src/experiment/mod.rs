@@ -28,6 +28,7 @@ pub mod spec;
 pub use spec::{ArrivalSpec, Axis, Cell, ScenarioSpec, SweepSpec, KNOWN_PARAMS, MAX_CELLS, MAX_SEED};
 
 use crate::exec::{pool, BatchJob, BatchRunner, Outcome};
+use crate::health::FaultPlan;
 use crate::plan::Plan;
 use crate::policy::PolicySpec;
 use crate::serve::{self, JobRecord, ServeConfig};
@@ -282,6 +283,10 @@ fn serve_cell(spec: &SweepSpec, cell: Cell) -> anyhow::Result<CellResult> {
         load_factor: arr.load_factor,
         jobs: arr.jobs,
         script: None,
+        // A fault_rate axis swaps the rate-based churn cycle for a
+        // health-derived timeline: deterministic per-cell faults, churn
+        // events where detection would fire.
+        faults: FaultPlan::synthesize(cell.scenario.n_workers(), arr.fault_rate, cell.seed),
         churn_rate: arr.churn_rate,
         churn_downtime: arr.churn_downtime,
         seed: cell.seed,

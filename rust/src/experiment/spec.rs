@@ -37,8 +37,9 @@ pub const MAX_SEED: u64 = 1 << 52;
 /// worker delay family ([`ScenarioSpec::delay_family`]): each point
 /// selects a mean-matched family with that parameter, overriding the
 /// template's own family (the two bimodal params zip naturally).
-/// `load_factor` / `churn_rate` rewrite the spec's [`ArrivalSpec`] and
-/// are only valid on serving sweeps (specs with an `arrivals` block).
+/// `load_factor` / `churn_rate` / `fault_rate` rewrite the spec's
+/// [`ArrivalSpec`] and are only valid on serving sweeps (specs with an
+/// `arrivals` block).
 pub const KNOWN_PARAMS: &[&str] = &[
     "seed",
     "gamma_ratio",
@@ -55,6 +56,7 @@ pub const KNOWN_PARAMS: &[&str] = &[
     "overhead",
     "load_factor",
     "churn_rate",
+    "fault_rate",
 ];
 
 /// Serving-mode template: when a [`SweepSpec`] carries one of these,
@@ -75,6 +77,12 @@ pub struct ArrivalSpec {
     pub churn_rate: f64,
     /// Fraction of each churn cycle spent away.
     pub churn_downtime: f64,
+    /// Fraction of the fleet hit by an injected fault (0 = clean). Each
+    /// cell synthesizes a deterministic [`crate::health::FaultPlan`]
+    /// from its seed ([`crate::health::FaultPlan::synthesize`]) and
+    /// derives the churn timeline from what the health layer would
+    /// observe — instead of the rate-based `churn_rate` cycle.
+    pub fault_rate: f64,
 }
 
 impl Default for ArrivalSpec {
@@ -85,6 +93,7 @@ impl Default for ArrivalSpec {
             jobs: 200,
             churn_rate: 0.0,
             churn_downtime: 0.5,
+            fault_rate: 0.0,
         }
     }
 }
@@ -104,6 +113,11 @@ impl ArrivalSpec {
             self.jobs >= 1,
             "arrivals.jobs must be ≥ 1 on serving sweeps (a zero-job cell has no data)"
         );
+        anyhow::ensure!(
+            self.fault_rate.is_finite() && (0.0..=1.0).contains(&self.fault_rate),
+            "arrivals.fault_rate must be in [0, 1], got {}",
+            self.fault_rate
+        );
         Ok(())
     }
 
@@ -114,6 +128,7 @@ impl ArrivalSpec {
         j.set("jobs", Json::Num(self.jobs as f64));
         j.set("churn_rate", Json::Num(self.churn_rate));
         j.set("churn_downtime", Json::Num(self.churn_downtime));
+        j.set("fault_rate", Json::Num(self.fault_rate));
         j
     }
 
@@ -142,6 +157,7 @@ impl ArrivalSpec {
             },
             churn_rate: num("churn_rate", d.churn_rate)?,
             churn_downtime: num("churn_downtime", d.churn_downtime)?,
+            fault_rate: num("fault_rate", d.fault_rate)?,
         })
     }
 }
@@ -627,7 +643,7 @@ impl SweepSpec {
                     !seen.contains(&p.as_str()),
                     "param '{p}' appears on two axes"
                 );
-                if matches!(p.as_str(), "load_factor" | "churn_rate") {
+                if matches!(p.as_str(), "load_factor" | "churn_rate" | "fault_rate") {
                     anyhow::ensure!(
                         self.arrivals.is_some(),
                         "axis param '{p}' needs an 'arrivals' block (serving sweeps only)"
@@ -904,6 +920,16 @@ fn apply_param(
                 "churn_rate axis value {v} must be finite and ≥ 0"
             );
             a.churn_rate = v;
+        }
+        "fault_rate" => {
+            let a = arrivals
+                .as_mut()
+                .ok_or_else(|| anyhow::anyhow!("'fault_rate' axis needs an 'arrivals' block"))?;
+            anyhow::ensure!(
+                v.is_finite() && (0.0..=1.0).contains(&v),
+                "fault_rate axis value {v} must be in [0, 1]"
+            );
+            a.fault_rate = v;
         }
         other => anyhow::bail!("unknown axis param '{other}'"),
     }
@@ -1182,6 +1208,14 @@ mod tests {
         s.arrivals = Some(ArrivalSpec::default());
         s.axes.push(Axis::single("churn_rate", &[-1.0]));
         assert!(s.expand().is_err());
+        // fault_rate is a fraction of the fleet — and serving-only.
+        let mut s = base_spec();
+        s.axes.push(Axis::single("fault_rate", &[0.5]));
+        assert!(s.expand().unwrap_err().to_string().contains("arrivals"));
+        let mut s = base_spec();
+        s.arrivals = Some(ArrivalSpec::default());
+        s.axes.push(Axis::single("fault_rate", &[1.5]));
+        assert!(s.expand().is_err());
         // Zero-job cells would export as feasible 0 ms measurements.
         let mut s = base_spec();
         s.arrivals = Some(ArrivalSpec {
@@ -1200,6 +1234,7 @@ mod tests {
             jobs: 77,
             churn_rate: 0.5,
             churn_downtime: 0.25,
+            fault_rate: 0.25,
         });
         let text = s.to_json().to_string_pretty();
         let back = SweepSpec::from_json(&json::parse(&text).unwrap()).unwrap();
@@ -1408,6 +1443,7 @@ mod tests {
                             jobs: g.usize_range(0, 500),
                             churn_rate: g.f64_range(0.0, 4.0),
                             churn_downtime: g.f64_range(0.1, 0.9),
+                            fault_rate: g.f64_range(0.0, 1.0),
                         })
                     } else {
                         None

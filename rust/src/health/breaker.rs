@@ -1,0 +1,203 @@
+//! Per-worker circuit breaker: closed → open (exponential backoff) →
+//! half-open probe → closed again.
+//!
+//! The coordinator asks [`CircuitBreaker::allow`] before dispatching
+//! (or re-queueing) anything to a worker. A healthy worker's breaker is
+//! `Closed` and always allows. Each detected failure
+//! ([`CircuitBreaker::on_failure`]) trips it `Open` for
+//! `base_ms · 2^(failures-1)` (capped at `cap_ms`); while `Open`,
+//! nothing is dispatched. Once the backoff elapses the next `allow`
+//! admits exactly ONE probe (`HalfOpen`): the probe's outcome either
+//! closes the breaker ([`CircuitBreaker::on_success`], resetting the
+//! failure count) or re-opens it with doubled backoff. All clocks are
+//! caller-supplied `now_ms` so the machine is deterministic under test
+//! and usable in both wall time (dispatch) and virtual time (serve
+//! synthesis).
+
+/// Breaker state, exposed for event logging.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+/// One worker's breaker.
+#[derive(Clone, Debug)]
+pub struct CircuitBreaker {
+    state: BreakerState,
+    /// Consecutive failures since the last success (drives backoff).
+    failures: u32,
+    /// While `Open`: when the next probe may go out.
+    open_until_ms: f64,
+    /// While `HalfOpen`: has the single probe been admitted?
+    probe_out: bool,
+    base_ms: f64,
+    cap_ms: f64,
+}
+
+impl CircuitBreaker {
+    pub fn new(base_ms: f64, cap_ms: f64) -> Self {
+        Self {
+            state: BreakerState::Closed,
+            failures: 0,
+            open_until_ms: 0.0,
+            probe_out: false,
+            base_ms: base_ms.max(1e-9),
+            cap_ms: cap_ms.max(base_ms.max(1e-9)),
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// The backoff the NEXT failure would impose (monotone in the
+    /// failure count, capped).
+    pub fn backoff_ms(&self) -> f64 {
+        let exp = self.failures.saturating_sub(1).min(52);
+        (self.base_ms * (1u64 << exp) as f64).min(self.cap_ms)
+    }
+
+    /// May work be dispatched to this worker at `now_ms`? `Open`
+    /// transitions to `HalfOpen` once the backoff has elapsed, and
+    /// `HalfOpen` admits exactly one probe until resolved.
+    pub fn allow(&mut self, now_ms: f64) -> bool {
+        match self.state {
+            BreakerState::Closed => true,
+            BreakerState::Open => {
+                if now_ms < self.open_until_ms {
+                    false
+                } else {
+                    self.state = BreakerState::HalfOpen;
+                    self.probe_out = true;
+                    true
+                }
+            }
+            BreakerState::HalfOpen => {
+                if self.probe_out {
+                    false
+                } else {
+                    self.probe_out = true;
+                    true
+                }
+            }
+        }
+    }
+
+    /// Record a detected failure (missed beats, stall, disconnect, or a
+    /// failed probe): trip `Open` with exponentially grown backoff.
+    pub fn on_failure(&mut self, now_ms: f64) {
+        self.failures = self.failures.saturating_add(1);
+        self.state = BreakerState::Open;
+        self.probe_out = false;
+        self.open_until_ms = now_ms + self.backoff_ms();
+    }
+
+    /// Record a successful probe (or healthy traffic): close and reset.
+    pub fn on_success(&mut self) {
+        self.state = BreakerState::Closed;
+        self.failures = 0;
+        self.probe_out = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Config};
+
+    #[test]
+    fn closed_allows_open_blocks_halfopen_probes() {
+        let mut b = CircuitBreaker::new(100.0, 1000.0);
+        assert!(b.allow(0.0));
+        b.on_failure(0.0);
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.allow(50.0));
+        // Backoff elapsed: exactly one probe.
+        assert!(b.allow(100.0));
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(!b.allow(100.0));
+        b.on_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.allow(101.0));
+    }
+
+    /// Drive a breaker with a random event sequence and check the three
+    /// contract properties from the issue: never dispatch while open,
+    /// half-open admits exactly one probe per open→half-open episode,
+    /// and backoff is monotone nondecreasing (and capped) without an
+    /// intervening success.
+    #[test]
+    fn prop_breaker_contract() {
+        check(Config::default().cases(200), "breaker_contract", |g| {
+            let base = g.f64_range(1.0, 50.0);
+            let cap = base * g.f64_range(1.0, 64.0);
+            let mut b = CircuitBreaker::new(base, cap);
+            let mut now = 0.0f64;
+            let mut probes_this_episode = 0usize;
+            let mut last_backoff = 0.0f64;
+            let mut since_success = 0u32;
+            for _ in 0..g.usize_range(1, 60) {
+                now += g.f64_range(0.0, 3.0 * cap);
+                match g.usize_range(0, 2) {
+                    0 => {
+                        let state_before = b.state();
+                        let allowed = b.allow(now);
+                        match (state_before, b.state()) {
+                            (BreakerState::Open, BreakerState::Open) => {
+                                assert!(!allowed, "dispatched to an open breaker");
+                            }
+                            (_, BreakerState::HalfOpen) => {
+                                if allowed {
+                                    probes_this_episode += 1;
+                                }
+                                assert!(
+                                    probes_this_episode <= 1,
+                                    "half-open admitted {probes_this_episode} probes"
+                                );
+                            }
+                            _ => {}
+                        }
+                    }
+                    1 => {
+                        b.on_failure(now);
+                        probes_this_episode = 0;
+                        since_success += 1;
+                        let bo = b.backoff_ms();
+                        if since_success > 1 {
+                            assert!(
+                                bo >= last_backoff - 1e-9,
+                                "backoff shrank without a success: {last_backoff} -> {bo}"
+                            );
+                        }
+                        assert!(bo <= cap + 1e-9, "backoff {bo} exceeds cap {cap}");
+                        last_backoff = bo;
+                    }
+                    _ => {
+                        b.on_success();
+                        probes_this_episode = 0;
+                        since_success = 0;
+                        last_backoff = 0.0;
+                    }
+                }
+            }
+        });
+    }
+
+    /// Backoff sequence under repeated failures: doubles from base,
+    /// saturates at the cap, resets after a success.
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let mut b = CircuitBreaker::new(100.0, 700.0);
+        let mut seen = Vec::new();
+        for _ in 0..5 {
+            b.on_failure(0.0);
+            seen.push(b.backoff_ms());
+        }
+        assert_eq!(seen, vec![100.0, 200.0, 400.0, 700.0, 700.0]);
+        b.on_success();
+        b.on_failure(0.0);
+        assert_eq!(b.backoff_ms(), 100.0);
+    }
+}

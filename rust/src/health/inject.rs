@@ -1,0 +1,382 @@
+//! Fault injection: the [`FaultPlan`] DSL and its per-worker resolution.
+//!
+//! A fault plan is a comma-separated list of specs in the CLI syntax
+//!
+//! ```text
+//! <kind>:<target>@<param>[x<factor>]
+//!
+//! crash:w3@50%          sever the connection after 50% of the queue
+//! gray:w2@0%            beats stay alive, compute goes dead at 0%
+//! spike:w1@25%x40       +40 ms wall latency per sub-task from 25% on
+//! slow:w4@40%x30        slow-start: +30 ms per sub-task UNTIL 40% done
+//! flaky:all@7           every 7th sub-task compute fails (Backend::Flaky)
+//! ```
+//!
+//! `wN` is the 1-based worker queue (matching the planner's worker node
+//! ids; local master queues sit past the workers and are addressable
+//! too); `all` targets every queue. Percent params are fractions of the
+//! worker's own queue in execution (deadline) order, so `@50%` means
+//! "after half of its sub-tasks ran" regardless of queue length.
+//!
+//! The plan travels as a string: the coordinator passes `--fault <plan>`
+//! to auto-spawned worker processes ([`std::fmt::Display`] round-trips
+//! the parse), and each worker resolves its own slice with
+//! [`FaultPlan::for_worker`] once the Hello handshake tells it its wid.
+//! Injection is symmetric across transports — the thread dispatcher
+//! resolves the same [`WorkerFaults`] for its in-process workers.
+
+use std::fmt;
+
+/// What goes wrong.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Dead silence: stop executing and sever the connection (TCP) or
+    /// return early (thread transport) — a process crash as seen from
+    /// the coordinator.
+    Crash,
+    /// Gray failure: heartbeats keep flowing but compute never finishes
+    /// another sub-task. The worker parks until its tasks are cancelled
+    /// (the coordinator's recovery path shuts it down on detection).
+    Gray,
+    /// Latency spike: every sub-task from the trigger point on is
+    /// published `extra_ms` wall milliseconds late.
+    Spike { extra_ms: f64 },
+    /// Slow-start rejoin: sub-tasks BEFORE the trigger point are
+    /// `extra_ms` late, then the worker runs at full speed.
+    SlowStart { extra_ms: f64 },
+    /// The legacy `--flaky N` backend: a deterministic ~1/N of sub-task
+    /// computes fail (stragglers the MDS redundancy must absorb).
+    Flaky { every: usize },
+}
+
+/// One injected fault: a kind, a target queue and a trigger point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// 0-based worker queue index; `None` = every queue.
+    pub worker: Option<usize>,
+    pub kind: FaultKind,
+    /// Trigger point as a fraction of the target's queue (execution
+    /// order); 0 for [`FaultKind::Flaky`] (it has no trigger).
+    pub at_frac: f64,
+}
+
+/// A set of injected faults, resolvable per worker.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub specs: Vec<FaultSpec>,
+}
+
+/// Everything one worker needs to misbehave: the plan's specs resolved
+/// against its wid and queue length. Indices are positions in the
+/// worker's deadline-sorted execution order.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WorkerFaults {
+    /// Crash before executing this sub-task index.
+    pub crash_at: Option<usize>,
+    /// Stop computing from this sub-task index on (beats stay alive).
+    pub gray_from: Option<usize>,
+    /// `(from index, extra wall ms)` — latency spike.
+    pub spike: Option<(usize, f64)>,
+    /// `(until index, extra wall ms)` — slow-start.
+    pub slow: Option<(usize, f64)>,
+    /// Swap the compute backend for `Backend::Flaky { every }`.
+    pub flaky_every: Option<usize>,
+}
+
+impl WorkerFaults {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn is_none(&self) -> bool {
+        *self == Self::default()
+    }
+}
+
+impl FaultPlan {
+    /// The legacy `--flaky N` flag as a fault plan (every queue,
+    /// [`FaultKind::Flaky`]). `every == 1` would fail EVERY sub-task:
+    /// row absorption needs redundancy headroom — the code only carries
+    /// ~β× the required rows, so at least every other compute must
+    /// survive for any master to decode.
+    pub fn flaky(every: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            every >= 2,
+            "flaky fault needs a period ≥ 2: failing every sub-task (period 1) \
+             leaves no rows for the MDS code to decode from — row absorption \
+             needs redundancy headroom"
+        );
+        Ok(Self {
+            specs: vec![FaultSpec {
+                worker: None,
+                kind: FaultKind::Flaky { every },
+                at_frac: 0.0,
+            }],
+        })
+    }
+
+    /// Parse the CLI syntax (`crash:w3@50%,gray:w1@0%`, see module docs).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let mut specs = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            specs.push(parse_spec(part)?);
+        }
+        anyhow::ensure!(!specs.is_empty(), "empty fault plan '{s}'");
+        Ok(Self { specs })
+    }
+
+    /// Deterministic plan for a sweep cell: a `rate` fraction of the
+    /// `n_workers` fleet gets faulted, cycling through the kinds so a
+    /// rate axis exercises crash, gray and latency faults together.
+    pub fn synthesize(n_workers: usize, rate: f64, seed: u64) -> Option<Self> {
+        let rate = rate.clamp(0.0, 1.0);
+        let k = ((rate * n_workers as f64).ceil() as usize).min(n_workers);
+        if k == 0 {
+            return None;
+        }
+        // Seed-rotated victim choice: which workers fail varies with the
+        // cell seed, the count only with the rate.
+        let start = (seed % n_workers as u64) as usize;
+        let specs = (0..k)
+            .map(|i| {
+                let wid = (start + i * (n_workers / k).max(1)) % n_workers;
+                let kind = match i % 4 {
+                    0 => FaultKind::Crash,
+                    1 => FaultKind::Gray,
+                    2 => FaultKind::SlowStart { extra_ms: 25.0 },
+                    _ => FaultKind::Spike { extra_ms: 25.0 },
+                };
+                FaultSpec {
+                    worker: Some(wid),
+                    kind,
+                    at_frac: 0.25 + 0.5 * (i % 3) as f64 / 2.0,
+                }
+            })
+            .collect();
+        Some(Self { specs })
+    }
+
+    /// Resolve this plan for one worker: wid-matched specs with their
+    /// trigger fractions mapped onto a queue of `n_tasks` sub-tasks.
+    /// Later specs of the same kind win (CLI "last flag wins" spirit).
+    pub fn for_worker(&self, wid: usize, n_tasks: usize) -> WorkerFaults {
+        let mut f = WorkerFaults::none();
+        let idx = |frac: f64| ((frac * n_tasks as f64).round() as usize).min(n_tasks);
+        for s in &self.specs {
+            if s.worker.is_some_and(|w| w != wid) {
+                continue;
+            }
+            match s.kind {
+                FaultKind::Crash => f.crash_at = Some(idx(s.at_frac)),
+                FaultKind::Gray => f.gray_from = Some(idx(s.at_frac)),
+                FaultKind::Spike { extra_ms } => f.spike = Some((idx(s.at_frac), extra_ms)),
+                FaultKind::SlowStart { extra_ms } => f.slow = Some((idx(s.at_frac), extra_ms)),
+                FaultKind::Flaky { every } => f.flaky_every = Some(every),
+            }
+        }
+        f
+    }
+
+    /// Does any spec target `wid` (or all workers)?
+    pub fn targets(&self, wid: usize) -> bool {
+        self.specs.iter().any(|s| s.worker.map_or(true, |w| w == wid))
+    }
+}
+
+fn parse_spec(part: &str) -> anyhow::Result<FaultSpec> {
+    let (kind_s, rest) = part
+        .split_once(':')
+        .ok_or_else(|| anyhow::anyhow!("fault spec '{part}': expected <kind>:<target>@<param>"))?;
+    let (target_s, param_s) = rest
+        .split_once('@')
+        .ok_or_else(|| anyhow::anyhow!("fault spec '{part}': expected <target>@<param>"))?;
+    let worker = match target_s {
+        "all" => None,
+        w => {
+            let n: usize = w
+                .strip_prefix('w')
+                .and_then(|d| d.parse().ok())
+                .ok_or_else(|| {
+                    anyhow::anyhow!("fault target '{w}': expected wN (1-based) or 'all'")
+                })?;
+            anyhow::ensure!(n >= 1, "fault target 'w0': worker queues are 1-based");
+            Some(n - 1)
+        }
+    };
+    // `@P%` (queue fraction) with an optional `xF` factor, or a bare
+    // integer (the flaky period).
+    let (param_s, factor) = match param_s.split_once('x') {
+        Some((p, f)) => (
+            p,
+            Some(f.parse::<f64>().map_err(|_| {
+                anyhow::anyhow!("fault spec '{part}': factor '{f}' is not a number")
+            })?),
+        ),
+        None => (param_s, None),
+    };
+    if let Some(f) = factor {
+        anyhow::ensure!(
+            f.is_finite() && f >= 0.0,
+            "fault spec '{part}': factor must be finite and ≥ 0"
+        );
+    }
+    let frac = |p: &str| -> anyhow::Result<f64> {
+        let pct: f64 = p
+            .strip_suffix('%')
+            .and_then(|d| d.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("fault spec '{part}': expected a percent like 50%"))?;
+        anyhow::ensure!(
+            (0.0..=100.0).contains(&pct),
+            "fault spec '{part}': percent {pct} outside [0, 100]"
+        );
+        Ok(pct / 100.0)
+    };
+    let default_extra = 25.0;
+    let (kind, at_frac) = match kind_s {
+        "crash" => (FaultKind::Crash, frac(param_s)?),
+        "gray" => (FaultKind::Gray, frac(param_s)?),
+        "spike" => (
+            FaultKind::Spike {
+                extra_ms: factor.unwrap_or(default_extra),
+            },
+            frac(param_s)?,
+        ),
+        "slow" => (
+            FaultKind::SlowStart {
+                extra_ms: factor.unwrap_or(default_extra),
+            },
+            frac(param_s)?,
+        ),
+        "flaky" => {
+            let every: usize = param_s.parse().map_err(|_| {
+                anyhow::anyhow!("fault spec '{part}': flaky period must be an integer")
+            })?;
+            // Shares FaultPlan::flaky's rationale (redundancy headroom).
+            let _ = FaultPlan::flaky(every)?;
+            (FaultKind::Flaky { every }, 0.0)
+        }
+        other => anyhow::bail!(
+            "unknown fault kind '{other}' (known: crash, gray, spike, slow, flaky)"
+        ),
+    };
+    Ok(FaultSpec {
+        worker,
+        kind,
+        at_frac,
+    })
+}
+
+impl fmt::Display for FaultSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let target = match self.worker {
+            None => "all".to_string(),
+            Some(w) => format!("w{}", w + 1),
+        };
+        let pct = (self.at_frac * 100.0).round() as u64;
+        match self.kind {
+            FaultKind::Crash => write!(f, "crash:{target}@{pct}%"),
+            FaultKind::Gray => write!(f, "gray:{target}@{pct}%"),
+            FaultKind::Spike { extra_ms } => write!(f, "spike:{target}@{pct}%x{extra_ms}"),
+            FaultKind::SlowStart { extra_ms } => write!(f, "slow:{target}@{pct}%x{extra_ms}"),
+            FaultKind::Flaky { every } => write!(f, "flaky:{target}@{every}"),
+        }
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, s) in self.specs.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{s}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_display_round_trip() {
+        for s in [
+            "crash:w3@50%",
+            "gray:w2@0%",
+            "spike:w1@25%x40",
+            "slow:w4@40%x30",
+            "flaky:all@7",
+            "crash:w1@50%,gray:w2@0%,flaky:all@5",
+        ] {
+            let p = FaultPlan::parse(s).unwrap();
+            let rendered = p.to_string();
+            let back = FaultPlan::parse(&rendered).unwrap();
+            assert_eq!(p, back, "{s} -> {rendered}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "",
+            "boom:w1@50%",
+            "crash:w0@50%",
+            "crash:x1@50%",
+            "crash:w1@150%",
+            "crash:w1",
+            "spike:w1@10%xnope",
+            "flaky:all@1",
+            "flaky:all@7%",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn flaky_needs_redundancy_headroom() {
+        let err = FaultPlan::flaky(1).unwrap_err().to_string();
+        assert!(
+            err.contains("redundancy headroom"),
+            "message must explain WHY ≥ 2: {err}"
+        );
+        assert!(FaultPlan::flaky(2).is_ok());
+    }
+
+    #[test]
+    fn for_worker_resolves_fractions_and_targets() {
+        let p = FaultPlan::parse("crash:w3@50%,spike:all@25%x40").unwrap();
+        let w2 = p.for_worker(2, 4); // w3 == wid 2
+        assert_eq!(w2.crash_at, Some(2));
+        assert_eq!(w2.spike, Some((1, 40.0)));
+        let w0 = p.for_worker(0, 4);
+        assert_eq!(w0.crash_at, None);
+        assert_eq!(w0.spike, Some((1, 40.0)));
+        assert!(p.targets(0) && p.targets(2));
+
+        let f = FaultPlan::flaky(7).unwrap().for_worker(5, 10);
+        assert_eq!(f.flaky_every, Some(7));
+        assert!(!f.is_none());
+        assert!(WorkerFaults::none().is_none());
+    }
+
+    #[test]
+    fn synthesize_scales_with_rate() {
+        assert!(FaultPlan::synthesize(8, 0.0, 1).is_none());
+        let half = FaultPlan::synthesize(8, 0.5, 1).unwrap();
+        assert_eq!(half.specs.len(), 4);
+        let all = FaultPlan::synthesize(8, 1.0, 9).unwrap();
+        assert_eq!(all.specs.len(), 8);
+        // Distinct victims.
+        let mut wids: Vec<_> = all.specs.iter().map(|s| s.worker.unwrap()).collect();
+        wids.sort_unstable();
+        wids.dedup();
+        assert_eq!(wids.len(), 8);
+        // Rate > 1 clamps.
+        assert_eq!(FaultPlan::synthesize(4, 7.0, 0).unwrap().specs.len(), 4);
+    }
+}

@@ -1,0 +1,272 @@
+//! Observed worker health: heartbeat tracking, fault injection, and
+//! circuit-breaker recovery.
+//!
+//! The paper allocates coded redundancy so that *random* straggling is
+//! absorbed by the code itself; this module is the layer after coding —
+//! detecting that a worker has actually failed and reacting (exclude,
+//! re-queue) instead of merely hoping the redundancy covers the loss.
+//! It has three parts plus a serve bridge:
+//!
+//! - [`inject`] — [`FaultPlan`]: a small DSL describing what to break
+//!   (`crash:w3@50%,gray:w2@0%`), resolvable per worker and usable by
+//!   both transports. Generalizes the old `--flaky` path.
+//! - [`tracker`] — [`HealthTracker`]: consumes recurring `Heartbeat`
+//!   frames (rows done, queue depth, last-task latency) and renders
+//!   per-worker [`Verdict`]s: missed beats (crash), deadline stalls
+//!   (gray failure), latency-spike streaks (degradation).
+//! - [`breaker`] — [`CircuitBreaker`]: closed → open (exponential
+//!   backoff) → half-open probe; sick workers are excluded from
+//!   dispatch and re-queue targeting until a probe succeeds.
+//! - [`churn_from_faults`] — compiles a fault plan into the
+//!   [`ChurnScript`] vocabulary by simulating detection and breaker
+//!   recovery in virtual time, so `serve`'s replanning is driven by the
+//!   detector's timeline instead of a hand-written script.
+//!
+//! Every detection/recovery action is logged as a [`HealthEvent`];
+//! coordinator reports carry the log so tests and CI can assert that
+//! exclusion and re-queue actually happened.
+
+pub mod breaker;
+pub mod inject;
+pub mod tracker;
+
+pub use breaker::{BreakerState, CircuitBreaker};
+pub use inject::{FaultKind, FaultPlan, FaultSpec, WorkerFaults};
+pub use tracker::{HealthConfig, HealthTracker, Verdict};
+
+use crate::serve::churn::{ChurnAction, ChurnEvent, ChurnScript};
+
+/// One detection or recovery action, stamped with wall time since run
+/// start (dispatch) or virtual time (serve synthesis).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HealthEvent {
+    pub at_ms: f64,
+    /// Worker queue id (0-based, matching dispatch queues).
+    pub worker: usize,
+    pub kind: HealthEventKind,
+}
+
+/// What happened.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HealthEventKind {
+    /// The tracker flagged the worker (detail: verdict description).
+    Suspect { why: String },
+    /// Its breaker opened with this backoff.
+    Open { backoff_ms: f64 },
+    /// A half-open probe went out.
+    HalfOpen,
+    /// A probe succeeded; the breaker closed.
+    Closed,
+    /// The session dropped with work still pending (reader saw EOF/error).
+    Disconnect,
+    /// `rows` coded rows re-queued onto worker `to`.
+    Requeue { rows: usize, to: usize },
+}
+
+impl HealthEvent {
+    /// Stable label for JSON export / CI grepping.
+    pub fn kind_label(&self) -> &'static str {
+        match self.kind {
+            HealthEventKind::Suspect { .. } => "suspect",
+            HealthEventKind::Open { .. } => "open",
+            HealthEventKind::HalfOpen => "half-open",
+            HealthEventKind::Closed => "closed",
+            HealthEventKind::Disconnect => "disconnect",
+            HealthEventKind::Requeue { .. } => "requeue",
+        }
+    }
+
+    /// Human-readable detail for logs and JSON.
+    pub fn detail(&self) -> String {
+        match &self.kind {
+            HealthEventKind::Suspect { why } => why.clone(),
+            HealthEventKind::Open { backoff_ms } => format!("backoff {backoff_ms:.0} ms"),
+            HealthEventKind::HalfOpen => "probe".into(),
+            HealthEventKind::Closed => "recovered".into(),
+            HealthEventKind::Disconnect => "session dropped with pending work".into(),
+            HealthEventKind::Requeue { rows, to } => format!("{rows} rows -> worker {to}"),
+        }
+    }
+}
+
+/// Compile a fault plan into churn events by replaying what the health
+/// layer would observe and decide, in virtual time over `[0,
+/// horizon_ms]`. Trigger fractions map onto the horizon (`@50%` =
+/// mid-run). Per spec:
+///
+/// - **crash** → `Leave` at `t_f + miss_beats · beat_ms` (the silence
+///   threshold — detection is never instant).
+/// - **gray** → `Leave` at `t_f + stall_ms` (beats keep flowing; the
+///   stall detector fires once a deadline is overdue).
+/// - **spike** → `Throttle(beat_ms / (beat_ms + extra_ms))` at
+///   `t_f + spike_beats · beat_ms` (streak confirmation), no recovery —
+///   a degraded worker serves at reduced rate.
+/// - **slow** (slow-start rejoin) → the worker is degraded from t = 0:
+///   `Throttle` once the streak confirms, then the breaker probes on
+///   exponential backoff until a probe lands past `t_f` (the worker has
+///   warmed up) and a `Throttle(1.0)` restores it.
+/// - **flaky** → no event: compute-level failures are absorbed by the
+///   code's redundancy, invisible at fleet granularity.
+///
+/// Workers outside `1..=n_workers` (local master queues) are skipped —
+/// churn only addresses shared workers. Events come out time-sorted.
+pub fn churn_from_faults(
+    plan: &FaultPlan,
+    n_workers: usize,
+    horizon_ms: f64,
+    cfg: &HealthConfig,
+) -> ChurnScript {
+    let beat = cfg.beat_ms.max(1e-9);
+    let mut events: Vec<ChurnEvent> = Vec::new();
+    for spec in &plan.specs {
+        // `all` fans out to every shared worker.
+        let wids: Vec<usize> = match spec.worker {
+            Some(w) if w < n_workers => vec![w],
+            Some(_) => continue,
+            None => (0..n_workers).collect(),
+        };
+        let t_f = spec.at_frac.clamp(0.0, 1.0) * horizon_ms;
+        for wid in wids {
+            let worker = wid + 1; // churn speaks 1-based worker ids
+            match spec.kind {
+                FaultKind::Crash => events.push(ChurnEvent {
+                    at_ms: t_f + cfg.miss_beats as f64 * beat,
+                    worker,
+                    action: ChurnAction::Leave,
+                }),
+                FaultKind::Gray => events.push(ChurnEvent {
+                    at_ms: t_f + cfg.stall_ms,
+                    worker,
+                    action: ChurnAction::Leave,
+                }),
+                FaultKind::Spike { extra_ms } => events.push(ChurnEvent {
+                    at_ms: t_f + cfg.spike_beats as f64 * beat,
+                    worker,
+                    action: ChurnAction::Throttle(beat / (beat + extra_ms.max(0.0))),
+                }),
+                FaultKind::SlowStart { extra_ms } => {
+                    let detect = cfg.spike_beats as f64 * beat;
+                    events.push(ChurnEvent {
+                        at_ms: detect,
+                        worker,
+                        action: ChurnAction::Throttle(beat / (beat + extra_ms.max(0.0))),
+                    });
+                    // Breaker probe loop: failures double the backoff
+                    // until a probe lands past the warm-up point.
+                    let mut b =
+                        CircuitBreaker::new(cfg.breaker_backoff_ms, cfg.breaker_backoff_cap_ms);
+                    b.on_failure(detect);
+                    let mut t = detect + b.backoff_ms();
+                    for _ in 0..64 {
+                        if !b.allow(t) {
+                            t += b.backoff_ms().max(beat);
+                            continue;
+                        }
+                        if t >= t_f {
+                            b.on_success();
+                            events.push(ChurnEvent {
+                                at_ms: t,
+                                worker,
+                                action: ChurnAction::Throttle(1.0),
+                            });
+                            break;
+                        }
+                        b.on_failure(t);
+                        t += b.backoff_ms();
+                    }
+                }
+                FaultKind::Flaky { .. } => {}
+            }
+        }
+    }
+    ChurnScript::from_events(events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> HealthConfig {
+        HealthConfig {
+            beat_ms: 10.0,
+            miss_beats: 3,
+            stall_ms: 50.0,
+            spike_beats: 3,
+            breaker_backoff_ms: 20.0,
+            breaker_backoff_cap_ms: 320.0,
+            ..HealthConfig::default()
+        }
+    }
+
+    #[test]
+    fn crash_and_gray_become_delayed_leaves() {
+        let plan = FaultPlan::parse("crash:w2@50%,gray:w1@0%").unwrap();
+        let sc = churn_from_faults(&plan, 4, 1000.0, &cfg());
+        sc.validate(4).unwrap();
+        assert_eq!(sc.events.len(), 2);
+        // Time-sorted: gray at 0 + 50 first, crash at 500 + 30 second.
+        assert_eq!(sc.events[0].worker, 1);
+        assert_eq!(sc.events[0].action, ChurnAction::Leave);
+        assert!((sc.events[0].at_ms - 50.0).abs() < 1e-9);
+        assert_eq!(sc.events[1].worker, 2);
+        assert!((sc.events[1].at_ms - 530.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slow_start_throttles_then_recovers_via_probes() {
+        let plan = FaultPlan::parse("slow:w1@40%x30").unwrap();
+        let sc = churn_from_faults(&plan, 2, 1000.0, &cfg());
+        sc.validate(2).unwrap();
+        assert!(sc.events.len() >= 2, "throttle + restore: {:?}", sc.events);
+        let first = &sc.events[0];
+        assert!((first.at_ms - 30.0).abs() < 1e-9, "detect at spike_beats·beat");
+        match first.action {
+            ChurnAction::Throttle(f) => assert!((f - 10.0 / 40.0).abs() < 1e-9),
+            a => panic!("expected Throttle, got {a:?}"),
+        }
+        let last = sc.events.last().unwrap();
+        assert_eq!(last.action, ChurnAction::Throttle(1.0));
+        assert!(
+            last.at_ms >= 400.0,
+            "restore only after the warm-up point: {}",
+            last.at_ms
+        );
+    }
+
+    #[test]
+    fn spike_throttles_without_recovery_and_flaky_is_silent() {
+        let plan = FaultPlan::parse("spike:w2@25%x40,flaky:all@5").unwrap();
+        let sc = churn_from_faults(&plan, 2, 1000.0, &cfg());
+        assert_eq!(sc.events.len(), 1);
+        assert_eq!(sc.events[0].worker, 2);
+        assert_eq!(sc.events[0].action, ChurnAction::Throttle(10.0 / 50.0));
+    }
+
+    #[test]
+    fn all_target_fans_out_and_locals_are_skipped() {
+        let plan = FaultPlan::parse("crash:all@0%").unwrap();
+        let sc = churn_from_faults(&plan, 3, 100.0, &cfg());
+        assert_eq!(sc.events.len(), 3);
+        // A spec naming a queue past the shared fleet (a local master
+        // queue) contributes nothing.
+        let local = FaultPlan::parse("crash:w9@0%").unwrap();
+        assert!(churn_from_faults(&local, 3, 100.0, &cfg()).is_empty());
+    }
+
+    #[test]
+    fn event_labels_are_stable() {
+        let e = HealthEvent {
+            at_ms: 1.0,
+            worker: 3,
+            kind: HealthEventKind::Requeue { rows: 12, to: 1 },
+        };
+        assert_eq!(e.kind_label(), "requeue");
+        assert!(e.detail().contains("12 rows"));
+        let open = HealthEvent {
+            at_ms: 1.0,
+            worker: 3,
+            kind: HealthEventKind::Open { backoff_ms: 250.0 },
+        };
+        assert_eq!(open.kind_label(), "open");
+    }
+}

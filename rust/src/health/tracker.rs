@@ -1,0 +1,371 @@
+//! Coordinator-side health scoring from heartbeat + result streams.
+//!
+//! The tracker keeps, per worker session: when the last beat arrived,
+//! when progress (rows done) last advanced, the queue depth the worker
+//! reported, and an EWMA of its self-reported per-task latency. From
+//! those it renders a [`Verdict`]:
+//!
+//! - **MissedBeats** — no beat for `miss_beats · beat_ms` (a crash:
+//!   silence on the wire). The reader thread usually sees the EOF
+//!   first, but missed beats catch the half-open-socket case where the
+//!   OS never delivers one.
+//! - **Stalled** — gray failure: beats keep arriving but the worker's
+//!   earliest pending sub-task is `stall_ms` past the wall-clock
+//!   deadline it should have published by, AND rows-done hasn't moved
+//!   since. The deadline guard is what separates a gray worker from a
+//!   healthy one legitimately sleeping toward a far-future virtual
+//!   deadline.
+//! - **LatencySpike** — the worker's reported last-task latency exceeds
+//!   `spike_factor ×` its own EWMA for `spike_beats` consecutive beats.
+//!   A degraded-but-alive worker; callers may throttle or exclude it.
+//!
+//! Detection thresholds trade detection time against false positives —
+//! they affect *performance*, never correctness: a false positive just
+//! re-queues rows that redundancy would have covered anyway.
+
+/// Tunables for the whole health layer (tracker + breaker + beats).
+#[derive(Clone, Debug)]
+pub struct HealthConfig {
+    /// Heartbeat cadence the coordinator asks workers for (wall ms);
+    /// ≤ 0 disables recurring beats.
+    pub beat_ms: f64,
+    /// Verdict `MissedBeats` after this many silent beat intervals.
+    pub miss_beats: u32,
+    /// Verdict `Stalled` when a pending deadline is this many wall ms
+    /// overdue with no progress.
+    pub stall_ms: f64,
+    /// EWMA smoothing for reported latency, in `(0, 1]`.
+    pub ewma_alpha: f64,
+    /// Latency spike threshold: last ≥ factor × EWMA …
+    pub spike_factor: f64,
+    /// … for this many consecutive beats.
+    pub spike_beats: u32,
+    /// Breaker backoff base / cap (wall ms).
+    pub breaker_backoff_ms: f64,
+    pub breaker_backoff_cap_ms: f64,
+    /// Arm health bookkeeping even with no fault plan (detection on
+    /// real fleets). Defaults off so a fault-free run stays on the
+    /// exact PR-6 code path (the no-op parity criterion).
+    pub armed: bool,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        Self {
+            beat_ms: 25.0,
+            miss_beats: 4,
+            stall_ms: 200.0,
+            ewma_alpha: 0.3,
+            spike_factor: 4.0,
+            spike_beats: 3,
+            breaker_backoff_ms: 250.0,
+            breaker_backoff_cap_ms: 4000.0,
+            armed: false,
+        }
+    }
+}
+
+impl HealthConfig {
+    /// Tightened thresholds for loopback tests (fast detection, wall
+    /// clocks in the tens of milliseconds).
+    pub fn fast() -> Self {
+        Self {
+            beat_ms: 10.0,
+            miss_beats: 3,
+            stall_ms: 60.0,
+            ..Self::default()
+        }
+    }
+
+    /// Is the health layer active for this run?
+    pub fn active(&self, fault_present: bool) -> bool {
+        self.armed || fault_present
+    }
+}
+
+/// The tracker's judgement of one worker at a point in time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Verdict {
+    Healthy,
+    /// `n` beat intervals of silence.
+    MissedBeats(u32),
+    /// Progress-free and `behind_ms` past an expected publish deadline.
+    Stalled { behind_ms: f64 },
+    /// Reported latency is `ratio ×` the worker's EWMA.
+    LatencySpike { ratio: f64 },
+}
+
+impl Verdict {
+    pub fn is_sick(&self) -> bool {
+        !matches!(self, Verdict::Healthy)
+    }
+}
+
+#[derive(Clone, Debug)]
+struct WorkerState {
+    last_beat_ms: f64,
+    last_progress_ms: f64,
+    rows_done: u64,
+    queue_depth: u32,
+    ewma_latency_ms: f64,
+    spike_streak: u32,
+    last_ratio: f64,
+}
+
+/// Health state for a fleet of worker sessions, indexed by session id.
+#[derive(Clone, Debug, Default)]
+pub struct HealthTracker {
+    cfg_beat_ms: f64,
+    cfg: TrackerKnobs,
+    states: Vec<Option<WorkerState>>,
+}
+
+#[derive(Clone, Debug, Default)]
+struct TrackerKnobs {
+    miss_beats: u32,
+    stall_ms: f64,
+    ewma_alpha: f64,
+    spike_factor: f64,
+    spike_beats: u32,
+}
+
+impl HealthTracker {
+    pub fn new(cfg: &HealthConfig) -> Self {
+        Self {
+            cfg_beat_ms: cfg.beat_ms.max(1e-9),
+            cfg: TrackerKnobs {
+                miss_beats: cfg.miss_beats.max(1),
+                stall_ms: cfg.stall_ms.max(0.0),
+                ewma_alpha: cfg.ewma_alpha.clamp(1e-6, 1.0),
+                spike_factor: cfg.spike_factor.max(1.0),
+                spike_beats: cfg.spike_beats.max(1),
+            },
+            states: Vec::new(),
+        }
+    }
+
+    fn state_mut(&mut self, sid: usize, now_ms: f64) -> &mut WorkerState {
+        if self.states.len() <= sid {
+            self.states.resize(sid + 1, None);
+        }
+        self.states[sid].get_or_insert_with(|| WorkerState {
+            last_beat_ms: now_ms,
+            last_progress_ms: now_ms,
+            rows_done: 0,
+            queue_depth: 0,
+            ewma_latency_ms: 0.0,
+            spike_streak: 0,
+            last_ratio: 1.0,
+        })
+    }
+
+    /// Register a session so silence counts from `now_ms` even before
+    /// its first beat.
+    pub fn on_connect(&mut self, sid: usize, now_ms: f64) {
+        self.state_mut(sid, now_ms);
+    }
+
+    /// Consume one heartbeat.
+    pub fn on_beat(
+        &mut self,
+        sid: usize,
+        now_ms: f64,
+        rows_done: u64,
+        queue_depth: u32,
+        last_latency_ms: f64,
+    ) {
+        let alpha = self.cfg.ewma_alpha;
+        let factor = self.cfg.spike_factor;
+        let s = self.state_mut(sid, now_ms);
+        s.last_beat_ms = now_ms;
+        if rows_done > s.rows_done {
+            s.rows_done = rows_done;
+            s.last_progress_ms = now_ms;
+        }
+        s.queue_depth = queue_depth;
+        if last_latency_ms > 0.0 && last_latency_ms.is_finite() {
+            if s.ewma_latency_ms <= 0.0 {
+                s.ewma_latency_ms = last_latency_ms;
+                s.last_ratio = 1.0;
+                s.spike_streak = 0;
+            } else {
+                let ratio = last_latency_ms / s.ewma_latency_ms;
+                s.last_ratio = ratio;
+                if ratio >= factor {
+                    s.spike_streak += 1;
+                } else {
+                    s.spike_streak = 0;
+                }
+                s.ewma_latency_ms =
+                    alpha * last_latency_ms + (1.0 - alpha) * s.ewma_latency_ms;
+            }
+        }
+    }
+
+    /// A result arrived on the data path — that is progress too (beats
+    /// may lag the results bus).
+    pub fn on_result(&mut self, sid: usize, now_ms: f64, rows: u64) {
+        let s = self.state_mut(sid, now_ms);
+        s.rows_done += rows;
+        s.last_progress_ms = now_ms;
+        s.last_beat_ms = s.last_beat_ms.max(now_ms); // data flow proves liveness
+    }
+
+    /// The session drained (cleanly or not): stop tracking it.
+    pub fn on_drain(&mut self, sid: usize) {
+        if let Some(slot) = self.states.get_mut(sid) {
+            *slot = None;
+        }
+    }
+
+    pub fn rows_done(&self, sid: usize) -> u64 {
+        self.states
+            .get(sid)
+            .and_then(|s| s.as_ref())
+            .map_or(0, |s| s.rows_done)
+    }
+
+    pub fn queue_depth(&self, sid: usize) -> u32 {
+        self.states
+            .get(sid)
+            .and_then(|s| s.as_ref())
+            .map_or(0, |s| s.queue_depth)
+    }
+
+    pub fn ewma_latency_ms(&self, sid: usize) -> f64 {
+        self.states
+            .get(sid)
+            .and_then(|s| s.as_ref())
+            .map_or(0.0, |s| s.ewma_latency_ms)
+    }
+
+    /// Judge session `sid` at `now_ms`. `earliest_deadline_ms` is the
+    /// wall-clock time by which the worker's earliest still-pending
+    /// sub-task should have published (None when nothing is pending —
+    /// an idle worker cannot stall).
+    pub fn verdict(
+        &self,
+        sid: usize,
+        now_ms: f64,
+        earliest_deadline_ms: Option<f64>,
+    ) -> Verdict {
+        let Some(s) = self.states.get(sid).and_then(|s| s.as_ref()) else {
+            return Verdict::Healthy; // drained or never connected
+        };
+        let silent = now_ms - s.last_beat_ms;
+        let miss_after = self.cfg.miss_beats as f64 * self.cfg_beat_ms;
+        if silent >= miss_after {
+            return Verdict::MissedBeats((silent / self.cfg_beat_ms) as u32);
+        }
+        if let Some(deadline) = earliest_deadline_ms {
+            let behind = now_ms - deadline;
+            if behind >= self.cfg.stall_ms && s.last_progress_ms <= deadline {
+                return Verdict::Stalled { behind_ms: behind };
+            }
+        }
+        if s.spike_streak >= self.cfg.spike_beats {
+            return Verdict::LatencySpike { ratio: s.last_ratio };
+        }
+        Verdict::Healthy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> HealthConfig {
+        HealthConfig {
+            beat_ms: 10.0,
+            miss_beats: 3,
+            stall_ms: 50.0,
+            ..HealthConfig::default()
+        }
+    }
+
+    #[test]
+    fn silence_becomes_missed_beats() {
+        let mut t = HealthTracker::new(&cfg());
+        t.on_connect(0, 0.0);
+        assert_eq!(t.verdict(0, 20.0, None), Verdict::Healthy);
+        match t.verdict(0, 35.0, None) {
+            Verdict::MissedBeats(n) => assert!(n >= 3, "n={n}"),
+            v => panic!("expected MissedBeats, got {v:?}"),
+        }
+        // A beat resets the clock.
+        t.on_beat(0, 36.0, 1, 4, 2.0);
+        assert_eq!(t.verdict(0, 50.0, None), Verdict::Healthy);
+    }
+
+    #[test]
+    fn gray_failure_is_stall_not_silence() {
+        let mut t = HealthTracker::new(&cfg());
+        t.on_connect(0, 0.0);
+        // Beats keep flowing but rows_done never moves past 2 and the
+        // earliest pending deadline (t=40) sails by.
+        for i in 1..=12 {
+            t.on_beat(0, i as f64 * 10.0, 2, 5, 1.0);
+        }
+        // Deadline 40, now 120: 80 ms overdue ≥ stall_ms, progress at 10.
+        match t.verdict(0, 120.0, Some(40.0)) {
+            Verdict::Stalled { behind_ms } => assert!((behind_ms - 80.0).abs() < 1e-9),
+            v => panic!("expected Stalled, got {v:?}"),
+        }
+        // Same silence pattern but the deadline is far in the future:
+        // healthy (a worker sleeping toward a virtual deadline).
+        assert_eq!(t.verdict(0, 120.0, Some(500.0)), Verdict::Healthy);
+        // No pending work at all: healthy.
+        assert_eq!(t.verdict(0, 120.0, None), Verdict::Healthy);
+    }
+
+    #[test]
+    fn progress_defuses_stall() {
+        let mut t = HealthTracker::new(&cfg());
+        t.on_connect(0, 0.0);
+        t.on_beat(0, 10.0, 1, 5, 1.0);
+        // Progress after the deadline passed: the worker is slow, not gray.
+        t.on_result(0, 95.0, 8);
+        assert_eq!(t.verdict(0, 100.0, Some(40.0)), Verdict::Healthy);
+        assert_eq!(t.rows_done(0), 1 + 8);
+    }
+
+    #[test]
+    fn latency_spikes_need_a_streak() {
+        let mut t = HealthTracker::new(&cfg());
+        t.on_connect(0, 0.0);
+        t.on_beat(0, 10.0, 1, 5, 2.0); // seeds EWMA
+        t.on_beat(0, 20.0, 2, 5, 2.0);
+        t.on_beat(0, 30.0, 3, 5, 40.0); // spike 1: 40/2.0; EWMA -> 13.4
+        assert_eq!(t.verdict(0, 31.0, None), Verdict::Healthy);
+        t.on_beat(0, 40.0, 4, 5, 60.0); // spike 2: 60/13.4; EWMA -> 27.38
+        t.on_beat(0, 50.0, 5, 5, 150.0); // spike 3: 150/27.38
+        match t.verdict(0, 51.0, None) {
+            Verdict::LatencySpike { ratio } => assert!(ratio >= 4.0, "ratio={ratio}"),
+            v => panic!("expected LatencySpike, got {v:?}"),
+        }
+        // A normal-latency beat breaks the streak.
+        t.on_beat(0, 60.0, 6, 5, t.ewma_latency_ms(0) * 0.9);
+        assert_eq!(t.verdict(0, 61.0, None), Verdict::Healthy);
+        assert_eq!(t.queue_depth(0), 5);
+    }
+
+    #[test]
+    fn drained_sessions_are_healthy() {
+        let mut t = HealthTracker::new(&cfg());
+        t.on_connect(0, 0.0);
+        t.on_drain(0);
+        assert_eq!(t.verdict(0, 1e9, Some(0.0)), Verdict::Healthy);
+        assert_eq!(t.rows_done(0), 0);
+        // Unknown sid is healthy, not a panic.
+        assert_eq!(t.verdict(7, 1e9, None), Verdict::Healthy);
+    }
+
+    #[test]
+    fn active_gates_on_fault_or_armed() {
+        let mut c = HealthConfig::default();
+        assert!(!c.active(false));
+        assert!(c.active(true));
+        c.armed = true;
+        assert!(c.active(false));
+    }
+}

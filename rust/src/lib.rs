@@ -41,6 +41,7 @@
 //! | [`runtime`] | PJRT bridge: artifact manifest, executable cache, typed execute |
 //! | [`coordinator`] | the real multi-master / shared-worker runtime (threads, delay-injected channels, decode, cancellation) |
 //! | [`net`] | socket-mode execution: length-prefixed framed codec over `std::net` TCP, wire `Message` enum, worker server, coordinator transport seam |
+//! | [`health`] | observed worker health: heartbeat tracker, fault-injection `FaultPlan`, circuit breaker, re-queue events, serve churn synthesis |
 //! | [`cli`] | argument parsing + subcommands for the `coded-coop` binary |
 
 pub mod util;
@@ -60,6 +61,7 @@ pub mod figures;
 pub mod runtime;
 pub mod coordinator;
 pub mod net;
+pub mod health;
 pub mod cli;
 
 /// Crate version, surfaced by the CLI.

@@ -18,7 +18,11 @@
 use crate::coordinator::worker::Outcome;
 
 /// Protocol revision; bumped on any wire-incompatible change.
-pub const PROTOCOL_VERSION: u8 = 1;
+/// v2: recurring progress heartbeats (`Heartbeat` carries rows done,
+/// queue depth and last-task latency), a coordinator-chosen beat
+/// cadence in `Hello`, and a `disconnected` flag in `Shutdown` drain
+/// stats so crash and completion are distinguishable.
+pub const PROTOCOL_VERSION: u8 = 2;
 
 /// One worker-side task event as carried in [`Message::Shutdown`] — the
 /// wire twin of [`crate::coordinator::worker::TaskEvent`].
@@ -46,13 +50,15 @@ pub struct WireEvent {
 pub enum Message {
     /// Handshake (both directions). Coordinator → worker it announces
     /// the logical worker id, the task count to expect, the size of the
-    /// cancellation table and the virtual-time scale; worker →
-    /// coordinator it acknowledges (counts zeroed).
+    /// cancellation table, the virtual-time scale and the heartbeat
+    /// cadence it wants (`beat_ms ≤ 0` disables recurring beats);
+    /// worker → coordinator it acknowledges (counts zeroed).
     Hello {
         wid: u32,
         n_tasks: u32,
         n_cancel_slots: u32,
         time_scale: f64,
+        beat_ms: f64,
     },
     /// One coded row-block assignment (the wire twin of
     /// [`crate::coordinator::worker::SubTask`]).
@@ -81,17 +87,28 @@ pub enum Message {
     /// Stop work for one task (coordinator → worker): its master
     /// decoded. Honored between sub-tasks mid-run.
     Cancel { task: u32 },
-    /// Liveness probe; echoed with the same nonce. Also doubles as the
-    /// post-assignment start barrier (first heartbeat after the last
-    /// `TaskAssign` starts the worker's clock).
-    Heartbeat { nonce: u64 },
+    /// Liveness + progress beat. Coordinator → worker (fields zeroed)
+    /// it is the post-assignment start barrier; worker → coordinator it
+    /// is the recurring health beat carrying rows completed so far, the
+    /// remaining queue depth and the worker's last observed per-task
+    /// wall latency — the feed `health::HealthTracker` scores.
+    Heartbeat {
+        nonce: u64,
+        rows_done: u64,
+        queue_depth: u32,
+        last_latency_ms: f64,
+    },
     /// Graceful teardown. Worker → coordinator it carries the drain
-    /// stats + event log; coordinator → worker (fields zeroed) it
-    /// acknowledges and releases the connection. Received mid-run it
-    /// cancels everything outstanding (drain).
+    /// stats + event log, with `disconnected` marking a drain forced by
+    /// an unexpected coordinator-side disconnect (vs. a clean
+    /// coordinator-initiated `Shutdown` or natural queue completion);
+    /// coordinator → worker (fields zeroed) it acknowledges and
+    /// releases the connection. Received mid-run it cancels everything
+    /// outstanding (drain).
     Shutdown {
         computed: u64,
         skipped: u64,
+        disconnected: bool,
         events: Vec<WireEvent>,
     },
 }
@@ -112,6 +129,9 @@ pub enum CodecError {
     BadTag(u8),
     /// Unknown outcome discriminant inside an event record.
     BadOutcome(u8),
+    /// A boolean field byte other than 0 or 1 (a lucky garbage decode
+    /// must still re-encode identically, so flags are strict).
+    BadFlag(u8),
     /// A length prefix announced more elements than the remaining bytes
     /// can hold.
     Oversize { elems: usize, have: usize },
@@ -135,6 +155,7 @@ impl std::fmt::Display for CodecError {
             }
             CodecError::BadTag(t) => write!(f, "unknown message tag {t}"),
             CodecError::BadOutcome(o) => write!(f, "unknown outcome discriminant {o}"),
+            CodecError::BadFlag(b) => write!(f, "flag byte {b} is neither 0 nor 1"),
             CodecError::Oversize { elems, have } => {
                 write!(f, "length prefix {elems} exceeds remaining {have} bytes")
             }
@@ -250,6 +271,16 @@ impl<'a> Dec<'a> {
         Ok(f64::from_le_bytes(self.take::<8>()?))
     }
 
+    /// Strict boolean: any byte other than 0/1 is a typed error so
+    /// decode(encode(m)) == m implies encode(decode(b)) == b.
+    fn flag(&mut self) -> Result<bool, CodecError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => Err(CodecError::BadFlag(other)),
+        }
+    }
+
     /// Length prefix validated against remaining bytes BEFORE the
     /// allocation, so a corrupt prefix cannot drive an OOM.
     fn len_prefix(&mut self, elem_bytes: usize) -> Result<usize, CodecError> {
@@ -309,12 +340,14 @@ impl Message {
                 n_tasks,
                 n_cancel_slots,
                 time_scale,
+                beat_ms,
             } => {
                 e.u8(TAG_HELLO);
                 e.u32(*wid);
                 e.u32(*n_tasks);
                 e.u32(*n_cancel_slots);
                 e.f64(*time_scale);
+                e.f64(*beat_ms);
             }
             Message::TaskAssign {
                 task,
@@ -354,18 +387,28 @@ impl Message {
                 e.u8(TAG_CANCEL);
                 e.u32(*task);
             }
-            Message::Heartbeat { nonce } => {
+            Message::Heartbeat {
+                nonce,
+                rows_done,
+                queue_depth,
+                last_latency_ms,
+            } => {
                 e.u8(TAG_HEARTBEAT);
                 e.u64(*nonce);
+                e.u64(*rows_done);
+                e.u32(*queue_depth);
+                e.f64(*last_latency_ms);
             }
             Message::Shutdown {
                 computed,
                 skipped,
+                disconnected,
                 events,
             } => {
                 e.u8(TAG_SHUTDOWN);
                 e.u64(*computed);
                 e.u64(*skipped);
+                e.u8(u8::from(*disconnected));
                 e.events(events);
             }
         }
@@ -389,6 +432,7 @@ impl Message {
                 n_tasks: d.u32()?,
                 n_cancel_slots: d.u32()?,
                 time_scale: d.f64()?,
+                beat_ms: d.f64()?,
             },
             TAG_TASK_ASSIGN => Message::TaskAssign {
                 task: d.u32()?,
@@ -408,10 +452,16 @@ impl Message {
                 values: d.f32s()?,
             },
             TAG_CANCEL => Message::Cancel { task: d.u32()? },
-            TAG_HEARTBEAT => Message::Heartbeat { nonce: d.u64()? },
+            TAG_HEARTBEAT => Message::Heartbeat {
+                nonce: d.u64()?,
+                rows_done: d.u64()?,
+                queue_depth: d.u32()?,
+                last_latency_ms: d.f64()?,
+            },
             TAG_SHUTDOWN => Message::Shutdown {
                 computed: d.u64()?,
                 skipped: d.u64()?,
+                disconnected: d.flag()?,
                 events: d.events()?,
             },
             other => return Err(CodecError::BadTag(other)),
@@ -432,6 +482,7 @@ mod tests {
                 n_tasks: 7,
                 n_cancel_slots: 2,
                 time_scale: 1e-4,
+                beat_ms: 25.0,
             },
             Message::TaskAssign {
                 task: 1,
@@ -451,10 +502,16 @@ mod tests {
                 values: vec![9.0, -9.0],
             },
             Message::Cancel { task: 9 },
-            Message::Heartbeat { nonce: u64::MAX },
+            Message::Heartbeat {
+                nonce: u64::MAX,
+                rows_done: 512,
+                queue_depth: 3,
+                last_latency_ms: 7.5,
+            },
             Message::Shutdown {
                 computed: 4,
                 skipped: 1,
+                disconnected: true,
                 events: vec![
                     WireEvent {
                         worker: 2,
@@ -525,6 +582,23 @@ mod tests {
         let mut bytes = (Message::Heartbeat { nonce: 7 }).encode();
         bytes.push(0);
         assert_eq!(Message::decode(&bytes), Err(CodecError::Trailing { extra: 1 }));
+    }
+
+    #[test]
+    fn shutdown_flag_byte_is_strict() {
+        let m = Message::Shutdown {
+            computed: 1,
+            skipped: 0,
+            disconnected: false,
+            events: Vec::new(),
+        };
+        let mut bytes = m.encode();
+        // The flag sits right before the (empty) event list's 4-byte
+        // length prefix.
+        let flag_at = bytes.len() - 5;
+        assert_eq!(bytes[flag_at], 0);
+        bytes[flag_at] = 2;
+        assert_eq!(Message::decode(&bytes), Err(CodecError::BadFlag(2)));
     }
 
     #[test]

@@ -17,20 +17,40 @@
 //! coordinator auto-spawns one loopback `coded-coop worker --listen
 //! 127.0.0.1:0 --once` process per queue and discovers the OS-assigned
 //! ports from their `LISTENING <addr>` announcements.
+//!
+//! ## Health & recovery (armed only)
+//!
+//! When a [`FaultPlan`] is present (or [`HealthConfig::armed`] is set)
+//! the dispatcher additionally runs the `health` layer: workers beat at
+//! `HealthConfig::beat_ms`, a [`HealthTracker`] scores each session, a
+//! per-worker [`CircuitBreaker`] gates re-dispatch, and a session that
+//! crashes (reader error / `disconnected` drain) or goes sick (missed
+//! beats, deadline stall, latency-spike streak) has its still-pending
+//! sub-tasks re-queued onto breaker-allowed surviving workers over
+//! fresh connections. Re-queued arrivals are deduplicated by
+//! `(master, coded_start)` — the MDS decode must never see the same
+//! coded row twice. With no fault plan and `armed` off, every piece of
+//! this bookkeeping is skipped and the dispatch path is byte-for-byte
+//! the pre-health one (beats are disabled via `Hello.beat_ms = 0`).
 
+use std::collections::HashSet;
 use std::io::{BufRead, BufReader, BufWriter, Read};
 use std::net::TcpStream;
 use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::frame;
 use super::messages::Message;
 use super::worker::event_from_wire;
 use crate::coordinator::worker::{SubTask, TaskEvent, WorkerResult};
 use crate::coordinator::TaskCollector;
+use crate::health::{
+    BreakerState, CircuitBreaker, FaultPlan, HealthConfig, HealthEvent, HealthEventKind,
+    HealthTracker,
+};
 
 /// How the coordinator reaches its workers — selected per run on
 /// [`crate::coordinator::RunOptions`] / [`crate::coordinator::StreamOptions`].
@@ -47,10 +67,7 @@ impl Transport {
     /// TCP transport to explicit worker endpoints (empty = auto-spawn
     /// loopback worker processes).
     pub fn tcp(addrs: Vec<String>) -> Self {
-        Transport::Tcp(TcpOptions {
-            addrs,
-            flaky: None,
-        })
+        Transport::Tcp(TcpOptions { addrs })
     }
 }
 
@@ -60,10 +77,6 @@ pub struct TcpOptions {
     /// Worker endpoints (`host:port`), round-robined over the live
     /// queues. Empty: auto-spawn one loopback worker process per queue.
     pub addrs: Vec<String>,
-    /// Fault injection forwarded to auto-spawned workers
-    /// (`--flaky N`); rejected with explicit addresses — externally
-    /// managed workers choose their own backend.
-    pub flaky: Option<usize>,
 }
 
 /// Coordinator-side connection writer (cancel broadcast + final ack).
@@ -99,70 +112,84 @@ impl Drop for SpawnedWorker {
     }
 }
 
-/// Spawn `n` loopback worker processes (`--once`: each exits when its
-/// connection closes) and discover their OS-assigned ports.
-fn spawn_loopback_workers(
-    n: usize,
-    flaky: Option<usize>,
-) -> anyhow::Result<Vec<SpawnedWorker>> {
+/// Spawn one loopback worker process (`--once`: it exits when its
+/// connection closes) and discover its OS-assigned port. `fault`
+/// forwards an injection plan as `--fault <plan>` (recovery respawns
+/// pass `None` — a replacement worker must not inherit the fault that
+/// killed its predecessor).
+fn spawn_loopback_worker(fault: Option<&FaultPlan>) -> anyhow::Result<SpawnedWorker> {
     // Tests and wrappers can point at a prebuilt CLI; by default the
     // worker is this very binary re-entered as `coded-coop worker`.
     let exe = match std::env::var_os("CODED_COOP_WORKER_BIN") {
         Some(p) => PathBuf::from(p),
         None => std::env::current_exe()?,
     };
-    (0..n)
-        .map(|_| {
-            let mut cmd = Command::new(&exe);
-            cmd.arg("worker")
-                .arg("--listen")
-                .arg("127.0.0.1:0")
-                .arg("--once")
-                .stdin(Stdio::null())
-                .stdout(Stdio::piped())
-                .stderr(Stdio::inherit());
-            if let Some(every) = flaky {
-                cmd.arg("--flaky").arg(every.to_string());
-            }
-            let mut child = cmd
-                .spawn()
-                .map_err(|e| anyhow::anyhow!("spawning worker process {exe:?}: {e}"))?;
-            let stdout = child
-                .stdout
-                .take()
-                .ok_or_else(|| anyhow::anyhow!("spawned worker has no stdout"))?;
-            let mut line = String::new();
-            BufReader::new(stdout).read_line(&mut line)?;
-            let addr = line
-                .trim()
-                .strip_prefix("LISTENING ")
-                .ok_or_else(|| {
-                    anyhow::anyhow!(
-                        "worker process announced {line:?} instead of 'LISTENING <addr>' \
-                         (is {exe:?} a coded-coop binary?)"
-                    )
-                })?
-                .to_string();
-            Ok(SpawnedWorker {
-                child,
-                addr,
-                reaped: false,
-            })
-        })
-        .collect()
+    let mut cmd = Command::new(&exe);
+    cmd.arg("worker")
+        .arg("--listen")
+        .arg("127.0.0.1:0")
+        .arg("--once")
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit());
+    if let Some(plan) = fault {
+        cmd.arg("--fault").arg(plan.to_string());
+    }
+    let mut child = cmd
+        .spawn()
+        .map_err(|e| anyhow::anyhow!("spawning worker process {exe:?}: {e}"))?;
+    let stdout = child
+        .stdout
+        .take()
+        .ok_or_else(|| anyhow::anyhow!("spawned worker has no stdout"))?;
+    let mut line = String::new();
+    BufReader::new(stdout).read_line(&mut line)?;
+    let addr = line
+        .trim()
+        .strip_prefix("LISTENING ")
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "worker process announced {line:?} instead of 'LISTENING <addr>' \
+                 (is {exe:?} a coded-coop binary?)"
+            )
+        })?
+        .to_string();
+    Ok(SpawnedWorker {
+        child,
+        addr,
+        reaped: false,
+    })
 }
 
-/// Reader half of one worker connection: forward `PartialResult`s to
-/// the results bus until the worker's closing `Shutdown` delivers its
-/// drain stats. A vanished worker yields zero stats — its undelivered
-/// rows behave like stragglers that never return, which the MDS
-/// redundancy may still absorb.
-fn reader_loop<R: Read>(
-    mut reader: R,
-    tx: Sender<WorkerResult>,
-    wid: usize,
-    addr: String,
-) -> (usize, usize, Vec<TaskEvent>) {
+/// Everything the reader threads feed back to the dispatch loop: data
+/// results, health beats, and session drains (clean or not).
+enum Pulse {
+    Result(usize, WorkerResult),
+    Beat {
+        sid: usize,
+        rows_done: u64,
+        queue_depth: u32,
+        last_latency_ms: f64,
+    },
+    Drained {
+        sid: usize,
+        computed: usize,
+        skipped: usize,
+        events: Vec<TaskEvent>,
+        /// True when the session ended without the worker's closing
+        /// `Shutdown` (reader error — the worker vanished) or when the
+        /// worker itself reported a forced drain.
+        disconnected: bool,
+    },
+}
+
+/// Reader half of one worker connection: forward `PartialResult`s and
+/// `Heartbeat`s to the dispatch loop until the worker's closing
+/// `Shutdown` delivers its drain stats. A vanished worker yields a
+/// `disconnected` drain with zero stats — its undelivered rows behave
+/// like stragglers that never return, which the MDS redundancy may
+/// still absorb (or, armed, the health layer re-queues).
+fn reader_loop<R: Read>(mut reader: R, tx: Sender<Pulse>, sid: usize, wid: usize, addr: String) {
     loop {
         match frame::recv(&mut reader) {
             Ok(Message::PartialResult {
@@ -173,35 +200,185 @@ fn reader_loop<R: Read>(
                 delay_ms,
                 values,
             }) => {
-                let _ = tx.send(WorkerResult {
-                    master: task as usize,
-                    coded_start: coded_start as usize,
-                    rows: rows as usize,
-                    values,
-                    delay_ms,
-                    worker: worker as usize,
+                let _ = tx.send(Pulse::Result(
+                    sid,
+                    WorkerResult {
+                        master: task as usize,
+                        coded_start: coded_start as usize,
+                        rows: rows as usize,
+                        values,
+                        delay_ms,
+                        worker: worker as usize,
+                    },
+                ));
+            }
+            Ok(Message::Heartbeat {
+                rows_done,
+                queue_depth,
+                last_latency_ms,
+                ..
+            }) => {
+                let _ = tx.send(Pulse::Beat {
+                    sid,
+                    rows_done,
+                    queue_depth,
+                    last_latency_ms,
                 });
             }
             Ok(Message::Shutdown {
                 computed,
                 skipped,
+                disconnected,
                 events,
             }) => {
-                return (
-                    computed as usize,
-                    skipped as usize,
-                    events.iter().map(event_from_wire).collect(),
-                );
+                let _ = tx.send(Pulse::Drained {
+                    sid,
+                    computed: computed as usize,
+                    skipped: skipped as usize,
+                    events: events.iter().map(event_from_wire).collect(),
+                    disconnected,
+                });
+                return;
             }
-            Ok(_) => {} // heartbeat echoes etc. — benign
+            Ok(_) => {} // benign
             Err(e) => {
                 eprintln!(
                     "coordinator: worker {wid} at {addr} dropped mid-run: {e} \
-                     (its remaining rows are lost; redundancy may still decode)"
+                     (its remaining rows are lost; redundancy or re-queue may still decode)"
                 );
-                return (0, 0, Vec::new());
+                let _ = tx.send(Pulse::Drained {
+                    sid,
+                    computed: 0,
+                    skipped: 0,
+                    events: Vec::new(),
+                    disconnected: true,
+                });
+                return;
             }
         }
+    }
+}
+
+/// One live (or finished) worker connection.
+struct Session {
+    /// Logical worker queue id — stats and breaker attribution.
+    wid: usize,
+    addr: String,
+    writer: ConnWriter,
+    /// Armed only: sub-tasks assigned to this session whose results
+    /// have not arrived yet (clones — the originals went over the
+    /// wire). The re-queue source on failure.
+    pending: Vec<SubTask>,
+    open: bool,
+    /// The coordinator decided this session is sick and sent it a
+    /// mid-run `Shutdown`; don't route cancels/re-queues to it.
+    sick: bool,
+}
+
+fn clone_task(t: &SubTask) -> SubTask {
+    SubTask {
+        master: t.master,
+        coded_start: t.coded_start,
+        rows: t.rows,
+        cols: t.cols,
+        a_block: t.a_block.clone(),
+        x: Arc::clone(&t.x),
+        delay_ms: t.delay_ms,
+    }
+}
+
+/// Open one worker connection: connect, handshake, stream the queue,
+/// release the start barrier if `barrier` (initial sessions barrier
+/// together after ALL connect; recovery sessions start immediately),
+/// and spawn its reader thread.
+#[allow(clippy::too_many_arguments)]
+fn open_session(
+    sessions: &mut Vec<Session>,
+    joins: &mut Vec<std::thread::JoinHandle<()>>,
+    tx: &Sender<Pulse>,
+    wid: usize,
+    addr: &str,
+    tasks: Vec<SubTask>,
+    n_cancel_slots: usize,
+    time_scale: f64,
+    beat_ms: f64,
+    track_pending: bool,
+    barrier: bool,
+) -> anyhow::Result<usize> {
+    let sid = sessions.len();
+    let stream = TcpStream::connect(addr)
+        .map_err(|e| anyhow::anyhow!("connecting worker {wid} at {addr}: {e}"))?;
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    frame::send(
+        &mut writer,
+        &Message::Hello {
+            wid: wid as u32,
+            n_tasks: tasks.len() as u32,
+            n_cancel_slots: n_cancel_slots as u32,
+            time_scale,
+            beat_ms,
+        },
+    )?;
+    match frame::recv(&mut reader) {
+        Ok(Message::Hello { .. }) => {}
+        Ok(other) => anyhow::bail!("worker {wid} at {addr}: expected Hello ack, got {other:?}"),
+        Err(e) => anyhow::bail!(
+            "worker {wid} at {addr}: handshake failed: {e} \
+             (protocol version mismatch closes the connection)"
+        ),
+    }
+    // Armed dispatch clones the queue (the re-queue source on failure);
+    // disarmed it moves straight onto the wire — no extra allocation on
+    // the no-fault path.
+    let pending: Vec<SubTask> = if track_pending {
+        tasks.iter().map(clone_task).collect()
+    } else {
+        Vec::new()
+    };
+    for t in tasks {
+        frame::send(
+            &mut writer,
+            &Message::TaskAssign {
+                task: t.master as u32,
+                coded_start: t.coded_start as u32,
+                rows: t.rows as u32,
+                cols: t.cols as u32,
+                delay_ms: t.delay_ms,
+                a_block: t.a_block,
+                x: t.x.as_ref().clone(),
+            },
+        )?;
+    }
+    if barrier {
+        frame::send(&mut writer, &barrier_beat())?;
+    }
+    let tx = tx.clone();
+    let addr_owned = addr.to_string();
+    let reader_addr = addr_owned.clone();
+    joins.push(
+        std::thread::Builder::new()
+            .name(format!("net-reader-{wid}-{sid}"))
+            .spawn(move || reader_loop(reader, tx, sid, wid, reader_addr))?,
+    );
+    sessions.push(Session {
+        wid,
+        addr: addr_owned,
+        writer: Arc::new(Mutex::new(writer)),
+        pending,
+        open: true,
+        sick: false,
+    });
+    Ok(sid)
+}
+
+fn barrier_beat() -> Message {
+    Message::Heartbeat {
+        nonce: 0,
+        rows_done: 0,
+        queue_depth: 0,
+        last_latency_ms: 0.0,
     }
 }
 
@@ -209,37 +386,48 @@ fn reader_loop<R: Read>(
 /// the start barrier, collect results (cancelling over the wire the
 /// moment a task completes), then gather drain stats and release every
 /// worker. Same signature contract as the thread path — per-worker
-/// computed/skipped counts, the merged event log and the wall time.
+/// computed/skipped counts, the merged event log and the wall time —
+/// plus the health-event log (always empty when the health layer is
+/// disarmed).
 pub(crate) fn dispatch_tcp(
     queues: Vec<Vec<SubTask>>,
     collectors: &mut [TaskCollector],
     opts: &TcpOptions,
     time_scale: f64,
-) -> anyhow::Result<(Vec<usize>, Vec<usize>, Vec<TaskEvent>, f64)> {
+    fault: Option<&FaultPlan>,
+    health: &HealthConfig,
+) -> anyhow::Result<(
+    Vec<usize>,
+    Vec<usize>,
+    Vec<TaskEvent>,
+    f64,
+    Vec<HealthEvent>,
+)> {
     let n_queues = queues.len();
+    let armed = health.active(fault.is_some());
+    let beat_ms = if armed { health.beat_ms } else { 0.0 };
     let mut worker_computed = vec![0usize; n_queues];
     let mut worker_skipped = vec![0usize; n_queues];
     let mut events: Vec<TaskEvent> = Vec::new();
+    let mut health_events: Vec<HealthEvent> = Vec::new();
     let live: Vec<(usize, Vec<SubTask>)> = queues
         .into_iter()
         .enumerate()
         .filter(|(_, tasks)| !tasks.is_empty())
         .collect();
     if live.is_empty() {
-        return Ok((worker_computed, worker_skipped, events, 0.0));
+        return Ok((worker_computed, worker_skipped, events, 0.0, health_events));
     }
 
     // ---- endpoints ------------------------------------------------------
     let mut spawned: Vec<SpawnedWorker> = Vec::new();
-    let addrs: Vec<String> = if opts.addrs.is_empty() {
-        spawned = spawn_loopback_workers(live.len(), opts.flaky)?;
+    let auto_spawn = opts.addrs.is_empty();
+    let addrs: Vec<String> = if auto_spawn {
+        for _ in 0..live.len() {
+            spawned.push(spawn_loopback_worker(fault)?);
+        }
         spawned.iter().map(|w| w.addr.clone()).collect()
     } else {
-        anyhow::ensure!(
-            opts.flaky.is_none(),
-            "flaky injection configures auto-spawned workers; with explicit \
-             addresses pass --flaky to the `coded-coop worker` processes instead"
-        );
         (0..live.len())
             .map(|i| opts.addrs[i % opts.addrs.len()].clone())
             .collect()
@@ -248,109 +436,255 @@ pub(crate) fn dispatch_tcp(
     let t_start = Instant::now();
 
     // ---- connect + handshake + assignment -------------------------------
-    let mut writers: Vec<(usize, ConnWriter)> = Vec::with_capacity(live.len());
-    let mut readers: Vec<(usize, String, BufReader<TcpStream>)> =
-        Vec::with_capacity(live.len());
+    let (res_tx, res_rx) = channel::<Pulse>();
+    let mut sessions: Vec<Session> = Vec::with_capacity(live.len());
+    let mut joins: Vec<std::thread::JoinHandle<()>> = Vec::with_capacity(live.len());
     for ((wid, tasks), addr) in live.into_iter().zip(&addrs) {
-        let stream = TcpStream::connect(addr)
-            .map_err(|e| anyhow::anyhow!("connecting worker {wid} at {addr}: {e}"))?;
-        stream.set_nodelay(true).ok();
-        let mut reader = BufReader::new(stream.try_clone()?);
-        let mut writer = BufWriter::new(stream);
-        frame::send(
-            &mut writer,
-            &Message::Hello {
-                wid: wid as u32,
-                n_tasks: tasks.len() as u32,
-                n_cancel_slots: collectors.len() as u32,
-                time_scale,
-            },
+        open_session(
+            &mut sessions,
+            &mut joins,
+            &res_tx,
+            wid,
+            addr,
+            tasks,
+            collectors.len(),
+            time_scale,
+            beat_ms,
+            armed,
+            false,
         )?;
-        match frame::recv(&mut reader) {
-            Ok(Message::Hello { .. }) => {}
-            Ok(other) => anyhow::bail!("worker {wid} at {addr}: expected Hello ack, got {other:?}"),
-            Err(e) => anyhow::bail!(
-                "worker {wid} at {addr}: handshake failed: {e} \
-                 (protocol version mismatch closes the connection)"
-            ),
-        }
-        for t in tasks {
-            frame::send(
-                &mut writer,
-                &Message::TaskAssign {
-                    task: t.master as u32,
-                    coded_start: t.coded_start as u32,
-                    rows: t.rows as u32,
-                    cols: t.cols as u32,
-                    delay_ms: t.delay_ms,
-                    a_block: t.a_block,
-                    x: t.x.as_ref().clone(),
-                },
-            )?;
-        }
-        writers.push((wid, Arc::new(Mutex::new(writer))));
-        readers.push((wid, addr.clone(), reader));
     }
 
     // ---- start barrier: every worker has its full queue — go ------------
-    for (_, w) in &writers {
+    for s in &sessions {
         frame::send(
-            &mut *w.lock().expect("writer lock poisoned"),
-            &Message::Heartbeat { nonce: 0 },
+            &mut *s.writer.lock().expect("writer lock poisoned"),
+            &barrier_beat(),
         )?;
     }
 
     // ---- collect --------------------------------------------------------
-    let (res_tx, res_rx) = channel::<WorkerResult>();
-    let mut joins = Vec::with_capacity(readers.len());
-    for (wid, addr, reader) in readers {
-        let tx = res_tx.clone();
-        joins.push((
-            wid,
-            std::thread::Builder::new()
-                .name(format!("net-reader-{wid}"))
-                .spawn(move || reader_loop(reader, tx, wid, addr))?,
-        ));
+    let mut tracker = HealthTracker::new(health);
+    let mut breakers: Vec<CircuitBreaker> = (0..n_queues)
+        .map(|_| CircuitBreaker::new(health.breaker_backoff_ms, health.breaker_backoff_cap_ms))
+        .collect();
+    if armed {
+        for sid in 0..sessions.len() {
+            tracker.on_connect(sid, 0.0);
+        }
     }
-    drop(res_tx);
-    while let Ok(r) = res_rx.recv() {
-        let Some(c) = collectors.get_mut(r.master) else {
-            continue; // malformed task id from the wire: drop, don't panic
-        };
-        if c.absorb(&r) {
-            // This arrival completed the task: cancel its redundancy on
-            // every worker (frames are honored between sub-tasks).
-            for (_, w) in &writers {
+    // Coded rows already absorbed — a re-queued duplicate must never
+    // reach the decoder (duplicate rows make the LU system singular).
+    let mut seen: HashSet<(usize, usize)> = HashSet::new();
+    let mut done: Vec<bool> = vec![false; collectors.len()];
+    let mut open_count = sessions.len();
+    let tick = if armed {
+        Duration::from_secs_f64((health.beat_ms.max(1.0)) * 1e-3)
+    } else {
+        Duration::from_millis(500)
+    };
+
+    // Detection runs on its own schedule at the top of the loop — it
+    // must NOT live in the recv-timeout arm, because steady heartbeats
+    // keep the channel busy and would starve a timeout-driven check
+    // exactly when a gray worker (beats alive, compute dead) needs it.
+    let mut next_detect_ms = if armed { health.beat_ms } else { f64::INFINITY };
+    while open_count > 0 {
+        let now_ms = t_start.elapsed().as_secs_f64() * 1e3;
+        if armed && now_ms >= next_detect_ms {
+            next_detect_ms = now_ms + health.beat_ms.max(1.0);
+            // Judge every open, not-yet-sick session.
+            for sid in 0..sessions.len() {
+                if !sessions[sid].open || sessions[sid].sick {
+                    continue;
+                }
+                let earliest = sessions[sid]
+                    .pending
+                    .iter()
+                    .map(|t| t.delay_ms * time_scale * 1e3)
+                    .min_by(|a, b| a.total_cmp(b));
+                let verdict = tracker.verdict(sid, now_ms, earliest);
+                if !verdict.is_sick() {
+                    continue;
+                }
+                let wid = sessions[sid].wid;
+                health_events.push(HealthEvent {
+                    at_ms: now_ms,
+                    worker: wid,
+                    kind: HealthEventKind::Suspect {
+                        why: format!("{verdict:?}"),
+                    },
+                });
+                breakers[wid].on_failure(now_ms);
+                health_events.push(HealthEvent {
+                    at_ms: now_ms,
+                    worker: wid,
+                    kind: HealthEventKind::Open {
+                        backoff_ms: breakers[wid].backoff_ms(),
+                    },
+                });
+                // Release the sick worker: a mid-run Shutdown makes it
+                // cancel everything and drain, so its session ends
+                // instead of hanging the run.
+                sessions[sid].sick = true;
                 let _ = frame::send(
-                    &mut *w.lock().expect("writer lock poisoned"),
-                    &Message::Cancel {
-                        task: r.master as u32,
+                    &mut *sessions[sid].writer.lock().expect("writer lock poisoned"),
+                    &Message::Shutdown {
+                        computed: 0,
+                        skipped: 0,
+                        disconnected: false,
+                        events: Vec::new(),
                     },
                 );
+                requeue(
+                    sid,
+                    now_ms,
+                    &mut sessions,
+                    &mut joins,
+                    &res_tx,
+                    &mut spawned,
+                    auto_spawn,
+                    &mut breakers,
+                    &tracker,
+                    &done,
+                    collectors.len(),
+                    time_scale,
+                    beat_ms,
+                    &mut health_events,
+                    &mut open_count,
+                )?;
             }
+        }
+        match res_rx.recv_timeout(tick) {
+            Ok(Pulse::Result(sid, r)) => {
+                if armed {
+                    if !seen.insert((r.master, r.coded_start)) {
+                        continue; // duplicate from a re-queue race
+                    }
+                    sessions[sid]
+                        .pending
+                        .retain(|t| !(t.master == r.master && t.coded_start == r.coded_start));
+                    tracker.on_result(sid, now_ms, r.rows as u64);
+                    let wid = sessions[sid].wid;
+                    if breakers[wid].state() == BreakerState::HalfOpen {
+                        breakers[wid].on_success();
+                        health_events.push(HealthEvent {
+                            at_ms: now_ms,
+                            worker: wid,
+                            kind: HealthEventKind::Closed,
+                        });
+                    }
+                }
+                let Some(c) = collectors.get_mut(r.master) else {
+                    continue; // malformed task id from the wire: drop, don't panic
+                };
+                if c.absorb(&r) {
+                    // This arrival completed the task: cancel its
+                    // redundancy on every worker (frames are honored
+                    // between sub-tasks).
+                    if let Some(d) = done.get_mut(r.master) {
+                        *d = true;
+                    }
+                    for s in &sessions {
+                        let _ = frame::send(
+                            &mut *s.writer.lock().expect("writer lock poisoned"),
+                            &Message::Cancel {
+                                task: r.master as u32,
+                            },
+                        );
+                    }
+                    if armed {
+                        for s in sessions.iter_mut() {
+                            s.pending.retain(|t| t.master != r.master);
+                        }
+                    }
+                }
+            }
+            Ok(Pulse::Beat {
+                sid,
+                rows_done,
+                queue_depth,
+                last_latency_ms,
+            }) => {
+                if armed {
+                    tracker.on_beat(sid, now_ms, rows_done, queue_depth, last_latency_ms);
+                }
+            }
+            Ok(Pulse::Drained {
+                sid,
+                computed,
+                skipped,
+                events: ev,
+                disconnected,
+            }) => {
+                if sessions[sid].open {
+                    sessions[sid].open = false;
+                    open_count -= 1;
+                }
+                let wid = sessions[sid].wid;
+                worker_computed[wid] += computed;
+                worker_skipped[wid] += skipped;
+                events.extend(ev);
+                if armed {
+                    tracker.on_drain(sid);
+                    if disconnected && !sessions[sid].pending.is_empty() {
+                        health_events.push(HealthEvent {
+                            at_ms: now_ms,
+                            worker: wid,
+                            kind: HealthEventKind::Disconnect,
+                        });
+                        breakers[wid].on_failure(now_ms);
+                        health_events.push(HealthEvent {
+                            at_ms: now_ms,
+                            worker: wid,
+                            kind: HealthEventKind::Open {
+                                backoff_ms: breakers[wid].backoff_ms(),
+                            },
+                        });
+                        requeue(
+                            sid,
+                            now_ms,
+                            &mut sessions,
+                            &mut joins,
+                            &res_tx,
+                            &mut spawned,
+                            auto_spawn,
+                            &mut breakers,
+                            &tracker,
+                            &done,
+                            collectors.len(),
+                            time_scale,
+                            beat_ms,
+                            &mut health_events,
+                            &mut open_count,
+                        )?;
+                    }
+                }
+            }
+            // Quiet period — nothing to do; the detection sweep at the
+            // top of the loop already ran for this interval.
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
         }
     }
 
-    // ---- drain stats + release ------------------------------------------
-    for (wid, h) in joins {
-        let (computed, skipped, ev) = h
-            .join()
-            .map_err(|_| anyhow::anyhow!("reader thread for worker {wid} panicked"))?;
-        worker_computed[wid] = computed;
-        worker_skipped[wid] = skipped;
-        events.extend(ev);
-    }
-    for (_, w) in &writers {
+    // ---- release + reap -------------------------------------------------
+    for s in &sessions {
         let _ = frame::send(
-            &mut *w.lock().expect("writer lock poisoned"),
+            &mut *s.writer.lock().expect("writer lock poisoned"),
             &Message::Shutdown {
                 computed: 0,
                 skipped: 0,
+                disconnected: false,
                 events: Vec::new(),
             },
         );
     }
-    drop(writers); // close the sockets: --once workers exit now
+    drop(sessions); // close the sockets: --once workers exit now
+    drop(res_tx);
+    for j in joins {
+        let _ = j.join();
+    }
     for mut s in spawned {
         s.wait()?;
     }
@@ -359,5 +693,98 @@ pub(crate) fn dispatch_tcp(
         worker_skipped,
         events,
         t_start.elapsed().as_secs_f64() * 1e3,
+        health_events,
     ))
+}
+
+/// Move a failed session's still-pending sub-tasks onto the surviving
+/// fleet: round-robin over breaker-allowed open sessions' worker ids
+/// (least reported queue depth first), one fresh connection per target
+/// — auto-spawn mode launches replacement processes WITHOUT the fault
+/// plan, explicit-address mode reconnects to the target's endpoint.
+/// Rows whose master already decoded are dropped, not re-sent. With no
+/// allowed survivor the rows are abandoned to redundancy (exactly the
+/// pre-health behavior).
+#[allow(clippy::too_many_arguments)]
+fn requeue(
+    sid: usize,
+    now_ms: f64,
+    sessions: &mut Vec<Session>,
+    joins: &mut Vec<std::thread::JoinHandle<()>>,
+    tx: &Sender<Pulse>,
+    spawned: &mut Vec<SpawnedWorker>,
+    auto_spawn: bool,
+    breakers: &mut [CircuitBreaker],
+    tracker: &HealthTracker,
+    done: &[bool],
+    n_cancel_slots: usize,
+    time_scale: f64,
+    beat_ms: f64,
+    health_events: &mut Vec<HealthEvent>,
+    open_count: &mut usize,
+) -> anyhow::Result<()> {
+    let lost: Vec<SubTask> = std::mem::take(&mut sessions[sid].pending)
+        .into_iter()
+        .filter(|t| !done.get(t.master).copied().unwrap_or(false))
+        .collect();
+    if lost.is_empty() {
+        return Ok(());
+    }
+    // Candidate targets: open healthy sessions, judged by their breaker
+    // at `now_ms` (a previously tripped worker whose backoff elapsed
+    // gets its half-open probe here), least-loaded first.
+    let mut candidates: Vec<(u32, usize, String)> = Vec::new();
+    let mut seen_wid: HashSet<usize> = HashSet::new();
+    for (cand_sid, s) in sessions.iter().enumerate() {
+        if !s.open || s.sick || !seen_wid.insert(s.wid) {
+            continue;
+        }
+        if breakers[s.wid].allow(now_ms) {
+            if breakers[s.wid].state() == BreakerState::HalfOpen {
+                health_events.push(HealthEvent {
+                    at_ms: now_ms,
+                    worker: s.wid,
+                    kind: HealthEventKind::HalfOpen,
+                });
+            }
+            candidates.push((tracker.queue_depth(cand_sid), s.wid, s.addr.clone()));
+        }
+    }
+    candidates.sort();
+    if candidates.is_empty() {
+        eprintln!(
+            "coordinator: no healthy worker to re-queue {} sub-tasks onto; \
+             relying on redundancy",
+            lost.len()
+        );
+        return Ok(());
+    }
+    // Round-robin the lost sub-tasks over the targets.
+    let mut chunks: Vec<Vec<SubTask>> = (0..candidates.len()).map(|_| Vec::new()).collect();
+    for (i, t) in lost.into_iter().enumerate() {
+        chunks[i % candidates.len()].push(t);
+    }
+    for ((_, wid, addr), chunk) in candidates.into_iter().zip(chunks) {
+        if chunk.is_empty() {
+            continue;
+        }
+        let rows: usize = chunk.iter().map(|t| t.rows).sum();
+        let endpoint = if auto_spawn {
+            spawned.push(spawn_loopback_worker(None)?);
+            spawned.last().unwrap().addr.clone()
+        } else {
+            addr
+        };
+        open_session(
+            sessions, joins, tx, wid, &endpoint, chunk, n_cancel_slots, time_scale, beat_ms,
+            true, true,
+        )?;
+        *open_count += 1;
+        health_events.push(HealthEvent {
+            at_ms: now_ms,
+            worker: sessions[sid].wid,
+            kind: HealthEventKind::Requeue { rows, to: wid },
+        });
+    }
+    Ok(())
 }

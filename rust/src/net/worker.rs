@@ -23,16 +23,17 @@
 //!    connection.
 
 use std::io::{self, BufReader, BufWriter, Read, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::net::{Shutdown as SockShutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::channel;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::frame;
 use super::messages::{Message, WireEvent};
 use crate::coordinator::worker::{run_worker, SubTask, TaskEvent};
 use crate::coordinator::Backend;
+use crate::health::FaultPlan;
 
 /// Configuration for a worker process / in-process worker server.
 #[derive(Clone)]
@@ -44,6 +45,10 @@ pub struct WorkerConfig {
     /// Serve exactly one connection, then return (used by auto-spawned
     /// loopback workers so the process exits with its run).
     pub once: bool,
+    /// Injected faults, resolved per logical worker id at handshake
+    /// time (`crash:w3@50%` only fires on the connection that Hello'd
+    /// as wid 2).
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for WorkerConfig {
@@ -51,8 +56,26 @@ impl Default for WorkerConfig {
         Self {
             backend: Backend::Native,
             once: false,
+            fault: None,
         }
     }
+}
+
+/// Why the control loop exited (shared with the conn thread so the
+/// closing drain stats can tell crash from completion).
+const CTL_RUNNING: u8 = 0;
+const CTL_RELEASED: u8 = 1; // coordinator sent Shutdown
+const CTL_DISCONNECTED: u8 = 2; // peer vanished / stream error
+
+/// Progress counters the beat thread samples, updated by the result
+/// pump. `last_latency_bits` holds an `f64` (wall ms between
+/// consecutive published results) as bits.
+#[derive(Default)]
+struct BeatState {
+    rows_done: AtomicU64,
+    tasks_done: AtomicU64,
+    last_latency_bits: AtomicU64,
+    stop: AtomicBool,
 }
 
 /// A bound worker listener. Binding is separated from serving so
@@ -88,15 +111,16 @@ impl WorkerServer {
         }
         if cfg.once {
             let (stream, _) = self.listener.accept()?;
-            return handle_conn(stream, cfg.backend.clone());
+            return handle_conn(stream, cfg.backend.clone(), cfg.fault.clone());
         }
         loop {
             let (stream, peer) = self.listener.accept()?;
             let backend = cfg.backend.clone();
+            let fault = cfg.fault.clone();
             std::thread::Builder::new()
                 .name(format!("net-worker-{peer}"))
                 .spawn(move || {
-                    if let Err(e) = handle_conn(stream, backend) {
+                    if let Err(e) = handle_conn(stream, backend, fault) {
                         eprintln!("worker: connection {peer}: {e}");
                     }
                 })?;
@@ -113,25 +137,41 @@ fn send(w: &SharedWriter, msg: &Message) -> io::Result<()> {
 }
 
 /// Serve one coordinator connection end-to-end (blocking).
-pub fn handle_conn(stream: TcpStream, backend: Backend) -> anyhow::Result<()> {
+pub fn handle_conn(
+    stream: TcpStream,
+    backend: Backend,
+    fault: Option<FaultPlan>,
+) -> anyhow::Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let writer: SharedWriter = Arc::new(Mutex::new(BufWriter::new(stream)));
 
     // ---- 1. handshake ---------------------------------------------------
-    let (wid, n_tasks, n_cancel_slots, time_scale) = match frame::recv(&mut reader) {
+    let (wid, n_tasks, n_cancel_slots, time_scale, beat_ms) = match frame::recv(&mut reader)
+    {
         Ok(Message::Hello {
             wid,
             n_tasks,
             n_cancel_slots,
             time_scale,
-        }) => (wid as usize, n_tasks as usize, n_cancel_slots as usize, time_scale),
+            beat_ms,
+        }) => (
+            wid as usize,
+            n_tasks as usize,
+            n_cancel_slots as usize,
+            time_scale,
+            beat_ms,
+        ),
         Ok(other) => anyhow::bail!("expected Hello, got {other:?}"),
         Err(e) => anyhow::bail!("handshake failed: {e}"),
     };
     anyhow::ensure!(
         time_scale.is_finite() && time_scale >= 0.0,
         "Hello carried invalid time_scale {time_scale}"
+    );
+    anyhow::ensure!(
+        beat_ms.is_finite(),
+        "Hello carried invalid beat_ms {beat_ms}"
     );
     send(
         &writer,
@@ -140,8 +180,13 @@ pub fn handle_conn(stream: TcpStream, backend: Backend) -> anyhow::Result<()> {
             n_tasks: 0,
             n_cancel_slots: 0,
             time_scale,
+            beat_ms,
         },
     )?;
+    let faults = fault
+        .as_ref()
+        .map(|p| p.for_worker(wid, n_tasks))
+        .unwrap_or_default();
 
     // ---- 2./3. assignment + start barrier -------------------------------
     let cancel: Arc<Vec<AtomicBool>> =
@@ -187,11 +232,19 @@ pub fn handle_conn(stream: TcpStream, backend: Backend) -> anyhow::Result<()> {
             }
             // The start barrier: first heartbeat after (or during — the
             // count guard above keeps phases honest) assignment.
-            Ok(Message::Heartbeat { nonce }) => {
+            Ok(Message::Heartbeat { nonce, .. }) => {
                 if tasks.len() == n_tasks {
                     break;
                 }
-                send(&writer, &Message::Heartbeat { nonce })?;
+                send(
+                    &writer,
+                    &Message::Heartbeat {
+                        nonce,
+                        rows_done: 0,
+                        queue_depth: 0,
+                        last_latency_ms: 0.0,
+                    },
+                )?;
             }
             Ok(Message::Cancel { task }) => {
                 if let Some(flag) = cancel.get(task as usize) {
@@ -205,6 +258,7 @@ pub fn handle_conn(stream: TcpStream, backend: Backend) -> anyhow::Result<()> {
                     &Message::Shutdown {
                         computed: 0,
                         skipped: 0,
+                        disconnected: false,
                         events: Vec::new(),
                     },
                 );
@@ -215,22 +269,74 @@ pub fn handle_conn(stream: TcpStream, backend: Backend) -> anyhow::Result<()> {
         }
     }
 
-    // ---- 4. execute: control thread + the unchanged run_worker loop -----
+    // ---- 4. execute: control + beat threads + the run_worker loop -------
+    let exit_cause = Arc::new(AtomicU8::new(CTL_RUNNING));
     let ctl = {
         let cancel = Arc::clone(&cancel);
         let writer = Arc::clone(&writer);
+        let cause = Arc::clone(&exit_cause);
         std::thread::Builder::new()
             .name(format!("net-ctl-{wid}"))
-            .spawn(move || control_loop(reader, writer, cancel))?
+            .spawn(move || control_loop(reader, writer, cancel, cause))?
+    };
+
+    let beat_state = Arc::new(BeatState::default());
+    // Recurring progress beats at the coordinator-chosen cadence
+    // (disabled for beat_ms ≤ 0). Nonces count up from 1; the barrier
+    // heartbeat the coordinator sent used 0.
+    let beat = if beat_ms > 0.0 {
+        let writer = Arc::clone(&writer);
+        let state = Arc::clone(&beat_state);
+        let period = Duration::from_secs_f64(beat_ms * 1e-3);
+        Some(
+            std::thread::Builder::new()
+                .name(format!("net-beat-{wid}"))
+                .spawn(move || {
+                    let mut nonce = 1u64;
+                    while !state.stop.load(Ordering::SeqCst) {
+                        std::thread::sleep(period);
+                        if state.stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let done = state.tasks_done.load(Ordering::SeqCst);
+                        let msg = Message::Heartbeat {
+                            nonce,
+                            rows_done: state.rows_done.load(Ordering::SeqCst),
+                            queue_depth: (n_tasks as u64).saturating_sub(done) as u32,
+                            last_latency_ms: f64::from_bits(
+                                state.last_latency_bits.load(Ordering::SeqCst),
+                            ),
+                        };
+                        nonce += 1;
+                        if send(&writer, &msg).is_err() {
+                            return; // peer gone; the ctl thread handles it
+                        }
+                    }
+                })?,
+        )
+    } else {
+        None
     };
 
     let (tx, rx) = channel();
     let pump = {
         let writer = Arc::clone(&writer);
+        let state = Arc::clone(&beat_state);
         std::thread::Builder::new()
             .name(format!("net-pump-{wid}"))
             .spawn(move || -> io::Result<()> {
+                let mut last_publish: Option<Instant> = None;
                 for r in rx {
+                    let now = Instant::now();
+                    if let Some(prev) = last_publish {
+                        let gap_ms = now.duration_since(prev).as_secs_f64() * 1e3;
+                        state
+                            .last_latency_bits
+                            .store(gap_ms.to_bits(), Ordering::SeqCst);
+                    }
+                    last_publish = Some(now);
+                    state.rows_done.fetch_add(r.rows as u64, Ordering::SeqCst);
+                    state.tasks_done.fetch_add(1, Ordering::SeqCst);
                     send(
                         &writer,
                         &Message::PartialResult {
@@ -248,20 +354,45 @@ pub fn handle_conn(stream: TcpStream, backend: Backend) -> anyhow::Result<()> {
     };
 
     let t_start = Instant::now();
-    let (computed, skipped, events) =
-        run_worker(wid, tasks, backend, cancel, tx, time_scale, t_start);
+    let (computed, skipped, events, crashed) =
+        run_worker(wid, tasks, backend, cancel, tx, time_scale, t_start, &faults);
 
     // run_worker dropped its Sender, so the pump drains and exits.
-    pump.join()
-        .map_err(|_| anyhow::anyhow!("result pump panicked"))?
-        .map_err(|e| anyhow::anyhow!("publishing results failed: {e}"))?;
+    let pump_res = pump
+        .join()
+        .map_err(|_| anyhow::anyhow!("result pump panicked"))?;
+    beat_state.stop.store(true, Ordering::SeqCst);
+
+    if crashed {
+        // Simulate the process dying: sever the socket both ways so the
+        // coordinator's reader sees an immediate EOF (no closing
+        // Shutdown, no drain stats), then exit CLEANLY — the injection
+        // is the experiment, not a real defect, and the auto-spawner
+        // treats a non-zero exit as a harness failure.
+        if let Ok(g) = writer.lock() {
+            let _ = g.get_ref().shutdown(SockShutdown::Both);
+        }
+        if let Some(b) = beat {
+            let _ = b.join();
+        }
+        let _ = ctl.join();
+        return Ok(());
+    }
+    pump_res.map_err(|e| anyhow::anyhow!("publishing results failed: {e}"))?;
+    if let Some(b) = beat {
+        b.join().map_err(|_| anyhow::anyhow!("beat thread panicked"))?;
+    }
 
     // ---- 5. drain stats, then wait for the coordinator's release --------
+    // `disconnected` marks a drain forced by the peer vanishing; a
+    // coordinator-initiated Shutdown (or natural completion, where the
+    // control loop is still running) is a clean drain.
     send(
         &writer,
         &Message::Shutdown {
             computed: computed as u64,
             skipped: skipped as u64,
+            disconnected: exit_cause.load(Ordering::SeqCst) == CTL_DISCONNECTED,
             events: events.iter().map(event_to_wire).collect(),
         },
     )?;
@@ -273,8 +404,14 @@ pub fn handle_conn(stream: TcpStream, backend: Backend) -> anyhow::Result<()> {
 /// Keep reading control frames while (and after) the compute loop runs.
 /// Returns when the coordinator releases the connection (`Shutdown`) or
 /// vanishes — both cancel everything outstanding, so a worker never
-/// computes for a peer that stopped listening.
-fn control_loop<R: Read>(mut reader: R, writer: SharedWriter, cancel: Arc<Vec<AtomicBool>>) {
+/// computes for a peer that stopped listening — and records WHICH of
+/// the two happened in `cause` so the drain stats can report it.
+fn control_loop<R: Read>(
+    mut reader: R,
+    writer: SharedWriter,
+    cancel: Arc<Vec<AtomicBool>>,
+    cause: Arc<AtomicU8>,
+) {
     loop {
         match frame::recv(&mut reader) {
             Ok(Message::Cancel { task }) => {
@@ -282,10 +419,26 @@ fn control_loop<R: Read>(mut reader: R, writer: SharedWriter, cancel: Arc<Vec<At
                     flag.store(true, Ordering::SeqCst);
                 }
             }
-            Ok(Message::Heartbeat { nonce }) => {
-                let _ = send(&writer, &Message::Heartbeat { nonce });
+            Ok(Message::Heartbeat { nonce, .. }) => {
+                let _ = send(
+                    &writer,
+                    &Message::Heartbeat {
+                        nonce,
+                        rows_done: 0,
+                        queue_depth: 0,
+                        last_latency_ms: 0.0,
+                    },
+                );
             }
-            Ok(Message::Shutdown { .. }) | Err(_) => {
+            Ok(Message::Shutdown { .. }) => {
+                cause.store(CTL_RELEASED, Ordering::SeqCst);
+                for flag in cancel.iter() {
+                    flag.store(true, Ordering::SeqCst);
+                }
+                return;
+            }
+            Err(_) => {
+                cause.store(CTL_DISCONNECTED, Ordering::SeqCst);
                 for flag in cancel.iter() {
                     flag.store(true, Ordering::SeqCst);
                 }

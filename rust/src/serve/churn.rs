@@ -51,6 +51,15 @@ impl ChurnScript {
         Self::default()
     }
 
+    /// Build a script from events in any order (stable time sort —
+    /// same-instant events keep their given order). Used by
+    /// `health::churn_from_faults`, which emits per-spec timelines that
+    /// interleave.
+    pub fn from_events(mut events: Vec<ChurnEvent>) -> Self {
+        events.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms));
+        Self { events }
+    }
+
     pub fn is_empty(&self) -> bool {
         self.events.is_empty()
     }

@@ -52,6 +52,7 @@ use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
 
 use crate::alloc::{self, markov, sca, Allocation, EffLink};
 use crate::config::Scenario;
+use crate::health::{self, FaultPlan, HealthConfig};
 use crate::plan::{self, Plan};
 use crate::policy::{LoadAllocator, PolicySpec};
 use crate::sim::engine::{CapacityProfile, Compiled};
@@ -144,6 +145,14 @@ pub struct ServeConfig {
     /// Explicit fleet timeline; `None` synthesizes one from
     /// `churn_rate` / `churn_downtime` ([`ChurnScript::synthesize`]).
     pub script: Option<ChurnScript>,
+    /// Health-driven churn: when set (and no explicit `script`), the
+    /// fleet timeline is what the coordinator's health layer would
+    /// OBSERVE under this fault plan — crashes become leaves after the
+    /// missed-beat window, gray failures after the stall window, spikes
+    /// and slow starts become throttles with breaker-probed recovery
+    /// ([`health::churn_from_faults`]). Takes precedence over the
+    /// rate-based `churn_rate` synthesis.
+    pub faults: Option<FaultPlan>,
     /// Worker leave/rejoin cycles per `t*_base` (0 = static fleet).
     pub churn_rate: f64,
     /// Fraction of each churn cycle the worker spends away.
@@ -167,6 +176,7 @@ impl ServeConfig {
             load_factor: 0.8,
             jobs: 50,
             script: None,
+            faults: None,
             churn_rate: 0.0,
             churn_downtime: 0.5,
             seed: 2022,
@@ -675,9 +685,16 @@ pub fn run(s: &Scenario, cfg: &ServeConfig) -> anyhow::Result<ServeOutcome> {
     // empirical mean service (≤ ~2·t*) with slack.
     let span = period.max(4.0 * t_ref) * cfg.jobs.max(1) as f64;
     let horizon = span * 2.0 + 4.0 * t_ref;
-    let script = match &cfg.script {
-        Some(sc) => sc.clone(),
-        None => ChurnScript::synthesize(
+    let script = match (&cfg.script, &cfg.faults) {
+        (Some(sc), _) => sc.clone(),
+        // Health-driven churn: the timeline the coordinator's detection
+        // layer would emit under this fault plan (leaves delayed by the
+        // missed-beat / stall windows, throttles recovered through
+        // breaker probes) instead of a rate-driven cycle.
+        (None, Some(fp)) => {
+            health::churn_from_faults(fp, n, horizon, &HealthConfig::default())
+        }
+        (None, None) => ChurnScript::synthesize(
             n,
             cfg.churn_rate,
             cfg.churn_downtime,
@@ -690,7 +707,9 @@ pub fn run(s: &Scenario, cfg: &ServeConfig) -> anyhow::Result<ServeOutcome> {
     // No silent caps: a synthesized script that hit MAX_SYNTH_EVENTS
     // before covering the horizon leaves the tail of the run on a
     // static fleet — say so instead of letting the churn axis lie.
-    if cfg.script.is_none() {
+    // (Fault-derived scripts are exact: every fault maps to a bounded
+    // set of events, so there is nothing to truncate.)
+    if cfg.script.is_none() && cfg.faults.is_none() {
         if let Some(last) = script.events.last() {
             if last.at_ms < horizon * 0.9 {
                 eprintln!(

@@ -1,0 +1,237 @@
+//! Health-layer integration: fault injection, detection and recovery
+//! over the TCP transport against in-process loopback workers, plus the
+//! no-op parity contract (no fault plan → the PR-6 dispatch path, no
+//! health bookkeeping at all).
+//!
+//! Timing in these tests is real wall clock, so assertions target
+//! *outcomes* (the run decodes, the right event kinds were logged),
+//! never exact event counts or orderings — a loaded CI box may trip a
+//! false-positive detection, which by design only re-queues rows that
+//! redundancy would have covered and cannot break the decode.
+
+use coded_coop::config::{AShift, CommModel, Scenario};
+use coded_coop::coordinator::{run_plan, Backend, RunOptions, Transport};
+use coded_coop::health::{FaultPlan, HealthConfig, HealthEventKind};
+use coded_coop::net::{WorkerConfig, WorkerServer};
+use coded_coop::plan::{self, LoadMethod, PlanSpec, Policy};
+
+/// Launch `n` loopback worker servers, each serving connections forever
+/// from a detached thread, all carrying the same fault plan (faults
+/// resolve per logical wid at handshake, so a plan targeting `w3` is
+/// harmless on every other connection).
+fn loopback_workers(n: usize, fault: Option<FaultPlan>) -> Vec<String> {
+    (0..n)
+        .map(|_| {
+            let server = WorkerServer::bind("127.0.0.1:0").expect("bind loopback");
+            let addr = server.local_addr().expect("local addr").to_string();
+            let cfg = WorkerConfig {
+                backend: Backend::Native,
+                once: false,
+                fault: fault.clone(),
+            };
+            std::thread::spawn(move || {
+                let _ = server.run(&cfg);
+            });
+            addr
+        })
+        .collect()
+}
+
+fn scenario(name: &str, masters: usize, workers: usize, l: f64, seed: u64) -> Scenario {
+    Scenario::random(
+        name,
+        masters,
+        workers,
+        l,
+        AShift::Range(0.01, 0.05),
+        2.0,
+        CommModel::Stochastic,
+        seed,
+    )
+}
+
+fn spec() -> PlanSpec {
+    PlanSpec {
+        policy: Policy::DediIter,
+        values: coded_coop::assign::ValueModel::Markov,
+        loads: LoadMethod::Markov,
+    }
+}
+
+fn opts(seed: u64, transport: Transport, fault: Option<FaultPlan>) -> RunOptions {
+    RunOptions {
+        cols: 16,
+        time_scale: 2e-5,
+        backend: Backend::Native,
+        seed,
+        verify: true,
+        transport,
+        fault,
+        health: HealthConfig::fast(),
+    }
+}
+
+fn kinds(report: &coded_coop::coordinator::Report) -> Vec<&'static str> {
+    report.health.iter().map(|h| h.kind_label()).collect()
+}
+
+#[test]
+fn tcp_crash_is_requeued_and_decodes() {
+    // w3 (wid 2) severs its connection before computing anything: the
+    // reader sees the EOF, the breaker opens, and every one of its
+    // sub-tasks must be re-queued onto surviving workers over fresh
+    // connections — the decode then completes and verifies.
+    let fault = FaultPlan::parse("crash:w3@0%").unwrap();
+    let s = scenario("health-crash", 2, 4, 64.0, 13);
+    let p = plan::build(&s, &spec());
+    let addrs = loopback_workers(3, Some(fault.clone()));
+    let mut o = opts(13, Transport::tcp(addrs), Some(fault));
+    // Slow the virtual clock down so deadlines sit well past the crash:
+    // the fleet cannot finish before the disconnect drain lands.
+    o.time_scale = 2e-3;
+    let report = run_plan(&s, &p, &o).unwrap();
+
+    assert!(report.all_verified(1e-3), "{report:?}");
+    let k = kinds(&report);
+    assert!(k.contains(&"disconnect"), "no disconnect logged: {k:?}");
+    assert!(k.contains(&"open"), "breaker never opened: {k:?}");
+    assert!(k.contains(&"requeue"), "nothing re-queued: {k:?}");
+    for h in &report.health {
+        if let HealthEventKind::Requeue { rows, to } = &h.kind {
+            assert!(*rows > 0, "empty re-queue event: {h:?}");
+            assert_ne!(*to, 2, "re-queued onto the crashed worker: {h:?}");
+        }
+    }
+    // The crashed queue contributed nothing; its share moved elsewhere.
+    assert_eq!(report.worker_computed[2], 0, "{report:?}");
+}
+
+#[test]
+fn tcp_gray_failure_is_detected_and_released() {
+    // Both remote workers go gray from sub-task 0: heartbeats keep
+    // flowing but no result ever publishes, so only the deadline-stall
+    // verdict can catch them. The master's local queue alone holds
+    // fewer than L coded rows — without detection + re-queue this run
+    // cannot decode, so `all_verified` here proves the whole loop:
+    // stall verdict → breaker open → mid-run release → re-queue.
+    let fault = FaultPlan::parse("gray:w1@0%,gray:w2@0%").unwrap();
+    let s = scenario("health-gray", 1, 2, 64.0, 7);
+    let p = plan::build(&s, &spec());
+    let addrs = loopback_workers(2, Some(fault.clone()));
+    let report = run_plan(&s, &p, &opts(7, Transport::tcp(addrs), Some(fault))).unwrap();
+
+    assert!(report.all_verified(1e-3), "{report:?}");
+    let k = kinds(&report);
+    assert!(k.contains(&"suspect"), "no stall verdict logged: {k:?}");
+    assert!(k.contains(&"open"), "breaker never opened: {k:?}");
+    assert!(k.contains(&"requeue"), "nothing re-queued: {k:?}");
+    // The gray workers were suspected by the tracker, not the reader.
+    assert!(
+        report
+            .health
+            .iter()
+            .any(|h| matches!(&h.kind, HealthEventKind::Suspect { why } if why.contains("Stalled"))),
+        "expected a Stalled verdict: {:?}",
+        report.health
+    );
+}
+
+#[test]
+fn no_fault_is_disarmed_and_matches_thread_transport() {
+    // The no-op parity criterion: with no fault plan and `armed` off,
+    // the health layer must not exist — no events, no beats, and the
+    // exact same sub-task assignment as the thread transport.
+    let s = scenario("health-parity", 2, 4, 64.0, 11);
+    let p = plan::build(&s, &spec());
+    let mut thread_opts = opts(11, Transport::Thread, None);
+    thread_opts.health = HealthConfig::default();
+    let thread_report = run_plan(&s, &p, &thread_opts).unwrap();
+    let mut tcp_opts = opts(11, Transport::tcp(loopback_workers(3, None)), None);
+    tcp_opts.health = HealthConfig::default();
+    let tcp_report = run_plan(&s, &p, &tcp_opts).unwrap();
+
+    assert!(thread_report.all_verified(1e-3), "{thread_report:?}");
+    assert!(tcp_report.all_verified(1e-3), "{tcp_report:?}");
+    assert!(thread_report.health.is_empty(), "{:?}", thread_report.health);
+    assert!(tcp_report.health.is_empty(), "{:?}", tcp_report.health);
+
+    let key = |events: &[coded_coop::coordinator::worker::TaskEvent]| {
+        let mut v: Vec<_> = events
+            .iter()
+            .map(|e| (e.worker, e.master, e.rows, e.deadline_ms.to_bits()))
+            .collect();
+        v.sort();
+        v
+    };
+    assert_eq!(
+        key(&thread_report.events),
+        key(&tcp_report.events),
+        "disarmed TCP executed a different assignment than the thread path"
+    );
+}
+
+#[test]
+fn requeued_run_decodes_like_a_healthy_one() {
+    // Deterministic re-queue parity: same scenario, same seed, one
+    // fleet healthy and one with a crashed worker. Both must decode
+    // against the same ground truth with exactly L rows per master —
+    // re-queued duplicates would make the LU system singular, dropped
+    // rows would leave it underdetermined.
+    let s = scenario("health-requeue-parity", 2, 4, 64.0, 5);
+    let p = plan::build(&s, &spec());
+
+    let healthy_addrs = loopback_workers(3, None);
+    let healthy = run_plan(&s, &p, &{
+        let mut o = opts(5, Transport::tcp(healthy_addrs), None);
+        o.time_scale = 2e-3;
+        o
+    })
+    .unwrap();
+
+    let fault = FaultPlan::parse("crash:w3@0%").unwrap();
+    let crashed_addrs = loopback_workers(3, Some(fault.clone()));
+    let crashed = run_plan(&s, &p, &{
+        let mut o = opts(5, Transport::tcp(crashed_addrs), Some(fault));
+        o.time_scale = 2e-3;
+        o
+    })
+    .unwrap();
+
+    assert!(healthy.all_verified(1e-3), "{healthy:?}");
+    assert!(crashed.all_verified(1e-3), "{crashed:?}");
+    assert_eq!(healthy.masters.len(), crashed.masters.len());
+    for (h, c) in healthy.masters.iter().zip(&crashed.masters) {
+        assert_eq!(h.rows_used, c.rows_used, "decode consumed different row counts");
+        assert!(c.completion_ms.is_finite());
+    }
+    assert!(healthy.health.is_empty());
+    assert!(!crashed.health.is_empty());
+}
+
+#[test]
+fn thread_mode_crash_is_logged_and_absorbed_by_redundancy() {
+    // The thread transport has no re-queue (an in-process "crash" is
+    // just an early return): the fault surfaces as a Disconnect health
+    // event and the lost rows behave like stragglers. The report must
+    // stay coherent either way — redundancy may or may not cover the
+    // hole, so completion is not asserted.
+    let fault = FaultPlan::parse("crash:w2@0%").unwrap();
+    let s = scenario("health-thread-crash", 2, 4, 64.0, 3);
+    let p = plan::build(&s, &spec());
+    let report = run_plan(&s, &p, &opts(3, Transport::Thread, Some(fault))).unwrap();
+
+    assert_eq!(report.masters.len(), 2);
+    assert!(
+        report
+            .health
+            .iter()
+            .any(|h| h.worker == 1 && matches!(h.kind, HealthEventKind::Disconnect)),
+        "thread-mode crash must log a Disconnect: {:?}",
+        report.health
+    );
+    assert_eq!(report.worker_computed[1], 0, "{report:?}");
+    for m in &report.masters {
+        // Coherence even if a master never decoded (completion = ∞).
+        assert!(m.rows_used <= 64);
+    }
+}

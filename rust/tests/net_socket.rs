@@ -70,6 +70,8 @@ fn opts(seed: u64, transport: Transport) -> RunOptions {
         seed,
         verify: true,
         transport,
+        fault: None,
+        health: coded_coop::health::HealthConfig::default(),
     }
 }
 
@@ -160,6 +162,8 @@ fn stream_runs_over_tcp() {
             seed: 11,
             verify: true,
             transport: Transport::tcp(loopback_workers(3)),
+            fault: None,
+            health: coded_coop::health::HealthConfig::default(),
         },
     )
     .unwrap();
@@ -185,6 +189,7 @@ fn random_message(g: &mut Gen) -> Message {
             n_tasks: g.usize_range(0, 1000) as u32,
             n_cancel_slots: g.usize_range(0, 1000) as u32,
             time_scale: g.f64_range(0.0, 1.0),
+            beat_ms: g.f64_range(0.0, 100.0),
         },
         1 => Message::TaskAssign {
             task: g.usize_range(0, 100) as u32,
@@ -208,10 +213,14 @@ fn random_message(g: &mut Gen) -> Message {
         },
         4 => Message::Heartbeat {
             nonce: g.rng().next_u64(),
+            rows_done: g.usize_range(0, 10_000) as u64,
+            queue_depth: g.usize_range(0, 1000) as u32,
+            last_latency_ms: g.f64_range(0.0, 1e3),
         },
         _ => Message::Shutdown {
             computed: g.usize_range(0, 1000) as u64,
             skipped: g.usize_range(0, 1000) as u64,
+            disconnected: g.bool(),
             events: {
                 let len = g.usize_range(0, 8);
                 g.vec(len, |g| WireEvent {
