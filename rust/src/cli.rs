@@ -11,8 +11,15 @@
 //! coded-coop e2e    [--masters M] [--workers N] [--rows L] [--cols S]
 //!            [--policy P] [--seed S] [--native] [--time-scale X]
 //!            [--fault SPEC] [--transport thread|tcp] [--workers-at A1,A2,…]
-//! coded-coop worker --listen ADDR [--fault SPEC] [--once]
+//!            [--auth-token T]
+//! coded-coop serve --scenario … --transport tcp [--workers-at A1,A2,…]
+//!            [--auth-token T] [--jobs N] [--fault SPEC] [--fast-health]
+//! coded-coop worker --listen ADDR [--fault SPEC] [--once] [--auth-token T]
 //! coded-coop version | help
+//!
+//! The shared secret also reads from the `CODED_COOP_AUTH` environment
+//! variable (the flag wins), which is how auto-spawned loopback workers
+//! inherit it without the token appearing in `ps` output.
 //! ```
 //!
 //! Policy and load-method names resolve through
@@ -134,13 +141,17 @@ USAGE:
                   [--jobs N] [--load-factor F] [--churn-rate R] [--churn-downtime D]
                   [--fault SPEC]                      (health-derived churn)
                   [--process deterministic|poisson] [--seed S] [--records FILE] [--no-records]
+  coded-coop serve --scenario … --transport tcp     (lifecycle-observed churn)
+                  [--workers-at ADDR1,ADDR2,…] [--auth-token T] [--jobs N]
+                  [--cols S] [--time-scale X] [--fault SPEC] [--fast-health]
   coded-coop e2e  [--masters M] [--workers N] [--rows L] [--cols S]
                   [--policy P] [--seed S] [--native] [--time-scale X]
                   [--fault SPEC] [--fast-health]      (fault injection + recovery)
                   [--transport thread|tcp] [--workers-at ADDR1,ADDR2,…]
+                  [--auth-token T]                    (or env CODED_COOP_AUTH)
                   [--stream-jobs N] [--period-ms X]   (queued-job stream)
                   [--out FILE.json]                   (full report incl. health events)
-  coded-coop worker --listen ADDR [--fault SPEC] [--once]   (socket-mode worker)
+  coded-coop worker --listen ADDR [--fault SPEC] [--once] [--auth-token T]
   coded-coop version | help
 
 faults:   SPEC = comma list of kind:worker@frac — e.g. crash:w3@50%,gray:w2@0%,
@@ -187,6 +198,28 @@ pub fn parse_scenario(a: &Args) -> anyhow::Result<Scenario> {
         "ec2" => Ok(Scenario::ec2(40, 10, a.switch("stragglers"))),
         path => Scenario::from_file(path),
     }
+}
+
+/// Shared-secret auth token: `--auth-token TOKEN` wins, else the
+/// `CODED_COOP_AUTH` environment (how auto-spawned workers inherit it
+/// without the token ever appearing in `ps` output).
+fn auth_token(args: &Args) -> Option<String> {
+    args.flag("auth-token")
+        .map(str::to_string)
+        .or_else(|| std::env::var("CODED_COOP_AUTH").ok().filter(|s| !s.is_empty()))
+}
+
+/// `--workers-at A1,A2,…`: explicit worker endpoints (empty/absent =
+/// auto-spawn loopback worker processes).
+fn workers_at(args: &Args) -> Vec<String> {
+    args.flag("workers-at")
+        .map(|v| {
+            v.split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect()
+        })
+        .unwrap_or_default()
 }
 
 /// Policy spec from `--policy/--values/--loads`, resolved eagerly so
@@ -731,6 +764,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 /// `serve --scenario …`: one configurable job stream.
 fn cmd_serve_single(args: &Args) -> anyhow::Result<()> {
     let s = parse_scenario(args)?;
+    // --transport tcp: jobs run on the real socket runtime and churn is
+    // OBSERVED from connection lifecycle instead of scripted — see the
+    // serve::tcp module docs. thread/absent keeps the virtual stream.
+    match args.flag("transport").unwrap_or("thread") {
+        "thread" => {}
+        "tcp" => return cmd_serve_tcp(args, &s),
+        other => anyhow::bail!("--transport expects 'thread' or 'tcp', got '{other}'"),
+    }
     let spec = parse_policy_spec(args)?;
     let mut cfg = serve::ServeConfig::new(spec);
     cfg.jobs = args.usize_flag("jobs", 50)?;
@@ -775,6 +816,53 @@ fn cmd_serve_single(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `serve --transport tcp`: a short job sequence on the real socket
+/// runtime, fleet admission driven by per-worker circuit breakers fed
+/// from observed connection lifecycle (no [`ChurnScript`]).
+///
+/// [`ChurnScript`]: serve::ChurnScript
+fn cmd_serve_tcp(args: &Args, s: &Scenario) -> anyhow::Result<()> {
+    let mut cfg = serve::TcpServeConfig::new(parse_policy_spec(args)?);
+    cfg.jobs = args.usize_flag("jobs", 3)?;
+    cfg.cols = args.usize_flag("cols", 32)?;
+    cfg.time_scale = args.f64_flag("time-scale", 2e-3)?;
+    cfg.seed = args.u64_flag("seed", 2022)?;
+    cfg.addrs = workers_at(args);
+    cfg.auth = auth_token(args);
+    cfg.fault = parse_fault(args)?;
+    if args.switch("fast-health") {
+        cfg.health = HealthConfig::fast();
+    }
+    // Always armed: lifecycle observation IS the point of this mode —
+    // an unarmed run would render every disconnect invisible.
+    cfg.health.armed = true;
+    let mut sink = RecordSink::from_args(args)?;
+    let summary: fn(&str) = if sink.summary_to_stderr() {
+        |s| eprintln!("{s}")
+    } else {
+        println_safe
+    };
+    let out = serve::tcp::run_tcp(s, &cfg)?;
+    for r in &out.records {
+        sink.write_line(&serve::json_line(&r.to_json()));
+    }
+    sink.finish()?;
+    summary(&format!("\nscenario: {} (serve over tcp)", s.name));
+    summary(&format!(
+        "jobs: {} ({} verified) | replans {} | cache hits {} | health events {} | redundancy-floor jobs {}",
+        out.records.len(),
+        out.records.iter().filter(|r| r.verified).count(),
+        out.replans,
+        out.cache_hits,
+        out.health.len(),
+        out.records.iter().filter(|r| r.redundancy_floor).count(),
+    ));
+    if !out.all_verified() {
+        anyhow::bail!("serve over tcp: at least one job failed verification");
+    }
+    Ok(())
+}
+
 fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
     let m = args.usize_flag("masters", 2)?;
     let n = args.usize_flag("workers", 6)?;
@@ -813,18 +901,10 @@ fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
     // gives their endpoints, empty auto-spawns loopback processes.
     let transport = match args.flag("transport").unwrap_or("thread") {
         "thread" => coordinator::Transport::Thread,
-        "tcp" => {
-            let addrs: Vec<String> = args
-                .flag("workers-at")
-                .map(|v| {
-                    v.split(',')
-                        .map(|s| s.trim().to_string())
-                        .filter(|s| !s.is_empty())
-                        .collect()
-                })
-                .unwrap_or_default();
-            coordinator::Transport::Tcp(coordinator::TcpOptions { addrs })
-        }
+        "tcp" => coordinator::Transport::Tcp(coordinator::TcpOptions {
+            addrs: workers_at(args),
+            auth: auth_token(args),
+        }),
         other => anyhow::bail!("--transport expects 'thread' or 'tcp', got '{other}'"),
     };
 
@@ -957,6 +1037,7 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
         backend: Backend::Native,
         once: args.switch("once"),
         fault: parse_fault(args)?,
+        auth: auth_token(args),
     })
 }
 
@@ -1162,6 +1243,12 @@ mod tests {
         assert!(h.contains("--fault SPEC"), "help misses --fault");
         assert!(h.contains("crash:w3@50%"), "help misses the fault DSL examples");
         assert!(h.contains("--fast-health"), "help misses --fast-health");
+        assert!(h.contains("--auth-token"), "help misses --auth-token");
+        assert!(h.contains("CODED_COOP_AUTH"), "help misses the auth env var");
+        assert!(
+            h.contains("--transport tcp"),
+            "help misses serve's tcp transport"
+        );
     }
 
     #[test]

@@ -128,11 +128,18 @@ pub fn run_worker(
         Some(every) => Backend::Flaky { every },
         None => backend,
     };
+    // No socket exists at this layer, so an injected connection drop
+    // degenerates to a crash here; the net worker severs the stream
+    // itself and strips `drop_at` before calling in.
+    let crash_at = match (faults.crash_at, faults.drop_at) {
+        (Some(a), Some(b)) => Some(a.min(b)),
+        (a, b) => a.or(b),
+    };
     let mut computed = 0usize;
     let mut skipped = 0usize;
     let mut events = Vec::with_capacity(tasks.len());
     for (i, t) in tasks.into_iter().enumerate() {
-        if faults.crash_at.is_some_and(|at| i >= at) {
+        if crash_at.is_some_and(|at| i >= at) {
             // The "process" dies here: remaining sub-tasks are lost
             // without a trace — detection and re-queue are the
             // coordinator's job.

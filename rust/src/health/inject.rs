@@ -47,6 +47,12 @@ pub enum FaultKind {
     /// The legacy `--flaky N` backend: a deterministic ~1/N of sub-task
     /// computes fail (stragglers the MDS redundancy must absorb).
     Flaky { every: usize },
+    /// Connection drop: sever the socket at the trigger point but KEEP
+    /// computing — the resumable counterpart of [`FaultKind::Crash`].
+    /// On a resumable session the worker parks its unsent results for a
+    /// later `Resume` replay; thread transport treats it like a crash
+    /// (there is no connection to drop).
+    Drop,
 }
 
 /// One injected fault: a kind, a target queue and a trigger point.
@@ -81,6 +87,8 @@ pub struct WorkerFaults {
     pub slow: Option<(usize, f64)>,
     /// Swap the compute backend for `Backend::Flaky { every }`.
     pub flaky_every: Option<usize>,
+    /// Sever the connection before this sub-task index, keep computing.
+    pub drop_at: Option<usize>,
 }
 
 impl WorkerFaults {
@@ -176,6 +184,7 @@ impl FaultPlan {
                 FaultKind::Spike { extra_ms } => f.spike = Some((idx(s.at_frac), extra_ms)),
                 FaultKind::SlowStart { extra_ms } => f.slow = Some((idx(s.at_frac), extra_ms)),
                 FaultKind::Flaky { every } => f.flaky_every = Some(every),
+                FaultKind::Drop => f.drop_at = Some(idx(s.at_frac)),
             }
         }
         f
@@ -259,8 +268,9 @@ fn parse_spec(part: &str) -> anyhow::Result<FaultSpec> {
             let _ = FaultPlan::flaky(every)?;
             (FaultKind::Flaky { every }, 0.0)
         }
+        "drop" => (FaultKind::Drop, frac(param_s)?),
         other => anyhow::bail!(
-            "unknown fault kind '{other}' (known: crash, gray, spike, slow, flaky)"
+            "unknown fault kind '{other}' (known: crash, gray, spike, slow, flaky, drop)"
         ),
     };
     Ok(FaultSpec {
@@ -283,6 +293,7 @@ impl fmt::Display for FaultSpec {
             FaultKind::Spike { extra_ms } => write!(f, "spike:{target}@{pct}%x{extra_ms}"),
             FaultKind::SlowStart { extra_ms } => write!(f, "slow:{target}@{pct}%x{extra_ms}"),
             FaultKind::Flaky { every } => write!(f, "flaky:{target}@{every}"),
+            FaultKind::Drop => write!(f, "drop:{target}@{pct}%"),
         }
     }
 }
@@ -311,7 +322,8 @@ mod tests {
             "spike:w1@25%x40",
             "slow:w4@40%x30",
             "flaky:all@7",
-            "crash:w1@50%,gray:w2@0%,flaky:all@5",
+            "drop:w2@50%",
+            "crash:w1@50%,gray:w2@0%,flaky:all@5,drop:w3@25%",
         ] {
             let p = FaultPlan::parse(s).unwrap();
             let rendered = p.to_string();
@@ -332,6 +344,7 @@ mod tests {
             "spike:w1@10%xnope",
             "flaky:all@1",
             "flaky:all@7%",
+            "drop:w1@7",
         ] {
             assert!(FaultPlan::parse(bad).is_err(), "accepted '{bad}'");
         }
@@ -357,6 +370,14 @@ mod tests {
         assert_eq!(w0.crash_at, None);
         assert_eq!(w0.spike, Some((1, 40.0)));
         assert!(p.targets(0) && p.targets(2));
+
+        let d = FaultPlan::parse("drop:w1@50%").unwrap().for_worker(0, 4);
+        assert_eq!(d.drop_at, Some(2));
+        assert!(FaultPlan::parse("drop:w1@50%")
+            .unwrap()
+            .for_worker(1, 4)
+            .drop_at
+            .is_none());
 
         let f = FaultPlan::flaky(7).unwrap().for_worker(5, 10);
         assert_eq!(f.flaky_every, Some(7));

@@ -59,6 +59,12 @@ pub enum HealthEventKind {
     Closed,
     /// The session dropped with work still pending (reader saw EOF/error).
     Disconnect,
+    /// A reconnect/connect retry slot: attempt `attempt` sleeps
+    /// `delay_ms` before redialing (see `net::reconnect`).
+    Backoff { attempt: u32, delay_ms: f64 },
+    /// A dropped session was resumed: the worker replayed its parked
+    /// unacked results instead of anyone recomputing them.
+    Reconnect,
     /// `rows` coded rows re-queued onto worker `to`.
     Requeue { rows: usize, to: usize },
 }
@@ -72,6 +78,8 @@ impl HealthEvent {
             HealthEventKind::HalfOpen => "half-open",
             HealthEventKind::Closed => "closed",
             HealthEventKind::Disconnect => "disconnect",
+            HealthEventKind::Backoff { .. } => "backoff",
+            HealthEventKind::Reconnect => "reconnect",
             HealthEventKind::Requeue { .. } => "requeue",
         }
     }
@@ -84,6 +92,10 @@ impl HealthEvent {
             HealthEventKind::HalfOpen => "probe".into(),
             HealthEventKind::Closed => "recovered".into(),
             HealthEventKind::Disconnect => "session dropped with pending work".into(),
+            HealthEventKind::Backoff { attempt, delay_ms } => {
+                format!("retry {attempt} in {delay_ms:.0} ms")
+            }
+            HealthEventKind::Reconnect => "session resumed, parked results replayed".into(),
             HealthEventKind::Requeue { rows, to } => format!("{rows} rows -> worker {to}"),
         }
     }
@@ -176,6 +188,29 @@ pub fn churn_from_faults(
                     }
                 }
                 FaultKind::Flaky { .. } => {}
+                // A dropped connection is detected like a crash (the
+                // reader sees the close), but the reconnect layer gets
+                // the session back once the backoff schedule lands:
+                // Leave at detection, Join after the retry window.
+                FaultKind::Drop => {
+                    let detect = t_f + cfg.miss_beats as f64 * beat;
+                    events.push(ChurnEvent {
+                        at_ms: detect,
+                        worker,
+                        action: ChurnAction::Leave,
+                    });
+                    let retry_window: f64 = (0..cfg.reconnect_attempts)
+                        .map(|a| {
+                            (cfg.reconnect_base_ms * 2f64.powi(a.min(52) as i32))
+                                .min(cfg.breaker_backoff_cap_ms)
+                        })
+                        .sum();
+                    events.push(ChurnEvent {
+                        at_ms: detect + retry_window.max(beat),
+                        worker,
+                        action: ChurnAction::Join,
+                    });
+                }
             }
         }
     }

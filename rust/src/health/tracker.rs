@@ -43,6 +43,12 @@ pub struct HealthConfig {
     /// Breaker backoff base / cap (wall ms).
     pub breaker_backoff_ms: f64,
     pub breaker_backoff_cap_ms: f64,
+    /// Reconnect retries after a transport-level failure (connect or
+    /// session resume); `0` disables retrying. See `net::reconnect`.
+    pub reconnect_attempts: u32,
+    /// First reconnect delay (wall ms); subsequent retries double up to
+    /// `breaker_backoff_cap_ms`.
+    pub reconnect_base_ms: f64,
     /// Arm health bookkeeping even with no fault plan (detection on
     /// real fleets). Defaults off so a fault-free run stays on the
     /// exact PR-6 code path (the no-op parity criterion).
@@ -60,6 +66,8 @@ impl Default for HealthConfig {
             spike_beats: 3,
             breaker_backoff_ms: 250.0,
             breaker_backoff_cap_ms: 4000.0,
+            reconnect_attempts: 5,
+            reconnect_base_ms: 100.0,
             armed: false,
         }
     }
@@ -67,12 +75,16 @@ impl Default for HealthConfig {
 
 impl HealthConfig {
     /// Tightened thresholds for loopback tests (fast detection, wall
-    /// clocks in the tens of milliseconds).
+    /// clocks in the tens of milliseconds). The reconnect schedule
+    /// (20, 40, 80, 160, 320, 640 ms ≈ a 1.26 s window) comfortably
+    /// spans a worker-process restart in CI.
     pub fn fast() -> Self {
         Self {
             beat_ms: 10.0,
             miss_beats: 3,
             stall_ms: 60.0,
+            reconnect_attempts: 6,
+            reconnect_base_ms: 20.0,
             ..Self::default()
         }
     }

@@ -161,9 +161,42 @@ pub fn send(w: &mut impl Write, msg: &Message) -> io::Result<()> {
     write_frame(w, &msg.encode())
 }
 
+/// Encode + frame + flush one message, splitting into
+/// [`Message::TaskAssignChunk`] frames when the encoding exceeds
+/// `budget` bytes. The message is encoded once; each chunk copies a
+/// single ≤ budget window, so peak extra memory is one chunk — not a
+/// second full copy of the block. Messages at or under budget go out as
+/// one plain frame (the common case pays nothing).
+pub fn send_chunked(w: &mut impl Write, msg: &Message, budget: usize) -> io::Result<()> {
+    let bytes = msg.encode();
+    let budget = budget.max(1);
+    if bytes.len() <= budget {
+        return write_frame(w, &bytes);
+    }
+    let of = bytes.len().div_ceil(budget) as u32;
+    for (seq, window) in bytes.chunks(budget).enumerate() {
+        let chunk = Message::TaskAssignChunk {
+            seq: seq as u32,
+            of,
+            payload: window.to_vec(),
+        };
+        write_frame(w, &chunk.encode())?;
+    }
+    Ok(())
+}
+
 /// Read + decode one message.
 pub fn recv(r: &mut impl Read) -> Result<Message, WireError> {
     Ok(Message::decode(&read_frame(r)?)?)
+}
+
+/// Read + decode one message, accepting the previous protocol revision
+/// too (worker side of a rolling upgrade); returns the frame's version
+/// byte alongside the message so replies can be rendered in kind.
+pub fn recv_compat(r: &mut impl Read) -> Result<(Message, u8), WireError> {
+    let payload = read_frame(r)?;
+    let version = payload.first().copied().unwrap_or(0);
+    Ok((Message::decode_compat(&payload)?, version))
 }
 
 #[cfg(test)]
@@ -210,6 +243,51 @@ mod tests {
             read_frame(&mut c),
             Err(FrameError::Oversize { .. })
         ));
+    }
+
+    #[test]
+    fn send_chunked_splits_and_reassembles_bit_for_bit() {
+        use super::super::messages::ChunkAssembler;
+        // A block whose encoding far exceeds the 1 KiB budget.
+        let m = Message::TaskAssign {
+            task: 0,
+            coded_start: 0,
+            rows: 16,
+            cols: 64,
+            delay_ms: 1.5,
+            a_block: (0..16 * 64).map(|i| i as f32 * 0.5).collect(),
+            x: (0..64).map(|i| -(i as f32)).collect(),
+        };
+        let budget = 1024;
+        let mut buf = Vec::new();
+        send_chunked(&mut buf, &m, budget).unwrap();
+
+        let mut c = Cursor::new(buf);
+        let mut asm = ChunkAssembler::new();
+        let mut reassembled = None;
+        let mut n_chunks = 0;
+        while reassembled.is_none() {
+            match recv(&mut c).unwrap() {
+                Message::TaskAssignChunk { seq, of, payload } => {
+                    assert!(payload.len() <= budget);
+                    n_chunks += 1;
+                    reassembled = asm.push(seq, of, &payload).unwrap();
+                }
+                other => panic!("expected chunk, got {other:?}"),
+            }
+        }
+        let bytes = reassembled.unwrap();
+        assert_eq!(bytes, m.encode(), "reassembly must be bit-for-bit");
+        assert_eq!(n_chunks, m.encode().len().div_ceil(budget));
+        assert_eq!(Message::decode(&bytes).unwrap(), m);
+        assert!(recv(&mut c).unwrap_err().is_closed());
+
+        // A small message under budget goes out as one plain frame.
+        let small = Message::Cancel { task: 1 };
+        let mut buf = Vec::new();
+        send_chunked(&mut buf, &small, budget).unwrap();
+        let mut c = Cursor::new(buf);
+        assert_eq!(recv(&mut c).unwrap(), small);
     }
 
     #[test]

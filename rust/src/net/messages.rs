@@ -14,15 +14,94 @@
 //! tags, and corrupt length prefixes are errors, never panics, and a
 //! length prefix is validated against the bytes actually present before
 //! anything is allocated (fuzz-tested in `tests/net_socket.rs`).
+//!
+//! ## v2 → v3
+//!
+//! v3 extends `Hello` with a session id (resumable connections) and a
+//! 32-byte auth digest (shared-secret handshake), and adds two
+//! variants: [`Message::Resume`] (re-attach to a disconnected session)
+//! and [`Message::TaskAssignChunk`] (stream one oversized `TaskAssign`
+//! in bounded pieces). [`Message::decode`] is strict v3 — required for
+//! the fuzz invariant that a lucky garbage decode re-encodes to the
+//! bytes it consumed — while the worker-facing [`Message::decode_compat`]
+//! additionally accepts v2 frames for the six v2 tags (a v2 `Hello`
+//! resolves to session 0 / no auth), and [`Message::encode_legacy`]
+//! renders replies a v2 peer can parse.
 
 use crate::coordinator::worker::Outcome;
 
 /// Protocol revision; bumped on any wire-incompatible change.
-/// v2: recurring progress heartbeats (`Heartbeat` carries rows done,
-/// queue depth and last-task latency), a coordinator-chosen beat
-/// cadence in `Hello`, and a `disconnected` flag in `Shutdown` drain
-/// stats so crash and completion are distinguishable.
-pub const PROTOCOL_VERSION: u8 = 2;
+/// v3: `Hello` carries a session id + auth digest, `Resume` re-attaches
+/// a broken connection without recomputing acked rows, and
+/// `TaskAssignChunk` streams blocks near the frame cap in bounded
+/// memory.
+pub const PROTOCOL_VERSION: u8 = 3;
+
+/// The previous revision, still understood by [`Message::decode_compat`]
+/// (v2: progress heartbeats, beat cadence in `Hello`, `disconnected`
+/// drain flag).
+pub const LEGACY_VERSION: u8 = 2;
+
+/// Auth digest width (bytes) carried in `Hello`/`Resume`.
+pub const AUTH_LEN: usize = 32;
+
+/// The "no token configured" digest: all zeros. [`auth_digest`] never
+/// produces it for any token (the lane finalizer maps even the empty
+/// string away from zero), so an unauthenticated peer cannot satisfy an
+/// auth-requiring endpoint by luck or by sending zeros.
+pub const NO_AUTH: [u8; AUTH_LEN] = [0u8; AUTH_LEN];
+
+/// Per-message payload budget for chunked assignment streaming. One
+/// `TaskAssign` whose encoding exceeds this is split into
+/// [`Message::TaskAssignChunk`] frames of at most this many payload
+/// bytes, so peak receive-side memory is one budget-sized piece plus
+/// the growing reassembly buffer — never 2× the block as a single
+/// monolithic frame would momentarily need.
+pub const CHUNK_BUDGET: usize = 4 << 20;
+
+/// Hard cap on a chunked reassembly (bytes): 4× the 64 MiB frame cap.
+/// Chunking exists to carry blocks the single-frame cap cannot, but the
+/// assembler still bounds what a hostile `of` count can make it buffer.
+pub const MAX_ASSEMBLED: usize = 256 << 20;
+
+/// Digest a shared-secret token for the `Hello`/`Resume` auth field:
+/// four independent FNV-1a-64 lanes (distinct basis offsets, mixed
+/// through a 64-bit finalizer) laid out little-endian. Not a
+/// cryptographic MAC — the threat model is accidental cross-talk
+/// between fleets and drive-by port scans, matching the repo's
+/// no-external-dependency rule — but collision-resistant enough that a
+/// wrong token never passes by accident.
+pub fn auth_digest(token: &str) -> [u8; AUTH_LEN] {
+    let mut out = [0u8; AUTH_LEN];
+    for lane in 0u64..4 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325 ^ (lane + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        for &b in token.as_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        // splitmix-style finalizer: decorrelates lanes on short tokens
+        // and maps every input (including "") away from zero.
+        h ^= h >> 33;
+        h = h.wrapping_mul(0xff51_afd7_ed55_8ccd);
+        h ^= h >> 33;
+        h = h.wrapping_mul(0xc4ce_b9fe_1a85_ec53);
+        h ^= h >> 33;
+        let i = lane as usize * 8;
+        out[i..i + 8].copy_from_slice(&h.to_le_bytes());
+    }
+    out
+}
+
+/// Constant-time digest comparison: the OR-fold touches every byte
+/// regardless of where the first mismatch sits, so response timing
+/// leaks nothing about how much of a guessed digest was right.
+pub fn constant_time_eq(a: &[u8; AUTH_LEN], b: &[u8; AUTH_LEN]) -> bool {
+    let mut diff = 0u8;
+    for i in 0..AUTH_LEN {
+        diff |= a[i] ^ b[i];
+    }
+    diff == 0
+}
 
 /// One worker-side task event as carried in [`Message::Shutdown`] — the
 /// wire twin of [`crate::coordinator::worker::TaskEvent`].
@@ -40,25 +119,37 @@ pub struct WireEvent {
 /// Everything that crosses the coordinator ↔ worker wire.
 ///
 /// Lifecycle: coordinator connects and sends `Hello` (answered by a
-/// `Hello` ack), then `n_tasks` × `TaskAssign`, then one `Heartbeat` as
-/// the start barrier. The worker streams `PartialResult`s as deadlines
-/// fire; the coordinator sends `Cancel` the moment a task decodes. When
-/// the worker's queue drains it sends `Shutdown` carrying its drain
-/// stats and event log, and the coordinator answers `Shutdown` to
-/// release the connection.
+/// `Hello` ack), then `n_tasks` × `TaskAssign` (each possibly split
+/// into `TaskAssignChunk` frames), then one `Heartbeat` as the start
+/// barrier. The worker streams `PartialResult`s as deadlines fire; the
+/// coordinator sends `Cancel` the moment a task decodes. When the
+/// worker's queue drains it sends `Shutdown` carrying its drain stats
+/// and event log, and the coordinator answers `Shutdown` to release the
+/// connection. A connection opening with `Resume` instead of `Hello`
+/// re-attaches to a previously disconnected session and replays its
+/// unacked results (see `net::worker`).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Message {
     /// Handshake (both directions). Coordinator → worker it announces
     /// the logical worker id, the task count to expect, the size of the
-    /// cancellation table, the virtual-time scale and the heartbeat
-    /// cadence it wants (`beat_ms ≤ 0` disables recurring beats);
-    /// worker → coordinator it acknowledges (counts zeroed).
+    /// cancellation table, the virtual-time scale, the heartbeat
+    /// cadence it wants (`beat_ms ≤ 0` disables recurring beats), a
+    /// session id (`0` = not resumable) and the auth digest; worker →
+    /// coordinator it acknowledges (counts reused as reply codes on the
+    /// `Resume` path, zeroed otherwise).
     Hello {
         wid: u32,
         n_tasks: u32,
         n_cancel_slots: u32,
         time_scale: f64,
         beat_ms: f64,
+        /// Nonzero marks the connection resumable: the worker keeps
+        /// computing across a disconnect and parks unsent results under
+        /// this id for a later [`Message::Resume`].
+        session: u64,
+        /// [`auth_digest`] of the shared token; [`NO_AUTH`] when no
+        /// token is configured.
+        auth: [u8; AUTH_LEN],
     },
     /// One coded row-block assignment (the wire twin of
     /// [`crate::coordinator::worker::SubTask`]).
@@ -111,6 +202,26 @@ pub enum Message {
         disconnected: bool,
         events: Vec<WireEvent>,
     },
+    /// Re-attach to a disconnected session (coordinator → worker, v3
+    /// only, sent INSTEAD of `Hello` as a connection's first frame).
+    /// The worker answers with a `Hello` whose `n_cancel_slots` is a
+    /// reply code — see `net::worker::{RESUME_MISS, RESUME_PARKED,
+    /// RESUME_RUNNING}` — then, on a hit, replays every parked
+    /// `PartialResult` past `last_acked_row` and closes with its
+    /// `Shutdown` drain stats.
+    Resume {
+        session_id: u64,
+        /// Coded rows the coordinator had absorbed from this session
+        /// before it broke; replay skips results entirely below this
+        /// watermark (the worker never recomputes acked rows).
+        last_acked_row: u64,
+        auth: [u8; AUTH_LEN],
+    },
+    /// One bounded piece of an oversized `TaskAssign` encoding (v3
+    /// only). `seq` ∈ `0..of` strictly in order (TCP preserves order —
+    /// any gap, duplicate or reorder is a protocol violation, rejected
+    /// typed); the concatenated payloads decode as one `TaskAssign`.
+    TaskAssignChunk { seq: u32, of: u32, payload: Vec<u8> },
 }
 
 /// Message-level decode failure. Every variant is reachable from a
@@ -137,6 +248,15 @@ pub enum CodecError {
     Oversize { elems: usize, have: usize },
     /// Bytes left over after a complete message.
     Trailing { extra: usize },
+    /// The peer's auth digest does not match the configured token.
+    AuthFailed,
+    /// A chunk arrived out of order (`want` was expected next).
+    ChunkSequence { got: u32, want: u32 },
+    /// A chunk's `of` count is zero or disagrees with the reassembly
+    /// in progress.
+    ChunkCount { got: u32, want: u32 },
+    /// Reassembled size would exceed [`MAX_ASSEMBLED`].
+    ChunkOversize { total: usize, cap: usize },
 }
 
 impl std::fmt::Display for CodecError {
@@ -162,6 +282,16 @@ impl std::fmt::Display for CodecError {
             CodecError::Trailing { extra } => {
                 write!(f, "{extra} trailing bytes after message")
             }
+            CodecError::AuthFailed => write!(f, "authentication failed (wrong or missing token)"),
+            CodecError::ChunkSequence { got, want } => {
+                write!(f, "chunk seq {got} arrived, expected {want}")
+            }
+            CodecError::ChunkCount { got, want } => {
+                write!(f, "chunk count {got} disagrees with {want}")
+            }
+            CodecError::ChunkOversize { total, cap } => {
+                write!(f, "reassembled chunk size {total} exceeds cap {cap}")
+            }
         }
     }
 }
@@ -174,6 +304,8 @@ const TAG_PARTIAL_RESULT: u8 = 2;
 const TAG_CANCEL: u8 = 3;
 const TAG_HEARTBEAT: u8 = 4;
 const TAG_SHUTDOWN: u8 = 5;
+const TAG_RESUME: u8 = 6;
+const TAG_TASK_ASSIGN_CHUNK: u8 = 7;
 
 /// Bytes per encoded [`WireEvent`]: worker + task + rows (u32) +
 /// deadline + compute wall (f64) + outcome (u8).
@@ -198,19 +330,19 @@ fn outcome_from_u8(b: u8) -> Result<Outcome, CodecError> {
 
 // ---- encoding -----------------------------------------------------------
 
-struct Enc(Vec<u8>);
+pub(crate) struct Enc(pub(crate) Vec<u8>);
 
 impl Enc {
-    fn u8(&mut self, v: u8) {
+    pub(crate) fn u8(&mut self, v: u8) {
         self.0.push(v);
     }
-    fn u32(&mut self, v: u32) {
+    pub(crate) fn u32(&mut self, v: u32) {
         self.0.extend_from_slice(&v.to_le_bytes());
     }
-    fn u64(&mut self, v: u64) {
+    pub(crate) fn u64(&mut self, v: u64) {
         self.0.extend_from_slice(&v.to_le_bytes());
     }
-    fn f64(&mut self, v: f64) {
+    pub(crate) fn f64(&mut self, v: f64) {
         self.0.extend_from_slice(&v.to_le_bytes());
     }
     fn f32s(&mut self, xs: &[f32]) {
@@ -218,6 +350,13 @@ impl Enc {
         for &x in xs {
             self.0.extend_from_slice(&x.to_le_bytes());
         }
+    }
+    fn bytes(&mut self, xs: &[u8]) {
+        self.u32(xs.len() as u32);
+        self.0.extend_from_slice(xs);
+    }
+    fn raw(&mut self, xs: &[u8]) {
+        self.0.extend_from_slice(xs);
     }
     fn events(&mut self, evs: &[WireEvent]) {
         self.u32(evs.len() as u32);
@@ -303,6 +442,13 @@ impl<'a> Dec<'a> {
         Ok(out)
     }
 
+    fn bytes(&mut self) -> Result<Vec<u8>, CodecError> {
+        let n = self.len_prefix(1)?;
+        let out = self.buf[self.pos..self.pos + n].to_vec();
+        self.pos += n;
+        Ok(out)
+    }
+
     fn events(&mut self) -> Result<Vec<WireEvent>, CodecError> {
         let n = self.len_prefix(EVENT_BYTES)?;
         let mut out = Vec::with_capacity(n);
@@ -330,10 +476,32 @@ impl<'a> Dec<'a> {
 }
 
 impl Message {
-    /// Serialize to the version-tagged binary layout.
+    /// Serialize to the version-tagged binary layout (current protocol).
     pub fn encode(&self) -> Vec<u8> {
         let mut e = Enc(Vec::with_capacity(16));
         e.u8(PROTOCOL_VERSION);
+        self.encode_body(&mut e, false);
+        e.0
+    }
+
+    /// Serialize for a v2 peer: the version byte is [`LEGACY_VERSION`]
+    /// and `Hello` omits the v3 session/auth tail. `None` for the two
+    /// v3-only variants (`Resume`, `TaskAssignChunk`) — a v2 peer has
+    /// no parse for them, so callers must not send them.
+    pub fn encode_legacy(&self) -> Option<Vec<u8>> {
+        if matches!(
+            self,
+            Message::Resume { .. } | Message::TaskAssignChunk { .. }
+        ) {
+            return None;
+        }
+        let mut e = Enc(Vec::with_capacity(16));
+        e.u8(LEGACY_VERSION);
+        self.encode_body(&mut e, true);
+        Some(e.0)
+    }
+
+    fn encode_body(&self, e: &mut Enc, legacy: bool) {
         match self {
             Message::Hello {
                 wid,
@@ -341,6 +509,8 @@ impl Message {
                 n_cancel_slots,
                 time_scale,
                 beat_ms,
+                session,
+                auth,
             } => {
                 e.u8(TAG_HELLO);
                 e.u32(*wid);
@@ -348,6 +518,10 @@ impl Message {
                 e.u32(*n_cancel_slots);
                 e.f64(*time_scale);
                 e.f64(*beat_ms);
+                if !legacy {
+                    e.u64(*session);
+                    e.raw(auth);
+                }
             }
             Message::TaskAssign {
                 task,
@@ -411,15 +585,45 @@ impl Message {
                 e.u8(u8::from(*disconnected));
                 e.events(events);
             }
+            Message::Resume {
+                session_id,
+                last_acked_row,
+                auth,
+            } => {
+                e.u8(TAG_RESUME);
+                e.u64(*session_id);
+                e.u64(*last_acked_row);
+                e.raw(auth);
+            }
+            Message::TaskAssignChunk { seq, of, payload } => {
+                e.u8(TAG_TASK_ASSIGN_CHUNK);
+                e.u32(*seq);
+                e.u32(*of);
+                e.bytes(payload);
+            }
         }
-        e.0
     }
 
-    /// Decode one message; total over arbitrary byte slices.
+    /// Decode one message; total over arbitrary byte slices. Strict
+    /// current-version only — peers a revision behind go through
+    /// [`Message::decode_compat`] on the worker side.
     pub fn decode(buf: &[u8]) -> Result<Message, CodecError> {
+        Self::decode_with(buf, false)
+    }
+
+    /// Decode accepting [`LEGACY_VERSION`] frames too (v2 carries only
+    /// the six original tags; its `Hello` resolves to `session: 0`,
+    /// `auth: NO_AUTH`). Used by the worker so one fleet can mix
+    /// coordinator revisions during a rolling upgrade.
+    pub fn decode_compat(buf: &[u8]) -> Result<Message, CodecError> {
+        Self::decode_with(buf, true)
+    }
+
+    fn decode_with(buf: &[u8], allow_legacy: bool) -> Result<Message, CodecError> {
         let mut d = Dec { buf, pos: 0 };
         let version = d.u8()?;
-        if version != PROTOCOL_VERSION {
+        let legacy = version == LEGACY_VERSION && allow_legacy;
+        if version != PROTOCOL_VERSION && !legacy {
             return Err(CodecError::BadVersion {
                 got: version,
                 want: PROTOCOL_VERSION,
@@ -433,6 +637,8 @@ impl Message {
                 n_cancel_slots: d.u32()?,
                 time_scale: d.f64()?,
                 beat_ms: d.f64()?,
+                session: if legacy { 0 } else { d.u64()? },
+                auth: if legacy { NO_AUTH } else { d.take::<AUTH_LEN>()? },
             },
             TAG_TASK_ASSIGN => Message::TaskAssign {
                 task: d.u32()?,
@@ -464,10 +670,97 @@ impl Message {
                 disconnected: d.flag()?,
                 events: d.events()?,
             },
+            // v3-only tags: a v2 frame carrying them is malformed.
+            TAG_RESUME if !legacy => Message::Resume {
+                session_id: d.u64()?,
+                last_acked_row: d.u64()?,
+                auth: d.take::<AUTH_LEN>()?,
+            },
+            TAG_TASK_ASSIGN_CHUNK if !legacy => Message::TaskAssignChunk {
+                seq: d.u32()?,
+                of: d.u32()?,
+                payload: d.bytes()?,
+            },
             other => return Err(CodecError::BadTag(other)),
         };
         d.finish()?;
         Ok(msg)
+    }
+}
+
+/// Reassembles a chunked `TaskAssign` from its in-order
+/// [`Message::TaskAssignChunk`] pieces. TCP delivers frames in send
+/// order, so the assembler is strict: the only accepted `seq` is the
+/// next expected one — a duplicate, gap or reorder is a typed protocol
+/// error, and any error resets the assembly (the connection is about to
+/// be torn down anyway). [`ChunkAssembler::push`] returns the
+/// concatenated payload when the final piece lands; the caller decodes
+/// it as a complete message and must reject anything but `TaskAssign`
+/// (no recursive chunking).
+#[derive(Debug, Default)]
+pub struct ChunkAssembler {
+    buf: Vec<u8>,
+    next: u32,
+    of: u32,
+}
+
+impl ChunkAssembler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A reassembly has started and is incomplete.
+    pub fn in_progress(&self) -> bool {
+        self.of != 0
+    }
+
+    fn reset(&mut self) {
+        self.buf = Vec::new();
+        self.next = 0;
+        self.of = 0;
+    }
+
+    /// Feed one chunk. `Ok(Some(bytes))` when this piece completed the
+    /// message; `Ok(None)` when more pieces are expected.
+    pub fn push(
+        &mut self,
+        seq: u32,
+        of: u32,
+        payload: &[u8],
+    ) -> Result<Option<Vec<u8>>, CodecError> {
+        if of == 0 {
+            self.reset();
+            return Err(CodecError::ChunkCount { got: 0, want: 1 });
+        }
+        if self.of == 0 {
+            self.of = of;
+        } else if of != self.of {
+            let want = self.of;
+            self.reset();
+            return Err(CodecError::ChunkCount { got: of, want });
+        }
+        if seq != self.next {
+            let want = self.next;
+            self.reset();
+            return Err(CodecError::ChunkSequence { got: seq, want });
+        }
+        if self.buf.len().saturating_add(payload.len()) > MAX_ASSEMBLED {
+            let total = self.buf.len().saturating_add(payload.len());
+            self.reset();
+            return Err(CodecError::ChunkOversize {
+                total,
+                cap: MAX_ASSEMBLED,
+            });
+        }
+        self.buf.extend_from_slice(payload);
+        self.next += 1;
+        if self.next == self.of {
+            let out = std::mem::take(&mut self.buf);
+            self.reset();
+            Ok(Some(out))
+        } else {
+            Ok(None)
+        }
     }
 }
 
@@ -483,6 +776,8 @@ mod tests {
                 n_cancel_slots: 2,
                 time_scale: 1e-4,
                 beat_ms: 25.0,
+                session: 0xdead_beef_0042,
+                auth: auth_digest("sesame"),
             },
             Message::TaskAssign {
                 task: 1,
@@ -531,6 +826,16 @@ mod tests {
                     },
                 ],
             },
+            Message::Resume {
+                session_id: 777,
+                last_acked_row: 96,
+                auth: NO_AUTH,
+            },
+            Message::TaskAssignChunk {
+                seq: 2,
+                of: 5,
+                payload: vec![1, 2, 3, 4, 5],
+            },
         ]
     }
 
@@ -571,6 +876,17 @@ mod tests {
                 want: PROTOCOL_VERSION
             })
         );
+        // Strict decode rejects even the supported legacy revision …
+        bytes[0] = LEGACY_VERSION;
+        assert!(matches!(
+            Message::decode(&bytes),
+            Err(CodecError::BadVersion { got: LEGACY_VERSION, .. })
+        ));
+        // … while compat decode accepts it (Cancel's layout is shared).
+        assert_eq!(
+            Message::decode_compat(&bytes).unwrap(),
+            Message::Cancel { task: 1 }
+        );
     }
 
     #[test]
@@ -579,7 +895,13 @@ mod tests {
             Message::decode(&[PROTOCOL_VERSION, 200]),
             Err(CodecError::BadTag(200))
         );
-        let mut bytes = (Message::Heartbeat { nonce: 7 }).encode();
+        let mut bytes = (Message::Heartbeat {
+            nonce: 7,
+            rows_done: 0,
+            queue_depth: 0,
+            last_latency_ms: 0.0,
+        })
+        .encode();
         bytes.push(0);
         assert_eq!(Message::decode(&bytes), Err(CodecError::Trailing { extra: 1 }));
     }
@@ -618,5 +940,123 @@ mod tests {
             Message::decode(&e.0),
             Err(CodecError::Oversize { elems: 1_000_000_000, .. })
         ));
+    }
+
+    #[test]
+    fn legacy_hello_decodes_without_session_or_auth() {
+        // A v2 Hello, byte-built the way a v2 build would: no session,
+        // no auth tail.
+        let mut e = Enc(Vec::new());
+        e.u8(LEGACY_VERSION);
+        e.u8(TAG_HELLO);
+        e.u32(4); // wid
+        e.u32(9); // n_tasks
+        e.u32(2); // n_cancel_slots
+        e.f64(1e-4);
+        e.f64(25.0);
+        let m = Message::decode_compat(&e.0).unwrap();
+        assert_eq!(
+            m,
+            Message::Hello {
+                wid: 4,
+                n_tasks: 9,
+                n_cancel_slots: 2,
+                time_scale: 1e-4,
+                beat_ms: 25.0,
+                session: 0,
+                auth: NO_AUTH,
+            }
+        );
+        // And the legacy re-encode reproduces the v2 bytes exactly.
+        assert_eq!(m.encode_legacy().unwrap(), e.0);
+        // Strict decode refuses the v2 frame.
+        assert!(matches!(
+            Message::decode(&e.0),
+            Err(CodecError::BadVersion { got: LEGACY_VERSION, .. })
+        ));
+    }
+
+    #[test]
+    fn v3_only_tags_are_rejected_on_legacy_frames() {
+        for msg in [
+            Message::Resume {
+                session_id: 1,
+                last_acked_row: 0,
+                auth: NO_AUTH,
+            },
+            Message::TaskAssignChunk {
+                seq: 0,
+                of: 1,
+                payload: vec![0],
+            },
+        ] {
+            assert_eq!(msg.encode_legacy(), None, "{msg:?}");
+            let mut bytes = msg.encode();
+            bytes[0] = LEGACY_VERSION;
+            assert!(
+                matches!(Message::decode_compat(&bytes), Err(CodecError::BadTag(_))),
+                "{msg:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn auth_digest_is_stable_and_token_sensitive() {
+        let a = auth_digest("sesame");
+        assert_eq!(a, auth_digest("sesame"), "digest must be deterministic");
+        assert_ne!(a, auth_digest("sesame "), "whitespace must matter");
+        assert_ne!(a, auth_digest("Sesame"), "case must matter");
+        // No token ever digests to the all-zero NO_AUTH sentinel.
+        assert_ne!(auth_digest(""), NO_AUTH);
+        assert!(constant_time_eq(&a, &auth_digest("sesame")));
+        assert!(!constant_time_eq(&a, &NO_AUTH));
+    }
+
+    #[test]
+    fn chunk_assembler_reassembles_in_order() {
+        let payload: Vec<u8> = (0..=255u8).cycle().take(1000).collect();
+        let mut asm = ChunkAssembler::new();
+        let pieces: Vec<&[u8]> = payload.chunks(300).collect();
+        let of = pieces.len() as u32;
+        let mut out = None;
+        for (i, p) in pieces.iter().enumerate() {
+            assert!(!matches!(out, Some(_)));
+            out = asm.push(i as u32, of, p).unwrap();
+        }
+        assert_eq!(out.unwrap(), payload);
+        assert!(!asm.in_progress(), "assembler must reset after completion");
+    }
+
+    #[test]
+    fn chunk_assembler_rejects_gaps_duplicates_and_bad_counts() {
+        // Gap: seq 1 first.
+        let mut asm = ChunkAssembler::new();
+        assert_eq!(
+            asm.push(1, 3, b"x"),
+            Err(CodecError::ChunkSequence { got: 1, want: 0 })
+        );
+        // Duplicate: 0 then 0 again.
+        let mut asm = ChunkAssembler::new();
+        asm.push(0, 3, b"x").unwrap();
+        assert_eq!(
+            asm.push(0, 3, b"y"),
+            Err(CodecError::ChunkSequence { got: 0, want: 1 })
+        );
+        // `of` flips mid-assembly.
+        let mut asm = ChunkAssembler::new();
+        asm.push(0, 3, b"x").unwrap();
+        assert_eq!(
+            asm.push(1, 4, b"y"),
+            Err(CodecError::ChunkCount { got: 4, want: 3 })
+        );
+        // Zero count.
+        let mut asm = ChunkAssembler::new();
+        assert_eq!(
+            asm.push(0, 0, b"x"),
+            Err(CodecError::ChunkCount { got: 0, want: 1 })
+        );
+        // Every error resets: a fresh, correct assembly then succeeds.
+        assert!(!asm.in_progress());
+        assert_eq!(asm.push(0, 1, b"ok").unwrap().unwrap(), b"ok");
     }
 }

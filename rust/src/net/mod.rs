@@ -14,9 +14,12 @@
 //! - [`messages`] — the one shared [`messages::Message`] enum
 //!   (Hello / TaskAssign / PartialResult / Cancel / Heartbeat /
 //!   Shutdown) with a version-tagged binary codec;
+//! - [`reconnect`] — retry policy: transient-vs-fatal error
+//!   classification and capped exponential backoff with deterministic,
+//!   seeded jitter (no `SystemTime` in the decision path);
 //! - [`worker`] — [`crate::coordinator::worker::run_worker`] behind a
 //!   listener: [`worker::WorkerServer`] is the `coded-coop worker`
-//!   process;
+//!   process; resumable sessions park unacked results for replay;
 //! - [`transport`] — the coordinator-side seam: [`Transport`] on
 //!   `RunOptions`/`StreamOptions` selects in-process channels or TCP
 //!   per run; both paths feed the same collectors, so results and
@@ -25,6 +28,7 @@
 
 pub mod frame;
 pub mod messages;
+pub mod reconnect;
 pub mod transport;
 pub mod worker;
 

@@ -1,0 +1,280 @@
+//! Reconnection policy: transient-vs-fatal error classification and a
+//! capped exponential backoff schedule with deterministic jitter.
+//!
+//! The schedule is a pure function of `(policy, attempt)` — the jitter
+//! comes from the policy's seeded [`crate::util::Rng`], never from
+//! `SystemTime`, so a given (seed, attempt) pair always yields the same
+//! delay and the property tests below can pin the schedule exactly.
+//! Wall clocks enter only at the `thread::sleep` in
+//! [`connect_with_retry`], outside the decision path.
+//!
+//! Classification answers one question: is this error the kind a
+//! healthy-but-slow peer produces (refused while the listener is still
+//! binding, reset by a restarting process, a timeout under load) or the
+//! kind no amount of retrying fixes (address parse failure, permission
+//! denied)? Transient errors buy a backoff slot; fatal ones surface
+//! immediately.
+
+use std::io;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::health::HealthConfig;
+use crate::util::Rng;
+
+/// Whether an I/O failure is worth retrying.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorClass {
+    /// Peer-side or load-induced: refused / reset / aborted / timed
+    /// out / interrupted. Retry with backoff.
+    Transient,
+    /// Configuration or environment: never self-heals. Fail now.
+    Fatal,
+}
+
+/// Classify an I/O error for retry purposes.
+pub fn classify(err: &io::Error) -> ErrorClass {
+    use io::ErrorKind::*;
+    match err.kind() {
+        ConnectionRefused | ConnectionReset | ConnectionAborted | TimedOut | Interrupted
+        | WouldBlock | BrokenPipe | UnexpectedEof | NotConnected | AddrInUse => {
+            ErrorClass::Transient
+        }
+        _ => ErrorClass::Fatal,
+    }
+}
+
+/// Capped exponential backoff with deterministic, seed-derived jitter.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// First retry delay (wall ms); attempt `a` waits ~`base · 2^a`.
+    pub base_ms: f64,
+    /// Pre-jitter ceiling on any single delay (wall ms).
+    pub cap_ms: f64,
+    /// Retries after the initial attempt; `0` disables retrying.
+    pub max_attempts: u32,
+    /// Jitter width as a fraction of the delay: the jittered delay is
+    /// uniform in `d · [1 − j/2, 1 + j/2]`. Keeps a restarting fleet
+    /// from reconnecting in lockstep while staying fully deterministic
+    /// for a fixed seed.
+    pub jitter_frac: f64,
+    /// Jitter stream seed; mix in a session id so concurrent sessions
+    /// de-synchronize.
+    pub seed: u64,
+}
+
+impl RetryPolicy {
+    /// Derive the policy from the run's health knobs: reconnect base /
+    /// attempt budget come from the tracker config, the cap is shared
+    /// with the breaker (one notion of "worst-case wait" per run).
+    pub fn from_health(health: &HealthConfig, session: u64) -> Self {
+        Self {
+            base_ms: health.reconnect_base_ms.max(1.0),
+            cap_ms: health.breaker_backoff_cap_ms.max(health.reconnect_base_ms),
+            max_attempts: health.reconnect_attempts,
+            jitter_frac: 0.25,
+            seed: 0x5EED_0000_0000_0000 ^ session,
+        }
+    }
+
+    /// The pre-jitter delay for retry `attempt` (0-based): monotone
+    /// doubling from `base_ms`, saturating at `cap_ms`.
+    pub fn raw_delay_ms(&self, attempt: u32) -> f64 {
+        let exp = 2f64.powi(attempt.min(52) as i32);
+        (self.base_ms * exp).min(self.cap_ms)
+    }
+
+    /// The jittered delay for retry `attempt`. Deterministic: the
+    /// jitter draw comes from an RNG seeded by `(seed, attempt)` alone.
+    pub fn delay_ms(&self, attempt: u32) -> f64 {
+        let d = self.raw_delay_ms(attempt);
+        let j = self.jitter_frac.clamp(0.0, 1.0);
+        if j == 0.0 {
+            return d;
+        }
+        let u = Rng::new(self.seed ^ (attempt as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)).f64();
+        d * (1.0 - j / 2.0 + j * u)
+    }
+}
+
+static NEXT_SESSION: AtomicU64 = AtomicU64::new(1);
+
+/// Allocate a process-unique, nonzero session id: the process id in the
+/// high word, a monotone counter in the low. Session 0 is reserved on
+/// the wire for "not resumable".
+pub fn next_session_id() -> u64 {
+    let n = NEXT_SESSION.fetch_add(1, Ordering::Relaxed);
+    ((std::process::id() as u64) << 32) | (n & 0xffff_ffff)
+}
+
+/// Connect with the retry policy: the first attempt is immediate; each
+/// transient failure schedules one backoff slot (reported through
+/// `on_backoff(attempt, delay_ms)` before the sleep, so callers can log
+/// a health event) up to `max_attempts` retries. Fatal errors and an
+/// exhausted budget return the last error.
+pub fn connect_with_retry(
+    addr: &str,
+    policy: &RetryPolicy,
+    on_backoff: &mut dyn FnMut(u32, f64),
+) -> io::Result<TcpStream> {
+    let mut attempt = 0u32;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if classify(&e) == ErrorClass::Fatal || attempt >= policy.max_attempts {
+                    return Err(e);
+                }
+                let delay = policy.delay_ms(attempt);
+                on_backoff(attempt, delay);
+                std::thread::sleep(Duration::from_micros((delay * 1000.0) as u64));
+                attempt += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Config, Gen};
+
+    fn random_policy(g: &mut Gen) -> RetryPolicy {
+        RetryPolicy {
+            base_ms: g.f64_range(1.0, 500.0),
+            cap_ms: g.f64_range(500.0, 10_000.0),
+            max_attempts: g.usize_range(0, 12) as u32,
+            jitter_frac: g.f64_range(0.0, 1.0),
+            seed: g.rng().next_u64(),
+        }
+    }
+
+    #[test]
+    fn prop_backoff_schedule_is_monotone_and_capped() {
+        check(
+            Config::default().cases(200),
+            "raw schedule doubles monotonically up to the cap",
+            |g| {
+                let p = random_policy(g);
+                let mut prev = 0.0;
+                for a in 0..16u32 {
+                    let d = p.raw_delay_ms(a);
+                    assert!(d >= prev, "attempt {a}: {d} < previous {prev} ({p:?})");
+                    assert!(d <= p.cap_ms, "attempt {a}: {d} above cap ({p:?})");
+                    assert!(d > 0.0, "attempt {a}: non-positive delay ({p:?})");
+                    prev = d;
+                }
+                // High attempts saturate exactly at the cap (base ≥ 1,
+                // so 2^52 · base is astronomically past any cap here).
+                assert_eq!(p.raw_delay_ms(60), p.cap_ms);
+            },
+        );
+    }
+
+    #[test]
+    fn prop_jitter_is_bounded_and_deterministic() {
+        check(
+            Config::default().cases(200),
+            "jittered delay ∈ d·[1−j/2, 1+j/2] and repeats per (seed, attempt)",
+            |g| {
+                let p = random_policy(g);
+                for a in 0..12u32 {
+                    let raw = p.raw_delay_ms(a);
+                    let d = p.delay_ms(a);
+                    let j = p.jitter_frac;
+                    let (lo, hi) = (raw * (1.0 - j / 2.0), raw * (1.0 + j / 2.0));
+                    assert!(
+                        d >= lo - 1e-9 && d <= hi + 1e-9,
+                        "attempt {a}: {d} outside [{lo}, {hi}] ({p:?})"
+                    );
+                    // Pure in (policy, attempt): same call, same answer.
+                    assert_eq!(d.to_bits(), p.delay_ms(a).to_bits());
+                }
+                // A different seed perturbs at least one slot when the
+                // jitter band is non-degenerate.
+                if p.jitter_frac > 0.05 {
+                    let q = RetryPolicy { seed: p.seed ^ 1, ..p };
+                    assert!(
+                        (0..12).any(|a| q.delay_ms(a).to_bits() != p.delay_ms(a).to_bits()),
+                        "jitter ignored the seed entirely ({p:?})"
+                    );
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn classification_splits_transient_from_fatal() {
+        use std::io::{Error, ErrorKind};
+        for kind in [
+            ErrorKind::ConnectionRefused,
+            ErrorKind::ConnectionReset,
+            ErrorKind::ConnectionAborted,
+            ErrorKind::TimedOut,
+            ErrorKind::Interrupted,
+            ErrorKind::BrokenPipe,
+            ErrorKind::UnexpectedEof,
+        ] {
+            assert_eq!(classify(&Error::from(kind)), ErrorClass::Transient, "{kind:?}");
+        }
+        for kind in [
+            ErrorKind::PermissionDenied,
+            ErrorKind::InvalidInput,
+            ErrorKind::NotFound,
+            ErrorKind::Unsupported,
+        ] {
+            assert_eq!(classify(&Error::from(kind)), ErrorClass::Fatal, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn session_ids_are_unique_and_nonzero() {
+        let a = next_session_id();
+        let b = next_session_id();
+        assert_ne!(a, 0);
+        assert_ne!(b, 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn connect_with_retry_gives_up_on_fatal_addresses() {
+        // An unparseable address is fatal: no backoff slots burned.
+        let policy = RetryPolicy {
+            base_ms: 1.0,
+            cap_ms: 2.0,
+            max_attempts: 5,
+            jitter_frac: 0.0,
+            seed: 1,
+        };
+        let mut backoffs = 0;
+        let err = connect_with_retry("not-an-address", &policy, &mut |_, _| backoffs += 1)
+            .expect_err("must fail");
+        assert_eq!(classify(&err), ErrorClass::Fatal);
+        assert_eq!(backoffs, 0, "fatal errors must not consume retry slots");
+    }
+
+    #[test]
+    fn connect_with_retry_exhausts_transient_budget() {
+        // Bind-then-drop leaves a port that refuses connections:
+        // transient, so every retry slot is consumed before giving up.
+        let addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let policy = RetryPolicy {
+            base_ms: 0.1,
+            cap_ms: 0.2,
+            max_attempts: 3,
+            jitter_frac: 0.0,
+            seed: 1,
+        };
+        let mut slots = Vec::new();
+        let err = connect_with_retry(&addr, &policy, &mut |a, d| slots.push((a, d)))
+            .expect_err("nothing is listening");
+        assert_eq!(classify(&err), ErrorClass::Transient);
+        assert_eq!(slots.len(), 3, "all retry slots consumed: {slots:?}");
+        assert_eq!(slots[0].0, 0);
+        assert_eq!(slots[2].0, 2);
+    }
+}

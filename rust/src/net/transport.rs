@@ -16,7 +16,21 @@
 //! so fewer processes than queues is fine); with no addresses the
 //! coordinator auto-spawns one loopback `coded-coop worker --listen
 //! 127.0.0.1:0 --once` process per queue and discovers the OS-assigned
-//! ports from their `LISTENING <addr>` announcements.
+//! ports from their `LISTENING <addr>` announcements (bounded wait —
+//! a child that dies or hangs before announcing is a typed error
+//! carrying its stderr tail, never a coordinator wedge).
+//!
+//! ## Multi-host hardening
+//!
+//! Every connect (initial, re-queue) goes through
+//! [`super::reconnect::connect_with_retry`]: a refused connection while
+//! a remote worker is still binding its listener is a backoff slot, not
+//! a failed run. When [`TcpOptions::auth`] carries a shared token its
+//! digest rides in every `Hello`/`Resume`; workers started with the
+//! same token drop unauthenticated peers at the first frame. Coded
+//! row-blocks whose encoding exceeds [`CHUNK_BUDGET`] stream as
+//! `TaskAssignChunk` frames so no single frame approaches the 64 MiB
+//! cap.
 //!
 //! ## Health & recovery (armed only)
 //!
@@ -27,14 +41,22 @@
 //! crashes (reader error / `disconnected` drain) or goes sick (missed
 //! beats, deadline stall, latency-spike streak) has its still-pending
 //! sub-tasks re-queued onto breaker-allowed surviving workers over
-//! fresh connections. Re-queued arrivals are deduplicated by
+//! fresh connections. Armed explicit-address sessions are additionally
+//! *resumable*: they carry a nonzero session id, and on a disconnect
+//! the coordinator first walks the reconnect backoff schedule sending
+//! `Resume{session_id, last_acked_row}` — a worker that parked the
+//! dropped session's results replays them (minus the acked prefix)
+//! instead of anyone recomputing; only a resume miss falls back to
+//! re-queue, and only an empty candidate set falls back to redundancy.
+//! Re-queued or replayed arrivals are deduplicated by
 //! `(master, coded_start)` — the MDS decode must never see the same
 //! coded row twice. With no fault plan and `armed` off, every piece of
 //! this bookkeeping is skipped and the dispatch path is byte-for-byte
-//! the pre-health one (beats are disabled via `Hello.beat_ms = 0`).
+//! the pre-health one (beats are disabled via `Hello.beat_ms = 0`,
+//! sessions are not resumable).
 
 use std::collections::HashSet;
-use std::io::{BufRead, BufReader, BufWriter, Read};
+use std::io::{self, BufRead, BufReader, BufWriter, Read};
 use std::net::TcpStream;
 use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
@@ -43,8 +65,9 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::frame;
-use super::messages::Message;
-use super::worker::event_from_wire;
+use super::messages::{auth_digest, Message, AUTH_LEN, CHUNK_BUDGET, NO_AUTH};
+use super::reconnect::{self, ErrorClass, RetryPolicy};
+use super::worker::{event_from_wire, RESUME_PARKED, RESUME_RUNNING};
 use crate::coordinator::worker::{SubTask, TaskEvent, WorkerResult};
 use crate::coordinator::TaskCollector;
 use crate::health::{
@@ -65,9 +88,9 @@ pub enum Transport {
 
 impl Transport {
     /// TCP transport to explicit worker endpoints (empty = auto-spawn
-    /// loopback worker processes).
+    /// loopback worker processes), no shared-secret auth.
     pub fn tcp(addrs: Vec<String>) -> Self {
-        Transport::Tcp(TcpOptions { addrs })
+        Transport::Tcp(TcpOptions { addrs, auth: None })
     }
 }
 
@@ -77,10 +100,22 @@ pub struct TcpOptions {
     /// Worker endpoints (`host:port`), round-robined over the live
     /// queues. Empty: auto-spawn one loopback worker process per queue.
     pub addrs: Vec<String>,
+    /// Shared-secret token: its digest is carried in every `Hello` /
+    /// `Resume`, and auto-spawned workers inherit it via the
+    /// `CODED_COOP_AUTH` environment (never argv — `ps` must not leak
+    /// it). `None` sends the all-zero "no auth" digest.
+    pub auth: Option<String>,
 }
 
 /// Coordinator-side connection writer (cancel broadcast + final ack).
 type ConnWriter = Arc<Mutex<BufWriter<TcpStream>>>;
+
+/// Longest we wait for a spawned worker's `LISTENING <addr>` announce
+/// before declaring it wedged.
+const ANNOUNCE_WAIT: Duration = Duration::from_secs(10);
+
+/// Stderr lines retained per spawned worker for error reports.
+const STDERR_TAIL_LINES: usize = 40;
 
 /// An auto-spawned loopback worker process; killed on drop unless the
 /// run reaped it cleanly.
@@ -88,6 +123,24 @@ struct SpawnedWorker {
     child: Child,
     addr: String,
     reaped: bool,
+    /// Rolling tail of the child's stderr (a forwarder thread also
+    /// echoes every line to our own stderr as it arrives).
+    stderr_tail: Arc<Mutex<Vec<String>>>,
+}
+
+/// Snapshot the stderr tail for an error message, after a short pause
+/// so the forwarder thread can flush the child's last words.
+fn drain_stderr_tail(tail: &Arc<Mutex<Vec<String>>>) -> String {
+    std::thread::sleep(Duration::from_millis(50));
+    let text = tail
+        .lock()
+        .map(|t| t.join("\n"))
+        .unwrap_or_default();
+    if text.is_empty() {
+        "<no stderr output>".to_string()
+    } else {
+        text
+    }
 }
 
 impl SpawnedWorker {
@@ -96,8 +149,9 @@ impl SpawnedWorker {
         self.reaped = true;
         anyhow::ensure!(
             status.success(),
-            "spawned worker at {} exited with {status}",
-            self.addr
+            "spawned worker at {} exited with {status}; stderr tail:\n{}",
+            self.addr,
+            drain_stderr_tail(&self.stderr_tail)
         );
         Ok(())
     }
@@ -116,8 +170,17 @@ impl Drop for SpawnedWorker {
 /// connection closes) and discover its OS-assigned port. `fault`
 /// forwards an injection plan as `--fault <plan>` (recovery respawns
 /// pass `None` — a replacement worker must not inherit the fault that
-/// killed its predecessor).
-fn spawn_loopback_worker(fault: Option<&FaultPlan>) -> anyhow::Result<SpawnedWorker> {
+/// killed its predecessor); `auth` forwards the shared token through
+/// the environment.
+///
+/// The announce read is bounded: it happens on a helper thread with a
+/// [`ANNOUNCE_WAIT`] timeout, so a child that dies (or hangs) before
+/// printing `LISTENING <addr>` yields a typed error carrying its exit
+/// status and stderr tail instead of blocking the coordinator forever.
+fn spawn_loopback_worker(
+    fault: Option<&FaultPlan>,
+    auth: Option<&str>,
+) -> anyhow::Result<SpawnedWorker> {
     // Tests and wrappers can point at a prebuilt CLI; by default the
     // worker is this very binary re-entered as `coded-coop worker`.
     let exe = match std::env::var_os("CODED_COOP_WORKER_BIN") {
@@ -131,25 +194,91 @@ fn spawn_loopback_worker(fault: Option<&FaultPlan>) -> anyhow::Result<SpawnedWor
         .arg("--once")
         .stdin(Stdio::null())
         .stdout(Stdio::piped())
-        .stderr(Stdio::inherit());
+        .stderr(Stdio::piped());
     if let Some(plan) = fault {
         cmd.arg("--fault").arg(plan.to_string());
+    }
+    if let Some(token) = auth {
+        cmd.env("CODED_COOP_AUTH", token);
     }
     let mut child = cmd
         .spawn()
         .map_err(|e| anyhow::anyhow!("spawning worker process {exe:?}: {e}"))?;
+    let pid = child.id();
+
+    let stderr = child
+        .stderr
+        .take()
+        .ok_or_else(|| anyhow::anyhow!("spawned worker has no stderr"))?;
+    let stderr_tail: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    {
+        let tail = Arc::clone(&stderr_tail);
+        std::thread::Builder::new()
+            .name(format!("worker-stderr-{pid}"))
+            .spawn(move || {
+                for line in BufReader::new(stderr).lines() {
+                    let Ok(line) = line else { break };
+                    eprintln!("worker[{pid}] {line}");
+                    let mut t = tail.lock().expect("stderr tail lock poisoned");
+                    if t.len() >= STDERR_TAIL_LINES {
+                        t.remove(0);
+                    }
+                    t.push(line);
+                }
+            })?;
+    }
+
     let stdout = child
         .stdout
         .take()
         .ok_or_else(|| anyhow::anyhow!("spawned worker has no stdout"))?;
-    let mut line = String::new();
-    BufReader::new(stdout).read_line(&mut line)?;
-    let addr = line
+    let (announce_tx, announce_rx) = channel::<io::Result<String>>();
+    std::thread::Builder::new()
+        .name(format!("worker-announce-{pid}"))
+        .spawn(move || {
+            let mut line = String::new();
+            let res = BufReader::new(stdout).read_line(&mut line).map(|_| line);
+            let _ = announce_tx.send(res);
+        })?;
+    let announced = match announce_rx.recv_timeout(ANNOUNCE_WAIT) {
+        Ok(Ok(line)) => line,
+        Ok(Err(e)) => {
+            let _ = child.kill();
+            let _ = child.wait();
+            anyhow::bail!(
+                "reading announce from worker pid {pid}: {e}; stderr tail:\n{}",
+                drain_stderr_tail(&stderr_tail)
+            );
+        }
+        Err(_) => {
+            let _ = child.kill();
+            let _ = child.wait();
+            anyhow::bail!(
+                "worker pid {pid} printed no 'LISTENING <addr>' within {ANNOUNCE_WAIT:?}; \
+                 stderr tail:\n{}",
+                drain_stderr_tail(&stderr_tail)
+            );
+        }
+    };
+    if announced.is_empty() {
+        // EOF before any line: the child closed stdout — almost always
+        // because it died on startup (bad flag, bind failure, panic).
+        let _ = child.kill();
+        let status = child
+            .wait()
+            .map(|s| s.to_string())
+            .unwrap_or_else(|e| e.to_string());
+        anyhow::bail!(
+            "worker pid {pid} died before announcing its port ({status}); stderr tail:\n{}",
+            drain_stderr_tail(&stderr_tail)
+        );
+    }
+    let addr = announced
         .trim()
         .strip_prefix("LISTENING ")
         .ok_or_else(|| {
             anyhow::anyhow!(
-                "worker process announced {line:?} instead of 'LISTENING <addr>' \
+                "worker process announced {announced:?} instead of 'LISTENING <addr>' \
                  (is {exe:?} a coded-coop binary?)"
             )
         })?
@@ -158,6 +287,7 @@ fn spawn_loopback_worker(fault: Option<&FaultPlan>) -> anyhow::Result<SpawnedWor
         child,
         addr,
         reaped: false,
+        stderr_tail,
     })
 }
 
@@ -188,7 +318,7 @@ enum Pulse {
 /// `Shutdown` delivers its drain stats. A vanished worker yields a
 /// `disconnected` drain with zero stats — its undelivered rows behave
 /// like stragglers that never return, which the MDS redundancy may
-/// still absorb (or, armed, the health layer re-queues).
+/// still absorb (or, armed, the health layer resumes or re-queues).
 fn reader_loop<R: Read>(mut reader: R, tx: Sender<Pulse>, sid: usize, wid: usize, addr: String) {
     loop {
         match frame::recv(&mut reader) {
@@ -244,7 +374,7 @@ fn reader_loop<R: Read>(mut reader: R, tx: Sender<Pulse>, sid: usize, wid: usize
             Err(e) => {
                 eprintln!(
                     "coordinator: worker {wid} at {addr} dropped mid-run: {e} \
-                     (its remaining rows are lost; redundancy or re-queue may still decode)"
+                     (its remaining rows are lost; resume, re-queue or redundancy may still decode)"
                 );
                 let _ = tx.send(Pulse::Drained {
                     sid,
@@ -273,6 +403,15 @@ struct Session {
     /// The coordinator decided this session is sick and sent it a
     /// mid-run `Shutdown`; don't route cancels/re-queues to it.
     sick: bool,
+    /// Wire session id (`0` = not resumable). Nonzero only for armed
+    /// explicit-address sessions — auto-spawned `--once` workers die
+    /// with their connection, so there is nothing to resume.
+    session: u64,
+    /// Rows received from this session so far: the resume watermark.
+    /// The wire is FIFO, so the received results are a prefix of what
+    /// the worker published — `Resume{last_acked_row}` tells it how
+    /// much of its parked replay to skip.
+    acked_rows: u64,
 }
 
 fn clone_task(t: &SubTask) -> SubTask {
@@ -287,7 +426,25 @@ fn clone_task(t: &SubTask) -> SubTask {
     }
 }
 
-/// Open one worker connection: connect, handshake, stream the queue,
+/// Per-run dispatch parameters shared by every connection attempt.
+struct DispatchCtx<'a> {
+    n_cancel_slots: usize,
+    time_scale: f64,
+    beat_ms: f64,
+    /// Auth digest carried in every `Hello` / `Resume` ([`NO_AUTH`]
+    /// when no token is configured).
+    auth: [u8; AUTH_LEN],
+    /// The raw token, forwarded to auto-spawned workers via env.
+    auth_token: Option<&'a str>,
+    auto_spawn: bool,
+    armed: bool,
+    health: &'a HealthConfig,
+}
+
+/// Open one worker connection: connect (through the retry policy — a
+/// transient refusal while a remote listener is still binding buys a
+/// backoff slot, reported via `on_backoff`), handshake, stream the
+/// queue (chunking any block whose encoding exceeds [`CHUNK_BUDGET`]),
 /// release the start barrier if `barrier` (initial sessions barrier
 /// together after ALL connect; recovery sessions start immediately),
 /// and spawn its reader thread.
@@ -299,14 +456,17 @@ fn open_session(
     wid: usize,
     addr: &str,
     tasks: Vec<SubTask>,
-    n_cancel_slots: usize,
-    time_scale: f64,
-    beat_ms: f64,
+    session: u64,
+    ctx: &DispatchCtx,
     track_pending: bool,
     barrier: bool,
+    on_backoff: &mut dyn FnMut(u32, f64),
 ) -> anyhow::Result<usize> {
     let sid = sessions.len();
-    let stream = TcpStream::connect(addr)
+    // Mix the worker id into the jitter seed so same-policy sessions
+    // (session 0 everywhere when disarmed) still de-synchronize.
+    let policy = RetryPolicy::from_health(ctx.health, session.wrapping_add(wid as u64));
+    let stream = reconnect::connect_with_retry(addr, &policy, on_backoff)
         .map_err(|e| anyhow::anyhow!("connecting worker {wid} at {addr}: {e}"))?;
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
@@ -316,9 +476,11 @@ fn open_session(
         &Message::Hello {
             wid: wid as u32,
             n_tasks: tasks.len() as u32,
-            n_cancel_slots: n_cancel_slots as u32,
-            time_scale,
-            beat_ms,
+            n_cancel_slots: ctx.n_cancel_slots as u32,
+            time_scale: ctx.time_scale,
+            beat_ms: ctx.beat_ms,
+            session,
+            auth: ctx.auth,
         },
     )?;
     match frame::recv(&mut reader) {
@@ -326,7 +488,7 @@ fn open_session(
         Ok(other) => anyhow::bail!("worker {wid} at {addr}: expected Hello ack, got {other:?}"),
         Err(e) => anyhow::bail!(
             "worker {wid} at {addr}: handshake failed: {e} \
-             (protocol version mismatch closes the connection)"
+             (a protocol version mismatch or auth rejection closes the connection)"
         ),
     }
     // Armed dispatch clones the queue (the re-queue source on failure);
@@ -338,7 +500,7 @@ fn open_session(
         Vec::new()
     };
     for t in tasks {
-        frame::send(
+        frame::send_chunked(
             &mut writer,
             &Message::TaskAssign {
                 task: t.master as u32,
@@ -349,6 +511,7 @@ fn open_session(
                 a_block: t.a_block,
                 x: t.x.as_ref().clone(),
             },
+            CHUNK_BUDGET,
         )?;
     }
     if barrier {
@@ -369,6 +532,8 @@ fn open_session(
         pending,
         open: true,
         sick: false,
+        session,
+        acked_rows: 0,
     });
     Ok(sid)
 }
@@ -420,11 +585,21 @@ pub(crate) fn dispatch_tcp(
     }
 
     // ---- endpoints ------------------------------------------------------
-    let mut spawned: Vec<SpawnedWorker> = Vec::new();
     let auto_spawn = opts.addrs.is_empty();
+    let ctx = DispatchCtx {
+        n_cancel_slots: collectors.len(),
+        time_scale,
+        beat_ms,
+        auth: opts.auth.as_deref().map(auth_digest).unwrap_or(NO_AUTH),
+        auth_token: opts.auth.as_deref(),
+        auto_spawn,
+        armed,
+        health,
+    };
+    let mut spawned: Vec<SpawnedWorker> = Vec::new();
     let addrs: Vec<String> = if auto_spawn {
         for _ in 0..live.len() {
-            spawned.push(spawn_loopback_worker(fault)?);
+            spawned.push(spawn_loopback_worker(fault, ctx.auth_token)?);
         }
         spawned.iter().map(|w| w.addr.clone()).collect()
     } else {
@@ -440,6 +615,14 @@ pub(crate) fn dispatch_tcp(
     let mut sessions: Vec<Session> = Vec::with_capacity(live.len());
     let mut joins: Vec<std::thread::JoinHandle<()>> = Vec::with_capacity(live.len());
     for ((wid, tasks), addr) in live.into_iter().zip(&addrs) {
+        // Auto-spawned `--once` workers die with their connection —
+        // nothing to resume — so only explicit-address armed sessions
+        // get a (nonzero) resumable session id.
+        let session = if armed && !auto_spawn {
+            reconnect::next_session_id()
+        } else {
+            0
+        };
         open_session(
             &mut sessions,
             &mut joins,
@@ -447,11 +630,19 @@ pub(crate) fn dispatch_tcp(
             wid,
             addr,
             tasks,
-            collectors.len(),
-            time_scale,
-            beat_ms,
+            session,
+            &ctx,
             armed,
             false,
+            &mut |attempt, delay_ms| {
+                if armed {
+                    health_events.push(HealthEvent {
+                        at_ms: t_start.elapsed().as_secs_f64() * 1e3,
+                        worker: wid,
+                        kind: HealthEventKind::Backoff { attempt, delay_ms },
+                    });
+                }
+            },
         )?;
     }
 
@@ -543,13 +734,10 @@ pub(crate) fn dispatch_tcp(
                     &mut joins,
                     &res_tx,
                     &mut spawned,
-                    auto_spawn,
                     &mut breakers,
                     &tracker,
                     &done,
-                    collectors.len(),
-                    time_scale,
-                    beat_ms,
+                    &ctx,
                     &mut health_events,
                     &mut open_count,
                 )?;
@@ -558,8 +746,12 @@ pub(crate) fn dispatch_tcp(
         match res_rx.recv_timeout(tick) {
             Ok(Pulse::Result(sid, r)) => {
                 if armed {
+                    // Advance the resume watermark for every row this
+                    // session delivered, duplicates included — the
+                    // watermark counts receipt, not decoder use.
+                    sessions[sid].acked_rows += r.rows as u64;
                     if !seen.insert((r.master, r.coded_start)) {
-                        continue; // duplicate from a re-queue race
+                        continue; // duplicate from a re-queue/replay race
                     }
                     sessions[sid]
                         .pending
@@ -641,23 +833,40 @@ pub(crate) fn dispatch_tcp(
                                 backoff_ms: breakers[wid].backoff_ms(),
                             },
                         });
-                        requeue(
-                            sid,
-                            now_ms,
-                            &mut sessions,
-                            &mut joins,
-                            &res_tx,
-                            &mut spawned,
-                            auto_spawn,
-                            &mut breakers,
-                            &tracker,
-                            &done,
-                            collectors.len(),
-                            time_scale,
-                            beat_ms,
-                            &mut health_events,
-                            &mut open_count,
-                        )?;
+                        // Resumable sessions first try to reattach: a
+                        // worker that parked the dropped session's
+                        // results replays them instead of the fleet
+                        // recomputing. Only a miss falls back to
+                        // re-queue.
+                        let resumed = sessions[sid].session != 0
+                            && try_resume(
+                                sid,
+                                &mut sessions,
+                                &mut joins,
+                                &res_tx,
+                                &mut breakers,
+                                &mut tracker,
+                                &ctx,
+                                &t_start,
+                                &mut health_events,
+                                &mut open_count,
+                            )?;
+                        if !resumed {
+                            requeue(
+                                sid,
+                                now_ms,
+                                &mut sessions,
+                                &mut joins,
+                                &res_tx,
+                                &mut spawned,
+                                &mut breakers,
+                                &tracker,
+                                &done,
+                                &ctx,
+                                &mut health_events,
+                                &mut open_count,
+                            )?;
+                        }
                     }
                 }
             }
@@ -697,6 +906,147 @@ pub(crate) fn dispatch_tcp(
     ))
 }
 
+/// One `Resume` probe: connect, ask, classify the worker's reply.
+enum ResumeReply {
+    /// The worker parked this session — the returned connection will
+    /// replay its results (minus the acked prefix) and drain.
+    Parked(BufReader<TcpStream>, BufWriter<TcpStream>),
+    /// The worker is still computing the dropped session's queue; ask
+    /// again after a backoff slot.
+    Running,
+    /// The worker has no memory of this session (restart, eviction,
+    /// crash) — fall back to re-queue.
+    Miss,
+}
+
+fn resume_once(
+    addr: &str,
+    session_id: u64,
+    last_acked_row: u64,
+    auth: [u8; AUTH_LEN],
+) -> Result<ResumeReply, ErrorClass> {
+    let stream = TcpStream::connect(addr).map_err(|e| reconnect::classify(&e))?;
+    stream.set_nodelay(true).ok();
+    let Ok(clone) = stream.try_clone() else {
+        return Err(ErrorClass::Transient);
+    };
+    let mut reader = BufReader::new(clone);
+    let mut writer = BufWriter::new(stream);
+    if frame::send(
+        &mut writer,
+        &Message::Resume {
+            session_id,
+            last_acked_row,
+            auth,
+        },
+    )
+    .is_err()
+    {
+        return Err(ErrorClass::Transient);
+    }
+    match frame::recv(&mut reader) {
+        Ok(Message::Hello { n_cancel_slots, .. }) => match n_cancel_slots {
+            RESUME_PARKED => Ok(ResumeReply::Parked(reader, writer)),
+            RESUME_RUNNING => Ok(ResumeReply::Running),
+            _ => Ok(ResumeReply::Miss),
+        },
+        Ok(_) => Ok(ResumeReply::Miss),
+        // A closed stream here is a peer mid-restart (or an auth
+        // rejection — which re-queue's fresh handshake will surface as
+        // a hard error): retryable.
+        Err(frame::WireError::Frame(_)) => Err(ErrorClass::Transient),
+        // Codec garbage never self-heals.
+        Err(frame::WireError::Codec(_)) => Err(ErrorClass::Fatal),
+    }
+}
+
+/// Walk the reconnect backoff schedule trying to resume a disconnected
+/// session in place: each probe either attaches a replay connection
+/// (success — the dropped session's pending rows stay with it and the
+/// worker's parked results flow in, deduplicated as usual), learns the
+/// worker is still computing (wait a slot, ask again), or misses
+/// (return `false` — the caller re-queues). Every slot is logged as a
+/// `Backoff` health event; a successful attach logs `Reconnect` and
+/// closes the worker's breaker.
+#[allow(clippy::too_many_arguments)]
+fn try_resume(
+    sid: usize,
+    sessions: &mut Vec<Session>,
+    joins: &mut Vec<std::thread::JoinHandle<()>>,
+    tx: &Sender<Pulse>,
+    breakers: &mut [CircuitBreaker],
+    tracker: &mut HealthTracker,
+    ctx: &DispatchCtx,
+    t_start: &Instant,
+    health_events: &mut Vec<HealthEvent>,
+    open_count: &mut usize,
+) -> anyhow::Result<bool> {
+    let session_id = sessions[sid].session;
+    let wid = sessions[sid].wid;
+    let addr = sessions[sid].addr.clone();
+    let acked = sessions[sid].acked_rows;
+    let policy = RetryPolicy::from_health(ctx.health, session_id);
+    let mut attempt = 0u32;
+    loop {
+        match resume_once(&addr, session_id, acked, ctx.auth) {
+            Ok(ResumeReply::Parked(reader, writer)) => {
+                let now_ms = t_start.elapsed().as_secs_f64() * 1e3;
+                let new_sid = sessions.len();
+                let tx2 = tx.clone();
+                let reader_addr = addr.clone();
+                joins.push(
+                    std::thread::Builder::new()
+                        .name(format!("net-reader-{wid}-{new_sid}"))
+                        .spawn(move || reader_loop(reader, tx2, new_sid, wid, reader_addr))?,
+                );
+                // The replay session inherits the dropped session's
+                // pending rows and watermark — results retire them
+                // exactly as if the original connection had lived.
+                let pending = std::mem::take(&mut sessions[sid].pending);
+                sessions.push(Session {
+                    wid,
+                    addr,
+                    writer: Arc::new(Mutex::new(writer)),
+                    pending,
+                    open: true,
+                    sick: false,
+                    session: session_id,
+                    acked_rows: acked,
+                });
+                *open_count += 1;
+                tracker.on_connect(new_sid, now_ms);
+                breakers[wid].on_success();
+                health_events.push(HealthEvent {
+                    at_ms: now_ms,
+                    worker: wid,
+                    kind: HealthEventKind::Reconnect,
+                });
+                health_events.push(HealthEvent {
+                    at_ms: now_ms,
+                    worker: wid,
+                    kind: HealthEventKind::Closed,
+                });
+                return Ok(true);
+            }
+            Ok(ResumeReply::Miss) => return Ok(false),
+            Ok(ResumeReply::Running) | Err(ErrorClass::Transient) => {
+                if attempt >= policy.max_attempts {
+                    return Ok(false);
+                }
+                let delay_ms = policy.delay_ms(attempt);
+                health_events.push(HealthEvent {
+                    at_ms: t_start.elapsed().as_secs_f64() * 1e3,
+                    worker: wid,
+                    kind: HealthEventKind::Backoff { attempt, delay_ms },
+                });
+                std::thread::sleep(Duration::from_micros((delay_ms * 1000.0) as u64));
+                attempt += 1;
+            }
+            Err(ErrorClass::Fatal) => return Ok(false),
+        }
+    }
+}
+
 /// Move a failed session's still-pending sub-tasks onto the surviving
 /// fleet: round-robin over breaker-allowed open sessions' worker ids
 /// (least reported queue depth first), one fresh connection per target
@@ -713,13 +1063,10 @@ fn requeue(
     joins: &mut Vec<std::thread::JoinHandle<()>>,
     tx: &Sender<Pulse>,
     spawned: &mut Vec<SpawnedWorker>,
-    auto_spawn: bool,
     breakers: &mut [CircuitBreaker],
     tracker: &HealthTracker,
     done: &[bool],
-    n_cancel_slots: usize,
-    time_scale: f64,
-    beat_ms: f64,
+    ctx: &DispatchCtx,
     health_events: &mut Vec<HealthEvent>,
     open_count: &mut usize,
 ) -> anyhow::Result<()> {
@@ -769,15 +1116,35 @@ fn requeue(
             continue;
         }
         let rows: usize = chunk.iter().map(|t| t.rows).sum();
-        let endpoint = if auto_spawn {
-            spawned.push(spawn_loopback_worker(None)?);
+        let endpoint = if ctx.auto_spawn {
+            spawned.push(spawn_loopback_worker(None, ctx.auth_token)?);
             spawned.last().unwrap().addr.clone()
         } else {
             addr
         };
+        let session = if ctx.armed && !ctx.auto_spawn {
+            reconnect::next_session_id()
+        } else {
+            0
+        };
         open_session(
-            sessions, joins, tx, wid, &endpoint, chunk, n_cancel_slots, time_scale, beat_ms,
-            true, true,
+            sessions,
+            joins,
+            tx,
+            wid,
+            &endpoint,
+            chunk,
+            session,
+            ctx,
+            true,
+            true,
+            &mut |attempt, delay_ms| {
+                health_events.push(HealthEvent {
+                    at_ms: now_ms,
+                    worker: wid,
+                    kind: HealthEventKind::Backoff { attempt, delay_ms },
+                });
+            },
         )?;
         *open_count += 1;
         health_events.push(HealthEvent {

@@ -6,31 +6,58 @@
 //! logical workers when the coordinator round-robins its queues over
 //! fewer addresses. Per connection the lifecycle is:
 //!
-//! 1. `Hello` handshake (version-checked by decode) announcing the
-//!    logical worker id, task count, cancel-table size and time scale;
-//! 2. `n_tasks` × `TaskAssign`, buffered locally;
+//! 1. `Hello` handshake (version-checked by decode; the worker also
+//!    accepts the previous protocol revision) announcing the logical
+//!    worker id, task count, cancel-table size, time scale, session id
+//!    and auth digest. The auth gate runs BEFORE any peer-sized
+//!    allocation: a wrong token costs one constant-time compare and the
+//!    connection is dropped without a reply. A connection may instead
+//!    open with `Resume` to re-attach to a parked session (below).
+//! 2. `n_tasks` × `TaskAssign`, buffered locally — each possibly
+//!    streamed as `TaskAssignChunk` frames and reassembled here;
 //! 3. one `Heartbeat` — the start barrier: the coordinator sends it
 //!    only after EVERY worker has its full queue, so clocks start
 //!    (nearly) together and wall-clock arrival order matches the
 //!    thread-mode runtime;
 //! 4. the unchanged [`run_worker`] loop executes on this thread while a
 //!    control thread keeps reading the socket — `Cancel` flips the
-//!    per-task flags mid-run, `Heartbeat` echoes, `Shutdown` (or the
-//!    peer vanishing) cancels everything outstanding so the worker
-//!    drains instead of computing for a dead coordinator;
+//!    per-task flags mid-run, `Heartbeat` echoes, `Shutdown` cancels
+//!    everything outstanding. On a NON-resumable session (`session ==
+//!    0`) the peer vanishing also cancels everything, so the worker
+//!    never computes for a dead coordinator; on a resumable session it
+//!    keeps computing and parks results instead (below);
 //! 5. a final `Shutdown` carries the drain stats + per-sub-task event
 //!    log back, and the coordinator's closing `Shutdown` releases the
 //!    connection.
+//!
+//! ## Resumable sessions
+//!
+//! A nonzero `Hello.session` registers the run in a process-global
+//! parked-run registry. Every published `PartialResult` is also logged
+//! there (results sitting in a dead socket's buffers are otherwise
+//! unrecoverable), and a disconnect no longer cancels the queue — the
+//! worker finishes and parks the drain stats. A later connection
+//! opening with `Resume{session_id, last_acked_row}` gets a `Hello`
+//! reply whose `n_cancel_slots` is a reply code ([`RESUME_MISS`] /
+//! [`RESUME_PARKED`] / [`RESUME_RUNNING`]); on a hit the worker replays
+//! the parked results past the coordinator's acked-row watermark — no
+//! row is ever recomputed — and closes with the parked `Shutdown`
+//! stats. The registry holds at most [`MAX_PARKED`] sessions (oldest
+//! evicted) and an injected crash erases its entry, because a real
+//! process death loses parked state too.
 
 use std::io::{self, BufReader, BufWriter, Read, Write};
 use std::net::{Shutdown as SockShutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::channel;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use super::frame;
-use super::messages::{Message, WireEvent};
+use super::messages::{
+    auth_digest, constant_time_eq, ChunkAssembler, CodecError, Message, WireEvent,
+    LEGACY_VERSION, NO_AUTH,
+};
 use crate::coordinator::worker::{run_worker, SubTask, TaskEvent};
 use crate::coordinator::Backend;
 use crate::health::FaultPlan;
@@ -49,6 +76,9 @@ pub struct WorkerConfig {
     /// time (`crash:w3@50%` only fires on the connection that Hello'd
     /// as wid 2).
     pub fault: Option<FaultPlan>,
+    /// Shared-secret token; when set, every `Hello`/`Resume` must carry
+    /// its digest or the connection is dropped before any allocation.
+    pub auth: Option<String>,
 }
 
 impl Default for WorkerConfig {
@@ -57,15 +87,106 @@ impl Default for WorkerConfig {
             backend: Backend::Native,
             once: false,
             fault: None,
+            auth: None,
         }
     }
 }
+
+/// `Resume` reply codes, carried in the answering `Hello`'s
+/// `n_cancel_slots` field.
+///
+/// Unknown session: the parked state is gone (evicted, crashed, or a
+/// different process) — the coordinator falls back to re-queueing.
+pub const RESUME_MISS: u32 = 0;
+/// Hit: parked results + drain stats follow on this connection.
+pub const RESUME_PARKED: u32 = 1;
+/// The session is still computing; retry after a backoff slot.
+pub const RESUME_RUNNING: u32 = 2;
 
 /// Why the control loop exited (shared with the conn thread so the
 /// closing drain stats can tell crash from completion).
 const CTL_RUNNING: u8 = 0;
 const CTL_RELEASED: u8 = 1; // coordinator sent Shutdown
 const CTL_DISCONNECTED: u8 = 2; // peer vanished / stream error
+
+/// Parked-run registry capacity; beyond it the oldest session is
+/// evicted (its coordinator re-queues on resume miss, which is always
+/// correct, just slower).
+pub const MAX_PARKED: usize = 64;
+
+/// State a resumable session leaves behind for a `Resume` replay.
+struct ParkedRun {
+    wid: usize,
+    /// Still computing: a `Resume` now gets [`RESUME_RUNNING`].
+    in_progress: bool,
+    /// Every `PartialResult` published (or attempted) on the session,
+    /// in publish order. Replay skips the coordinator's acked prefix.
+    results: Vec<Message>,
+    computed: u64,
+    skipped: u64,
+    events: Vec<WireEvent>,
+}
+
+fn registry() -> &'static Mutex<Vec<(u64, ParkedRun)>> {
+    static REG: OnceLock<Mutex<Vec<(u64, ParkedRun)>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn registry_insert(session: u64, wid: usize) {
+    let mut reg = registry().lock().expect("parked-run registry poisoned");
+    reg.retain(|(id, _)| *id != session);
+    if reg.len() >= MAX_PARKED {
+        reg.remove(0);
+    }
+    reg.push((
+        session,
+        ParkedRun {
+            wid,
+            in_progress: true,
+            results: Vec::new(),
+            computed: 0,
+            skipped: 0,
+            events: Vec::new(),
+        },
+    ));
+}
+
+fn registry_park(session: u64, msg: Message) {
+    let mut reg = registry().lock().expect("parked-run registry poisoned");
+    if let Some((_, p)) = reg.iter_mut().find(|(id, _)| *id == session) {
+        p.results.push(msg);
+    }
+}
+
+fn registry_finish(session: u64, computed: u64, skipped: u64, events: Vec<WireEvent>) {
+    let mut reg = registry().lock().expect("parked-run registry poisoned");
+    if let Some((_, p)) = reg.iter_mut().find(|(id, _)| *id == session) {
+        p.in_progress = false;
+        p.computed = computed;
+        p.skipped = skipped;
+        p.events = events;
+    }
+}
+
+fn registry_remove(session: u64) {
+    let mut reg = registry().lock().expect("parked-run registry poisoned");
+    reg.retain(|(id, _)| *id != session);
+}
+
+enum ResumeLookup {
+    Miss,
+    Running,
+    Parked(ParkedRun),
+}
+
+fn registry_resume(session: u64) -> ResumeLookup {
+    let mut reg = registry().lock().expect("parked-run registry poisoned");
+    match reg.iter().position(|(id, _)| *id == session) {
+        None => ResumeLookup::Miss,
+        Some(i) if reg[i].1.in_progress => ResumeLookup::Running,
+        Some(i) => ResumeLookup::Parked(reg.remove(i).1),
+    }
+}
 
 /// Progress counters the beat thread samples, updated by the result
 /// pump. `last_latency_bits` holds an `f64` (wall ms between
@@ -111,16 +232,17 @@ impl WorkerServer {
         }
         if cfg.once {
             let (stream, _) = self.listener.accept()?;
-            return handle_conn(stream, cfg.backend.clone(), cfg.fault.clone());
+            return handle_conn(stream, cfg.backend.clone(), cfg.fault.clone(), cfg.auth.clone());
         }
         loop {
             let (stream, peer) = self.listener.accept()?;
             let backend = cfg.backend.clone();
             let fault = cfg.fault.clone();
+            let auth = cfg.auth.clone();
             std::thread::Builder::new()
                 .name(format!("net-worker-{peer}"))
                 .spawn(move || {
-                    if let Err(e) = handle_conn(stream, backend, fault) {
+                    if let Err(e) = handle_conn(stream, backend, fault, auth) {
                         eprintln!("worker: connection {peer}: {e}");
                     }
                 })?;
@@ -136,34 +258,121 @@ fn send(w: &SharedWriter, msg: &Message) -> io::Result<()> {
     frame::send(&mut *g, msg)
 }
 
+/// Send rendering the frame in the peer's protocol revision.
+fn send_as(w: &SharedWriter, msg: &Message, legacy: bool) -> io::Result<()> {
+    let bytes = if legacy {
+        msg.encode_legacy().ok_or_else(|| {
+            io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "message has no legacy encoding",
+            )
+        })?
+    } else {
+        msg.encode()
+    };
+    let mut g = w.lock().expect("writer lock poisoned");
+    frame::write_frame(&mut *g, &bytes)
+}
+
+/// Validate + buffer one assignment (direct or reassembled from chunks).
+#[allow(clippy::too_many_arguments)]
+fn accept_assign(
+    tasks: &mut Vec<SubTask>,
+    n_tasks: usize,
+    n_cancel_slots: usize,
+    task: u32,
+    coded_start: u32,
+    rows: u32,
+    cols: u32,
+    delay_ms: f64,
+    a_block: Vec<f32>,
+    x: Vec<f32>,
+) -> anyhow::Result<()> {
+    let (rows, cols) = (rows as usize, cols as usize);
+    anyhow::ensure!(
+        a_block.len() == rows * cols && x.len() == cols,
+        "TaskAssign shape mismatch: {}×{} block with {} + {} elements",
+        rows,
+        cols,
+        a_block.len(),
+        x.len(),
+    );
+    anyhow::ensure!(
+        (task as usize) < n_cancel_slots,
+        "TaskAssign task id {task} outside the {n_cancel_slots}-slot cancel table"
+    );
+    anyhow::ensure!(
+        tasks.len() < n_tasks,
+        "more TaskAssign frames than the announced {n_tasks}"
+    );
+    tasks.push(SubTask {
+        master: task as usize,
+        coded_start: coded_start as usize,
+        rows,
+        cols,
+        a_block,
+        x: Arc::new(x),
+        delay_ms,
+    });
+    Ok(())
+}
+
 /// Serve one coordinator connection end-to-end (blocking).
 pub fn handle_conn(
     stream: TcpStream,
     backend: Backend,
     fault: Option<FaultPlan>,
+    auth: Option<String>,
 ) -> anyhow::Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let writer: SharedWriter = Arc::new(Mutex::new(BufWriter::new(stream)));
+    let required = auth.as_deref().map(auth_digest);
 
-    // ---- 1. handshake ---------------------------------------------------
-    let (wid, n_tasks, n_cancel_slots, time_scale, beat_ms) = match frame::recv(&mut reader)
-    {
-        Ok(Message::Hello {
+    // ---- 1. handshake: Hello or Resume ----------------------------------
+    let (first, peer_version) = match frame::recv_compat(&mut reader) {
+        Ok(p) => p,
+        Err(e) => anyhow::bail!("handshake failed: {e}"),
+    };
+    let legacy = peer_version == LEGACY_VERSION;
+    // The auth gate sits BEFORE any peer-sized allocation: a wrong or
+    // missing token (a v2 peer has none) costs one constant-time
+    // compare and the connection drops without revealing anything.
+    if let Some(req) = &required {
+        let presented = match &first {
+            Message::Hello { auth, .. } | Message::Resume { auth, .. } => auth,
+            other => anyhow::bail!("expected Hello or Resume, got {other:?}"),
+        };
+        if !constant_time_eq(req, presented) {
+            if let Ok(g) = writer.lock() {
+                let _ = g.get_ref().shutdown(SockShutdown::Both);
+            }
+            return Err(anyhow::Error::new(CodecError::AuthFailed));
+        }
+    }
+    let (wid, n_tasks, n_cancel_slots, time_scale, beat_ms, session) = match first {
+        Message::Hello {
             wid,
             n_tasks,
             n_cancel_slots,
             time_scale,
             beat_ms,
-        }) => (
+            session,
+            ..
+        } => (
             wid as usize,
             n_tasks as usize,
             n_cancel_slots as usize,
             time_scale,
             beat_ms,
+            session,
         ),
-        Ok(other) => anyhow::bail!("expected Hello, got {other:?}"),
-        Err(e) => anyhow::bail!("handshake failed: {e}"),
+        Message::Resume {
+            session_id,
+            last_acked_row,
+            ..
+        } => return serve_resume(reader, writer, session_id, last_acked_row),
+        other => anyhow::bail!("expected Hello or Resume, got {other:?}"),
     };
     anyhow::ensure!(
         time_scale.is_finite() && time_scale >= 0.0,
@@ -173,7 +382,7 @@ pub fn handle_conn(
         beat_ms.is_finite(),
         "Hello carried invalid beat_ms {beat_ms}"
     );
-    send(
+    send_as(
         &writer,
         &Message::Hello {
             wid: wid as u32,
@@ -181,20 +390,39 @@ pub fn handle_conn(
             n_cancel_slots: 0,
             time_scale,
             beat_ms,
+            session,
+            auth: NO_AUTH,
         },
+        legacy,
     )?;
-    let faults = fault
+    let mut faults = fault
         .as_ref()
         .map(|p| p.for_worker(wid, n_tasks))
         .unwrap_or_default();
+    // A connection drop is injected here at the socket layer, not in
+    // run_worker (which would treat it as a crash).
+    let drop_at = faults.drop_at.take();
+    // Resumable sessions only exist on the current protocol: a legacy
+    // coordinator cannot send Resume, so a nonzero id from one (there
+    // is no wire field; this is belt and braces) is ignored.
+    let session = if legacy { 0 } else { session };
 
     // ---- 2./3. assignment + start barrier -------------------------------
     let cancel: Arc<Vec<AtomicBool>> =
         Arc::new((0..n_cancel_slots).map(|_| AtomicBool::new(false)).collect());
     let mut tasks: Vec<SubTask> = Vec::with_capacity(n_tasks);
+    let mut asm = ChunkAssembler::new();
     loop {
-        match frame::recv(&mut reader) {
-            Ok(Message::TaskAssign {
+        let (msg, _) = match frame::recv_compat(&mut reader) {
+            Ok(p) => p,
+            Err(e) => anyhow::bail!("assignment stream broke: {e}"),
+        };
+        anyhow::ensure!(
+            !asm.in_progress() || matches!(msg, Message::TaskAssignChunk { .. }),
+            "non-chunk frame interleaved mid-reassembly"
+        );
+        match msg {
+            Message::TaskAssign {
                 task,
                 coded_start,
                 rows,
@@ -202,41 +430,54 @@ pub fn handle_conn(
                 delay_ms,
                 a_block,
                 x,
-            }) => {
-                let (rows, cols) = (rows as usize, cols as usize);
-                anyhow::ensure!(
-                    a_block.len() == rows * cols && x.len() == cols,
-                    "TaskAssign shape mismatch: {}×{} block with {} + {} elements",
-                    rows,
-                    cols,
-                    a_block.len(),
-                    x.len(),
-                );
-                anyhow::ensure!(
-                    (task as usize) < n_cancel_slots,
-                    "TaskAssign task id {task} outside the {n_cancel_slots}-slot cancel table"
-                );
-                anyhow::ensure!(
-                    tasks.len() < n_tasks,
-                    "more TaskAssign frames than the announced {n_tasks}"
-                );
-                tasks.push(SubTask {
-                    master: task as usize,
-                    coded_start: coded_start as usize,
-                    rows,
-                    cols,
-                    a_block,
-                    x: Arc::new(x),
-                    delay_ms,
-                });
+            } => accept_assign(
+                &mut tasks,
+                n_tasks,
+                n_cancel_slots,
+                task,
+                coded_start,
+                rows,
+                cols,
+                delay_ms,
+                a_block,
+                x,
+            )?,
+            Message::TaskAssignChunk { seq, of, payload } => {
+                if let Some(bytes) = asm.push(seq, of, &payload)? {
+                    // Chunks are a v3 construct; the inner message is
+                    // strict current-version. No recursive chunking.
+                    match Message::decode(&bytes)? {
+                        Message::TaskAssign {
+                            task,
+                            coded_start,
+                            rows,
+                            cols,
+                            delay_ms,
+                            a_block,
+                            x,
+                        } => accept_assign(
+                            &mut tasks,
+                            n_tasks,
+                            n_cancel_slots,
+                            task,
+                            coded_start,
+                            rows,
+                            cols,
+                            delay_ms,
+                            a_block,
+                            x,
+                        )?,
+                        other => anyhow::bail!("chunked frame reassembled to {other:?}"),
+                    }
+                }
             }
             // The start barrier: first heartbeat after (or during — the
             // count guard above keeps phases honest) assignment.
-            Ok(Message::Heartbeat { nonce, .. }) => {
+            Message::Heartbeat { nonce, .. } => {
                 if tasks.len() == n_tasks {
                     break;
                 }
-                send(
+                send_as(
                     &writer,
                     &Message::Heartbeat {
                         nonce,
@@ -244,16 +485,17 @@ pub fn handle_conn(
                         queue_depth: 0,
                         last_latency_ms: 0.0,
                     },
+                    legacy,
                 )?;
             }
-            Ok(Message::Cancel { task }) => {
+            Message::Cancel { task } => {
                 if let Some(flag) = cancel.get(task as usize) {
                     flag.store(true, Ordering::SeqCst);
                 }
             }
             // Drained before it started: ack and release.
-            Ok(Message::Shutdown { .. }) => {
-                let _ = send(
+            Message::Shutdown { .. } => {
+                let _ = send_as(
                     &writer,
                     &Message::Shutdown {
                         computed: 0,
@@ -261,23 +503,27 @@ pub fn handle_conn(
                         disconnected: false,
                         events: Vec::new(),
                     },
+                    legacy,
                 );
                 return Ok(());
             }
-            Ok(other) => anyhow::bail!("unexpected {other:?} during assignment"),
-            Err(e) => anyhow::bail!("assignment stream broke: {e}"),
+            other => anyhow::bail!("unexpected {other:?} during assignment"),
         }
     }
 
     // ---- 4. execute: control + beat threads + the run_worker loop -------
+    if session != 0 {
+        registry_insert(session, wid);
+    }
     let exit_cause = Arc::new(AtomicU8::new(CTL_RUNNING));
     let ctl = {
         let cancel = Arc::clone(&cancel);
         let writer = Arc::clone(&writer);
         let cause = Arc::clone(&exit_cause);
+        let resumable = session != 0;
         std::thread::Builder::new()
             .name(format!("net-ctl-{wid}"))
-            .spawn(move || control_loop(reader, writer, cancel, cause))?
+            .spawn(move || control_loop(reader, writer, cancel, cause, resumable, legacy))?
     };
 
     let beat_state = Arc::new(BeatState::default());
@@ -308,7 +554,7 @@ pub fn handle_conn(
                             ),
                         };
                         nonce += 1;
-                        if send(&writer, &msg).is_err() {
+                        if send_as(&writer, &msg, legacy).is_err() {
                             return; // peer gone; the ctl thread handles it
                         }
                     }
@@ -326,6 +572,8 @@ pub fn handle_conn(
             .name(format!("net-pump-{wid}"))
             .spawn(move || -> io::Result<()> {
                 let mut last_publish: Option<Instant> = None;
+                let mut published = 0usize;
+                let mut socket_dead = false;
                 for r in rx {
                     let now = Instant::now();
                     if let Some(prev) = last_publish {
@@ -337,17 +585,40 @@ pub fn handle_conn(
                     last_publish = Some(now);
                     state.rows_done.fetch_add(r.rows as u64, Ordering::SeqCst);
                     state.tasks_done.fetch_add(1, Ordering::SeqCst);
-                    send(
-                        &writer,
-                        &Message::PartialResult {
-                            task: r.master as u32,
-                            coded_start: r.coded_start as u32,
-                            rows: r.rows as u32,
-                            worker: r.worker as u32,
-                            delay_ms: r.delay_ms,
-                            values: r.values,
-                        },
-                    )?;
+                    let msg = Message::PartialResult {
+                        task: r.master as u32,
+                        coded_start: r.coded_start as u32,
+                        rows: r.rows as u32,
+                        worker: r.worker as u32,
+                        delay_ms: r.delay_ms,
+                        values: r.values,
+                    };
+                    // Park BEFORE the send: a result swallowed by a
+                    // dying socket's buffers is still replayable, and
+                    // the coordinator's (master, coded_start) dedup
+                    // makes over-replay harmless.
+                    if session != 0 {
+                        registry_park(session, msg.clone());
+                    }
+                    // Injected connection drop: sever both ways at the
+                    // trigger index and keep computing.
+                    if !socket_dead && drop_at.is_some_and(|at| published >= at) {
+                        if let Ok(g) = writer.lock() {
+                            let _ = g.get_ref().shutdown(SockShutdown::Both);
+                        }
+                        socket_dead = true;
+                    }
+                    published += 1;
+                    if !socket_dead {
+                        if let Err(e) = send_as(&writer, &msg, legacy) {
+                            if session == 0 {
+                                return Err(e);
+                            }
+                            // Resumable: the queue keeps draining into
+                            // the registry for a later Resume replay.
+                            socket_dead = true;
+                        }
+                    }
                 }
                 Ok(())
             })?
@@ -368,7 +639,11 @@ pub fn handle_conn(
         // coordinator's reader sees an immediate EOF (no closing
         // Shutdown, no drain stats), then exit CLEANLY — the injection
         // is the experiment, not a real defect, and the auto-spawner
-        // treats a non-zero exit as a harness failure.
+        // treats a non-zero exit as a harness failure. A real death
+        // loses parked state, so the injected one does too.
+        if session != 0 {
+            registry_remove(session);
+        }
         if let Ok(g) = writer.lock() {
             let _ = g.get_ref().shutdown(SockShutdown::Both);
         }
@@ -387,40 +662,121 @@ pub fn handle_conn(
     // `disconnected` marks a drain forced by the peer vanishing; a
     // coordinator-initiated Shutdown (or natural completion, where the
     // control loop is still running) is a clean drain.
-    send(
+    let wire_events: Vec<WireEvent> = events.iter().map(event_to_wire).collect();
+    if session != 0 {
+        // Park the drain stats FIRST: if the closing Shutdown never
+        // reaches the peer, a Resume can still collect everything.
+        registry_finish(session, computed as u64, skipped as u64, wire_events.clone());
+    }
+    let sent = send_as(
         &writer,
         &Message::Shutdown {
             computed: computed as u64,
             skipped: skipped as u64,
             disconnected: exit_cause.load(Ordering::SeqCst) == CTL_DISCONNECTED,
-            events: events.iter().map(event_to_wire).collect(),
+            events: wire_events,
         },
-    )?;
+        legacy,
+    );
+    if session == 0 {
+        sent?;
+    }
     ctl.join()
         .map_err(|_| anyhow::anyhow!("control thread panicked"))?;
+    if session != 0 && exit_cause.load(Ordering::SeqCst) == CTL_RELEASED {
+        // Clean, coordinator-acknowledged release: nothing left to
+        // resume. Any other exit keeps the parked entry alive.
+        registry_remove(session);
+    }
     Ok(())
+}
+
+/// Serve a `Resume` connection: reply code, then (on a hit) the parked
+/// results past the acked watermark and the parked drain stats.
+fn serve_resume<R: Read>(
+    mut reader: R,
+    writer: SharedWriter,
+    session_id: u64,
+    last_acked_row: u64,
+) -> anyhow::Result<()> {
+    let reply = |code: u32, wid: usize, n_results: usize| Message::Hello {
+        wid: wid as u32,
+        n_tasks: n_results as u32,
+        n_cancel_slots: code,
+        time_scale: 0.0,
+        beat_ms: 0.0,
+        session: session_id,
+        auth: NO_AUTH,
+    };
+    match registry_resume(session_id) {
+        ResumeLookup::Miss => {
+            let _ = send(&writer, &reply(RESUME_MISS, 0, 0));
+            Ok(())
+        }
+        ResumeLookup::Running => {
+            let _ = send(&writer, &reply(RESUME_RUNNING, 0, 0));
+            Ok(())
+        }
+        ResumeLookup::Parked(p) => {
+            send(&writer, &reply(RESUME_PARKED, p.wid, p.results.len()))?;
+            // Replay in publish order, skipping the prefix whose
+            // cumulative rows the coordinator already absorbed. The
+            // watermark is conservative (coordinator-side dedup makes
+            // over-replay safe); what matters is never recomputing.
+            let mut cum_rows = 0u64;
+            for r in &p.results {
+                if let Message::PartialResult { rows, .. } = r {
+                    cum_rows += *rows as u64;
+                    if cum_rows <= last_acked_row {
+                        continue;
+                    }
+                }
+                send(&writer, r)?;
+            }
+            send(
+                &writer,
+                &Message::Shutdown {
+                    computed: p.computed,
+                    skipped: p.skipped,
+                    disconnected: false,
+                    events: p.events.clone(),
+                },
+            )?;
+            // Await the coordinator's release (or EOF) so our close
+            // cannot race its reads of the replay.
+            loop {
+                match frame::recv(&mut reader) {
+                    Ok(Message::Shutdown { .. }) | Err(_) => return Ok(()),
+                    Ok(_) => {}
+                }
+            }
+        }
+    }
 }
 
 /// Keep reading control frames while (and after) the compute loop runs.
 /// Returns when the coordinator releases the connection (`Shutdown`) or
-/// vanishes — both cancel everything outstanding, so a worker never
-/// computes for a peer that stopped listening — and records WHICH of
-/// the two happened in `cause` so the drain stats can report it.
+/// vanishes, recording WHICH happened in `cause`. Both cancel
+/// everything outstanding on a non-resumable session (a worker never
+/// computes for a peer that stopped listening); a resumable session
+/// keeps computing through a disconnect and parks its results instead.
 fn control_loop<R: Read>(
     mut reader: R,
     writer: SharedWriter,
     cancel: Arc<Vec<AtomicBool>>,
     cause: Arc<AtomicU8>,
+    resumable: bool,
+    legacy: bool,
 ) {
     loop {
-        match frame::recv(&mut reader) {
-            Ok(Message::Cancel { task }) => {
+        match frame::recv_compat(&mut reader) {
+            Ok((Message::Cancel { task }, _)) => {
                 if let Some(flag) = cancel.get(task as usize) {
                     flag.store(true, Ordering::SeqCst);
                 }
             }
-            Ok(Message::Heartbeat { nonce, .. }) => {
-                let _ = send(
+            Ok((Message::Heartbeat { nonce, .. }, _)) => {
+                let _ = send_as(
                     &writer,
                     &Message::Heartbeat {
                         nonce,
@@ -428,9 +784,10 @@ fn control_loop<R: Read>(
                         queue_depth: 0,
                         last_latency_ms: 0.0,
                     },
+                    legacy,
                 );
             }
-            Ok(Message::Shutdown { .. }) => {
+            Ok((Message::Shutdown { .. }, _)) => {
                 cause.store(CTL_RELEASED, Ordering::SeqCst);
                 for flag in cancel.iter() {
                     flag.store(true, Ordering::SeqCst);
@@ -439,8 +796,10 @@ fn control_loop<R: Read>(
             }
             Err(_) => {
                 cause.store(CTL_DISCONNECTED, Ordering::SeqCst);
-                for flag in cancel.iter() {
-                    flag.store(true, Ordering::SeqCst);
+                if !resumable {
+                    for flag in cancel.iter() {
+                        flag.store(true, Ordering::SeqCst);
+                    }
                 }
                 return;
             }

@@ -42,8 +42,10 @@
 //! **bit-for-bit** on the same seed (`rust/tests/serving.rs` pins this).
 
 pub mod churn;
+pub mod tcp;
 
 pub use churn::{ChurnAction, ChurnEvent, ChurnScript};
+pub use tcp::{TcpJobRecord, TcpServeConfig, TcpServeOutcome};
 
 use std::cmp::{Ordering, Reverse};
 use std::collections::{BinaryHeap, HashMap, VecDeque};

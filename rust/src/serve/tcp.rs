@@ -1,0 +1,459 @@
+//! Serving over a real TCP fleet: churn *observed*, not scripted.
+//!
+//! The virtual serving loop ([`super::run`]) drives its fleet timeline
+//! from a [`super::ChurnScript`] — a declaration of when workers leave,
+//! rejoin or throttle. On a real deployment nobody hands the
+//! coordinator that script; the only truth is the connection lifecycle.
+//! This module is the serving layer for `--transport tcp`: each admitted
+//! job executes for real over [`Transport::Tcp`]
+//! ([`coordinator::run_plan`] — encode, framed dispatch, decode,
+//! verify), and the health events that run *observed* (disconnects,
+//! suspicions, resumes) are what drive the fleet state for the next
+//! admission:
+//!
+//! * a worker whose session disconnected or was declared sick trips its
+//!   **persistent breaker** (per shared worker, carried across jobs);
+//! * the next admission plans around breaker-open workers
+//!   ([`super::plan_for`] with capacity factor 0 — the same subset +
+//!   remap path the virtual loop uses), with the plan cache and SCA
+//!   warm starts riding along;
+//! * a breaker whose backoff elapsed lets its worker back in as a
+//!   half-open probe; a clean job (or an in-run `Reconnect`) closes it;
+//! * when EVERY shared worker is breaker-open the loop falls back to
+//!   planning on the full fleet — the abandon-to-redundancy floor: MDS
+//!   redundancy plus in-run re-queue is the last line, and serving
+//!   never wedges on an empty candidate set.
+//!
+//! Each job emits one JSONL-able [`TcpJobRecord`]; the aggregate
+//! [`TcpServeOutcome`] carries the merged health timeline so a smoke
+//! run can assert `disconnect → backoff → reconnect/requeue` ordering
+//! end-to-end.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::config::Scenario;
+use crate::coordinator::{self, Backend, RunOptions, TcpOptions, Transport};
+use crate::health::{CircuitBreaker, FaultPlan, HealthConfig, HealthEvent, HealthEventKind};
+use crate::plan::Plan;
+use crate::policy::PolicySpec;
+use crate::util::json::Json;
+
+use super::plan_for;
+
+/// Everything a serve-over-TCP run needs beyond the scenario.
+#[derive(Clone)]
+pub struct TcpServeConfig {
+    pub policy: PolicySpec,
+    /// Jobs served sequentially (each is one full coded run).
+    pub jobs: usize,
+    /// Task width `S_m` (columns of every `A_m`).
+    pub cols: usize,
+    /// Wall-clock seconds per virtual millisecond.
+    pub time_scale: f64,
+    pub seed: u64,
+    /// Worker endpoints; empty = auto-spawn loopback processes per job.
+    pub addrs: Vec<String>,
+    /// Shared-secret auth token (see [`TcpOptions::auth`]).
+    pub auth: Option<String>,
+    /// Fault plan injected into the FIRST job only — the recovery story
+    /// (exclusion, probe, re-admission) then plays out on later jobs.
+    pub fault: Option<FaultPlan>,
+    pub health: HealthConfig,
+    /// Reuse plans across admissions with an unchanged fleet state.
+    pub use_cache: bool,
+    /// Seed SCA replans with the previous admission's plan.
+    pub warm_start: bool,
+}
+
+impl TcpServeConfig {
+    pub fn new(policy: PolicySpec) -> Self {
+        Self {
+            policy,
+            jobs: 3,
+            cols: 32,
+            time_scale: 2e-3,
+            seed: 2022,
+            addrs: Vec::new(),
+            auth: None,
+            fault: None,
+            health: HealthConfig::default(),
+            use_cache: true,
+            warm_start: true,
+        }
+    }
+}
+
+/// One served job's outcome on the real TCP runtime.
+#[derive(Clone, Debug)]
+pub struct TcpJobRecord {
+    pub job: usize,
+    /// Plan label the admission used.
+    pub label: String,
+    /// Wall-clock the run took (ms).
+    pub wall_ms: f64,
+    /// Virtual system completion (slowest master, ms).
+    pub completion_ms: f64,
+    /// Decode verified against the direct product for every master.
+    pub verified: bool,
+    pub cache_hit: bool,
+    /// Scenario worker ids (1-based) planned around because their
+    /// breaker was open at admission.
+    pub excluded: Vec<usize>,
+    /// The admission hit the abandon-to-redundancy floor: every shared
+    /// worker was breaker-open, so it planned on the full fleet anyway.
+    pub redundancy_floor: bool,
+    /// Lifecycle observations from this job's run.
+    pub disconnects: usize,
+    pub reconnects: usize,
+    pub requeues: usize,
+}
+
+impl TcpJobRecord {
+    /// One streaming JSONL record (`coded-coop serve --transport tcp`).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("job", Json::Num(self.job as f64));
+        j.set("label", Json::Str(self.label.clone()));
+        j.set("wall_ms", Json::Num(self.wall_ms));
+        j.set("completion_ms", Json::Num(self.completion_ms));
+        j.set("verified", Json::Bool(self.verified));
+        j.set("cache_hit", Json::Bool(self.cache_hit));
+        j.set(
+            "excluded",
+            Json::Arr(self.excluded.iter().map(|&w| Json::Num(w as f64)).collect()),
+        );
+        j.set("redundancy_floor", Json::Bool(self.redundancy_floor));
+        j.set("disconnects", Json::Num(self.disconnects as f64));
+        j.set("reconnects", Json::Num(self.reconnects as f64));
+        j.set("requeues", Json::Num(self.requeues as f64));
+        j
+    }
+}
+
+/// Aggregate result of one serve-over-TCP run.
+#[derive(Clone, Debug)]
+pub struct TcpServeOutcome {
+    pub records: Vec<TcpJobRecord>,
+    /// Plans actually built (cache misses).
+    pub replans: usize,
+    /// Admissions that reused a cached plan.
+    pub cache_hits: usize,
+    /// Merged health timeline across all jobs, in job order (event
+    /// `at_ms` values are per-run clocks; `job_of` indexes them).
+    pub health: Vec<HealthEvent>,
+    /// `health[i]` came from job `job_of[i]`.
+    pub job_of: Vec<usize>,
+}
+
+impl TcpServeOutcome {
+    pub fn all_verified(&self) -> bool {
+        self.records.iter().all(|r| r.verified)
+    }
+}
+
+/// The admission-time fleet view: capacity factors from the breakers
+/// (`factors[0]` = master-local slot, always 1), the excluded worker
+/// ids, and whether the abandon-to-redundancy floor kicked in (every
+/// shared worker open → plan on the full fleet, lean on MDS redundancy
+/// and in-run re-queue). Pure — unit-tested without sockets.
+fn admission_factors(
+    breakers: &mut [CircuitBreaker],
+    now_ms: f64,
+    n: usize,
+) -> (Vec<f64>, Vec<usize>, bool) {
+    let mut factors = vec![1.0f64; n + 1];
+    let mut excluded = Vec::new();
+    for w in 1..=n {
+        if !breakers[w - 1].allow(now_ms) {
+            factors[w] = 0.0;
+            excluded.push(w);
+        }
+    }
+    if excluded.len() == n {
+        // Graceful-degradation floor: nobody is trusted, so trust
+        // everybody — a plan over the full fleet still carries MDS
+        // redundancy, and the in-run health layer re-queues what the
+        // truly dead drop. Serving must degrade, never wedge.
+        return (vec![1.0f64; n + 1], excluded, true);
+    }
+    (factors, excluded, false)
+}
+
+/// Serve `cfg.jobs` sequential jobs over the real TCP runtime, fleet
+/// state driven by observed connection lifecycle (module docs). Errors
+/// only on infrastructure failure (cannot spawn/reach any worker,
+/// planning bug); per-job compute faults degrade records, not the run.
+pub fn run_tcp(s: &Scenario, cfg: &TcpServeConfig) -> anyhow::Result<TcpServeOutcome> {
+    anyhow::ensure!(cfg.jobs >= 1, "serve-over-tcp needs at least one job");
+    let n = s.n_workers();
+    let mut breakers: Vec<CircuitBreaker> = (0..n)
+        .map(|_| {
+            CircuitBreaker::new(
+                cfg.health.breaker_backoff_ms,
+                cfg.health.breaker_backoff_cap_ms,
+            )
+        })
+        .collect();
+    let mut cache: HashMap<Vec<u64>, Rc<Plan>> = HashMap::new();
+    let mut last_plan: Option<Plan> = None;
+    let mut records = Vec::with_capacity(cfg.jobs);
+    let mut health: Vec<HealthEvent> = Vec::new();
+    let mut job_of: Vec<usize> = Vec::new();
+    let mut replans = 0usize;
+    let mut cache_hits = 0usize;
+    let t0 = Instant::now();
+
+    for job in 0..cfg.jobs {
+        let now_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let (factors, excluded, floor) = admission_factors(&mut breakers, now_ms, n);
+
+        // ---- plan for the observed fleet state (cache + warm start) --
+        let key: Vec<u64> = factors.iter().map(|f| f.to_bits()).collect();
+        let (plan, cache_hit) = match cfg.use_cache.then(|| cache.get(&key)).flatten() {
+            Some(p) => {
+                cache_hits += 1;
+                (Rc::clone(p), true)
+            }
+            None => {
+                let warm = if cfg.warm_start {
+                    last_plan.as_ref()
+                } else {
+                    None
+                };
+                let (built, _iters) = plan_for(s, &cfg.policy, &factors, warm)?;
+                replans += 1;
+                last_plan = Some(built.clone());
+                let rc = Rc::new(built);
+                if cfg.use_cache {
+                    cache.insert(key, Rc::clone(&rc));
+                }
+                (rc, false)
+            }
+        };
+
+        // ---- execute the job for real over TCP -----------------------
+        let report = coordinator::run_plan(
+            s,
+            &plan,
+            &RunOptions {
+                cols: cfg.cols,
+                time_scale: cfg.time_scale,
+                backend: Backend::Native,
+                seed: cfg.seed.wrapping_add(job as u64),
+                verify: true,
+                transport: Transport::Tcp(TcpOptions {
+                    addrs: cfg.addrs.clone(),
+                    auth: cfg.auth.clone(),
+                }),
+                fault: if job == 0 { cfg.fault.clone() } else { None },
+                health: cfg.health.clone(),
+            },
+        )?;
+
+        // ---- fold the observed lifecycle into the breakers -----------
+        // Queue index w < n is shared worker w (scenario id w + 1);
+        // master-local queues (w ≥ n) never churn the fleet view.
+        let fold_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let mut disconnects = 0usize;
+        let mut reconnects = 0usize;
+        let mut requeues = 0usize;
+        let mut failed = vec![false; n];
+        for ev in &report.health {
+            match &ev.kind {
+                HealthEventKind::Disconnect => {
+                    disconnects += 1;
+                    if ev.worker < n {
+                        failed[ev.worker] = true;
+                        breakers[ev.worker].on_failure(fold_ms);
+                    }
+                }
+                HealthEventKind::Suspect { .. } => {
+                    if ev.worker < n {
+                        failed[ev.worker] = true;
+                        breakers[ev.worker].on_failure(fold_ms);
+                    }
+                }
+                HealthEventKind::Reconnect => {
+                    reconnects += 1;
+                    if ev.worker < n {
+                        failed[ev.worker] = false;
+                        breakers[ev.worker].on_success();
+                    }
+                }
+                HealthEventKind::Requeue { .. } => requeues += 1,
+                _ => {}
+            }
+        }
+        // A worker that served this job without incident passed its
+        // probe: close its breaker (half-open → closed, and also heal
+        // stale opens whose backoff elapsed).
+        for w in 1..=n {
+            if factors[w] > 0.0 && !failed[w - 1] {
+                breakers[w - 1].on_success();
+            }
+        }
+        job_of.extend(std::iter::repeat(job).take(report.health.len()));
+        health.extend(report.health.iter().cloned());
+
+        records.push(TcpJobRecord {
+            job,
+            label: report.label.clone(),
+            wall_ms: report.wall_ms,
+            completion_ms: report.system_completion_ms(),
+            verified: report.all_verified(1e-2),
+            cache_hit,
+            excluded,
+            redundancy_floor: floor,
+            disconnects,
+            reconnects,
+            requeues,
+        });
+    }
+
+    Ok(TcpServeOutcome {
+        records,
+        replans,
+        cache_hits,
+        health,
+        job_of,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assign::ValueModel;
+    use crate::config::CommModel;
+    use crate::net::worker::{WorkerConfig, WorkerServer};
+
+    fn policy() -> PolicySpec {
+        PolicySpec::new("dedi-iter", ValueModel::Markov, "markov")
+    }
+
+    fn small() -> Scenario {
+        Scenario::small_scale(4, 2.0, CommModel::Stochastic)
+    }
+
+    /// Spin N in-process worker servers; they serve until dropped.
+    fn loopback_workers(n: usize) -> Vec<String> {
+        (0..n)
+            .map(|_| {
+                let server = WorkerServer::bind("127.0.0.1:0").expect("bind");
+                let addr = server.local_addr().expect("addr").to_string();
+                std::thread::spawn(move || {
+                    let _ = server.run(&WorkerConfig::default());
+                });
+                addr
+            })
+            .collect()
+    }
+
+    #[test]
+    fn admission_factors_exclude_open_breakers_and_floor_gracefully() {
+        let n = 3;
+        let mut breakers: Vec<CircuitBreaker> =
+            (0..n).map(|_| CircuitBreaker::new(100.0, 1000.0)).collect();
+        // Clean fleet: everyone in, no floor.
+        let (f, ex, floor) = admission_factors(&mut breakers, 0.0, n);
+        assert_eq!(f, vec![1.0; n + 1]);
+        assert!(ex.is_empty() && !floor);
+        // Worker 2's breaker trips: excluded while the backoff holds.
+        breakers[1].on_failure(10.0);
+        let (f, ex, floor) = admission_factors(&mut breakers, 20.0, n);
+        assert_eq!(f[2], 0.0);
+        assert_eq!(ex, vec![2]);
+        assert!(!floor);
+        assert_eq!(f[0], 1.0, "master-local slot never churns");
+        // Backoff elapsed: the next admission probes it half-open.
+        let (f, ex, _) = admission_factors(&mut breakers, 10_000.0, n);
+        assert_eq!(f[2], 1.0, "elapsed backoff re-admits the worker");
+        assert!(ex.is_empty());
+        // Everyone open: the abandon-to-redundancy floor plans on the
+        // full fleet instead of erroring out on an empty candidate set.
+        for b in breakers.iter_mut() {
+            b.on_failure(20_000.0);
+        }
+        let (f, ex, floor) = admission_factors(&mut breakers, 20_001.0, n);
+        assert_eq!(f, vec![1.0; n + 1]);
+        assert_eq!(ex.len(), n);
+        assert!(floor, "all-open fleet must hit the redundancy floor");
+    }
+
+    #[test]
+    fn clean_tcp_serve_verifies_and_caches() {
+        let s = small();
+        let addrs = loopback_workers(2);
+        let mut cfg = TcpServeConfig::new(policy());
+        cfg.jobs = 3;
+        cfg.cols = 24;
+        cfg.time_scale = 1e-4;
+        cfg.addrs = addrs;
+        let out = run_tcp(&s, &cfg).expect("clean serve");
+        assert_eq!(out.records.len(), 3);
+        assert!(out.all_verified(), "every job must decode: {:?}", out.records);
+        // A static healthy fleet plans once and hits the cache after.
+        assert_eq!(out.replans, 1);
+        assert_eq!(out.cache_hits, 2);
+        for r in &out.records {
+            assert!(r.excluded.is_empty(), "{r:?}");
+            assert!(!r.redundancy_floor);
+            assert_eq!(r.disconnects, 0);
+        }
+        assert!(out.health.is_empty(), "clean runs are disarmed: {:?}", out.health);
+        assert_eq!(out.job_of.len(), out.health.len());
+    }
+
+    #[test]
+    fn observed_crash_excludes_worker_on_next_admission() {
+        let s = small();
+        // Worker process 0 crashes mid-queue on EVERY connection it
+        // serves; the rest are clean. Job 0 observes the disconnect,
+        // job 1 must plan around scenario worker 1.
+        let crash_addr = {
+            let server = WorkerServer::bind("127.0.0.1:0").expect("bind");
+            let addr = server.local_addr().expect("addr").to_string();
+            std::thread::spawn(move || {
+                let _ = server.run(&WorkerConfig {
+                    fault: Some(crate::health::FaultPlan::parse("crash:w1@0%").expect("plan")),
+                    ..WorkerConfig::default()
+                });
+            });
+            addr
+        };
+        let mut addrs = vec![crash_addr];
+        addrs.extend(loopback_workers(3));
+        let mut cfg = TcpServeConfig::new(policy());
+        cfg.jobs = 2;
+        cfg.cols = 24;
+        cfg.time_scale = 1e-3;
+        cfg.addrs = addrs;
+        // Arm health without a coordinator-side fault plan: the crash
+        // is the WORKER's, the coordinator only observes the lifecycle.
+        cfg.health = HealthConfig::fast();
+        cfg.health.armed = true;
+        // Long breaker backoff so job 1's admission is safely inside
+        // the exclusion window.
+        cfg.health.breaker_backoff_ms = 60_000.0;
+        cfg.health.breaker_backoff_cap_ms = 60_000.0;
+        let out = run_tcp(&s, &cfg).expect("serve with crashing worker");
+        assert_eq!(out.records.len(), 2);
+        assert!(out.all_verified(), "{:?}", out.records);
+        assert!(
+            out.records[0].disconnects > 0,
+            "job 0 must observe the crash: {:?}",
+            out.records[0]
+        );
+        assert_eq!(
+            out.records[1].excluded,
+            vec![1],
+            "job 1 must plan around the crashed worker: {:?}",
+            out.records[1]
+        );
+        assert!(!out.records[1].redundancy_floor);
+        // The merged timeline shows the observation.
+        let kinds: Vec<&'static str> = out.health.iter().map(|e| e.kind_label()).collect();
+        assert!(kinds.contains(&"disconnect"), "{kinds:?}");
+    }
+}

@@ -28,6 +28,7 @@ fn loopback_workers(n: usize, fault: Option<FaultPlan>) -> Vec<String> {
                 backend: Backend::Native,
                 once: false,
                 fault: fault.clone(),
+                auth: None,
             };
             std::thread::spawn(move || {
                 let _ = server.run(&cfg);

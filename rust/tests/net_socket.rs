@@ -11,9 +11,13 @@
 use coded_coop::config::{AShift, CommModel, Scenario};
 use coded_coop::coordinator::worker::Outcome;
 use coded_coop::coordinator::{
-    run_plan, run_stream, Backend, RunOptions, StreamOptions, Transport,
+    run_plan, run_stream, Backend, RunOptions, StreamOptions, TcpOptions, Transport,
 };
-use coded_coop::net::messages::{CodecError, Message, WireEvent};
+use coded_coop::health::{FaultPlan, HealthConfig};
+use coded_coop::net::messages::{
+    auth_digest, ChunkAssembler, CodecError, Message, WireEvent, AUTH_LEN, NO_AUTH,
+};
+use coded_coop::net::worker::{RESUME_PARKED, RESUME_RUNNING};
 use coded_coop::net::{frame, WorkerConfig, WorkerServer};
 use coded_coop::plan::{self, LoadMethod, PlanSpec, Policy};
 use coded_coop::util::prop::{check, Config, Gen};
@@ -178,18 +182,28 @@ fn stream_runs_over_tcp() {
 // ---- codec fuzz properties (satellite: random round-trips, typed ------
 // truncation errors, no panics on garbage) ------------------------------
 
+fn random_auth(g: &mut Gen) -> [u8; AUTH_LEN] {
+    let mut a = [0u8; AUTH_LEN];
+    for b in a.iter_mut() {
+        *b = g.rng().next_u64() as u8;
+    }
+    a
+}
+
 fn random_message(g: &mut Gen) -> Message {
     let small_vec = |g: &mut Gen, max: usize| {
         let len = g.usize_range(0, max);
         g.vec(len, |g| g.f64_range(-1e3, 1e3) as f32)
     };
-    match g.usize_range(0, 5) {
+    match g.usize_range(0, 7) {
         0 => Message::Hello {
             wid: g.usize_range(0, 1000) as u32,
             n_tasks: g.usize_range(0, 1000) as u32,
             n_cancel_slots: g.usize_range(0, 1000) as u32,
             time_scale: g.f64_range(0.0, 1.0),
             beat_ms: g.f64_range(0.0, 100.0),
+            session: g.rng().next_u64(),
+            auth: random_auth(g),
         },
         1 => Message::TaskAssign {
             task: g.usize_range(0, 100) as u32,
@@ -217,7 +231,7 @@ fn random_message(g: &mut Gen) -> Message {
             queue_depth: g.usize_range(0, 1000) as u32,
             last_latency_ms: g.f64_range(0.0, 1e3),
         },
-        _ => Message::Shutdown {
+        5 => Message::Shutdown {
             computed: g.usize_range(0, 1000) as u64,
             skipped: g.usize_range(0, 1000) as u64,
             disconnected: g.bool(),
@@ -235,6 +249,19 @@ fn random_message(g: &mut Gen) -> Message {
                         _ => Outcome::Failed,
                     },
                 })
+            },
+        },
+        6 => Message::Resume {
+            session_id: g.rng().next_u64(),
+            last_acked_row: g.rng().next_u64(),
+            auth: random_auth(g),
+        },
+        _ => Message::TaskAssignChunk {
+            seq: g.usize_range(0, 1000) as u32,
+            of: g.usize_range(0, 1000) as u32,
+            payload: {
+                let len = g.usize_range(0, 256);
+                g.vec(len, |g| g.rng().next_u64() as u8)
             },
         },
     }
@@ -294,4 +321,376 @@ fn prop_framed_garbage_never_panics() {
             }
         }
     });
+}
+
+// ---- chunked-assign streaming (satellite: round-trip, strict ----------
+// sequencing, total over garbage) ---------------------------------------
+
+#[test]
+fn prop_chunked_assign_roundtrips_bit_for_bit() {
+    check(
+        Config::default().cases(60),
+        "send_chunked ∘ reassemble ∘ decode = id",
+        |g| {
+            let rows = g.usize_range(1, 24);
+            let cols = g.usize_range(1, 24);
+            let m = Message::TaskAssign {
+                task: g.usize_range(0, 100) as u32,
+                coded_start: g.usize_range(0, 10_000) as u32,
+                rows: rows as u32,
+                cols: cols as u32,
+                delay_ms: g.f64_range(0.0, 1e4),
+                a_block: g.vec(rows * cols, |g| g.f64_range(-1e3, 1e3) as f32),
+                x: g.vec(cols, |g| g.f64_range(-1e3, 1e3) as f32),
+            };
+            let budget = g.usize_range(16, 512);
+            let mut buf = Vec::new();
+            frame::send_chunked(&mut buf, &m, budget).unwrap();
+            let mut c = std::io::Cursor::new(buf);
+            let mut asm = ChunkAssembler::new();
+            loop {
+                match frame::recv(&mut c).unwrap() {
+                    Message::TaskAssignChunk { seq, of, payload } => {
+                        assert!(payload.len() <= budget, "chunk exceeds budget");
+                        if let Some(bytes) = asm.push(seq, of, &payload).unwrap() {
+                            assert_eq!(bytes, m.encode(), "reassembly must be bit-for-bit");
+                            assert_eq!(Message::decode(&bytes).unwrap(), m);
+                            break;
+                        }
+                    }
+                    // Encoding fit the budget: one plain frame, no chunks.
+                    other => {
+                        assert_eq!(other, m);
+                        break;
+                    }
+                }
+            }
+            assert!(frame::recv(&mut c).unwrap_err().is_closed());
+        },
+    );
+}
+
+#[test]
+fn prop_chunk_stream_mutations_are_typed_errors() {
+    check(
+        Config::default().cases(120),
+        "gap/duplicate/reorder chunk streams reject with a typed error",
+        |g| {
+            let of = g.usize_range(2, 6) as u32;
+            let mut seqs: Vec<u32> = (0..of).collect();
+            match g.usize_range(0, 2) {
+                0 => {
+                    // Corrupt one seq (never equal to its original).
+                    let i = g.usize_range(0, seqs.len() - 1);
+                    seqs[i] = seqs[i].wrapping_add(1 + g.usize_range(0, 3) as u32);
+                }
+                1 => {
+                    // Duplicate a delivered seq.
+                    let i = g.usize_range(1, seqs.len() - 1);
+                    seqs.insert(i, seqs[i - 1]);
+                }
+                _ => {
+                    // Drop one seq; tail a bogus one so the stream still
+                    // carries `of` pieces.
+                    let i = g.usize_range(0, seqs.len() - 1);
+                    seqs.remove(i);
+                    seqs.push(of + 7);
+                }
+            }
+            let mut asm = ChunkAssembler::new();
+            let mut err = None;
+            for &s in &seqs {
+                match asm.push(s, of, b"xy") {
+                    Ok(Some(_)) => panic!("mutated stream completed a reassembly"),
+                    Ok(None) => {}
+                    Err(e) => {
+                        err = Some(e);
+                        break;
+                    }
+                }
+            }
+            let e = err.expect("mutated stream must be rejected");
+            assert!(
+                matches!(
+                    e,
+                    CodecError::ChunkSequence { .. } | CodecError::ChunkCount { .. }
+                ),
+                "unexpected rejection {e:?}"
+            );
+            // Every rejection resets the assembler for a clean restart.
+            assert!(!asm.in_progress());
+        },
+    );
+}
+
+#[test]
+fn prop_chunk_assembler_is_total_over_garbage() {
+    check(
+        Config::default().cases(200),
+        "assembler never panics on arbitrary (seq, of, payload)",
+        |g| {
+            let mut asm = ChunkAssembler::new();
+            let n = g.usize_range(0, 20);
+            for _ in 0..n {
+                let seq = g.rng().next_u64() as u32;
+                let of = g.rng().next_u64() as u32;
+                let len = g.usize_range(0, 64);
+                let payload = g.vec(len, |g| g.rng().next_u64() as u8);
+                let _ = asm.push(seq, of, &payload); // Ok or Err, never panic
+            }
+        },
+    );
+}
+
+// ---- auth handshake (satellite: wrong digest dropped silently, --------
+// right token runs end-to-end) ------------------------------------------
+
+#[test]
+fn auth_gate_rejects_wrong_token_and_admits_the_right_one() {
+    let token = "open sesame";
+    let server = WorkerServer::bind("127.0.0.1:0").expect("bind");
+    let addr = server.local_addr().expect("addr").to_string();
+    let cfg = WorkerConfig {
+        auth: Some(token.to_string()),
+        ..WorkerConfig::default()
+    };
+    std::thread::spawn(move || {
+        let _ = server.run(&cfg);
+    });
+
+    // A wrong digest is dropped without any reply frame.
+    let stream = std::net::TcpStream::connect(&addr).expect("connect");
+    let mut w = std::io::BufWriter::new(stream.try_clone().expect("clone"));
+    let mut r = std::io::BufReader::new(stream);
+    frame::send(
+        &mut w,
+        &Message::Hello {
+            wid: 0,
+            n_tasks: 0,
+            n_cancel_slots: 0,
+            time_scale: 1.0,
+            beat_ms: 0.0,
+            session: 0,
+            auth: auth_digest("not the token"),
+        },
+    )
+    .expect("send hello");
+    match frame::recv(&mut r) {
+        Err(e) => assert!(
+            matches!(e, frame::WireError::Frame(_)),
+            "expected a dropped connection, got {e:?}"
+        ),
+        Ok(m) => panic!("unauthenticated peer received a reply: {m:?}"),
+    }
+
+    // The all-zero NO_AUTH sentinel (an unconfigured coordinator) is
+    // rejected the same way — zeros never satisfy a required token.
+    let s = scenario("net-auth", 1, 3, 32.0, 0.05, 5);
+    let p = plan::build(&s, &spec());
+    let bad = opts(
+        5,
+        Transport::Tcp(TcpOptions {
+            addrs: vec![addr.clone(); 2],
+            auth: None,
+        }),
+    );
+    assert!(
+        run_plan(&s, &p, &bad).is_err(),
+        "tokenless coordinator must not pass an auth-requiring worker"
+    );
+
+    // The right token handshakes and the run verifies end-to-end.
+    let good = opts(
+        5,
+        Transport::Tcp(TcpOptions {
+            addrs: vec![addr; 2],
+            auth: Some(token.to_string()),
+        }),
+    );
+    let report = run_plan(&s, &p, &good).expect("authenticated run");
+    assert!(report.all_verified(1e-3), "{report:?}");
+}
+
+// ---- resumable sessions (tentpole: park on drop, replay past the ------
+// acked watermark, e2e recovery) ----------------------------------------
+
+/// Drive the worker protocol by hand: a resumable session whose socket
+/// is severed before any result lands, then a `Resume` that must replay
+/// exactly the parked results past the acked-row watermark.
+#[test]
+fn resume_replays_parked_results_past_the_watermark() {
+    let fault = FaultPlan::parse("drop:w1@0%").expect("fault plan");
+    let server = WorkerServer::bind("127.0.0.1:0").expect("bind");
+    let addr = server.local_addr().expect("addr").to_string();
+    let cfg = WorkerConfig {
+        fault: Some(fault),
+        ..WorkerConfig::default()
+    };
+    std::thread::spawn(move || {
+        let _ = server.run(&cfg);
+    });
+
+    const SESSION: u64 = 777;
+    // Session 777: Hello, two assignments, start barrier. The drop
+    // fault severs the socket at the first publish, so nothing arrives
+    // on this connection — the worker computes on and parks.
+    let stream = std::net::TcpStream::connect(&addr).expect("connect");
+    let mut w = std::io::BufWriter::new(stream.try_clone().expect("clone"));
+    let mut r = std::io::BufReader::new(stream);
+    frame::send(
+        &mut w,
+        &Message::Hello {
+            wid: 0,
+            n_tasks: 2,
+            n_cancel_slots: 2,
+            time_scale: 1e-6,
+            beat_ms: 0.0,
+            session: SESSION,
+            auth: NO_AUTH,
+        },
+    )
+    .expect("hello");
+    match frame::recv(&mut r).expect("hello ack") {
+        Message::Hello { .. } => {}
+        other => panic!("expected Hello ack, got {other:?}"),
+    }
+    // rows×cols = 2×2 against x = [1, 1]: task 0 → [3, 7], task 1 →
+    // [11, 15] (exact in f32).
+    for (task, a) in [(0u32, [1.0f32, 2.0, 3.0, 4.0]), (1, [5.0, 6.0, 7.0, 8.0])] {
+        frame::send(
+            &mut w,
+            &Message::TaskAssign {
+                task,
+                coded_start: task * 2,
+                rows: 2,
+                cols: 2,
+                delay_ms: 1.0 + task as f64,
+                a_block: a.to_vec(),
+                x: vec![1.0, 1.0],
+            },
+        )
+        .expect("assign");
+    }
+    frame::send(
+        &mut w,
+        &Message::Heartbeat {
+            nonce: 0,
+            rows_done: 0,
+            queue_depth: 0,
+            last_latency_ms: 0.0,
+        },
+    )
+    .expect("barrier");
+    // The injected drop severs the stream; drain to the error.
+    while frame::recv(&mut r).is_ok() {}
+
+    // Resume with last_acked_row = 2: the worker published two 2-row
+    // results, so exactly ONE (whichever published second) is past the
+    // watermark — the acked prefix is never replayed, never recomputed.
+    let mut parked = None;
+    for _ in 0..400 {
+        let stream = std::net::TcpStream::connect(&addr).expect("reconnect");
+        let mut w = std::io::BufWriter::new(stream.try_clone().expect("clone"));
+        let mut r = std::io::BufReader::new(stream);
+        frame::send(
+            &mut w,
+            &Message::Resume {
+                session_id: SESSION,
+                last_acked_row: 2,
+                auth: NO_AUTH,
+            },
+        )
+        .expect("resume");
+        match frame::recv(&mut r).expect("resume reply") {
+            Message::Hello { n_cancel_slots, .. } if n_cancel_slots == RESUME_PARKED => {
+                parked = Some((r, w));
+                break;
+            }
+            // RUNNING (still computing) or MISS (registry insert not
+            // reached yet — the barrier races the execute phase).
+            Message::Hello { n_cancel_slots, .. } if n_cancel_slots == RESUME_RUNNING => {}
+            Message::Hello { .. } => {}
+            other => panic!("expected Hello reply, got {other:?}"),
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    let (mut r, mut w) = parked.expect("session never reached RESUME_PARKED");
+
+    let mut results = Vec::new();
+    let stats = loop {
+        match frame::recv(&mut r).expect("replay stream") {
+            Message::PartialResult {
+                task, rows, values, ..
+            } => results.push((task, rows, values)),
+            Message::Shutdown {
+                computed,
+                skipped,
+                events,
+                ..
+            } => break (computed, skipped, events),
+            other => panic!("unexpected {other:?} in replay"),
+        }
+    };
+    assert_eq!(
+        results.len(),
+        1,
+        "watermark 2 must skip the first 2-row result: {results:?}"
+    );
+    let (task, rows, values) = &results[0];
+    assert_eq!(*rows, 2);
+    let want: &[f32] = if *task == 0 { &[3.0, 7.0] } else { &[11.0, 15.0] };
+    assert_eq!(values.as_slice(), want, "replayed values for task {task}");
+    // The parked drain stats travel with the replay.
+    assert_eq!(stats.0, 2, "both tasks computed despite the drop");
+    assert_eq!(stats.1, 0);
+    assert_eq!(stats.2.len(), 2);
+    // Release the resume connection.
+    frame::send(
+        &mut w,
+        &Message::Shutdown {
+            computed: 0,
+            skipped: 0,
+            disconnected: false,
+            events: Vec::new(),
+        },
+    )
+    .expect("release");
+}
+
+#[test]
+fn tcp_drop_is_resumed_and_decodes() {
+    // w1 (wid 0) severs its socket at the first publish but keeps
+    // computing. The armed coordinator must observe the disconnect,
+    // walk the Resume path (or re-queue on a miss) and still decode.
+    let fault = FaultPlan::parse("drop:w1@0%").expect("fault plan");
+    let s = scenario("net-drop", 2, 4, 64.0, 0.05, 11);
+    let p = plan::build(&s, &spec());
+    let addrs: Vec<String> = (0..4)
+        .map(|_| {
+            let server = WorkerServer::bind("127.0.0.1:0").expect("bind");
+            let addr = server.local_addr().expect("addr").to_string();
+            let cfg = WorkerConfig {
+                fault: Some(fault.clone()),
+                ..WorkerConfig::default()
+            };
+            std::thread::spawn(move || {
+                let _ = server.run(&cfg);
+            });
+            addr
+        })
+        .collect();
+    let mut o = opts(11, Transport::tcp(addrs));
+    o.time_scale = 2e-3;
+    let mut h = HealthConfig::fast();
+    h.armed = true;
+    o.health = h;
+    let report = run_plan(&s, &p, &o).unwrap();
+
+    assert!(report.all_verified(1e-3), "{report:?}");
+    let kinds: Vec<&str> = report.health.iter().map(|e| e.kind_label()).collect();
+    assert!(kinds.contains(&"disconnect"), "no disconnect logged: {kinds:?}");
+    assert!(
+        kinds.contains(&"reconnect") || kinds.contains(&"requeue"),
+        "neither resumed nor re-queued: {kinds:?}"
+    );
 }
