@@ -21,6 +21,7 @@ fn main() {
         seed: 3,
         keep_samples: false,
         threads: 0,
+        ziggurat: false,
     };
 
     let mut table = Table::new(&[

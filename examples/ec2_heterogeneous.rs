@@ -26,6 +26,7 @@ fn main() {
         seed: 11,
         keep_samples: false,
         threads: 0,
+        ziggurat: false,
     };
     let specs = [
         (Policy::UncodedUniform, LoadMethod::Exact),

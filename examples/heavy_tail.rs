@@ -35,6 +35,7 @@ fn main() {
         seed: 7,
         keep_samples: true,
         threads: 0,
+        ziggurat: false,
     };
 
     // A synthetic "measured" trace: shifted-exp base with a 4% population

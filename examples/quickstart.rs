@@ -38,6 +38,7 @@ fn main() {
         seed: 7,
         keep_samples: true,
         threads: 0,
+        ziggurat: false,
     };
 
     let mut table = Table::new(&[

@@ -11,14 +11,18 @@ Per scenario tag:
 
 * HARD (``small``, ``large``, ``ec2`` — the shifted-exponential
   kernels): ``<tag>/v2-trial-major`` trials/s must be >=
-  ``<tag>/legacy`` (within a small jitter allowance).
+  ``<tag>/legacy`` (within a small jitter allowance), and
+  ``<tag>/v3-chunked`` must be >= ``<tag>/v2-blocked`` under the same
+  allowance. A hard tag that carries ``v2-blocked`` but no
+  ``v3-chunked`` row fails too — the v3 trajectory must not silently
+  drop out of the record.
 * INFO (every other tag, e.g. the per-delay-family ``fam-*`` rows and
-  any future additions): the same ratio is printed but never fails the
-  build — the gate tolerates new keys so the record can grow without
-  breaking CI.
-* INFO: ``<tag>/v2-blocked`` vs trial-major is reported; blocked is a
-  different-bits fast path whose win varies with link count, so it
-  warns rather than fails.
+  any future additions): the same ratios are printed but never fail
+  the build — the gate tolerates new keys so the record can grow
+  without breaking CI.
+* INFO: ``<tag>/v2-blocked`` vs trial-major and ``<tag>/v3-zigg`` vs
+  chunked are reported; both are different-bits fast paths whose win
+  varies with link count and scenario, so they warn rather than fail.
 
 Usage: python3 bench_gate.py [path/to/BENCH_engine.json]
 """
@@ -80,6 +84,28 @@ def main() -> int:
             note = "" if bratio >= 1.0 else "  (blocked slower than trial-major — investigate)"
             print(f"{'':<12} blocked {blocked:>11.0f} trials/s   "
                   f"x{bratio:.2f} vs trial-major{note}")
+
+        # Kernel v3: chunked must hold the line against v2-blocked on
+        # the hard tags (same run, same machine load).
+        chunked = tput.get(f"{tag}/v3-chunked")
+        zigg = tput.get(f"{tag}/v3-zigg")
+        if blocked is not None and chunked is None and hard:
+            failures.append(f"{tag}: record has v2-blocked but no v3-chunked row")
+        if blocked is not None and chunked is not None:
+            cratio = chunked / blocked
+            if hard:
+                cverdict = "OK" if cratio >= JITTER else "REGRESSION"
+            else:
+                cverdict = "INFO"
+            print(f"{'':<12} chunked {chunked:>11.0f} trials/s   "
+                  f"x{cratio:.2f} vs blocked  [{cverdict}]")
+            if hard and cratio < JITTER:
+                failures.append(f"{tag}: v3-chunked is {cratio:.2f}x v2-blocked")
+        if zigg is not None and chunked is not None:
+            zratio = zigg / chunked
+            note = "" if zratio >= 1.0 else "  (ziggurat slower than inverse transform here)"
+            print(f"{'':<12} zigg    {zigg:>11.0f} trials/s   "
+                  f"x{zratio:.2f} vs chunked{note}")
 
     if hard_pairs == 0:
         print("bench gate: no hard legacy/v2 pairs found in the record",

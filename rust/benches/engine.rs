@@ -1,4 +1,4 @@
-//! `cargo bench --bench engine` — the kernel-v2 perf trajectory.
+//! `cargo bench --bench engine` — the kernel perf trajectory (v1→v3).
 //!
 //! Measures trials/second of the Monte-Carlo engine on the paper's three
 //! scenario shapes (fig4-style small scale, large scale, EC2 with
@@ -9,7 +9,12 @@
 //! * `v2-trial-major`— the SoA kernel, selection scan, shared pool;
 //!                     bit-for-bit identical results to `legacy`;
 //! * `v2-blocked`    — the SoA kernel with column-filled B-trial blocks
-//!                     (same distribution, different bits).
+//!                     (same distribution, different bits);
+//! * `v3-chunked`    — v2-blocked through the SIMD-width-chunked fill
+//!                     primitives plus thread-local scratch reuse
+//!                     (bit-identical to `v2-blocked`);
+//! * `v3-zigg`       — `v3-chunked` with the ziggurat exponential
+//!                     sampler (same distribution, different bits).
 //!
 //! Kernel rows pin `threads: 1` so the comparison is the sampling loop,
 //! not the scheduler; one all-cores pair quantifies the pool-reuse win on
@@ -53,6 +58,7 @@ fn opts(trials: usize, threads: usize) -> McOptions {
         seed: 2022,
         keep_samples: false,
         threads,
+        ziggurat: false,
     }
 }
 
@@ -77,6 +83,17 @@ fn kernel_rows(
     results.push(r);
     let r = bench(trials).run(&format!("{tag}/v2-blocked"), || {
         sim::run_ordered(s, p, &o, SampleOrder::Blocked).system.mean()
+    });
+    println!("{}", r.report());
+    results.push(r);
+    let r = bench(trials).run(&format!("{tag}/v3-chunked"), || {
+        sim::run_ordered(s, p, &o, SampleOrder::Chunked).system.mean()
+    });
+    println!("{}", r.report());
+    results.push(r);
+    let oz = McOptions { ziggurat: true, ..o };
+    let r = bench(trials).run(&format!("{tag}/v3-zigg"), || {
+        sim::run_ordered(s, p, &oz, SampleOrder::Chunked).system.mean()
     });
     println!("{}", r.report());
     results.push(r);

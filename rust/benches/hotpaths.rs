@@ -121,6 +121,7 @@ fn bench_mc_engine() {
             seed: 5,
             keep_samples: false,
             threads,
+            ziggurat: false,
         };
         let r = quick()
             .items(20_000.0)

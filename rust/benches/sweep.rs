@@ -4,9 +4,11 @@
 //!
 //! Serial = one `sim::run` per cell (fresh thread spawn per cell, a
 //! barrier at each cell's slowest shard). Batched = every cell's shards
-//! drained through one shared pool (`exec::BatchRunner`). Identical
+//! drained through one shared pool (`exec::BatchRunner`). Fused
+//! (kernel v3) = the batched path with the whole grid compiled into one
+//! column arena, killing the per-cell compile allocations. Identical
 //! numerical results (bit-for-bit per cell at pinned `cell_streams`);
-//! only the scheduling differs.
+//! only the scheduling and allocation differ.
 
 use std::time::Duration;
 
@@ -30,6 +32,7 @@ fn main() {
             trials: spec.trials,
             keep_samples: false,
             order: SampleOrder::TrialMajor,
+            ziggurat: false,
         })
         .collect();
     let total_trials = (jobs.len() * spec.trials) as f64;
@@ -60,6 +63,7 @@ fn main() {
                         seed: j.seed,
                         keep_samples: false,
                         threads: 0,
+                        ziggurat: false,
                     },
                 );
             }
@@ -77,9 +81,22 @@ fn main() {
         });
     println!("{}", batched.report());
 
+    let fused_runner = BatchRunner { fused: true, ..BatchRunner::default() };
+    let fused = Bench::new()
+        .warmup(Duration::from_millis(300))
+        .measure_time(measure)
+        .max_iters(20)
+        .items(total_trials)
+        .run("sweep::batched_fused_arena", || {
+            fused_runner.run(&jobs).expect("fused batch run")
+        });
+    println!("{}", fused.report());
+
     let speedup = serial.mean.as_secs_f64() / batched.mean.as_secs_f64();
     println!("\nbatched/serial wall-time speedup: {speedup:.2}×");
+    let fused_speedup = batched.mean.as_secs_f64() / fused.mean.as_secs_f64();
+    println!("fused/batched wall-time speedup: {fused_speedup:.2}×");
     let out = repo_root_record("BENCH_sweep.json");
-    write_json(&out, "sweep", &[serial, batched]).expect("write BENCH_sweep.json");
+    write_json(&out, "sweep", &[serial, batched, fused]).expect("write BENCH_sweep.json");
     println!("wrote {out}");
 }

@@ -134,7 +134,8 @@ USAGE:
   coded-coop sweep export --figure <id> [--trials N] [--seed S] [--out FILE.json]
   coded-coop sweep run (--spec FILE.json | --figure <id>) [--trials N]
                   [--seed S] [--threads T] [--cell-streams C]
-                  [--order trial_major|blocked] [--out results.json]
+                  [--order trial_major|blocked|chunked] [--ziggurat] [--fused]
+                  [--out results.json]
   coded-coop serve [--figure serving] [--trials N] [--jobs N] [--seed S]
                   [--records FILE] [--no-records] [--out results.json]
   coded-coop serve --scenario <small|large|ec2|FILE.json> [--policy P] [--loads L]
@@ -541,13 +542,20 @@ fn cmd_sweep_run(args: &Args) -> anyhow::Result<()> {
         (None, None) => anyhow::bail!("sweep run needs --spec FILE.json or --figure <id>"),
     };
     if let Some(o) = args.flag("order") {
-        // Kernel sampling order: `blocked` trades bit-reproducibility
-        // against trial-major runs for throughput (same distribution).
+        // Kernel sampling order: `blocked`/`chunked` trade
+        // bit-reproducibility against trial-major runs for throughput
+        // (same distribution).
         spec.sample_order = crate::sim::SampleOrder::parse(o)?;
+    }
+    if args.switch("ziggurat") {
+        // Kernel v3 exponential sampler; `expand()` enforces the
+        // chunked-order requirement with a real error message.
+        spec.ziggurat = true;
     }
     let opts = SweepOptions {
         threads: args.usize_flag("threads", 0)?,
         cell_streams: args.usize_flag("cell-streams", 0)?,
+        fused: args.switch("fused"),
     };
     let t0 = std::time::Instant::now();
     let result = experiment::run_sweep(&spec, &opts)?;
@@ -1205,6 +1213,7 @@ mod tests {
             &SweepOptions {
                 threads: 2,
                 cell_streams: 2,
+                fused: false,
             },
         )
         .unwrap();

@@ -20,6 +20,16 @@
 //! makes the sweep rewrites of the figure harnesses golden-parity
 //! testable (`rust/tests/sweep_parity.rs`).
 //!
+//! **Fused grid mode** (kernel v3, [`BatchRunner::fused`]): instead of
+//! one `Compiled` (and its column allocations) per cell, the whole grid
+//! is compiled into ONE column arena — a single allocation per column
+//! across every master of every cell — and shards drive the engine's
+//! column-view trial loops over per-cell sub-ranges. Compile arithmetic
+//! and trial code are shared with the per-cell path, so fused results
+//! are bit-for-bit the non-fused results for every sample order; what
+//! changes is allocation count (O(columns) instead of O(cells × columns))
+//! and compile locality on wide grids of small cells.
+//!
 //! Common random numbers (variance-reduced policy comparisons) are a
 //! seeding choice, not an engine mode: give every job the same `seed` and
 //! all cells sample identical delay streams (`experiment::SweepSpec`'s
@@ -30,7 +40,7 @@ use std::sync::Arc;
 
 use crate::config::Scenario;
 use crate::plan::Plan;
-use crate::sim::engine::{self, Compiled, SampleOrder, ShardOut};
+use crate::sim::engine::{self, ColumnArena, Compiled, SampleOrder, ShardOut};
 
 use super::{pool, Outcome};
 
@@ -46,8 +56,12 @@ pub struct BatchJob {
     pub keep_samples: bool,
     /// RNG consumption order (`TrialMajor` reproduces `sim::run`
     /// bit-for-bit; `Blocked` is the different-bits/same-distribution
-    /// fast path — see `sim::engine`'s bit contract).
+    /// fast path; `Chunked` is `Blocked` with thread-local scratch reuse
+    /// — see `sim::engine`'s bit contract).
     pub order: SampleOrder,
+    /// Draw exponentials through the ziggurat sampler (honored by
+    /// `SampleOrder::Chunked` only; distribution-equal, different bits).
+    pub ziggurat: bool,
 }
 
 /// Shared-pool batch engine over [`crate::sim::engine`] shards.
@@ -60,10 +74,14 @@ pub struct BatchRunner {
     /// (0 = all cores). Independent of `pool_threads` — the pool only
     /// decides who executes a shard, never how trials are split.
     pub cell_streams: usize,
+    /// Compile the whole grid into one fused column arena (kernel v3)
+    /// instead of one `Compiled` per cell. Bit-for-bit the same results;
+    /// kills the per-cell compile allocations.
+    pub fused: bool,
 }
 
-/// One schedulable unit: everything `engine::run_shard_ordered` needs,
-/// copied out of the job so pool closures own their inputs.
+/// One schedulable unit: everything a shard run needs, copied out of the
+/// job so pool closures own their inputs.
 #[derive(Clone, Copy)]
 struct Shard {
     job: usize,
@@ -72,6 +90,91 @@ struct Shard {
     seed: u64,
     keep_samples: bool,
     order: SampleOrder,
+    ziggurat: bool,
+}
+
+/// The whole grid compiled into one column arena, plus where each job's
+/// masters live in it.
+struct FusedGrid {
+    arena: ColumnArena,
+    jobs: Vec<FusedJob>,
+}
+
+#[derive(Clone, Copy)]
+struct FusedJob {
+    m_start: usize,
+    m_cnt: usize,
+    max_links: usize,
+}
+
+impl FusedGrid {
+    fn new(jobs: &[BatchJob]) -> Self {
+        let n_masters = jobs.iter().map(|j| j.plan.masters.len()).sum();
+        let n_links = jobs
+            .iter()
+            .flat_map(|j| j.plan.masters.iter())
+            .map(|mp| mp.entries.len())
+            .sum();
+        let mut arena = ColumnArena::with_capacity(n_masters, n_links);
+        let mut fjobs = Vec::with_capacity(jobs.len());
+        let mut m_start = 0usize;
+        for j in jobs {
+            for (m, mp) in j.plan.masters.iter().enumerate() {
+                arena.push_master(&j.scenario, m, mp, j.plan.uncoded);
+            }
+            let m_cnt = j.plan.masters.len();
+            let max_links = j
+                .plan
+                .masters
+                .iter()
+                .map(|mp| mp.entries.len())
+                .max()
+                .unwrap_or(0);
+            fjobs.push(FusedJob {
+                m_start,
+                m_cnt,
+                max_links,
+            });
+            m_start += m_cnt;
+        }
+        FusedGrid { arena, jobs: fjobs }
+    }
+
+    fn run_shard(&self, sh: Shard) -> ShardOut {
+        let fj = self.jobs[sh.job];
+        let views: Vec<_> = (fj.m_start..fj.m_start + fj.m_cnt)
+            .map(|m| self.arena.master(m))
+            .collect();
+        engine::run_shard_cols(
+            &views,
+            fj.max_links,
+            sh.seed,
+            sh.stream,
+            sh.trials,
+            sh.keep_samples,
+            sh.order,
+            sh.ziggurat,
+        )
+    }
+}
+
+// `&Vec` (not `&[..]`) because this must match the `fn(&C, Shard)`
+// pointer shape `execute` takes, with `C = Vec<Compiled>` under `Arc`.
+#[allow(clippy::ptr_arg)]
+fn run_shard_per_cell(compiled: &Vec<Compiled>, sh: Shard) -> ShardOut {
+    engine::run_shard_opts(
+        &compiled[sh.job],
+        sh.seed,
+        sh.stream,
+        sh.trials,
+        sh.keep_samples,
+        sh.order,
+        sh.ziggurat,
+    )
+}
+
+fn run_shard_fused(grid: &FusedGrid, sh: Shard) -> ShardOut {
+    grid.run_shard(sh)
 }
 
 impl BatchRunner {
@@ -84,11 +187,6 @@ impl BatchRunner {
                 .validate(&j.scenario)
                 .map_err(|e| anyhow::anyhow!("batch job {i} ('{}'): {e}", j.plan.label))?;
         }
-        let compiled: Arc<Vec<Compiled>> = Arc::new(
-            jobs.iter()
-                .map(|j| Compiled::new(&j.scenario, &j.plan))
-                .collect(),
-        );
 
         // Flatten cells into shards; shard indices are contiguous and in
         // stream order per job, so regrouping below preserves the merge
@@ -109,65 +207,32 @@ impl BatchRunner {
                         seed: j.seed,
                         keep_samples: j.keep_samples,
                         order: j.order,
+                        ziggurat: j.ziggurat,
                     });
                 }
             }
             sizes_per_job.push(sizes);
         }
 
-        let run_one = |c: &Compiled, sh: Shard| {
-            engine::run_shard_ordered(c, sh.seed, sh.stream, sh.trials, sh.keep_samples, sh.order)
-        };
-        let outs: Vec<ShardOut> = if self.pool_threads == 0 {
-            // Shared process pool: no spawn/join per grid at all.
-            pool::run_all(
-                shards
-                    .iter()
-                    .map(|&sh| {
-                        let c = Arc::clone(&compiled);
-                        move || run_one(&c[sh.job], sh)
-                    })
-                    .collect(),
-            )
+        // Compile (per cell or fused) and drain the shards. Both paths
+        // share the scheduling in `execute`; the compile state travels as
+        // an `Arc` plus a plain-fn shard runner so the shared process
+        // pool's `'static` closure bound is met without cloning state.
+        let outs: Vec<ShardOut> = if self.fused {
+            self.execute(Arc::new(FusedGrid::new(jobs)), &shards, run_shard_fused)
         } else {
-            // Explicit width: a scoped work-stealing pool of exactly
-            // `pool_threads` threads (sizing tests pin this path).
-            let width = self.pool_threads.min(shards.len().max(1));
-            let next = AtomicUsize::new(0);
-            let mut collected: Vec<(usize, ShardOut)> = std::thread::scope(|scope| {
-                let shards_ref = &shards;
-                let compiled_ref = &compiled;
-                let next_ref = &next;
-                let run_ref = &run_one;
-                let handles: Vec<_> = (0..width)
-                    .map(|_| {
-                        scope.spawn(move || {
-                            let mut local: Vec<(usize, ShardOut)> = Vec::new();
-                            loop {
-                                let i = next_ref.fetch_add(1, Ordering::Relaxed);
-                                if i >= shards_ref.len() {
-                                    break;
-                                }
-                                let sh = shards_ref[i];
-                                local.push((i, run_ref(&compiled_ref[sh.job], sh)));
-                            }
-                            local
-                        })
-                    })
-                    .collect();
-                handles
-                    .into_iter()
-                    .flat_map(|h| h.join().unwrap())
-                    .collect()
-            });
-            collected.sort_by_key(|&(i, _)| i);
-            collected.into_iter().map(|(_, o)| o).collect()
+            let compiled: Arc<Vec<Compiled>> = Arc::new(
+                jobs.iter()
+                    .map(|j| Compiled::new(&j.scenario, &j.plan))
+                    .collect(),
+            );
+            self.execute(compiled, &shards, run_shard_per_cell)
         };
 
         let mut outs_iter = outs.into_iter();
         let mut outcomes = Vec::with_capacity(jobs.len());
         for (ji, j) in jobs.iter().enumerate() {
-            let m_cnt = compiled[ji].n_masters();
+            let m_cnt = j.plan.masters.len();
             let outs: Vec<ShardOut> = sizes_per_job[ji]
                 .iter()
                 .map(|&t| {
@@ -190,6 +255,59 @@ impl BatchRunner {
         }
         Ok(outcomes)
     }
+
+    /// Drain `shards` through the configured pool, results in shard
+    /// order. `run_one` is a plain fn so shared-pool closures stay
+    /// `'static` (they own only the `Arc` and the `Copy` shard).
+    fn execute<C: Send + Sync + 'static>(
+        &self,
+        ctx: Arc<C>,
+        shards: &[Shard],
+        run_one: fn(&C, Shard) -> ShardOut,
+    ) -> Vec<ShardOut> {
+        if self.pool_threads == 0 {
+            // Shared process pool: no spawn/join per grid at all.
+            pool::run_all(
+                shards
+                    .iter()
+                    .map(|&sh| {
+                        let c = Arc::clone(&ctx);
+                        move || run_one(&c, sh)
+                    })
+                    .collect(),
+            )
+        } else {
+            // Explicit width: a scoped work-stealing pool of exactly
+            // `pool_threads` threads (sizing tests pin this path).
+            let width = self.pool_threads.min(shards.len().max(1));
+            let next = AtomicUsize::new(0);
+            let mut collected: Vec<(usize, ShardOut)> = std::thread::scope(|scope| {
+                let ctx_ref = &ctx;
+                let next_ref = &next;
+                let handles: Vec<_> = (0..width)
+                    .map(|_| {
+                        scope.spawn(move || {
+                            let mut local: Vec<(usize, ShardOut)> = Vec::new();
+                            loop {
+                                let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                                if i >= shards.len() {
+                                    break;
+                                }
+                                local.push((i, run_one(ctx_ref, shards[i])));
+                            }
+                            local
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .flat_map(|h| h.join().unwrap())
+                    .collect()
+            });
+            collected.sort_by_key(|&(i, _)| i);
+            collected.into_iter().map(|(_, o)| o).collect()
+        }
+    }
 }
 
 #[cfg(test)]
@@ -210,6 +328,7 @@ mod tests {
             trials,
             keep_samples: true,
             order: SampleOrder::TrialMajor,
+            ziggurat: false,
         }
     }
 
@@ -224,6 +343,7 @@ mod tests {
         let outs = BatchRunner {
             pool_threads: 3,
             cell_streams: 2,
+            fused: false,
         }
         .run(&jobs)
         .unwrap();
@@ -237,6 +357,7 @@ mod tests {
                     seed: j.seed,
                     keep_samples: true,
                     threads: 2,
+                    ziggurat: false,
                 },
             );
             assert_eq!(o.system.mean(), direct.system.mean(), "{}", o.label);
@@ -263,12 +384,14 @@ mod tests {
         let a = BatchRunner {
             pool_threads: 1,
             cell_streams: 3,
+            fused: false,
         }
         .run(&jobs)
         .unwrap();
         let b = BatchRunner {
             pool_threads: 8,
             cell_streams: 3,
+            fused: false,
         }
         .run(&jobs)
         .unwrap();
@@ -288,6 +411,7 @@ mod tests {
         let outs = BatchRunner {
             pool_threads: 2,
             cell_streams: 3,
+            fused: false,
         }
         .run(&jobs)
         .unwrap();
@@ -299,6 +423,7 @@ mod tests {
                 seed: 3,
                 keep_samples: true,
                 threads: 3,
+                ziggurat: false,
             },
         );
         assert_eq!(outs[0].system.count(), 4);
@@ -318,6 +443,7 @@ mod tests {
         let outs = BatchRunner {
             pool_threads: 2,
             cell_streams: 2,
+            fused: false,
         }
         .run(&[j])
         .unwrap();
@@ -329,6 +455,7 @@ mod tests {
                 seed: 17,
                 keep_samples: true,
                 threads: 2,
+                ziggurat: false,
             },
             SampleOrder::Blocked,
         );
@@ -336,6 +463,88 @@ mod tests {
         assert_eq!(
             outs[0].samples.as_ref().unwrap(),
             direct.samples.as_ref().unwrap()
+        );
+    }
+
+    #[test]
+    fn fused_grid_is_bit_identical_to_per_cell_compile() {
+        // The fused arena shares the compile arithmetic and the trial
+        // loops with the per-cell path, so every order must agree to the
+        // last bit — including the mixed-policy, mixed-seed grid shape a
+        // real sweep produces.
+        let s = Scenario::small_scale(4, 2.0, CommModel::Stochastic);
+        let s2 = Scenario::small_scale(8, 3.0, CommModel::Stochastic);
+        for order in [
+            SampleOrder::TrialMajor,
+            SampleOrder::Blocked,
+            SampleOrder::Chunked,
+        ] {
+            let mk = || {
+                let mut jobs = vec![
+                    job(&s, "dedi-iter", 7, 1_500),
+                    job(&s, "uncoded", 7, 1_500),
+                    job(&s2, "frac", 11, 700),
+                ];
+                for j in &mut jobs {
+                    j.order = order;
+                }
+                jobs
+            };
+            let plain = BatchRunner {
+                pool_threads: 2,
+                cell_streams: 2,
+                fused: false,
+            }
+            .run(&mk())
+            .unwrap();
+            let fused = BatchRunner {
+                pool_threads: 2,
+                cell_streams: 2,
+                fused: true,
+            }
+            .run(&mk())
+            .unwrap();
+            for (x, y) in plain.iter().zip(&fused) {
+                assert_eq!(x.system.mean(), y.system.mean(), "{:?} {}", order, x.label);
+                assert_eq!(x.system.sem(), y.system.sem(), "{:?} {}", order, x.label);
+                assert_eq!(x.samples, y.samples, "{:?} {}", order, x.label);
+            }
+        }
+    }
+
+    #[test]
+    fn fused_ziggurat_jobs_sample_the_same_law() {
+        // Fused + Chunked + ziggurat: different bits from the inverse
+        // transform by construction, but the same distribution — and the
+        // fused/non-fused pair must still agree bit-for-bit with each
+        // other (same ziggurat draws through the same core).
+        let s = Scenario::small_scale(12, 2.0, CommModel::Stochastic);
+        let mk = |zig: bool| {
+            let mut j = job(&s, "dedi-iter", 23, 20_000);
+            j.order = SampleOrder::Chunked;
+            j.ziggurat = zig;
+            vec![j]
+        };
+        let runner_fused = BatchRunner {
+            pool_threads: 2,
+            cell_streams: 2,
+            fused: true,
+        };
+        let runner_plain = BatchRunner {
+            pool_threads: 2,
+            cell_streams: 2,
+            fused: false,
+        };
+        let zig_fused = runner_fused.run(&mk(true)).unwrap();
+        let zig_plain = runner_plain.run(&mk(true)).unwrap();
+        assert_eq!(zig_fused[0].samples, zig_plain[0].samples);
+        let inv = runner_plain.run(&mk(false)).unwrap();
+        let (m1, m2) = (inv[0].system.mean(), zig_fused[0].system.mean());
+        let sem = (inv[0].system.sem().powi(2) + zig_fused[0].system.sem().powi(2)).sqrt();
+        assert!(
+            (m1 - m2).abs() < 6.0 * sem,
+            "ziggurat mean {m2} vs inverse-transform {m1} (6σ = {})",
+            6.0 * sem
         );
     }
 

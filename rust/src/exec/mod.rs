@@ -151,6 +151,7 @@ impl Executor for SimExecutor {
                 seed: opts.seed,
                 keep_samples: opts.keep_samples,
                 threads: opts.threads,
+                ziggurat: false,
             },
         );
         Ok(Outcome {
@@ -277,6 +278,7 @@ mod tests {
                 seed: 5,
                 keep_samples: false,
                 threads: 0,
+                ziggurat: false,
             },
         );
         assert_eq!(out.system.mean(), direct.system.mean());

@@ -45,6 +45,10 @@ pub struct SweepOptions {
     /// RNG streams per cell (`McOptions::threads` semantics; 0 = all
     /// cores). Pin it to reproduce a serial `sim::run` split exactly.
     pub cell_streams: usize,
+    /// Compile the whole grid into one fused column arena (kernel v3)
+    /// instead of one compile per cell. Bit-for-bit the same results for
+    /// every sample order; batch sweeps only (ignored by serving specs).
+    pub fused: bool,
 }
 
 /// One evaluated grid cell.
@@ -179,11 +183,13 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> anyhow::Result<SweepR
             trials: spec.trials,
             keep_samples: spec.keep_samples,
             order: spec.sample_order,
+            ziggurat: spec.ziggurat,
         });
     }
     let runner = BatchRunner {
         pool_threads: opts.threads,
         cell_streams: opts.cell_streams,
+        fused: opts.fused,
     };
     let outcomes = runner.run(&jobs)?;
     let mut results = Vec::with_capacity(cells.len());
@@ -365,6 +371,7 @@ mod tests {
         let opts = SweepOptions {
             threads: 2,
             cell_streams: 2,
+            fused: false,
         };
         let result = run_sweep(&spec, &opts).unwrap();
         assert_eq!(result.cells.len(), 2);
@@ -378,6 +385,7 @@ mod tests {
                     seed: spec.seed,
                     keep_samples: false,
                     threads: 2,
+                    ziggurat: false,
                 },
             );
             assert_eq!(c.outcome.system.mean(), direct.system.mean(), "{}", c.index);

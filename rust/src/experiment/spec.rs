@@ -568,6 +568,12 @@ pub struct SweepSpec {
     /// different bits (`sim::engine`'s documented contract), so golden
     /// parity only holds trial-major.
     pub sample_order: SampleOrder,
+    /// Draw exponentials through the ziggurat sampler (kernel v3).
+    /// Requires `sample_order: "chunked"` — the only order whose bit
+    /// contract already allows different bits; rejected by
+    /// [`SweepSpec::expand`] otherwise. Distribution-equal, not
+    /// bit-reproducible.
+    pub ziggurat: bool,
     /// Serving mode: when present, cells run as online job streams on
     /// [`crate::serve`] (sojourn-time outcomes) instead of one-shot
     /// Monte-Carlo batches; `load_factor` / `churn_rate` axes apply.
@@ -592,6 +598,7 @@ impl SweepSpec {
             crn: true,
             keep_samples: false,
             sample_order: SampleOrder::TrialMajor,
+            ziggurat: false,
             arrivals: None,
         }
     }
@@ -623,6 +630,12 @@ impl SweepSpec {
             "sweep spec '{}': MC seed {} exceeds the JSON-safe maximum {MAX_SEED}",
             self.name,
             self.seed
+        );
+        anyhow::ensure!(
+            !self.ziggurat || self.sample_order == SampleOrder::Chunked,
+            "sweep spec '{}': 'ziggurat' requires sample_order \"chunked\" \
+             (the other orders are bit-exact by contract)",
+            self.name
         );
         let mut seen: Vec<&str> = Vec::new();
         for ax in &self.axes {
@@ -754,6 +767,7 @@ impl SweepSpec {
             "sample_order",
             Json::Str(self.sample_order.as_str().to_string()),
         );
+        j.set("ziggurat", Json::Bool(self.ziggurat));
         if let Some(a) = &self.arrivals {
             j.set("arrivals", a.to_json());
         }
@@ -816,6 +830,7 @@ impl SweepSpec {
                     anyhow::anyhow!("'sample_order' must be a string")
                 })?)?,
             },
+            ziggurat: j.get("ziggurat").and_then(Json::as_bool).unwrap_or(false),
             arrivals: match j.get("arrivals") {
                 None | Some(Json::Null) => None,
                 Some(aj) => Some(ArrivalSpec::from_json(aj)?),
@@ -1340,11 +1355,30 @@ mod tests {
         let spec = SweepSpec::from_json(&json::parse(text).unwrap()).unwrap();
         assert_eq!(spec.sample_order, SampleOrder::Blocked);
         let text = r#"{
+            "schema": 1, "sample_order": "chunked", "ziggurat": true,
+            "policies": [{"policy": "dedi-iter", "values": "markov", "loads": "markov"}]
+        }"#;
+        let spec = SweepSpec::from_json(&json::parse(text).unwrap()).unwrap();
+        assert_eq!(spec.sample_order, SampleOrder::Chunked);
+        assert!(spec.ziggurat);
+        assert!(spec.expand().is_ok());
+        let text = r#"{
             "schema": 1, "sample_order": "spiral",
             "policies": [{"policy": "dedi-iter", "values": "markov", "loads": "markov"}]
         }"#;
         let e = SweepSpec::from_json(&json::parse(text).unwrap()).unwrap_err();
         assert!(e.to_string().contains("sample order"), "{e}");
+    }
+
+    #[test]
+    fn ziggurat_requires_chunked_order() {
+        let text = r#"{
+            "schema": 1, "sample_order": "blocked", "ziggurat": true,
+            "policies": [{"policy": "dedi-iter", "values": "markov", "loads": "markov"}]
+        }"#;
+        let spec = SweepSpec::from_json(&json::parse(text).unwrap()).unwrap();
+        let e = spec.expand().unwrap_err();
+        assert!(e.to_string().contains("ziggurat"), "{e}");
     }
 
     #[test]
@@ -1429,9 +1463,12 @@ mod tests {
                     keep_samples: g.bool(),
                     sample_order: if g.bool() {
                         SampleOrder::Blocked
+                    } else if g.bool() {
+                        SampleOrder::Chunked
                     } else {
                         SampleOrder::TrialMajor
                     },
+                    ziggurat: g.bool(),
                     arrivals: if g.bool() {
                         Some(ArrivalSpec {
                             process: if g.bool() {

@@ -49,6 +49,7 @@ impl FigureOptions {
             seed: catalog::fig_mc_seed(self.seed),
             keep_samples,
             threads: self.threads,
+            ziggurat: false,
         }
     }
 }
@@ -111,6 +112,7 @@ pub fn sweep(id: &str, opts: &FigureOptions) -> SweepResult {
         &SweepOptions {
             threads: opts.threads,
             cell_streams: opts.threads,
+            fused: false,
         },
     )
     .unwrap_or_else(|e| panic!("sweep '{id}': {e}"))

@@ -44,7 +44,7 @@ use std::sync::Arc;
 
 use super::params::LinkParams;
 use crate::util::json::Json;
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, FILL_LANES};
 use crate::util::stats::{gamma_fn, Ecdf};
 
 /// Plain exponential distribution (eq. 1 building block).
@@ -477,30 +477,71 @@ impl DelayFamily {
     /// the bimodal arm draws its uniform column before its exponential
     /// column, so it is same-distribution/different-bits — exactly the
     /// documented blocked-sampling contract.
+    #[inline]
     pub fn fill_block(&self, rng: &mut Rng, col: &mut [f64], scratch: &mut [f64]) {
+        self.fill_block_opts(rng, col, scratch, false);
+    }
+
+    /// [`DelayFamily::fill_block`] with the kernel-v3 knob: when
+    /// `ziggurat` is true, every exponential column is drawn through
+    /// [`Rng::fill_exp_zig`] instead of the inverse transform. The
+    /// ziggurat consumes a variable number of generator words per draw,
+    /// so `ziggurat = true` is *distribution-equal* only — the
+    /// bit-parity contract above holds solely for `ziggurat = false`.
+    ///
+    /// All transform passes are chunked [`FILL_LANES`] wide (fixed-size
+    /// array views the autovectorizer can lower to SIMD lanes, plus a
+    /// scalar remainder); chunking reorders nothing, so it never
+    /// affects which bits are produced.
+    pub fn fill_block_opts(
+        &self,
+        rng: &mut Rng,
+        col: &mut [f64],
+        scratch: &mut [f64],
+        ziggurat: bool,
+    ) {
+        #[inline]
+        fn fill_exp_mode(rng: &mut Rng, rate: f64, col: &mut [f64], ziggurat: bool) {
+            if ziggurat {
+                rng.fill_exp_zig(rate, col);
+            } else {
+                rng.fill_exp(rate, col);
+            }
+        }
+        /// Apply `f` element-wise over FILL_LANES-wide array chunks,
+        /// then the scalar remainder.
+        #[inline]
+        fn transform_chunked(col: &mut [f64], f: impl Fn(f64) -> f64) {
+            let mut chunks = col.chunks_exact_mut(FILL_LANES);
+            for chunk in &mut chunks {
+                let lanes: &mut [f64; FILL_LANES] = chunk.try_into().expect("exact chunk");
+                for c in lanes.iter_mut() {
+                    *c = f(*c);
+                }
+            }
+            for c in chunks.into_remainder() {
+                *c = f(*c);
+            }
+        }
         match self {
             DelayFamily::ShiftedExp { shift, rate } => {
-                rng.fill_exp(*rate, col);
-                for c in col.iter_mut() {
-                    *c = shift + *c;
-                }
+                fill_exp_mode(rng, *rate, col, ziggurat);
+                let shift = *shift;
+                transform_chunked(col, |c| shift + c);
             }
             DelayFamily::Weibull {
                 shift,
                 scale,
                 shape,
             } => {
-                rng.fill_exp(1.0, col);
-                let inv = 1.0 / *shape;
-                for c in col.iter_mut() {
-                    *c = shift + scale * c.powf(inv);
-                }
+                fill_exp_mode(rng, 1.0, col, ziggurat);
+                let (shift, scale, inv) = (*shift, *scale, 1.0 / *shape);
+                transform_chunked(col, |c| shift + scale * c.powf(inv));
             }
             DelayFamily::Pareto { scale, alpha } => {
-                rng.fill_exp(1.0, col);
-                for c in col.iter_mut() {
-                    *c = scale * (*c / alpha).exp();
-                }
+                fill_exp_mode(rng, 1.0, col, ziggurat);
+                let (scale, alpha) = (*scale, *alpha);
+                transform_chunked(col, |c| scale * (c / alpha).exp());
             }
             DelayFamily::Bimodal {
                 shift,
@@ -510,14 +551,29 @@ impl DelayFamily {
             } => {
                 let nb = col.len();
                 rng.fill_f64(&mut scratch[..nb]);
-                rng.fill_exp(*rate, col);
-                for (c, &u) in col.iter_mut().zip(scratch.iter()) {
-                    let f = if u < *prob { *slow } else { 1.0 };
+                fill_exp_mode(rng, *rate, col, ziggurat);
+                let (shift, prob, slow) = (*shift, *prob, *slow);
+                let mut cc = col.chunks_exact_mut(FILL_LANES);
+                let mut uc = scratch[..nb].chunks_exact(FILL_LANES);
+                for (chunk, us) in (&mut cc).zip(&mut uc) {
+                    let lanes: &mut [f64; FILL_LANES] = chunk.try_into().expect("exact chunk");
+                    let ulanes: &[f64; FILL_LANES] = us.try_into().expect("exact chunk");
+                    for (c, &u) in lanes.iter_mut().zip(ulanes.iter()) {
+                        let f = if u < prob { slow } else { 1.0 };
+                        *c = f * (shift + *c);
+                    }
+                }
+                for (c, &u) in cc.into_remainder().iter_mut().zip(uc.remainder().iter()) {
+                    let f = if u < prob { slow } else { 1.0 };
                     *c = f * (shift + *c);
                 }
             }
             DelayFamily::Empirical { ecdf, scale } => {
                 rng.fill_f64(col);
+                let scale = *scale;
+                // `quantile` walks the trace table — a scalar lookup per
+                // element, so the chunking buys nothing here; keep the
+                // plain loop.
                 for c in col.iter_mut() {
                     *c = scale * ecdf.quantile(*c);
                 }
@@ -1201,6 +1257,78 @@ mod tests {
                 // Generators stay in lockstep afterwards.
                 assert_eq!(a.next_u64(), b.next_u64(), "{}", kind.name());
             }
+        }
+    }
+
+    #[test]
+    fn fill_block_bit_parity_across_lengths() {
+        // The v3 chunked transform passes must not change a single bit
+        // at any column length — full chunks, remainders, sub-lane
+        // columns. Single-draw families compare against the scalar
+        // sampler; the bimodal arm compares against its documented
+        // column order (uniform column, then exponential column).
+        let traces = toy_traces();
+        for &len in &[1usize, 7, 8, 9, 63, 64, 65, 257] {
+            for kind in all_kinds() {
+                let fam = kind.resolve(0.25, 4.0, &traces);
+                let mut a = Rng::new(0xC0DE + len as u64);
+                let mut b = a.clone();
+                let mut col = vec![0.0f64; len];
+                let mut scratch = vec![0.0f64; len];
+                fam.fill_block(&mut a, &mut col, &mut scratch);
+                if let DelayFamily::Bimodal {
+                    shift,
+                    rate,
+                    prob,
+                    slow,
+                } = &fam
+                {
+                    let us: Vec<f64> = (0..len).map(|_| b.f64()).collect();
+                    let es: Vec<f64> = (0..len).map(|_| b.exp(*rate)).collect();
+                    for i in 0..len {
+                        let f = if us[i] < *prob { *slow } else { 1.0 };
+                        assert_eq!(col[i], f * (shift + es[i]), "bimodal len {len} draw {i}");
+                    }
+                } else {
+                    for (i, &x) in col.iter().enumerate() {
+                        assert_eq!(
+                            x,
+                            fam.sample(&mut b),
+                            "{}: len {len} draw {i}",
+                            kind.name()
+                        );
+                    }
+                }
+                assert_eq!(a.next_u64(), b.next_u64(), "{} len {len}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn fill_block_ziggurat_is_distribution_equal() {
+        // ziggurat = true swaps the exponential columns to the rejection
+        // sampler: different bits by construction, same law. Pin the
+        // column mean against the family's analytic mean for every arm.
+        let traces = toy_traces();
+        for kind in all_kinds() {
+            let fam = kind.resolve(0.25, 4.0, &traces);
+            let n = 50_000usize;
+            let mut col = vec![0.0f64; n];
+            let mut scratch = vec![0.0f64; n];
+            let mut r = Rng::new(0x216);
+            fam.fill_block_opts(&mut r, &mut col, &mut scratch, true);
+            assert!(
+                col.iter().all(|x| x.is_finite() && *x >= 0.0),
+                "{}: bad ziggurat draw",
+                kind.name()
+            );
+            let mean = col.iter().sum::<f64>() / n as f64;
+            assert!(
+                (mean - fam.mean()).abs() / fam.mean() < 0.1,
+                "{}: ziggurat mean {mean} vs analytic {}",
+                kind.name(),
+                fam.mean()
+            );
         }
     }
 

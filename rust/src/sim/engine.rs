@@ -1,4 +1,4 @@
-//! Trial sampler + thread-parallel Monte-Carlo driver — **kernel v2**.
+//! Trial sampler + thread-parallel Monte-Carlo driver — **kernel v3**.
 //!
 //! Every figure, sweep cell and ablation bottoms out in this per-trial
 //! loop, so it is the hottest path in the codebase. v2 is a
@@ -39,6 +39,26 @@
 //!   [`crate::exec::pool`] instead of spawning fresh threads per call,
 //!   and skips zero-trial trailing shards (`shard_sizes(4, 3) = [2,2,0]`)
 //!   at submit time while preserving stream numbering.
+//!
+//! Kernel **v3** layers three things on top (PR 9):
+//!
+//! * **SIMD-chunked fills** — [`crate::util::rng::Rng::fill_f64`]/
+//!   [`crate::util::rng::Rng::fill_exp`] and every
+//!   [`crate::model::dist::DelayFamily::fill_block`] transform pass walk
+//!   their columns in [`crate::util::rng::FILL_LANES`]-wide fixed-size
+//!   chunks the autovectorizer can lower to SIMD lanes. Chunking changes
+//!   no arithmetic and no draw order, so every existing bit contract
+//!   survives.
+//! * **[`SampleOrder::Chunked`] + ziggurat** — the blocked layout driven
+//!   through the shared block core with thread-local scratch reuse
+//!   across shards; bit-identical to [`SampleOrder::Blocked`] until
+//!   [`McOptions::ziggurat`] swaps the exponential columns to the
+//!   rejection sampler ([`crate::util::rng::Rng::fill_exp_zig`] — same
+//!   law, variable RNG consumption, so distribution-equal only).
+//! * **Arena-backed compile** — [`Compiled`] stores all masters' columns
+//!   in one `ColumnArena` (a single allocation per column), and the
+//!   batched engine's fused mode compiles a whole sweep grid into one
+//!   arena, driving the same shard loops over per-cell column views.
 
 use std::sync::Arc;
 
@@ -60,6 +80,11 @@ pub struct McOptions {
     /// the sampled values bit-for-bit; actual parallelism comes from the
     /// shared process pool.
     pub threads: usize,
+    /// Draw exponentials through the ziggurat rejection sampler
+    /// (kernel v3). Only honored by [`SampleOrder::Chunked`] — the
+    /// bit-exact orders ignore it (documented no-op), and chunked+zig
+    /// is distribution-equal only.
+    pub ziggurat: bool,
 }
 
 impl Default for McOptions {
@@ -69,6 +94,7 @@ impl Default for McOptions {
             seed: 0x51D_E0,
             keep_samples: false,
             threads: 0,
+            ziggurat: false,
         }
     }
 }
@@ -79,11 +105,16 @@ impl Default for McOptions {
 /// legacy order, bit-for-bit reproducible across kernel versions.
 /// `Blocked` fills B-trial blocks column-per-link: same delay
 /// distribution, different bits (see the module docs' bit contract).
+/// `Chunked` (kernel v3) is the blocked layout driven through the same
+/// block core with thread-local scratch reuse across shards — bit-for-
+/// bit identical to `Blocked` while `McOptions::ziggurat` is off, and
+/// the only order that honors the ziggurat flag.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum SampleOrder {
     #[default]
     TrialMajor,
     Blocked,
+    Chunked,
 }
 
 impl SampleOrder {
@@ -91,6 +122,7 @@ impl SampleOrder {
         match self {
             SampleOrder::TrialMajor => "trial_major",
             SampleOrder::Blocked => "blocked",
+            SampleOrder::Chunked => "chunked",
         }
     }
 
@@ -98,7 +130,8 @@ impl SampleOrder {
         match s {
             "trial_major" | "trial-major" => Ok(SampleOrder::TrialMajor),
             "blocked" => Ok(SampleOrder::Blocked),
-            other => anyhow::bail!("unknown sample order '{other}' (trial_major|blocked)"),
+            "chunked" => Ok(SampleOrder::Chunked),
+            other => anyhow::bail!("unknown sample order '{other}' (trial_major|blocked|chunked)"),
         }
     }
 }
@@ -254,10 +287,17 @@ fn insertion_sort_pair(times: &mut [f64], loads: &mut [f64], lo: usize, hi: usiz
 // SoA compiled plans
 // ----------------------------------------------------------------------
 
-/// Per-master flat sampling columns, family-tagged. `strag_prob < 0`
-/// encodes "no straggler mixture attached" — the distinction matters
-/// beyond the probability value because an attached mixture consumes
-/// one uniform draw per sample even when it does not fire.
+/// Flat sampling columns for a set of compiled masters, family-tagged —
+/// ONE allocation per column across all masters (kernel v3's fused
+/// arena), instead of a `Vec` per master per column. A master is a
+/// contiguous `[start, start + len)` slice of every column, described by
+/// its [`MasterMeta`]; [`ColumnArena::master`] hands out the borrowed
+/// [`MasterCols`] view the trial loops sample through.
+///
+/// `strag_prob < 0` encodes "no straggler mixture attached" — the
+/// distinction matters beyond the probability value because an attached
+/// mixture consumes one uniform draw per sample even when it does not
+/// fire.
 ///
 /// `fams[i] = None` marks the shifted-exponential fast path: the link
 /// samples from the flat `shift[]`/`comp_rate[]` columns with the exact
@@ -266,7 +306,8 @@ fn insertion_sort_pair(times: &mut [f64], loads: &mut [f64], lo: usize, hi: usiz
 /// (`l/k`), with its own scalar and vectorized fill paths — `shift[i]`
 /// and `comp_rate[i]` carry NaN poison for those links and are never
 /// read.
-struct MasterSoA {
+#[derive(Default)]
+pub(crate) struct ColumnArena {
     comm_rate: Vec<f64>, // ∞ = local link (no comm leg, no comm draw)
     shift: Vec<f64>,
     comp_rate: Vec<f64>,
@@ -278,11 +319,130 @@ struct MasterSoA {
     /// the serving layer's key into per-worker [`CapacityProfile`]s. Not
     /// read by the batch trial loops.
     nodes: Vec<usize>,
+    meta: Vec<MasterMeta>,
+}
+
+/// Where one master's links live in the arena columns, plus its
+/// completion parameters.
+struct MasterMeta {
+    start: usize,
+    len: usize,
     l_rows: f64,
     uncoded: bool,
 }
 
-impl MasterSoA {
+impl ColumnArena {
+    /// Pre-size for `n_masters` masters totalling `n_links` links
+    /// (grow-free pushes when the estimates are exact; still correct
+    /// when they are not).
+    pub(crate) fn with_capacity(n_masters: usize, n_links: usize) -> Self {
+        ColumnArena {
+            comm_rate: Vec::with_capacity(n_links),
+            shift: Vec::with_capacity(n_links),
+            comp_rate: Vec::with_capacity(n_links),
+            load: Vec::with_capacity(n_links),
+            strag_prob: Vec::with_capacity(n_links),
+            strag_slow: Vec::with_capacity(n_links),
+            fams: Vec::with_capacity(n_links),
+            nodes: Vec::with_capacity(n_links),
+            meta: Vec::with_capacity(n_masters),
+        }
+    }
+
+    /// Compile master `m` of `(s, plan-master mp)` and append its links.
+    /// Returns the arena index of the new master.
+    pub(crate) fn push_master(
+        &mut self,
+        s: &Scenario,
+        m: usize,
+        mp: &crate::plan::MasterPlan,
+        uncoded: bool,
+    ) -> usize {
+        let start = self.comm_rate.len();
+        for e in &mp.entries {
+            // One source of truth for the parameterization: compile
+            // through the scenario's family-aware LinkDelay (eq. 3 for
+            // shifted-exp links — the exact legacy arithmetic — or a
+            // block-scaled family), then flatten.
+            let d = s.link_delay(m, e.node, e.load, e.k, e.b);
+            self.comm_rate.push(d.comm_rate());
+            match d.comp() {
+                DelayFamily::ShiftedExp { shift, rate } => {
+                    self.shift.push(*shift);
+                    self.comp_rate.push(*rate);
+                    self.fams.push(None);
+                }
+                fam => {
+                    // Poison the unused flat columns: the family arm
+                    // never reads them.
+                    self.shift.push(f64::NAN);
+                    self.comp_rate.push(f64::NAN);
+                    self.fams.push(Some(fam.clone()));
+                }
+            }
+            self.load.push(e.load);
+            self.nodes.push(e.node);
+            match d.straggler() {
+                Some(st) => {
+                    self.strag_prob.push(st.prob);
+                    self.strag_slow.push(st.slowdown);
+                }
+                None => {
+                    self.strag_prob.push(-1.0);
+                    self.strag_slow.push(1.0);
+                }
+            }
+        }
+        self.meta.push(MasterMeta {
+            start,
+            len: mp.entries.len(),
+            l_rows: mp.l_rows,
+            uncoded,
+        });
+        self.meta.len() - 1
+    }
+
+    pub(crate) fn n_masters(&self) -> usize {
+        self.meta.len()
+    }
+
+    /// Borrowed per-master column view — the sampling surface of the
+    /// trial loops.
+    pub(crate) fn master(&self, m: usize) -> MasterCols<'_> {
+        let meta = &self.meta[m];
+        let r = meta.start..meta.start + meta.len;
+        MasterCols {
+            comm_rate: &self.comm_rate[r.clone()],
+            shift: &self.shift[r.clone()],
+            comp_rate: &self.comp_rate[r.clone()],
+            load: &self.load[r.clone()],
+            strag_prob: &self.strag_prob[r.clone()],
+            strag_slow: &self.strag_slow[r.clone()],
+            fams: &self.fams[r.clone()],
+            nodes: &self.nodes[r],
+            l_rows: meta.l_rows,
+            uncoded: meta.uncoded,
+        }
+    }
+}
+
+/// One master's borrowed slice of the [`ColumnArena`] columns. All
+/// sampling methods live here so the plain engine, the serving layer
+/// and the fused batch grid drive the identical trial code.
+pub(crate) struct MasterCols<'a> {
+    comm_rate: &'a [f64],
+    shift: &'a [f64],
+    comp_rate: &'a [f64],
+    load: &'a [f64],
+    strag_prob: &'a [f64],
+    strag_slow: &'a [f64],
+    fams: &'a [Option<DelayFamily>],
+    nodes: &'a [usize],
+    l_rows: f64,
+    uncoded: bool,
+}
+
+impl MasterCols<'_> {
     /// One delay draw for link `i` — the exact RNG consumption of
     /// `LinkDelay::sample`: comm leg (non-local only), straggler uniform
     /// (attached mixtures only), computation draw (family-specific; the
@@ -293,7 +453,7 @@ impl MasterSoA {
         comm + comp
     }
 
-    /// [`MasterSoA::draw`] split into its `(comm, computation)` legs
+    /// [`MasterCols::draw`] split into its `(comm, computation)` legs
     /// (straggler factor already applied to the computation leg; the
     /// sum `comm + comp` is bit-for-bit the `draw` value). The warped
     /// sampler needs the legs separately: worker-capacity changes
@@ -345,7 +505,9 @@ impl MasterSoA {
     /// Blocked completion samples for `nb` trials: per link, fill one
     /// column of comm draws, straggler uniforms and computation draws,
     /// then scan each trial's gathered row. Different RNG order than
-    /// [`MasterSoA::sample_trial`] (see the module bit contract).
+    /// [`MasterCols::sample_trial`] (see the module bit contract).
+    /// `zig` routes every exponential column through the ziggurat
+    /// ([`Rng::fill_exp_zig`]) — a further different-bits mode on top.
     #[allow(clippy::too_many_arguments)]
     fn sample_block(
         &self,
@@ -358,6 +520,7 @@ impl MasterSoA {
         times: &mut [f64],
         loads: &mut [f64],
         out: &mut [f64],
+        zig: bool,
     ) {
         let n = self.comm_rate.len();
         debug_assert!(cols.len() >= n * nb || self.uncoded);
@@ -366,7 +529,7 @@ impl MasterSoA {
             out.fill(0.0);
             let col = &mut cols[..nb];
             for i in 0..n {
-                self.fill_link_column(rng, i, col, comm_buf, u_buf, fam_buf);
+                self.fill_link_column(rng, i, col, comm_buf, u_buf, fam_buf, zig);
                 for (o, &t) in out.iter_mut().zip(col.iter()) {
                     *o = f64::max(*o, t);
                 }
@@ -381,13 +544,14 @@ impl MasterSoA {
                 comm_buf,
                 u_buf,
                 fam_buf,
+                zig,
             );
         }
         for (t, o) in out.iter_mut().enumerate() {
             for i in 0..n {
                 times[i] = cols[i * nb + t];
             }
-            loads[..n].copy_from_slice(&self.load);
+            loads[..n].copy_from_slice(self.load);
             *o = completion_scan(&mut times[..n], &mut loads[..n], self.l_rows);
         }
     }
@@ -399,7 +563,9 @@ impl MasterSoA {
     /// arithmetic is value-identical to the pre-family code (same adds
     /// in the same order); other families fill through their own
     /// vectorized [`DelayFamily::fill_block`] path (`fam_buf` is the
-    /// bimodal arm's mixture-uniform scratch).
+    /// bimodal arm's mixture-uniform scratch). `zig = true` swaps every
+    /// exponential fill to [`Rng::fill_exp_zig`] (distribution-equal,
+    /// different bits).
     #[allow(clippy::too_many_arguments)]
     fn fill_link_column(
         &self,
@@ -409,25 +575,34 @@ impl MasterSoA {
         comm_buf: &mut [f64],
         u_buf: &mut [f64],
         fam_buf: &mut [f64],
+        zig: bool,
     ) {
         let nb = col.len();
         let local = !self.comm_rate[i].is_finite();
         let strag = self.strag_prob[i] >= 0.0;
         if !local {
-            rng.fill_exp(self.comm_rate[i], &mut comm_buf[..nb]);
+            if zig {
+                rng.fill_exp_zig(self.comm_rate[i], &mut comm_buf[..nb]);
+            } else {
+                rng.fill_exp(self.comm_rate[i], &mut comm_buf[..nb]);
+            }
         }
         if strag {
             rng.fill_f64(&mut u_buf[..nb]);
         }
         match &self.fams[i] {
             None => {
-                rng.fill_exp(self.comp_rate[i], col);
+                if zig {
+                    rng.fill_exp_zig(self.comp_rate[i], col);
+                } else {
+                    rng.fill_exp(self.comp_rate[i], col);
+                }
                 let shift = self.shift[i];
                 for c in col.iter_mut() {
                     *c = shift + *c;
                 }
             }
-            Some(fam) => fam.fill_block(rng, col, &mut fam_buf[..nb]),
+            Some(fam) => fam.fill_block_opts(rng, col, &mut fam_buf[..nb], zig),
         }
         match (local, strag) {
             (true, false) => {}
@@ -457,85 +632,46 @@ impl MasterSoA {
 /// Precompiled `(scenario, plan)` sampling state, reusable across RNG
 /// streams. Shared by [`run`] and the batched engine
 /// ([`crate::exec::BatchRunner`]) so both sample the exact same way.
+/// Since kernel v3 the columns live in one `ColumnArena` (a single
+/// allocation per column across masters); the batched engine's fused
+/// mode goes one step further and compiles a whole cell *grid* into one
+/// arena through the same `ColumnArena::push_master` path.
 pub struct Compiled {
-    sims: Vec<MasterSoA>,
+    arena: ColumnArena,
     max_links: usize,
 }
 
 impl Compiled {
     pub fn new(s: &Scenario, plan: &Plan) -> Self {
-        let sims: Vec<MasterSoA> = plan
-            .masters
-            .iter()
-            .enumerate()
-            .map(|(m, mp)| {
-                let n = mp.entries.len();
-                let mut soa = MasterSoA {
-                    comm_rate: Vec::with_capacity(n),
-                    shift: Vec::with_capacity(n),
-                    comp_rate: Vec::with_capacity(n),
-                    load: Vec::with_capacity(n),
-                    strag_prob: Vec::with_capacity(n),
-                    strag_slow: Vec::with_capacity(n),
-                    fams: Vec::with_capacity(n),
-                    nodes: Vec::with_capacity(n),
-                    l_rows: mp.l_rows,
-                    uncoded: plan.uncoded,
-                };
-                for e in &mp.entries {
-                    // One source of truth for the parameterization:
-                    // compile through the scenario's family-aware
-                    // LinkDelay (eq. 3 for shifted-exp links — the exact
-                    // legacy arithmetic — or a block-scaled family),
-                    // then flatten.
-                    let d = s.link_delay(m, e.node, e.load, e.k, e.b);
-                    soa.comm_rate.push(d.comm_rate());
-                    match d.comp() {
-                        DelayFamily::ShiftedExp { shift, rate } => {
-                            soa.shift.push(*shift);
-                            soa.comp_rate.push(*rate);
-                            soa.fams.push(None);
-                        }
-                        fam => {
-                            // Poison the unused flat columns: the family
-                            // arm never reads them.
-                            soa.shift.push(f64::NAN);
-                            soa.comp_rate.push(f64::NAN);
-                            soa.fams.push(Some(fam.clone()));
-                        }
-                    }
-                    soa.load.push(e.load);
-                    soa.nodes.push(e.node);
-                    match d.straggler() {
-                        Some(st) => {
-                            soa.strag_prob.push(st.prob);
-                            soa.strag_slow.push(st.slowdown);
-                        }
-                        None => {
-                            soa.strag_prob.push(-1.0);
-                            soa.strag_slow.push(1.0);
-                        }
-                    }
-                }
-                soa
-            })
-            .collect();
-        let max_links = sims.iter().map(|s| s.comm_rate.len()).max().unwrap_or(0);
-        Compiled { sims, max_links }
+        let n_links = plan.masters.iter().map(|mp| mp.entries.len()).sum();
+        let mut arena = ColumnArena::with_capacity(plan.masters.len(), n_links);
+        for (m, mp) in plan.masters.iter().enumerate() {
+            arena.push_master(s, m, mp, plan.uncoded);
+        }
+        let max_links = (0..arena.n_masters())
+            .map(|m| arena.meta[m].len)
+            .max()
+            .unwrap_or(0);
+        Compiled { arena, max_links }
     }
 
     pub fn n_masters(&self) -> usize {
-        self.sims.len()
+        self.arena.n_masters()
     }
 
     /// Link count of master `m`'s compiled plan.
     pub fn n_links(&self, m: usize) -> usize {
-        self.sims[m].comm_rate.len()
+        self.arena.meta[m].len
     }
 
     /// Scenario node id of link `i` of master `m` (0 = master-local).
     pub fn node_of(&self, m: usize, i: usize) -> usize {
-        self.sims[m].nodes[i]
+        self.arena.master(m).nodes[i]
+    }
+
+    /// Borrowed column view of master `m`.
+    pub(crate) fn master(&self, m: usize) -> MasterCols<'_> {
+        self.arena.master(m)
     }
 
     /// One completion sample of master `m` — exactly the per-master draw
@@ -549,7 +685,7 @@ impl Compiled {
         times: &mut Vec<f64>,
         loads: &mut Vec<f64>,
     ) -> f64 {
-        self.sims[m].sample_trial(rng, times, loads)
+        self.arena.master(m).sample_trial(rng, times, loads)
     }
 
     /// Time-varying-share completion sample: draws each link's delay
@@ -579,7 +715,7 @@ impl Compiled {
         times: &mut Vec<f64>,
         loads: &mut Vec<f64>,
     ) -> f64 {
-        let sim = &self.sims[m];
+        let sim = self.arena.master(m);
         let n = sim.comm_rate.len();
         times.clear();
         for i in 0..n {
@@ -811,20 +947,98 @@ pub fn run_shard_ordered(
     keep_samples: bool,
     order: SampleOrder,
 ) -> ShardOut {
-    match order {
-        SampleOrder::TrialMajor => run_shard_trial_major(c, seed, stream, trials, keep_samples),
-        SampleOrder::Blocked => run_shard_blocked(c, seed, stream, trials, keep_samples),
-    }
+    run_shard_opts(c, seed, stream, trials, keep_samples, order, false)
 }
 
-fn run_shard_trial_major(
+/// [`run_shard_ordered`] plus the kernel-v3 ziggurat flag (honored by
+/// [`SampleOrder::Chunked`] only; a documented no-op for the bit-exact
+/// orders).
+pub fn run_shard_opts(
     c: &Compiled,
     seed: u64,
     stream: u64,
     trials: usize,
     keep_samples: bool,
+    order: SampleOrder,
+    ziggurat: bool,
 ) -> ShardOut {
-    let m_cnt = c.sims.len();
+    let views: Vec<MasterCols<'_>> = (0..c.n_masters()).map(|m| c.arena.master(m)).collect();
+    run_shard_cols(
+        &views,
+        c.max_links,
+        seed,
+        stream,
+        trials,
+        keep_samples,
+        order,
+        ziggurat,
+    )
+}
+
+/// Column-view shard entry point: the same trial loops, driven by any
+/// set of [`MasterCols`] — a [`Compiled`] plan's own masters, or a
+/// sub-range of the batched engine's fused grid arena. Everything above
+/// ([`run_shard`] and friends) funnels here.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_shard_cols(
+    masters: &[MasterCols<'_>],
+    max_links: usize,
+    seed: u64,
+    stream: u64,
+    trials: usize,
+    keep_samples: bool,
+    order: SampleOrder,
+    ziggurat: bool,
+) -> ShardOut {
+    match order {
+        SampleOrder::TrialMajor => {
+            run_shard_trial_major(masters, max_links, seed, stream, trials, keep_samples)
+        }
+        // Blocked keeps its pre-v3 behavior exactly: fresh scratch per
+        // shard, inverse-transform exponentials (the ziggurat flag is
+        // ignored by the non-chunked orders).
+        SampleOrder::Blocked => {
+            let mut scratch = BlockScratch::default();
+            run_shard_block_core(
+                masters,
+                max_links,
+                seed,
+                stream,
+                trials,
+                keep_samples,
+                false,
+                &mut scratch,
+            )
+        }
+        // Chunked shares the identical block core (bit-for-bit Blocked
+        // while ziggurat is off) and reuses thread-local scratch across
+        // shards — buffer contents never leak into results (every read
+        // range is written first), only the allocations are recycled.
+        SampleOrder::Chunked => CHUNK_SCRATCH.with(|s| {
+            let mut scratch = s.borrow_mut();
+            run_shard_block_core(
+                masters,
+                max_links,
+                seed,
+                stream,
+                trials,
+                keep_samples,
+                ziggurat,
+                &mut scratch,
+            )
+        }),
+    }
+}
+
+fn run_shard_trial_major(
+    masters: &[MasterCols<'_>],
+    max_links: usize,
+    seed: u64,
+    stream: u64,
+    trials: usize,
+    keep_samples: bool,
+) -> ShardOut {
+    let m_cnt = masters.len();
     let mut rng = Rng::new(seed).fork(stream);
     let mut per_master = vec![Summary::new(); m_cnt];
     let mut system = Summary::new();
@@ -834,11 +1048,11 @@ fn run_shard_trial_major(
     } else {
         vec![]
     };
-    let mut times: Vec<f64> = Vec::with_capacity(c.max_links);
-    let mut loads: Vec<f64> = Vec::with_capacity(c.max_links);
+    let mut times: Vec<f64> = Vec::with_capacity(max_links);
+    let mut loads: Vec<f64> = Vec::with_capacity(max_links);
     for _ in 0..trials {
         let mut sys = 0.0f64;
-        for (m, sim) in c.sims.iter().enumerate() {
+        for (m, sim) in masters.iter().enumerate() {
             let t = sim.sample_trial(&mut rng, &mut times, &mut loads);
             per_master[m].push(t);
             if keep_samples {
@@ -859,20 +1073,66 @@ fn run_shard_trial_major(
     }
 }
 
-/// Trials per block in [`SampleOrder::Blocked`]: big enough to amortize
-/// per-link constants and keep the `fill_exp` columns in the
-/// vectorizable sweet spot, small enough that the per-master column
-/// matrix (`max_links × BLOCK_TRIALS` doubles) stays cache-resident.
+/// Trials per block in [`SampleOrder::Blocked`]/[`SampleOrder::Chunked`]:
+/// big enough to amortize per-link constants and keep the `fill_exp`
+/// columns in the vectorizable sweet spot, small enough that the
+/// per-master column matrix (`max_links × BLOCK_TRIALS` doubles) stays
+/// cache-resident.
 const BLOCK_TRIALS: usize = 256;
 
-fn run_shard_blocked(
-    c: &Compiled,
+/// Reusable buffers of the block sampler. Grow-only: a scratch that has
+/// seen a big shard serves smaller ones without reallocating, which is
+/// the point of the chunked order's thread-local reuse (the blocked
+/// order builds a fresh one per shard — same values either way, since
+/// every read range is overwritten before use).
+#[derive(Default)]
+struct BlockScratch {
+    vals: Vec<f64>,
+    cols: Vec<f64>,
+    comm: Vec<f64>,
+    u: Vec<f64>,
+    fam: Vec<f64>,
+    times: Vec<f64>,
+    loads: Vec<f64>,
+}
+
+impl BlockScratch {
+    fn ensure(&mut self, m_cnt: usize, max_links: usize, b: usize) {
+        fn grow(v: &mut Vec<f64>, n: usize) {
+            if v.len() < n {
+                v.resize(n, 0.0);
+            }
+        }
+        grow(&mut self.vals, m_cnt * b);
+        grow(&mut self.cols, max_links.max(1) * b);
+        grow(&mut self.comm, b);
+        grow(&mut self.u, b);
+        grow(&mut self.fam, b);
+        grow(&mut self.times, max_links);
+        grow(&mut self.loads, max_links);
+    }
+}
+
+thread_local! {
+    /// Per-thread scratch of [`SampleOrder::Chunked`] shards — each pool
+    /// worker recycles its block buffers across every shard (and every
+    /// sweep cell) it executes.
+    static CHUNK_SCRATCH: std::cell::RefCell<BlockScratch> =
+        std::cell::RefCell::new(BlockScratch::default());
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_shard_block_core(
+    masters: &[MasterCols<'_>],
+    max_links: usize,
     seed: u64,
     stream: u64,
     trials: usize,
     keep_samples: bool,
+    zig: bool,
+    scratch: &mut BlockScratch,
 ) -> ShardOut {
-    let m_cnt = c.sims.len();
+    let m_cnt = masters.len();
     let mut rng = Rng::new(seed).fork(stream);
     let mut per_master = vec![Summary::new(); m_cnt];
     let mut system = Summary::new();
@@ -883,27 +1143,31 @@ fn run_shard_blocked(
         vec![]
     };
     let b = BLOCK_TRIALS.min(trials.max(1));
-    let mut vals = vec![0.0f64; m_cnt * b];
-    let mut cols = vec![0.0f64; c.max_links.max(1) * b];
-    let mut comm_buf = vec![0.0f64; b];
-    let mut u_buf = vec![0.0f64; b];
-    let mut fam_buf = vec![0.0f64; b];
-    let mut times = vec![0.0f64; c.max_links];
-    let mut loads = vec![0.0f64; c.max_links];
+    scratch.ensure(m_cnt, max_links, b);
+    let BlockScratch {
+        vals,
+        cols,
+        comm,
+        u,
+        fam,
+        times,
+        loads,
+    } = scratch;
     let mut done = 0usize;
     while done < trials {
         let nb = b.min(trials - done);
-        for (m, sim) in c.sims.iter().enumerate() {
+        for (m, sim) in masters.iter().enumerate() {
             sim.sample_block(
                 &mut rng,
                 nb,
-                &mut cols,
-                &mut comm_buf,
-                &mut u_buf,
-                &mut fam_buf,
-                &mut times,
-                &mut loads,
+                cols,
+                comm,
+                u,
+                fam,
+                times,
+                loads,
                 &mut vals[m * b..m * b + nb],
+                zig,
             );
         }
         // Same push/merge sequence per trial as trial-major, so summary
@@ -973,7 +1237,7 @@ pub fn run_ordered(s: &Scenario, plan: &Plan, opts: &McOptions, order: SampleOrd
     let m_cnt = compiled.n_masters();
     let streams = effective_streams(opts.trials, opts.threads);
     let sizes = shard_sizes(opts.trials, streams);
-    let (seed, keep) = (opts.seed, opts.keep_samples);
+    let (seed, keep, zig) = (opts.seed, opts.keep_samples, opts.ziggurat);
     let thunks: Vec<_> = sizes
         .iter()
         .enumerate()
@@ -983,7 +1247,7 @@ pub fn run_ordered(s: &Scenario, plan: &Plan, opts: &McOptions, order: SampleOrd
             move || {
                 (
                     ti,
-                    run_shard_ordered(&c, seed, ti as u64 + 1, t, keep, order),
+                    run_shard_opts(&c, seed, ti as u64 + 1, t, keep, order, zig),
                 )
             }
         })
@@ -1166,6 +1430,7 @@ mod tests {
             seed: 99,
             keep_samples: keep,
             threads: 0,
+            ziggurat: false,
         }
     }
 
@@ -1214,6 +1479,7 @@ mod tests {
             seed: 7,
             keep_samples: false,
             threads: 2,
+            ziggurat: false,
         };
         let a = run(&s, &p, &o);
         let b = run(&s, &p, &o);
@@ -1290,6 +1556,7 @@ mod tests {
             seed: 13,
             keep_samples: true,
             threads: 3,
+            ziggurat: false,
         };
         let skipping = run(&s, &p, &o);
         let legacy = oracle::run(&s, &p, &o);
@@ -1307,6 +1574,7 @@ mod tests {
             seed: 21,
             keep_samples: true,
             threads: 3,
+            ziggurat: false,
         };
         let direct = run(&s, &p, &o);
         let c = Compiled::new(&s, &p);
@@ -1333,6 +1601,7 @@ mod tests {
                 seed: 11,
                 keep_samples: false,
                 threads: 1,
+                ziggurat: false,
             },
         );
         let r8 = run(
@@ -1343,6 +1612,7 @@ mod tests {
                 seed: 12,
                 keep_samples: false,
                 threads: 8,
+                ziggurat: false,
             },
         );
         let (m1, m8) = (r1.system.mean(), r8.system.mean());
@@ -1407,6 +1677,7 @@ mod tests {
                 seed: 4242,
                 keep_samples: true,
                 threads: 2,
+                ziggurat: false,
             };
             let v2 = run(&s, &p, &o);
             let legacy = oracle::run(&s, &p, &o);
@@ -1462,6 +1733,7 @@ mod tests {
                 seed: 777,
                 keep_samples: true,
                 threads: 2,
+                ziggurat: false,
             };
             let v2 = run(&s, &p, &o);
             let legacy = oracle::run(&s, &p, &o);
@@ -1483,7 +1755,8 @@ mod tests {
         ] {
             let p = build(&s, &spec(Policy::DediIter, LoadMethod::Markov));
             let c = Compiled::new(&s, &p);
-            for (m, (soa, mp)) in c.sims.iter().zip(&p.masters).enumerate() {
+            for (m, mp) in p.masters.iter().enumerate() {
+                let soa = c.master(m);
                 assert!(
                     soa.fams.iter().all(Option::is_none),
                     "master {m}: shifted-exp link left the fast path"
@@ -1518,6 +1791,7 @@ mod tests {
                 seed: 31337,
                 keep_samples: true,
                 threads: 2,
+                ziggurat: false,
             };
             let tm = run_ordered(&s, &p, &o, SampleOrder::TrialMajor);
             let bl = run_ordered(&s, &p, &o, SampleOrder::Blocked);
@@ -1534,6 +1808,103 @@ mod tests {
                 .sup_distance(&bl.system_ecdf().unwrap());
             assert!(d < 0.025, "{ctx}: ECDF sup distance {d}");
         }
+    }
+
+    #[test]
+    fn chunked_is_bit_identical_to_blocked_without_ziggurat() {
+        // SampleOrder::Chunked drives the same block core as Blocked —
+        // while the ziggurat flag is off the two must agree to the last
+        // bit, on shifted-exp and on every delay family (this is the
+        // strong pin that the thread-local scratch reuse changes no
+        // values).
+        let mut cases = family_scenarios();
+        cases.push((
+            "shifted-exp",
+            Scenario::small_scale(31, 2.0, CommModel::Stochastic),
+        ));
+        for (ctx, s) in cases {
+            let p = build(&s, &spec(Policy::DediIter, LoadMethod::Markov));
+            let o = McOptions {
+                trials: 3_000, // tail block below BLOCK_TRIALS covered
+                seed: 909,
+                keep_samples: true,
+                threads: 2,
+                ziggurat: false,
+            };
+            let bl = run_ordered(&s, &p, &o, SampleOrder::Blocked);
+            let ch = run_ordered(&s, &p, &o, SampleOrder::Chunked);
+            assert_bitwise_equal(&ch, &bl, ctx);
+        }
+    }
+
+    #[test]
+    fn ziggurat_chunked_statistically_equivalent_to_trial_major() {
+        // Chunked + ziggurat swaps every exponential column to the
+        // rejection sampler: different bits by construction, same law.
+        // Tolerances mirror the blocked-vs-trial-major contract test.
+        let mut cases = family_scenarios();
+        cases.push((
+            "shifted-exp",
+            Scenario::small_scale(31, 2.0, CommModel::Stochastic),
+        ));
+        for (ctx, s) in cases {
+            let p = build(&s, &spec(Policy::DediIter, LoadMethod::Markov));
+            let o = McOptions {
+                trials: 40_000,
+                seed: 65521,
+                keep_samples: true,
+                threads: 2,
+                ziggurat: true,
+            };
+            let tm = run_ordered(&s, &p, &o, SampleOrder::TrialMajor);
+            let zg = run_ordered(&s, &p, &o, SampleOrder::Chunked);
+            let (m1, m2) = (tm.system.mean(), zg.system.mean());
+            let sem = (tm.system.sem().powi(2) + zg.system.sem().powi(2)).sqrt();
+            assert!(
+                (m1 - m2).abs() < 6.0 * sem,
+                "{ctx}: mean {m1} vs {m2} (6σ = {})",
+                6.0 * sem
+            );
+            let rel_var =
+                (tm.system.var() - zg.system.var()).abs() / tm.system.var().max(1e-12);
+            assert!(rel_var < 0.1, "{ctx}: variance off by {rel_var}");
+            let d = tm
+                .system_ecdf()
+                .unwrap()
+                .sup_distance(&zg.system_ecdf().unwrap());
+            assert!(d < 0.025, "{ctx}: ECDF sup distance {d}");
+        }
+    }
+
+    #[test]
+    fn ziggurat_flag_is_a_no_op_for_bit_exact_orders() {
+        // TrialMajor and Blocked document the ziggurat flag as ignored:
+        // flipping it must not change a bit.
+        let s = Scenario::small_scale(31, 2.0, CommModel::Stochastic);
+        let p = build(&s, &spec(Policy::DediIter, LoadMethod::Markov));
+        let mut o = McOptions {
+            trials: 2_000,
+            seed: 4711,
+            keep_samples: true,
+            threads: 2,
+            ziggurat: false,
+        };
+        for order in [SampleOrder::TrialMajor, SampleOrder::Blocked] {
+            o.ziggurat = false;
+            let off = run_ordered(&s, &p, &o, order);
+            o.ziggurat = true;
+            let on = run_ordered(&s, &p, &o, order);
+            assert_bitwise_equal(&on, &off, order.as_str());
+        }
+    }
+
+    #[test]
+    fn sample_order_chunked_parses_and_prints() {
+        assert_eq!(
+            SampleOrder::parse("chunked").unwrap(),
+            SampleOrder::Chunked
+        );
+        assert_eq!(SampleOrder::Chunked.as_str(), "chunked");
     }
 
     #[test]
@@ -1761,6 +2132,7 @@ mod tests {
             seed: 5,
             keep_samples: true,
             threads: 2,
+            ziggurat: false,
         };
         let a = run_ordered(&s, &p, &o, SampleOrder::Blocked);
         let b = run_ordered(&s, &p, &o, SampleOrder::Blocked);
@@ -1801,6 +2173,7 @@ mod tests {
                 seed: 2024,
                 keep_samples: true,
                 threads: 2,
+                ziggurat: false,
             };
             let tm = run_ordered(&s, &p, &o, SampleOrder::TrialMajor);
             let bl = run_ordered(&s, &p, &o, SampleOrder::Blocked);

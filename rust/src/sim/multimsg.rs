@@ -189,6 +189,7 @@ mod tests {
                 seed: 6,
                 keep_samples: false,
                 threads: 1,
+                ziggurat: false,
             },
         );
         let (a, b) = (multi.mean(), base.system.mean());

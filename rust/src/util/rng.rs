@@ -6,6 +6,8 @@
 //! used by the delay model live here so the Monte-Carlo engine and the
 //! coordinator share one implementation.
 
+use std::sync::OnceLock;
+
 /// SplitMix64: used for seeding and as a cheap stateless mixer.
 #[derive(Clone, Debug)]
 pub struct SplitMix64 {
@@ -25,6 +27,54 @@ impl SplitMix64 {
         z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
         z ^ (z >> 31)
     }
+}
+
+/// Chunk width for the batched fill samplers ([`Rng::fill_f64`],
+/// [`Rng::fill_exp`]): 8 f64 lanes, one AVX-512 register or two
+/// AVX2 / NEON registers, chosen so the fixed-width transform loops
+/// lower to full vectors on every mainstream target.
+pub const FILL_LANES: usize = 8;
+
+/// Rightmost layer boundary of the 256-layer exponential ziggurat
+/// (Marsaglia & Tsang 2000): `x` such that the 256 equal-area layers
+/// plus the tail beyond `x` tile the area under `e^{-x}`.
+const ZIG_R: f64 = 7.697_117_470_131_487;
+
+/// Precomputed ziggurat layer boundaries and density values.
+///
+/// `x[0] = V · e^R` is the *fictitious* base-layer width (so the
+/// common accept test `u · x[i] < x[i+1]` selects the rectangular part
+/// of the base layer with the right probability); `x[1] = R`; the
+/// remaining boundaries follow the equal-area recurrence
+/// `x[i] = -ln(e^{-x[i-1]} + V / x[i-1])`, ending at `x[256] = 0`.
+/// `f[i] = e^{-x[i]}` caches the density at each boundary for the
+/// wedge test.
+struct ZigTables {
+    x: [f64; 257],
+    f: [f64; 257],
+}
+
+fn zig_tables() -> &'static ZigTables {
+    static ZIG: OnceLock<ZigTables> = OnceLock::new();
+    ZIG.get_or_init(|| {
+        // Common layer area: base rectangle [0, R] × e^{-R} plus the
+        // tail mass ∫_R^∞ e^{-x} dx = e^{-R}, i.e. V = e^{-R}(R + 1).
+        // Deriving V from R here keeps the tables self-consistent to
+        // machine precision.
+        let v = (-ZIG_R).exp() * (ZIG_R + 1.0);
+        let mut x = [0.0f64; 257];
+        let mut f = [0.0f64; 257];
+        x[0] = v * ZIG_R.exp();
+        x[1] = ZIG_R;
+        for i in 2..256 {
+            x[i] = -((-x[i - 1]).exp() + v / x[i - 1]).ln();
+        }
+        x[256] = 0.0;
+        for i in 0..257 {
+            f[i] = (-x[i]).exp();
+        }
+        ZigTables { x, f }
+    })
 }
 
 /// xoshiro256++ PRNG with the sampler surface the crate needs.
@@ -113,9 +163,25 @@ impl Rng {
 
     /// Fill `out` with uniforms in `[0, 1)` — the batched form of
     /// [`Rng::f64`], bit-identical to calling it `out.len()` times.
-    #[inline]
+    ///
+    /// Kernel v3 shape: the column is walked in [`FILL_LANES`]-wide
+    /// chunks — a serial generator pass into a fixed-width bit array,
+    /// then a straight-line fixed-width transform loop the
+    /// autovectorizer can lower to SIMD lanes (no `std::simd`, stable
+    /// Rust only). Per-element arithmetic and draw order are unchanged,
+    /// so the bit contract survives the chunking.
     pub fn fill_f64(&mut self, out: &mut [f64]) {
-        for x in out.iter_mut() {
+        let mut chunks = out.chunks_exact_mut(FILL_LANES);
+        for chunk in &mut chunks {
+            let mut bits = [0u64; FILL_LANES];
+            for b in bits.iter_mut() {
+                *b = self.next_u64();
+            }
+            for (x, &b) in chunk.iter_mut().zip(bits.iter()) {
+                *x = (b >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+            }
+        }
+        for x in chunks.into_remainder() {
             *x = self.f64();
         }
     }
@@ -124,19 +190,87 @@ impl Rng {
     /// [`Rng::exp`], bit-identical to calling it `out.len()` times from
     /// the same generator state.
     ///
-    /// The point of the batch is shape, not different math: the
-    /// (inherently serial) generator pass and the `ln` transform pass are
-    /// split into two tight loops over the column, so the blocked
-    /// Monte-Carlo kernel keeps the RNG state hot and hands the compiler
-    /// a straight-line transform loop.
+    /// The point of the batch is shape, not different math: per
+    /// [`FILL_LANES`]-wide chunk, the (inherently serial) generator pass
+    /// lands in a fixed-width array, then the uniform and `ln`
+    /// transforms run as straight-line fixed-width loops (the `ln` calls
+    /// stay scalar libm calls, but the surrounding arithmetic
+    /// vectorizes and the RNG state stays hot).
+    ///
+    /// `1 − u` with `u = f64() ∈ [0, 1)` is uniform on `(0, 1]` —
+    /// strictly positive, so it is safe as an argument to `ln`.
     pub fn fill_exp(&mut self, rate: f64, out: &mut [f64]) {
         debug_assert!(rate > 0.0, "exp rate must be positive, got {rate}");
-        for x in out.iter_mut() {
-            // f64_open(): uniform in (0, 1], safe under ln.
-            *x = 1.0 - self.f64();
+        let mut chunks = out.chunks_exact_mut(FILL_LANES);
+        for chunk in &mut chunks {
+            let mut bits = [0u64; FILL_LANES];
+            for b in bits.iter_mut() {
+                *b = self.next_u64();
+            }
+            let mut open = [0.0f64; FILL_LANES];
+            for (o, &b) in open.iter_mut().zip(bits.iter()) {
+                *o = 1.0 - (b >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+            }
+            for (x, &o) in chunk.iter_mut().zip(open.iter()) {
+                *x = -o.ln() / rate;
+            }
         }
+        for x in chunks.into_remainder() {
+            let o = 1.0 - self.f64();
+            *x = -o.ln() / rate;
+        }
+    }
+
+    /// One `Exp(rate)` draw via the 256-layer ziggurat — a rejection
+    /// sampler that replaces the `ln` per draw with a table lookup and
+    /// one compare on the ~98.9% fast path. **Different-bits mode**:
+    /// rejection consumes a variable number of generator words per
+    /// draw, so ziggurat draws are *distribution-equal* to
+    /// [`Rng::exp`], never bit-equal (the inverse transform stays the
+    /// bit-exact default everywhere).
+    #[inline]
+    pub fn exp_zig(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0, "exp rate must be positive, got {rate}");
+        self.exp_zig_unit() / rate
+    }
+
+    /// Fill `out` with ziggurat `Exp(rate)` draws (the batched form of
+    /// [`Rng::exp_zig`]; same different-bits contract).
+    pub fn fill_exp_zig(&mut self, rate: f64, out: &mut [f64]) {
+        debug_assert!(rate > 0.0, "exp rate must be positive, got {rate}");
+        let inv_rate = 1.0 / rate;
         for x in out.iter_mut() {
-            *x = -x.ln() / rate;
+            *x = self.exp_zig_unit() * inv_rate;
+        }
+    }
+
+    /// Unit-rate exponential via Marsaglia–Tsang layers. One generator
+    /// word feeds both the layer index (low 8 bits) and the 53-bit
+    /// uniform (bits 11..64) — the bit ranges do not overlap.
+    #[inline]
+    fn exp_zig_unit(&mut self) -> f64 {
+        let t = zig_tables();
+        loop {
+            let bits = self.next_u64();
+            let i = (bits & 0xFF) as usize;
+            let u = (bits >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+            let x = u * t.x[i];
+            if x < t.x[i + 1] {
+                // Strictly inside the next layer's width: under the
+                // curve for every layer, and for the base layer (i = 0)
+                // this is exactly the rectangular part.
+                return x;
+            }
+            if i == 0 {
+                // Base-layer tail: memorylessness gives R + Exp(1).
+                return ZIG_R - self.f64_open().ln();
+            }
+            // Wedge between x[i+1] and x[i]: accept iff the uniform
+            // height lands below the density.
+            let u2 = self.f64();
+            if t.f[i] + u2 * (t.f[i + 1] - t.f[i]) < (-x).exp() {
+                return x;
+            }
         }
     }
 
@@ -306,6 +440,103 @@ mod tests {
         }
         // And the streams stay in lockstep afterwards.
         assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn chunked_fills_bit_identical_across_lengths() {
+        // The v3 chunked fills must preserve the bit contract at every
+        // length — full chunks, the scalar remainder, and the empty and
+        // sub-lane edge cases (lengths straddling multiples of
+        // FILL_LANES = 8).
+        for &len in &[0usize, 1, 7, 8, 9, 31, 63, 64, 65, 257] {
+            let mut a = Rng::new(1000 + len as u64);
+            let mut b = a.clone();
+            let mut col = vec![0.0f64; len];
+            a.fill_f64(&mut col);
+            for (i, &x) in col.iter().enumerate() {
+                assert_eq!(x, b.f64(), "fill_f64 len {len} draw {i}");
+            }
+            a.fill_exp(1.7, &mut col);
+            for (i, &x) in col.iter().enumerate() {
+                assert_eq!(x, b.exp(1.7), "fill_exp len {len} draw {i}");
+            }
+            // Streams stay in lockstep afterwards.
+            assert_eq!(a.next_u64(), b.next_u64(), "len {len}");
+        }
+    }
+
+    #[test]
+    fn zig_tables_are_consistent() {
+        let t = zig_tables();
+        // Boundaries decrease strictly from the fictitious base width
+        // down to zero; densities increase to f(0) = 1.
+        assert_eq!(t.x[1], ZIG_R);
+        assert_eq!(t.x[256], 0.0);
+        assert_eq!(t.f[256], 1.0);
+        for i in 1..256 {
+            assert!(t.x[i] > t.x[i + 1], "x not decreasing at {i}");
+            assert!(t.f[i] < t.f[i + 1], "f not increasing at {i}");
+        }
+        // The fictitious base width exceeds R (it encodes the tail mass).
+        assert!(t.x[0] > t.x[1]);
+        // Equal-area check on an interior layer: the recurrence was
+        // built from V, so layer 100's area must reproduce it.
+        let v = (-ZIG_R).exp() * (ZIG_R + 1.0);
+        let area = t.x[100] * (t.f[101] - t.f[100]);
+        assert!((area - v).abs() < 1e-12, "layer area {area} vs V {v}");
+    }
+
+    #[test]
+    fn ziggurat_draws_are_positive_and_finite() {
+        let mut r = Rng::new(11);
+        for _ in 0..100_000 {
+            let x = r.exp_zig(0.8);
+            assert!(x.is_finite() && x > 0.0, "bad draw {x}");
+        }
+    }
+
+    #[test]
+    fn ziggurat_matches_exponential_cdf() {
+        // Moment + KS-style pin of the ziggurat sampler against the
+        // Exp(rate) law, on the in-tree prop harness: random rates,
+        // 40k draws each, mean within 6σ, variance within 10%, and the
+        // ECDF sup-distance under 0.015 (≈ 2.2× the 99.9% KS quantile
+        // at n = 40_000 — loose enough to be flake-free, tight enough
+        // to catch any table or accept-test error).
+        crate::util::prop::check(
+            crate::util::prop::Config::default().cases(4),
+            "ziggurat_matches_exponential_cdf",
+            |g| {
+                let rate = g.f64_range(0.2, 5.0);
+                let n = 40_000usize;
+                let mut xs = vec![0.0f64; n];
+                g.rng().fill_exp_zig(rate, &mut xs);
+                let mean = xs.iter().sum::<f64>() / n as f64;
+                let var =
+                    xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64;
+                let true_mean = 1.0 / rate;
+                let true_var = true_mean * true_mean;
+                // Mean of n iid Exp(rate) has sd = (1/rate)/sqrt(n).
+                let sd = true_mean / (n as f64).sqrt();
+                assert!(
+                    (mean - true_mean).abs() < 6.0 * sd,
+                    "rate {rate}: mean {mean} vs {true_mean}"
+                );
+                assert!(
+                    (var - true_var).abs() < 0.1 * true_var,
+                    "rate {rate}: var {var} vs {true_var}"
+                );
+                xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let mut sup = 0.0f64;
+                for (i, &x) in xs.iter().enumerate() {
+                    let cdf = 1.0 - (-rate * x).exp();
+                    let lo = i as f64 / n as f64;
+                    let hi = (i + 1) as f64 / n as f64;
+                    sup = sup.max((cdf - lo).abs()).max((cdf - hi).abs());
+                }
+                assert!(sup < 0.015, "rate {rate}: KS distance {sup}");
+            },
+        );
     }
 
     #[test]

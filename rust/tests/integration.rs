@@ -13,6 +13,7 @@ fn mc(trials: usize) -> McOptions {
         seed: 99,
         keep_samples: false,
         threads: 0,
+        ziggurat: false,
     }
 }
 

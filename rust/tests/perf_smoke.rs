@@ -37,6 +37,7 @@ fn perf_trajectory_lands_at_repo_root() {
         seed: 2022,
         keep_samples: false,
         threads: 1,
+        ziggurat: false,
     };
     let bench = || {
         Bench::new()
@@ -52,6 +53,13 @@ fn perf_trajectory_lands_at_repo_root() {
         bench().run("small/v2-blocked", || {
             sim::run_ordered(&s, &p, &o, SampleOrder::Blocked).system.mean()
         }),
+        bench().run("small/v3-chunked", || {
+            sim::run_ordered(&s, &p, &o, SampleOrder::Chunked).system.mean()
+        }),
+        bench().run("small/v3-zigg", || {
+            let oz = McOptions { ziggurat: true, ..o };
+            sim::run_ordered(&s, &p, &oz, SampleOrder::Chunked).system.mean()
+        }),
     ];
     write_json(
         &out_path,
@@ -65,7 +73,7 @@ fn perf_trajectory_lands_at_repo_root() {
     let text = std::fs::read_to_string(&out_path).unwrap();
     let j = json::parse(&text).unwrap();
     let rows = j.get("results").unwrap().as_arr().unwrap();
-    assert_eq!(rows.len(), 3);
+    assert_eq!(rows.len(), 5);
     for row in rows {
         let tput = row.get("items_per_sec").unwrap().as_f64().unwrap();
         assert!(tput > 0.0, "trials/s must be positive");

@@ -131,6 +131,7 @@ fn exported_plan_reproduces_direct_results() {
         seed: 9,
         keep_samples: false,
         threads: 2,
+        ziggurat: false,
     };
     let direct = sim::run(&s, &plan_direct, &mc);
     let roundtrip = sim::run(&s_back, &plan_back, &mc);

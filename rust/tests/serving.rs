@@ -53,6 +53,7 @@ fn constant_share_serve_matches_batch_engine_bit_for_bit_single_master() {
             seed,
             keep_samples: true,
             threads: 1, // one RNG stream = the serve service stream
+            ziggurat: false,
         },
     );
     let samples = mc.samples.unwrap();
@@ -96,6 +97,7 @@ fn constant_share_serve_matches_batch_engine_bit_for_bit_multi_master() {
             seed,
             keep_samples: true,
             threads: 1,
+            ziggurat: false,
         },
     );
     let master_samples = mc.master_samples.unwrap();

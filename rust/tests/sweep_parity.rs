@@ -35,6 +35,7 @@ fn run_id(id: &str) -> SweepResult {
         &SweepOptions {
             threads: THREADS,
             cell_streams: THREADS,
+            fused: false,
         },
     )
     .unwrap()
@@ -162,6 +163,7 @@ fn redundancy_sweep_matches_legacy_loop_bit_for_bit() {
                 seed: SEED,
                 keep_samples: true,
                 threads: THREADS,
+                ziggurat: false,
             },
         );
         assert_eq!(cell.plan, fixture_plan, "β={beta}: plan");
@@ -187,11 +189,29 @@ fn sweep_is_deterministic_across_runs_and_pool_sizes() {
         &SweepOptions {
             threads: 8, // different pool, same cell_streams
             cell_streams: THREADS,
+            fused: false,
         },
     )
     .unwrap();
-    for ((x, y), z) in a.cells.iter().zip(&b.cells).zip(&wide.cells) {
+    let fused = experiment::run_sweep(
+        &catalog::spec("fig4a", TRIALS, SEED).unwrap(),
+        &SweepOptions {
+            threads: THREADS,
+            cell_streams: THREADS,
+            fused: true, // kernel v3 fused arena: still bit-identical
+        },
+    )
+    .unwrap();
+    for (((x, y), z), w) in a
+        .cells
+        .iter()
+        .zip(&b.cells)
+        .zip(&wide.cells)
+        .zip(&fused.cells)
+    {
         assert_eq!(x.outcome.system.mean(), y.outcome.system.mean());
         assert_eq!(x.outcome.system.mean(), z.outcome.system.mean());
+        assert_eq!(x.outcome.system.mean(), w.outcome.system.mean());
+        assert_eq!(x.outcome.system.sem(), w.outcome.system.sem());
     }
 }
