@@ -23,8 +23,17 @@ Per scenario tag:
 * INFO: ``<tag>/v2-blocked`` vs trial-major and ``<tag>/v3-zigg`` vs
   chunked are reported; both are different-bits fast paths whose win
   varies with link count and scenario, so they warn rather than fail.
+* SERVE (``BENCH_serve.json``, written by ``cargo bench --bench
+  serve``): while only one of ``serve/wheel`` / ``serve/heap`` exists
+  the row is informational; once BOTH data points exist the wheel must
+  hold the line against the heap oracle (jobs/s, same jitter band) —
+  the event-core refactor must never serve slower than what it
+  replaced.
 
-Usage: python3 bench_gate.py [path/to/BENCH_engine.json]
+Usage: python3 bench_gate.py [BENCH_engine.json [BENCH_serve.json ...]]
+
+Multiple record files merge into one throughput table; the default
+single-argument (or no-argument) invocation behaves exactly as before.
 """
 
 import json
@@ -44,19 +53,19 @@ HARD_TAGS = ("small", "large", "ec2")
 
 
 def main() -> int:
-    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_engine.json"
-    try:
-        with open(path, encoding="utf-8") as f:
-            doc = json.load(f)
-    except OSError as e:
-        print(f"bench gate: cannot read {path}: {e}", file=sys.stderr)
-        return 2
-
+    paths = sys.argv[1:] if len(sys.argv) > 1 else ["BENCH_engine.json"]
     tput = {}
-    for row in doc.get("results", []):
-        name, ips = row.get("name"), row.get("items_per_sec")
-        if name and isinstance(ips, (int, float)) and ips > 0:
-            tput[name] = float(ips)
+    for path in paths:
+        try:
+            with open(path, encoding="utf-8") as f:
+                doc = json.load(f)
+        except OSError as e:
+            print(f"bench gate: cannot read {path}: {e}", file=sys.stderr)
+            return 2
+        for row in doc.get("results", []):
+            name, ips = row.get("name"), row.get("items_per_sec")
+            if name and isinstance(ips, (int, float)) and ips > 0:
+                tput[name] = float(ips)
 
     tags = sorted({n.split("/", 1)[0] for n in tput if "/" in n})
     hard_pairs = 0
@@ -106,6 +115,26 @@ def main() -> int:
             note = "" if zratio >= 1.0 else "  (ziggurat slower than inverse transform here)"
             print(f"{'':<12} zigg    {zigg:>11.0f} trials/s   "
                   f"x{zratio:.2f} vs chunked{note}")
+
+    # Serving event core: wheel vs heap jobs/s. One data point prints
+    # informationally; both present hard-gates the wheel (same run, same
+    # machine load — the refactor must not serve slower than the heap it
+    # replaced).
+    wheel = tput.get("serve/wheel")
+    heap = tput.get("serve/heap")
+    if wheel is not None and heap is not None:
+        hard_pairs += 1
+        sratio = wheel / heap
+        sverdict = "OK" if sratio >= JITTER else "REGRESSION"
+        print(f"{'serve':<12} heap   {heap:>12.0f} jobs/s   "
+              f"wheel {wheel:>12.0f} jobs/s   x{sratio:.2f}  [{sverdict}]")
+        if sratio < JITTER:
+            failures.append(f"serve: wheel is {sratio:.2f}x heap")
+    elif wheel is not None or heap is not None:
+        which = "wheel" if wheel is not None else "heap"
+        only = wheel if wheel is not None else heap
+        print(f"{'serve':<12} {which:<6} {only:>12.0f} jobs/s   [INFO]  "
+              "(one data point; gate arms once both wheel and heap exist)")
 
     if hard_pairs == 0:
         print("bench gate: no hard legacy/v2 pairs found in the record",

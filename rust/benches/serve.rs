@@ -1,0 +1,75 @@
+//! `cargo bench --bench serve` — the serving event core at fleet scale:
+//! hierarchical timer wheel vs. the binary-heap oracle on an overload
+//! job stream, emitting `BENCH_serve.json` (jobs/s) for
+//! `python/bench_gate.py` (DESIGN.md §Perf).
+//!
+//! Both cores produce bit-identical results (the serving tests pin it);
+//! only the event-queue data structure differs, so the throughput gap
+//! is pure scheduling overhead. The stream is the overload regime the
+//! refactor targets: burst arrivals past saturation, bounded record
+//! ring, sketch-backed tails.
+
+use std::time::Duration;
+
+use coded_coop::config::{CommModel, Scenario};
+use coded_coop::policy::PolicySpec;
+use coded_coop::serve::{self, ArrivalProcess, EventQueueKind, ServeConfig};
+use coded_coop::util::benchkit::{group, quick_mode, repo_root_record, write_json, Bench};
+
+fn main() {
+    group("serving event core: timer wheel vs binary heap (overload stream)");
+    let quick = quick_mode();
+    let jobs_per_master = if quick { 2_000 } else { 10_000 };
+    let s = Scenario::small_scale(5, 2.0, CommModel::Stochastic);
+    let mut cfg = ServeConfig::new(PolicySpec::new(
+        "dedi-iter",
+        coded_coop::assign::ValueModel::Markov,
+        "markov",
+    ));
+    cfg.process = ArrivalProcess::Burst;
+    cfg.load_factor = 1.5;
+    cfg.jobs = jobs_per_master;
+    cfg.record_cap = 512; // O(1) memory: the regime the wheel targets
+    let total_jobs = (s.n_masters() * jobs_per_master) as f64;
+    println!(
+        "stream: {} masters × {} jobs, burst arrivals at 1.5× load\n",
+        s.n_masters(),
+        jobs_per_master
+    );
+
+    let measure = if quick {
+        Duration::from_millis(600)
+    } else {
+        Duration::from_secs(3)
+    };
+
+    cfg.queue = EventQueueKind::Heap;
+    let heap_cfg = cfg.clone();
+    let heap = Bench::new()
+        .warmup(Duration::from_millis(300))
+        .measure_time(measure)
+        .max_iters(20)
+        .items(total_jobs)
+        .run("serve/heap", || {
+            serve::run(&s, &heap_cfg).expect("heap serve run")
+        });
+    println!("{}", heap.report());
+
+    cfg.queue = EventQueueKind::Wheel;
+    let wheel_cfg = cfg.clone();
+    let wheel = Bench::new()
+        .warmup(Duration::from_millis(300))
+        .measure_time(measure)
+        .max_iters(20)
+        .items(total_jobs)
+        .run("serve/wheel", || {
+            serve::run(&s, &wheel_cfg).expect("wheel serve run")
+        });
+    println!("{}", wheel.report());
+
+    let speedup = heap.mean.as_secs_f64() / wheel.mean.as_secs_f64();
+    println!("\nwheel/heap wall-time speedup: {speedup:.2}×");
+    let out = repo_root_record("BENCH_serve.json");
+    write_json(&out, "serve", &[heap, wheel]).expect("write BENCH_serve.json");
+    println!("wrote {out}");
+}

@@ -141,7 +141,10 @@ USAGE:
   coded-coop serve --scenario <small|large|ec2|FILE.json> [--policy P] [--loads L]
                   [--jobs N] [--load-factor F] [--churn-rate R] [--churn-downtime D]
                   [--fault SPEC]                      (health-derived churn)
-                  [--process deterministic|poisson] [--seed S] [--records FILE] [--no-records]
+                  [--process deterministic|poisson|burst] [--seed S]
+                  [--records FILE] [--no-records]
+                  [--record-cap N]                    (keep last N job records, stats stay exact)
+                  [--event-queue wheel|heap] [--shard] (event core / per-master shards)
   coded-coop serve --scenario … --transport tcp     (lifecycle-observed churn)
                   [--workers-at ADDR1,ADDR2,…] [--auth-token T] [--jobs N]
                   [--cols S] [--time-scale X] [--fault SPEC] [--fast-health]
@@ -738,17 +741,19 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             .map(|(k, v)| format!("{k}={v}"))
             .collect::<Vec<_>>()
             .join(" ");
-        let starved = c.records.iter().filter(|r| !r.feasible()).count();
+        // Cell-level counters and the sketch p99 are computed once at
+        // cell time and cover every job even when a record cap bounded
+        // the ring — no re-collection from the records here.
         t.row(&[
             format!("{}", c.index),
             axes,
             c.outcome.label.clone(),
-            format!("{}", c.records.len()),
+            format!("{}", c.jobs),
             format!("{:.3}", c.outcome.system.mean()),
-            serve::p99_sojourn_ms(&c.records)
+            c.p99_ms
                 .map(|p| format!("{p:.3}"))
                 .unwrap_or_else(|| "-".into()),
-            format!("{starved}"),
+            format!("{}", c.starved_jobs),
         ]);
     }
     summary(&format!(
@@ -791,6 +796,12 @@ fn cmd_serve_single(args: &Args) -> anyhow::Result<()> {
     cfg.faults = parse_fault(args)?;
     cfg.process = ArrivalProcess::parse(args.flag("process").unwrap_or("poisson"))?;
     cfg.seed = args.u64_flag("seed", 2022)?;
+    // Fleet-scale knobs: bounded record retention, event-core selection
+    // (wheel default; heap = the parity oracle), and sharded per-master
+    // streams on the process pool.
+    cfg.record_cap = args.usize_flag("record-cap", 0)?;
+    cfg.queue = serve::EventQueueKind::parse(args.flag("event-queue").unwrap_or("wheel"))?;
+    let shard = args.switch("shard");
     // Open the record sink BEFORE the run: a bad --records path must
     // fail fast, not after the whole stream has been served.
     let mut sink = RecordSink::from_args(args)?;
@@ -799,7 +810,11 @@ fn cmd_serve_single(args: &Args) -> anyhow::Result<()> {
     } else {
         println_safe
     };
-    let out = serve::run(&s, &cfg)?;
+    let out = if shard {
+        serve::run_sharded(&s, &cfg)?
+    } else {
+        serve::run(&s, &cfg)?
+    };
     for r in &out.records {
         sink.write_line(&serve::json_line(&r.to_json()));
     }
@@ -811,7 +826,7 @@ fn cmd_serve_single(args: &Args) -> anyhow::Result<()> {
     ));
     summary(&format!(
         "jobs: {} ({} starved) | mean sojourn {:.3} ms | p99 {} | replans {} | cache hits {} | sca iters {}",
-        out.records.len(),
+        out.jobs,
         out.infeasible,
         out.system.mean(),
         out.p99_ms()
@@ -1160,11 +1175,14 @@ mod tests {
         let h = help_text();
         assert!(h.contains("sweep export"), "help misses sweep export");
         assert!(h.contains("sweep run"), "help misses sweep run");
-        for id in ["fig6", "fig8_measured", "smoke", "serving"] {
+        for id in ["fig6", "fig8_measured", "smoke", "serving", "overload"] {
             assert!(h.contains(id), "help missing catalog id {id}");
         }
         assert!(h.contains("coded-coop serve"), "help misses the serve command");
         assert!(h.contains("--load-factor"), "help misses serve knobs");
+        assert!(h.contains("--record-cap"), "help misses the record cap");
+        assert!(h.contains("--event-queue"), "help misses the event core knob");
+        assert!(h.contains("burst"), "help misses the burst arrival process");
     }
 
     #[test]

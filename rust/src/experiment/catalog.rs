@@ -17,6 +17,7 @@
 //! | `ablation_straggler` | ablation | zipped (prob, slowdown) × 2 policies |
 //! | `serving` | — | online serving: load factor × churn rate × 3 policies (sojourn mean/p99) |
 //! | `fault_recovery` | — | serving under injected faults: fault rate × 3 policies (health-derived churn) |
+//! | `overload` | — | fleet-scale overload: burst arrivals, load factor > 1 × 2 policies, O(1)-memory tails |
 //! | `smoke` | — | 2-cell CI smoke grid |
 //!
 //! Figs. 7 (trace fitting) and the `multimsg` / `sca_step` ablations are
@@ -48,6 +49,7 @@ pub const IDS: &[&str] = &[
     "heavy_tail",
     "serving",
     "fault_recovery",
+    "overload",
     "smoke",
 ];
 
@@ -62,6 +64,15 @@ pub const SERVING_CHURN_RATES: &[f64] = &[0.0, 1.0];
 /// Fleet fractions hit by injected faults in the `fault_recovery`
 /// sweep: clean baseline, a quarter and half of the workers.
 pub const FAULT_RECOVERY_RATES: &[f64] = &[0.0, 0.25, 0.5];
+
+/// Load factors of the `overload` sweep — all past saturation, where
+/// the queue (not the service draw) dominates the sojourn tail.
+pub const OVERLOAD_LOAD_FACTORS: &[f64] = &[1.5, 2.5, 4.0];
+
+/// Per-cell record-ring cap of the `overload` sweep: the sweep's point
+/// is tails at fleet scale, so raw records are bounded and the sketch /
+/// Welford paths carry the statistics.
+pub const OVERLOAD_RECORD_CAP: usize = 256;
 
 /// Weibull shapes of the `heavy_tail` sweep: 1.0 is the exponential
 /// tail (the shifted-exp law itself, different sampler bits), smaller
@@ -292,6 +303,7 @@ pub fn spec(id: &str, trials: usize, seed: u64) -> anyhow::Result<SweepSpec> {
                 churn_rate: 0.0,
                 churn_downtime: 0.5,
                 fault_rate: 0.0,
+                record_cap: 0,
             }),
             ..SweepSpec::new(
                 id,
@@ -322,6 +334,7 @@ pub fn spec(id: &str, trials: usize, seed: u64) -> anyhow::Result<SweepSpec> {
                 churn_rate: 0.0,
                 churn_downtime: 0.5,
                 fault_rate: 0.0,
+                record_cap: 0,
             }),
             ..SweepSpec::new(
                 id,
@@ -329,6 +342,34 @@ pub fn spec(id: &str, trials: usize, seed: u64) -> anyhow::Result<SweepSpec> {
                 vec![
                     PolicySpec::new("dedi-iter", ValueModel::Markov, "markov"),
                     PolicySpec::new("dedi-iter", ValueModel::Markov, "sca"),
+                    PolicySpec::new("frac", ValueModel::Markov, "markov"),
+                ],
+            )
+        },
+        // Beyond the paper: the fleet-scale overload sweep — every load
+        // factor past saturation, flash-crowd burst arrivals, and a
+        // bounded record ring so cells scale to ≥ 10k jobs at O(1)
+        // memory (tails read from the quantile sketches). `--trials` is
+        // jobs per master, capped at 20k.
+        "overload" => SweepSpec {
+            axes: vec![Axis::single("load_factor", OVERLOAD_LOAD_FACTORS)],
+            trials,
+            seed: fig_mc_seed(seed),
+            keep_samples: false, // sketches carry the tail, not samples
+            arrivals: Some(ArrivalSpec {
+                process: ArrivalProcess::Burst,
+                load_factor: OVERLOAD_LOAD_FACTORS[0],
+                jobs: trials.clamp(1, 20_000),
+                churn_rate: 0.0,
+                churn_downtime: 0.5,
+                fault_rate: 0.0,
+                record_cap: OVERLOAD_RECORD_CAP,
+            }),
+            ..SweepSpec::new(
+                id,
+                ScenarioSpec::base("small", seed, CommModel::Stochastic),
+                vec![
+                    PolicySpec::new("dedi-iter", ValueModel::Markov, "markov"),
                     PolicySpec::new("frac", ValueModel::Markov, "markov"),
                 ],
             )
@@ -402,6 +443,25 @@ mod tests {
             spec("fault_recovery", 100, 1).unwrap().expand().unwrap().len(),
             9
         );
+        // 3 overload factors × 2 policies.
+        assert_eq!(spec("overload", 100, 1).unwrap().expand().unwrap().len(), 6);
+    }
+
+    #[test]
+    fn overload_cells_are_past_saturation_with_bounded_records() {
+        let sp = spec("overload", 50_000, 7).unwrap();
+        assert!(!sp.keep_samples, "overload tails come from sketches");
+        let arr = sp.arrivals.as_ref().unwrap();
+        assert_eq!(arr.process, ArrivalProcess::Burst);
+        assert_eq!(arr.jobs, 20_000, "jobs cap at 20k per master");
+        assert_eq!(arr.record_cap, OVERLOAD_RECORD_CAP);
+        let cells = sp.expand().unwrap();
+        for c in &cells {
+            let a = c.arrivals.as_ref().unwrap();
+            assert!(a.load_factor > 1.0, "overload cell below saturation");
+            assert_eq!(a.process, ArrivalProcess::Burst);
+            assert_eq!(a.record_cap, OVERLOAD_RECORD_CAP);
+        }
     }
 
     #[test]

@@ -63,8 +63,19 @@ pub struct CellResult {
     /// serving cells, the initial-fleet plan).
     pub plan: Plan,
     pub outcome: Outcome,
-    /// Per-job records (serving cells only; empty on batch cells).
+    /// Per-job records (serving cells only; empty on batch cells). When
+    /// the arrival spec set a `record_cap`, only the LAST that many jobs
+    /// are retained — the counters below still cover every job.
     pub records: Vec<JobRecord>,
+    /// p99 sojourn from the serving layer's bounded-memory sketch
+    /// (serving cells; `None` on batch cells, whose tail readout comes
+    /// from kept samples).
+    pub p99_ms: Option<f64>,
+    /// Jobs served (serving cells; 0 on batch cells). Independent of the
+    /// record cap.
+    pub jobs: usize,
+    /// Jobs that starved (`feasible: false`), cap-independent.
+    pub starved_jobs: usize,
 }
 
 impl CellResult {
@@ -107,18 +118,18 @@ impl SweepResult {
                         if let Some(b) = c.overhead {
                             o.set("overhead", Json::Num(b));
                         }
-                        // Tail readout whenever raw samples were kept
-                        // (serving sweeps report mean AND p99 sojourn).
-                        if let Some(p99) =
+                        // Tail readout: serving cells carry a sketch
+                        // p99 computed once at cell time; batch cells
+                        // fall back to the exact percentile over kept
+                        // samples (when any).
+                        if let Some(p99) = c.p99_ms.or_else(|| {
                             c.outcome.samples.as_deref().and_then(|xs| percentile(xs, 0.99))
-                        {
+                        }) {
                             o.set("p99_ms", Json::Num(p99));
                         }
-                        if !c.records.is_empty() {
-                            let starved =
-                                c.records.iter().filter(|r| !r.feasible()).count();
-                            o.set("jobs", Json::Num(c.records.len() as f64));
-                            o.set("starved_jobs", Json::Num(starved as f64));
+                        if c.jobs > 0 {
+                            o.set("jobs", Json::Num(c.jobs as f64));
+                            o.set("starved_jobs", Json::Num(c.starved_jobs as f64));
                         }
                         o
                     })
@@ -202,6 +213,9 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> anyhow::Result<SweepR
             plan: job.plan,
             outcome,
             records: Vec::new(),
+            p99_ms: None,
+            jobs: 0,
+            starved_jobs: 0,
         });
     }
     Ok(SweepResult {
@@ -298,6 +312,9 @@ fn serve_cell(spec: &SweepSpec, cell: Cell) -> anyhow::Result<CellResult> {
         seed: cell.seed,
         use_cache: true,
         warm_start: true,
+        queue: Default::default(),
+        record_cap: arr.record_cap,
+        streams: Default::default(),
     };
     let out = serve::run(&cell.scenario, &cfg)
         .map_err(|e| anyhow::anyhow!("serving cell {}: {e}", cell.index))?;
@@ -318,12 +335,11 @@ fn serve_cell(spec: &SweepSpec, cell: Cell) -> anyhow::Result<CellResult> {
         .per_master
         .iter()
         .enumerate()
-        .map(|(m, sm)| {
-            let had = out.records.iter().any(|r| r.master == m);
-            starved_out(sm, had)
-        })
+        // Traffic detection reads the cap-independent job counters, not
+        // the (possibly ring-truncated) records.
+        .map(|(m, sm)| starved_out(sm, out.per_master_jobs[m] > 0))
         .collect();
-    let system = starved_out(&out.system, !out.records.is_empty());
+    let system = starved_out(&out.system, out.jobs > 0);
     let cr = CellResult {
         index: cell.index,
         axis_values: cell.axis_values,
@@ -338,6 +354,9 @@ fn serve_cell(spec: &SweepSpec, cell: Cell) -> anyhow::Result<CellResult> {
             t_est_ms: out.t_est_ms,
             samples,
         },
+        p99_ms: out.p99_ms(),
+        jobs: out.jobs,
+        starved_jobs: out.infeasible,
         records: out.records,
     };
     Ok(cr)

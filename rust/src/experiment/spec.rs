@@ -83,6 +83,12 @@ pub struct ArrivalSpec {
     /// derives the churn timeline from what the health layer would
     /// observe — instead of the rate-based `churn_rate` cycle.
     pub fault_rate: f64,
+    /// Retain at most this many per-job records per cell (0 = all) —
+    /// [`crate::serve::ServeConfig::record_cap`]. Sojourn summaries and
+    /// quantile sketches always cover every job; the cap only bounds the
+    /// raw-record ring, which is what lets overload cells run ≥ 10k jobs
+    /// at O(1) memory.
+    pub record_cap: usize,
 }
 
 impl Default for ArrivalSpec {
@@ -94,6 +100,7 @@ impl Default for ArrivalSpec {
             churn_rate: 0.0,
             churn_downtime: 0.5,
             fault_rate: 0.0,
+            record_cap: 0,
         }
     }
 }
@@ -129,6 +136,7 @@ impl ArrivalSpec {
         j.set("churn_rate", Json::Num(self.churn_rate));
         j.set("churn_downtime", Json::Num(self.churn_downtime));
         j.set("fault_rate", Json::Num(self.fault_rate));
+        j.set("record_cap", Json::Num(self.record_cap as f64));
         j
     }
 
@@ -158,6 +166,12 @@ impl ArrivalSpec {
             churn_rate: num("churn_rate", d.churn_rate)?,
             churn_downtime: num("churn_downtime", d.churn_downtime)?,
             fault_rate: num("fault_rate", d.fault_rate)?,
+            record_cap: match j.get("record_cap") {
+                None => d.record_cap,
+                Some(v) => v.as_usize().ok_or_else(|| {
+                    anyhow::anyhow!("arrivals field 'record_cap' must be a non-negative integer")
+                })?,
+            },
         })
     }
 }
@@ -1250,6 +1264,7 @@ mod tests {
             churn_rate: 0.5,
             churn_downtime: 0.25,
             fault_rate: 0.25,
+            record_cap: 3,
         });
         let text = s.to_json().to_string_pretty();
         let back = SweepSpec::from_json(&json::parse(&text).unwrap()).unwrap();
@@ -1471,16 +1486,17 @@ mod tests {
                     ziggurat: g.bool(),
                     arrivals: if g.bool() {
                         Some(ArrivalSpec {
-                            process: if g.bool() {
-                                ArrivalProcess::Poisson
-                            } else {
-                                ArrivalProcess::Deterministic
+                            process: match g.usize_range(0, 2) {
+                                0 => ArrivalProcess::Poisson,
+                                1 => ArrivalProcess::Deterministic,
+                                _ => ArrivalProcess::Burst,
                             },
                             load_factor: g.f64_range(0.25, 2.0),
                             jobs: g.usize_range(0, 500),
                             churn_rate: g.f64_range(0.0, 4.0),
                             churn_downtime: g.f64_range(0.1, 0.9),
                             fault_rate: g.f64_range(0.0, 1.0),
+                            record_cap: g.usize_range(0, 64),
                         })
                     } else {
                         None

@@ -7,12 +7,24 @@
 //! virtual time:
 //!
 //! * **Arrivals** — each master receives `jobs` tasks from a
-//!   deterministic or Poisson process whose mean inter-arrival is
-//!   `t*_base / load_factor` (`t*_base` = the full-fleet planner
-//!   estimate), so `load_factor < 1` is underload and `> 1` overload.
-//!   Each master serves its own queue FIFO, one job at a time; all
-//!   masters run concurrently on the shared fleet (the paper's
-//!   fractional sharing).
+//!   deterministic, Poisson, or flash-crowd burst process whose mean
+//!   inter-arrival is `t*_base / load_factor` (`t*_base` = the
+//!   full-fleet planner estimate), so `load_factor < 1` is underload
+//!   and `> 1` overload. Each master serves its own queue FIFO, one job
+//!   at a time; all masters run concurrently on the shared fleet (the
+//!   paper's fractional sharing).
+//! * **Event core** — a hierarchical timer wheel
+//!   ([`wheel::TimerWheel`]) behind the [`wheel::EventQueue`] trait
+//!   drives the virtual clock; the original binary heap stays in-tree
+//!   as [`wheel::HeapQueue`], the parity oracle. Both order events by
+//!   `(total_cmp(time), push seq)`, so they are bit-for-bit
+//!   interchangeable ([`ServeConfig::queue`] selects; tests pin it).
+//! * **Tail stats** — per-master and system sojourn tails accumulate in
+//!   bounded-memory [`QuantileSketch`]es and Welford [`Summary`]s as
+//!   jobs complete, and [`ServeConfig::record_cap`] bounds the retained
+//!   [`JobRecord`] ring — million-job overload runs hold O(1) memory
+//!   per stream. The exact [`percentile`] path survives as the test
+//!   oracle ([`p99_sojourn_ms`]).
 //! * **Admission → (re)planning** — when a job reaches the head of its
 //!   queue, the serving loop needs a plan for the CURRENT fleet state.
 //!   A **plan cache** keyed by the fleet fingerprint (every worker's
@@ -43,29 +55,47 @@
 
 pub mod churn;
 pub mod tcp;
+pub mod wheel;
 
 pub use churn::{ChurnAction, ChurnEvent, ChurnScript};
 pub use tcp::{TcpJobRecord, TcpServeConfig, TcpServeOutcome};
+pub use wheel::{EventQueue, HeapQueue, TimerWheel};
 
-use std::cmp::{Ordering, Reverse};
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::{HashMap, VecDeque};
 use std::rc::Rc;
 use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
+use std::sync::Arc;
 
 use crate::alloc::{self, markov, sca, Allocation, EffLink};
 use crate::config::Scenario;
+use crate::exec::pool;
 use crate::health::{self, FaultPlan, HealthConfig};
 use crate::plan::{self, Plan};
 use crate::policy::{LoadAllocator, PolicySpec};
 use crate::sim::engine::{CapacityProfile, Compiled};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
-use crate::util::stats::{percentile, Summary};
+use crate::util::stats::{percentile, QuantileSketch, Summary};
 
 /// XOR salt separating the arrival-time RNG from the service stream —
 /// service draws must consume `Rng::new(seed).fork(1)` exactly like the
 /// batch engine's stream 1, independent of how arrivals are generated.
 const ARRIVAL_SALT: u64 = 0x0A44_1CA1;
+
+/// XOR salt for [`ServiceStreams::PerMaster`] service draws: master `m`
+/// consumes `Rng::new(seed ^ SHARD_SALT).fork(m + 1)`, a stream
+/// disjoint from both the shared-service stream (`fork(1)` unsalted)
+/// and the arrival streams ([`ARRIVAL_SALT`]). Per-master streams make
+/// each master's timeline independent of event interleaving, which is
+/// what lets [`run_sharded`] farm masters out to the pool bit-for-bit.
+const SHARD_SALT: u64 = 0x5EA4_D00D;
+
+/// Jobs released at each flash-crowd epoch of
+/// [`ArrivalProcess::Burst`]. Burst epochs are Poisson with mean
+/// spacing `BURST_SIZE × period`, so the long-run arrival rate still
+/// matches `load_factor` — the burstiness moves mass into the queue's
+/// tail, not into the mean load.
+pub const BURST_SIZE: usize = 8;
 
 /// Shared validation of the arrival/churn knobs, used by both direct
 /// [`ServeConfig`] runs and `experiment::ArrivalSpec` templates so the
@@ -115,6 +145,11 @@ pub enum ArrivalProcess {
     /// Exponential inter-arrivals with mean `period`, independent per
     /// master.
     Poisson,
+    /// Flash crowds: [`BURST_SIZE`] jobs land simultaneously at Poisson
+    /// epochs with mean spacing `BURST_SIZE × period`, independent per
+    /// master. Same long-run rate as `Poisson`, far heavier queue tail
+    /// — the overload catalog's arrival shape.
+    Burst,
 }
 
 impl ArrivalProcess {
@@ -122,6 +157,7 @@ impl ArrivalProcess {
         match self {
             ArrivalProcess::Deterministic => "deterministic",
             ArrivalProcess::Poisson => "poisson",
+            ArrivalProcess::Burst => "burst",
         }
     }
 
@@ -129,9 +165,57 @@ impl ArrivalProcess {
         match s {
             "deterministic" => Ok(ArrivalProcess::Deterministic),
             "poisson" => Ok(ArrivalProcess::Poisson),
-            other => anyhow::bail!("unknown arrival process '{other}' (deterministic|poisson)"),
+            "burst" => Ok(ArrivalProcess::Burst),
+            other => {
+                anyhow::bail!("unknown arrival process '{other}' (deterministic|poisson|burst)")
+            }
         }
     }
+}
+
+/// Which event core drives the serving clock. Both obey the same
+/// `(total_cmp(time), seq)` contract and produce identical results;
+/// the heap exists as the parity oracle and the bench baseline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum EventQueueKind {
+    /// Hierarchical timer wheel ([`wheel::TimerWheel`]) — O(1)
+    /// amortized per event; the production core.
+    #[default]
+    Wheel,
+    /// Binary heap ([`wheel::HeapQueue`]) — O(log n) per event; the
+    /// PR 5 core, kept as the oracle.
+    Heap,
+}
+
+impl EventQueueKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EventQueueKind::Wheel => "wheel",
+            EventQueueKind::Heap => "heap",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "wheel" => Ok(EventQueueKind::Wheel),
+            "heap" => Ok(EventQueueKind::Heap),
+            other => anyhow::bail!("unknown event queue '{other}' (wheel|heap)"),
+        }
+    }
+}
+
+/// How service-time draws consume randomness.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ServiceStreams {
+    /// One stream (`Rng::new(seed).fork(1)`) consumed by every master
+    /// in event order — the batch-engine parity contract (module docs).
+    /// Results depend on the cross-master event interleaving.
+    #[default]
+    Shared,
+    /// One independent stream per master (`SHARD_SALT`): each master's
+    /// timeline is invariant to interleaving, so a sequential
+    /// multi-master run and [`run_sharded`] agree bit-for-bit.
+    PerMaster,
 }
 
 /// Everything one serving run needs beyond the scenario.
@@ -166,11 +250,23 @@ pub struct ServeConfig {
     pub use_cache: bool,
     /// Seed SCA-load replans with the previous allocation.
     pub warm_start: bool,
+    /// Event core driving the virtual clock (results are identical
+    /// either way — the knob exists for the parity tests and benches).
+    pub queue: EventQueueKind,
+    /// Retain at most this many [`JobRecord`]s (0 = keep every job).
+    /// A capped run keeps the LAST `record_cap` records in arrival
+    /// order — a bounded ring — while the sketches and summaries still
+    /// see every job, so tails stay exact-to-bound at O(1) memory.
+    pub record_cap: usize,
+    /// Service-draw stream layout (shared = batch parity, per-master =
+    /// interleaving-invariant; see [`ServiceStreams`]).
+    pub streams: ServiceStreams,
 }
 
 impl ServeConfig {
     /// Defaults: deterministic arrivals at 0.8 load, 50 jobs/master,
-    /// static fleet, cache + warm starts on.
+    /// static fleet, cache + warm starts on, timer-wheel event core,
+    /// unbounded records, shared service stream.
     pub fn new(policy: PolicySpec) -> Self {
         Self {
             policy,
@@ -184,6 +280,9 @@ impl ServeConfig {
             seed: 2022,
             use_cache: true,
             warm_start: true,
+            queue: EventQueueKind::default(),
+            record_cap: 0,
+            streams: ServiceStreams::default(),
         }
     }
 }
@@ -248,12 +347,24 @@ impl JobRecord {
 pub struct ServeOutcome {
     /// Plan legend label (policy roster name).
     pub label: String,
-    /// Every job in admission order.
+    /// Retained job records in admission order — every job when
+    /// [`ServeConfig::record_cap`] is 0, else the last `record_cap`
+    /// (statistics below always cover EVERY job).
     pub records: Vec<JobRecord>,
     /// Sojourn summaries over FEASIBLE jobs per master.
     pub per_master: Vec<Summary>,
     /// Sojourn summary over all feasible jobs.
     pub system: Summary,
+    /// Bounded-memory sojourn tail per master (feasible jobs) — see
+    /// [`QuantileSketch`] for the rank-error bound.
+    pub per_master_sketch: Vec<QuantileSketch>,
+    /// Bounded-memory system sojourn tail (feasible jobs).
+    pub system_sketch: QuantileSketch,
+    /// Jobs recorded per master, starved ones included (independent of
+    /// the record ring, so a capped run still knows who had traffic).
+    pub per_master_jobs: Vec<usize>,
+    /// Total jobs recorded (= Σ `per_master_jobs`).
+    pub jobs: usize,
     /// The t = 0 fleet plan's predicted system delay.
     pub t_est_ms: f64,
     /// The plan of the initial fleet state.
@@ -272,7 +383,9 @@ pub struct ServeOutcome {
 }
 
 impl ServeOutcome {
-    /// Sojourns of the feasible jobs, admission order.
+    /// Sojourns of the feasible RETAINED jobs, admission order — the
+    /// exact-path view. Covers every job only when `record_cap` was 0;
+    /// capped runs should read the sketches instead.
     pub fn sojourn_samples(&self) -> Vec<f64> {
         self.records
             .iter()
@@ -281,15 +394,25 @@ impl ServeOutcome {
             .collect()
     }
 
-    /// p99 sojourn over feasible jobs (`None` when nothing completed).
+    /// p99 sojourn over ALL feasible jobs (`None` when nothing
+    /// completed), read from the system sketch in O(stored items) —
+    /// accurate to the sketch's documented rank error and independent
+    /// of the record ring. The exact-path oracle is
+    /// [`p99_sojourn_ms`]; tests pin the two within bound.
     pub fn p99_ms(&self) -> Option<f64> {
-        p99_sojourn_ms(&self.records)
+        self.system_sketch.quantile(0.99)
+    }
+
+    /// Per-master p99 from the bounded-memory sketches.
+    pub fn p99_master_ms(&self, m: usize) -> Option<f64> {
+        self.per_master_sketch.get(m)?.quantile(0.99)
     }
 }
 
-/// p99 sojourn over the feasible jobs of a record set (`None` when
-/// nothing completed) — the one tail readout shared by the CLI tables
-/// and [`ServeOutcome::p99_ms`].
+/// EXACT p99 sojourn over the feasible jobs of a record set (`None`
+/// when nothing completed). This is the test oracle for the sketch
+/// path — it re-collects a `Vec<f64>` and sorts, so production readouts
+/// go through [`ServeOutcome::p99_ms`] instead.
 pub fn p99_sojourn_ms(records: &[JobRecord]) -> Option<f64> {
     let xs: Vec<f64> = records
         .iter()
@@ -490,33 +613,6 @@ enum EvKind {
     Completion { master: usize },
 }
 
-/// Heap key: virtual time, ties broken by insertion sequence (so
-/// same-instant arrivals process in master order — the lockstep case
-/// the batch-parity test relies on).
-#[derive(Clone, Copy, Debug)]
-struct Ev {
-    at: f64,
-    seq: u64,
-    kind: EvKind,
-}
-
-impl PartialEq for Ev {
-    fn eq(&self, o: &Self) -> bool {
-        self.at.to_bits() == o.at.to_bits() && self.seq == o.seq
-    }
-}
-impl Eq for Ev {}
-impl Ord for Ev {
-    fn cmp(&self, o: &Self) -> Ordering {
-        self.at.total_cmp(&o.at).then(self.seq.cmp(&o.seq))
-    }
-}
-impl PartialOrd for Ev {
-    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
-        Some(self.cmp(o))
-    }
-}
-
 struct PlanCtx {
     plan: Plan,
     compiled: Compiled,
@@ -528,17 +624,27 @@ struct ServeLoop<'a> {
     profiles: &'a [CapacityProfile],
     /// Script event times, presorted for O(log n) epoch lookups.
     epoch_times: Vec<f64>,
-    heap: BinaryHeap<Reverse<Ev>>,
-    seq: u64,
+    /// The event core — wheel or heap oracle, per [`ServeConfig::queue`].
+    queue: Box<dyn EventQueue<EvKind>>,
     queues: Vec<VecDeque<(usize, f64)>>,
     busy: Vec<bool>,
     cache: HashMap<Vec<u64>, Rc<PlanCtx>>,
     cold: Option<Rc<PlanCtx>>,
     last_plan: Option<Plan>,
-    service_rng: Rng,
+    /// One entry under [`ServiceStreams::Shared`] (every master draws
+    /// from it in event order), one per master under `PerMaster`.
+    service_rngs: Vec<Rng>,
     times: Vec<f64>,
     loads: Vec<f64>,
     records: Vec<JobRecord>,
+    /// Next overwrite slot once `records` reached the cap.
+    ring_pos: usize,
+    per_master: Vec<Summary>,
+    system: Summary,
+    per_master_sketch: Vec<QuantileSketch>,
+    system_sketch: QuantileSketch,
+    per_master_jobs: Vec<usize>,
+    jobs_recorded: usize,
     replans: usize,
     cache_hits: usize,
     infeasible: usize,
@@ -547,13 +653,7 @@ struct ServeLoop<'a> {
 
 impl ServeLoop<'_> {
     fn push(&mut self, at: f64, kind: EvKind) {
-        let ev = Ev {
-            at,
-            seq: self.seq,
-            kind,
-        };
-        self.seq += 1;
-        self.heap.push(Reverse(ev));
+        self.queue.push(at, kind);
     }
 
     /// Churn epoch at `t` — [`ChurnScript::epoch_at`] over the
@@ -561,6 +661,31 @@ impl ServeLoop<'_> {
     /// linear scan (synthesized scripts can carry thousands of events).
     fn epoch_at(&self, t: f64) -> usize {
         self.epoch_times.partition_point(|&bt| bt <= t)
+    }
+
+    /// Record one job: summaries + sketches see every record exactly
+    /// once (feasible sojourns only — the ∞ of a starved job is counted
+    /// in `infeasible`, not averaged); the record ring keeps the last
+    /// `record_cap` in arrival order when a cap is set.
+    fn record(&mut self, rec: JobRecord) {
+        self.jobs_recorded += 1;
+        self.per_master_jobs[rec.master] += 1;
+        if rec.feasible() {
+            let sojourn = rec.sojourn_ms();
+            self.per_master[rec.master].push(sojourn);
+            self.system.push(sojourn);
+            self.per_master_sketch[rec.master].insert(sojourn);
+            self.system_sketch.insert(sojourn);
+        } else {
+            self.infeasible += 1;
+        }
+        let cap = self.cfg.record_cap;
+        if cap == 0 || self.records.len() < cap {
+            self.records.push(rec);
+        } else {
+            self.records[self.ring_pos] = rec;
+            self.ring_pos = (self.ring_pos + 1) % cap;
+        }
     }
 
     /// Plan (or fetch) for the fleet state at `now`. Either way, the
@@ -623,7 +748,7 @@ impl ServeLoop<'_> {
         while let Some((job, arrival)) = self.queues[m].pop_front() {
             let n = self.s.n_workers();
             if !(1..=n).any(|w| self.profiles[w].factor_at(now) > 0.0) {
-                self.records.push(JobRecord {
+                self.record(JobRecord {
                     job,
                     master: m,
                     arrival_ms: arrival,
@@ -632,19 +757,22 @@ impl ServeLoop<'_> {
                     epoch: self.epoch_at(now),
                     cache_hit: false,
                 });
-                self.infeasible += 1;
                 continue;
             }
             let (ctx, cache_hit) = self.plan_at(now)?;
+            let rng_idx = match self.cfg.streams {
+                ServiceStreams::Shared => 0,
+                ServiceStreams::PerMaster => m,
+            };
             let service = ctx.compiled.sample_master_warped(
                 m,
-                &mut self.service_rng,
+                &mut self.service_rngs[rng_idx],
                 now,
                 self.profiles,
                 &mut self.times,
                 &mut self.loads,
             );
-            self.records.push(JobRecord {
+            self.record(JobRecord {
                 job,
                 master: m,
                 arrival_ms: arrival,
@@ -658,7 +786,6 @@ impl ServeLoop<'_> {
                 self.push(now + service, EvKind::Completion { master: m });
                 return Ok(());
             }
-            self.infeasible += 1;
         }
         Ok(())
     }
@@ -668,6 +795,15 @@ impl ServeLoop<'_> {
 /// arrivals, churn synthesis and service draws all derive from
 /// `cfg.seed` through separate streams.
 pub fn run(s: &Scenario, cfg: &ServeConfig) -> anyhow::Result<ServeOutcome> {
+    run_stream(s, cfg, None)
+}
+
+/// The serving loop proper. `only = Some(m)` restricts arrivals to
+/// master `m` — the shard body of [`run_sharded`]. Everything else
+/// (planning scale, churn script, RNG streams) is derived identically,
+/// so a shard reproduces master `m`'s slice of the sequential run
+/// bit-for-bit under [`ServiceStreams::PerMaster`].
+fn run_stream(s: &Scenario, cfg: &ServeConfig, only: Option<usize>) -> anyhow::Result<ServeOutcome> {
     validate_arrival_knobs(cfg.load_factor, cfg.churn_rate, cfg.churn_downtime)?;
     let m_cnt = s.n_masters();
     let n = s.n_workers();
@@ -764,6 +900,8 @@ pub fn run(s: &Scenario, cfg: &ServeConfig) -> anyhow::Result<ServeOutcome> {
     }
 
     // Arrival streams (salted: independent of the service stream).
+    // Always derived for EVERY master from the same per-master forks,
+    // so a sharded run (`only = Some(m)`) sees identical arrival times.
     let arrivals: Vec<Vec<f64>> = (0..m_cnt)
         .map(|m| match cfg.process {
             ArrivalProcess::Deterministic => {
@@ -780,8 +918,48 @@ pub fn run(s: &Scenario, cfg: &ServeConfig) -> anyhow::Result<ServeOutcome> {
                     })
                     .collect()
             }
+            ArrivalProcess::Burst => {
+                // Flash crowds: BURST_SIZE simultaneous jobs at Poisson
+                // epochs with mean spacing BURST_SIZE × period — the
+                // long-run rate matches `Poisson`, the tail does not.
+                let mut rng = Rng::new(cfg.seed ^ ARRIVAL_SALT).fork(m as u64 + 1);
+                let rate = 1.0 / (period * BURST_SIZE as f64);
+                let mut t = 0.0;
+                let mut out = Vec::with_capacity(cfg.jobs);
+                while out.len() < cfg.jobs {
+                    t += rng.exp(rate);
+                    let take = BURST_SIZE.min(cfg.jobs - out.len());
+                    out.extend(std::iter::repeat(t).take(take));
+                }
+                out
+            }
         })
         .collect();
+
+    // Event core: the wheel's tick is sized for the expected event
+    // count over the run's span (arrival + completion per job); the
+    // heap needs no sizing. Both obey the same `(time, seq)` contract.
+    let queue: Box<dyn EventQueue<EvKind>> = match cfg.queue {
+        EventQueueKind::Wheel => Box::new(TimerWheel::for_span(
+            horizon,
+            (m_cnt * cfg.jobs.max(1) * 2).max(64),
+        )),
+        EventQueueKind::Heap => Box::new(HeapQueue::new()),
+    };
+    let service_rngs = match cfg.streams {
+        ServiceStreams::Shared => vec![Rng::new(cfg.seed).fork(1)],
+        ServiceStreams::PerMaster => (0..m_cnt)
+            .map(|m| Rng::new(cfg.seed ^ SHARD_SALT).fork(m as u64 + 1))
+            .collect(),
+    };
+    let record_hint = {
+        let total = m_cnt * cfg.jobs;
+        if cfg.record_cap == 0 {
+            total
+        } else {
+            cfg.record_cap.min(total)
+        }
+    };
 
     let mut lp = ServeLoop {
         s,
@@ -792,8 +970,7 @@ pub fn run(s: &Scenario, cfg: &ServeConfig) -> anyhow::Result<ServeOutcome> {
             ts.sort_by(f64::total_cmp);
             ts
         },
-        heap: BinaryHeap::new(),
-        seq: 0,
+        queue,
         queues: vec![VecDeque::new(); m_cnt],
         busy: vec![false; m_cnt],
         cache,
@@ -801,12 +978,20 @@ pub fn run(s: &Scenario, cfg: &ServeConfig) -> anyhow::Result<ServeOutcome> {
         // Warm starts may seed from the full-fleet plan on the very
         // first state change, not only from replans this loop performed.
         last_plan: cfg.warm_start.then(|| base_plan.clone()),
-        // Stream 1 = the batch engine's first shard stream: the
-        // constant-share parity contract (module docs).
-        service_rng: Rng::new(cfg.seed).fork(1),
+        // Shared = stream 1, the batch engine's first shard stream: the
+        // constant-share parity contract (module docs). PerMaster =
+        // salted fork(m + 1) per master.
+        service_rngs,
         times: Vec::new(),
         loads: Vec::new(),
-        records: Vec::with_capacity(m_cnt * cfg.jobs),
+        records: Vec::with_capacity(record_hint),
+        ring_pos: 0,
+        per_master: vec![Summary::new(); m_cnt],
+        system: Summary::new(),
+        per_master_sketch: vec![QuantileSketch::default(); m_cnt],
+        system_sketch: QuantileSketch::default(),
+        per_master_jobs: vec![0; m_cnt],
+        jobs_recorded: 0,
         replans: 0,
         cache_hits: 0,
         infeasible: 0,
@@ -816,33 +1001,34 @@ pub fn run(s: &Scenario, cfg: &ServeConfig) -> anyhow::Result<ServeOutcome> {
     // in master order (lockstep = the batch trial loop's master order).
     for j in 0..cfg.jobs {
         for (m, arr) in arrivals.iter().enumerate() {
-            lp.push(arr[j], EvKind::Arrival { master: m, job: j });
+            if only.map_or(true, |o| o == m) {
+                lp.push(arr[j], EvKind::Arrival { master: m, job: j });
+            }
         }
     }
-    while let Some(Reverse(ev)) = lp.heap.pop() {
-        match ev.kind {
+    while let Some((at, kind)) = lp.queue.pop() {
+        match kind {
             EvKind::Arrival { master, job } => {
-                lp.queues[master].push_back((job, ev.at));
+                lp.queues[master].push_back((job, at));
                 if !lp.busy[master] {
-                    lp.admit(master, ev.at)?;
+                    lp.admit(master, at)?;
                 }
             }
             EvKind::Completion { master } => {
                 lp.busy[master] = false;
                 if !lp.queues[master].is_empty() {
-                    lp.admit(master, ev.at)?;
+                    lp.admit(master, at)?;
                 }
             }
         }
     }
 
-    let mut per_master = vec![Summary::new(); m_cnt];
-    let mut system = Summary::new();
-    for r in &lp.records {
-        if r.feasible() {
-            per_master[r.master].push(r.sojourn_ms());
-            system.push(r.sojourn_ms());
-        }
+    // A wrapped record ring leaves the oldest retained record at
+    // `ring_pos`; rotate it back to the front so `records` reads in
+    // admission order regardless of the cap.
+    let mut records = lp.records;
+    if lp.ring_pos > 0 {
+        records.rotate_left(lp.ring_pos);
     }
     let (cold_plan, t_est_ms) = match &lp.cold {
         Some(ctx) => (ctx.plan.clone(), ctx.plan.t_est()),
@@ -850,9 +1036,13 @@ pub fn run(s: &Scenario, cfg: &ServeConfig) -> anyhow::Result<ServeOutcome> {
     };
     Ok(ServeOutcome {
         label: cold_plan.label.clone(),
-        records: lp.records,
-        per_master,
-        system,
+        records,
+        per_master: lp.per_master,
+        system: lp.system,
+        per_master_sketch: lp.per_master_sketch,
+        system_sketch: lp.system_sketch,
+        per_master_jobs: lp.per_master_jobs,
+        jobs: lp.jobs_recorded,
         t_est_ms,
         cold_plan,
         replans: lp.replans,
@@ -861,6 +1051,85 @@ pub fn run(s: &Scenario, cfg: &ServeConfig) -> anyhow::Result<ServeOutcome> {
         sca_iters: lp.sca_iters,
         period_ms: period,
     })
+}
+
+/// Run the serving timeline sharded: each master's stream becomes one
+/// task on the process-wide worker pool ([`pool::run_all`]), and the
+/// shard outcomes merge at the barrier — sketches via
+/// [`QuantileSketch::merge`], Welford summaries via [`Summary::merge`].
+///
+/// Masters do not interact in the serving model (per-master FIFO
+/// queues, plans keyed on fleet state only), so the ONLY sequential
+/// coupling is the shared service stream — which is why this entry
+/// forces [`ServiceStreams::PerMaster`]. Under per-master streams a
+/// shard reproduces the sequential run's slice for its master
+/// bit-for-bit (tests pin records and per-master summaries).
+///
+/// Merged caveats, documented rather than hidden: `replans`,
+/// `cache_hits`, and `sca_iters` are SUMS over shards (each shard plans
+/// for itself — up to `m` cold solves where the sequential loop did
+/// one), and the merged `system` summary can differ from the sequential
+/// interleaved push order by float-summation ulps; the per-master
+/// summaries are exact.
+pub fn run_sharded(s: &Scenario, cfg: &ServeConfig) -> anyhow::Result<ServeOutcome> {
+    let m_cnt = s.n_masters();
+    let mut shard_cfg = cfg.clone();
+    shard_cfg.streams = ServiceStreams::PerMaster;
+    if m_cnt <= 1 {
+        return run_stream(s, &shard_cfg, None);
+    }
+    let shared: Arc<(Scenario, ServeConfig)> = Arc::new((s.clone(), shard_cfg));
+    let tasks: Vec<_> = (0..m_cnt)
+        .map(|m| {
+            let shared = Arc::clone(&shared);
+            move || {
+                let (s, cfg) = &*shared;
+                run_stream(s, cfg, Some(m))
+            }
+        })
+        .collect();
+    let shards = pool::run_all(tasks);
+
+    let mut merged: Option<ServeOutcome> = None;
+    for (m, shard) in shards.into_iter().enumerate() {
+        let shard = shard?;
+        match &mut merged {
+            None => merged = Some(shard),
+            Some(out) => {
+                // Shard m only served master m: fold its slice in.
+                out.records.extend(shard.records);
+                out.per_master[m] = shard.per_master[m].clone();
+                out.per_master_sketch[m] = shard.per_master_sketch[m].clone();
+                out.per_master_jobs[m] = shard.per_master_jobs[m];
+                out.jobs += shard.jobs;
+                out.replans += shard.replans;
+                out.cache_hits += shard.cache_hits;
+                out.infeasible += shard.infeasible;
+                out.sca_iters += shard.sca_iters;
+            }
+        }
+    }
+    let mut out = merged.expect("n_masters >= 1");
+    // Shard 0 seeded the merge with ITS system view (= master 0 only);
+    // rebuild the system summary/sketch as the merge of every master so
+    // shard count and merge order cannot skew it.
+    out.system = Summary::new();
+    out.system_sketch = QuantileSketch::default();
+    for m in 0..m_cnt {
+        out.system.merge(&out.per_master[m]);
+        out.system_sketch.merge(&out.per_master_sketch[m]);
+    }
+    // Deterministic cross-master record order: by arrival, master-order
+    // ties (= the sequential push order; under overload the sequential
+    // loop records in ADMISSION order instead, so only per-master
+    // slices — not the global interleaving — are pinned identical).
+    out.records.sort_by(|a, b| {
+        a.arrival_ms
+            .total_cmp(&b.arrival_ms)
+            .then(a.master.cmp(&b.master))
+            .then(a.job.cmp(&b.job))
+    });
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -1106,10 +1375,224 @@ mod tests {
 
     #[test]
     fn arrival_process_names_roundtrip() {
-        for p in [ArrivalProcess::Deterministic, ArrivalProcess::Poisson] {
+        for p in [
+            ArrivalProcess::Deterministic,
+            ArrivalProcess::Poisson,
+            ArrivalProcess::Burst,
+        ] {
             assert_eq!(ArrivalProcess::parse(p.as_str()).unwrap(), p);
         }
         assert!(ArrivalProcess::parse("bursty").is_err());
+        for q in [EventQueueKind::Wheel, EventQueueKind::Heap] {
+            assert_eq!(EventQueueKind::parse(q.as_str()).unwrap(), q);
+        }
+        assert!(EventQueueKind::parse("btree").is_err());
+    }
+
+    /// The tentpole parity pin: the timer wheel IS the heap, bit for
+    /// bit, across every arrival shape and under churn (which stresses
+    /// same-instant completion/arrival interleavings).
+    #[test]
+    fn wheel_and_heap_event_cores_agree_bit_for_bit() {
+        let s = small();
+        for process in [
+            ArrivalProcess::Deterministic,
+            ArrivalProcess::Poisson,
+            ArrivalProcess::Burst,
+        ] {
+            for load in [0.8, 2.5] {
+                let mut cfg = ServeConfig::new(policy("markov"));
+                cfg.process = process;
+                cfg.load_factor = load;
+                cfg.jobs = 25;
+                cfg.churn_rate = 1.0;
+                cfg.queue = EventQueueKind::Wheel;
+                let wheel = run(&s, &cfg).unwrap();
+                cfg.queue = EventQueueKind::Heap;
+                let heap = run(&s, &cfg).unwrap();
+                assert_eq!(
+                    wheel.records, heap.records,
+                    "{process:?} load {load}: event cores diverged"
+                );
+                assert_eq!(wheel.replans, heap.replans);
+                assert_eq!(wheel.infeasible, heap.infeasible);
+                assert_eq!(
+                    wheel.system.mean().to_bits(),
+                    heap.system.mean().to_bits(),
+                    "summaries must be bit-identical"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn burst_arrivals_land_in_flash_crowds() {
+        let s = small();
+        let mut cfg = ServeConfig::new(policy("markov"));
+        cfg.process = ArrivalProcess::Burst;
+        cfg.jobs = 3 * BURST_SIZE;
+        cfg.load_factor = 0.5;
+        let out = run(&s, &cfg).unwrap();
+        assert_eq!(out.jobs, 2 * 3 * BURST_SIZE);
+        for m in 0..2 {
+            let mut arr: Vec<f64> = out
+                .records
+                .iter()
+                .filter(|r| r.master == m)
+                .map(|r| r.arrival_ms)
+                .collect();
+            arr.sort_by(f64::total_cmp);
+            // Exactly 3 distinct epochs, each carrying BURST_SIZE jobs.
+            let mut epochs: Vec<f64> = arr.clone();
+            epochs.dedup_by(|a, b| a == b);
+            assert_eq!(epochs.len(), 3, "master {m}: {arr:?}");
+            for e in &epochs {
+                assert_eq!(
+                    arr.iter().filter(|&&t| t == *e).count(),
+                    BURST_SIZE,
+                    "master {m}: ragged burst at {e}"
+                );
+            }
+        }
+        // Same-instant bursts queue behind one server: within one burst
+        // someone always waits.
+        let waited = out.records.iter().filter(|r| r.wait_ms() > 1e-9).count();
+        assert!(waited >= 2 * 2 * (BURST_SIZE - 1), "bursts did not queue ({waited})");
+        // Determinism across reruns.
+        let again = run(&s, &cfg).unwrap();
+        assert_eq!(out.records, again.records);
+    }
+
+    #[test]
+    fn record_cap_keeps_last_records_and_exact_stats() {
+        let s = small();
+        let mut cfg = ServeConfig::new(policy("markov"));
+        cfg.jobs = 30;
+        let full = run(&s, &cfg).unwrap();
+        cfg.record_cap = 7;
+        let capped = run(&s, &cfg).unwrap();
+        // The ring holds exactly the LAST 7 records, admission order.
+        assert_eq!(capped.records.len(), 7);
+        assert_eq!(capped.records[..], full.records[full.records.len() - 7..]);
+        // Statistics still cover EVERY job, bit-identically.
+        assert_eq!(capped.jobs, full.jobs);
+        assert_eq!(capped.system.count(), full.system.count());
+        assert_eq!(capped.system.mean().to_bits(), full.system.mean().to_bits());
+        assert_eq!(capped.p99_ms(), full.p99_ms());
+        assert_eq!(capped.per_master_jobs, vec![30, 30]);
+        // A cap wider than the run retains everything.
+        cfg.record_cap = 10_000;
+        let wide = run(&s, &cfg).unwrap();
+        assert_eq!(wide.records, full.records);
+    }
+
+    /// Sharded = sequential under per-master service streams: records
+    /// and per-master summaries bit-identical, system summary within
+    /// merge-order ulps.
+    #[test]
+    fn sharded_run_matches_sequential_per_master_streams() {
+        let s = small();
+        let mut cfg = ServeConfig::new(policy("markov"));
+        cfg.jobs = 20;
+        cfg.process = ArrivalProcess::Poisson;
+        cfg.load_factor = 1.5;
+        cfg.streams = ServiceStreams::PerMaster;
+        let seq = run(&s, &cfg).unwrap();
+        let shard = run_sharded(&s, &cfg).unwrap();
+        for m in 0..2 {
+            let seq_m: Vec<&JobRecord> =
+                seq.records.iter().filter(|r| r.master == m).collect();
+            let shard_m: Vec<&JobRecord> =
+                shard.records.iter().filter(|r| r.master == m).collect();
+            assert_eq!(seq_m, shard_m, "master {m} slice diverged across sharding");
+            assert_eq!(
+                seq.per_master[m].mean().to_bits(),
+                shard.per_master[m].mean().to_bits(),
+                "master {m} summary not bit-identical"
+            );
+            assert_eq!(seq.per_master[m].count(), shard.per_master[m].count());
+        }
+        assert_eq!(seq.jobs, shard.jobs);
+        assert_eq!(seq.infeasible, shard.infeasible);
+        // System mean agrees to merge-order ulps (documented caveat).
+        let rel = (seq.system.mean() - shard.system.mean()).abs() / seq.system.mean();
+        assert!(rel < 1e-12, "system means diverged: rel {rel}");
+    }
+
+    /// PerMaster streams genuinely decouple masters: they draw different
+    /// service times than the shared stream (different salt), and each
+    /// master's records are invariant to the other's job count.
+    #[test]
+    fn per_master_streams_are_interleaving_invariant() {
+        let s = small();
+        let mut cfg = ServeConfig::new(policy("markov"));
+        cfg.jobs = 12;
+        cfg.process = ArrivalProcess::Poisson;
+        cfg.streams = ServiceStreams::PerMaster;
+        let a = run(&s, &cfg).unwrap();
+        cfg.load_factor = 4.0; // reshuffle the cross-master interleaving
+        let b = run(&s, &cfg).unwrap();
+        for m in 0..2 {
+            let svc_a: Vec<u64> = a
+                .records
+                .iter()
+                .filter(|r| r.master == m)
+                .map(|r| r.service_ms.to_bits())
+                .collect();
+            let svc_b: Vec<u64> = b
+                .records
+                .iter()
+                .filter(|r| r.master == m)
+                .map(|r| r.service_ms.to_bits())
+                .collect();
+            assert_eq!(svc_a, svc_b, "master {m} draws depend on interleaving");
+        }
+    }
+
+    /// The acceptance overload cell: load_factor > 1, ≥ 10k jobs,
+    /// bounded retained records, sketch p99 within its documented rank
+    /// error of the exact percentile over all sojourns.
+    #[test]
+    fn overload_cell_holds_bounded_memory_with_accurate_tail() {
+        let s = small();
+        let mut cfg = ServeConfig::new(policy("markov"));
+        cfg.process = ArrivalProcess::Burst;
+        cfg.load_factor = 1.5;
+        cfg.jobs = 5_000; // × 2 masters = 10k jobs
+        cfg.record_cap = 512;
+        let out = run(&s, &cfg).unwrap();
+        assert_eq!(out.jobs, 10_000);
+        assert_eq!(out.records.len(), 512, "record ring exceeded its cap");
+        assert_eq!(out.system.count(), 10_000);
+        // O(1) memory witness: far fewer stored values than samples.
+        assert!(
+            out.system_sketch.stored() < 10_000 / 2,
+            "sketch stored {} of 10000",
+            out.system_sketch.stored()
+        );
+        // Sketch p99 vs the exact oracle, in rank space: rerun uncapped
+        // to recover every sojourn.
+        cfg.record_cap = 0;
+        let exact_run = run(&s, &cfg).unwrap();
+        let mut exact: Vec<f64> = exact_run.sojourn_samples();
+        exact.sort_by(f64::total_cmp);
+        let p99 = out.p99_ms().unwrap();
+        let n = exact.len() as f64;
+        let target = (0.99 * n).ceil();
+        let lo = exact.partition_point(|&x| x < p99) as f64;
+        let hi = exact.partition_point(|&x| x <= p99) as f64;
+        let rank_err = if target < lo {
+            lo - target
+        } else if target > hi {
+            target - hi
+        } else {
+            0.0
+        };
+        let bound = (out.system_sketch.error_bound() * n).ceil() + 1.0;
+        assert!(
+            rank_err <= bound,
+            "sketch p99 rank error {rank_err} exceeds documented bound {bound}"
+        );
     }
 
     #[test]

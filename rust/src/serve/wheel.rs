@@ -1,0 +1,466 @@
+//! Event cores for the online serving loop: a hierarchical timer wheel
+//! and the binary-heap oracle it is pinned against.
+//!
+//! ## The event-core contract
+//!
+//! Both queues implement [`EventQueue`]: `push(at, payload)` stamps the
+//! event with a monotonically increasing sequence number, and `pop`
+//! returns the pending event that is minimal under the **total order**
+//! `(f64::total_cmp(at), seq)`. The `seq` tie-break makes simultaneous
+//! events (lockstep arrivals, flash-crowd bursts) drain in insertion
+//! order, so the serving loop is deterministic and the two
+//! implementations are *bit-for-bit interchangeable*: swapping one for
+//! the other changes neither the pop order nor any downstream RNG
+//! draw. `serve::run` uses the wheel; the heap stays in-tree as the
+//! parity oracle (`tests/serving.rs` and the property test below pin
+//! them against each other, duplicate timestamps included).
+//!
+//! ## Why a wheel
+//!
+//! The heap costs `O(log n)` per operation with `n` pending events; at
+//! the ROADMAP scale (millions of jobs in virtual time) the pending set
+//! is large but *near-sorted* — arrivals are known up front and
+//! completions land a bounded horizon ahead of `now`. The wheel buckets
+//! events by quantized time into `SLOTS`-slot levels of geometrically
+//! coarser width (a hashed hierarchical timing wheel): insertion is
+//! O(1) bucket placement, each event cascades down at most `LEVELS`
+//! times as the cursor passes, and only single-tick level-0 buckets are
+//! ever sorted. Tick granularity affects bucket occupancy only — never
+//! order: ticks are monotone in time, and entries sharing a tick are
+//! sorted by the exact `(total_cmp(at), seq)` key when their bucket is
+//! drained.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Slots per wheel level: `64^4 ≈ 1.7e7` ticks of in-wheel range
+/// before the overflow list engages.
+const SLOTS: usize = 64;
+/// Hierarchy depth. Events beyond `SLOTS^LEVELS` ticks sit in an
+/// overflow list and are re-bucketed when the wheel drains down to
+/// them.
+const LEVELS: usize = 4;
+
+/// A pending-event queue ordered by `(f64::total_cmp(time), insertion
+/// seq)`. See the module docs for the exact contract.
+pub trait EventQueue<T> {
+    /// Schedule `payload` at virtual time `at`. Events pushed with `at`
+    /// not after an already-popped time are still delivered — as the
+    /// minimum of the *remaining* events, exactly like a heap.
+    fn push(&mut self, at: f64, payload: T);
+    /// Remove and return the minimal pending event `(time, payload)`.
+    fn pop(&mut self) -> Option<(f64, T)>;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One scheduled event. `seq` is assigned by the queue at push time.
+#[derive(Clone, Debug)]
+struct Entry<T> {
+    at: f64,
+    seq: u64,
+    payload: T,
+}
+
+fn cmp_entries<T>(a: &Entry<T>, b: &Entry<T>) -> Ordering {
+    a.at.total_cmp(&b.at).then(a.seq.cmp(&b.seq))
+}
+
+/// The parity oracle: `BinaryHeap<Reverse<_>>` under the contract
+/// order. This is the event core `serve` shipped with (PR 5), kept as
+/// the reference implementation for tests and benches.
+pub struct HeapQueue<T> {
+    heap: BinaryHeap<std::cmp::Reverse<HeapEv<T>>>,
+    seq: u64,
+}
+
+struct HeapEv<T>(Entry<T>);
+
+impl<T> PartialEq for HeapEv<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.at.to_bits() == other.0.at.to_bits() && self.0.seq == other.0.seq
+    }
+}
+impl<T> Eq for HeapEv<T> {}
+impl<T> PartialOrd for HeapEv<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for HeapEv<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        cmp_entries(&self.0, &other.0)
+    }
+}
+
+impl<T> Default for HeapQueue<T> {
+    fn default() -> Self {
+        Self {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+}
+
+impl<T> HeapQueue<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl<T> EventQueue<T> for HeapQueue<T> {
+    fn push(&mut self, at: f64, payload: T) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap
+            .push(std::cmp::Reverse(HeapEv(Entry { at, seq, payload })));
+    }
+
+    fn pop(&mut self) -> Option<(f64, T)> {
+        self.heap
+            .pop()
+            .map(|std::cmp::Reverse(HeapEv(e))| (e.at, e.payload))
+    }
+
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+/// Hierarchical timer wheel, bit-for-bit order-equivalent to
+/// [`HeapQueue`] (property-tested below).
+///
+/// Invariants:
+/// - Every bucketed entry has tick index ≥ `cur`; `ready` (the drained
+///   active bucket plus any late pushes) holds everything below.
+/// - A level-0 slot only ever holds entries of a single tick index
+///   (placement requires `idx − cur < SLOTS`, and slots are residues
+///   mod `SLOTS`, so exactly one index per slot can be live).
+/// - `flushed_below[l]` marks the tick boundary under which level `l`
+///   holds no entries: a flushed slot may immediately re-receive its
+///   own next-rotation entries, and this watermark keeps the candidate
+///   scan from re-flushing it forever.
+pub struct TimerWheel<T> {
+    /// Level-0 slot width in virtual-time units.
+    tick: f64,
+    /// Virtual time of tick index 0 (fixed at construction).
+    start: f64,
+    /// All bucketed entries have tick index ≥ `cur`.
+    cur: u64,
+    /// `levels[l][s]`: slot `s` of level `l`, width `SLOTS^l` ticks,
+    /// addressed by absolute tick index `(idx / SLOTS^l) % SLOTS`.
+    levels: Vec<Vec<Vec<Entry<T>>>>,
+    /// Entries beyond the top level's range; `overflow_min` caches
+    /// their minimal tick index so the scan can rank them in O(1).
+    overflow: Vec<Entry<T>>,
+    overflow_min: u64,
+    /// Per-level watermark: level `l` holds nothing below this tick.
+    flushed_below: Vec<u64>,
+    /// The active single-tick bucket, sorted DESCENDING by the
+    /// contract order and drained from the back; late pushes (at or
+    /// before the active tick) are sorted in, so the next pop is
+    /// always the minimum of the remaining events.
+    ready: Vec<Entry<T>>,
+    len: usize,
+    seq: u64,
+}
+
+impl<T> TimerWheel<T> {
+    /// `tick` is the finest bucket width; it must be finite and
+    /// positive. Correctness does not depend on it — see
+    /// [`TimerWheel::for_span`] for the sizing heuristic.
+    pub fn new(tick: f64) -> Self {
+        assert!(tick.is_finite() && tick > 0.0, "wheel tick must be > 0");
+        Self {
+            tick,
+            start: 0.0,
+            cur: 0,
+            levels: (0..LEVELS)
+                .map(|_| (0..SLOTS).map(|_| Vec::new()).collect())
+                .collect(),
+            overflow: Vec::new(),
+            overflow_min: u64::MAX,
+            flushed_below: vec![0; LEVELS],
+            ready: Vec::new(),
+            len: 0,
+            seq: 0,
+        }
+    }
+
+    /// Size the tick so `events` spread across `span` land ~1 per
+    /// level-0 slot: `tick = span / max(events, SLOTS)`. Degenerate
+    /// spans fall back to a unit tick — the wheel stays correct, only
+    /// bucket occupancy changes.
+    pub fn for_span(span: f64, events: usize) -> Self {
+        let span = if span.is_finite() && span > 0.0 { span } else { 1.0 };
+        let tick = span / events.max(SLOTS) as f64;
+        Self::new(tick.max(span * 1e-12).max(f64::MIN_POSITIVE * 1e6))
+    }
+
+    /// Absolute tick index of `at`, saturating on both ends. Monotone
+    /// in `at`, which is all ordering needs: entries that share an
+    /// index (including both saturation plateaus) are sorted by the
+    /// exact `(at, seq)` key when their bucket is drained.
+    fn tick_index(&self, at: f64) -> u64 {
+        let idx = ((at - self.start) / self.tick).floor();
+        if !(idx >= 0.0) {
+            return 0; // the past (and any NaN-adjacent junk): tick 0
+        }
+        if idx >= (u64::MAX / 2) as f64 {
+            return u64::MAX / 2;
+        }
+        idx as u64
+    }
+
+    /// Bucket an entry with tick index `idx ≥ self.cur`.
+    fn place(&mut self, idx: u64, e: Entry<T>) {
+        let delta = idx - self.cur;
+        let mut width = 1u64;
+        for l in 0..LEVELS {
+            let range = width * SLOTS as u64;
+            if delta < range {
+                let slot = (idx / width) as usize % SLOTS;
+                self.levels[l][slot].push(e);
+                return;
+            }
+            width = range;
+        }
+        self.overflow_min = self.overflow_min.min(idx);
+        self.overflow.push(e);
+    }
+
+    /// Sorted-insert into the active bucket (descending order, drained
+    /// from the back): entries ordered before everything pending become
+    /// the next pop — exactly the heap's "minimum of the remaining".
+    fn insert_ready(&mut self, e: Entry<T>) {
+        let pos = self
+            .ready
+            .partition_point(|x| cmp_entries(x, &e) == Ordering::Greater);
+        self.ready.insert(pos, e);
+    }
+
+    /// Load the next pending bucket into `ready`. The scan ranks every
+    /// non-empty slot by the earliest tick it can still hold
+    /// (`max(slot start, cur)`, bumped a rotation if below the flush
+    /// watermark) and takes the minimum — preferring *higher* levels on
+    /// ties, because a wide slot covering the cursor may contain events
+    /// that belong inside a lower candidate's tick and must cascade
+    /// down first. Each iteration either emits a level-0 bucket or
+    /// strictly advances a watermark/cursor, so this terminates.
+    ///
+    /// Precondition: `ready` is empty and `len > 0`.
+    fn advance(&mut self) {
+        loop {
+            // (effective start, level, slot); level LEVELS = overflow.
+            let mut best: Option<(u64, usize, usize)> = None;
+            if !self.overflow.is_empty() {
+                best = Some((self.overflow_min.max(self.cur), LEVELS, 0));
+            }
+            let mut width = (SLOTS as u64).pow(LEVELS as u32 - 1);
+            for l in (0..LEVELS).rev() {
+                let range = width.saturating_mul(SLOTS as u64);
+                for s in 0..SLOTS {
+                    if self.levels[l][s].is_empty() {
+                        continue;
+                    }
+                    // Covering-or-next slot start for this residue.
+                    let base = self.cur / range * range;
+                    let mut cand = base + s as u64 * width;
+                    if cand + width <= self.cur {
+                        cand += range;
+                    }
+                    if cand < self.flushed_below[l] {
+                        cand += range;
+                    }
+                    let eff = cand.max(self.cur);
+                    // Strict `<` keeps the higher level on ties.
+                    if best.map(|(b, _, _)| eff < b).unwrap_or(true) {
+                        best = Some((eff, l, s));
+                    }
+                }
+                width /= SLOTS as u64;
+            }
+            let Some((eff, l, s)) = best else {
+                debug_assert!(self.len == 0, "len/bucket bookkeeping divergence");
+                return;
+            };
+            self.cur = self.cur.max(eff);
+            if l == 0 {
+                // Single-tick bucket: sort descending, drain from back.
+                let mut bucket = std::mem::take(&mut self.levels[0][s]);
+                bucket.sort_by(|a, b| cmp_entries(b, a));
+                debug_assert!(self.ready.is_empty());
+                self.ready = bucket;
+                self.cur += 1;
+                return;
+            }
+            if l == LEVELS {
+                // Re-base the wheel onto the overflow's earliest tick.
+                let pending = std::mem::take(&mut self.overflow);
+                self.overflow_min = u64::MAX;
+                for e in pending {
+                    let idx = self.tick_index(e.at).max(self.cur);
+                    self.place(idx, e);
+                }
+                continue;
+            }
+            // Cascade a wide slot downward from its effective start.
+            let width = (SLOTS as u64).pow(l as u32);
+            self.flushed_below[l] = self.flushed_below[l].max(eff + width);
+            let bucket = std::mem::take(&mut self.levels[l][s]);
+            for e in bucket {
+                let idx = self.tick_index(e.at).max(self.cur);
+                self.place(idx, e);
+            }
+        }
+    }
+}
+
+impl<T> EventQueue<T> for TimerWheel<T> {
+    fn push(&mut self, at: f64, payload: T) {
+        let seq = self.seq;
+        self.seq += 1;
+        let e = Entry { at, seq, payload };
+        self.len += 1;
+        let idx = self.tick_index(at);
+        if idx < self.cur {
+            // At or before the active tick: joins the ready bucket in
+            // contract order.
+            self.insert_ready(e);
+        } else {
+            self.place(idx, e);
+        }
+    }
+
+    fn pop(&mut self) -> Option<(f64, T)> {
+        if self.len == 0 {
+            return None;
+        }
+        if self.ready.is_empty() {
+            self.advance();
+        }
+        let e = self.ready.pop()?;
+        self.len -= 1;
+        Some((e.at, e.payload))
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain<T>(q: &mut dyn EventQueue<T>) -> Vec<(f64, T)> {
+        let mut out = Vec::new();
+        while let Some(ev) = q.pop() {
+            out.push(ev);
+        }
+        out
+    }
+
+    #[test]
+    fn wheel_pops_in_time_then_seq_order() {
+        let mut w = TimerWheel::new(1.0);
+        w.push(5.0, 'a');
+        w.push(1.0, 'b');
+        w.push(5.0, 'c'); // duplicate timestamp: insertion order
+        w.push(0.0, 'd');
+        w.push(1_000_000.0, 'e'); // above level-2 range at tick = 1
+        let got = drain(&mut w);
+        let order: Vec<char> = got.iter().map(|&(_, c)| c).collect();
+        assert_eq!(order, vec!['d', 'b', 'a', 'c', 'e']);
+        assert!(w.pop().is_none());
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn wheel_handles_pushes_during_drain_like_a_heap() {
+        let mut w = TimerWheel::new(0.5);
+        let mut h = HeapQueue::new();
+        for q in [&mut w as &mut dyn EventQueue<u32>, &mut h] {
+            q.push(10.0, 0);
+            q.push(10.0, 1);
+            q.push(20.0, 2);
+        }
+        assert_eq!(w.pop(), h.pop());
+        // Schedule into the active tick and into the past mid-drain:
+        // both must come out next, in contract order.
+        for q in [&mut w as &mut dyn EventQueue<u32>, &mut h] {
+            q.push(10.0, 3);
+            q.push(2.0, 4);
+        }
+        assert_eq!(drain(&mut w), drain(&mut h));
+    }
+
+    #[test]
+    fn wheel_spans_every_level_and_rebases_overflow() {
+        // tick = 1.0 → level ranges 64 / 4096 / 262144 / 16.7M; beyond
+        // that is the overflow list. Cover every placement path,
+        // including interleaved near/far pushes while draining.
+        let times = [
+            0.0,
+            63.0,
+            64.0,
+            4_095.0,
+            4_096.0,
+            262_143.0,
+            262_144.0,
+            16_777_215.0,
+            16_777_216.0, // overflow
+            90_000_000.0, // deep overflow
+        ];
+        let mut w = TimerWheel::new(1.0);
+        let mut h = HeapQueue::new();
+        // Push in reverse so placement never benefits from sortedness.
+        for (i, &t) in times.iter().enumerate().rev() {
+            w.push(t, i);
+            h.push(t, i);
+        }
+        assert_eq!(w.len(), times.len());
+        for step in 0..times.len() {
+            assert_eq!(w.pop(), h.pop(), "divergence at pop {step}");
+            // Near/far pushes against a moving cursor.
+            let t = 100.0 + step as f64 * 5_000.0;
+            w.push(t, 100 + step);
+            h.push(t, 100 + step);
+        }
+        assert_eq!(drain(&mut w), drain(&mut h));
+    }
+
+    #[test]
+    fn wheel_matches_heap_on_random_schedules_with_duplicates() {
+        use crate::util::prop::{check, Config};
+        check(
+            Config::default().cases(40),
+            "TimerWheel ≡ HeapQueue pop order (duplicate timestamps, interleaved ops)",
+            |g| {
+                let n = g.usize_range(1, 400);
+                // Quantized times force exact duplicate timestamps;
+                // scales vary from sub-tick-dense to deep-overflow.
+                let scale = [0.01, 1.0, 1e4, 1e9][g.usize_range(0, 3)];
+                let tick = [1e-3, 1.0, 977.0][g.usize_range(0, 2)];
+                let mut w = TimerWheel::new(tick);
+                let mut h = HeapQueue::new();
+                let mut live = 0usize;
+                for i in 0..n {
+                    if live > 0 && g.bool() {
+                        assert_eq!(w.pop(), h.pop(), "mid-drain divergence at op {i}");
+                        live -= 1;
+                    } else {
+                        let t = g.usize_range(0, 200) as f64 * 0.5 * scale;
+                        w.push(t, i);
+                        h.push(t, i);
+                        live += 1;
+                    }
+                    assert_eq!(w.len(), h.len());
+                }
+                assert_eq!(drain(&mut w), drain(&mut h), "final drain divergence");
+            },
+        );
+    }
+}

@@ -340,6 +340,174 @@ impl Histogram {
     }
 }
 
+/// Default compactor capacity for [`QuantileSketch`] — the serving
+/// layer's per-stream tail accumulator. 256 keeps the worst-case rank
+/// error (see [`QuantileSketch::error_bound`]) under ~0.1 at a million
+/// samples while storing at most a few kilobytes per stream.
+pub const SKETCH_CAPACITY: usize = 256;
+
+/// Bounded-memory streaming quantile sketch (GK-style guarantees via a
+/// deterministic Munro–Paterson compactor hierarchy).
+///
+/// Level `ℓ` holds samples of weight `2^ℓ`; when a level reaches the
+/// capacity `k`, it is sorted and every other element (alternating
+/// parity between compactions) is promoted to level `ℓ+1` with doubled
+/// weight. Total weight is conserved exactly, so `count()` is exact.
+///
+/// **Rank-error bound.** A compaction at level `ℓ` perturbs the rank of
+/// any threshold by at most `2^ℓ`, and at most `n / (⌊k/2⌋·2^ℓ)`
+/// compactions happen at level `ℓ` over `n` inserts, so the total rank
+/// error is at most `n·L/⌊k/2⌋` where `L = ⌈log₂(n/k)⌉` is the number
+/// of populated levels above 0. [`QuantileSketch::error_bound`] returns
+/// that `ε = L/⌊k/2⌋`; `quantile(q)` is then guaranteed to land within
+/// rank `q·n ± ε·n` of the exact order statistic (the deterministic
+/// parity alternation cancels errors pairwise, so observed error is
+/// typically ~1/k — property-tested against the exact [`percentile`]
+/// oracle below).
+///
+/// **Memory.** At most `k` items per populated level, i.e.
+/// `O(k·log(n/k))` floats total — constant for any practical `n`, vs.
+/// the `O(n)` of exact percentile accumulation.
+///
+/// `merge` is weight-exact and order-insensitive up to the documented
+/// bound: merging appends per level then re-compacts, so any merge tree
+/// over the same streams obeys the same error bound (property-tested).
+#[derive(Clone, Debug)]
+pub struct QuantileSketch {
+    k: usize,
+    /// `levels[ℓ]` holds items of weight `2^ℓ`, unsorted between
+    /// compactions.
+    levels: Vec<Vec<f64>>,
+    /// Per-level compaction parity: which of each sorted pair survives.
+    /// Alternating deterministically cancels rank error pairwise and
+    /// keeps the sketch reproducible run to run.
+    parity: Vec<bool>,
+    n: u64,
+}
+
+impl Default for QuantileSketch {
+    fn default() -> Self {
+        Self::new(SKETCH_CAPACITY)
+    }
+}
+
+impl QuantileSketch {
+    /// `k` is the per-level compactor capacity (clamped to ≥ 8 and
+    /// rounded up to even so pairs always form).
+    pub fn new(k: usize) -> Self {
+        let k = k.max(8) + (k % 2);
+        Self {
+            k,
+            levels: vec![Vec::new()],
+            parity: vec![false],
+            n: 0,
+        }
+    }
+
+    /// Insert one sample. NaN is skipped (order statistics are
+    /// undefined for it); `±∞` is legitimate (infeasible trials).
+    pub fn insert(&mut self, x: f64) {
+        if x.is_nan() {
+            debug_assert!(false, "QuantileSketch::insert(NaN)");
+            return;
+        }
+        self.levels[0].push(x);
+        self.n += 1;
+        if self.levels[0].len() >= self.k {
+            self.compact(0);
+        }
+    }
+
+    /// Compact level `l`: sort, leave one element behind on odd counts,
+    /// promote every other element of the pairs to level `l+1`.
+    fn compact(&mut self, l: usize) {
+        if self.levels.len() == l + 1 {
+            self.levels.push(Vec::new());
+            self.parity.push(false);
+        }
+        let mut buf = std::mem::take(&mut self.levels[l]);
+        buf.sort_by(f64::total_cmp);
+        let start = buf.len() % 2;
+        let offset = self.parity[l] as usize;
+        self.parity[l] = !self.parity[l];
+        let mut i = start + offset;
+        while i < buf.len() {
+            self.levels[l + 1].push(buf[i]);
+            i += 2;
+        }
+        if start == 1 {
+            self.levels[l].push(buf[0]);
+        }
+        if self.levels[l + 1].len() >= self.k {
+            self.compact(l + 1);
+        }
+    }
+
+    /// Merge `other` into `self` (weight-exact; both sketches keep
+    /// their documented error bound afterwards).
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        for (l, buf) in other.levels.iter().enumerate() {
+            while self.levels.len() <= l {
+                self.levels.push(Vec::new());
+                self.parity.push(false);
+            }
+            self.levels[l].extend_from_slice(buf);
+        }
+        self.n += other.n;
+        for l in 0..self.levels.len() {
+            while self.levels[l].len() >= self.k {
+                self.compact(l);
+            }
+        }
+    }
+
+    /// Approximate `q`-quantile (`None` when empty): the smallest
+    /// stored value whose cumulative weight reaches `⌈q·n⌉`, i.e. a
+    /// generalized-inverse readout like [`Ecdf::quantile`], accurate to
+    /// the documented rank error.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.n == 0 {
+            return None;
+        }
+        let mut items: Vec<(f64, u64)> = Vec::with_capacity(self.stored());
+        for (l, buf) in self.levels.iter().enumerate() {
+            let w = 1u64 << l;
+            items.extend(buf.iter().map(|&x| (x, w)));
+        }
+        items.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let target = ((q.clamp(0.0, 1.0) * self.n as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (x, w) in &items {
+            cum += w;
+            if cum >= target {
+                return Some(*x);
+            }
+        }
+        items.last().map(|(x, _)| *x)
+    }
+
+    /// Exact number of inserted samples (weight is conserved).
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Items currently stored — the O(k·log(n/k)) memory witness.
+    pub fn stored(&self) -> usize {
+        self.levels.iter().map(Vec::len).sum()
+    }
+
+    /// The documented worst-case rank error `ε` (fraction of `n`):
+    /// `quantile(q)` lands within rank `q·n ± ε·n` of exact.
+    pub fn error_bound(&self) -> f64 {
+        let levels_above_zero = self.levels.len().saturating_sub(1);
+        levels_above_zero as f64 / (self.k / 2) as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -577,5 +745,145 @@ mod tests {
         }
         let integral: f64 = h.density().iter().map(|(_, d)| d * 0.05).sum();
         assert!((integral - 1.0).abs() < 1e-9);
+    }
+
+    /// Rank distance between the sketch's answer at `q` and the exact
+    /// order statistics: 0 when the value sits inside the exact rank
+    /// interval `[#<v, #≤v]` around target rank `⌈q·n⌉`.
+    fn rank_error(exact: &[f64], v: f64, q: f64) -> u64 {
+        let n = exact.len() as u64;
+        let below = exact.iter().filter(|&&x| x < v).count() as u64;
+        let upto = exact.iter().filter(|&&x| x <= v).count() as u64;
+        let target = ((q * n as f64).ceil() as u64).clamp(1, n);
+        if target < below {
+            below - target
+        } else {
+            target.saturating_sub(upto)
+        }
+    }
+
+    #[test]
+    fn sketch_small_streams_are_exact() {
+        let mut s = QuantileSketch::new(64);
+        assert_eq!(s.quantile(0.5), None);
+        for x in [5.0, 1.0, 3.0, 2.0, 4.0] {
+            s.insert(x);
+        }
+        // Below capacity nothing compacts: generalized-inverse exact.
+        assert_eq!(s.count(), 5);
+        assert_eq!(s.quantile(0.0), Some(1.0));
+        assert_eq!(s.quantile(0.5), Some(3.0));
+        assert_eq!(s.quantile(1.0), Some(5.0));
+        assert_eq!(s.error_bound(), 0.0);
+        // NaN is skipped, ∞ is kept.
+        s.insert(f64::NAN);
+        assert_eq!(s.count(), 5);
+        s.insert(f64::INFINITY);
+        assert_eq!(s.quantile(1.0), Some(f64::INFINITY));
+    }
+
+    #[test]
+    fn sketch_memory_is_bounded_and_count_exact() {
+        let mut s = QuantileSketch::new(32);
+        for i in 0..100_000u64 {
+            s.insert((i as f64 * 0.7919).fract());
+        }
+        assert_eq!(s.count(), 100_000);
+        // k items per populated level, L ≈ log2(n/k) levels.
+        let levels = (100_000f64 / 32.0).log2().ceil() as usize + 2;
+        assert!(
+            s.stored() <= 32 * levels,
+            "stored {} exceeds {}",
+            s.stored(),
+            32 * levels
+        );
+        assert!(s.error_bound() < 1.0);
+    }
+
+    #[test]
+    fn sketch_rank_error_within_documented_bound() {
+        use crate::util::prop::{check, Config};
+        check(
+            Config::default().cases(12),
+            "QuantileSketch rank error ≤ documented bound (uniform/heavy-tail/sorted)",
+            |g| {
+                let n = g.usize_range(500, 8_000);
+                let shape = g.usize_range(0, 3);
+                let xs: Vec<f64> = (0..n)
+                    .map(|i| match shape {
+                        // Uniform noise.
+                        0 => g.f64_range(0.0, 1_000.0),
+                        // Heavy tail: Pareto-ish 1/U².
+                        1 => {
+                            let u = g.f64_range(1e-4, 1.0);
+                            1.0 / (u * u)
+                        }
+                        // Adversarial: exactly sorted ascending input.
+                        _ => i as f64,
+                    })
+                    .collect();
+                let mut s = QuantileSketch::new(128);
+                for &x in &xs {
+                    s.insert(x);
+                }
+                assert_eq!(s.count(), n as u64);
+                let allowed = (s.error_bound() * n as f64).ceil() as u64 + 1;
+                for &q in &[0.1, 0.5, 0.9, 0.99, 1.0] {
+                    let v = s.quantile(q).unwrap();
+                    let err = rank_error(&xs, v, q);
+                    assert!(
+                        err <= allowed,
+                        "shape {shape} n {n} q {q}: rank error {err} > {allowed}"
+                    );
+                    // The sketch never invents values: every readout is
+                    // one of the inserted samples, so the exact
+                    // percentile oracle brackets it at the bound's edge.
+                    assert!(xs.iter().any(|&x| x == v), "readout {v} not a sample");
+                    let lo = percentile(&xs, (q - s.error_bound()).max(0.0) * 0.9).unwrap();
+                    let hi = percentile(&xs, 1.0).unwrap();
+                    assert!(v >= lo && v <= hi, "shape {shape} q {q}: {v} ∉ [{lo}, {hi}]");
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn sketch_merge_is_weight_exact_and_order_insensitive() {
+        use crate::util::prop::{check, Config};
+        check(
+            Config::default().cases(10),
+            "QuantileSketch merge associativity within bound",
+            |g| {
+                let n = g.usize_range(300, 3_000);
+                let xs: Vec<f64> = (0..3 * n).map(|_| g.f64_range(-10.0, 10.0)).collect();
+                let chunk = |r: std::ops::Range<usize>| {
+                    let mut s = QuantileSketch::new(128);
+                    for &x in &xs[r] {
+                        s.insert(x);
+                    }
+                    s
+                };
+                let (a, b, c) = (chunk(0..n), chunk(n..2 * n), chunk(2 * n..3 * n));
+                // (a ∪ b) ∪ c
+                let mut left = a.clone();
+                left.merge(&b);
+                left.merge(&c);
+                // a ∪ (b ∪ c)
+                let mut right = b.clone();
+                right.merge(&c);
+                let mut right_full = a.clone();
+                right_full.merge(&right);
+                assert_eq!(left.count(), 3 * n as u64);
+                assert_eq!(right_full.count(), 3 * n as u64);
+                for s in [&left, &right_full] {
+                    let allowed = (s.error_bound() * (3 * n) as f64).ceil() as u64 + 1;
+                    for &q in &[0.5, 0.9, 0.99] {
+                        let v = s.quantile(q).unwrap();
+                        let err = rank_error(&xs, v, q);
+                        assert!(err <= allowed, "q {q}: rank error {err} > {allowed}");
+                    }
+                }
+            },
+        );
     }
 }

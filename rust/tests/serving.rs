@@ -5,7 +5,9 @@ use coded_coop::assign::ValueModel;
 use coded_coop::config::{AShift, CommModel, Scenario};
 use coded_coop::experiment::{self, catalog};
 use coded_coop::policy::PolicySpec;
-use coded_coop::serve::{self, ChurnAction, ChurnEvent, ChurnScript, ServeConfig};
+use coded_coop::serve::{
+    self, ChurnAction, ChurnEvent, ChurnScript, EventQueueKind, ServeConfig, ServiceStreams,
+};
 use coded_coop::sim::{self, McOptions};
 
 fn policy(loads: &str) -> PolicySpec {
@@ -326,4 +328,100 @@ fn serving_catalog_sweep_end_to_end() {
         .iter()
         .filter(|x| x.master == 1)
         .map(|x| x.arrival_ms)));
+}
+
+/// The acceptance pin: the `serving` catalog (which runs through the
+/// timer wheel by default) reproduces bit-for-bit what the binary-heap
+/// oracle produces for the same cell configurations.
+#[test]
+fn serving_catalog_reproduces_bit_for_bit_through_the_wheel() {
+    let spec = catalog::spec("serving", 6, 5).unwrap();
+    let wheel = experiment::run_serving_with(&spec, |_| {}).unwrap();
+    let cells = spec.expand().unwrap();
+    assert_eq!(wheel.cells.len(), cells.len());
+    for (cell, wc) in cells.into_iter().zip(&wheel.cells) {
+        // Rebuild the cell's ServeConfig exactly as the sweep layer
+        // does, but force the heap oracle.
+        let arr = cell.arrivals.as_ref().unwrap();
+        let mut c = ServeConfig::new(cell.policy.clone());
+        c.process = arr.process;
+        c.load_factor = arr.load_factor;
+        c.jobs = arr.jobs;
+        c.churn_rate = arr.churn_rate;
+        c.churn_downtime = arr.churn_downtime;
+        c.record_cap = arr.record_cap;
+        c.seed = cell.seed;
+        c.queue = EventQueueKind::Heap;
+        let heap = serve::run(&cell.scenario, &c).unwrap();
+        assert_eq!(
+            wc.records, heap.records,
+            "cell {}: wheel diverged from the heap oracle",
+            cell.index
+        );
+        assert_eq!(wc.outcome.system.mean().to_bits(), heap.system.mean().to_bits());
+        assert_eq!(wc.p99_ms, heap.p99_ms(), "cell {}: sketch p99 diverged", cell.index);
+    }
+}
+
+/// Sharded serving on the process pool reproduces the sequential
+/// per-master-stream run: per-master records and summaries are
+/// bit-identical, totals agree.
+#[test]
+fn sharded_serving_matches_sequential_on_the_pool() {
+    let s = Scenario::small_scale(17, 2.0, CommModel::Stochastic);
+    let mut c = cfg("markov");
+    c.jobs = 30;
+    c.load_factor = 1.5;
+    c.process = serve::ArrivalProcess::Burst;
+    c.churn_rate = 1.0;
+    c.streams = ServiceStreams::PerMaster;
+    let seq = serve::run(&s, &c).unwrap();
+    let shard = serve::run_sharded(&s, &c).unwrap();
+    assert_eq!(seq.jobs, shard.jobs);
+    assert_eq!(seq.infeasible, shard.infeasible);
+    for m in 0..s.n_masters() {
+        let a: Vec<_> = seq.records.iter().filter(|r| r.master == m).collect();
+        let b: Vec<_> = shard.records.iter().filter(|r| r.master == m).collect();
+        assert_eq!(a, b, "master {m}: shard diverged from sequential");
+        assert_eq!(
+            seq.per_master[m].mean().to_bits(),
+            shard.per_master[m].mean().to_bits(),
+            "master {m}: summary not bit-identical"
+        );
+        assert_eq!(seq.p99_master_ms(m), shard.p99_master_ms(m));
+    }
+}
+
+/// The `overload` catalog sweep end-to-end: every cell past saturation,
+/// burst arrivals, records bounded by the ring while the job counters
+/// and sketch tails cover everything.
+#[test]
+fn overload_catalog_sweep_end_to_end() {
+    let spec = catalog::spec("overload", 600, 5).unwrap();
+    let out = experiment::run_serving_with(&spec, |_| {}).unwrap();
+    assert_eq!(out.cells.len(), 6);
+    for c in &out.cells {
+        assert_eq!(c.outcome.executor, "serve");
+        assert_eq!(c.jobs, 2 * 600, "counters must be cap-independent");
+        assert!(
+            c.records.len() <= catalog::OVERLOAD_RECORD_CAP,
+            "cell {}: ring exceeded the cap",
+            c.index
+        );
+        assert!(c.p99_ms.is_some(), "cell {}: no sketch tail", c.index);
+        assert!(
+            c.p99_ms.unwrap() >= c.outcome.system.mean(),
+            "cell {}: p99 below the mean",
+            c.index
+        );
+    }
+    // Heavier overload ⇒ no smaller mean sojourn (same policy column).
+    for pol in 0..2 {
+        let lo = &out.cells[pol];
+        let hi = &out.cells[4 + pol];
+        assert!(
+            hi.outcome.system.mean() >= lo.outcome.system.mean(),
+            "policy {pol}: 4.0× load served faster than 1.5×"
+        );
+    }
 }
